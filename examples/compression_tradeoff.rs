@@ -1,0 +1,63 @@
+//! Com-LAD communication/accuracy trade-off: sweep the rand-K sparsity Q̂
+//! and report final loss vs total uplink bits — the empirical counterpart
+//! of Fig. 2's δ trade-off (δ = Q/Q̂ − 1).
+//!
+//!     cargo run --release --example compression_tradeoff
+
+use lad::config::{AggregatorKind, AttackKind, CompressionKind, TrainConfig};
+use lad::data::linreg::LinRegDataset;
+use lad::experiments::common::{run_variant, Variant};
+use lad::theory::TheoryParams;
+use lad::util::csv::CsvWriter;
+use lad::util::rng::Rng;
+
+fn main() -> lad::Result<()> {
+    let q = 100usize;
+    let ks = [100usize, 50, 30, 15, 5];
+    let mut rng = Rng::new(2);
+    let ds = LinRegDataset::generate(100, q, 0.3, &mut rng);
+    let mut w = CsvWriter::create(
+        "results/compression_tradeoff.csv",
+        &["q_hat", "delta", "final_loss", "gbits", "theory_eps"],
+    )?;
+    println!(
+        "{:>6} {:>8} {:>14} {:>10} {:>12}",
+        "q_hat", "delta", "final_loss", "Gbits", "eps(eq.33)"
+    );
+    for &k in &ks {
+        let mut cfg = TrainConfig::default();
+        cfg.n_devices = 100;
+        cfg.n_honest = 70;
+        cfg.d = 3;
+        cfg.dim = q;
+        cfg.iters = 3000;
+        cfg.lr = 1e-5;
+        cfg.sigma_h = 0.3;
+        cfg.aggregator = AggregatorKind::Cwtm;
+        cfg.nnm = true;
+        cfg.attack = AttackKind::SignFlip { coeff: -2.0 };
+        cfg.compression =
+            if k == q { CompressionKind::None } else { CompressionKind::RandK { k } };
+        cfg.log_every = 0;
+        let delta = (q as f64 / k as f64) - 1.0;
+        let tr = run_variant(
+            &ds,
+            &Variant { label: format!("q{k}"), cfg, draco_r: None },
+            11,
+        )?;
+        let eps = TheoryParams::new(100, 70, 3)
+            .with_kappa(1.5)
+            .with_delta(delta)
+            .error_term_bigo();
+        let gbits = tr.total_bits() as f64 / 1e9;
+        println!(
+            "{k:>6} {delta:>8.2} {:>14.4e} {gbits:>10.3} {eps:>12.4e}",
+            tr.final_loss
+        );
+        w.row(&[k as f64, delta, tr.final_loss, gbits, eps])?;
+    }
+    w.flush()?;
+    println!("\nsmaller Q_hat => fewer bits but larger delta and loss floor");
+    println!("written results/compression_tradeoff.csv");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile package: L2 JAX models, L1 Pallas kernels, AOT export.
+
+Nothing in here runs on the request path — `make artifacts` lowers the
+jitted functions to HLO text once, and the Rust coordinator executes them
+via PJRT.
+"""

@@ -1,0 +1,168 @@
+"""AOT export: lower the L2 graphs (with their L1 Pallas kernels) to HLO
+TEXT + a manifest the Rust runtime parses.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+behind the published `xla` 0.1.6 crate) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts \
+            [--n 100 --q 100] \
+            [--vocab 64 --d-model 128 --layers 2 --heads 4 --seq 64 --batch 8]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, transformer
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the Rust
+    side unwraps a tuple uniformly)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _export(entries, out_dir, name, fn, example_args, inputs, outputs, meta):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    entries[name] = {
+        "file": fname,
+        "inputs": inputs,
+        "outputs": outputs,
+        "meta": meta,
+    }
+    print(f"  {name}: {len(text)} chars -> {fname}")
+
+
+def export_linreg(entries, out_dir, n, q):
+    f32 = jnp.float32
+    x = jax.ShapeDtypeStruct((q,), f32)
+    z = jax.ShapeDtypeStruct((n, q), f32)
+    y = jax.ShapeDtypeStruct((n,), f32)
+    a = jax.ShapeDtypeStruct((n, n), f32)
+    meta = {"n": n, "q": q}
+    # self-check the Pallas kernels against the jnp oracle before exporting
+    err = model.check_against_ref(n=min(n, 16), q=min(q, 8))
+    print(f"  pallas-vs-ref self-check: max rel err {err:.2e}")
+    _export(
+        entries, out_dir, "coded_grad",
+        lambda *args: model.linreg_coded_grad(*args),
+        (x, z, y, a),
+        [_spec((q,)), _spec((n, q)), _spec((n,)), _spec((n, n))],
+        [_spec((n, q))],
+        meta,
+    )
+    _export(
+        entries, out_dir, "linreg_grads",
+        lambda *args: model.linreg_grads(*args),
+        (x, z, y),
+        [_spec((q,)), _spec((n, q)), _spec((n,))],
+        [_spec((n, q))],
+        meta,
+    )
+    _export(
+        entries, out_dir, "linreg_loss",
+        lambda *args: model.linreg_loss(*args),
+        (x, z, y),
+        [_spec((q,)), _spec((n, q)), _spec((n,))],
+        [_spec(())],
+        meta,
+    )
+
+
+def export_transformer(entries, out_dir, cfg: transformer.TransformerConfig, batch: int):
+    p = cfg.n_params
+    theta = jax.ShapeDtypeStruct((p,), jnp.float32)
+    windows = jax.ShapeDtypeStruct((batch, cfg.seq_len + 1), jnp.int32)
+    meta = {
+        "params": p,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "layers": cfg.n_layers,
+        "heads": cfg.n_heads,
+        "seq": cfg.seq_len,
+        "batch": batch,
+    }
+    grad_fn = transformer.make_grad_fn(cfg)
+    loss_fn = transformer.make_loss_fn(cfg)
+
+    def init_fn(seed):
+        return (transformer.init_flat(cfg, jax.random.PRNGKey(seed)),)
+
+    _export(
+        entries, out_dir, "transformer_init",
+        init_fn, (jax.ShapeDtypeStruct((), jnp.int32),),
+        [_spec((), "i32")],
+        [_spec((p,))],
+        meta,
+    )
+    _export(
+        entries, out_dir, "transformer_grad",
+        grad_fn, (theta, windows),
+        [_spec((p,)), _spec((batch, cfg.seq_len + 1), "i32")],
+        [_spec(()), _spec((p,))],
+        meta,
+    )
+    _export(
+        entries, out_dir, "transformer_loss",
+        loss_fn, (theta, windows),
+        [_spec((p,)), _spec((batch, cfg.seq_len + 1), "i32")],
+        [_spec(())],
+        meta,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--n", type=int, default=100, help="linreg devices/subsets N")
+    ap.add_argument("--q", type=int, default=100, help="linreg model dim Q")
+    ap.add_argument("--vocab", type=int, default=64)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--heads", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--skip-transformer", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    entries = {}
+    print("exporting linreg artifacts (L1 Pallas + L2 jax)...")
+    export_linreg(entries, args.out, args.n, args.q)
+    if not args.skip_transformer:
+        cfg = transformer.TransformerConfig(
+            vocab=args.vocab,
+            d_model=args.d_model,
+            n_layers=args.layers,
+            n_heads=args.heads,
+            seq_len=args.seq,
+        )
+        print(f"exporting transformer artifacts ({cfg.n_params/1e6:.2f}M params)...")
+        export_transformer(entries, args.out, cfg, args.batch)
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(entries)} artifacts -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels + pure-jnp oracles."""
+
+from . import coded_grad, ref  # noqa: F401

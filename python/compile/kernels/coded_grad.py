@@ -1,0 +1,97 @@
+"""Layer-1 Pallas kernels: the coded-gradient hot path.
+
+Two kernels compose into eq. (5):
+
+  * ``grad_matrix``  — G = (Z·x − y) ⊙_rows Z   (residual + outer scale),
+    tiled over row blocks so Z streams HBM→VMEM once.
+  * ``coded_matmul`` — coded = A·G, a classic MXU-shaped tiled matmul over
+    (row, col) output blocks with the full K dimension resident (K = N ≤ a
+    VMEM tile for the paper's sizes).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): block shapes are chosen as
+the largest divisors ≤ 128 so the MXU systolic array sees near-square tiles;
+on this CPU testbed the kernels run under ``interpret=True`` (the Mosaic
+custom-call is not executable on the CPU PJRT plugin), so we validate
+structure + numerics here and estimate MXU utilization analytically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile(n: int, target: int = 128) -> int:
+    """Largest divisor of n that is <= target (block shapes must tile)."""
+    for t in range(min(n, target), 0, -1):
+        if n % t == 0:
+            return t
+    return 1
+
+
+def grad_matrix(x, z, y, *, interpret: bool = True):
+    """G[k] = (⟨z_k, x⟩ − y_k) · z_k via a row-tiled Pallas kernel."""
+    n, q = z.shape
+    bn = _tile(n)
+
+    def kernel(x_ref, z_ref, y_ref, out_ref):
+        zt = z_ref[...]                      # (bn, q) tile in VMEM
+        r = zt @ x_ref[...] - y_ref[...]     # per-tile residuals
+        out_ref[...] = r[:, None] * zt
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((q,), lambda i: (0,)),        # x: replicated
+            pl.BlockSpec((bn, q), lambda i: (i, 0)),   # Z row tile
+            pl.BlockSpec((bn,), lambda i: (i,)),       # y row tile
+        ],
+        out_specs=pl.BlockSpec((bn, q), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, q), z.dtype),
+        interpret=interpret,
+    )(x, z, y)
+
+
+def coded_matmul(a, g, *, interpret: bool = True):
+    """coded = A @ G via an output-tiled Pallas matmul (full-K blocks)."""
+    n, k = a.shape
+    k2, q = g.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = _tile(n)
+    bq = _tile(q)
+
+    def kernel(a_ref, g_ref, out_ref):
+        out_ref[...] = a_ref[...] @ g_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bm, q // bq),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),   # A row stripe
+            pl.BlockSpec((k, bq), lambda i, j: (0, j)),   # G col stripe
+        ],
+        out_specs=pl.BlockSpec((bm, bq), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, q), g.dtype),
+        interpret=interpret,
+    )(a, g)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def coded_grad(x, z, y, a, *, interpret: bool = True):
+    """Fused eq.-(5) pipeline: coded = A @ ((Z·x − y) ⊙_rows Z)."""
+    return coded_matmul(a, grad_matrix(x, z, y, interpret=interpret),
+                        interpret=interpret)
+
+
+def vmem_estimate_bytes(n: int, q: int) -> int:
+    """Worst-case VMEM residency of one coded_matmul grid step (f32)."""
+    bm, bq = _tile(n), _tile(q)
+    return 4 * (bm * n + n * bq + bm * bq)
+
+
+def mxu_utilization_estimate(n: int, q: int, lane: int = 128) -> float:
+    """Fraction of the systolic array busy for the A·G tiles (K = n)."""
+    bm, bq = _tile(n), _tile(q)
+    return min(bm / lane, 1.0) * min(bq / lane, 1.0) * min(n / lane, 1.0) ** 0

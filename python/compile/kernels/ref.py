@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are validated against (pytest +
+hypothesis) and exactly the math the Rust native oracle implements:
+
+    r      = Z @ x - y                      (residuals)
+    G      = r[:, None] * Z                 (per-subset gradients, eq. 4)
+    coded  = A @ G                          (eq. 5; A carries the 1/d row
+                                             weights of the cyclic mask)
+"""
+
+import jax.numpy as jnp
+
+
+def residuals_ref(x, z, y):
+    """r_k = <z_k, x> - y_k."""
+    return z @ x - y
+
+
+def grad_matrix_ref(x, z, y):
+    """G[k] = (⟨z_k,x⟩ − y_k)·z_k — the per-subset gradient matrix."""
+    r = residuals_ref(x, z, y)
+    return r[:, None] * z
+
+
+def coded_grad_ref(x, z, y, a):
+    """coded[i] = Σ_k A[i,k]·∇f_k(x) (A rows pre-scaled by 1/d_i)."""
+    return a @ grad_matrix_ref(x, z, y)
+
+
+def linreg_loss_ref(x, z, y):
+    """F(x) = Σ_k ½(⟨z_k,x⟩ − y_k)²."""
+    r = residuals_ref(x, z, y)
+    return 0.5 * jnp.sum(r * r)
+
+
+def matmul_ref(a, b):
+    """Plain matmul oracle for the tiled Pallas matmul kernel."""
+    return a @ b

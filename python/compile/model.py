@@ -1,0 +1,51 @@
+"""Layer-2 JAX compute graphs for the linear-regression workload (§VII).
+
+Each exported function is jitted and AOT-lowered by aot.py; the `coded_grad`
+pipeline calls the Layer-1 Pallas kernels so they lower into the same HLO
+module the Rust coordinator executes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import coded_grad as kernels
+from .kernels import ref
+
+
+@jax.jit
+def linreg_loss(x, z, y):
+    """F(x) = Σ_k ½(⟨z_k,x⟩ − y_k)² — scalar training loss."""
+    return (ref.linreg_loss_ref(x, z, y),)
+
+
+@jax.jit
+def linreg_grads(x, z, y):
+    """Per-subset gradient matrix G[k] = ∇f_k(x) via the Pallas row kernel."""
+    return (kernels.grad_matrix(x, z, y),)
+
+
+@jax.jit
+def linreg_coded_grad(x, z, y, a):
+    """Every device's coded vector (eq. 5): A @ G with both Pallas kernels.
+
+    `a` is the per-iteration assignment mask with rows scaled by 1/d_i —
+    built by the Rust coordinator from (Ŝ, T^t, p^t).
+    """
+    return (kernels.coded_grad(x, z, y, a),)
+
+
+def check_against_ref(n=16, q=8, seed=0):
+    """Quick self-check used by aot.py before exporting (belt & braces —
+    the full sweep lives in python/tests/test_kernel.py)."""
+    key = jax.random.PRNGKey(seed)
+    kx, kz, ky, ka = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (q,), jnp.float32)
+    z = jax.random.normal(kz, (n, q), jnp.float32) * 10.0
+    y = jax.random.normal(ky, (n,), jnp.float32)
+    a = jax.random.uniform(ka, (n, n), jnp.float32)
+    got = linreg_coded_grad(x, z, y, a)[0]
+    want = ref.coded_grad_ref(x, z, y, a)
+    err = float(jnp.max(jnp.abs(got - want)) / (jnp.max(jnp.abs(want)) + 1e-9))
+    if err > 1e-5:
+        raise AssertionError(f"pallas coded_grad deviates from ref: {err}")
+    return err

@@ -1,0 +1,171 @@
+"""Layer-2 JAX transformer LM with a FLAT parameter vector.
+
+The flat layout keeps the Rust interface trivial: the coordinator holds one
+Vec<f32> of parameters, and the AOT artifact `transformer_grad` maps
+(theta[P], tokens[B, T+1] int32) → (loss[], grad[P]). Decoder-only,
+pre-LayerNorm, causal attention, GELU MLP, tied embeddings.
+
+Parameters (per layer): ln1(2dm) attn qkv(dm,3dm)+bias(3dm) proj(dm,dm)+
+bias(dm) ln2(2dm) mlp up(dm,4dm)+bias(4dm) down(4dm,dm)+bias(dm);
+plus tok_emb(vocab,dm), pos_emb(T,dm), final ln(2dm). Output head is tied
+to tok_emb.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 64
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    seq_len: int = 64
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def layer_sizes(self):
+        dm = self.d_model
+        return [
+            ("ln1_scale", (dm,)),
+            ("ln1_bias", (dm,)),
+            ("qkv_w", (dm, 3 * dm)),
+            ("qkv_b", (3 * dm,)),
+            ("proj_w", (dm, dm)),
+            ("proj_b", (dm,)),
+            ("ln2_scale", (dm,)),
+            ("ln2_bias", (dm,)),
+            ("up_w", (dm, 4 * dm)),
+            ("up_b", (4 * dm,)),
+            ("down_w", (4 * dm, dm)),
+            ("down_b", (dm,)),
+        ]
+
+    def param_layout(self):
+        """[(name, shape)] in flat-vector order."""
+        layout = [
+            ("tok_emb", (self.vocab, self.d_model)),
+            ("pos_emb", (self.seq_len, self.d_model)),
+        ]
+        for layer in range(self.n_layers):
+            for name, shape in self.layer_sizes():
+                layout.append((f"l{layer}.{name}", shape))
+        layout.append(("lnf_scale", (self.d_model,)))
+        layout.append(("lnf_bias", (self.d_model,)))
+        return layout
+
+    @property
+    def n_params(self) -> int:
+        total = 0
+        for _, shape in self.param_layout():
+            size = 1
+            for s in shape:
+                size *= s
+            total += size
+        return total
+
+
+def unflatten(cfg: TransformerConfig, theta):
+    """Flat vector → dict of named arrays."""
+    params = {}
+    off = 0
+    for name, shape in cfg.param_layout():
+        size = 1
+        for s in shape:
+            size *= s
+        params[name] = theta[off : off + size].reshape(shape)
+        off += size
+    return params
+
+
+def init_flat(cfg: TransformerConfig, key) -> jnp.ndarray:
+    """Initialize the flat parameter vector (scaled-normal / ones for LN)."""
+    chunks = []
+    for name, shape in cfg.param_layout():
+        key, sub = jax.random.split(key)
+        size = 1
+        for s in shape:
+            size *= s
+        if "scale" in name:
+            chunks.append(jnp.ones((size,), jnp.float32))
+        elif "bias" in name:
+            chunks.append(jnp.zeros((size,), jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else size
+            std = 0.02 if "emb" in name else 1.0 / jnp.sqrt(fan_in)
+            chunks.append(
+                jax.random.normal(sub, (size,), jnp.float32) * std
+            )
+    return jnp.concatenate(chunks)
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _attention(cfg: TransformerConfig, p, prefix, h):
+    b, t, dm = h.shape
+    nh, dh = cfg.n_heads, cfg.d_head
+    qkv = h @ p[f"{prefix}.qkv_w"] + p[f"{prefix}.qkv_b"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(x):
+        return x.reshape(b, t, nh, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    scores = q @ k.transpose(0, 1, 3, 2) / jnp.sqrt(dh).astype(h.dtype)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, dm)
+    return out @ p[f"{prefix}.proj_w"] + p[f"{prefix}.proj_b"]
+
+
+def forward(cfg: TransformerConfig, theta, tokens):
+    """Logits [B, T, vocab] for input tokens [B, T]."""
+    p = unflatten(cfg, theta)
+    h = p["tok_emb"][tokens] + p["pos_emb"][None, : tokens.shape[1]]
+    for layer in range(cfg.n_layers):
+        pre = f"l{layer}"
+        a = _layer_norm(h, p[f"{pre}.ln1_scale"], p[f"{pre}.ln1_bias"])
+        h = h + _attention(cfg, p, pre, a)
+        m = _layer_norm(h, p[f"{pre}.ln2_scale"], p[f"{pre}.ln2_bias"])
+        m = jax.nn.gelu(m @ p[f"{pre}.up_w"] + p[f"{pre}.up_b"])
+        h = h + m @ p[f"{pre}.down_w"] + p[f"{pre}.down_b"]
+    h = _layer_norm(h, p["lnf_scale"], p["lnf_bias"])
+    return h @ p["tok_emb"].T  # tied head
+
+
+def loss_fn(cfg: TransformerConfig, theta, windows):
+    """Mean cross-entropy; windows [B, T+1] i32 (inputs | shifted targets)."""
+    inputs = windows[:, :-1]
+    targets = windows[:, 1:]
+    logits = forward(cfg, theta, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(picked)
+
+
+def make_grad_fn(cfg: TransformerConfig):
+    """(theta, windows) → (loss[], grad[P]) — the AOT training-step graph."""
+
+    def f(theta, windows):
+        loss, grad = jax.value_and_grad(lambda th: loss_fn(cfg, th, windows))(theta)
+        return loss, grad
+
+    return jax.jit(f)
+
+
+def make_loss_fn(cfg: TransformerConfig):
+    def f(theta, windows):
+        return (loss_fn(cfg, theta, windows),)
+
+    return jax.jit(f)

@@ -1,0 +1,65 @@
+"""AOT pipeline: HLO text export + manifest round-trip at small scale."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[2]
+
+
+@pytest.fixture(scope="module")
+def small_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts_small")
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "compile.aot",
+            "--out", str(out),
+            "--n", "8", "--q", "6",
+            "--vocab", "16", "--d-model", "16", "--layers", "1",
+            "--heads", "2", "--seq", "8", "--batch", "2",
+        ],
+        cwd=REPO / "python",
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 0, proc.stderr
+    return out
+
+
+def test_manifest_schema(small_artifacts):
+    manifest = json.loads((small_artifacts / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    arts = manifest["artifacts"]
+    for name in ["coded_grad", "linreg_grads", "linreg_loss",
+                 "transformer_grad", "transformer_loss"]:
+        assert name in arts, name
+        entry = arts[name]
+        assert (small_artifacts / entry["file"]).exists()
+        assert entry["inputs"] and "outputs" in entry
+    assert arts["coded_grad"]["meta"] == {"n": 8, "q": 6}
+    assert arts["coded_grad"]["inputs"][3]["shape"] == [8, 8]
+    assert arts["transformer_grad"]["inputs"][1]["dtype"] == "i32"
+
+
+def test_hlo_text_is_parseable_text(small_artifacts):
+    body = (small_artifacts / "coded_grad.hlo.txt").read_text()
+    assert body.startswith("HloModule"), body[:50]
+    assert "ROOT" in body
+
+
+def test_transformer_param_count_in_meta(small_artifacts):
+    from compile import transformer as tf
+
+    manifest = json.loads((small_artifacts / "manifest.json").read_text())
+    meta = manifest["artifacts"]["transformer_grad"]["meta"]
+    cfg = tf.TransformerConfig(
+        vocab=meta["vocab"], d_model=meta["d_model"],
+        n_layers=meta["layers"], n_heads=meta["heads"], seq_len=meta["seq"],
+    )
+    assert meta["params"] == cfg.n_params
+    assert manifest["artifacts"]["transformer_grad"]["inputs"][0]["shape"] == [
+        cfg.n_params
+    ]

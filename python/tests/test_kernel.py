@@ -1,0 +1,118 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and value scales; this is the CORE correctness
+signal for the AOT hot path (the same HLO the Rust coordinator executes).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import coded_grad as k
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape, scale=scale), jnp.float32)
+
+
+def test_tile_divides():
+    for n in [1, 2, 7, 100, 128, 130, 256]:
+        t = k._tile(n)
+        assert n % t == 0
+        assert 1 <= t <= 128
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 24),
+    q=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+)
+def test_grad_matrix_matches_ref(n, q, seed, scale):
+    x = _rand((q,), seed, scale)
+    z = _rand((n, q), seed + 1, scale)
+    y = _rand((n,), seed + 2, scale)
+    got = k.grad_matrix(x, z, y)
+    want = ref.grad_matrix_ref(x, z, y)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * scale**2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 20),
+    kk=st.integers(1, 20),
+    q=st.integers(1, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_coded_matmul_matches_ref(n, kk, q, seed):
+    a = _rand((n, kk), seed)
+    g = _rand((kk, q), seed + 1)
+    got = k.coded_matmul(a, g)
+    want = ref.matmul_ref(a, g)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 16),
+    q=st.integers(1, 16),
+    d=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_full_coded_grad_pipeline(n, q, d, seed):
+    """End-to-end eq. (5): cyclic mask with 1/d weights, like the trainer."""
+    d = min(d, n)
+    x = _rand((q,), seed, 1.0)
+    z = _rand((n, q), seed + 1, 10.0)
+    y = _rand((n,), seed + 2, 10.0)
+    # cyclic assignment mask A[i, (i+j) % n] = 1/d
+    a = np.zeros((n, n), np.float32)
+    for i in range(n):
+        for j in range(d):
+            a[i, (i + j) % n] = 1.0 / d
+    a = jnp.asarray(a)
+    got = k.coded_grad(x, z, y, a)
+    want = ref.coded_grad_ref(x, z, y, a)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-3)
+
+
+def test_paper_scale_shapes():
+    """The exact N=Q=100 shape the artifacts ship with."""
+    n = q = 100
+    x = _rand((q,), 0)
+    z = _rand((n, q), 1, 10.0)
+    y = _rand((n,), 2, 10.0)
+    a = jnp.abs(_rand((n, n), 3)) / n
+    got = k.coded_grad(x, z, y, a)
+    want = ref.coded_grad_ref(x, z, y, a)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2)
+    assert got.shape == (n, q)
+
+
+def test_dtype_preserved():
+    x = _rand((4,), 0)
+    z = _rand((6, 4), 1)
+    y = _rand((6,), 2)
+    assert k.grad_matrix(x, z, y).dtype == jnp.float32
+
+
+def test_vmem_estimate_sane():
+    # paper scale fits very comfortably in a 16 MiB VMEM
+    assert k.vmem_estimate_bytes(100, 100) < 1 << 20
+
+
+@pytest.mark.parametrize("n,q", [(4, 4), (8, 2)])
+def test_coded_grad_zero_mask_is_zero(n, q):
+    x = _rand((q,), 5)
+    z = _rand((n, q), 6)
+    y = _rand((n,), 7)
+    a = jnp.zeros((n, n), jnp.float32)
+    out = k.coded_grad(x, z, y, a)
+    np.testing.assert_allclose(out, np.zeros((n, q)), atol=1e-7)

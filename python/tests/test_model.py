@@ -1,0 +1,51 @@
+"""L2 linreg graphs: shapes and parity with the oracle/numerics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _fixture(n=10, q=6, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=q), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(n, q), scale=10.0), jnp.float32)
+    y = jnp.asarray(rng.normal(size=n, scale=10.0), jnp.float32)
+    a = jnp.asarray(rng.uniform(size=(n, n)) / n, jnp.float32)
+    return x, z, y, a
+
+
+def test_loss_matches_half_sq_residuals():
+    x, z, y, _ = _fixture()
+    (loss,) = model.linreg_loss(x, z, y)
+    r = np.asarray(z) @ np.asarray(x) - np.asarray(y)
+    np.testing.assert_allclose(float(loss), 0.5 * np.sum(r * r), rtol=1e-5)
+
+
+def test_grads_match_ref_and_numeric():
+    x, z, y, _ = _fixture()
+    (g,) = model.linreg_grads(x, z, y)
+    np.testing.assert_allclose(g, ref.grad_matrix_ref(x, z, y), rtol=1e-4)
+    # numeric: d loss / dx = sum of rows of G
+    eps = 1e-3
+    full = np.asarray(g).sum(axis=0)
+    for j in [0, 3, 5]:
+        e = jnp.zeros_like(x).at[j].set(eps)
+        fp = float(model.linreg_loss(x + e, z, y)[0])
+        fm = float(model.linreg_loss(x - e, z, y)[0])
+        fd = (fp - fm) / (2 * eps)
+        assert abs(fd - full[j]) < 2e-2 * max(abs(fd), 1.0), (j, fd, full[j])
+
+
+def test_coded_grad_graph_matches_ref():
+    x, z, y, a = _fixture()
+    (coded,) = model.linreg_coded_grad(x, z, y, a)
+    np.testing.assert_allclose(coded, ref.coded_grad_ref(x, z, y, a), rtol=1e-4)
+
+
+def test_self_check_passes():
+    assert model.check_against_ref() < 1e-5

@@ -1,0 +1,104 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!  1. task-matrix layout (cyclic vs fractional-repetition vs random) —
+//!     Lemma 1 in practice;
+//!  2. unbiased vs biased compression (rand-K vs top-K vs QSGD) inside
+//!     Com-LAD — why Definition 2 demands unbiasedness;
+//!  3. aggregator zoo under coding — the meta-algorithm claim.
+
+use lad::coding::task_matrix::lemma1_infimum;
+use lad::coding::TaskMatrix;
+use lad::config::{AggregatorKind, AttackKind, CompressionKind, TrainConfig};
+use lad::data::linreg::LinRegDataset;
+use lad::experiments::common::{run_variant, Variant};
+use lad::util::rng::Rng;
+
+fn main() {
+    ablation_task_matrix();
+    ablation_compression();
+    ablation_aggregators();
+}
+
+fn ablation_task_matrix() {
+    println!("=== ablation 1: task-matrix layout (Lemma 1) ===");
+    let (n, h, d) = (100usize, 80usize, 10usize);
+    let mut rng = Rng::new(1);
+    let cyc = TaskMatrix::cyclic(n, d).lemma1_objective(h);
+    let fr = TaskMatrix::fractional_repetition(n, d).lemma1_objective(h);
+    let rand = TaskMatrix::random(n, d, &mut rng).lemma1_objective(h);
+    let inf = lemma1_infimum(n, h, d);
+    println!("  infimum (paper eq. 17): {inf:.6e}");
+    println!("  cyclic                : {cyc:.6e}  (matches infimum)");
+    println!("  fractional repetition : {fr:.6e}");
+    println!("  random d-regular      : {rand:.6e}");
+    assert!(cyc <= fr && cyc <= rand);
+}
+
+fn ablation_compression() {
+    println!("\n=== ablation 2: compression operators inside Com-LAD ===");
+    let mut rng = Rng::new(2);
+    let ds = LinRegDataset::generate(60, 60, 0.3, &mut rng);
+    for (label, comp) in [
+        ("none (dense)", CompressionKind::None),
+        ("rand-k 30% (unbiased)", CompressionKind::RandK { k: 18 }),
+        ("top-k 30% (biased)", CompressionKind::TopK { k: 18 }),
+        ("qsgd-16 (unbiased)", CompressionKind::Qsgd { levels: 16 }),
+    ] {
+        let mut cfg = TrainConfig::default();
+        cfg.n_devices = 60;
+        cfg.n_honest = 45;
+        cfg.d = 5;
+        cfg.dim = 60;
+        cfg.iters = 1500;
+        cfg.lr = 2e-5;
+        cfg.sigma_h = 0.3;
+        cfg.compression = comp;
+        cfg.log_every = 0;
+        let tr = run_variant(&ds, &Variant { label: label.into(), cfg, draco_r: None }, 3)
+            .expect("run");
+        println!(
+            "  {label:<24} final_loss {:.4e}   uplink {:.2e} bits",
+            tr.final_loss,
+            tr.total_bits() as f64
+        );
+    }
+}
+
+fn ablation_aggregators() {
+    println!("\n=== ablation 3: aggregator zoo, d=1 vs d=10 (sign-flip) ===");
+    let mut rng = Rng::new(3);
+    let ds = LinRegDataset::generate(60, 60, 0.3, &mut rng);
+    println!("  {:<12} {:>14} {:>14} {:>8}", "rule", "d=1", "d=10 (LAD)", "gain");
+    for kind in [
+        AggregatorKind::Cwtm,
+        AggregatorKind::Median,
+        AggregatorKind::GeometricMedian,
+        AggregatorKind::MultiKrum,
+        AggregatorKind::Faba,
+        AggregatorKind::Mcc,
+    ] {
+        let mut fin = [0.0f64; 2];
+        for (i, d) in [1usize, 10].iter().enumerate() {
+            let mut cfg = TrainConfig::default();
+            cfg.n_devices = 60;
+            cfg.n_honest = 48;
+            cfg.d = *d;
+            cfg.dim = 60;
+            cfg.iters = 1500;
+            cfg.lr = 2e-5;
+            cfg.sigma_h = 0.3;
+            cfg.aggregator = kind;
+            cfg.attack = AttackKind::SignFlip { coeff: -2.0 };
+            cfg.log_every = 0;
+            fin[i] = run_variant(&ds, &Variant { label: "x".into(), cfg, draco_r: None }, 5)
+                .expect("run")
+                .final_loss;
+        }
+        println!(
+            "  {:<12} {:>14.4e} {:>14.4e} {:>7.2}x",
+            kind.name(),
+            fin[0],
+            fin[1],
+            fin[0] / fin[1]
+        );
+    }
+}

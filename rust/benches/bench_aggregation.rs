@@ -1,0 +1,40 @@
+//! Micro-bench: aggregation rules at the paper's scale (N=100, Q=100) and
+//! at transformer scale (N=8, Q=0.4M) — the L3 hot path.
+
+use lad::aggregation::{
+    Aggregator, CoordinateMedian, Cwtm, Faba, GeometricMedian, Krum, Mcc, Mean, MultiKrum, Nnm,
+    Tgn,
+};
+use lad::bench_support::{run, section};
+use lad::util::rng::Rng;
+
+fn family(n: usize, q: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.gauss_vec(q)).collect()
+}
+
+fn main() {
+    section("aggregation rules, N=100 Q=100 (paper scale)");
+    let msgs = family(100, 100, 1);
+    let rules: Vec<Box<dyn Aggregator>> = vec![
+        Box::new(Mean),
+        Box::new(Cwtm::new(0.1)),
+        Box::new(CoordinateMedian),
+        Box::new(GeometricMedian::default()),
+        Box::new(Krum::new(20)),
+        Box::new(MultiKrum::new(20)),
+        Box::new(Mcc::default()),
+        Box::new(Faba::new(20)),
+        Box::new(Tgn::new(0.2)),
+        Box::new(Nnm::new(20, Box::new(Cwtm::new(0.1)))),
+    ];
+    for rule in &rules {
+        run(&rule.name(), 150.0, || rule.aggregate(&msgs));
+    }
+
+    section("aggregation rules, N=8 Q=409k (e2e transformer scale)");
+    let big = family(8, 409_000, 2);
+    for rule in &rules {
+        run(&rule.name(), 250.0, || rule.aggregate(&big));
+    }
+}

@@ -1,0 +1,39 @@
+//! Micro-bench: task-matrix construction, assignment draw, encoder and
+//! DRACO decode — the per-iteration coding overhead of the coordinator.
+
+use lad::bench_support::{run, section};
+use lad::coding::{encode_coded_into, Assignment, DracoScheme, TaskMatrix};
+use lad::util::math::Mat;
+use lad::util::rng::Rng;
+
+fn main() {
+    let (n, q, d) = (100usize, 100usize, 10usize);
+    let mut rng = Rng::new(1);
+    let rows: Vec<Vec<f32>> = (0..n).map(|_| rng.gauss_vec(q)).collect();
+    let grads = Mat::from_rows(&rows);
+
+    section("coding layer, N=100 Q=100");
+    run("task_matrix_cyclic(d=10)", 50.0, || TaskMatrix::cyclic(n, d));
+    run("assignment_draw", 50.0, || {
+        let mut r = Rng::new(2);
+        Assignment::draw(n, &mut r)
+    });
+
+    let s = TaskMatrix::cyclic(n, d);
+    let assign = Assignment::draw(n, &mut rng);
+    let mut out = vec![0.0f32; q];
+    run("encode_one_device(d=10)", 50.0, || {
+        encode_coded_into(&grads, s.row(assign.tasks[0]), &assign, &mut out)
+    });
+    run("encode_all_devices(d=10)", 150.0, || {
+        for i in 0..n {
+            encode_coded_into(&grads, s.row(assign.tasks[i]), &assign, &mut out);
+        }
+    });
+
+    section("DRACO (r=41, N=100)");
+    let scheme = DracoScheme::new(n, 41);
+    let msgs: Vec<Vec<f32>> = (0..n).map(|i| scheme.honest_message(i, &grads)).collect();
+    run("honest_message", 100.0, || scheme.honest_message(0, &grads));
+    run("majority_decode", 200.0, || scheme.decode(&msgs, 1e-3).unwrap());
+}

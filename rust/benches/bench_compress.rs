@@ -1,0 +1,30 @@
+//! Micro-bench: compression operators at Q=100 (paper) and Q=409k
+//! (transformer gradients).
+
+use lad::bench_support::{run, section};
+use lad::compress::{Compressor, Identity, Qsgd, RandK, TopK};
+use lad::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    for (label, q) in [("Q=100 (paper)", 100usize), ("Q=409k (e2e)", 409_000)] {
+        section(&format!("compressors, {label}"));
+        let g = rng.gauss_vec(q);
+        let ops: Vec<Box<dyn Compressor>> = vec![
+            Box::new(Identity),
+            Box::new(RandK::new((q * 3 / 10).max(1))),
+            Box::new(TopK::new((q * 3 / 10).max(1))),
+            Box::new(Qsgd::new(16)),
+        ];
+        for op in &ops {
+            let mut r = Rng::new(7);
+            let res = run(&op.name(), 150.0, || op.compress(&g, &mut r));
+            let bits = op.compress(&g, &mut Rng::new(7)).bits;
+            println!(
+                "      wire = {bits} bits ({:.1}% of dense), {:.2} Melem/s",
+                100.0 * bits as f64 / (32 * q) as f64,
+                res.throughput(q as f64) / 1e6
+            );
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! End-to-end bench: per-iteration cost of the full LAD transformer stack
+//! (PJRT gradient computes + coding + attack + CWTM-NNM aggregation), and
+//! the breakdown between runtime execution and coordinator overhead.
+
+use lad::experiments::e2e::{run_default, E2eParams};
+use lad::runtime::Runtime;
+
+fn main() {
+    let dir = std::env::var("LAD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let Ok(mut rt) = Runtime::load(&dir) else {
+        eprintln!("no artifacts at {dir} — run `make artifacts` first");
+        return;
+    };
+    let mut p = E2eParams::default();
+    p.iters = 6;
+    p.log_every = 2;
+    println!(
+        "=== e2e LAD transformer: N={} devices, d={}, byz={}, {} iters ===",
+        p.n_devices,
+        p.d,
+        p.n_devices - p.n_honest,
+        p.iters
+    );
+    let trace = run_default(&mut rt, &p).expect("e2e");
+    let execs = rt.stats.executes;
+    let exec_s = rt.stats.execute_s;
+    let compile_s = rt.stats.compile_s;
+    let overhead = (trace.wall_s - exec_s - compile_s).max(0.0);
+    println!("{}", trace.summary());
+    println!(
+        "PJRT: {execs} executes, {exec_s:.2}s total ({:.1} ms/exec); \
+         one-time compile {compile_s:.2}s; coordinator overhead {overhead:.2}s \
+         ({:.1}% of steady-state wall)",
+        1e3 * exec_s / execs.max(1) as f64,
+        100.0 * overhead / (trace.wall_s - compile_s).max(1e-9)
+    );
+    println!(
+        "per-iteration: {:.2}s wall, {} PJRT calls",
+        trace.wall_s / p.iters as f64,
+        p.n_devices * p.d
+    );
+}

@@ -1,0 +1,35 @@
+//! Regenerates Fig. 2 (error term vs δ) and Fig. 3 (error term vs d) and
+//! prints the series the paper plots, plus the closed-form evaluation cost.
+
+use lad::bench_support::{run, section};
+use lad::experiments::{fig2, fig3};
+
+fn main() {
+    section("Fig. 2 — error term vs delta (N=100, H=65, d=5, kappa=1.5, beta=1)");
+    let out2 = fig2::run(&fig2::Fig2Params::default());
+    let s = &out2.series[0];
+    println!("  delta : eps(eq.33)");
+    for i in (0..s.x.len()).step_by(5) {
+        println!("  {:>5.2} : {:.4e}", s.x[i], s.y[i]);
+    }
+
+    section("Fig. 3 — error term vs d (N=100, H=65, delta=0.5)");
+    let out3 = fig3::run(&fig3::Fig3Params::default());
+    let (com, lad, base) = (&out3.series[0], &out3.series[1], &out3.series[2]);
+    println!("  d  : eps_comlad    eps_lad(eq.35)  baseline(eq.36)");
+    for &d in &[1usize, 2, 3, 5, 10, 20, 41, 99] {
+        let i = d - 1;
+        println!(
+            "  {:>2} : {:.4e}    {:.4e}      {:.4e}{}",
+            d,
+            com.y[i],
+            lad.y[i],
+            base.y[i],
+            if lad.y[i] <= base.y[i] { "   <- LAD wins" } else { "" }
+        );
+    }
+
+    section("evaluation cost");
+    run("fig2 full sweep (41 deltas)", 50.0, || fig2::run(&fig2::Fig2Params::default()));
+    run("fig3 full sweep (99 ds)", 50.0, || fig3::run(&fig3::Fig3Params::default()));
+}

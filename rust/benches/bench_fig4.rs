@@ -1,0 +1,22 @@
+//! Regenerates Fig. 4 (loss vs iterations, sign-flip, no compression) at a
+//! bench-friendly horizon and prints the final-loss table the paper's
+//! figure implies. Set LAD_BENCH_FULL=1 for the full 3000-iteration run.
+
+use lad::experiments::fig4;
+use lad::util::timer::Timer;
+
+fn main() {
+    let full = std::env::var("LAD_BENCH_FULL").is_ok();
+    let mut p = fig4::Fig4Params::default();
+    if !full {
+        p.iters = 800;
+    }
+    println!(
+        "=== Fig. 4 reproduction (N={}, H={}, sign-flip -2, sigma_H={}, T={}) ===",
+        p.n, p.h, p.sigma_h, p.iters
+    );
+    let t = Timer::start();
+    let out = fig4::run(&p).expect("fig4");
+    out.print_table();
+    println!("\ntotal wall: {:.1}s  (LAD_BENCH_FULL=1 for T=3000)", t.elapsed_s());
+}

@@ -1,0 +1,29 @@
+//! Regenerates Fig. 6 (compressed communication, rand-K Q̂=30) and prints
+//! the final-loss table plus the per-method uplink bits.
+
+use lad::experiments::fig6;
+use lad::util::timer::Timer;
+
+fn main() {
+    let full = std::env::var("LAD_BENCH_FULL").is_ok();
+    let mut p = fig6::Fig6Params::default();
+    if !full {
+        p.iters = 800;
+    }
+    println!(
+        "=== Fig. 6 reproduction (N={}, H={}, rand-K Q̂={}, d={}, T={}) ===",
+        p.n, p.h, p.q_hat, p.d, p.iters
+    );
+    let t = Timer::start();
+    let out = fig6::run(&p).expect("fig6");
+    out.print_table();
+    let dense_bits = (p.n * p.q * 32 * p.iters) as f64;
+    let sparse_bits = (p.n * p.q_hat * (32 + 7) * p.iters) as f64;
+    println!(
+        "\nuplink: dense {:.2e} bits vs rand-K {:.2e} bits ({:.1}% of dense)",
+        dense_bits,
+        sparse_bits,
+        100.0 * sparse_bits / dense_bits
+    );
+    println!("total wall: {:.1}s", t.elapsed_s());
+}

@@ -1,0 +1,92 @@
+//! Bench: PJRT artifact execution — compile-once cost and steady-state
+//! execute latency of every AOT artifact (the L1/L2 hot path as seen from
+//! Rust). Skips cleanly when artifacts are missing.
+
+use lad::bench_support::{run, section};
+use lad::runtime::{Runtime, TensorIn};
+use lad::util::rng::Rng;
+
+fn main() {
+    let dir = std::env::var("LAD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let Ok(mut rt) = Runtime::load(&dir) else {
+        eprintln!("no artifacts at {dir} — run `make artifacts` first");
+        return;
+    };
+    let mut rng = Rng::new(1);
+    let meta = rt.manifest().entries["coded_grad"].meta.clone();
+    let (n, q) = (meta["n"] as usize, meta["q"] as usize);
+    let x = rng.gauss_vec(q);
+    let z = rng.gauss_vec(n * q);
+    let y = rng.gauss_vec(n);
+    let a = rng.gauss_vec(n * n);
+
+    section(&format!("PJRT linreg artifacts (N={n}, Q={q})"));
+    run("coded_grad (Pallas fused eq.5)", 400.0, || {
+        rt.exec_f32(
+            "coded_grad",
+            &[
+                TensorIn::F32(&x, &[q as i64]),
+                TensorIn::F32(&z, &[n as i64, q as i64]),
+                TensorIn::F32(&y, &[n as i64]),
+                TensorIn::F32(&a, &[n as i64, n as i64]),
+            ],
+        )
+        .unwrap()
+    });
+    run("linreg_grads", 300.0, || {
+        rt.exec_f32(
+            "linreg_grads",
+            &[
+                TensorIn::F32(&x, &[q as i64]),
+                TensorIn::F32(&z, &[n as i64, q as i64]),
+                TensorIn::F32(&y, &[n as i64]),
+            ],
+        )
+        .unwrap()
+    });
+    run("linreg_loss", 300.0, || {
+        rt.exec_f32(
+            "linreg_loss",
+            &[
+                TensorIn::F32(&x, &[q as i64]),
+                TensorIn::F32(&z, &[n as i64, q as i64]),
+                TensorIn::F32(&y, &[n as i64]),
+            ],
+        )
+        .unwrap()
+    });
+
+    if rt.has("transformer_grad") {
+        let tmeta = rt.manifest().entries["transformer_grad"].meta.clone();
+        let p = tmeta["params"] as usize;
+        let (batch, seq, vocab) =
+            (tmeta["batch"] as usize, tmeta["seq"] as usize, tmeta["vocab"] as usize);
+        section(&format!("PJRT transformer artifacts ({p} params)"));
+        let theta = rt
+            .exec_f32("transformer_init", &[TensorIn::I32(&[1], &[])])
+            .unwrap()
+            .remove(0);
+        let windows: Vec<i32> =
+            (0..batch * (seq + 1)).map(|_| rng.below(vocab) as i32).collect();
+        let flops = 6.0 * p as f64 * (batch * seq) as f64;
+        let r = run("transformer_grad (fwd+bwd)", 3000.0, || {
+            rt.exec_f32(
+                "transformer_grad",
+                &[
+                    TensorIn::F32(&theta, &[p as i64]),
+                    TensorIn::I32(&windows, &[batch as i64, seq as i64 + 1]),
+                ],
+            )
+            .unwrap()
+        });
+        println!(
+            "      ≈ {:.2} GFLOP/step → {:.2} GFLOPS sustained",
+            flops / 1e9,
+            r.throughput(flops) / 1e9
+        );
+    }
+    println!(
+        "\nruntime stats: {} compiles ({:.2}s), {} executes ({:.2}s)",
+        rt.stats.compiles, rt.stats.compile_s, rt.stats.executes, rt.stats.execute_s
+    );
+}

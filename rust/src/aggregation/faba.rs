@@ -1,0 +1,92 @@
+//! FABA (Xia et al., IJCAI'19 [5]): iteratively discard the message farthest
+//! from the running mean, f times, then average the survivors.
+
+use super::{check_family, Aggregator};
+use crate::util::math::dist_sq;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Faba {
+    f: usize,
+}
+
+impl Faba {
+    pub fn new(f: usize) -> Self {
+        Faba { f }
+    }
+}
+
+impl Aggregator for Faba {
+    fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
+        let q = check_family(msgs);
+        let n = msgs.len();
+        let drop = self.f.min(n - 1);
+        let mut alive: Vec<bool> = vec![true; n];
+        let mut n_alive = n;
+        // running sum for O(1) mean updates after removals
+        let mut sum = vec![0.0f64; q];
+        for m in msgs {
+            for j in 0..q {
+                sum[j] += m[j] as f64;
+            }
+        }
+        for _ in 0..drop {
+            let mean: Vec<f32> =
+                sum.iter().map(|&s| (s / n_alive as f64) as f32).collect();
+            let far = (0..n)
+                .filter(|&i| alive[i])
+                .max_by(|&a, &b| {
+                    dist_sq(&msgs[a], &mean)
+                        .partial_cmp(&dist_sq(&msgs[b], &mean))
+                        .unwrap()
+                })
+                .unwrap();
+            alive[far] = false;
+            n_alive -= 1;
+            for j in 0..q {
+                sum[j] -= msgs[far][j] as f64;
+            }
+        }
+        sum.iter().map(|&s| (s / n_alive as f64) as f32).collect()
+    }
+
+    fn name(&self) -> String {
+        format!("faba(f={})", self.f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn removes_exactly_f_outliers() {
+        let mut msgs = vec![vec![1.0f32]; 8];
+        msgs.push(vec![100.0]);
+        msgs.push(vec![-100.0]);
+        let out = Faba::new(2).aggregate(&msgs);
+        assert!((out[0] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn f_zero_is_mean() {
+        let msgs = vec![vec![1.0f32], vec![3.0]];
+        assert_eq!(Faba::new(0).aggregate(&msgs), vec![2.0]);
+    }
+
+    #[test]
+    fn never_removes_all() {
+        let msgs = vec![vec![7.0f32], vec![9.0]];
+        let out = Faba::new(10).aggregate(&msgs);
+        assert!(out[0] == 7.0 || out[0] == 9.0);
+    }
+
+    #[test]
+    fn asymmetric_outliers_partially_trimmed() {
+        let mut msgs = vec![vec![0.0f32]; 6];
+        msgs.push(vec![50.0]);
+        msgs.push(vec![60.0]);
+        // only f=1 removals but two outliers: result biased but bounded
+        let out = Faba::new(1).aggregate(&msgs);
+        assert!(out[0] < 30.0);
+    }
+}

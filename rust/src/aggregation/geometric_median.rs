@@ -1,0 +1,95 @@
+//! Geometric median via Weiszfeld iteration (Chen et al. [6], Pillutla et
+//! al. [8]). Minimizes Σᵢ‖y − xᵢ‖; breakdown point 1/2.
+
+use super::{check_family, Aggregator};
+use crate::util::math::dist_sq;
+
+/// Smoothed Weiszfeld with fixed iteration budget and tolerance.
+#[derive(Debug, Clone, Copy)]
+pub struct GeometricMedian {
+    pub max_iters: usize,
+    pub tol: f64,
+    pub eps: f64,
+}
+
+impl Default for GeometricMedian {
+    fn default() -> Self {
+        GeometricMedian { max_iters: 100, tol: 1e-10, eps: 1e-12 }
+    }
+}
+
+impl Aggregator for GeometricMedian {
+    fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
+        let q = check_family(msgs);
+        let n = msgs.len();
+        // init at coordinate mean
+        let mut y = vec![0.0f64; q];
+        for m in msgs {
+            for j in 0..q {
+                y[j] += m[j] as f64;
+            }
+        }
+        y.iter_mut().for_each(|v| *v /= n as f64);
+
+        let mut next = vec![0.0f64; q];
+        for _ in 0..self.max_iters {
+            let mut wsum = 0.0f64;
+            next.iter_mut().for_each(|v| *v = 0.0);
+            for m in msgs {
+                let yd: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+                let dist = dist_sq(m, &yd).sqrt().max(self.eps);
+                let w = 1.0 / dist;
+                wsum += w;
+                for j in 0..q {
+                    next[j] += w * m[j] as f64;
+                }
+            }
+            next.iter_mut().for_each(|v| *v /= wsum);
+            let shift: f64 =
+                y.iter().zip(&next).map(|(a, b)| (a - b) * (a - b)).sum();
+            std::mem::swap(&mut y, &mut next);
+            if shift < self.tol * self.tol {
+                break;
+            }
+        }
+        y.into_iter().map(|v| v as f32).collect()
+    }
+
+    fn name(&self) -> String {
+        "geomed".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn of_identical_points_is_the_point() {
+        let out = GeometricMedian::default().aggregate(&vec![vec![3.0, -1.0]; 5]);
+        assert!((out[0] - 3.0).abs() < 1e-4 && (out[1] + 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn collinear_median() {
+        // geometric median of {0, 1, 10} on a line is the middle point 1
+        let msgs = vec![vec![0.0], vec![1.0], vec![10.0]];
+        let out = GeometricMedian::default().aggregate(&msgs);
+        assert!((out[0] - 1.0).abs() < 1e-2, "{}", out[0]);
+    }
+
+    #[test]
+    fn robust_to_minority_outlier() {
+        let mut msgs = vec![vec![1.0f32, 1.0]; 6];
+        msgs.push(vec![1e5, -1e5]);
+        let out = GeometricMedian::default().aggregate(&msgs);
+        assert!((out[0] - 1.0).abs() < 0.1 && (out[1] - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn two_points_lands_between() {
+        let msgs = vec![vec![0.0], vec![2.0]];
+        let out = GeometricMedian::default().aggregate(&msgs);
+        assert!(out[0] >= 0.0 && out[0] <= 2.0);
+    }
+}

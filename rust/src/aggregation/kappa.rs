@@ -1,0 +1,102 @@
+//! Empirical robustness-coefficient estimation (Definition 1).
+//!
+//! κ is the smallest constant with
+//! ‖agg({z},{z̃}) − z̄‖² ≤ κ · (1/H) Σ‖zᵢ − z̄‖² for all inputs. We lower-
+//! bound it by maximizing the ratio over randomized honest families and a
+//! small portfolio of adversarial placements — enough to (a) sanity-check
+//! that robust rules have small κ while the mean does not, and (b) feed a
+//! measured κ into the theory formulas for the Fig. 2/3 reproductions.
+
+use super::Aggregator;
+use crate::util::math::{dist_sq, mean_of};
+use crate::util::rng::Rng;
+
+/// One adversarial scenario's ratio; κ̂ is the max over scenarios.
+fn ratio(agg: &dyn Aggregator, honest: &[Vec<f32>], byz: &[Vec<f32>]) -> f64 {
+    let zbar = mean_of(&honest.iter().map(|v| v.as_slice()).collect::<Vec<_>>());
+    let spread: f64 =
+        honest.iter().map(|z| dist_sq(z, &zbar)).sum::<f64>() / honest.len() as f64;
+    let mut msgs: Vec<Vec<f32>> = honest.to_vec();
+    msgs.extend_from_slice(byz);
+    let out = agg.aggregate(&msgs);
+    let dev = dist_sq(&out, &zbar);
+    if spread < 1e-18 {
+        if dev < 1e-18 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        dev / spread
+    }
+}
+
+/// Estimate κ̂ for an aggregation rule with `h` honest / `f` Byzantine.
+pub fn estimate_kappa(
+    agg: &dyn Aggregator,
+    h: usize,
+    f: usize,
+    dim: usize,
+    trials: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let mut kappa: f64 = 0.0;
+    for _ in 0..trials {
+        let spread = 10f64.powf(rng.f64() * 2.0 - 1.0); // 0.1 .. 10
+        let honest: Vec<Vec<f32>> = (0..h)
+            .map(|_| (0..dim).map(|_| rng.normal(0.0, spread) as f32).collect())
+            .collect();
+        let zbar =
+            mean_of(&honest.iter().map(|v| v.as_slice()).collect::<Vec<_>>());
+        // adversarial portfolio: far point, sign-flip of mean, mimic extreme
+        // honest, small-norm bias
+        let far: Vec<f32> = zbar.iter().map(|x| x + 100.0 * spread as f32).collect();
+        let flip: Vec<f32> = zbar.iter().map(|x| -2.0 * x).collect();
+        let zero = vec![0.0f32; dim];
+        let shifted: Vec<f32> =
+            zbar.iter().map(|x| x + 3.0 * spread as f32).collect();
+        for adv in [&far, &flip, &zero, &shifted] {
+            let byz: Vec<Vec<f32>> = (0..f).map(|_| adv.clone()).collect();
+            let r = ratio(agg, &honest, &byz);
+            if r.is_finite() {
+                kappa = kappa.max(r);
+            }
+        }
+    }
+    kappa
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::{CoordinateMedian, Cwtm, Mean};
+
+    #[test]
+    fn mean_has_unbounded_kappa() {
+        let mut rng = Rng::new(1);
+        let k = estimate_kappa(&Mean, 8, 2, 5, 10, &mut rng);
+        assert!(k > 100.0, "mean κ̂ = {k}");
+    }
+
+    #[test]
+    fn cwtm_kappa_is_bounded() {
+        let mut rng = Rng::new(2);
+        let k = estimate_kappa(&Cwtm::new(0.2), 8, 2, 5, 20, &mut rng);
+        assert!(k.is_finite() && k < 50.0, "cwtm κ̂ = {k}");
+    }
+
+    #[test]
+    fn median_kappa_is_bounded() {
+        let mut rng = Rng::new(3);
+        let k = estimate_kappa(&CoordinateMedian, 9, 3, 5, 20, &mut rng);
+        assert!(k.is_finite() && k < 60.0, "median κ̂ = {k}");
+    }
+
+    #[test]
+    fn robust_rules_beat_mean() {
+        let mut rng = Rng::new(4);
+        let km = estimate_kappa(&Mean, 8, 2, 4, 10, &mut rng);
+        let kc = estimate_kappa(&Cwtm::new(0.2), 8, 2, 4, 10, &mut rng);
+        assert!(kc < km);
+    }
+}

@@ -1,0 +1,146 @@
+//! (Multi-)Krum (Blanchard et al., NeurIPS'17 [3]).
+//!
+//! score(i) = Σ of the n−f−2 smallest squared distances from xᵢ to the other
+//! messages; Krum returns the argmin message, Multi-Krum averages the
+//! m = n − f best-scored messages.
+
+use super::{check_family, Aggregator};
+use crate::util::math::mean_of;
+
+fn scores(msgs: &[Vec<f32>], f: usize) -> Vec<f64> {
+    let n = msgs.len();
+    // number of neighbors summed per Krum: n - f - 2, floored at 1
+    let m = n.saturating_sub(f + 2).max(1);
+    // Perf: symmetric pairwise distances via the Gram expansion with cached
+    // norms — halves the dominant dot-product count (EXPERIMENTS.md §Perf).
+    let norms: Vec<f64> = msgs.iter().map(|v| crate::util::math::norm_sq(v)).collect();
+    let mut dist = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in i + 1..n {
+            let dij = (norms[i] + norms[j]
+                - 2.0 * crate::util::math::dot(&msgs[i], &msgs[j]) as f64)
+                .max(0.0);
+            dist[i * n + j] = dij;
+            dist[j * n + i] = dij;
+        }
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut dists: Vec<f64> = Vec::with_capacity(n - 1);
+    for i in 0..n {
+        dists.clear();
+        dists.extend((0..n).filter(|&j| j != i).map(|j| dist[i * n + j]));
+        let k = m.min(dists.len());
+        if k < dists.len() {
+            dists.select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));
+        }
+        out.push(dists[..k].iter().sum());
+    }
+    out
+}
+
+/// Classic Krum: select the single most central message.
+#[derive(Debug, Clone, Copy)]
+pub struct Krum {
+    f: usize,
+}
+
+impl Krum {
+    pub fn new(f: usize) -> Self {
+        Krum { f }
+    }
+}
+
+impl Aggregator for Krum {
+    fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
+        check_family(msgs);
+        let s = scores(msgs, self.f);
+        let best = s
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        msgs[best].clone()
+    }
+
+    fn name(&self) -> String {
+        format!("krum(f={})", self.f)
+    }
+}
+
+/// Multi-Krum: average the n−f best-scored messages.
+#[derive(Debug, Clone, Copy)]
+pub struct MultiKrum {
+    f: usize,
+}
+
+impl MultiKrum {
+    pub fn new(f: usize) -> Self {
+        MultiKrum { f }
+    }
+}
+
+impl Aggregator for MultiKrum {
+    fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
+        check_family(msgs);
+        let n = msgs.len();
+        let keep = n.saturating_sub(self.f).max(1);
+        let s = scores(msgs, self.f);
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| s[a].partial_cmp(&s[b]).unwrap());
+        let selected: Vec<&[f32]> =
+            idx[..keep].iter().map(|&i| msgs[i].as_slice()).collect();
+        mean_of(&selected)
+    }
+
+    fn name(&self) -> String {
+        format!("multi-krum(f={})", self.f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn family_with_outliers(seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        let mut msgs: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..4).map(|_| rng.normal(1.0, 0.1) as f32).collect())
+            .collect();
+        msgs.push(vec![500.0; 4]);
+        msgs.push(vec![-500.0; 4]);
+        msgs
+    }
+
+    #[test]
+    fn krum_picks_a_central_honest_message() {
+        let msgs = family_with_outliers(1);
+        let out = Krum::new(2).aggregate(&msgs);
+        assert!((out[0] - 1.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn multikrum_averages_honest_cluster() {
+        let msgs = family_with_outliers(2);
+        let out = MultiKrum::new(2).aggregate(&msgs);
+        for x in &out {
+            assert!((x - 1.0).abs() < 0.3, "{x}");
+        }
+    }
+
+    #[test]
+    fn krum_returns_member_of_input() {
+        let msgs = family_with_outliers(3);
+        let out = Krum::new(2).aggregate(&msgs);
+        assert!(msgs.iter().any(|m| m == &out));
+    }
+
+    #[test]
+    fn degenerate_small_family() {
+        let msgs = vec![vec![1.0], vec![2.0]];
+        // f too large relative to n must still produce a sane answer
+        let out = Krum::new(5).aggregate(&msgs);
+        assert!(out[0] == 1.0 || out[0] == 2.0);
+    }
+}

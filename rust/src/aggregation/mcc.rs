@@ -1,0 +1,94 @@
+//! Maximum-correntropy aggregation (Luan et al. [9]).
+//!
+//! Iteratively-reweighted mean with Gaussian-kernel weights
+//! wᵢ = exp(−‖xᵢ − c‖² / (2σ²)); σ² is set adaptively to the mean squared
+//! deviation so the kernel bandwidth tracks the honest spread.
+
+use super::{check_family, Aggregator};
+use crate::util::math::dist_sq;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Mcc {
+    pub iters: usize,
+    /// bandwidth multiplier on the adaptive σ²
+    pub sigma_scale: f64,
+}
+
+impl Default for Mcc {
+    fn default() -> Self {
+        Mcc { iters: 10, sigma_scale: 1.0 }
+    }
+}
+
+impl Aggregator for Mcc {
+    fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
+        let q = check_family(msgs);
+        let n = msgs.len();
+        let mut c: Vec<f32> = {
+            let mut s = vec![0.0f64; q];
+            for m in msgs {
+                for j in 0..q {
+                    s[j] += m[j] as f64;
+                }
+            }
+            s.iter().map(|&v| (v / n as f64) as f32).collect()
+        };
+        for _ in 0..self.iters {
+            let d2: Vec<f64> = msgs.iter().map(|m| dist_sq(m, &c)).collect();
+            let sigma2 =
+                (d2.iter().sum::<f64>() / n as f64).max(1e-12) * self.sigma_scale;
+            let w: Vec<f64> =
+                d2.iter().map(|&d| (-d / (2.0 * sigma2)).exp()).collect();
+            let wsum: f64 = w.iter().sum();
+            if wsum <= 1e-300 {
+                break;
+            }
+            let mut next = vec![0.0f64; q];
+            for (m, &wi) in msgs.iter().zip(&w) {
+                for j in 0..q {
+                    next[j] += wi * m[j] as f64;
+                }
+            }
+            c = next.iter().map(|&v| (v / wsum) as f32).collect();
+        }
+        c
+    }
+
+    fn name(&self) -> String {
+        "mcc".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_points_fixed() {
+        let out = Mcc::default().aggregate(&vec![vec![2.0, -3.0]; 6]);
+        assert!((out[0] - 2.0).abs() < 1e-5 && (out[1] + 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn downweights_outliers() {
+        let mut rng = Rng::new(1);
+        let mut msgs: Vec<Vec<f32>> = (0..10)
+            .map(|_| (0..3).map(|_| rng.normal(1.0, 0.05) as f32).collect())
+            .collect();
+        msgs.push(vec![1000.0; 3]);
+        let out = Mcc::default().aggregate(&msgs);
+        // plain mean would be ≈ 91.8; correntropy stays near the cluster
+        for x in &out {
+            assert!((x - 1.0).abs() < 1.0, "{x}");
+        }
+    }
+
+    #[test]
+    fn converges_toward_dominant_cluster() {
+        let mut msgs = vec![vec![0.0f32]; 9];
+        msgs.push(vec![10.0]);
+        let out = Mcc::default().aggregate(&msgs);
+        assert!(out[0] < 1.5, "{}", out[0]);
+    }
+}

@@ -1,0 +1,50 @@
+//! Plain averaging — the "VA" baseline (no Byzantine robustness).
+
+use super::{check_family, Aggregator};
+use crate::util::math::{axpy, scale};
+
+/// Coordinate-wise arithmetic mean.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Mean;
+
+impl Aggregator for Mean {
+    fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
+        let q = check_family(msgs);
+        let mut out = vec![0.0f32; q];
+        for m in msgs {
+            axpy(1.0, m, &mut out);
+        }
+        scale(&mut out, 1.0 / msgs.len() as f32);
+        out
+    }
+
+    fn name(&self) -> String {
+        "mean".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn averages() {
+        let out = Mean.aggregate(&[vec![1.0, 2.0], vec![3.0, 6.0]]);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn single_message_identity() {
+        let out = Mean.aggregate(&[vec![5.0, -1.0]]);
+        assert_eq!(out, vec![5.0, -1.0]);
+    }
+
+    #[test]
+    fn hijacked_by_one_outlier() {
+        // documents WHY VA fails under attack (Fig. 4)
+        let mut msgs = vec![vec![1.0f32]; 9];
+        msgs.push(vec![1e6]);
+        let out = Mean.aggregate(&msgs);
+        assert!(out[0] > 1e4);
+    }
+}

@@ -1,0 +1,78 @@
+//! Coordinate-wise median (Yin et al. [7], Xie et al. [4]).
+
+use super::{check_family, Aggregator};
+
+/// Per-coordinate median via linear-time selection.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CoordinateMedian;
+
+impl Aggregator for CoordinateMedian {
+    fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
+        let q = check_family(msgs);
+        let n = msgs.len();
+        let mut out = vec![0.0f32; q];
+        let mut col: Vec<f32> = vec![0.0; n];
+        for j in 0..q {
+            for (i, m) in msgs.iter().enumerate() {
+                col[i] = m[j];
+            }
+            let mid = n / 2;
+            let (_, pivot, _) =
+                col.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+            let hi = *pivot;
+            out[j] = if n % 2 == 1 {
+                hi
+            } else {
+                // even: average the two central order statistics
+                let lo = col[..mid]
+                    .iter()
+                    .cloned()
+                    .fold(f32::NEG_INFINITY, f32::max);
+                (lo + hi) / 2.0
+            };
+        }
+        out
+    }
+
+    fn name(&self) -> String {
+        "cwmed".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn odd_median() {
+        let out =
+            CoordinateMedian.aggregate(&[vec![1.0], vec![9.0], vec![2.0]]);
+        assert_eq!(out, vec![2.0]);
+    }
+
+    #[test]
+    fn even_median_averages() {
+        let out = CoordinateMedian
+            .aggregate(&[vec![1.0], vec![2.0], vec![4.0], vec![100.0]]);
+        assert_eq!(out, vec![3.0]);
+    }
+
+    #[test]
+    fn immune_to_minority_outliers() {
+        let mut msgs = vec![vec![5.0f32; 4]; 7];
+        msgs.push(vec![1e9; 4]);
+        msgs.push(vec![-1e9; 4]);
+        let out = CoordinateMedian.aggregate(&msgs);
+        assert_eq!(out, vec![5.0; 4]);
+    }
+
+    #[test]
+    fn per_coordinate_independence() {
+        let out = CoordinateMedian.aggregate(&[
+            vec![1.0, 30.0],
+            vec![2.0, 10.0],
+            vec![3.0, 20.0],
+        ]);
+        assert_eq!(out, vec![2.0, 20.0]);
+    }
+}

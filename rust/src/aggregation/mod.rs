@@ -1,0 +1,110 @@
+//! κ-robust aggregation rules (Definition 1) and pre-aggregation.
+//!
+//! All rules implement [`Aggregator`]: a pure function from the N received
+//! messages (honest + Byzantine, unlabeled) to one vector. Rules that need
+//! an assumed Byzantine count take `f = N − H` at construction.
+//!
+//! The zoo covers every baseline the paper references: averaging (VA),
+//! coordinate-wise trimmed mean (CWTM [7]), coordinate-wise median [4],
+//! geometric median [6,8], (Multi-)Krum [3], FABA [5], maximum-correntropy
+//! (MCC [9]), norm-thresholding (TGN [19]) and NNM pre-aggregation [23].
+
+pub mod cwtm;
+pub mod faba;
+pub mod geometric_median;
+pub mod kappa;
+pub mod krum;
+pub mod mcc;
+pub mod mean;
+pub mod median;
+pub mod nnm;
+pub mod tgn;
+
+use crate::config::{AggregatorKind, TrainConfig};
+
+/// A robust aggregation rule agg(·) (Definition 1).
+pub trait Aggregator: Send + Sync {
+    /// Aggregate the received messages (each of equal dim Q) into one vector.
+    fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32>;
+    /// Human-readable name for logs and tables.
+    fn name(&self) -> String;
+}
+
+pub use cwtm::Cwtm;
+pub use faba::Faba;
+pub use geometric_median::GeometricMedian;
+pub use krum::{Krum, MultiKrum};
+pub use mcc::Mcc;
+pub use mean::Mean;
+pub use median::CoordinateMedian;
+pub use nnm::Nnm;
+pub use tgn::Tgn;
+
+/// Build the aggregator described by a config (including NNM wrapping).
+pub fn from_config(cfg: &TrainConfig) -> Box<dyn Aggregator> {
+    let f = cfg.n_byz();
+    let base: Box<dyn Aggregator> = match cfg.aggregator {
+        AggregatorKind::Mean => Box::new(Mean),
+        AggregatorKind::Cwtm => Box::new(Cwtm::new(cfg.trim_frac)),
+        AggregatorKind::Median => Box::new(CoordinateMedian),
+        AggregatorKind::GeometricMedian => Box::new(GeometricMedian::default()),
+        AggregatorKind::Krum => Box::new(Krum::new(f)),
+        AggregatorKind::MultiKrum => Box::new(MultiKrum::new(f)),
+        AggregatorKind::Mcc => Box::new(Mcc::default()),
+        AggregatorKind::Faba => Box::new(Faba::new(f)),
+        AggregatorKind::Tgn => Box::new(Tgn::new(cfg.trim_frac)),
+    };
+    if cfg.nnm {
+        Box::new(Nnm::new(f, base))
+    } else {
+        base
+    }
+}
+
+/// Validate message family shape; panics on ragged or empty input.
+pub(crate) fn check_family(msgs: &[Vec<f32>]) -> usize {
+    assert!(!msgs.is_empty(), "aggregate() on empty message set");
+    let q = msgs[0].len();
+    assert!(msgs.iter().all(|m| m.len() == q), "ragged message family");
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_config_builds_every_kind() {
+        for kind in [
+            AggregatorKind::Mean,
+            AggregatorKind::Cwtm,
+            AggregatorKind::Median,
+            AggregatorKind::GeometricMedian,
+            AggregatorKind::Krum,
+            AggregatorKind::MultiKrum,
+            AggregatorKind::Mcc,
+            AggregatorKind::Faba,
+            AggregatorKind::Tgn,
+        ] {
+            let mut cfg = TrainConfig::default();
+            cfg.aggregator = kind;
+            let agg = from_config(&cfg);
+            let out = agg.aggregate(&vec![vec![1.0, 2.0]; 10]);
+            assert_eq!(out.len(), 2);
+        }
+    }
+
+    #[test]
+    fn nnm_wrapping_in_name() {
+        let mut cfg = TrainConfig::default();
+        cfg.nnm = true;
+        let agg = from_config(&cfg);
+        assert!(agg.name().contains("nnm"), "{}", agg.name());
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_family_panics() {
+        let _ = Mean.aggregate(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+}

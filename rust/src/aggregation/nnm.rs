@@ -1,0 +1,144 @@
+//! Nearest-Neighbor Mixing pre-aggregation (Allouah et al., AISTATS'23
+//! [23]): replace each message xᵢ by the mean of its n−f nearest neighbors
+//! (including itself), then apply any base rule. NNM provably upgrades any
+//! (f, κ)-robust rule to optimal robustness under heterogeneity.
+//!
+//! Hot-path note: the O(n²) distance pass dominates at N=100, Q=100; we
+//! compute squared distances via the Gram expansion ‖a−b‖² = ‖a‖²+‖b‖²−2a·b
+//! with cached norms, then select the n−f nearest with a partial sort.
+
+use super::{check_family, Aggregator};
+use crate::util::math::{axpy, dot, norm_sq, scale};
+
+pub struct Nnm {
+    f: usize,
+    inner: Box<dyn Aggregator>,
+}
+
+impl Nnm {
+    pub fn new(f: usize, inner: Box<dyn Aggregator>) -> Self {
+        Nnm { f, inner }
+    }
+
+    /// The mixing step alone (exposed for tests and ablation).
+    ///
+    /// Perf: the O(n²) distance matrix is computed once, symmetrically
+    /// (d(i,j) = d(j,i)), via the Gram expansion with cached norms — this
+    /// halves the dominant dot-product count (see EXPERIMENTS.md §Perf).
+    pub fn mix(&self, msgs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let q = check_family(msgs);
+        let n = msgs.len();
+        let keep = n.saturating_sub(self.f).max(1);
+        let norms: Vec<f64> = msgs.iter().map(|m| norm_sq(m)).collect();
+        // symmetric distance matrix, upper triangle computed once
+        let mut dist = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in i + 1..n {
+                let dij = (norms[i] + norms[j]
+                    - 2.0 * dot(&msgs[i], &msgs[j]) as f64)
+                    .max(0.0);
+                dist[i * n + j] = dij;
+                dist[j * n + i] = dij;
+            }
+        }
+        let mut mixed = Vec::with_capacity(n);
+        let mut d: Vec<(f64, usize)> = Vec::with_capacity(n);
+        for i in 0..n {
+            d.clear();
+            d.extend(dist[i * n..(i + 1) * n].iter().copied().zip(0..n));
+            if keep < n {
+                d.select_nth_unstable_by(keep - 1, |a, b| a.0.total_cmp(&b.0));
+            }
+            let mut y = vec![0.0f32; q];
+            for &(_, j) in &d[..keep] {
+                axpy(1.0, &msgs[j], &mut y);
+            }
+            scale(&mut y, 1.0 / keep as f32);
+            mixed.push(y);
+        }
+        mixed
+    }
+}
+
+impl Aggregator for Nnm {
+    fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
+        let mixed = self.mix(msgs);
+        self.inner.aggregate(&mixed)
+    }
+
+    fn name(&self) -> String {
+        format!("{}-nnm", self.inner.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::{Cwtm, Mean};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mixing_preserves_identical_points() {
+        let nnm = Nnm::new(2, Box::new(Mean));
+        let msgs = vec![vec![1.0f32, 2.0]; 6];
+        let mixed = nnm.mix(&msgs);
+        for m in mixed {
+            assert_eq!(m, vec![1.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn mixing_shrinks_honest_spread() {
+        let mut rng = Rng::new(1);
+        let msgs: Vec<Vec<f32>> = (0..20)
+            .map(|_| (0..10).map(|_| rng.normal(0.0, 1.0) as f32).collect())
+            .collect();
+        let nnm = Nnm::new(0, Box::new(Mean));
+        let mixed = nnm.mix(&msgs);
+        // variance around the mean must not grow (mixing is an averaging op)
+        let var = |fam: &[Vec<f32>]| -> f64 {
+            let mu = crate::util::math::mean_of(
+                &fam.iter().map(|v| v.as_slice()).collect::<Vec<_>>(),
+            );
+            fam.iter().map(|m| crate::util::math::dist_sq(m, &mu)).sum::<f64>()
+                / fam.len() as f64
+        };
+        assert!(var(&mixed) <= var(&msgs) + 1e-9);
+    }
+
+    #[test]
+    fn nnm_cwtm_resists_sign_flip_better_than_cwtm_under_heterogeneity() {
+        // heterogeneous honest messages + coordinated sign-flip attackers
+        let mut rng = Rng::new(2);
+        let h = 16;
+        let f = 4;
+        let honest: Vec<Vec<f32>> = (0..h)
+            .map(|i| {
+                (0..8)
+                    .map(|_| rng.normal(1.0 + 0.3 * i as f64, 0.5) as f32)
+                    .collect()
+            })
+            .collect();
+        let true_mean = crate::util::math::mean_of(
+            &honest.iter().map(|v| v.as_slice()).collect::<Vec<_>>(),
+        );
+        let mut msgs = honest.clone();
+        for _ in 0..f {
+            msgs.push(true_mean.iter().map(|x| -2.0 * x).collect());
+        }
+        let plain = Cwtm::new(0.2).aggregate(&msgs);
+        let mixed = Nnm::new(f, Box::new(Cwtm::new(0.2))).aggregate(&msgs);
+        let err_plain = crate::util::math::dist_sq(&plain, &true_mean);
+        let err_mixed = crate::util::math::dist_sq(&mixed, &true_mean);
+        assert!(
+            err_mixed <= err_plain * 1.5,
+            "nnm {err_mixed} should not be much worse than plain {err_plain}"
+        );
+    }
+
+    #[test]
+    fn name_reflects_wrapping() {
+        let nnm = Nnm::new(1, Box::new(Cwtm::new(0.1)));
+        assert_eq!(nnm.name(), "cwtm(0.1)-nnm");
+    }
+}

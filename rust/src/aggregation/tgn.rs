@@ -1,0 +1,75 @@
+//! Norm-thresholding aggregation — "Com-TGN" baseline (Ghosh et al.,
+//! JSAIT'21 [19]): discard the ⌈βN⌉ messages with the largest Euclidean
+//! norms, average the rest. Designed for the compressed domain, where
+//! attacks typically inflate norms.
+
+use super::{check_family, Aggregator};
+use crate::util::math::{mean_of, norm_sq};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Tgn {
+    beta: f64,
+}
+
+impl Tgn {
+    /// β — fraction of largest-norm messages to drop (paper: 0.2).
+    pub fn new(beta: f64) -> Self {
+        assert!((0.0..1.0).contains(&beta));
+        Tgn { beta }
+    }
+}
+
+impl Aggregator for Tgn {
+    fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
+        check_family(msgs);
+        let n = msgs.len();
+        let drop = ((self.beta * n as f64).ceil() as usize).min(n - 1);
+        let mut idx: Vec<usize> = (0..n).collect();
+        let norms: Vec<f64> = msgs.iter().map(|m| norm_sq(m)).collect();
+        idx.sort_by(|&a, &b| norms[a].partial_cmp(&norms[b]).unwrap());
+        let keep: Vec<&[f32]> =
+            idx[..n - drop].iter().map(|&i| msgs[i].as_slice()).collect();
+        mean_of(&keep)
+    }
+
+    fn name(&self) -> String {
+        format!("tgn({})", self.beta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drops_largest_norms() {
+        let mut msgs = vec![vec![1.0f32, 0.0]; 8];
+        msgs.push(vec![-200.0, 5.0]);
+        msgs.push(vec![150.0, -9.0]);
+        let out = Tgn::new(0.2).aggregate(&msgs);
+        assert!((out[0] - 1.0).abs() < 1e-5);
+        assert!(out[1].abs() < 1e-5);
+    }
+
+    #[test]
+    fn beta_zero_is_mean() {
+        let msgs = vec![vec![2.0f32], vec![4.0]];
+        assert_eq!(Tgn::new(0.0).aggregate(&msgs), vec![3.0]);
+    }
+
+    #[test]
+    fn defeated_by_small_norm_attack() {
+        // documents the known weakness: zero-vector attacks pass the filter
+        let mut msgs = vec![vec![10.0f32]; 6];
+        msgs.push(vec![0.0]);
+        msgs.push(vec![0.0]);
+        let out = Tgn::new(0.25).aggregate(&msgs);
+        assert!(out[0] < 10.0); // biased toward zero — expected
+    }
+
+    #[test]
+    fn keeps_at_least_one() {
+        let out = Tgn::new(0.99).aggregate(&[vec![1.0], vec![5.0]]);
+        assert_eq!(out, vec![1.0]);
+    }
+}

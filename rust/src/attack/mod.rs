@@ -1,0 +1,282 @@
+//! Byzantine attack behaviours (§III-B, §VII).
+//!
+//! The paper's experiments use *sign-flipping* with coefficient −2 (each
+//! Byzantine device multiplies its true message by −2; in Com-LAD the result
+//! is then compressed like any other message). The zoo adds the standard
+//! literature attacks for the ablation benches: ALIE (Baruch et al.),
+//! inner-product manipulation (Xie et al.), mimic, zero, Gaussian noise and
+//! random spikes.
+
+use crate::config::AttackKind;
+use crate::util::math::{mean_of, norm};
+use crate::util::rng::Rng;
+
+/// Context handed to an attack each iteration.
+pub struct AttackContext<'a> {
+    /// Messages the honest devices are about to send (post-coding,
+    /// pre-compression) — the omniscient-adversary worst case.
+    pub honest: &'a [Vec<f32>],
+    /// The message each Byzantine device WOULD have sent if honest
+    /// (one per Byzantine device).
+    pub own_true: &'a [Vec<f32>],
+    pub rng: &'a mut Rng,
+}
+
+/// A Byzantine behaviour: craft one message per Byzantine device.
+pub trait Attack: Send + Sync {
+    fn craft(&self, ctx: &mut AttackContext) -> Vec<Vec<f32>>;
+    fn name(&self) -> String;
+}
+
+/// Sign-flip (paper default): bᵢ = coeff · gᵢ with coeff = −2.
+pub struct SignFlip {
+    pub coeff: f32,
+}
+
+impl Attack for SignFlip {
+    fn craft(&self, ctx: &mut AttackContext) -> Vec<Vec<f32>> {
+        ctx.own_true
+            .iter()
+            .map(|g| g.iter().map(|x| self.coeff * x).collect())
+            .collect()
+    }
+    fn name(&self) -> String {
+        format!("sign-flip({})", self.coeff)
+    }
+}
+
+/// Send the zero vector (stealthy under norm filters).
+pub struct Zero;
+
+impl Attack for Zero {
+    fn craft(&self, ctx: &mut AttackContext) -> Vec<Vec<f32>> {
+        let q = ctx.own_true.first().map(|v| v.len()).unwrap_or(0);
+        vec![vec![0.0; q]; ctx.own_true.len()]
+    }
+    fn name(&self) -> String {
+        "zero".into()
+    }
+}
+
+/// Additive Gaussian noise on the true message.
+pub struct GaussianNoise {
+    pub std: f32,
+}
+
+impl Attack for GaussianNoise {
+    fn craft(&self, ctx: &mut AttackContext) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(ctx.own_true.len());
+        for g in ctx.own_true {
+            out.push(
+                g.iter()
+                    .map(|x| x + ctx.rng.normal(0.0, self.std as f64) as f32)
+                    .collect(),
+            );
+        }
+        out
+    }
+    fn name(&self) -> String {
+        format!("gaussian({})", self.std)
+    }
+}
+
+/// ALIE — "a little is enough": collude at mean − z·std per coordinate,
+/// staying inside the honest envelope to evade distance filters.
+pub struct Alie {
+    pub z: f32,
+}
+
+impl Default for Alie {
+    fn default() -> Self {
+        Alie { z: 1.0 }
+    }
+}
+
+impl Attack for Alie {
+    fn craft(&self, ctx: &mut AttackContext) -> Vec<Vec<f32>> {
+        if ctx.honest.is_empty() {
+            return ctx.own_true.to_vec();
+        }
+        let q = ctx.honest[0].len();
+        let n = ctx.honest.len() as f64;
+        let mut mean = vec![0.0f64; q];
+        for h in ctx.honest {
+            for j in 0..q {
+                mean[j] += h[j] as f64;
+            }
+        }
+        mean.iter_mut().for_each(|v| *v /= n);
+        let mut var = vec![0.0f64; q];
+        for h in ctx.honest {
+            for j in 0..q {
+                let d = h[j] as f64 - mean[j];
+                var[j] += d * d;
+            }
+        }
+        let msg: Vec<f32> = (0..q)
+            .map(|j| (mean[j] - self.z as f64 * (var[j] / n).sqrt()) as f32)
+            .collect();
+        vec![msg; ctx.own_true.len()]
+    }
+    fn name(&self) -> String {
+        format!("alie(z={})", self.z)
+    }
+}
+
+/// Inner-product manipulation: collude at −ε · mean(honest).
+pub struct Ipm {
+    pub eps: f32,
+}
+
+impl Attack for Ipm {
+    fn craft(&self, ctx: &mut AttackContext) -> Vec<Vec<f32>> {
+        if ctx.honest.is_empty() {
+            return ctx.own_true.to_vec();
+        }
+        let mean =
+            mean_of(&ctx.honest.iter().map(|v| v.as_slice()).collect::<Vec<_>>());
+        let msg: Vec<f32> = mean.iter().map(|x| -self.eps * x).collect();
+        vec![msg; ctx.own_true.len()]
+    }
+    fn name(&self) -> String {
+        format!("ipm(eps={})", self.eps)
+    }
+}
+
+/// Mimic: replay one fixed honest device's message (amplifies heterogeneity).
+pub struct Mimic;
+
+impl Attack for Mimic {
+    fn craft(&self, ctx: &mut AttackContext) -> Vec<Vec<f32>> {
+        if ctx.honest.is_empty() {
+            return ctx.own_true.to_vec();
+        }
+        // deterministically mimic the honest message with the largest norm
+        let target = ctx
+            .honest
+            .iter()
+            .max_by(|a, b| norm(a).partial_cmp(&norm(b)).unwrap())
+            .unwrap();
+        vec![target.clone(); ctx.own_true.len()]
+    }
+    fn name(&self) -> String {
+        "mimic".into()
+    }
+}
+
+/// Huge random spike (easily filtered; lower bound for robust rules).
+pub struct RandomSpike {
+    pub scale: f32,
+}
+
+impl Attack for RandomSpike {
+    fn craft(&self, ctx: &mut AttackContext) -> Vec<Vec<f32>> {
+        let q = ctx.own_true.first().map(|v| v.len()).unwrap_or(0);
+        (0..ctx.own_true.len())
+            .map(|_| (0..q).map(|_| (ctx.rng.f32() * 2.0 - 1.0) * self.scale).collect())
+            .collect()
+    }
+    fn name(&self) -> String {
+        format!("spike({})", self.scale)
+    }
+}
+
+/// No attack — Byzantine devices behave honestly (control runs).
+pub struct NoAttack;
+
+impl Attack for NoAttack {
+    fn craft(&self, ctx: &mut AttackContext) -> Vec<Vec<f32>> {
+        ctx.own_true.to_vec()
+    }
+    fn name(&self) -> String {
+        "none".into()
+    }
+}
+
+/// Build an attack from a config kind.
+pub fn from_kind(kind: AttackKind) -> Box<dyn Attack> {
+    match kind {
+        AttackKind::None => Box::new(NoAttack),
+        AttackKind::SignFlip { coeff } => Box::new(SignFlip { coeff }),
+        AttackKind::Gaussian { std } => Box::new(GaussianNoise { std }),
+        AttackKind::Zero => Box::new(Zero),
+        AttackKind::Alie => Box::new(Alie::default()),
+        AttackKind::Ipm { eps } => Box::new(Ipm { eps }),
+        AttackKind::Mimic => Box::new(Mimic),
+        AttackKind::RandomSpike { scale } => Box::new(RandomSpike { scale }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_fixture<'a>(
+        honest: &'a [Vec<f32>],
+        own: &'a [Vec<f32>],
+        rng: &'a mut Rng,
+    ) -> AttackContext<'a> {
+        AttackContext { honest, own_true: own, rng }
+    }
+
+    #[test]
+    fn sign_flip_scales_own_message() {
+        let honest = vec![vec![1.0f32, 2.0]];
+        let own = vec![vec![3.0f32, -4.0]];
+        let mut rng = Rng::new(1);
+        let out = SignFlip { coeff: -2.0 }.craft(&mut ctx_fixture(&honest, &own, &mut rng));
+        assert_eq!(out, vec![vec![-6.0, 8.0]]);
+    }
+
+    #[test]
+    fn alie_stays_within_one_std() {
+        let honest = vec![vec![1.0f32], vec![2.0], vec![3.0]];
+        let own = vec![vec![0.0f32]; 2];
+        let mut rng = Rng::new(2);
+        let out = Alie { z: 1.0 }.craft(&mut ctx_fixture(&honest, &own, &mut rng));
+        assert_eq!(out.len(), 2);
+        // mean 2, pop std ≈ 0.816 => msg ≈ 1.184
+        assert!((out[0][0] - 1.1835).abs() < 1e-3, "{}", out[0][0]);
+        assert_eq!(out[0], out[1]); // collusion
+    }
+
+    #[test]
+    fn ipm_is_negative_scaled_mean() {
+        let honest = vec![vec![2.0f32, 4.0], vec![4.0, 8.0]];
+        let own = vec![vec![0.0f32, 0.0]];
+        let mut rng = Rng::new(3);
+        let out = Ipm { eps: 0.5 }.craft(&mut ctx_fixture(&honest, &own, &mut rng));
+        assert_eq!(out[0], vec![-1.5, -3.0]);
+    }
+
+    #[test]
+    fn mimic_copies_an_honest_message() {
+        let honest = vec![vec![1.0f32], vec![5.0]];
+        let own = vec![vec![0.0f32]];
+        let mut rng = Rng::new(4);
+        let out = Mimic.craft(&mut ctx_fixture(&honest, &own, &mut rng));
+        assert_eq!(out[0], vec![5.0]);
+    }
+
+    #[test]
+    fn all_kinds_build_and_produce_right_count() {
+        let honest = vec![vec![1.0f32, 1.0]; 4];
+        let own = vec![vec![1.0f32, 1.0]; 3];
+        for kind in [
+            AttackKind::None,
+            AttackKind::SignFlip { coeff: -2.0 },
+            AttackKind::Gaussian { std: 1.0 },
+            AttackKind::Zero,
+            AttackKind::Alie,
+            AttackKind::Ipm { eps: 0.5 },
+            AttackKind::Mimic,
+            AttackKind::RandomSpike { scale: 10.0 },
+        ] {
+            let atk = from_kind(kind);
+            let mut rng = Rng::new(5);
+            let out = atk.craft(&mut ctx_fixture(&honest, &own, &mut rng));
+            assert_eq!(out.len(), 3, "{}", atk.name());
+            assert!(out.iter().all(|m| m.len() == 2));
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Auto-calibrates iteration counts to a target measurement time, reports
+//! min/median/p95 per iteration, and prints aligned table rows so every
+//! `cargo bench` target can emit the paper's tables.
+
+use crate::util::stats::quantile;
+use std::hint::black_box;
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns * 1e-9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:8.1} ns")
+    } else if ns < 1e6 {
+        format!("{:8.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:8.2} ms", ns / 1e6)
+    } else {
+        format!("{:8.2} s ", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-calibrated to ~`budget_ms` of sampling.
+pub fn bench<T>(name: &str, budget_ms: f64, mut f: impl FnMut() -> T) -> BenchResult {
+    // calibrate: how many calls fit in ~budget/10?
+    let t0 = Instant::now();
+    black_box(f());
+    let one = t0.elapsed().as_secs_f64().max(1e-9);
+    let per_sample = ((budget_ms / 1e3 / 30.0) / one).max(1.0) as usize;
+    let n_samples = 15usize;
+
+    let mut samples_ns = Vec::with_capacity(n_samples);
+    for _ in 0..n_samples {
+        let t = Instant::now();
+        for _ in 0..per_sample {
+            black_box(f());
+        }
+        samples_ns.push(t.elapsed().as_secs_f64() * 1e9 / per_sample as f64);
+    }
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        iters: per_sample * n_samples,
+        min_ns: samples_ns[0],
+        median_ns: quantile(&samples_ns, 0.5),
+        p95_ns: quantile(&samples_ns, 0.95),
+    }
+}
+
+/// Print one result as an aligned row.
+pub fn report(r: &BenchResult) {
+    println!(
+        "  {:<44} min {}  median {}  p95 {}  ({} iters)",
+        r.name,
+        fmt_ns(r.min_ns),
+        fmt_ns(r.median_ns),
+        fmt_ns(r.p95_ns),
+        r.iters
+    );
+}
+
+/// Run + report in one call; returns the result for ratio computations.
+pub fn run<T>(name: &str, budget_ms: f64, f: impl FnMut() -> T) -> BenchResult {
+    let r = bench(name, budget_ms, f);
+    report(&r);
+    r
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        let r = bench("noop-ish", 20.0, || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.min_ns > 0.0);
+        assert!(r.median_ns >= r.min_ns);
+        assert!(r.p95_ns >= r.median_ns);
+        assert!(r.iters >= 15);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            min_ns: 1e3,
+            median_ns: 1e3,
+            p95_ns: 1e3,
+        };
+        // 1000 items per 1µs iteration = 1e9 items/s
+        assert!((r.throughput(1000.0) - 1e9).abs() < 1.0);
+    }
+}

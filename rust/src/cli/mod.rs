@@ -1,0 +1,158 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `lad <subcommand> [--key value | --key=value | --flag] ...`.
+//! Typed accessors with defaults; unknown options are an error so typos
+//! fail loudly.
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Options that were read at least once (for unknown-option detection).
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().insert(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.consumed.borrow_mut().insert(name.to_string());
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} must be an integer, got {s:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} must be an integer, got {s:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} must be a number, got {s:?}")),
+        }
+    }
+
+    /// Error out if any provided --option/--flag was never consumed.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for k in self.options.keys() {
+            if !consumed.contains(k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !consumed.contains(f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["fig4", "--iters", "500", "--lr=1e-6", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("fig4"));
+        assert_eq!(a.get_usize("iters", 0).unwrap(), 500);
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 1e-6);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let a = parse(&["train"]);
+        assert_eq!(a.get_usize("iters", 7).unwrap(), 7);
+        assert_eq!(a.get_str("agg", "cwtm"), "cwtm");
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse(&["x", "--oops", "1"]);
+        assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["x", "--iters", "abc"]);
+        assert!(a.get_usize("iters", 0).is_err());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["run", "one", "two", "--k", "v"]);
+        assert_eq!(a.positional, vec!["one", "two"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--fast", "--check"]);
+        assert!(a.has_flag("fast"));
+        assert!(a.has_flag("check"));
+    }
+}

@@ -1,0 +1,88 @@
+//! Per-iteration random assignment (Algorithm 1, lines 3–6).
+//!
+//! Each iteration the server draws two independent uniform permutations:
+//! task indices T^t (device i executes task row T_i of Ŝ) and the slot→subset
+//! map p^t (slot k refers to subset p_k). Both are broadcast; devices then
+//! compute {∇f_{p_k}(x^t) : ŝ(T_i, k) = 1}.
+
+use crate::util::rng::Rng;
+
+/// One iteration's assignment.
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    /// T^t — tasks[i] is the Ŝ-row assigned to device i.
+    pub tasks: Vec<usize>,
+    /// p^t — p[k] is the dataset subset behind slot k.
+    pub p: Vec<usize>,
+}
+
+impl Assignment {
+    /// Draw a fresh assignment for `n` devices/subsets.
+    pub fn draw(n: usize, rng: &mut Rng) -> Self {
+        Assignment { tasks: rng.permutation(n), p: rng.permutation(n) }
+    }
+
+    /// Identity assignment (tests / DRACO, which fixes its grouping).
+    pub fn identity(n: usize) -> Self {
+        Assignment { tasks: (0..n).collect(), p: (0..n).collect() }
+    }
+
+    /// Subsets device `i` must compute, given the task matrix row.
+    pub fn subsets_for<'a>(&'a self, row: &'a [usize]) -> impl Iterator<Item = usize> + 'a {
+        row.iter().map(move |&k| self.p[k])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::task_matrix::TaskMatrix;
+
+    #[test]
+    fn draw_produces_permutations() {
+        let mut rng = Rng::new(4);
+        let a = Assignment::draw(50, &mut rng);
+        let mut t = a.tasks.clone();
+        let mut p = a.p.clone();
+        t.sort_unstable();
+        p.sort_unstable();
+        assert_eq!(t, (0..50).collect::<Vec<_>>());
+        assert_eq!(p, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn independent_draws_differ() {
+        let mut rng = Rng::new(4);
+        let a = Assignment::draw(50, &mut rng);
+        let b = Assignment::draw(50, &mut rng);
+        assert_ne!(a.tasks, b.tasks);
+        assert_ne!(a.p, b.p);
+    }
+
+    #[test]
+    fn subsets_for_maps_through_p() {
+        let s = TaskMatrix::cyclic(4, 2);
+        let a = Assignment { tasks: vec![2, 3, 0, 1], p: vec![3, 2, 1, 0] };
+        // device 0 runs task 2 => slots {2,3} => subsets {p[2],p[3]} = {1,0}
+        let subs: Vec<usize> = a.subsets_for(s.row(a.tasks[0])).collect();
+        assert_eq!(subs, vec![1, 0]);
+    }
+
+    #[test]
+    fn every_subset_covered_exactly_d_times() {
+        // with the cyclic matrix and any permutation pair, each subset is
+        // computed by exactly d devices — the redundancy LAD leverages
+        let mut rng = Rng::new(8);
+        let n = 30;
+        let d = 7;
+        let s = TaskMatrix::cyclic(n, d);
+        let a = Assignment::draw(n, &mut rng);
+        let mut count = vec![0usize; n];
+        for i in 0..n {
+            for sub in a.subsets_for(s.row(a.tasks[i])) {
+                count[sub] += 1;
+            }
+        }
+        assert_eq!(count, vec![d; n]);
+    }
+}

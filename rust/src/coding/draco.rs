@@ -1,0 +1,253 @@
+//! DRACO baseline (Chen et al., ICML'18, [13]) — fractional-repetition
+//! gradient coding with exact majority-vote decoding.
+//!
+//! Devices are partitioned into groups; every device in group g computes the
+//! *same* message: (1/N) Σ_{k ∈ chunk_g} ∇f_k. The server decodes each group
+//! by majority vote (distance clustering, so honest f32 jitter is tolerated)
+//! and sums the group representatives, recovering μ = (1/N)∇F exactly as
+//! long as every group has an honest majority. Per-device computational load
+//! is |chunk_g| ≈ r gradients — the "41 gradients" figure the paper quotes
+//! for N=100, b=20 (r = 2b+1 = 41).
+
+use crate::util::math::{axpy, dist_sq, Mat};
+
+/// Decode failure: some group had no majority cluster.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum DecodeError {
+    #[error("group {group} has no strict majority agreement")]
+    NoMajority { group: usize },
+}
+
+/// Fractional-repetition scheme: device → group, group → subset chunk.
+#[derive(Debug, Clone)]
+pub struct DracoScheme {
+    n: usize,
+    /// group id per device
+    group_of: Vec<usize>,
+    /// subset indices per group (balanced contiguous chunks)
+    chunks: Vec<Vec<usize>>,
+}
+
+impl DracoScheme {
+    /// Partition `n` devices into ⌊n/r⌋ groups of **at least** `r` devices
+    /// each; the `n` subsets are partitioned into equally many chunks.
+    /// With `r = 2b+1` every group keeps an honest majority under any
+    /// placement of `b` Byzantine devices (group sizes ≥ 2b+1).
+    pub fn new(n: usize, r: usize) -> Self {
+        assert!(r >= 1 && r <= n);
+        let n_groups = (n / r).max(1);
+        // balanced device partition: groups sized ⌊n/G⌋ or ⌈n/G⌉
+        let mut group_of = vec![0usize; n];
+        let mut chunks = vec![Vec::new(); n_groups];
+        let base = n / n_groups;
+        let extra = n % n_groups;
+        let mut dev = 0;
+        let mut sub = 0;
+        for g in 0..n_groups {
+            let size = base + usize::from(g < extra);
+            for _ in 0..size {
+                group_of[dev] = g;
+                dev += 1;
+            }
+            // chunk g owns the same count of subsets
+            for _ in 0..size {
+                chunks[g].push(sub);
+                sub += 1;
+            }
+        }
+        debug_assert_eq!(dev, n);
+        debug_assert_eq!(sub, n);
+        DracoScheme { n, group_of, chunks }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    pub fn n_groups(&self) -> usize {
+        self.chunks.len()
+    }
+    pub fn group_of(&self, device: usize) -> usize {
+        self.group_of[device]
+    }
+    pub fn chunk(&self, group: usize) -> &[usize] {
+        &self.chunks[group]
+    }
+
+    /// Computational load (gradients per iteration) of a device.
+    pub fn load(&self, device: usize) -> usize {
+        self.chunks[self.group_of[device]].len()
+    }
+
+    /// Minimum per-group Byzantine tolerance: ⌈(size−1)/2⌉ faults break the
+    /// smallest group's majority; this returns the largest `b` such that any
+    /// placement of `b` Byzantine devices still decodes.
+    pub fn guaranteed_tolerance(&self) -> usize {
+        self.chunks.iter().map(|c| c.len()).min().map(|m| (m - 1) / 2).unwrap_or(0)
+    }
+
+    /// The honest message of a device: (1/N) Σ_{k ∈ chunk} ∇f_k.
+    pub fn honest_message(&self, device: usize, grads: &Mat) -> Vec<f32> {
+        let mut out = vec![0.0f32; grads.cols];
+        for &k in self.chunk(self.group_of[device]) {
+            axpy(1.0, grads.row(k), &mut out);
+        }
+        crate::util::math::scale(&mut out, 1.0 / self.n as f32);
+        out
+    }
+
+    /// Majority-vote decode: returns μ = (1/N) Σ_k ∇f_k from the N device
+    /// messages (honest + Byzantine, indexed by device id).
+    pub fn decode(&self, msgs: &[Vec<f32>], tol: f64) -> Result<Vec<f32>, DecodeError> {
+        assert_eq!(msgs.len(), self.n);
+        let q = msgs[0].len();
+        let mut total = vec![0.0f32; q];
+        for g in 0..self.n_groups() {
+            let members: Vec<usize> =
+                (0..self.n).filter(|&i| self.group_of[i] == g).collect();
+            let rep = majority_representative(&members, msgs, tol)
+                .ok_or(DecodeError::NoMajority { group: g })?;
+            axpy(1.0, &msgs[rep], &mut total);
+        }
+        Ok(total)
+    }
+}
+
+/// Pick a member whose message agrees (within `tol` L2 distance) with a
+/// strict majority of the group; None if no such member exists.
+fn majority_representative(members: &[usize], msgs: &[Vec<f32>], tol: f64) -> Option<usize> {
+    let need = members.len() / 2 + 1;
+    for &i in members {
+        let agree = members
+            .iter()
+            .filter(|&&j| dist_sq(&msgs[i], &msgs[j]) <= tol * tol)
+            .count();
+        if agree >= need {
+            return Some(i);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math::Mat;
+    use crate::util::rng::Rng;
+
+    fn grad_matrix(n: usize, q: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_rows(&(0..n).map(|_| rng.gauss_vec(q)).collect::<Vec<_>>())
+    }
+
+    fn mu(g: &Mat) -> Vec<f32> {
+        (0..g.cols)
+            .map(|j| (0..g.rows).map(|k| g.row(k)[j]).sum::<f32>() / g.rows as f32)
+            .collect()
+    }
+
+    #[test]
+    fn partition_is_balanced_and_complete() {
+        let s = DracoScheme::new(100, 41);
+        assert_eq!(s.n_groups(), 2);
+        let sizes: Vec<usize> = (0..2).map(|g| s.chunk(g).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 100);
+        assert!(sizes.iter().all(|&x| x == 50));
+        // every subset appears exactly once
+        let mut seen = vec![false; 100];
+        for g in 0..2 {
+            for &k in s.chunk(g) {
+                assert!(!seen[k]);
+                seen[k] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn groups_never_smaller_than_r() {
+        for (n, r) in [(100usize, 41usize), (20, 9), (21, 7), (9, 3), (10, 10)] {
+            let s = DracoScheme::new(n, r);
+            let mut sizes = vec![0usize; s.n_groups()];
+            for i in 0..n {
+                sizes[s.group_of(i)] += 1;
+            }
+            assert!(sizes.iter().all(|&x| x >= r), "N={n} r={r}: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn exact_recovery_no_byzantine() {
+        let g = grad_matrix(20, 6, 1);
+        let s = DracoScheme::new(20, 5);
+        let msgs: Vec<Vec<f32>> = (0..20).map(|i| s.honest_message(i, &g)).collect();
+        let decoded = s.decode(&msgs, 1e-6).unwrap();
+        let want = mu(&g);
+        for j in 0..6 {
+            assert!((decoded[j] - want[j]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn exact_recovery_under_tolerated_byzantine() {
+        let g = grad_matrix(21, 6, 2);
+        let s = DracoScheme::new(21, 7); // 3 groups of 7 => tolerates 3/group
+        let mut msgs: Vec<Vec<f32>> = (0..21).map(|i| s.honest_message(i, &g)).collect();
+        // corrupt 3 devices in group 0 and 2 in group 1 (both < majority)
+        for &i in &[0usize, 1, 2, 7, 8] {
+            msgs[i].iter_mut().for_each(|x| *x = -2.0 * *x + 10.0);
+        }
+        let decoded = s.decode(&msgs, 1e-6).unwrap();
+        let want = mu(&g);
+        for j in 0..6 {
+            assert!((decoded[j] - want[j]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn decode_fails_without_majority() {
+        let g = grad_matrix(9, 4, 3);
+        let s = DracoScheme::new(9, 3);
+        let mut msgs: Vec<Vec<f32>> = (0..9).map(|i| s.honest_message(i, &g)).collect();
+        // corrupt 2 of 3 in group 0 with IDENTICAL lies => lie wins nothing:
+        // strict majority requires 2 agreeing; the two liars agree...
+        // so craft DIFFERENT lies to kill any majority
+        msgs[0].iter_mut().for_each(|x| *x += 100.0);
+        msgs[1].iter_mut().for_each(|x| *x -= 100.0);
+        assert_eq!(s.decode(&msgs, 1e-6), Err(DecodeError::NoMajority { group: 0 }));
+    }
+
+    #[test]
+    fn colluding_majority_defeats_draco_as_expected() {
+        // sanity: DRACO's guarantee needs honest majority per group
+        let g = grad_matrix(9, 4, 4);
+        let s = DracoScheme::new(9, 3);
+        let mut msgs: Vec<Vec<f32>> = (0..9).map(|i| s.honest_message(i, &g)).collect();
+        let lie: Vec<f32> = vec![7.0; 4];
+        msgs[0] = lie.clone();
+        msgs[1] = lie.clone();
+        let decoded = s.decode(&msgs, 1e-6).unwrap();
+        // decoded group-0 contribution is the lie, not the truth
+        assert!((decoded[0] - (lie[0] + 0.0)).abs() < 20.0); // just: no panic, wrong value
+        let want = mu(&g);
+        assert!((decoded[0] - want[0]).abs() > 1.0);
+    }
+
+    #[test]
+    fn tolerance_reporting() {
+        // N=100, r=41 => 2 groups of 50 => tolerates 24 anywhere
+        assert_eq!(DracoScheme::new(100, 41).guaranteed_tolerance(), 24);
+        assert_eq!(DracoScheme::new(20, 5).guaranteed_tolerance(), 2);
+    }
+
+    #[test]
+    fn load_is_order_of_paper_quote() {
+        // paper quotes 41 gradients/device for the ideal r | N layout; our
+        // floor-partition at N=100, r=41 gives 50 — same order of compute,
+        // with a STRONGER worst-case tolerance (24 vs 20). Recorded in
+        // EXPERIMENTS.md.
+        let s = DracoScheme::new(100, 41);
+        for i in 0..100 {
+            assert_eq!(s.load(i), 50);
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Coded-vector encoder — eq. (5):
+//! g_i^t = (1/d) Σ_{k : ŝ(T_i,k)=1} ∇f_{p_k}(x^t).
+//!
+//! The per-subset gradient matrix G (row k = ∇f_k) is produced by a gradient
+//! oracle (native Rust or the PJRT artifact); encoding is a d-row gather +
+//! axpy, which is the L3 hot path at d = O(N).
+
+use crate::coding::assignment::Assignment;
+use crate::util::math::{axpy, scale, Mat};
+
+/// Encode device `i`'s coded vector into `out` (len Q), given the per-subset
+/// gradient matrix `grads` (N×Q, row k = ∇f_k), the task row for this device
+/// and the iteration's assignment.
+pub fn encode_coded_into(grads: &Mat, row: &[usize], assign: &Assignment, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), grads.cols);
+    out.iter_mut().for_each(|x| *x = 0.0);
+    for &k in row {
+        axpy(1.0, grads.row(assign.p[k]), out);
+    }
+    scale(out, 1.0 / row.len() as f32);
+}
+
+/// Allocating variant of [`encode_coded_into`].
+pub fn encode_coded(grads: &Mat, row: &[usize], assign: &Assignment) -> Vec<f32> {
+    let mut out = vec![0.0f32; grads.cols];
+    encode_coded_into(grads, row, assign, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::task_matrix::TaskMatrix;
+    use crate::util::rng::Rng;
+
+    fn grads_3x2() -> Mat {
+        Mat::from_rows(&[vec![1.0, 10.0], vec![2.0, 20.0], vec![4.0, 40.0]])
+    }
+
+    #[test]
+    fn averages_selected_rows() {
+        let g = grads_3x2();
+        let assign = Assignment::identity(3);
+        let out = encode_coded(&g, &[0, 2], &assign);
+        assert_eq!(out, vec![2.5, 25.0]);
+    }
+
+    #[test]
+    fn permutation_reroutes_subsets() {
+        let g = grads_3x2();
+        let assign = Assignment { tasks: vec![0, 1, 2], p: vec![2, 0, 1] };
+        // slots {0,1} -> subsets {2,0}
+        let out = encode_coded(&g, &[0, 1], &assign);
+        assert_eq!(out, vec![2.5, 25.0]);
+    }
+
+    #[test]
+    fn d_equals_n_gives_exact_mean_gradient() {
+        // the d = N limit of LAD: every device sends μ = (1/N)∇F exactly
+        let mut rng = Rng::new(5);
+        let n = 8;
+        let q = 5;
+        let rows: Vec<Vec<f32>> = (0..n).map(|_| rng.gauss_vec(q)).collect();
+        let g = Mat::from_rows(&rows);
+        let s = TaskMatrix::cyclic(n, n);
+        let assign = Assignment::draw(n, &mut rng);
+        let mu: Vec<f32> = (0..q)
+            .map(|j| (0..n).map(|k| g.row(k)[j]).sum::<f32>() / n as f32)
+            .collect();
+        for i in 0..n {
+            let out = encode_coded(&g, s.row(assign.tasks[i]), &assign);
+            for j in 0..q {
+                assert!((out[j] - mu[j]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn unbiasedness_over_assignments() {
+        // E[g_i] = μ over random assignments (eq. 44)
+        let mut rng = Rng::new(6);
+        let n = 10;
+        let q = 4;
+        let rows: Vec<Vec<f32>> = (0..n).map(|_| rng.gauss_vec(q)).collect();
+        let g = Mat::from_rows(&rows);
+        let s = TaskMatrix::cyclic(n, 3);
+        let mu: Vec<f64> = (0..q)
+            .map(|j| (0..n).map(|k| g.row(k)[j] as f64).sum::<f64>() / n as f64)
+            .collect();
+        let trials = 20_000;
+        let mut acc = vec![0.0f64; q];
+        for _ in 0..trials {
+            let assign = Assignment::draw(n, &mut rng);
+            let out = encode_coded(&g, s.row(assign.tasks[0]), &assign);
+            for j in 0..q {
+                acc[j] += out[j] as f64;
+            }
+        }
+        for j in 0..q {
+            assert!(
+                (acc[j] / trials as f64 - mu[j]).abs() < 0.05,
+                "coordinate {j}: {} vs {}",
+                acc[j] / trials as f64,
+                mu[j]
+            );
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Gradient-coding layer: the paper's cyclic computation-task matrix Ŝ
+//! (§IV, Lemma 1), per-iteration random assignment (Algorithm 1, lines 3–6),
+//! the coded-vector encoder (eq. 5), and the DRACO fractional-repetition
+//! baseline (§VII-A, [13]).
+
+pub mod assignment;
+pub mod draco;
+pub mod encoder;
+pub mod task_matrix;
+
+pub use assignment::Assignment;
+pub use draco::{DracoScheme, DecodeError};
+pub use encoder::{encode_coded, encode_coded_into};
+pub use task_matrix::TaskMatrix;

@@ -1,0 +1,233 @@
+//! Computation-task matrices S ∈ {0,1}^{N×N} with exactly d ones per row.
+//!
+//! Row i lists the d subset *slots* a device executing task i must compute
+//! (the slot → subset mapping is the per-iteration permutation p^t, see
+//! [`crate::coding::assignment`]). The paper's Ŝ is [`TaskMatrix::cyclic`]:
+//! row i is the cyclic shift of `[1,…,1,0,…,0]` (d ones), which Lemma 1
+//! proves is the variance-minimizing choice (balanced columns θ_j = d).
+
+use crate::util::rng::Rng;
+
+/// Sparse row representation of a task matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskMatrix {
+    n: usize,
+    d: usize,
+    /// rows[i] = sorted subset-slot indices k with s(i,k) = 1.
+    rows: Vec<Vec<usize>>,
+}
+
+impl TaskMatrix {
+    /// The paper's cyclic matrix Ŝ: row i covers slots {i, i+1, …, i+d−1 mod N}.
+    pub fn cyclic(n: usize, d: usize) -> Self {
+        assert!(d >= 1 && d <= n, "need 1 <= d <= n");
+        let rows = (0..n)
+            .map(|i| {
+                let mut r: Vec<usize> = (0..d).map(|j| (i + j) % n).collect();
+                r.sort_unstable();
+                r
+            })
+            .collect();
+        TaskMatrix { n, d, rows }
+    }
+
+    /// Fractional-repetition layout: devices in group g = ⌊i/d⌋ all cover the
+    /// same slot block {g·d, …, g·d+d−1} (wrapping into the tail block when
+    /// d ∤ n). Used by the DRACO baseline and the Lemma-1 ablation.
+    pub fn fractional_repetition(n: usize, d: usize) -> Self {
+        assert!(d >= 1 && d <= n);
+        let rows = (0..n)
+            .map(|i| {
+                let g = i / d;
+                let start = (g * d) % n;
+                let mut r: Vec<usize> = (0..d).map(|j| (start + j) % n).collect();
+                r.sort_unstable();
+                r.dedup();
+                r
+            })
+            .collect();
+        TaskMatrix { n, d, rows }
+    }
+
+    /// Random d-subset per row (unbalanced columns ⇒ strictly worse Lemma-1
+    /// variance in expectation; ablation baseline).
+    pub fn random(n: usize, d: usize, rng: &mut Rng) -> Self {
+        assert!(d >= 1 && d <= n);
+        let rows = (0..n)
+            .map(|_| {
+                let mut r = rng.choose_k(n, d);
+                r.sort_unstable();
+                r
+            })
+            .collect();
+        TaskMatrix { n, d, rows }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Slot indices covered by task `i`.
+    pub fn row(&self, i: usize) -> &[usize] {
+        &self.rows[i]
+    }
+
+    /// Column sums θ_j (how many tasks cover slot j). For the cyclic matrix
+    /// all θ_j = d — the balanced layout attaining Lemma 1's infimum.
+    pub fn column_counts(&self) -> Vec<usize> {
+        let mut theta = vec![0usize; self.n];
+        for r in &self.rows {
+            for &k in r {
+                theta[k] += 1;
+            }
+        }
+        theta
+    }
+
+    /// The Lemma-1 objective for THIS matrix, in closed form:
+    /// E‖(1/(dH)) h S − (1/N) 1‖² = (Σθ_j² ·(H−1)/(N−1) + dN − dNH/N·…)
+    /// — evaluated from eq. (40)–(41) of the appendix, valid for any S with
+    /// d ones per row:
+    ///   = 1/(d²H) [ d + (H−1)/(N(N−1)) (Σθ² − dN) ] − 1/N … (see tests).
+    pub fn lemma1_objective(&self, h: usize) -> f64 {
+        let n = self.n as f64;
+        let d = self.d as f64;
+        let hh = h as f64;
+        let sum_theta_sq: f64 =
+            self.column_counts().iter().map(|&t| (t * t) as f64).sum();
+        // From (38)-(41): E = (1/(d²H²)) [ H d + H(H−1)/(N(N−1)) (Σθ² − dN) ] − 1/N
+        (1.0 / (d * d * hh * hh))
+            * (hh * d + hh * (hh - 1.0) / (n * (n - 1.0)) * (sum_theta_sq - d * n))
+            - 1.0 / n
+    }
+
+    /// Monte-Carlo estimate of the Lemma-1 objective (validates the closed
+    /// form and the cyclic optimality in tests).
+    pub fn lemma1_monte_carlo(&self, h: usize, trials: usize, rng: &mut Rng) -> f64 {
+        let n = self.n;
+        let mut acc = 0.0f64;
+        let mut col = vec![0.0f64; n];
+        for _ in 0..trials {
+            col.iter_mut().for_each(|c| *c = 0.0);
+            for &i in rng.choose_k(n, h).iter() {
+                for &k in &self.rows[i] {
+                    col[k] += 1.0;
+                }
+            }
+            let scale = 1.0 / (self.d as f64 * h as f64);
+            let mut ss = 0.0;
+            for &c in &col {
+                let v = c * scale - 1.0 / n as f64;
+                ss += v * v;
+            }
+            acc += ss;
+        }
+        acc / trials as f64
+    }
+}
+
+/// Closed-form infimum from Lemma 1: (N−H)(N−d) / (dH(N−1)N), attained by
+/// the cyclic (column-balanced) matrix.
+pub fn lemma1_infimum(n: usize, h: usize, d: usize) -> f64 {
+    let (n, h, d) = (n as f64, h as f64, d as f64);
+    (n - h) * (n - d) / (d * h * (n - 1.0) * n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cyclic_structure() {
+        let s = TaskMatrix::cyclic(5, 2);
+        assert_eq!(s.row(0), &[0, 1]);
+        assert_eq!(s.row(4), &[0, 4]); // wraps
+        assert_eq!(s.column_counts(), vec![2; 5]);
+    }
+
+    #[test]
+    fn cyclic_d_equals_n_is_full() {
+        let s = TaskMatrix::cyclic(4, 4);
+        for i in 0..4 {
+            assert_eq!(s.row(i), &[0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn fractional_repetition_groups_share_rows() {
+        let s = TaskMatrix::fractional_repetition(6, 3);
+        assert_eq!(s.row(0), s.row(1));
+        assert_eq!(s.row(0), s.row(2));
+        assert_eq!(s.row(3), s.row(5));
+        assert_ne!(s.row(0), s.row(3));
+    }
+
+    #[test]
+    fn random_rows_have_d_distinct() {
+        let mut rng = Rng::new(1);
+        let s = TaskMatrix::random(20, 7, &mut rng);
+        for i in 0..20 {
+            assert_eq!(s.row(i).len(), 7);
+            let mut r = s.row(i).to_vec();
+            r.dedup();
+            assert_eq!(r.len(), 7);
+        }
+    }
+
+    #[test]
+    fn closed_form_matches_infimum_for_cyclic() {
+        for (n, h, d) in [(10, 7, 3), (100, 80, 10), (100, 65, 5), (7, 4, 2)] {
+            let s = TaskMatrix::cyclic(n, d);
+            let cf = s.lemma1_objective(h);
+            let inf = lemma1_infimum(n, h, d);
+            assert!(
+                (cf - inf).abs() < 1e-12,
+                "closed form {cf} vs infimum {inf} for N={n},H={h},d={d}"
+            );
+        }
+    }
+
+    #[test]
+    fn monte_carlo_matches_closed_form_cyclic() {
+        let mut rng = Rng::new(42);
+        let s = TaskMatrix::cyclic(20, 4);
+        let mc = s.lemma1_monte_carlo(15, 20_000, &mut rng);
+        let cf = s.lemma1_objective(15);
+        assert!((mc - cf).abs() < 0.1 * cf.max(1e-6), "mc={mc} cf={cf}");
+    }
+
+    #[test]
+    fn monte_carlo_matches_closed_form_random_matrix() {
+        // the closed form (38)–(41) holds for ANY d-regular-row matrix
+        let mut rng = Rng::new(7);
+        let s = TaskMatrix::random(15, 4, &mut rng);
+        let mc = s.lemma1_monte_carlo(10, 30_000, &mut rng);
+        let cf = s.lemma1_objective(10);
+        assert!((mc - cf).abs() < 0.15 * cf.max(1e-6), "mc={mc} cf={cf}");
+    }
+
+    #[test]
+    fn cyclic_beats_or_ties_everything() {
+        // Lemma 1: cyclic attains the infimum over all d-row matrices
+        let mut rng = Rng::new(9);
+        let (n, h, d) = (12, 8, 3);
+        let cyc = TaskMatrix::cyclic(n, d).lemma1_objective(h);
+        for seed in 0..20 {
+            let mut r = Rng::new(seed);
+            let rand = TaskMatrix::random(n, d, &mut r).lemma1_objective(h);
+            assert!(cyc <= rand + 1e-12, "cyclic {cyc} > random {rand}");
+        }
+        let fr = TaskMatrix::fractional_repetition(n, d).lemma1_objective(h);
+        assert!(cyc <= fr + 1e-12);
+        let _ = &mut rng;
+    }
+
+    #[test]
+    fn infimum_vanishes_at_d_equals_n_or_h_equals_n() {
+        assert_eq!(lemma1_infimum(50, 30, 50), 0.0);
+        assert_eq!(lemma1_infimum(50, 50, 10), 0.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Communication compression operators (Definition 2) with bit accounting.
+//!
+//! Com-LAD requires *unbiased* operators: E[C(g)] = g and
+//! E‖C(g) − g‖² ≤ δ‖g‖². Provided: rand-K sparsification (paper's choice,
+//! δ = Q/K − 1), QSGD stochastic quantization, and — for the ablation —
+//! biased top-K. Every operator reports the exact wire size of its encoded
+//! message so experiments can plot loss vs bits.
+
+pub mod qsgd;
+pub mod rand_k;
+pub mod top_k;
+
+use crate::config::CompressionKind;
+use crate::util::rng::Rng;
+
+/// A compressed message: the dense reconstruction the server aggregates,
+/// plus the exact number of bits the encoding would occupy on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressedMsg {
+    pub vec: Vec<f32>,
+    pub bits: usize,
+}
+
+/// A compression operator C : R^Q → R^Q.
+pub trait Compressor: Send + Sync {
+    fn compress(&self, g: &[f32], rng: &mut Rng) -> CompressedMsg;
+    /// Theoretical δ in eq. (10), if the operator is unbiased.
+    fn delta(&self, dim: usize) -> Option<f64>;
+    fn name(&self) -> String;
+}
+
+/// Identity (δ = 0): dense f32 transmission.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn compress(&self, g: &[f32], _rng: &mut Rng) -> CompressedMsg {
+        CompressedMsg { vec: g.to_vec(), bits: 32 * g.len() }
+    }
+    fn delta(&self, _dim: usize) -> Option<f64> {
+        Some(0.0)
+    }
+    fn name(&self) -> String {
+        "none".into()
+    }
+}
+
+pub use qsgd::Qsgd;
+pub use rand_k::RandK;
+pub use top_k::TopK;
+
+/// Build from a config kind.
+pub fn from_kind(kind: CompressionKind) -> Box<dyn Compressor> {
+    match kind {
+        CompressionKind::None => Box::new(Identity),
+        CompressionKind::RandK { k } => Box::new(RandK::new(k)),
+        CompressionKind::TopK { k } => Box::new(TopK::new(k)),
+        CompressionKind::Qsgd { levels } => Box::new(Qsgd::new(levels)),
+    }
+}
+
+/// Empirically verify unbiasedness and measure δ̂ (used by tests and the
+/// compression ablation bench): returns (max |E[C(g)]−g| per coordinate /
+/// ‖g‖, E‖C(g)−g‖² / ‖g‖²).
+pub fn measure_bias_delta(
+    comp: &dyn Compressor,
+    g: &[f32],
+    trials: usize,
+    rng: &mut Rng,
+) -> (f64, f64) {
+    let q = g.len();
+    let mut mean = vec![0.0f64; q];
+    let mut err2 = 0.0f64;
+    for _ in 0..trials {
+        let c = comp.compress(g, rng);
+        for j in 0..q {
+            mean[j] += c.vec[j] as f64;
+        }
+        err2 += crate::util::math::dist_sq(&c.vec, g);
+    }
+    let norm2 = crate::util::math::norm_sq(g).max(1e-30);
+    let bias = (0..q)
+        .map(|j| (mean[j] / trials as f64 - g[j] as f64).abs())
+        .fold(0.0f64, f64::max)
+        / norm2.sqrt();
+    (bias, err2 / trials as f64 / norm2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_lossless() {
+        let mut rng = Rng::new(1);
+        let g = vec![1.0f32, -2.0, 3.0];
+        let c = Identity.compress(&g, &mut rng);
+        assert_eq!(c.vec, g);
+        assert_eq!(c.bits, 96);
+    }
+
+    #[test]
+    fn from_kind_builds_all() {
+        let mut rng = Rng::new(2);
+        let g = vec![0.5f32; 40];
+        for kind in [
+            CompressionKind::None,
+            CompressionKind::RandK { k: 10 },
+            CompressionKind::TopK { k: 10 },
+            CompressionKind::Qsgd { levels: 8 },
+        ] {
+            let c = from_kind(kind);
+            let out = c.compress(&g, &mut rng);
+            assert_eq!(out.vec.len(), 40, "{}", c.name());
+            assert!(out.bits > 0);
+        }
+    }
+}

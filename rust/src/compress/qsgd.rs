@@ -1,0 +1,100 @@
+//! QSGD stochastic quantization (Alistarh et al., NeurIPS'17 [27]).
+//!
+//! Each coordinate is quantized to s levels of |g_j|/‖g‖·s, rounding up or
+//! down stochastically so that E[C(g)] = g. δ ≤ min(Q/s², √Q/s).
+//! Wire format: 32-bit norm + per coordinate (sign + ⌈log₂(s+1)⌉ level bits).
+
+use super::{CompressedMsg, Compressor};
+use crate::util::math::norm;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Qsgd {
+    levels: u32,
+}
+
+impl Qsgd {
+    pub fn new(levels: u32) -> Self {
+        assert!(levels >= 1);
+        Qsgd { levels }
+    }
+}
+
+impl Compressor for Qsgd {
+    fn compress(&self, g: &[f32], rng: &mut Rng) -> CompressedMsg {
+        let q = g.len();
+        let s = self.levels as f32;
+        let gnorm = norm(g) as f32;
+        if gnorm == 0.0 {
+            return CompressedMsg { vec: vec![0.0; q], bits: 32 + q };
+        }
+        let mut out = vec![0.0f32; q];
+        for j in 0..q {
+            let a = g[j].abs() / gnorm * s; // in [0, s]
+            let lo = a.floor();
+            let level = lo + f32::from(rng.f32() < a - lo);
+            out[j] = g[j].signum() * level * gnorm / s;
+        }
+        let level_bits = (32 - self.levels.leading_zeros()) as usize; // ⌈log2(s+1)⌉
+        CompressedMsg { vec: out, bits: 32 + q * (1 + level_bits) }
+    }
+
+    fn delta(&self, dim: usize) -> Option<f64> {
+        let s = self.levels as f64;
+        let q = dim as f64;
+        Some((q / (s * s)).min(q.sqrt() / s))
+    }
+
+    fn name(&self) -> String {
+        format!("qsgd-{}", self.levels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::measure_bias_delta;
+
+    #[test]
+    fn zero_vector_is_fixed_point() {
+        let mut rng = Rng::new(1);
+        let c = Qsgd::new(4).compress(&[0.0; 8], &mut rng);
+        assert_eq!(c.vec, vec![0.0; 8]);
+    }
+
+    #[test]
+    fn unbiased() {
+        let mut rng = Rng::new(2);
+        let g: Vec<f32> = (0..20).map(|i| (i as f32 - 10.0) * 0.3).collect();
+        let (bias, _) = measure_bias_delta(&Qsgd::new(4), &g, 30_000, &mut rng);
+        assert!(bias < 0.02, "bias {bias}");
+    }
+
+    #[test]
+    fn delta_bound_holds_empirically() {
+        let mut rng = Rng::new(3);
+        let g: Vec<f32> = (0..30).map(|i| ((i % 7) as f32) - 3.0).collect();
+        let comp = Qsgd::new(4);
+        let (_, delta_hat) = measure_bias_delta(&comp, &g, 10_000, &mut rng);
+        let bound = comp.delta(30).unwrap();
+        assert!(delta_hat <= bound * 1.1, "δ̂={delta_hat} bound={bound}");
+    }
+
+    #[test]
+    fn more_levels_less_error() {
+        let mut rng = Rng::new(4);
+        let g: Vec<f32> = (0..40).map(|i| (i as f32 * 0.13).sin()).collect();
+        let (_, d2) = measure_bias_delta(&Qsgd::new(2), &g, 4_000, &mut rng);
+        let (_, d16) = measure_bias_delta(&Qsgd::new(16), &g, 4_000, &mut rng);
+        assert!(d16 < d2);
+    }
+
+    #[test]
+    fn preserves_sign_and_magnitude_scale() {
+        let mut rng = Rng::new(5);
+        let g = vec![3.0f32, -4.0];
+        let c = Qsgd::new(64).compress(&g, &mut rng);
+        assert!(c.vec[0] >= 0.0 && c.vec[1] <= 0.0);
+        assert!((c.vec[0] - 3.0).abs() < 0.3);
+    }
+}

@@ -1,0 +1,94 @@
+//! Unbiased random sparsification (Wangni et al. [16]; §VII-B).
+//!
+//! Keep K uniformly chosen coordinates scaled by Q/K, zero the rest:
+//! E[C(g)] = g and E‖C(g) − g‖² = (Q/K − 1)‖g‖², i.e. δ = Q/K − 1.
+//! Wire format: K × (index + f32 value); indices cost ⌈log₂ Q⌉ bits.
+
+use super::{CompressedMsg, Compressor};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct RandK {
+    k: usize,
+}
+
+impl RandK {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        RandK { k }
+    }
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+impl Compressor for RandK {
+    fn compress(&self, g: &[f32], rng: &mut Rng) -> CompressedMsg {
+        let q = g.len();
+        let k = self.k.min(q);
+        let scale = q as f32 / k as f32;
+        let mut out = vec![0.0f32; q];
+        for idx in rng.choose_k(q, k) {
+            out[idx] = g[idx] * scale;
+        }
+        let idx_bits = (usize::BITS - (q - 1).leading_zeros()) as usize;
+        CompressedMsg { vec: out, bits: k * (32 + idx_bits) }
+    }
+
+    fn delta(&self, dim: usize) -> Option<f64> {
+        Some((dim as f64 / self.k.min(dim) as f64) - 1.0)
+    }
+
+    fn name(&self) -> String {
+        format!("rand-{}", self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::measure_bias_delta;
+
+    #[test]
+    fn keeps_exactly_k_scaled_entries() {
+        let mut rng = Rng::new(1);
+        let g: Vec<f32> = (1..=10).map(|i| i as f32).collect();
+        let c = RandK::new(3).compress(&g, &mut rng);
+        let nz: Vec<usize> =
+            (0..10).filter(|&j| c.vec[j] != 0.0).collect();
+        assert_eq!(nz.len(), 3);
+        for &j in &nz {
+            assert!((c.vec[j] - g[j] * (10.0 / 3.0)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn unbiased_and_delta_matches_theory() {
+        let mut rng = Rng::new(2);
+        let g: Vec<f32> = (0..50).map(|i| ((i * 7) % 13) as f32 - 6.0).collect();
+        let comp = RandK::new(10);
+        let (bias, delta_hat) = measure_bias_delta(&comp, &g, 30_000, &mut rng);
+        assert!(bias < 0.02, "bias {bias}");
+        let want = comp.delta(50).unwrap(); // 50/10 - 1 = 4
+        assert!((delta_hat - want).abs() < 0.15 * want, "δ̂={delta_hat} δ={want}");
+    }
+
+    #[test]
+    fn bit_accounting() {
+        let mut rng = Rng::new(3);
+        let g = vec![1.0f32; 100];
+        let c = RandK::new(30).compress(&g, &mut rng);
+        // ⌈log2 100⌉ = 7 bits per index
+        assert_eq!(c.bits, 30 * (32 + 7));
+        assert!(c.bits < 100 * 32); // cheaper than dense
+    }
+
+    #[test]
+    fn k_geq_q_degenerates_to_identity() {
+        let mut rng = Rng::new(4);
+        let g = vec![2.0f32, -3.0];
+        let c = RandK::new(10).compress(&g, &mut rng);
+        assert_eq!(c.vec, g);
+        assert_eq!(RandK::new(10).delta(2), Some(0.0));
+    }
+}

@@ -1,0 +1,80 @@
+//! Biased top-K sparsification (Shi et al. [15]) — ablation only.
+//!
+//! Keeps the K largest-magnitude coordinates unscaled. Violates the
+//! unbiasedness requirement (9) of Com-LAD; included to demonstrate
+//! empirically why Definition 2 demands unbiased operators.
+
+use super::{CompressedMsg, Compressor};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct TopK {
+    k: usize,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        TopK { k }
+    }
+}
+
+impl Compressor for TopK {
+    fn compress(&self, g: &[f32], _rng: &mut Rng) -> CompressedMsg {
+        let q = g.len();
+        let k = self.k.min(q);
+        let mut idx: Vec<usize> = (0..q).collect();
+        if k < q {
+            idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                g[b].abs().partial_cmp(&g[a].abs()).unwrap()
+            });
+        }
+        let mut out = vec![0.0f32; q];
+        for &j in &idx[..k] {
+            out[j] = g[j];
+        }
+        let idx_bits = (usize::BITS - (q.max(2) - 1).leading_zeros()) as usize;
+        CompressedMsg { vec: out, bits: k * (32 + idx_bits) }
+    }
+
+    fn delta(&self, _dim: usize) -> Option<f64> {
+        None // biased: no δ in the sense of Definition 2
+    }
+
+    fn name(&self) -> String {
+        format!("top-{}", self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let mut rng = Rng::new(1);
+        let g = vec![0.1f32, -5.0, 0.2, 4.0, -0.3];
+        let c = TopK::new(2).compress(&g, &mut rng);
+        assert_eq!(c.vec, vec![0.0, -5.0, 0.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn is_biased() {
+        // deterministic => E[C(g)] = C(g) ≠ g whenever K < nnz(g)
+        let mut rng = Rng::new(2);
+        let g = vec![1.0f32, 2.0, 3.0];
+        let c = TopK::new(1).compress(&g, &mut rng);
+        assert_ne!(c.vec, g);
+        assert!(TopK::new(1).delta(3).is_none());
+    }
+
+    #[test]
+    fn lower_error_than_rand_k_for_same_k() {
+        use crate::util::math::dist_sq;
+        let mut rng = Rng::new(3);
+        let g: Vec<f32> = (0..64).map(|i| if i < 4 { 10.0 } else { 0.01 }).collect();
+        let t = TopK::new(4).compress(&g, &mut rng);
+        let r = super::super::RandK::new(4).compress(&g, &mut rng);
+        assert!(dist_sq(&t.vec, &g) < dist_sq(&r.vec, &g));
+    }
+}

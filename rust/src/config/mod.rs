@@ -1,0 +1,376 @@
+//! Training configuration: typed structs + TOML-subset loading + validation.
+//!
+//! A config describes one LAD / Com-LAD run: system size (N, H), coding
+//! load d, aggregation rule, attack, compression, workload and schedule.
+
+pub mod toml;
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::Path;
+use toml::{TomlDoc, TomlValue};
+
+/// Which robust aggregation rule the server applies (§II-A / Def. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggregatorKind {
+    Mean,
+    Cwtm,
+    Median,
+    GeometricMedian,
+    Krum,
+    MultiKrum,
+    Mcc,
+    Faba,
+    Tgn,
+}
+
+impl AggregatorKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "mean" | "avg" | "va" => AggregatorKind::Mean,
+            "cwtm" | "trimmed-mean" => AggregatorKind::Cwtm,
+            "median" | "cwmed" => AggregatorKind::Median,
+            "geomed" | "geometric-median" => AggregatorKind::GeometricMedian,
+            "krum" => AggregatorKind::Krum,
+            "multi-krum" | "multikrum" => AggregatorKind::MultiKrum,
+            "mcc" | "correntropy" => AggregatorKind::Mcc,
+            "faba" => AggregatorKind::Faba,
+            "tgn" | "norm-threshold" => AggregatorKind::Tgn,
+            other => bail!("unknown aggregator {other:?}"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggregatorKind::Mean => "mean",
+            AggregatorKind::Cwtm => "cwtm",
+            AggregatorKind::Median => "median",
+            AggregatorKind::GeometricMedian => "geomed",
+            AggregatorKind::Krum => "krum",
+            AggregatorKind::MultiKrum => "multi-krum",
+            AggregatorKind::Mcc => "mcc",
+            AggregatorKind::Faba => "faba",
+            AggregatorKind::Tgn => "tgn",
+        }
+    }
+}
+
+/// Byzantine behaviour (§VII uses sign-flip with coefficient −2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AttackKind {
+    None,
+    SignFlip { coeff: f32 },
+    Gaussian { std: f32 },
+    Zero,
+    Alie,
+    Ipm { eps: f32 },
+    Mimic,
+    RandomSpike { scale: f32 },
+}
+
+impl AttackKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "none" | "honest" => AttackKind::None,
+            "sign-flip" | "signflip" => AttackKind::SignFlip { coeff: -2.0 },
+            "gaussian" => AttackKind::Gaussian { std: 10.0 },
+            "zero" => AttackKind::Zero,
+            "alie" => AttackKind::Alie,
+            "ipm" => AttackKind::Ipm { eps: 0.5 },
+            "mimic" => AttackKind::Mimic,
+            "spike" | "random-spike" => AttackKind::RandomSpike { scale: 100.0 },
+            other => bail!("unknown attack {other:?}"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttackKind::None => "none",
+            AttackKind::SignFlip { .. } => "sign-flip",
+            AttackKind::Gaussian { .. } => "gaussian",
+            AttackKind::Zero => "zero",
+            AttackKind::Alie => "alie",
+            AttackKind::Ipm { .. } => "ipm",
+            AttackKind::Mimic => "mimic",
+            AttackKind::RandomSpike { .. } => "spike",
+        }
+    }
+}
+
+/// Compression operator (Def. 2; Com-LAD uses unbiased rand-K).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CompressionKind {
+    None,
+    /// Unbiased random sparsification keeping `k` coordinates.
+    RandK { k: usize },
+    /// Biased top-K (ablation only; violates eq. (9)).
+    TopK { k: usize },
+    /// QSGD-style stochastic quantization with `levels` levels.
+    Qsgd { levels: u32 },
+}
+
+impl CompressionKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressionKind::None => "none",
+            CompressionKind::RandK { .. } => "rand-k",
+            CompressionKind::TopK { .. } => "top-k",
+            CompressionKind::Qsgd { .. } => "qsgd",
+        }
+    }
+}
+
+/// How gradients are produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OracleKind {
+    /// Native Rust linear-regression gradients (fast path / no artifacts).
+    NativeLinreg,
+    /// PJRT-executed AOT artifact (JAX + Pallas `coded_grad` kernel).
+    RuntimeLinreg,
+}
+
+/// Top-level run configuration (defaults reproduce Fig. 4's LAD-CWTM d=10).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Total devices N.
+    pub n_devices: usize,
+    /// Honest devices H (N−H are Byzantine). Must satisfy H > N/2.
+    pub n_honest: usize,
+    /// Computational load d: subsets per device per iteration (1 ⇒ no coding).
+    pub d: usize,
+    /// Model dimension Q.
+    pub dim: usize,
+    /// Iterations T.
+    pub iters: usize,
+    /// Fixed learning rate γ.
+    pub lr: f64,
+    /// Data heterogeneity σ_H (§VII).
+    pub sigma_h: f64,
+    /// Aggregation rule.
+    pub aggregator: AggregatorKind,
+    /// Apply NNM pre-aggregation before the rule (CWTM-NNM etc).
+    pub nnm: bool,
+    /// CWTM trim fraction (paper: 0.1) / TGN drop fraction (paper: 0.2).
+    pub trim_frac: f64,
+    /// Attack executed by Byzantine devices.
+    pub attack: AttackKind,
+    /// Compression operator (Com-LAD) applied device-side.
+    pub compression: CompressionKind,
+    /// Gradient oracle.
+    pub oracle: OracleKind,
+    /// RNG seed.
+    pub seed: u64,
+    /// Log every `log_every` iterations (0 = only final).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            n_devices: 100,
+            n_honest: 80,
+            d: 10,
+            dim: 100,
+            iters: 500,
+            lr: 1e-6,
+            sigma_h: 0.3,
+            aggregator: AggregatorKind::Cwtm,
+            nnm: false,
+            trim_frac: 0.1,
+            attack: AttackKind::SignFlip { coeff: -2.0 },
+            compression: CompressionKind::None,
+            oracle: OracleKind::NativeLinreg,
+            seed: 0xC0FFEE,
+            log_every: 50,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Number of Byzantine devices N − H.
+    pub fn n_byz(&self) -> usize {
+        self.n_devices - self.n_honest
+    }
+
+    /// Validate the structural constraints from §III-B / §IV.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_devices == 0 || self.dim == 0 || self.iters == 0 {
+            bail!("n_devices, dim, iters must be positive");
+        }
+        if self.n_honest > self.n_devices {
+            bail!("H={} > N={}", self.n_honest, self.n_devices);
+        }
+        if 2 * self.n_honest <= self.n_devices {
+            bail!("need H > N/2 (got H={}, N={})", self.n_honest, self.n_devices);
+        }
+        if self.d == 0 || self.d > self.n_devices {
+            bail!("need 1 <= d <= N (got d={}, N={})", self.d, self.n_devices);
+        }
+        if !(0.0..0.5).contains(&self.trim_frac) {
+            bail!("trim_frac must be in [0, 0.5)");
+        }
+        if self.lr <= 0.0 {
+            bail!("lr must be positive");
+        }
+        if let CompressionKind::RandK { k } | CompressionKind::TopK { k } = self.compression {
+            if k == 0 || k > self.dim {
+                bail!("compression k={} out of range 1..={}", k, self.dim);
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-subset file; unspecified keys keep defaults.
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let body = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_toml_str(&body)
+    }
+
+    /// Parse from TOML text. Keys live at top level or under `[train]`.
+    pub fn from_toml_str(body: &str) -> Result<Self> {
+        let doc = toml::parse(body).map_err(|e| anyhow::anyhow!("config parse error: {e}"))?;
+        let mut cfg = TrainConfig::default();
+        for table in ["", "train"] {
+            if let Some(kv) = doc.get(table) {
+                apply_table(&mut cfg, kv, &doc)?;
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+fn apply_table(
+    cfg: &mut TrainConfig,
+    kv: &std::collections::BTreeMap<String, TomlValue>,
+    _doc: &TomlDoc,
+) -> Result<()> {
+    for (key, v) in kv {
+        match key.as_str() {
+            "n_devices" | "devices" => cfg.n_devices = need_usize(key, v)?,
+            "n_honest" | "honest" => cfg.n_honest = need_usize(key, v)?,
+            "d" | "load" => cfg.d = need_usize(key, v)?,
+            "dim" | "q" => cfg.dim = need_usize(key, v)?,
+            "iters" | "iterations" => cfg.iters = need_usize(key, v)?,
+            "lr" | "learning_rate" => cfg.lr = need_f64(key, v)?,
+            "sigma_h" | "heterogeneity" => cfg.sigma_h = need_f64(key, v)?,
+            "trim_frac" => cfg.trim_frac = need_f64(key, v)?,
+            "seed" => cfg.seed = need_usize(key, v)? as u64,
+            "log_every" => cfg.log_every = need_usize(key, v)?,
+            "nnm" => {
+                cfg.nnm = v.as_bool().with_context(|| format!("{key} must be bool"))?
+            }
+            "aggregator" => {
+                cfg.aggregator =
+                    AggregatorKind::parse(v.as_str().context("aggregator must be string")?)?
+            }
+            "attack" => {
+                cfg.attack = AttackKind::parse(v.as_str().context("attack must be string")?)?
+            }
+            "oracle" => {
+                cfg.oracle = match v.as_str().context("oracle must be string")? {
+                    "native" | "native-linreg" => OracleKind::NativeLinreg,
+                    "runtime" | "runtime-linreg" | "pjrt" => OracleKind::RuntimeLinreg,
+                    other => bail!("unknown oracle {other:?}"),
+                }
+            }
+            "compression" => {
+                cfg.compression = match v.as_str().context("compression must be string")? {
+                    "none" => CompressionKind::None,
+                    "rand-k" | "randk" => CompressionKind::RandK { k: 30 },
+                    "top-k" | "topk" => CompressionKind::TopK { k: 30 },
+                    "qsgd" => CompressionKind::Qsgd { levels: 16 },
+                    other => bail!("unknown compression {other:?}"),
+                }
+            }
+            "compression_k" | "q_hat" => {
+                let k = need_usize(key, v)?;
+                cfg.compression = match cfg.compression {
+                    CompressionKind::TopK { .. } => CompressionKind::TopK { k },
+                    CompressionKind::Qsgd { .. } => bail!("q_hat does not apply to qsgd"),
+                    _ => CompressionKind::RandK { k },
+                };
+            }
+            other => bail!("unknown config key {other:?}"),
+        }
+    }
+    Ok(())
+}
+
+fn need_usize(key: &str, v: &TomlValue) -> Result<usize> {
+    v.as_usize().with_context(|| format!("{key} must be a non-negative integer"))
+}
+fn need_f64(key: &str, v: &TomlValue) -> Result<f64> {
+    v.as_f64().with_context(|| format!("{key} must be a number"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let cfg = TrainConfig::from_toml_str(
+            r#"
+            [train]
+            devices = 100
+            honest = 70
+            d = 3
+            lr = 3e-7
+            sigma_h = 0.3
+            aggregator = "cwtm"
+            nnm = true
+            attack = "sign-flip"
+            compression = "rand-k"
+            q_hat = 30
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.n_honest, 70);
+        assert_eq!(cfg.n_byz(), 30);
+        assert_eq!(cfg.d, 3);
+        assert!(cfg.nnm);
+        assert_eq!(cfg.compression, CompressionKind::RandK { k: 30 });
+    }
+
+    #[test]
+    fn rejects_minority_honest() {
+        let r = TrainConfig::from_toml_str("devices = 10\nhonest = 5");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_bad_d() {
+        let mut cfg = TrainConfig::default();
+        cfg.d = 101;
+        assert!(cfg.validate().is_err());
+        cfg.d = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        assert!(TrainConfig::from_toml_str("bogus_key = 3").is_err());
+    }
+
+    #[test]
+    fn aggregator_names_roundtrip() {
+        for k in [
+            AggregatorKind::Mean,
+            AggregatorKind::Cwtm,
+            AggregatorKind::Median,
+            AggregatorKind::GeometricMedian,
+            AggregatorKind::Krum,
+            AggregatorKind::MultiKrum,
+            AggregatorKind::Mcc,
+            AggregatorKind::Faba,
+            AggregatorKind::Tgn,
+        ] {
+            assert_eq!(AggregatorKind::parse(k.name()).unwrap(), k);
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! TOML-subset parser (offline sandbox: no `toml`/`serde` crates).
+//!
+//! Supported grammar — enough for training configs:
+//! `[table]` headers, `key = value` with value ∈ {integer, float, bool,
+//! "string", [array of scalars]}, `#` comments, blank lines.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|x| usize::try_from(x).ok())
+    }
+}
+
+/// Parsed document: table name → (key → value). Top-level keys live under "".
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse a TOML-subset document.
+pub fn parse(input: &str) -> Result<TomlDoc, String> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut table = String::new();
+    doc.insert(String::new(), BTreeMap::new());
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            table = name.trim().to_string();
+            if table.is_empty() {
+                return Err(format!("line {}: empty table name", lineno + 1));
+            }
+            doc.entry(table.clone()).or_default();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let value = parse_value(val.trim())
+            .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+        doc.get_mut(&table).unwrap().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(unescape(inner)));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_array_items(inner) {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    // number: int if it parses as i64 and has no float markers
+    if !s.contains(['.', 'e', 'E']) {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    s.replace('_', "")
+        .parse::<f64>()
+        .map(TomlValue::Float)
+        .map_err(|_| format!("cannot parse value: {s:?}"))
+}
+
+fn split_array_items(s: &str) -> Vec<&str> {
+    // split on commas outside quotes (nested arrays unsupported)
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let doc = parse(
+            r#"
+            # training config
+            seed = 42
+            [train]
+            devices = 100
+            lr = 1e-6          # learning rate
+            sigma_h = 0.3
+            aggregator = "cwtm-nnm"
+            use_nnm = true
+            d_values = [5, 10, 20]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["seed"], TomlValue::Int(42));
+        assert_eq!(doc["train"]["devices"].as_usize(), Some(100));
+        assert_eq!(doc["train"]["lr"].as_f64(), Some(1e-6));
+        assert_eq!(doc["train"]["aggregator"].as_str(), Some("cwtm-nnm"));
+        assert_eq!(doc["train"]["use_nnm"].as_bool(), Some(true));
+        let arr = match &doc["train"]["d_values"] {
+            TomlValue::Arr(a) => a,
+            _ => panic!(),
+        };
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_i64(), Some(20));
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = parse(r#"name = "a#b" # trailing"#).unwrap();
+        assert_eq!(doc[""]["name"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unclosed").is_err() || parse("[unclosed").unwrap().is_empty() == false);
+        assert!(parse("novalue").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let doc = parse("n = 1_000_000\nx = 1_0.5").unwrap();
+        assert_eq!(doc[""]["n"].as_i64(), Some(1_000_000));
+        assert_eq!(doc[""]["x"].as_f64(), Some(10.5));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = parse(r#"s = "a\nb\"c""#).unwrap();
+        assert_eq!(doc[""]["s"].as_str(), Some("a\nb\"c"));
+    }
+}

@@ -1,0 +1,192 @@
+//! The paper's §VII workload: heterogeneous linear regression.
+//!
+//! N subsets, one sample each: features z_k ∈ R^Q with entries ~ N(0, 100);
+//! a per-subset ground-truth x̂_k with entries ~ N(0, 1 + k·σ_H) (so larger
+//! σ_H ⇒ more heterogeneity across subsets; σ_H = 0 ⇒ IID); labels
+//! y_k ~ N(⟨z_k, x̂_k⟩, 1). Loss f_k(x) = ½(⟨x, z_k⟩ − y_k)²,
+//! ∇f_k(x) = (⟨x, z_k⟩ − y_k)·z_k, F = Σ_k f_k.
+
+use crate::util::math::{dot, Mat};
+use crate::util::rng::Rng;
+
+/// Generated regression workload.
+#[derive(Debug, Clone)]
+pub struct LinRegDataset {
+    /// features, N×Q (row k = z_k)
+    pub z: Mat,
+    /// labels
+    pub y: Vec<f32>,
+    /// heterogeneity parameter used at generation (for logging)
+    pub sigma_h: f64,
+}
+
+impl LinRegDataset {
+    /// Generate per §VII with feature std 10 (= N(0, 100)).
+    pub fn generate(n: usize, q: usize, sigma_h: f64, rng: &mut Rng) -> Self {
+        let mut z = Mat::zeros(n, q);
+        let mut y = vec![0.0f32; n];
+        for k in 0..n {
+            let row = z.row_mut(k);
+            for v in row.iter_mut() {
+                *v = rng.normal(0.0, 10.0) as f32;
+            }
+            // per-subset ground truth with variance 1 + k·σ_H
+            let std = (1.0 + k as f64 * sigma_h).sqrt();
+            let xhat: Vec<f32> = (0..q).map(|_| rng.normal(0.0, std) as f32).collect();
+            let mean = dot(z.row(k), &xhat) as f64;
+            y[k] = rng.normal(mean, 1.0) as f32;
+        }
+        LinRegDataset { z, y, sigma_h }
+    }
+
+    pub fn n(&self) -> usize {
+        self.z.rows
+    }
+    pub fn dim(&self) -> usize {
+        self.z.cols
+    }
+
+    /// residual r_k = ⟨x, z_k⟩ − y_k.
+    pub fn residuals(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(out.len(), self.n());
+        self.z.matvec(x, out);
+        for (r, &yk) in out.iter_mut().zip(&self.y) {
+            *r -= yk;
+        }
+    }
+
+    /// F(x) = Σ_k ½ r_k².
+    pub fn loss(&self, x: &[f32]) -> f64 {
+        let mut r = vec![0.0f32; self.n()];
+        self.residuals(x, &mut r);
+        r.iter().map(|&v| 0.5 * (v as f64) * (v as f64)).sum()
+    }
+
+    /// ∇f_k(x) for a single subset.
+    pub fn subset_grad(&self, k: usize, x: &[f32]) -> Vec<f32> {
+        let r = dot(self.z.row(k), x) - self.y[k];
+        self.z.row(k).iter().map(|&z| r * z).collect()
+    }
+
+    /// Per-subset gradient matrix G (row k = ∇f_k(x)) — the quantity the
+    /// `coded_grad` Pallas kernel computes on the AOT path.
+    pub fn grad_matrix(&self, x: &[f32], out: &mut Mat) {
+        assert_eq!(out.rows, self.n());
+        assert_eq!(out.cols, self.dim());
+        let mut r = vec![0.0f32; self.n()];
+        self.residuals(x, &mut r);
+        for k in 0..self.n() {
+            let src = self.z.row(k);
+            let dst = out.row_mut(k);
+            let rk = r[k];
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = rk * s;
+            }
+        }
+    }
+
+    /// ∇F(x) = Σ_k ∇f_k(x).
+    pub fn full_grad(&self, x: &[f32]) -> Vec<f32> {
+        let mut r = vec![0.0f32; self.n()];
+        self.residuals(x, &mut r);
+        let mut g = vec![0.0f32; self.dim()];
+        for k in 0..self.n() {
+            crate::util::math::axpy(r[k], self.z.row(k), &mut g);
+        }
+        g
+    }
+
+    /// Empirical heterogeneity: (1/N) Σ‖∇f_k(x) − μ‖² at a point x
+    /// (the β² of Assumption 2 along the trajectory).
+    pub fn heterogeneity_at(&self, x: &[f32]) -> f64 {
+        let mut g = Mat::zeros(self.n(), self.dim());
+        self.grad_matrix(x, &mut g);
+        let mu: Vec<f32> = (0..self.dim())
+            .map(|j| (0..self.n()).map(|k| g.row(k)[j]).sum::<f32>() / self.n() as f32)
+            .collect();
+        (0..self.n())
+            .map(|k| crate::util::math::dist_sq(g.row(k), &mu))
+            .sum::<f64>()
+            / self.n() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> (LinRegDataset, Vec<f32>) {
+        let mut rng = Rng::new(1);
+        let ds = LinRegDataset::generate(10, 6, 0.3, &mut rng);
+        let x = rng.gauss_vec(6);
+        (ds, x)
+    }
+
+    #[test]
+    fn shapes() {
+        let (ds, _) = small();
+        assert_eq!(ds.n(), 10);
+        assert_eq!(ds.dim(), 6);
+        assert_eq!(ds.y.len(), 10);
+    }
+
+    #[test]
+    fn grad_matrix_matches_subset_grads() {
+        let (ds, x) = small();
+        let mut g = Mat::zeros(10, 6);
+        ds.grad_matrix(&x, &mut g);
+        for k in 0..10 {
+            let want = ds.subset_grad(k, &x);
+            for j in 0..6 {
+                assert!((g.row(k)[j] - want[j]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn full_grad_is_sum_of_rows() {
+        let (ds, x) = small();
+        let mut g = Mat::zeros(10, 6);
+        ds.grad_matrix(&x, &mut g);
+        let full = ds.full_grad(&x);
+        for j in 0..6 {
+            let s: f32 = (0..10).map(|k| g.row(k)[j]).sum();
+            assert!((full[j] - s).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gradient_is_numerically_correct() {
+        let (ds, x) = small();
+        let g = ds.full_grad(&x);
+        let eps = 1e-3f32;
+        for j in [0usize, 3, 5] {
+            let mut xp = x.clone();
+            xp[j] += eps;
+            let mut xm = x.clone();
+            xm[j] -= eps;
+            let fd = (ds.loss(&xp) - ds.loss(&xm)) / (2.0 * eps as f64);
+            let rel = (fd - g[j] as f64).abs() / fd.abs().max(1.0);
+            assert!(rel < 1e-2, "coord {j}: fd={fd} analytic={}", g[j]);
+        }
+    }
+
+    #[test]
+    fn heterogeneity_grows_with_sigma_h() {
+        let mut rng = Rng::new(7);
+        let x = vec![0.0f32; 20];
+        let ds0 = LinRegDataset::generate(50, 20, 0.0, &mut rng);
+        let ds3 = LinRegDataset::generate(50, 20, 3.0, &mut rng);
+        assert!(ds3.heterogeneity_at(&x) > ds0.heterogeneity_at(&x));
+    }
+
+    #[test]
+    fn loss_decreases_along_negative_gradient() {
+        let (ds, x) = small();
+        let g = ds.full_grad(&x);
+        let gn = crate::util::math::norm_sq(&g);
+        let step = 1e-6f32;
+        let x2: Vec<f32> = x.iter().zip(&g).map(|(xi, gi)| xi - step * gi).collect();
+        assert!(ds.loss(&x2) < ds.loss(&x), "gn={gn}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload generators: the paper's heterogeneous linear-regression task
+//! (§VII) and a synthetic byte-level corpus for the end-to-end transformer
+//! driver.
+
+pub mod corpus;
+pub mod linreg;
+
+pub use corpus::Corpus;
+pub use linreg::LinRegDataset;

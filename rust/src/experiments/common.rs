@@ -1,0 +1,186 @@
+//! Shared experiment plumbing: labelled series, table printing, CSV export,
+//! and the method-variant runner used by the Fig. 4/5/6 reproductions.
+
+use crate::aggregation;
+use crate::attack;
+use crate::compress;
+use crate::config::{OracleKind, TrainConfig};
+use crate::data::linreg::LinRegDataset;
+use crate::grad::{CodedGradOracle, NativeLinReg, RuntimeLinReg};
+use crate::runtime::Runtime;
+use crate::server::trainer::{DracoTrainer, Trainer};
+use crate::server::TrainTrace;
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Rng;
+use crate::Result;
+use std::path::Path;
+
+/// One labelled curve (x → y).
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>) -> Self {
+        Series { label: label.into(), x: Vec::new(), y: Vec::new() }
+    }
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.x.push(x);
+        self.y.push(y);
+    }
+    pub fn from_trace(t: &TrainTrace) -> Self {
+        Series {
+            label: t.label.clone(),
+            x: t.iters.iter().map(|&i| i as f64).collect(),
+            y: t.loss.clone(),
+        }
+    }
+}
+
+/// A figure reproduction: several series + metadata.
+#[derive(Debug, Clone)]
+pub struct ExperimentOutput {
+    pub name: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+}
+
+impl ExperimentOutput {
+    /// Save `x,<label1>,<label2>,...` rows (series must share x grids; any
+    /// series with a different grid is resampled by index).
+    pub fn save_csv<P: AsRef<Path>>(&self, dir: P) -> Result<std::path::PathBuf> {
+        let path = dir.as_ref().join(format!("{}.csv", self.name));
+        let mut header: Vec<&str> = vec![self.x_label.as_str()];
+        header.extend(self.series.iter().map(|s| s.label.as_str()));
+        let mut w = CsvWriter::create(&path, &header)?;
+        let rows = self.series.iter().map(|s| s.x.len()).max().unwrap_or(0);
+        for r in 0..rows {
+            let mut row = Vec::with_capacity(self.series.len() + 1);
+            let x = self
+                .series
+                .iter()
+                .find(|s| r < s.x.len())
+                .map(|s| s.x[r.min(s.x.len() - 1)])
+                .unwrap_or(r as f64);
+            row.push(x);
+            for s in &self.series {
+                row.push(if r < s.y.len() { s.y[r] } else { f64::NAN });
+            }
+            w.row(&row)?;
+        }
+        w.flush()?;
+        Ok(path)
+    }
+
+    /// Print the final value of each series (the "who wins" table).
+    pub fn print_table(&self) {
+        println!("\n── {} ── ({} vs {})", self.name, self.y_label, self.x_label);
+        let mut rows: Vec<(&str, f64)> = self
+            .series
+            .iter()
+            .map(|s| (s.label.as_str(), *s.y.last().unwrap_or(&f64::NAN)))
+            .collect();
+        rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+        for (label, fin) in rows {
+            println!("  {label:<28} final {fin:.6e}");
+        }
+    }
+}
+
+/// A method variant in a training-figure reproduction.
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub label: String,
+    /// d = 1 reproduces the non-redundant baselines
+    pub cfg: TrainConfig,
+    /// run DRACO decoding instead of robust aggregation (r = group size)
+    pub draco_r: Option<usize>,
+}
+
+/// Run one variant against a shared dataset; every variant sees the same
+/// data and the same seed so curves are comparable.
+pub fn run_variant(ds: &LinRegDataset, v: &Variant, seed: u64) -> Result<TrainTrace> {
+    let mut oracle = make_oracle(ds, v.cfg.oracle)?;
+    let mut x0 = vec![0.0f32; v.cfg.dim];
+    let mut rng = Rng::new(seed);
+    let attack = attack::from_kind(v.cfg.attack);
+    if let Some(r) = v.draco_r {
+        let trainer = DracoTrainer { cfg: &v.cfg, attack: attack.as_ref(), r };
+        trainer.run(oracle.as_mut(), &mut x0, &v.label, &mut rng)
+    } else {
+        let agg = aggregation::from_config(&v.cfg);
+        let comp = compress::from_kind(v.cfg.compression);
+        let trainer =
+            Trainer::new(&v.cfg, agg.as_ref(), attack.as_ref(), comp.as_ref());
+        trainer.run(oracle.as_mut(), &mut x0, &v.label, &mut rng)
+    }
+}
+
+fn make_oracle(ds: &LinRegDataset, kind: OracleKind) -> Result<Box<dyn CodedGradOracle>> {
+    Ok(match kind {
+        OracleKind::NativeLinreg => Box::new(NativeLinReg::new(ds.clone())),
+        OracleKind::RuntimeLinreg => {
+            Box::new(RuntimeLinReg::new(Runtime::load_default()?, ds.clone())?)
+        }
+    })
+}
+
+/// Run a family of variants over one generated dataset; returns traces.
+pub fn run_figure(
+    n: usize,
+    q: usize,
+    sigma_h: f64,
+    variants: &[Variant],
+    data_seed: u64,
+    run_seed: u64,
+) -> Result<Vec<TrainTrace>> {
+    let mut rng = Rng::new(data_seed);
+    let ds = LinRegDataset::generate(n, q, sigma_h, &mut rng);
+    variants
+        .iter()
+        .map(|v| {
+            let tr = run_variant(&ds, v, run_seed)?;
+            eprintln!("  {}", tr.summary());
+            Ok(tr)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_from_trace() {
+        let mut t = TrainTrace::new("x");
+        t.record(0, 3.0, 0.1, 10);
+        t.record(5, 1.0, 0.05, 20);
+        let s = Series::from_trace(&t);
+        assert_eq!(s.x, vec![0.0, 5.0]);
+        assert_eq!(s.y, vec![3.0, 1.0]);
+    }
+
+    #[test]
+    fn csv_export_shapes() {
+        let out = ExperimentOutput {
+            name: "unit_fig".into(),
+            x_label: "iter".into(),
+            y_label: "loss".into(),
+            series: vec![
+                Series { label: "a".into(), x: vec![0.0, 1.0], y: vec![5.0, 4.0] },
+                Series { label: "b".into(), x: vec![0.0, 1.0], y: vec![3.0, 2.0] },
+            ],
+        };
+        let dir = std::env::temp_dir().join("lad_exp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = out.save_csv(&dir).unwrap();
+        let body = std::fs::read_to_string(p).unwrap();
+        assert!(body.starts_with("iter,a,b\n"));
+        assert_eq!(body.lines().count(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

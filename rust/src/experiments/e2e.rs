@@ -1,0 +1,213 @@
+//! End-to-end driver: train a transformer LM with the full LAD stack —
+//! cyclic gradient coding over device shards, Byzantine attack, optional
+//! compression, κ-robust aggregation — with **all gradients computed by the
+//! AOT transformer artifact via PJRT** (Python never runs here).
+//!
+//! This is the repo's proof that all three layers compose: L1/L2 artifacts
+//! (`transformer_init/grad/loss`), the L3 coding + aggregation + training
+//! loop, on a real (synthetic-corpus) LM workload.
+
+use crate::aggregation::{self, Aggregator};
+use crate::attack::{Attack, AttackContext};
+use crate::coding::{Assignment, TaskMatrix};
+use crate::compress::Compressor;
+use crate::data::corpus::Corpus;
+use crate::runtime::{Runtime, TensorIn};
+use crate::server::metrics::TrainTrace;
+use crate::util::math::norm;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+use crate::Result;
+use anyhow::Context as _;
+
+/// End-to-end run parameters.
+#[derive(Debug, Clone)]
+pub struct E2eParams {
+    /// devices N (= corpus shards)
+    pub n_devices: usize,
+    /// honest devices H
+    pub n_honest: usize,
+    /// coding load d (shards per device per step)
+    pub d: usize,
+    pub iters: usize,
+    pub lr: f64,
+    /// corpus shard length (tokens) and heterogeneity
+    pub shard_len: usize,
+    pub heterogeneity: f64,
+    pub seed: u64,
+    pub log_every: usize,
+    /// sign-flip coefficient of the Byzantine devices
+    pub flip_coeff: f32,
+}
+
+impl Default for E2eParams {
+    fn default() -> Self {
+        E2eParams {
+            n_devices: 8,
+            n_honest: 6,
+            d: 2,
+            iters: 60,
+            lr: 0.5,
+            shard_len: 4096,
+            heterogeneity: 0.6,
+            seed: 42,
+            log_every: 5,
+            flip_coeff: -2.0,
+        }
+    }
+}
+
+/// Transformer artifact metadata.
+struct TfMeta {
+    params: usize,
+    vocab: usize,
+    seq: usize,
+    batch: usize,
+}
+
+fn tf_meta(rt: &Runtime) -> Result<TfMeta> {
+    let meta = &rt
+        .manifest()
+        .entries
+        .get("transformer_grad")
+        .context("transformer_grad artifact missing — run `make artifacts`")?
+        .meta;
+    Ok(TfMeta {
+        params: meta["params"] as usize,
+        vocab: meta["vocab"] as usize,
+        seq: meta["seq"] as usize,
+        batch: meta["batch"] as usize,
+    })
+}
+
+/// One honest device's coded gradient: mean of per-shard gradients over its
+/// assigned shards (eq. 5 with the transformer oracle). Returns (grad, mean
+/// device loss).
+#[allow(clippy::too_many_arguments)]
+fn device_coded_grad(
+    rt: &mut Runtime,
+    meta: &TfMeta,
+    theta: &[f32],
+    corpus: &Corpus,
+    shards: &[usize],
+    rng: &mut Rng,
+) -> Result<(Vec<f32>, f64)> {
+    let p = meta.params;
+    let mut acc = vec![0.0f32; p];
+    let mut loss_acc = 0.0f64;
+    for &s in shards {
+        let windows = corpus.sample_batch(s, meta.batch, meta.seq, rng);
+        let outs = rt.exec_f32(
+            "transformer_grad",
+            &[
+                TensorIn::F32(theta, &[p as i64]),
+                TensorIn::I32(&windows, &[meta.batch as i64, meta.seq as i64 + 1]),
+            ],
+        )?;
+        loss_acc += outs[0][0] as f64;
+        crate::util::math::axpy(1.0, &outs[1], &mut acc);
+    }
+    crate::util::math::scale(&mut acc, 1.0 / shards.len() as f32);
+    Ok((acc, loss_acc / shards.len() as f64))
+}
+
+/// Run the end-to-end LAD transformer training loop.
+pub fn run(
+    rt: &mut Runtime,
+    p: &E2eParams,
+    agg: &dyn Aggregator,
+    attack: &dyn Attack,
+    comp: &dyn Compressor,
+) -> Result<TrainTrace> {
+    anyhow::ensure!(p.n_honest * 2 > p.n_devices, "need honest majority");
+    anyhow::ensure!(p.d >= 1 && p.d <= p.n_devices);
+    let meta = tf_meta(rt)?;
+    let timer = Timer::start();
+    let mut rng = Rng::new(p.seed);
+    let corpus = Corpus::generate(
+        p.n_devices,
+        p.shard_len,
+        meta.vocab,
+        p.heterogeneity,
+        &mut rng,
+    );
+
+    // θ⁰ from the AOT init artifact (same init the Python tests exercise)
+    let theta_out = rt.exec_f32("transformer_init", &[TensorIn::I32(&[p.seed as i32], &[])])?;
+    let mut theta = theta_out.into_iter().next().unwrap();
+    anyhow::ensure!(theta.len() == meta.params);
+
+    let s_hat = TaskMatrix::cyclic(p.n_devices, p.d);
+    let mut trace = TrainTrace::new(format!(
+        "e2e-lad-{}(d={},byz={})",
+        agg.name(),
+        p.d,
+        p.n_devices - p.n_honest
+    ));
+    let mut bits_total = 0u64;
+
+    for t in 0..p.iters {
+        let assign = Assignment::draw(p.n_devices, &mut rng);
+        // every device's true coded gradient (honest compute path)
+        let mut msgs_true: Vec<Vec<f32>> = Vec::with_capacity(p.n_devices);
+        let mut honest_loss = 0.0f64;
+        for i in 0..p.n_devices {
+            let shards: Vec<usize> =
+                assign.subsets_for(s_hat.row(assign.tasks[i])).collect();
+            let (g, l) =
+                device_coded_grad(rt, &meta, &theta, &corpus, &shards, &mut rng)?;
+            if i < p.n_honest {
+                honest_loss += l;
+            }
+            msgs_true.push(g);
+        }
+        honest_loss /= p.n_honest as f64;
+
+        let honest: Vec<Vec<f32>> = msgs_true[..p.n_honest].to_vec();
+        let byz_true: Vec<Vec<f32>> = msgs_true[p.n_honest..].to_vec();
+        let lies = if byz_true.is_empty() {
+            Vec::new()
+        } else {
+            let mut ctx =
+                AttackContext { honest: &honest, own_true: &byz_true, rng: &mut rng };
+            attack.craft(&mut ctx)
+        };
+        let mut msgs: Vec<Vec<f32>> = Vec::with_capacity(p.n_devices);
+        for m in honest.iter().chain(lies.iter()) {
+            let c = comp.compress(m, &mut rng);
+            bits_total += c.bits as u64;
+            msgs.push(c.vec);
+        }
+        let update = agg.aggregate(&msgs);
+        for (th, u) in theta.iter_mut().zip(&update) {
+            *th -= p.lr as f32 * u;
+        }
+        if p.log_every > 0 && (t % p.log_every == 0 || t + 1 == p.iters) {
+            trace.record(t, honest_loss, norm(&update), bits_total);
+            eprintln!(
+                "  e2e iter {t:>4}: loss {honest_loss:.4}  |update| {:.3e}",
+                norm(&update)
+            );
+        }
+    }
+    trace.final_loss = *trace.loss.last().unwrap_or(&f64::NAN);
+    trace.wall_s = timer.elapsed_s();
+    // persist the trained model (resume/eval from Rust, no Python needed)
+    let ck = crate::server::Checkpoint::new(p.iters as u64, p.seed, theta);
+    ck.save("results/e2e_transformer.ckpt")?;
+    Ok(trace)
+}
+
+/// Convenience: build the default LAD-CWTM-NNM stack and run.
+pub fn run_default(rt: &mut Runtime, p: &E2eParams) -> Result<TrainTrace> {
+    let mut cfg = crate::config::TrainConfig::default();
+    cfg.n_devices = p.n_devices;
+    cfg.n_honest = p.n_honest;
+    cfg.aggregator = crate::config::AggregatorKind::Cwtm;
+    cfg.trim_frac = 0.15;
+    cfg.nnm = true;
+    let agg = aggregation::from_config(&cfg);
+    let attack = crate::attack::SignFlip { coeff: p.flip_coeff };
+    let comp = crate::compress::Identity;
+    run(rt, p, agg.as_ref(), &attack, &comp)
+}

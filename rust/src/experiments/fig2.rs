@@ -1,0 +1,65 @@
+//! Fig. 2 — the Com-LAD error term (eq. 33) as a function of the
+//! compression constant δ. Paper setting: N=100, H=65, κ=1.5, β=1, d=5.
+
+use super::common::{ExperimentOutput, Series};
+use crate::theory::TheoryParams;
+
+pub struct Fig2Params {
+    pub n: usize,
+    pub h: usize,
+    pub d: usize,
+    pub kappa: f64,
+    pub beta: f64,
+    pub delta_max: f64,
+    pub points: usize,
+}
+
+impl Default for Fig2Params {
+    fn default() -> Self {
+        Fig2Params { n: 100, h: 65, d: 5, kappa: 1.5, beta: 1.0, delta_max: 2.0, points: 41 }
+    }
+}
+
+pub fn run(p: &Fig2Params) -> ExperimentOutput {
+    let mut s = Series::new(format!("eps_comlad(N={},H={},d={})", p.n, p.h, p.d));
+    let mut s_exact = Series::new("eps_exact_eq32");
+    for i in 0..p.points {
+        let delta = p.delta_max * i as f64 / (p.points - 1) as f64;
+        let tp = TheoryParams::new(p.n, p.h, p.d)
+            .with_kappa(p.kappa)
+            .with_beta(p.beta)
+            .with_delta(delta);
+        s.push(delta, tp.error_term_bigo());
+        if tp.converges() && tp.gamma_max() > 0.0 {
+            let tp2 = TheoryParams { gamma0: tp.gamma_max() * 0.5, ..tp };
+            s_exact.push(delta, tp2.error_term_exact());
+        }
+    }
+    ExperimentOutput {
+        name: "fig2_error_vs_delta".into(),
+        x_label: "delta".into(),
+        y_label: "error term".into(),
+        series: vec![s, s_exact],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_increasing_in_delta() {
+        let out = run(&Fig2Params::default());
+        let y = &out.series[0].y;
+        for w in y.windows(2) {
+            assert!(w[1] >= w[0], "error must grow with δ: {w:?}");
+        }
+    }
+
+    #[test]
+    fn delta_zero_matches_lad_constants() {
+        let out = run(&Fig2Params::default());
+        let tp = TheoryParams::new(100, 65, 5).with_kappa(1.5).with_beta(1.0);
+        assert!((out.series[0].y[0] - tp.error_term_bigo()).abs() < 1e-9);
+    }
+}

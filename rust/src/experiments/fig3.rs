@@ -1,0 +1,64 @@
+//! Fig. 3 — the Com-LAD error term (eq. 33) as a function of the
+//! computational load d. Paper setting: N=100, H=65, κ=1.5, β=1, δ=0.5.
+
+use super::common::{ExperimentOutput, Series};
+use crate::theory::TheoryParams;
+
+pub struct Fig3Params {
+    pub n: usize,
+    pub h: usize,
+    pub kappa: f64,
+    pub beta: f64,
+    pub delta: f64,
+}
+
+impl Default for Fig3Params {
+    fn default() -> Self {
+        Fig3Params { n: 100, h: 65, kappa: 1.5, beta: 1.0, delta: 0.5 }
+    }
+}
+
+pub fn run(p: &Fig3Params) -> ExperimentOutput {
+    let mut s = Series::new(format!("eps_comlad(N={},H={},delta={})", p.n, p.h, p.delta));
+    let mut s_lad = Series::new("eps_lad_eq35");
+    let mut s_base = Series::new("baseline_eq36");
+    for d in 1..p.n {
+        let tp = TheoryParams::new(p.n, p.h, d)
+            .with_kappa(p.kappa)
+            .with_beta(p.beta)
+            .with_delta(p.delta);
+        s.push(d as f64, tp.error_term_bigo());
+        s_lad.push(d as f64, tp.error_term_lad_bigo());
+        s_base.push(d as f64, tp.error_term_baseline());
+    }
+    ExperimentOutput {
+        name: "fig3_error_vs_d".into(),
+        x_label: "d".into(),
+        y_label: "error term".into(),
+        series: vec![s, s_lad, s_base],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_decreasing_in_d() {
+        let out = run(&Fig3Params::default());
+        let y = &out.series[0].y;
+        for w in y.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "error must shrink with d: {w:?}");
+        }
+    }
+
+    #[test]
+    fn lad_crosses_baseline_at_d_3() {
+        // paper example: LAD beats the O(β²κ) baseline from d ≥ 3
+        let out = run(&Fig3Params::default());
+        let lad = &out.series[1];
+        let base = &out.series[2];
+        assert!(lad.y[1] > base.y[1], "d=2 baseline should win"); // x starts at d=1
+        assert!(lad.y[2] <= base.y[2], "d=3 LAD should win");
+    }
+}

@@ -1,0 +1,152 @@
+//! Fig. 4 — training loss vs iterations under the sign-flip attack
+//! (no compression). Paper setting: N=100, H=80, γ=1e-6, σ_H=0.3,
+//! CWTM parameter 0.1, DRACO load 41.
+//!
+//! Methods: VA, CWTM, CWTM-NNM (all d=1, non-redundant), LAD-CWTM with
+//! d ∈ {5, 10, 20}, LAD-CWTM-NNM (d=10), DRACO.
+
+use super::common::{run_figure, ExperimentOutput, Series, Variant};
+use crate::config::{AggregatorKind, AttackKind, CompressionKind, OracleKind, TrainConfig};
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct Fig4Params {
+    pub n: usize,
+    pub h: usize,
+    pub q: usize,
+    pub iters: usize,
+    pub lr: f64,
+    pub sigma_h: f64,
+    pub lad_d: Vec<usize>,
+    pub draco_r: usize,
+    pub oracle: OracleKind,
+    pub seed: u64,
+}
+
+impl Default for Fig4Params {
+    fn default() -> Self {
+        Fig4Params {
+            n: 100,
+            h: 80,
+            q: 100,
+            // paper: γ=1e-6 over a long horizon; we rescale time
+            // (γ=3e-5, T=3000) for the same dynamics in bounded wallclock
+            // (see EXPERIMENTS.md §Fig4)
+            iters: 3000,
+            lr: 3e-5,
+            sigma_h: 0.3,
+            lad_d: vec![5, 10, 20],
+            draco_r: 41,
+            oracle: OracleKind::NativeLinreg,
+            seed: 2026,
+        }
+    }
+}
+
+fn base_cfg(p: &Fig4Params) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.n_devices = p.n;
+    cfg.n_honest = p.h;
+    cfg.dim = p.q;
+    cfg.iters = p.iters;
+    cfg.lr = p.lr;
+    cfg.sigma_h = p.sigma_h;
+    cfg.trim_frac = 0.1;
+    cfg.attack = AttackKind::SignFlip { coeff: -2.0 };
+    cfg.compression = CompressionKind::None;
+    cfg.oracle = p.oracle;
+    cfg.log_every = (p.iters / 30).max(1);
+    cfg
+}
+
+pub fn variants(p: &Fig4Params) -> Vec<Variant> {
+    let mut vs = Vec::new();
+    // non-redundant baselines (d = 1)
+    for (label, kind, nnm) in [
+        ("va", AggregatorKind::Mean, false),
+        ("cwtm", AggregatorKind::Cwtm, false),
+        ("cwtm-nnm", AggregatorKind::Cwtm, true),
+    ] {
+        let mut cfg = base_cfg(p);
+        cfg.d = 1;
+        cfg.aggregator = kind;
+        cfg.nnm = nnm;
+        vs.push(Variant { label: label.into(), cfg, draco_r: None });
+    }
+    // LAD-CWTM at increasing d
+    for &d in &p.lad_d {
+        let mut cfg = base_cfg(p);
+        cfg.d = d;
+        cfg.aggregator = AggregatorKind::Cwtm;
+        vs.push(Variant { label: format!("lad-cwtm(d={d})"), cfg, draco_r: None });
+    }
+    // LAD-CWTM-NNM (middle d)
+    let d_mid = p.lad_d.get(p.lad_d.len() / 2).copied().unwrap_or(10);
+    let mut cfg = base_cfg(p);
+    cfg.d = d_mid;
+    cfg.aggregator = AggregatorKind::Cwtm;
+    cfg.nnm = true;
+    vs.push(Variant { label: format!("lad-cwtm-nnm(d={d_mid})"), cfg, draco_r: None });
+    // DRACO
+    let mut cfg = base_cfg(p);
+    cfg.d = 1; // unused by the DRACO path (load = scheme chunk size)
+    vs.push(Variant { label: format!("draco(r={})", p.draco_r), cfg, draco_r: Some(p.draco_r) });
+    vs
+}
+
+pub fn run(p: &Fig4Params) -> Result<ExperimentOutput> {
+    let traces = run_figure(p.n, p.q, p.sigma_h, &variants(p), p.seed, p.seed ^ 0xABCD)?;
+    Ok(ExperimentOutput {
+        name: "fig4_loss_vs_iters".into(),
+        x_label: "iter".into(),
+        y_label: "training loss".into(),
+        series: traces.iter().map(Series::from_trace).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Fig4Params {
+        Fig4Params {
+            n: 24,
+            h: 19,
+            q: 24,
+            iters: 400,
+            lr: 1e-3,
+            lad_d: vec![4, 8],
+            draco_r: 11,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn orderings_match_paper_shape() {
+        let out = run(&tiny()).unwrap();
+        let fin = |label: &str| -> f64 {
+            *out.series
+                .iter()
+                .find(|s| s.label.starts_with(label))
+                .unwrap()
+                .y
+                .last()
+                .unwrap()
+        };
+        // LAD beats the plain aggregation baselines (the paper's headline)
+        assert!(
+            fin("lad-cwtm(d=4)") < fin("cwtm"),
+            "lad {} !< cwtm {}",
+            fin("lad-cwtm(d=4)"),
+            fin("cwtm")
+        );
+        assert!(fin("lad-cwtm(d=4)") < fin("va"));
+        // larger d helps (weakly — stochastic runs)
+        assert!(fin("lad-cwtm(d=8)") <= fin("lad-cwtm(d=4)") * 1.05);
+        // NNM helps LAD (coding concentrates honest messages)
+        assert!(fin("lad-cwtm-nnm") <= fin("lad-cwtm(d=8)") * 1.05);
+        // DRACO is the best (exact recovery)
+        let best_lad = fin("lad-cwtm(d=8)");
+        assert!(fin("draco") <= best_lad * 1.1);
+    }
+}

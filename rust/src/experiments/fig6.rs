@@ -1,0 +1,132 @@
+//! Fig. 6 — training loss vs iterations under **compressed** communication.
+//! Paper setting: N=100, H=70, rand-K sparsification with Q̂=30, d=3,
+//! γ=3e-7, σ_H=0.3, CWTM 0.1, TGN 0.2; Byzantine devices sign-flip (−2)
+//! then compress.
+//!
+//! Methods: Com-VA, Com-CWTM, Com-CWTM-NNM, Com-TGN, Com-LAD-CWTM,
+//! Com-LAD-CWTM-NNM.
+
+use super::common::{run_figure, ExperimentOutput, Series, Variant};
+use crate::config::{AggregatorKind, AttackKind, CompressionKind, OracleKind, TrainConfig};
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct Fig6Params {
+    pub n: usize,
+    pub h: usize,
+    pub q: usize,
+    pub q_hat: usize,
+    pub iters: usize,
+    pub lr: f64,
+    pub sigma_h: f64,
+    pub d: usize,
+    pub oracle: OracleKind,
+    pub seed: u64,
+}
+
+impl Default for Fig6Params {
+    fn default() -> Self {
+        Fig6Params {
+            n: 100,
+            h: 70,
+            q: 100,
+            q_hat: 30,
+            // time-rescaled vs the paper's γ=3e-7 (see EXPERIMENTS.md);
+            // the rand-K noise requires a smaller step than Fig 4
+            iters: 3000,
+            lr: 1e-5,
+            sigma_h: 0.3,
+            d: 3,
+            oracle: OracleKind::NativeLinreg,
+            seed: 6,
+        }
+    }
+}
+
+fn variants(p: &Fig6Params) -> Vec<Variant> {
+    let mut base = TrainConfig::default();
+    base.n_devices = p.n;
+    base.n_honest = p.h;
+    base.dim = p.q;
+    base.iters = p.iters;
+    base.lr = p.lr;
+    base.sigma_h = p.sigma_h;
+    base.attack = AttackKind::SignFlip { coeff: -2.0 };
+    base.compression = CompressionKind::RandK { k: p.q_hat };
+    base.oracle = p.oracle;
+    base.log_every = (p.iters / 30).max(1);
+    let mut vs = Vec::new();
+    // non-redundant compressed baselines
+    for (label, kind, nnm, trim) in [
+        ("com-va", AggregatorKind::Mean, false, 0.1),
+        ("com-cwtm", AggregatorKind::Cwtm, false, 0.1),
+        ("com-cwtm-nnm", AggregatorKind::Cwtm, true, 0.1),
+        ("com-tgn", AggregatorKind::Tgn, false, 0.2),
+    ] {
+        let mut cfg = base.clone();
+        cfg.d = 1;
+        cfg.aggregator = kind;
+        cfg.nnm = nnm;
+        cfg.trim_frac = trim;
+        vs.push(Variant { label: label.into(), cfg, draco_r: None });
+    }
+    // Com-LAD
+    for (label, nnm) in [("com-lad-cwtm", false), ("com-lad-cwtm-nnm", true)] {
+        let mut cfg = base.clone();
+        cfg.d = p.d;
+        cfg.aggregator = AggregatorKind::Cwtm;
+        cfg.nnm = nnm;
+        cfg.trim_frac = 0.1;
+        vs.push(Variant { label: format!("{label}(d={})", p.d), cfg, draco_r: None });
+    }
+    vs
+}
+
+pub fn run(p: &Fig6Params) -> Result<ExperimentOutput> {
+    let traces = run_figure(p.n, p.q, p.sigma_h, &variants(p), p.seed, p.seed ^ 0x66)?;
+    Ok(ExperimentOutput {
+        name: "fig6_compressed_loss_vs_iters".into(),
+        x_label: "iter".into(),
+        y_label: "training loss".into(),
+        series: traces.iter().map(Series::from_trace).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compressed_orderings_match_paper_shape() {
+        let p = Fig6Params {
+            n: 24,
+            h: 17,
+            q: 16,
+            q_hat: 6,
+            iters: 150,
+            lr: 4e-6,
+            d: 3,
+            ..Default::default()
+        };
+        let out = run(&p).unwrap();
+        let fin = |label: &str| -> f64 {
+            *out.series
+                .iter()
+                .find(|s| s.label.starts_with(label))
+                .unwrap()
+                .y
+                .last()
+                .unwrap()
+        };
+        assert!(fin("com-va") > fin("com-lad-cwtm("), "va must be worst");
+        assert!(fin("com-lad-cwtm(") < fin("com-cwtm"), "coding helps cwtm");
+        assert!(
+            fin("com-lad-cwtm-nnm") < fin("com-cwtm-nnm"),
+            "coding helps cwtm-nnm"
+        );
+        assert!(
+            fin("com-lad-cwtm-nnm") <= fin("com-lad-cwtm(") * 1.05,
+            "nnm helps lad"
+        );
+    }
+}

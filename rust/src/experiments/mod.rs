@@ -1,0 +1,14 @@
+//! Experiment drivers — one per figure in the paper (see DESIGN.md's
+//! experiment index). Each driver returns plottable [`common::Series`] and
+//! can write CSVs under `results/`.
+
+pub mod byz_sweep;
+pub mod common;
+pub mod e2e;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+
+pub use common::{ExperimentOutput, Series};

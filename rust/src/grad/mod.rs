@@ -1,0 +1,43 @@
+//! Gradient oracles — how device compute is realized.
+//!
+//! [`CodedGradOracle`] is the trainer's view of Layer 1/2: per iteration it
+//! produces every device's coded vector (eq. 5) and the training loss.
+//! Two implementations:
+//!
+//! * [`NativeLinReg`] — pure Rust (fast simulation path, no artifacts).
+//! * [`RuntimeLinReg`] — executes the AOT artifacts: the fused Pallas
+//!   `coded_grad` kernel for the coded vectors and `linreg_loss`/`
+//!   linreg_grads` for diagnostics. Bit-parity with the native oracle is
+//!   asserted by `rust/tests/integration_runtime.rs`.
+
+pub mod native;
+pub mod runtime_oracle;
+
+use crate::util::math::Mat;
+use crate::Result;
+
+/// The trainer's gradient interface.
+pub trait CodedGradOracle {
+    /// Number of subsets / devices N.
+    fn n(&self) -> usize;
+    /// Model dimension Q.
+    fn dim(&self) -> usize;
+    /// Fill `out` (N×Q): row i = (1/dᵢ) Σ_{k ∈ subsets[i]} ∇f_k(x) — the
+    /// *true* message of each device (before attack/compression).
+    fn coded_grads(
+        &mut self,
+        x: &[f32],
+        subsets_per_device: &[Vec<usize>],
+        out: &mut Mat,
+    ) -> Result<()>;
+    /// Per-subset gradient matrix (row k = ∇f_k(x)); used by DRACO and
+    /// diagnostics.
+    fn grad_matrix(&mut self, x: &[f32], out: &mut Mat) -> Result<()>;
+    /// Training loss F(x).
+    fn loss(&mut self, x: &[f32]) -> Result<f64>;
+    /// Oracle label for logs.
+    fn name(&self) -> &'static str;
+}
+
+pub use native::NativeLinReg;
+pub use runtime_oracle::RuntimeLinReg;

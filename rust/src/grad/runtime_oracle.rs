@@ -1,0 +1,121 @@
+//! PJRT-backed gradient oracle: executes the AOT-lowered JAX + Pallas
+//! artifacts produced by `python/compile/aot.py`.
+//!
+//! Artifacts used (names fixed by the manifest):
+//! * `coded_grad`   — the fused Pallas kernel: (x[Q], Z[N,Q], y[N], A[N,N])
+//!                    → coded[N,Q], where A is the per-iteration 0/1
+//!                    assignment mask (rows pre-scaled by 1/dᵢ happen here
+//!                    in Rust by passing A[i,k] = 1/dᵢ).
+//! * `linreg_grads` — (x, Z, y) → per-subset gradient matrix G[N,Q].
+//! * `linreg_loss`  — (x, Z, y) → scalar F(x).
+
+use super::CodedGradOracle;
+use crate::data::linreg::LinRegDataset;
+use crate::runtime::{Runtime, TensorIn};
+use crate::util::math::Mat;
+use crate::Result;
+use anyhow::Context;
+
+pub struct RuntimeLinReg {
+    rt: Runtime,
+    ds: LinRegDataset,
+    /// dense assignment mask scratch (N×N), rebuilt each iteration
+    mask: Vec<f32>,
+}
+
+impl RuntimeLinReg {
+    /// `rt` must contain `coded_grad`, `linreg_grads`, `linreg_loss`
+    /// artifacts whose meta {n, q} match the dataset.
+    pub fn new(rt: Runtime, ds: LinRegDataset) -> Result<Self> {
+        for name in ["coded_grad", "linreg_grads", "linreg_loss"] {
+            anyhow::ensure!(rt.has(name), "artifact {name:?} missing — run `make artifacts`");
+            let meta = &rt.manifest().entries[name].meta;
+            let n = *meta.get("n").context("artifact missing meta.n")? as usize;
+            let q = *meta.get("q").context("artifact missing meta.q")? as usize;
+            anyhow::ensure!(
+                n == ds.n() && q == ds.dim(),
+                "artifact {name:?} built for N={n},Q={q} but dataset is N={},Q={} — re-run `make artifacts`",
+                ds.n(),
+                ds.dim()
+            );
+        }
+        let n = ds.n();
+        Ok(RuntimeLinReg { rt, ds, mask: vec![0.0; n * n] })
+    }
+
+    pub fn runtime_stats(&self) -> &crate::runtime::RuntimeStats {
+        &self.rt.stats
+    }
+}
+
+impl CodedGradOracle for RuntimeLinReg {
+    fn n(&self) -> usize {
+        self.ds.n()
+    }
+    fn dim(&self) -> usize {
+        self.ds.dim()
+    }
+
+    fn coded_grads(
+        &mut self,
+        x: &[f32],
+        subsets_per_device: &[Vec<usize>],
+        out: &mut Mat,
+    ) -> Result<()> {
+        let n = self.ds.n() as i64;
+        let q = self.ds.dim() as i64;
+        assert_eq!(subsets_per_device.len(), self.ds.n());
+        // A[i, k] = 1/dᵢ when subset k assigned to device i
+        self.mask.iter_mut().for_each(|v| *v = 0.0);
+        for (i, subs) in subsets_per_device.iter().enumerate() {
+            let w = 1.0 / subs.len() as f32;
+            for &k in subs {
+                self.mask[i * self.ds.n() + k] = w;
+            }
+        }
+        let outs = self.rt.exec_f32(
+            "coded_grad",
+            &[
+                TensorIn::F32(x, &[q]),
+                TensorIn::F32(&self.ds.z.data, &[n, q]),
+                TensorIn::F32(&self.ds.y, &[n]),
+                TensorIn::F32(&self.mask, &[n, n]),
+            ],
+        )?;
+        out.data.copy_from_slice(&outs[0]);
+        Ok(())
+    }
+
+    fn grad_matrix(&mut self, x: &[f32], out: &mut Mat) -> Result<()> {
+        let n = self.ds.n() as i64;
+        let q = self.ds.dim() as i64;
+        let outs = self.rt.exec_f32(
+            "linreg_grads",
+            &[
+                TensorIn::F32(x, &[q]),
+                TensorIn::F32(&self.ds.z.data, &[n, q]),
+                TensorIn::F32(&self.ds.y, &[n]),
+            ],
+        )?;
+        out.data.copy_from_slice(&outs[0]);
+        Ok(())
+    }
+
+    fn loss(&mut self, x: &[f32]) -> Result<f64> {
+        let n = self.ds.n() as i64;
+        let q = self.ds.dim() as i64;
+        let outs = self.rt.exec_f32(
+            "linreg_loss",
+            &[
+                TensorIn::F32(x, &[q]),
+                TensorIn::F32(&self.ds.z.data, &[n, q]),
+                TensorIn::F32(&self.ds.y, &[n]),
+            ],
+        )?;
+        Ok(outs[0][0] as f64)
+    }
+
+    fn name(&self) -> &'static str {
+        "runtime-linreg"
+    }
+}

@@ -1,0 +1,46 @@
+//! # LAD / Com-LAD — Byzantine-robust, communication-efficient distributed training
+//!
+//! Rust coordinator (Layer 3) for the reproduction of *"Byzantine-Robust and
+//! Communication-Efficient Distributed Training: Compressive and Cyclic
+//! Gradient Coding"*.
+//!
+//! The crate provides:
+//!
+//! * [`coding`] — cyclic gradient-coding task matrices (the paper's Ŝ),
+//!   per-iteration random assignment, the coded-vector encoder (eq. 5) and a
+//!   DRACO fractional-repetition baseline decoder.
+//! * [`aggregation`] — a zoo of κ-robust aggregation rules (CWTM, median,
+//!   geometric median, Krum, MCC, FABA, TGN) plus NNM pre-aggregation.
+//! * [`attack`] — Byzantine behaviours (sign-flip, ALIE, IPM, …).
+//! * [`compress`] — unbiased compression operators (rand-K, QSGD) with exact
+//!   bit accounting, plus biased top-K for ablations.
+//! * [`grad`] — gradient oracles: a native Rust linear-regression oracle and
+//!   the PJRT-backed oracle that executes the AOT-lowered JAX/Pallas
+//!   artifacts produced by `python/compile/aot.py`.
+//! * [`server`] — the training loop (Algorithms 1 and 2), metrics, and a
+//!   threaded leader/worker cluster simulation.
+//! * [`theory`] — closed-form error terms (κ₁..κ₄, ξ₁..ξ₄, ε) from the
+//!   convergence analysis, used by the Fig. 2/3 reproductions.
+//! * [`experiments`] — drivers that regenerate every figure in the paper.
+//!
+//! Python/JAX/Pallas run only at build time (`make artifacts`); at run time
+//! the coordinator loads `artifacts/*.hlo.txt` through [`runtime`].
+
+pub mod aggregation;
+pub mod attack;
+pub mod bench_support;
+pub mod cli;
+pub mod coding;
+pub mod compress;
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod grad;
+pub mod proptest_lite;
+pub mod runtime;
+pub mod server;
+pub mod theory;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,340 @@
+//! `lad` — leader entrypoint + CLI for the LAD / Com-LAD reproduction.
+//!
+//! Subcommands:
+//!   train            run one configured training job (flags or --config)
+//!   fig2..fig6       regenerate the paper's figures (CSV under --out)
+//!   kappa            empirically estimate κ for an aggregation rule
+//!   theory           print the closed-form constants for a setting
+//!   artifacts-check  verify the AOT artifacts load and match the native oracle
+//!   help             this text
+
+use anyhow::{bail, Context};
+use lad::aggregation;
+use lad::cli::Args;
+use lad::config::{AggregatorKind, AttackKind, CompressionKind, OracleKind, TrainConfig};
+use lad::data::linreg::LinRegDataset;
+use lad::experiments::{common, fig2, fig3, fig4, fig5, fig6};
+use lad::grad::{CodedGradOracle, NativeLinReg, RuntimeLinReg};
+use lad::runtime::Runtime;
+use lad::theory::TheoryParams;
+use lad::util::math::{rel_err, Mat};
+use lad::util::rng::Rng;
+use lad::Result;
+
+const HELP: &str = "\
+lad — Byzantine-robust, communication-efficient distributed training (LAD / Com-LAD)
+
+USAGE: lad <subcommand> [--key value ...]
+
+SUBCOMMANDS
+  train             one training run
+                    --config FILE | --devices N --honest H --d D --dim Q
+                    --iters T --lr G --sigma-h S --agg RULE --nnm
+                    --attack A --compression C --q-hat K --oracle native|runtime
+                    --seed S --out DIR
+  fig2              error term vs delta (theory)          [--out DIR]
+  fig3              error term vs d (theory)              [--out DIR]
+  fig4              loss curves, sign-flip, no compression [--iters T --oracle O --out DIR]
+  fig5              loss curves vs heterogeneity           [--iters T --oracle O --out DIR]
+  fig6              loss curves, compressed communication  [--iters T --oracle O --out DIR]
+  e2e               transformer e2e via PJRT artifacts     [--iters T --d D]
+  byz-sweep         final loss vs Byzantine count ablation [--d D --iters T]
+  kappa             estimate robustness coefficient        [--agg RULE --n N --honest H]
+  theory            print closed-form constants            [--n N --honest H --d D --delta X]
+  artifacts-check   load artifacts, compare vs native oracle
+  help              print this text
+";
+
+fn main() {
+    let code = match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        None | Some("help") => {
+            println!("{HELP}");
+            Ok(())
+        }
+        Some("train") => cmd_train(&args),
+        Some("fig2") => cmd_fig2(&args),
+        Some("fig3") => cmd_fig3(&args),
+        Some("fig4") => cmd_fig4(&args),
+        Some("fig5") => cmd_fig5(&args),
+        Some("fig6") => cmd_fig6(&args),
+        Some("e2e") => cmd_e2e(&args),
+        Some("byz-sweep") => cmd_byz_sweep(&args),
+        Some("kappa") => cmd_kappa(&args),
+        Some("theory") => cmd_theory(&args),
+        Some("artifacts-check") => cmd_artifacts_check(&args),
+        Some(other) => bail!("unknown subcommand {other:?} (try `lad help`)"),
+    }
+}
+
+fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        TrainConfig::from_file(path)?
+    } else {
+        TrainConfig::default()
+    };
+    cfg.n_devices = args.get_usize("devices", cfg.n_devices)?;
+    cfg.n_honest = args.get_usize("honest", cfg.n_honest)?;
+    cfg.d = args.get_usize("d", cfg.d)?;
+    cfg.dim = args.get_usize("dim", cfg.dim)?;
+    cfg.iters = args.get_usize("iters", cfg.iters)?;
+    cfg.lr = args.get_f64("lr", cfg.lr)?;
+    cfg.sigma_h = args.get_f64("sigma-h", cfg.sigma_h)?;
+    cfg.trim_frac = args.get_f64("trim", cfg.trim_frac)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.log_every = args.get_usize("log-every", cfg.log_every)?;
+    if let Some(a) = args.get("agg") {
+        cfg.aggregator = AggregatorKind::parse(a)?;
+    }
+    if args.has_flag("nnm") {
+        cfg.nnm = true;
+    }
+    if let Some(a) = args.get("attack") {
+        cfg.attack = AttackKind::parse(a)?;
+    }
+    if let Some(c) = args.get("compression") {
+        let c = c.to_string();
+        cfg.compression = match c.as_str() {
+            "none" => CompressionKind::None,
+            "rand-k" => CompressionKind::RandK { k: args.get_usize("q-hat", 30)? },
+            "top-k" => CompressionKind::TopK { k: args.get_usize("q-hat", 30)? },
+            "qsgd" => CompressionKind::Qsgd { levels: args.get_usize("levels", 16)? as u32 },
+            other => bail!("unknown compression {other:?}"),
+        };
+    } else {
+        let _ = args.get_usize("q-hat", 0); // consume if present
+    }
+    if let Some(o) = args.get("oracle") {
+        cfg.oracle = match o {
+            "native" => OracleKind::NativeLinreg,
+            "runtime" | "pjrt" => OracleKind::RuntimeLinreg,
+            other => bail!("unknown oracle {other:?}"),
+        };
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = cfg_from_args(args)?;
+    let out_dir = args.get_str("out", "results");
+    args.reject_unknown()?;
+    let mut rng = Rng::new(cfg.seed);
+    let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng);
+    let variant = common::Variant { label: "train".into(), cfg: cfg.clone(), draco_r: None };
+    let trace = common::run_variant(&ds, &variant, cfg.seed ^ 0x7A17)?;
+    println!("{}", trace.summary());
+    std::fs::create_dir_all(&out_dir)?;
+    let path = format!("{out_dir}/train_trace.csv");
+    trace.save_csv(&path)?;
+    println!("trace written to {path}");
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> Result<()> {
+    let out_dir = args.get_str("out", "results");
+    args.reject_unknown()?;
+    let out = fig2::run(&fig2::Fig2Params::default());
+    out.print_table();
+    let p = out.save_csv(&out_dir)?;
+    println!("written {p:?}");
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let out_dir = args.get_str("out", "results");
+    args.reject_unknown()?;
+    let out = fig3::run(&fig3::Fig3Params::default());
+    out.print_table();
+    let p = out.save_csv(&out_dir)?;
+    println!("written {p:?}");
+    Ok(())
+}
+
+fn oracle_arg(args: &Args) -> Result<OracleKind> {
+    Ok(match args.get_str("oracle", "native").as_str() {
+        "native" => OracleKind::NativeLinreg,
+        "runtime" | "pjrt" => OracleKind::RuntimeLinreg,
+        other => bail!("unknown oracle {other:?}"),
+    })
+}
+
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let out_dir = args.get_str("out", "results");
+    let mut p = fig4::Fig4Params::default();
+    p.iters = args.get_usize("iters", p.iters)?;
+    p.lr = args.get_f64("lr", p.lr)?;
+    p.oracle = oracle_arg(args)?;
+    args.reject_unknown()?;
+    let out = fig4::run(&p)?;
+    out.print_table();
+    let path = out.save_csv(&out_dir)?;
+    println!("written {path:?}");
+    Ok(())
+}
+
+fn cmd_fig5(args: &Args) -> Result<()> {
+    let out_dir = args.get_str("out", "results");
+    let mut p = fig5::Fig5Params::default();
+    p.iters = args.get_usize("iters", p.iters)?;
+    p.lr = args.get_f64("lr", p.lr)?;
+    p.oracle = oracle_arg(args)?;
+    args.reject_unknown()?;
+    for out in fig5::run(&p)? {
+        out.print_table();
+        let path = out.save_csv(&out_dir)?;
+        println!("written {path:?}");
+    }
+    Ok(())
+}
+
+fn cmd_fig6(args: &Args) -> Result<()> {
+    let out_dir = args.get_str("out", "results");
+    let mut p = fig6::Fig6Params::default();
+    p.iters = args.get_usize("iters", p.iters)?;
+    p.lr = args.get_f64("lr", p.lr)?;
+    p.oracle = oracle_arg(args)?;
+    args.reject_unknown()?;
+    let out = fig6::run(&p)?;
+    out.print_table();
+    let path = out.save_csv(&out_dir)?;
+    println!("written {path:?}");
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    use lad::experiments::e2e;
+    let mut p = e2e::E2eParams::default();
+    p.iters = args.get_usize("iters", p.iters)?;
+    p.lr = args.get_f64("lr", p.lr)?;
+    p.n_devices = args.get_usize("devices", p.n_devices)?;
+    p.n_honest = args.get_usize("honest", p.n_honest)?;
+    p.d = args.get_usize("d", p.d)?;
+    p.seed = args.get_u64("seed", p.seed)?;
+    let out_dir = args.get_str("out", "results");
+    let art_dir = args.get_str("artifacts", "artifacts");
+    args.reject_unknown()?;
+    let mut rt = Runtime::load(&art_dir)?;
+    let trace = lad::experiments::e2e::run_default(&mut rt, &p)?;
+    println!("{}", trace.summary());
+    std::fs::create_dir_all(&out_dir)?;
+    let path = format!("{out_dir}/e2e_transformer.csv");
+    trace.save_csv(&path)?;
+    println!("trace written to {path}");
+    Ok(())
+}
+
+fn cmd_byz_sweep(args: &Args) -> Result<()> {
+    use lad::experiments::byz_sweep;
+    let out_dir = args.get_str("out", "results");
+    let mut p = byz_sweep::ByzSweepParams::default();
+    p.d = args.get_usize("d", p.d)?;
+    p.iters = args.get_usize("iters", p.iters)?;
+    args.reject_unknown()?;
+    let out = byz_sweep::run(&p)?;
+    out.print_table();
+    let path = out.save_csv(&out_dir)?;
+    println!("written {path:?}");
+    Ok(())
+}
+
+fn cmd_kappa(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 100)?;
+    let h = args.get_usize("honest", 80)?;
+    let dim = args.get_usize("dim", 20)?;
+    let trials = args.get_usize("trials", 50)?;
+    let agg_name = args.get_str("agg", "cwtm");
+    let nnm = args.has_flag("nnm");
+    args.reject_unknown()?;
+    let mut cfg = TrainConfig::default();
+    cfg.n_devices = n;
+    cfg.n_honest = h;
+    cfg.aggregator = AggregatorKind::parse(&agg_name)?;
+    cfg.nnm = nnm;
+    let agg = aggregation::from_config(&cfg);
+    let mut rng = Rng::new(7);
+    let k = aggregation::kappa::estimate_kappa(agg.as_ref(), h, n - h, dim, trials, &mut rng);
+    println!("kappa_hat({}) = {k:.4}   [N={n}, H={h}, dim={dim}, {trials} trials]", agg.name());
+    Ok(())
+}
+
+fn cmd_theory(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 100)?;
+    let h = args.get_usize("honest", 65)?;
+    let d = args.get_usize("d", 5)?;
+    let delta = args.get_f64("delta", 0.0)?;
+    let kappa = args.get_f64("kappa", 1.5)?;
+    let beta = args.get_f64("beta", 1.0)?;
+    args.reject_unknown()?;
+    let tp = TheoryParams::new(n, h, d).with_delta(delta).with_kappa(kappa).with_beta(beta);
+    println!("N={n} H={h} d={d} delta={delta} kappa={kappa} beta={beta}");
+    println!("  lemma1 infimum      = {:.6e}", tp.lemma1());
+    println!(
+        "  kappa1..4           = {:.4e} {:.4e} {:.4e} {:.4e}",
+        tp.kappa1(),
+        tp.kappa2(),
+        tp.kappa3(),
+        tp.kappa4()
+    );
+    let (x1, x2, x3, x4) = tp.xi();
+    println!("  xi1..4 (delta=0)    = {x1:.4e} {x2:.4e} {x3:.4e} {x4:.4e}");
+    println!("  converges           = {}", tp.converges());
+    if tp.converges() {
+        println!("  gamma_max           = {:.4e}", tp.gamma_max());
+    }
+    println!("  error term (eq 33)  = {:.6e}", tp.error_term_bigo());
+    println!("  LAD error  (eq 35)  = {:.6e}", tp.error_term_lad_bigo());
+    println!("  baseline   (eq 36)  = {:.6e}", tp.error_term_baseline());
+    println!("  d crossover         = {:.2}", tp.d_crossover());
+    Ok(())
+}
+
+fn cmd_artifacts_check(args: &Args) -> Result<()> {
+    let dir = args.get_str("artifacts", "artifacts");
+    args.reject_unknown()?;
+    let rt = Runtime::load(&dir).context("loading artifacts")?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts: {:?}", rt.manifest().entries.keys().collect::<Vec<_>>());
+    // parity check vs native oracle
+    let meta = &rt.manifest().entries["coded_grad"].meta;
+    let n = meta["n"] as usize;
+    let q = meta["q"] as usize;
+    let mut rng = Rng::new(99);
+    let ds = LinRegDataset::generate(n, q, 0.3, &mut rng);
+    let x = rng.gauss_vec(q);
+    let subsets: Vec<Vec<usize>> = {
+        use lad::coding::{Assignment, TaskMatrix};
+        let s = TaskMatrix::cyclic(n, 5);
+        let a = Assignment::draw(n, &mut rng);
+        (0..n).map(|i| a.subsets_for(s.row(a.tasks[i])).collect()).collect()
+    };
+    let mut native = NativeLinReg::new(ds.clone());
+    let mut runtime = RuntimeLinReg::new(rt, ds)?;
+    let mut g_native = Mat::zeros(n, q);
+    let mut g_rt = Mat::zeros(n, q);
+    native.coded_grads(&x, &subsets, &mut g_native)?;
+    runtime.coded_grads(&x, &subsets, &mut g_rt)?;
+    let err = rel_err(&g_rt.data, &g_native.data);
+    let l_native = native.loss(&x)?;
+    let l_rt = runtime.loss(&x)?;
+    println!("coded_grad parity: rel_err = {err:.3e}");
+    println!("loss parity: native {l_native:.6e} vs runtime {l_rt:.6e}");
+    anyhow::ensure!(err < 1e-4, "coded_grad parity failure");
+    anyhow::ensure!(
+        (l_native - l_rt).abs() / l_native.max(1.0) < 1e-4,
+        "loss parity failure"
+    );
+    println!("artifacts-check OK");
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Miniature property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(cases, seed, gen, check)` draws `cases` random inputs from `gen`
+//! and asserts `check`; on failure it panics with the failing case index and
+//! the *per-case seed* so the exact input can be replayed with
+//! [`replay`]. Shrinking is intentionally out of scope — inputs are kept
+//! small and structured instead.
+
+use crate::util::rng::Rng;
+
+/// Run `check` on `cases` generated inputs. Panics with a replayable seed on
+/// the first failure.
+pub fn forall<T, G, C>(cases: usize, seed: u64, mut gen: G, mut check: C)
+where
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (replay seed: {case_seed:#x})\n  \
+                 input: {input:?}\n  reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single case from a seed reported by [`forall`].
+pub fn replay<T, G, C>(case_seed: u64, mut gen: G, mut check: C)
+where
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let mut rng = Rng::new(case_seed);
+    let input = gen(&mut rng);
+    if let Err(msg) = check(&input) {
+        panic!("replay {case_seed:#x} failed: {msg}\n  input: {input:?}");
+    }
+}
+
+/// Assert helper: `ensure(cond, || format!(...))?` style for checks.
+pub fn ensure(cond: bool, msg: impl FnOnce() -> String) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg())
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Vector of iid U(-scale, scale) f32s.
+    pub fn vec_f32(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect()
+    }
+
+    /// Family of `n` vectors of dim `q`, iid normal with the given std.
+    pub fn vec_family(rng: &mut Rng, n: usize, q: usize, std: f64) -> Vec<Vec<f32>> {
+        (0..n).map(|_| (0..q).map(|_| rng.normal(0.0, std) as f32).collect()).collect()
+    }
+
+    /// usize in [lo, hi].
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            64,
+            1,
+            |rng| gen::vec_f32(rng, 10, 5.0),
+            |v| ensure(v.len() == 10, || "len".into()),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        forall(
+            64,
+            2,
+            |rng| gen::usize_in(rng, 0, 100),
+            |&x| ensure(x < 50, || format!("x={x} too big")),
+        );
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..100 {
+            let x = gen::usize_in(&mut rng, 5, 9);
+            assert!((5..=9).contains(&x));
+        }
+        let v = gen::vec_f32(&mut rng, 50, 2.0);
+        assert!(v.iter().all(|x| x.abs() <= 2.0));
+    }
+}

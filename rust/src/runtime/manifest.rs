@@ -1,0 +1,176 @@
+//! Artifact manifest (`artifacts/manifest.json`), written by
+//! `python/compile/aot.py` and parsed with the built-in JSON module.
+//!
+//! Schema:
+//! ```json
+//! { "version": 1,
+//!   "artifacts": {
+//!     "coded_grad": {
+//!       "file": "coded_grad.hlo.txt",
+//!       "inputs":  [ {"shape": [100], "dtype": "f32"}, ... ],
+//!       "outputs": [ {"shape": [100, 100], "dtype": "f32"} ],
+//!       "meta": {"n": 100, "q": 100}
+//!     } } }
+//! ```
+
+use crate::util::json::{self, Json};
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Element type of a tensor (extend as artifacts need).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" | "float32" => DType::F32,
+            "i32" | "int32" => DType::I32,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+}
+
+/// Shape + dtype of one tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<i64>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|x| x.as_f64().map(|f| f as i64).ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<i64>>>()?;
+        let dtype = DType::parse(
+            v.get("dtype").and_then(Json::as_str).unwrap_or("f32"),
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// free-form integer metadata (e.g. n, q, layers)
+    pub meta: BTreeMap<String, i64>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: i64,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let body = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::parse(&body)
+    }
+
+    pub fn parse(body: &str) -> Result<Self> {
+        let root = json::parse(body).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let version = root.get("version").and_then(Json::as_f64).unwrap_or(1.0) as i64;
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts object"))?;
+        let mut entries = BTreeMap::new();
+        for (name, v) in arts {
+            let file = v
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name}: missing file"))?
+                .to_string();
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                v.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact {name}: missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let mut meta = BTreeMap::new();
+            if let Some(m) = v.get("meta").and_then(Json::as_obj) {
+                for (k, mv) in m {
+                    if let Some(x) = mv.as_f64() {
+                        meta.insert(k.clone(), x as i64);
+                    }
+                }
+            }
+            entries.insert(
+                name.clone(),
+                ArtifactEntry { file, inputs: parse_specs("inputs")?, outputs: parse_specs("outputs")?, meta },
+            );
+        }
+        Ok(Manifest { version, entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "version": 1,
+      "artifacts": {
+        "coded_grad": {
+          "file": "coded_grad.hlo.txt",
+          "inputs": [
+            {"shape": [100], "dtype": "f32"},
+            {"shape": [100, 100], "dtype": "f32"},
+            {"shape": [100], "dtype": "f32"},
+            {"shape": [100, 100], "dtype": "f32"}
+          ],
+          "outputs": [{"shape": [100, 100], "dtype": "f32"}],
+          "meta": {"n": 100, "q": 100}
+        },
+        "toy": {
+          "file": "toy.hlo.txt",
+          "inputs": [{"shape": [4], "dtype": "i32"}],
+          "outputs": [{"shape": [], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.version, 1);
+        let e = &m.entries["coded_grad"];
+        assert_eq!(e.file, "coded_grad.hlo.txt");
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.inputs[1].shape, vec![100, 100]);
+        assert_eq!(e.meta["n"], 100);
+        assert_eq!(m.entries["toy"].inputs[0].dtype, DType::I32);
+        assert_eq!(m.entries["toy"].outputs[0].shape, Vec::<i64>::new());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"artifacts": {"x": {}}}"#).is_err());
+        assert!(Manifest::parse(r#"{}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let doc = r#"{"artifacts": {"x": {"file": "f", "inputs": [{"shape": [1], "dtype": "f16"}], "outputs": []}}}"#;
+        assert!(Manifest::parse(doc).is_err());
+    }
+}

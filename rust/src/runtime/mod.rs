@@ -1,0 +1,227 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt` + manifest) and
+//! execute them from the coordinator.
+//!
+//! The interchange format is **HLO text** — jax ≥ 0.5 serialized protos use
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see /opt/xla-example/README.md). Executables are
+//! compiled once per artifact and cached; every call after the first is a
+//! pure PJRT execute.
+
+pub mod manifest;
+
+use crate::util::timer::Timer;
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+use manifest::{DType, Manifest, TensorSpec};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A typed input tensor (row-major).
+pub enum TensorIn<'a> {
+    F32(&'a [f32], &'a [i64]),
+    I32(&'a [i32], &'a [i64]),
+}
+
+impl<'a> TensorIn<'a> {
+    fn elem_count(&self) -> usize {
+        match self {
+            TensorIn::F32(d, _) => d.len(),
+            TensorIn::I32(d, _) => d.len(),
+        }
+    }
+    fn dims(&self) -> &[i64] {
+        match self {
+            TensorIn::F32(_, s) | TensorIn::I32(_, s) => s,
+        }
+    }
+    fn dtype(&self) -> DType {
+        match self {
+            TensorIn::F32(..) => DType::F32,
+            TensorIn::I32(..) => DType::I32,
+        }
+    }
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            TensorIn::F32(data, dims) => xla::Literal::vec1(data).reshape(dims)?,
+            TensorIn::I32(data, dims) => xla::Literal::vec1(data).reshape(dims)?,
+        };
+        Ok(lit)
+    }
+}
+
+/// Execution statistics (for the perf pass).
+#[derive(Debug, Clone, Default)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub executes: usize,
+    pub compile_s: f64,
+    pub execute_s: f64,
+}
+
+/// PJRT CPU runtime with a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub stats: RuntimeStats,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} — run `make artifacts`"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new(), stats: RuntimeStats::default() })
+    }
+
+    /// Default artifact dir: $LAD_ARTIFACTS or ./artifacts.
+    pub fn load_default() -> Result<Self> {
+        let dir =
+            std::env::var("LAD_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.entries.contains_key(name)
+    }
+
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
+        let path = self.dir.join(&entry.file);
+        let t = Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name:?}: {e:?}"))?;
+        self.stats.compiles += 1;
+        self.stats.compile_s += t.elapsed_s();
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Validate inputs against the manifest spec.
+    fn check_inputs(&self, name: &str, inputs: &[TensorIn]) -> Result<()> {
+        let entry = &self.manifest.entries[name];
+        if entry.inputs.len() != inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (spec, got)) in entry.inputs.iter().zip(inputs).enumerate() {
+            if spec.dtype != got.dtype() {
+                bail!("{name} input {i}: dtype {:?} != manifest {:?}", got.dtype(), spec.dtype);
+            }
+            if spec.shape.as_slice() != got.dims() {
+                bail!(
+                    "{name} input {i}: shape {:?} != manifest {:?}",
+                    got.dims(),
+                    spec.shape
+                );
+            }
+            let want: i64 = spec.shape.iter().product();
+            if want as usize != got.elem_count() {
+                bail!("{name} input {i}: buffer has {} elems, shape wants {want}", got.elem_count());
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact; returns each output flattened to f32.
+    /// (All our artifact outputs are f32 or scalar f32.)
+    pub fn exec_f32(&mut self, name: &str, inputs: &[TensorIn]) -> Result<Vec<Vec<f32>>> {
+        self.ensure_compiled(name)?;
+        self.check_inputs(name, inputs)?;
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let exe = self.cache.get(name).unwrap();
+        let t = Timer::start();
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing {name:?}: {e:?}"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name:?}: {e:?}"))?;
+        self.stats.executes += 1;
+        self.stats.execute_s += t.elapsed_s();
+        // artifacts are lowered with return_tuple=True
+        let parts = root.to_tuple().map_err(|e| anyhow!("tuple {name:?}: {e:?}"))?;
+        let entry = &self.manifest.entries[name];
+        if entry.outputs.len() != parts.len() {
+            bail!("{name}: manifest says {} outputs, got {}", entry.outputs.len(), parts.len());
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (spec, lit) in entry.outputs.iter().zip(parts) {
+            out.push(literal_to_f32(&lit, spec)?);
+        }
+        Ok(out)
+    }
+}
+
+fn literal_to_f32(lit: &xla::Literal, spec: &TensorSpec) -> Result<Vec<f32>> {
+    let v = match spec.dtype {
+        DType::F32 => lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?,
+        DType::I32 => lit
+            .to_vec::<i32>()
+            .map_err(|e| anyhow!("to_vec i32: {e:?}"))?
+            .into_iter()
+            .map(|x| x as f32)
+            .collect(),
+    };
+    let want: i64 = spec.shape.iter().product::<i64>().max(1);
+    if v.len() != want as usize {
+        bail!("output has {} elems, manifest shape {:?}", v.len(), spec.shape);
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_in_accessors() {
+        let d = [1.0f32, 2.0, 3.0, 4.0];
+        let t = TensorIn::F32(&d, &[2, 2]);
+        assert_eq!(t.elem_count(), 4);
+        assert_eq!(t.dims(), &[2, 2]);
+        assert_eq!(t.dtype(), DType::F32);
+        let i = [1i32, 2];
+        let t2 = TensorIn::I32(&i, &[2]);
+        assert_eq!(t2.dtype(), DType::I32);
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clean_error() {
+        let err = match Runtime::load("/nonexistent/dir") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("manifest"), "{msg}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Binary model checkpoints (dependency-free format).
+//!
+//! Layout (little-endian):
+//! `magic "LADCKPT1" | iter u64 | seed u64 | len u64 | f32 × len | crc u64`
+//! where crc is a simple FNV-1a over the payload bytes — enough to catch
+//! truncation/corruption without pulling a hashing crate.
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"LADCKPT1";
+
+/// A saved training state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub iter: u64,
+    pub seed: u64,
+    pub params: Vec<f32>,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+impl Checkpoint {
+    pub fn new(iter: u64, seed: u64, params: Vec<f32>) -> Self {
+        Checkpoint { iter, seed, params }
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut payload = Vec::with_capacity(24 + 4 * self.params.len());
+        payload.extend_from_slice(&self.iter.to_le_bytes());
+        payload.extend_from_slice(&self.seed.to_le_bytes());
+        payload.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        for v in &self.params {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        let crc = fnv1a(&payload);
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("creating checkpoint {:?}", path.as_ref()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&payload)?;
+        f.write_all(&crc.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(&path)
+            .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?
+            .read_to_end(&mut bytes)?;
+        if bytes.len() < 8 + 24 + 8 || &bytes[..8] != MAGIC {
+            bail!("not a LAD checkpoint");
+        }
+        let payload = &bytes[8..bytes.len() - 8];
+        let stored_crc = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        if fnv1a(payload) != stored_crc {
+            bail!("checkpoint crc mismatch (corrupt or truncated)");
+        }
+        let u64_at = |off: usize| -> u64 {
+            u64::from_le_bytes(payload[off..off + 8].try_into().unwrap())
+        };
+        let iter = u64_at(0);
+        let seed = u64_at(8);
+        let len = u64_at(16) as usize;
+        if payload.len() != 24 + 4 * len {
+            bail!("checkpoint length mismatch");
+        }
+        let params = payload[24..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Checkpoint { iter, seed, params })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join("lad_ckpt_test").join(name)
+    }
+
+    #[test]
+    fn round_trip() {
+        let ck = Checkpoint::new(42, 7, (0..1000).map(|i| i as f32 * 0.5 - 3.0).collect());
+        let p = tmp("rt.ckpt");
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let ck = Checkpoint::new(1, 2, vec![1.0, 2.0, 3.0]);
+        let p = tmp("corrupt.ckpt");
+        ck.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err();
+        assert!(format!("{err}").contains("crc"));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let ck = Checkpoint::new(1, 2, vec![1.0; 64]);
+        let p = tmp("trunc.ckpt");
+        ck.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_foreign_files() {
+        let p = tmp("foreign.bin");
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(&p, b"definitely not a checkpoint, sorry").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn empty_params_ok() {
+        let ck = Checkpoint::new(0, 0, vec![]);
+        let p = tmp("empty.ckpt");
+        ck.save(&p).unwrap();
+        assert_eq!(Checkpoint::load(&p).unwrap(), ck);
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,165 @@
+//! Threaded leader/worker cluster simulation.
+//!
+//! The fast trainer computes all device messages centrally (bit-identical,
+//! see DESIGN.md); this module runs the *actual distributed topology*: one
+//! worker thread per device, the leader broadcasting (x^t, task row,
+//! permutation) over channels and collecting messages, exactly as Fig. 1 of
+//! the paper. Used by `examples/cluster_demo` and `rust/tests/cluster_tests`
+//! to verify that the central fast path and the message-passing path
+//! produce identical traces.
+
+use crate::aggregation::Aggregator;
+use crate::attack::{Attack, AttackContext};
+use crate::coding::{Assignment, TaskMatrix};
+use crate::compress::Compressor;
+use crate::config::TrainConfig;
+use crate::data::linreg::LinRegDataset;
+use crate::server::metrics::TrainTrace;
+use crate::util::math::norm;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+use crate::Result;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Message from leader to a worker: the broadcast of iteration t.
+struct Broadcast {
+    x: Arc<Vec<f32>>,
+    /// subsets this worker must compute (already T/p-resolved)
+    subsets: Vec<usize>,
+}
+
+/// Run Algorithm 1/2 over real threads + channels. Honest workers compute
+/// their own coded vector from the shared dataset; Byzantine crafting and
+/// compression happen device-side, aggregation happens on the leader.
+pub fn run_cluster(
+    cfg: &TrainConfig,
+    ds: &LinRegDataset,
+    agg: &dyn Aggregator,
+    attack: &dyn Attack,
+    comp: &dyn Compressor,
+    x0: &mut Vec<f32>,
+    label: &str,
+    rng: &mut Rng,
+) -> Result<TrainTrace> {
+    cfg.validate()?;
+    let timer = Timer::start();
+    let n = cfg.n_devices;
+    let ds = Arc::new(ds.clone());
+    let mut trace = TrainTrace::new(label);
+    let s_hat = TaskMatrix::cyclic(n, cfg.d);
+    let mut bits_total: u64 = 0;
+
+    std::thread::scope(|scope| -> Result<()> {
+        // per-worker channels
+        let mut to_workers = Vec::with_capacity(n);
+        let (result_tx, result_rx) = mpsc::channel::<(usize, Vec<f32>)>();
+        for i in 0..n {
+            let (tx, rx) = mpsc::channel::<Broadcast>();
+            to_workers.push(tx);
+            let ds = Arc::clone(&ds);
+            let result_tx = result_tx.clone();
+            scope.spawn(move || {
+                // worker event loop: compute coded vector for each broadcast
+                while let Ok(msg) = rx.recv() {
+                    let mut coded = vec![0.0f32; ds.dim()];
+                    for &k in &msg.subsets {
+                        let g = ds.subset_grad(k, &msg.x);
+                        crate::util::math::axpy(1.0, &g, &mut coded);
+                    }
+                    crate::util::math::scale(&mut coded, 1.0 / msg.subsets.len() as f32);
+                    if result_tx.send((i, coded)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(result_tx);
+
+        for t in 0..cfg.iters {
+            let assign = Assignment::draw(n, rng);
+            let x_arc = Arc::new(x0.clone());
+            for i in 0..n {
+                let subsets: Vec<usize> =
+                    assign.subsets_for(s_hat.row(assign.tasks[i])).collect();
+                to_workers[i]
+                    .send(Broadcast { x: Arc::clone(&x_arc), subsets })
+                    .map_err(|_| anyhow::anyhow!("worker {i} died"))?;
+            }
+            // gather
+            let mut coded: Vec<Option<Vec<f32>>> = vec![None; n];
+            for _ in 0..n {
+                let (i, v) = result_rx.recv().map_err(|_| anyhow::anyhow!("gather failed"))?;
+                coded[i] = Some(v);
+            }
+            let coded: Vec<Vec<f32>> = coded.into_iter().map(|v| v.unwrap()).collect();
+
+            // fixed identities: last N−H byzantine (matches Trainer default)
+            let honest: Vec<Vec<f32>> = coded[..cfg.n_honest].to_vec();
+            let byz_true: Vec<Vec<f32>> = coded[cfg.n_honest..].to_vec();
+            let lies = if byz_true.is_empty() {
+                Vec::new()
+            } else {
+                let mut ctx = AttackContext { honest: &honest, own_true: &byz_true, rng };
+                attack.craft(&mut ctx)
+            };
+            let mut msgs = Vec::with_capacity(n);
+            for m in honest.iter().chain(lies.iter()) {
+                let c = comp.compress(m, rng);
+                bits_total += c.bits as u64;
+                msgs.push(c.vec);
+            }
+            let update = agg.aggregate(&msgs);
+            for (xi, ui) in x0.iter_mut().zip(&update) {
+                *xi -= cfg.lr as f32 * ui;
+            }
+            if (cfg.log_every > 0 && t % cfg.log_every == 0) || t + 1 == cfg.iters {
+                trace.record(t, ds.loss(x0), norm(&update), bits_total);
+            }
+        }
+        // closing the senders terminates the workers
+        drop(to_workers);
+        Ok(())
+    })?;
+
+    trace.final_loss = ds.loss(x0);
+    trace.wall_s = timer.elapsed_s();
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::Cwtm;
+    use crate::attack::SignFlip;
+    use crate::compress::Identity;
+
+    #[test]
+    fn cluster_trains_under_attack() {
+        let mut cfg = TrainConfig::default();
+        cfg.n_devices = 12;
+        cfg.n_honest = 9;
+        cfg.d = 3;
+        cfg.dim = 8;
+        cfg.iters = 60;
+        cfg.lr = 2e-5;
+        cfg.log_every = 20;
+        let mut rng = Rng::new(11);
+        let ds = LinRegDataset::generate(12, 8, 0.2, &mut rng);
+        let mut x0 = vec![0.0f32; 8];
+        let l0 = ds.loss(&x0);
+        let cwtm = Cwtm::new(0.2);
+        let tr = run_cluster(
+            &cfg,
+            &ds,
+            &cwtm,
+            &SignFlip { coeff: -2.0 },
+            &Identity,
+            &mut x0,
+            "cluster",
+            &mut rng,
+        )
+        .unwrap();
+        assert!(tr.final_loss < l0, "{} !< {l0}", tr.final_loss);
+    }
+}

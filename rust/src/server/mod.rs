@@ -1,0 +1,13 @@
+//! The coordinator (Layer 3): training loop, metrics, and a threaded
+//! leader/worker cluster simulation.
+
+pub mod checkpoint;
+pub mod cluster;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use metrics::TrainTrace;
+pub use schedule::Schedule;
+pub use trainer::{DracoTrainer, Trainer};

@@ -1,0 +1,124 @@
+//! Learning-rate schedules.
+//!
+//! The paper's analysis fixes γ^t = γ⁰ (Theorems 1–2); this module adds the
+//! standard schedules as an *extension* (the paper's "diminishing step"
+//! remark): constant, step decay, 1/√(1+t/τ) and cosine. The trainer takes
+//! an optional schedule; `None` reproduces the paper exactly.
+
+/// γ^t as a function of the iteration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    /// γ^t = γ⁰ (the paper's setting).
+    Constant { gamma0: f64 },
+    /// γ^t = γ⁰ · factor^⌊t/every⌋.
+    Step { gamma0: f64, factor: f64, every: usize },
+    /// γ^t = γ⁰ / √(1 + t/τ) — the classic diminishing rate that makes the
+    /// stochastic term of Theorem 1 vanish as T → ∞.
+    InvSqrt { gamma0: f64, tau: f64 },
+    /// Cosine decay from γ⁰ to `floor` over `total` iterations.
+    Cosine { gamma0: f64, floor: f64, total: usize },
+}
+
+impl Schedule {
+    pub fn at(&self, t: usize) -> f64 {
+        match *self {
+            Schedule::Constant { gamma0 } => gamma0,
+            Schedule::Step { gamma0, factor, every } => {
+                gamma0 * factor.powi((t / every.max(1)) as i32)
+            }
+            Schedule::InvSqrt { gamma0, tau } => {
+                gamma0 / (1.0 + t as f64 / tau.max(1e-12)).sqrt()
+            }
+            Schedule::Cosine { gamma0, floor, total } => {
+                let p = (t as f64 / total.max(1) as f64).min(1.0);
+                floor + 0.5 * (gamma0 - floor) * (1.0 + (std::f64::consts::PI * p).cos())
+            }
+        }
+    }
+
+    /// Parse "constant", "step:0.5:100", "invsqrt:200", "cosine:1e-7:3000".
+    pub fn parse(spec: &str, gamma0: f64) -> crate::Result<Self> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        Ok(match parts[0] {
+            "constant" => Schedule::Constant { gamma0 },
+            "step" => Schedule::Step {
+                gamma0,
+                factor: parts.get(1).map_or(Ok(0.5), |s| s.parse()).map_err(bad(spec))?,
+                every: parts.get(2).map_or(Ok(1000), |s| s.parse()).map_err(bad(spec))?,
+            },
+            "invsqrt" => Schedule::InvSqrt {
+                gamma0,
+                tau: parts.get(1).map_or(Ok(100.0), |s| s.parse()).map_err(bad(spec))?,
+            },
+            "cosine" => Schedule::Cosine {
+                gamma0,
+                floor: parts.get(1).map_or(Ok(0.0), |s| s.parse()).map_err(bad(spec))?,
+                total: parts.get(2).map_or(Ok(1000), |s| s.parse()).map_err(bad(spec))?,
+            },
+            other => anyhow::bail!("unknown schedule {other:?}"),
+        })
+    }
+}
+
+fn bad<E: std::fmt::Display>(spec: &str) -> impl Fn(E) -> anyhow::Error + '_ {
+    move |e| anyhow::anyhow!("bad schedule spec {spec:?}: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant { gamma0: 3e-5 };
+        assert_eq!(s.at(0), 3e-5);
+        assert_eq!(s.at(10_000), 3e-5);
+    }
+
+    #[test]
+    fn step_halves() {
+        let s = Schedule::Step { gamma0: 1.0, factor: 0.5, every: 100 };
+        assert_eq!(s.at(0), 1.0);
+        assert_eq!(s.at(99), 1.0);
+        assert_eq!(s.at(100), 0.5);
+        assert_eq!(s.at(250), 0.25);
+    }
+
+    #[test]
+    fn invsqrt_decays_monotonically() {
+        let s = Schedule::InvSqrt { gamma0: 1.0, tau: 50.0 };
+        let mut prev = f64::INFINITY;
+        for t in [0usize, 10, 100, 1000, 10_000] {
+            let g = s.at(t);
+            assert!(g < prev && g > 0.0);
+            prev = g;
+        }
+        assert!((s.at(50) - 1.0 / 2f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_hits_endpoints() {
+        let s = Schedule::Cosine { gamma0: 1.0, floor: 0.1, total: 100 };
+        assert!((s.at(0) - 1.0).abs() < 1e-12);
+        assert!((s.at(100) - 0.1).abs() < 1e-12);
+        assert!((s.at(200) - 0.1).abs() < 1e-12); // clamped
+        assert!(s.at(50) > 0.1 && s.at(50) < 1.0);
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(
+            Schedule::parse("constant", 2.0).unwrap(),
+            Schedule::Constant { gamma0: 2.0 }
+        );
+        assert_eq!(
+            Schedule::parse("step:0.1:500", 1.0).unwrap(),
+            Schedule::Step { gamma0: 1.0, factor: 0.1, every: 500 }
+        );
+        assert!(matches!(
+            Schedule::parse("invsqrt:77", 1.0).unwrap(),
+            Schedule::InvSqrt { tau, .. } if (tau - 77.0).abs() < 1e-12
+        ));
+        assert!(Schedule::parse("warp-drive", 1.0).is_err());
+    }
+}

@@ -1,0 +1,359 @@
+//! The training loop — Algorithm 1 (LAD) and Algorithm 2 (Com-LAD), plus
+//! the DRACO baseline loop.
+//!
+//! Per iteration t:
+//! 1. draw the random assignment (T^t, p^t);
+//! 2. obtain every device's true coded vector g_i (gradient oracle — the
+//!    fused Pallas kernel on the AOT path);
+//! 3. Byzantine devices craft their lies from their true messages (and, for
+//!    omniscient attacks, the honest messages);
+//! 4. all messages pass the compression operator C (Com-LAD; identity for
+//!    LAD), with exact uplink-bit accounting;
+//! 5. the server aggregates with the configured κ-robust rule and applies
+//!    x ← x − γ·agg(·).
+
+use crate::aggregation::Aggregator;
+use crate::attack::{Attack, AttackContext};
+use crate::coding::{Assignment, DracoScheme, TaskMatrix};
+use crate::compress::Compressor;
+use crate::config::TrainConfig;
+use crate::grad::CodedGradOracle;
+use crate::server::metrics::TrainTrace;
+use crate::util::math::{norm, Mat};
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+use crate::Result;
+
+/// Which devices are Byzantine this iteration.
+fn byz_set(cfg: &TrainConfig, rotate: bool, rng: &mut Rng) -> Vec<bool> {
+    let mut is_byz = vec![false; cfg.n_devices];
+    if rotate {
+        for i in rng.choose_k(cfg.n_devices, cfg.n_byz()) {
+            is_byz[i] = true;
+        }
+    } else {
+        // fixed identities: the last N−H devices are Byzantine
+        for b in is_byz.iter_mut().skip(cfg.n_honest) {
+            *b = true;
+        }
+    }
+    is_byz
+}
+
+/// LAD / Com-LAD trainer (meta-algorithm: aggregation rule, attack and
+/// compressor are injected).
+pub struct Trainer<'a> {
+    pub cfg: &'a TrainConfig,
+    pub agg: &'a dyn Aggregator,
+    pub attack: &'a dyn Attack,
+    pub comp: &'a dyn Compressor,
+    /// re-sample Byzantine identities each iteration
+    pub rotate_byzantine: bool,
+    /// optional learning-rate schedule; `None` ⇒ the paper's fixed γ⁰
+    pub schedule: Option<crate::server::schedule::Schedule>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(
+        cfg: &'a TrainConfig,
+        agg: &'a dyn Aggregator,
+        attack: &'a dyn Attack,
+        comp: &'a dyn Compressor,
+    ) -> Self {
+        Trainer { cfg, agg, attack, comp, rotate_byzantine: false, schedule: None }
+    }
+
+    /// Run the loop from `x0`; returns the metric trace (and leaves the
+    /// final iterate in `x0`).
+    pub fn run(
+        &self,
+        oracle: &mut dyn CodedGradOracle,
+        x0: &mut Vec<f32>,
+        label: &str,
+        rng: &mut Rng,
+    ) -> Result<TrainTrace> {
+        let cfg = self.cfg;
+        cfg.validate()?;
+        assert_eq!(oracle.n(), cfg.n_devices, "oracle N != config N");
+        assert_eq!(oracle.dim(), cfg.dim, "oracle Q != config Q");
+        let timer = Timer::start();
+        let mut trace = TrainTrace::new(label);
+        let s_hat = TaskMatrix::cyclic(cfg.n_devices, cfg.d);
+        let mut coded = Mat::zeros(cfg.n_devices, cfg.dim);
+        let mut subsets: Vec<Vec<usize>> = vec![Vec::with_capacity(cfg.d); cfg.n_devices];
+        let mut bits_total: u64 = 0;
+
+        for t in 0..cfg.iters {
+            // (1) assignment
+            let assign = Assignment::draw(cfg.n_devices, rng);
+            for i in 0..cfg.n_devices {
+                subsets[i].clear();
+                subsets[i].extend(assign.subsets_for(s_hat.row(assign.tasks[i])));
+            }
+            // (2) true coded vectors for every device
+            oracle.coded_grads(x0, &subsets, &mut coded)?;
+
+            let is_byz = byz_set(cfg, self.rotate_byzantine, rng);
+            let honest_true: Vec<Vec<f32>> = (0..cfg.n_devices)
+                .filter(|&i| !is_byz[i])
+                .map(|i| coded.row(i).to_vec())
+                .collect();
+            let byz_true: Vec<Vec<f32>> = (0..cfg.n_devices)
+                .filter(|&i| is_byz[i])
+                .map(|i| coded.row(i).to_vec())
+                .collect();
+
+            // (3) Byzantine crafting (pre-compression, as in §VII-B)
+            let lies = if byz_true.is_empty() {
+                Vec::new()
+            } else {
+                let mut ctx =
+                    AttackContext { honest: &honest_true, own_true: &byz_true, rng };
+                self.attack.craft(&mut ctx)
+            };
+
+            // (4) compression + bit accounting (every device uplinks once)
+            let mut msgs: Vec<Vec<f32>> = Vec::with_capacity(cfg.n_devices);
+            for m in honest_true.iter().chain(lies.iter()) {
+                let c = self.comp.compress(m, rng);
+                bits_total += c.bits as u64;
+                msgs.push(c.vec);
+            }
+
+            // (5) robust aggregation + model update
+            let update = self.agg.aggregate(&msgs);
+            let gamma = self.schedule.map_or(cfg.lr, |s| s.at(t)) as f32;
+            for (xi, ui) in x0.iter_mut().zip(&update) {
+                *xi -= gamma * ui;
+            }
+
+            if (cfg.log_every > 0 && t % cfg.log_every == 0) || t + 1 == cfg.iters {
+                let loss = oracle.loss(x0)?;
+                trace.record(t, loss, norm(&update), bits_total);
+            }
+        }
+        trace.final_loss = oracle.loss(x0)?;
+        trace.wall_s = timer.elapsed_s();
+        Ok(trace)
+    }
+}
+
+/// DRACO baseline trainer: fractional-repetition coding + exact majority
+/// decode instead of robust aggregation. Recovers attack-free GD whenever
+/// every group keeps an honest majority.
+pub struct DracoTrainer<'a> {
+    pub cfg: &'a TrainConfig,
+    pub attack: &'a dyn Attack,
+    /// group size r = 2b+1 (the paper quotes r=41 for N=100, b=20)
+    pub r: usize,
+}
+
+impl<'a> DracoTrainer<'a> {
+    pub fn run(
+        &self,
+        oracle: &mut dyn CodedGradOracle,
+        x0: &mut Vec<f32>,
+        label: &str,
+        rng: &mut Rng,
+    ) -> Result<TrainTrace> {
+        let cfg = self.cfg;
+        let timer = Timer::start();
+        let mut trace = TrainTrace::new(label);
+        let scheme = DracoScheme::new(cfg.n_devices, self.r);
+        let mut grads = Mat::zeros(cfg.n_devices, cfg.dim);
+        let mut bits_total: u64 = 0;
+
+        for t in 0..cfg.iters {
+            oracle.grad_matrix(x0, &mut grads)?;
+            let is_byz = byz_set(cfg, false, rng);
+            let true_msgs: Vec<Vec<f32>> =
+                (0..cfg.n_devices).map(|i| scheme.honest_message(i, &grads)).collect();
+            let honest: Vec<Vec<f32>> = (0..cfg.n_devices)
+                .filter(|&i| !is_byz[i])
+                .map(|i| true_msgs[i].clone())
+                .collect();
+            let byz_true: Vec<Vec<f32>> = (0..cfg.n_devices)
+                .filter(|&i| is_byz[i])
+                .map(|i| true_msgs[i].clone())
+                .collect();
+            let lies = if byz_true.is_empty() {
+                Vec::new()
+            } else {
+                let mut ctx = AttackContext { honest: &honest, own_true: &byz_true, rng };
+                self.attack.craft(&mut ctx)
+            };
+            // stitch messages back into device order
+            let mut msgs = true_msgs;
+            let mut li = 0;
+            for i in 0..cfg.n_devices {
+                if is_byz[i] {
+                    msgs[i] = lies[li].clone();
+                    li += 1;
+                }
+            }
+            bits_total += (cfg.n_devices * cfg.dim * 32) as u64;
+
+            // decode; on failure, skip the update (and count the anomaly)
+            let update = match scheme.decode(&msgs, 1e-3) {
+                Ok(u) => u,
+                Err(_) => {
+                    trace.anomalies += 1;
+                    vec![0.0; cfg.dim]
+                }
+            };
+            // DRACO decodes μ = (1/N)∇F; LAD's aggregate is also ≈ μ-scale,
+            // so the same learning rate applies.
+            let gamma = cfg.lr as f32;
+            for (xi, ui) in x0.iter_mut().zip(&update) {
+                *xi -= gamma * ui;
+            }
+            if (cfg.log_every > 0 && t % cfg.log_every == 0) || t + 1 == cfg.iters {
+                let loss = oracle.loss(x0)?;
+                trace.record(t, loss, norm(&update), bits_total);
+            }
+        }
+        trace.final_loss = oracle.loss(x0)?;
+        trace.wall_s = timer.elapsed_s();
+        Ok(trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::{Cwtm, Mean};
+    use crate::attack::{NoAttack, SignFlip};
+    use crate::compress::Identity;
+    use crate::config::TrainConfig;
+    use crate::data::linreg::LinRegDataset;
+    use crate::grad::NativeLinReg;
+
+    fn small_cfg() -> TrainConfig {
+        let mut cfg = TrainConfig::default();
+        cfg.n_devices = 20;
+        cfg.n_honest = 16;
+        cfg.d = 4;
+        cfg.dim = 10;
+        cfg.iters = 300;
+        cfg.lr = 1e-4;
+        cfg.sigma_h = 0.3;
+        cfg.log_every = 50;
+        cfg
+    }
+
+    fn setup(cfg: &TrainConfig, seed: u64) -> (NativeLinReg, Vec<f32>, Rng) {
+        let mut rng = Rng::new(seed);
+        let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng);
+        let x0 = vec![0.0f32; cfg.dim];
+        (NativeLinReg::new(ds), x0, rng)
+    }
+
+    #[test]
+    fn loss_decreases_without_attack() {
+        let cfg = small_cfg();
+        let (mut oracle, mut x0, mut rng) = setup(&cfg, 1);
+        let l0 = oracle.loss(&x0).unwrap();
+        let tr = Trainer::new(&cfg, &Mean, &NoAttack, &Identity)
+            .run(&mut oracle, &mut x0, "clean", &mut rng)
+            .unwrap();
+        assert!(tr.final_loss < l0 * 0.5, "{} !< {}", tr.final_loss, l0);
+    }
+
+    #[test]
+    fn cwtm_survives_sign_flip_where_mean_does_not() {
+        let cfg = small_cfg();
+        let flip = SignFlip { coeff: -2.0 };
+        let (mut o1, mut x1, mut r1) = setup(&cfg, 2);
+        let mean_tr =
+            Trainer::new(&cfg, &Mean, &flip, &Identity).run(&mut o1, &mut x1, "va", &mut r1).unwrap();
+        let (mut o2, mut x2, mut r2) = setup(&cfg, 2);
+        let cwtm = Cwtm::new(0.2);
+        let cwtm_tr = Trainer::new(&cfg, &cwtm, &flip, &Identity)
+            .run(&mut o2, &mut x2, "cwtm", &mut r2)
+            .unwrap();
+        assert!(
+            cwtm_tr.final_loss < mean_tr.final_loss,
+            "cwtm {} !< mean {}",
+            cwtm_tr.final_loss,
+            mean_tr.final_loss
+        );
+    }
+
+    #[test]
+    fn larger_d_reduces_final_loss_under_attack() {
+        let flip = SignFlip { coeff: -2.0 };
+        let mut finals = Vec::new();
+        for d in [1usize, 10] {
+            let mut cfg = small_cfg();
+            cfg.d = d;
+            let (mut oracle, mut x0, mut rng) = setup(&cfg, 3);
+            let cwtm = Cwtm::new(0.1);
+            let tr = Trainer::new(&cfg, &cwtm, &flip, &Identity)
+                .run(&mut oracle, &mut x0, &format!("d{d}"), &mut rng)
+                .unwrap();
+            finals.push(tr.final_loss);
+        }
+        assert!(finals[1] < finals[0], "d=10 {} !< d=1 {}", finals[1], finals[0]);
+    }
+
+    #[test]
+    fn draco_under_attack_equals_draco_without_attack() {
+        // DRACO's decode is exact whenever every group keeps an honest
+        // majority, so the attacked trajectory must EQUAL the clean one.
+        let mut cfg = small_cfg();
+        cfg.iters = 100;
+        let flip = SignFlip { coeff: -2.0 };
+        let (mut o1, mut x1, mut r1) = setup(&cfg, 4);
+        let attacked = DracoTrainer { cfg: &cfg, attack: &flip, r: 9 }
+            .run(&mut o1, &mut x1, "draco-attacked", &mut r1)
+            .unwrap();
+        let mut clean_cfg = cfg.clone();
+        clean_cfg.n_honest = cfg.n_devices; // nobody byzantine
+        let (mut o2, mut x2, mut r2) = setup(&clean_cfg, 4);
+        let clean = DracoTrainer { cfg: &clean_cfg, attack: &NoAttack, r: 9 }
+            .run(&mut o2, &mut x2, "draco-clean", &mut r2)
+            .unwrap();
+        assert_eq!(attacked.anomalies, 0);
+        let rel = (attacked.final_loss - clean.final_loss).abs()
+            / clean.final_loss.max(1e-9);
+        assert!(rel < 1e-6, "attacked {} vs clean {}", attacked.final_loss, clean.final_loss);
+        // and it actually learns
+        assert!(attacked.final_loss < attacked.loss[0]);
+    }
+
+    #[test]
+    fn invsqrt_schedule_converges_no_worse_than_constant() {
+        use crate::server::schedule::Schedule;
+        let cfg = small_cfg();
+        let flip = SignFlip { coeff: -2.0 };
+        let cwtm = Cwtm::new(0.2);
+        let (mut o1, mut x1, mut r1) = setup(&cfg, 8);
+        let fixed = Trainer::new(&cfg, &cwtm, &flip, &Identity)
+            .run(&mut o1, &mut x1, "fixed", &mut r1)
+            .unwrap();
+        let (mut o2, mut x2, mut r2) = setup(&cfg, 8);
+        let mut tr = Trainer::new(&cfg, &cwtm, &flip, &Identity);
+        tr.schedule =
+            Some(Schedule::InvSqrt { gamma0: cfg.lr * 2.0, tau: cfg.iters as f64 / 4.0 });
+        let sched = tr.run(&mut o2, &mut x2, "invsqrt", &mut r2).unwrap();
+        // both must learn; the diminishing schedule should land in the same
+        // ballpark (within 2x) of the tuned constant rate
+        assert!(sched.final_loss < sched.loss[0]);
+        assert!(sched.final_loss < fixed.final_loss * 2.0);
+    }
+
+    #[test]
+    fn compression_bits_are_counted() {
+        let mut cfg = small_cfg();
+        cfg.iters = 10;
+        cfg.log_every = 5;
+        let (mut oracle, mut x0, mut rng) = setup(&cfg, 5);
+        let comp = crate::compress::RandK::new(3);
+        let cwtm = Cwtm::new(0.1);
+        let tr = Trainer::new(&cfg, &cwtm, &NoAttack, &comp)
+            .run(&mut oracle, &mut x0, "com", &mut rng)
+            .unwrap();
+        // 20 devices × 10 iters × 3·(32+4) bits
+        assert_eq!(tr.total_bits(), 20 * 10 * 3 * (32 + 4));
+    }
+}

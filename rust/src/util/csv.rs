@@ -1,0 +1,82 @@
+//! CSV writer for metric traces and experiment series (results/*.csv).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Columnar series writer: header + rows of f64.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.cols, "csv row arity mismatch");
+        let line: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.out, "{}", line.join(","))
+    }
+
+    /// Row with a leading string label.
+    pub fn labeled_row(&mut self, label: &str, values: &[f64]) -> std::io::Result<()> {
+        assert_eq!(values.len() + 1, self.cols, "csv row arity mismatch");
+        let line: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.out, "{},{}", escape(label), line.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+fn escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("lad_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["iter", "loss"]).unwrap();
+            w.row(&[0.0, 1.5]).unwrap();
+            w.row(&[1.0, 1.25]).unwrap();
+            w.flush().unwrap();
+        }
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(body, "iter,loss\n0,1.5\n1,1.25\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn escapes_labels() {
+        assert_eq!(escape("plain"), "plain");
+        assert_eq!(escape("a,b"), "\"a,b\"");
+        assert_eq!(escape("q\"x"), "\"q\"\"x\"");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let dir = std::env::temp_dir().join("lad_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        let _ = w.row(&[1.0]);
+    }
+}

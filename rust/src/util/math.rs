@@ -1,0 +1,196 @@
+//! Small dense vector/matrix kernels used on the coordinator hot path.
+//!
+//! Gradients are `&[f32]`; per-subset gradient matrices are row-major
+//! [`Mat`]. Everything here is allocation-conscious: the training loop calls
+//! these per iteration per device.
+
+/// Row-major dense f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        assert!(!rows.is_empty());
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Mat { rows: rows.len(), cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// y = self · x  (rows×cols · cols).
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            y[i] = dot(self.row(i), x);
+        }
+    }
+}
+
+/// Dot product with 4-lane manual unrolling (autovectorizes well at -O3).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// y += alpha * x.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * *xi;
+    }
+}
+
+/// x *= alpha.
+#[inline]
+pub fn scale(x: &mut [f32], alpha: f32) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// out = a - b.
+pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn norm_sq(x: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for &v in x {
+        s += (v as f64) * (v as f64);
+    }
+    s
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm(x: &[f32]) -> f64 {
+    norm_sq(x).sqrt()
+}
+
+/// Squared Euclidean distance (no allocation).
+#[inline]
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        s += d * d;
+    }
+    s
+}
+
+/// Coordinate-wise mean of a family of equal-length vectors.
+pub fn mean_of(vectors: &[&[f32]]) -> Vec<f32> {
+    assert!(!vectors.is_empty());
+    let q = vectors[0].len();
+    let mut out = vec![0.0f32; q];
+    for v in vectors {
+        axpy(1.0, v, &mut out);
+    }
+    scale(&mut out, 1.0 / vectors.len() as f32);
+    out
+}
+
+/// Relative L2 error between two vectors (for runtime-vs-native parity).
+pub fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+    let d = dist_sq(a, b).sqrt();
+    let n = norm(b).max(1e-30);
+    d / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..103).map(|i| i as f32 * 0.25).collect();
+        let b: Vec<f32> = (0..103).map(|i| (103 - i) as f32 * 0.5).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-2 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn axpy_scale_sub() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![6.0, 12.0, 18.0]);
+        assert_eq!(sub(&y, &x), vec![5.0, 10.0, 15.0]);
+    }
+
+    #[test]
+    fn matvec_small() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let mut y = vec![0.0; 2];
+        m.matvec(&[1.0, 1.0], &mut y);
+        assert_eq!(y, vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn norms_and_dist() {
+        let a = vec![3.0, 4.0];
+        assert!((norm(&a) - 5.0).abs() < 1e-9);
+        assert!((dist_sq(&a, &[0.0, 0.0]) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_of_vectors() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 6.0];
+        let m = mean_of(&[&a, &b]);
+        assert_eq!(m, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn mat_row_access() {
+        let mut m = Mat::zeros(3, 2);
+        m.row_mut(1).copy_from_slice(&[5.0, 6.0]);
+        assert_eq!(m.row(1), &[5.0, 6.0]);
+        assert_eq!(m.row(0), &[0.0, 0.0]);
+    }
+}

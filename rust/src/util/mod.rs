@@ -1,0 +1,12 @@
+//! Dependency-free substrate utilities: RNG, vector/matrix math, JSON,
+//! CSV, timing and summary statistics.
+
+pub mod csv;
+pub mod json;
+pub mod math;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use math::Mat;
+pub use rng::Rng;

@@ -1,0 +1,86 @@
+//! The threaded leader/worker cluster must be trace-identical to the
+//! central fast-path simulation (same seed ⇒ same messages ⇒ same model).
+
+use lad::aggregation::Cwtm;
+use lad::attack::{NoAttack, SignFlip};
+use lad::compress::{Identity, RandK};
+use lad::config::TrainConfig;
+use lad::data::linreg::LinRegDataset;
+use lad::grad::NativeLinReg;
+use lad::server::cluster::run_cluster;
+use lad::server::trainer::Trainer;
+use lad::util::rng::Rng;
+
+fn cfg(n: usize, h: usize, d: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.n_devices = n;
+    cfg.n_honest = h;
+    cfg.d = d;
+    cfg.dim = 12;
+    cfg.iters = 80;
+    cfg.lr = 8e-5;
+    cfg.sigma_h = 0.3;
+    cfg.log_every = 20;
+    cfg
+}
+
+fn parity(cfg: &TrainConfig, attack_on: bool, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng);
+    let cwtm = Cwtm::new(0.1);
+    let flip = SignFlip { coeff: -2.0 };
+    let noatk = NoAttack;
+    let attack: &dyn lad::attack::Attack = if attack_on { &flip } else { &noatk };
+
+    let mut x_cluster = vec![0.0f32; cfg.dim];
+    let tc = run_cluster(
+        cfg, &ds, &cwtm, attack, &Identity, &mut x_cluster, "cluster", &mut Rng::new(seed + 1),
+    )
+    .unwrap();
+    let mut oracle = NativeLinReg::new(ds);
+    let mut x_central = vec![0.0f32; cfg.dim];
+    let tt = Trainer::new(cfg, &cwtm, attack, &Identity)
+        .run(&mut oracle, &mut x_central, "central", &mut Rng::new(seed + 1))
+        .unwrap();
+    // identical rng consumption => identical trajectories (f32-exact)
+    assert_eq!(x_cluster, x_central, "model divergence");
+    assert_eq!(tc.loss, tt.loss, "trace divergence");
+}
+
+#[test]
+fn cluster_matches_central_no_attack() {
+    parity(&cfg(10, 8, 3), false, 201);
+}
+
+#[test]
+fn cluster_matches_central_with_attack() {
+    parity(&cfg(12, 9, 4), true, 301);
+}
+
+#[test]
+fn cluster_matches_central_d1_baseline() {
+    parity(&cfg(9, 7, 1), true, 401);
+}
+
+#[test]
+fn cluster_with_compression_trains() {
+    let cfg = cfg(10, 8, 3);
+    let mut rng = Rng::new(501);
+    let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng);
+    let mut x0 = vec![0.0f32; cfg.dim];
+    let l0 = ds.loss(&x0);
+    let cwtm = Cwtm::new(0.1);
+    let tr = run_cluster(
+        &cfg,
+        &ds,
+        &cwtm,
+        &SignFlip { coeff: -2.0 },
+        &RandK::new(4),
+        &mut x0,
+        "cluster-com",
+        &mut Rng::new(502),
+    )
+    .unwrap();
+    assert!(tr.final_loss < l0, "{} !< {l0}", tr.final_loss);
+    assert!(tr.total_bits() > 0);
+}

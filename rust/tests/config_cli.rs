@@ -1,0 +1,113 @@
+//! Config-file and CLI plumbing integration tests.
+
+use lad::cli::Args;
+use lad::config::{AggregatorKind, CompressionKind, TrainConfig};
+
+#[test]
+fn config_file_round_trip() {
+    let dir = std::env::temp_dir().join("lad_cfg_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("train.toml");
+    std::fs::write(
+        &path,
+        r#"
+        # Fig-6 style run
+        seed = 99
+        [train]
+        devices = 100
+        honest = 70
+        d = 3
+        dim = 100
+        iters = 600
+        lr = 3e-7
+        sigma_h = 0.3
+        aggregator = "cwtm"
+        nnm = true
+        trim_frac = 0.1
+        compression = "rand-k"
+        q_hat = 30
+        attack = "sign-flip"
+        oracle = "native"
+        log_every = 50
+        "#,
+    )
+    .unwrap();
+    let cfg = TrainConfig::from_file(&path).unwrap();
+    assert_eq!(cfg.seed, 99);
+    assert_eq!(cfg.n_honest, 70);
+    assert_eq!(cfg.compression, CompressionKind::RandK { k: 30 });
+    assert!(cfg.nnm);
+    assert_eq!(cfg.aggregator, AggregatorKind::Cwtm);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn invalid_configs_rejected_with_context() {
+    for (body, needle) in [
+        ("devices = 10\nhonest = 4", "H > N/2"),
+        ("d = 200", "d"),
+        ("lr = -1.0", "lr"),
+        ("aggregator = \"bogus\"", "aggregator"),
+        ("attack = \"nope\"", "attack"),
+        ("whatever = 1", "unknown"),
+    ] {
+        let err = TrainConfig::from_toml_str(body).unwrap_err();
+        let msg = format!("{err:#}").to_lowercase();
+        assert!(msg.contains(&needle.to_lowercase()), "{body}: {msg}");
+    }
+}
+
+#[test]
+fn cli_overrides_win_over_defaults() {
+    let args = Args::parse(
+        ["train", "--devices", "40", "--honest", "30", "--d", "7", "--nnm"]
+            .iter()
+            .map(|s| s.to_string()),
+    )
+    .unwrap();
+    assert_eq!(args.command.as_deref(), Some("train"));
+    assert_eq!(args.get_usize("devices", 100).unwrap(), 40);
+    assert_eq!(args.get_usize("honest", 80).unwrap(), 30);
+    assert!(args.has_flag("nnm"));
+}
+
+#[test]
+fn lad_binary_help_and_theory_run() {
+    // spawn the actual binary (cheapest end-to-end CLI check)
+    let bin = env!("CARGO_BIN_EXE_lad");
+    let out = std::process::Command::new(bin).arg("help").output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("SUBCOMMANDS"));
+
+    let out = std::process::Command::new(bin)
+        .args(["theory", "--n", "100", "--honest", "65", "--d", "5"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("d crossover"), "{text}");
+
+    // unknown flag is a hard error
+    let out = std::process::Command::new(bin)
+        .args(["theory", "--bogus", "1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn lad_binary_fig2_fig3_write_csv() {
+    let bin = env!("CARGO_BIN_EXE_lad");
+    let dir = std::env::temp_dir().join("lad_fig_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    for fig in ["fig2", "fig3"] {
+        let out = std::process::Command::new(bin)
+            .args([fig, "--out", dir.to_str().unwrap()])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{fig}: {}", String::from_utf8_lossy(&out.stderr));
+    }
+    assert!(dir.join("fig2_error_vs_delta.csv").exists());
+    assert!(dir.join("fig3_error_vs_d.csv").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}

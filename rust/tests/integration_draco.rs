@@ -1,0 +1,105 @@
+//! Integration: DRACO vs LAD — the compute/robustness trade-off of Fig. 4.
+
+use lad::attack::SignFlip;
+use lad::config::TrainConfig;
+use lad::data::linreg::LinRegDataset;
+use lad::experiments::common::{run_variant, Variant};
+use lad::grad::NativeLinReg;
+use lad::server::trainer::DracoTrainer;
+use lad::util::rng::Rng;
+
+fn cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.n_devices = 30;
+    cfg.n_honest = 24;
+    cfg.dim = 30;
+    cfg.iters = 400;
+    cfg.lr = 8e-5;
+    cfg.sigma_h = 0.3;
+    cfg.log_every = 100;
+    cfg
+}
+
+#[test]
+fn draco_beats_lad_beats_plain_under_attack() {
+    let cfg = cfg();
+    let mut rng = Rng::new(61);
+    let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng);
+    let mut plain = cfg.clone();
+    plain.d = 1;
+    let mut lad = cfg.clone();
+    lad.d = 10;
+    let t_plain =
+        run_variant(&ds, &Variant { label: "cwtm".into(), cfg: plain, draco_r: None }, 62)
+            .unwrap();
+    let t_lad =
+        run_variant(&ds, &Variant { label: "lad".into(), cfg: lad, draco_r: None }, 62).unwrap();
+    let t_draco = run_variant(
+        &ds,
+        &Variant { label: "draco".into(), cfg: cfg.clone(), draco_r: Some(13) },
+        62,
+    )
+    .unwrap();
+    assert!(t_lad.final_loss <= t_plain.final_loss * 1.02, "lad !<= plain");
+    assert!(t_draco.final_loss <= t_lad.final_loss * 1.05, "draco !<= lad");
+    assert_eq!(t_draco.anomalies, 0);
+}
+
+#[test]
+fn draco_decode_failure_is_counted_not_fatal() {
+    // overwhelm one group: more Byzantine than the scheme tolerates, with
+    // non-colluding lies so no majority forms -> anomalies, no panic
+    let mut cfg = cfg();
+    cfg.n_devices = 12;
+    cfg.n_honest = 7; // 5 byz, all in the last group of r=4... groups of 4
+    cfg.dim = 8;
+    cfg.iters = 20;
+    let mut rng = Rng::new(71);
+    let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng);
+    let attack = lad::attack::GaussianNoise { std: 1e4 };
+    let trainer = DracoTrainer { cfg: &cfg, attack: &attack, r: 3 };
+    let mut oracle = NativeLinReg::new(ds);
+    let mut x0 = vec![0.0; cfg.dim];
+    let tr = trainer.run(&mut oracle, &mut x0, "draco-broken", &mut Rng::new(72)).unwrap();
+    assert!(tr.anomalies > 0, "expected decode failures");
+}
+
+#[test]
+fn draco_compute_load_vs_lad() {
+    // the paper's headline trade-off: LAD d=10 ≈ DRACO quality at a
+    // fraction of the compute. Verify the load accounting.
+    let scheme = lad::coding::DracoScheme::new(100, 41);
+    let draco_load: usize = (0..100).map(|i| scheme.load(i)).sum();
+    let lad_load = 100 * 10; // d = 10
+    assert!(lad_load * 2 < draco_load * 1, "lad load {lad_load} vs draco {draco_load}");
+}
+
+#[test]
+fn draco_exactness_zero_heterogeneity_sensitivity() {
+    // DRACO's final loss is independent of σ_H's effect on robustness
+    // (it always recovers the exact gradient) — the curves differ only
+    // through the dataset itself.
+    let mut c = cfg();
+    c.iters = 200;
+    let flip = SignFlip { coeff: -2.0 };
+    for sigma in [0.0, 0.5] {
+        let mut rng = Rng::new(81);
+        let ds = LinRegDataset::generate(c.n_devices, c.dim, sigma, &mut rng);
+        // run draco and exact gradient descent side by side
+        let trainer = DracoTrainer { cfg: &c, attack: &flip, r: 13 };
+        let mut oracle = NativeLinReg::new(ds.clone());
+        let mut x0 = vec![0.0; c.dim];
+        let tr = trainer.run(&mut oracle, &mut x0, "draco", &mut Rng::new(82)).unwrap();
+        // exact GD with update μ = ∇F/N
+        let mut x = vec![0.0f32; c.dim];
+        for _ in 0..c.iters {
+            let g = ds.full_grad(&x);
+            for (xi, gi) in x.iter_mut().zip(&g) {
+                *xi -= (c.lr / c.n_devices as f64) as f32 * gi;
+            }
+        }
+        let gd_loss = ds.loss(&x);
+        let rel = (tr.final_loss - gd_loss).abs() / gd_loss.max(1e-9);
+        assert!(rel < 1e-4, "σ={sigma}: draco {} vs gd {}", tr.final_loss, gd_loss);
+    }
+}

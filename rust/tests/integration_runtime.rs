@@ -1,0 +1,188 @@
+//! Integration over the PJRT runtime: AOT artifacts (Pallas/JAX → HLO text)
+//! must load, execute, and agree with the native Rust oracle bit-for-bit
+//! (up to f32 accumulation order).
+//!
+//! Requires `make artifacts`; tests are skipped (with a note) if the
+//! artifact directory is missing so `cargo test` works pre-build.
+
+use lad::coding::{Assignment, TaskMatrix};
+use lad::data::linreg::LinRegDataset;
+use lad::experiments::common::{run_variant, Variant};
+use lad::grad::{CodedGradOracle, NativeLinReg, RuntimeLinReg};
+use lad::runtime::{Runtime, TensorIn};
+use lad::util::math::{rel_err, Mat};
+use lad::util::rng::Rng;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("LAD_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    });
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime tests: no artifacts at {dir} (run `make artifacts`)");
+        None
+    }
+}
+
+fn linreg_pair(dir: &str, seed: u64) -> Option<(NativeLinReg, RuntimeLinReg, usize, usize)> {
+    let rt = Runtime::load(dir).unwrap();
+    let meta = &rt.manifest().entries["coded_grad"].meta;
+    let (n, q) = (meta["n"] as usize, meta["q"] as usize);
+    let mut rng = Rng::new(seed);
+    let ds = LinRegDataset::generate(n, q, 0.3, &mut rng);
+    let native = NativeLinReg::new(ds.clone());
+    let runtime = RuntimeLinReg::new(rt, ds).unwrap();
+    Some((native, runtime, n, q))
+}
+
+#[test]
+fn coded_grad_parity_native_vs_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (mut native, mut runtime, n, q) = linreg_pair(&dir, 21).unwrap();
+    let mut rng = Rng::new(22);
+    for d in [1usize, 5, 20] {
+        let s = TaskMatrix::cyclic(n, d);
+        let assign = Assignment::draw(n, &mut rng);
+        let subsets: Vec<Vec<usize>> =
+            (0..n).map(|i| assign.subsets_for(s.row(assign.tasks[i])).collect()).collect();
+        let x = rng.gauss_vec(q);
+        let mut a = Mat::zeros(n, q);
+        let mut b = Mat::zeros(n, q);
+        native.coded_grads(&x, &subsets, &mut a).unwrap();
+        runtime.coded_grads(&x, &subsets, &mut b).unwrap();
+        let err = rel_err(&b.data, &a.data);
+        assert!(err < 1e-5, "d={d}: parity err {err}");
+    }
+}
+
+#[test]
+fn loss_and_grad_matrix_parity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (mut native, mut runtime, n, q) = linreg_pair(&dir, 23).unwrap();
+    let mut rng = Rng::new(24);
+    let x = rng.gauss_vec(q);
+    let ln = native.loss(&x).unwrap();
+    let lr = runtime.loss(&x).unwrap();
+    assert!((ln - lr).abs() / ln.max(1.0) < 1e-5, "loss {ln} vs {lr}");
+    let mut ga = Mat::zeros(n, q);
+    let mut gb = Mat::zeros(n, q);
+    native.grad_matrix(&x, &mut ga).unwrap();
+    runtime.grad_matrix(&x, &mut gb).unwrap();
+    assert!(rel_err(&gb.data, &ga.data) < 1e-5);
+}
+
+#[test]
+fn full_training_run_on_pjrt_oracle_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    std::env::set_var("LAD_ARTIFACTS", &dir);
+    let rt = Runtime::load(&dir).unwrap();
+    let meta = &rt.manifest().entries["coded_grad"].meta;
+    let (n, q) = (meta["n"] as usize, meta["q"] as usize);
+    drop(rt);
+    let mut rng = Rng::new(31);
+    let ds = LinRegDataset::generate(n, q, 0.3, &mut rng);
+    let mut cfg = lad::config::TrainConfig::default();
+    cfg.n_devices = n;
+    cfg.n_honest = n * 4 / 5;
+    cfg.dim = q;
+    cfg.d = 5;
+    cfg.iters = 30;
+    cfg.lr = 3e-5;
+    cfg.log_every = 10;
+    let mut native_cfg = cfg.clone();
+    native_cfg.oracle = lad::config::OracleKind::NativeLinreg;
+    let mut rt_cfg = cfg.clone();
+    rt_cfg.oracle = lad::config::OracleKind::RuntimeLinreg;
+    let a = run_variant(&ds, &Variant { label: "n".into(), cfg: native_cfg, draco_r: None }, 32)
+        .unwrap();
+    let b = run_variant(&ds, &Variant { label: "r".into(), cfg: rt_cfg, draco_r: None }, 32)
+        .unwrap();
+    let rel = (a.final_loss - b.final_loss).abs() / a.final_loss.max(1e-9);
+    assert!(rel < 1e-3, "native {} vs pjrt {}", a.final_loss, b.final_loss);
+}
+
+#[test]
+fn transformer_artifacts_execute_and_losses_are_sane() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    if !rt.has("transformer_grad") {
+        eprintln!("skipping: transformer artifacts not built");
+        return;
+    }
+    let meta = rt.manifest().entries["transformer_grad"].meta.clone();
+    let p = meta["params"] as usize;
+    let vocab = meta["vocab"] as usize;
+    let (batch, seq) = (meta["batch"] as usize, meta["seq"] as usize);
+    // init from the artifact
+    let theta = rt
+        .exec_f32("transformer_init", &[TensorIn::I32(&[7], &[])])
+        .unwrap()
+        .remove(0);
+    assert_eq!(theta.len(), p);
+    assert!(theta.iter().all(|x| x.is_finite()));
+    // loss at init ≈ ln(vocab)
+    let mut rng = Rng::new(41);
+    let windows: Vec<i32> =
+        (0..batch * (seq + 1)).map(|_| rng.below(vocab) as i32).collect();
+    let outs = rt
+        .exec_f32(
+            "transformer_grad",
+            &[
+                TensorIn::F32(&theta, &[p as i64]),
+                TensorIn::I32(&windows, &[batch as i64, seq as i64 + 1]),
+            ],
+        )
+        .unwrap();
+    let loss = outs[0][0] as f64;
+    let grad = &outs[1];
+    assert!((loss - (vocab as f64).ln()).abs() < 1.0, "init loss {loss}");
+    assert_eq!(grad.len(), p);
+    assert!(grad.iter().all(|x| x.is_finite()));
+    // a gradient step on the same batch must reduce the loss
+    let theta2: Vec<f32> = theta.iter().zip(grad).map(|(t, g)| t - 0.5 * g).collect();
+    let outs2 = rt
+        .exec_f32(
+            "transformer_loss",
+            &[
+                TensorIn::F32(&theta2, &[p as i64]),
+                TensorIn::I32(&windows, &[batch as i64, seq as i64 + 1]),
+            ],
+        )
+        .unwrap();
+    assert!((outs2[0][0] as f64) < loss, "step did not reduce loss");
+}
+
+#[test]
+fn executable_cache_hits_after_first_call() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let meta = &rt.manifest().entries["linreg_loss"].meta;
+    let (n, q) = (meta["n"] as usize, meta["q"] as usize);
+    let mut rng = Rng::new(51);
+    let x = rng.gauss_vec(q);
+    let z = rng.gauss_vec(n * q);
+    let y = rng.gauss_vec(n);
+    for _ in 0..3 {
+        rt.exec_f32(
+            "linreg_loss",
+            &[
+                TensorIn::F32(&x, &[q as i64]),
+                TensorIn::F32(&z, &[n as i64, q as i64]),
+                TensorIn::F32(&y, &[n as i64]),
+            ],
+        )
+        .unwrap();
+    }
+    assert_eq!(rt.stats.compiles, 1, "must compile exactly once");
+    assert_eq!(rt.stats.executes, 3);
+}
+
+#[test]
+fn shape_mismatch_is_rejected_before_execution() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let bad = vec![0.0f32; 3];
+    let err = rt.exec_f32("linreg_loss", &[TensorIn::F32(&bad, &[3])]).unwrap_err();
+    assert!(format!("{err}").contains("inputs"), "{err}");
+}

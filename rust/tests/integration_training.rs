@@ -1,0 +1,191 @@
+//! Integration: the full training loop across coding × aggregation ×
+//! attack × compression combinations (native oracle).
+
+use lad::aggregation;
+use lad::config::{AggregatorKind, AttackKind, CompressionKind, TrainConfig};
+use lad::data::linreg::LinRegDataset;
+use lad::experiments::common::{run_variant, Variant};
+use lad::util::rng::Rng;
+
+fn base_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.n_devices = 30;
+    cfg.n_honest = 24;
+    cfg.d = 5;
+    cfg.dim = 30;
+    cfg.iters = 500;
+    cfg.lr = 8e-5;
+    cfg.sigma_h = 0.3;
+    cfg.log_every = 100;
+    cfg
+}
+
+fn dataset(cfg: &TrainConfig, seed: u64) -> LinRegDataset {
+    let mut rng = Rng::new(seed);
+    LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng)
+}
+
+#[test]
+fn every_robust_aggregator_survives_sign_flip() {
+    let cfg = base_cfg();
+    let ds = dataset(&cfg, 1);
+    let init_loss = ds.loss(&vec![0.0; cfg.dim]);
+    for kind in [
+        AggregatorKind::Cwtm,
+        AggregatorKind::Median,
+        AggregatorKind::GeometricMedian,
+        AggregatorKind::MultiKrum,
+        AggregatorKind::Faba,
+        AggregatorKind::Mcc,
+        AggregatorKind::Tgn,
+    ] {
+        let mut c = cfg.clone();
+        c.aggregator = kind;
+        let tr = run_variant(
+            &ds,
+            &Variant { label: kind.name().into(), cfg: c, draco_r: None },
+            2,
+        )
+        .unwrap();
+        assert!(
+            tr.final_loss < init_loss * 0.8,
+            "{}: {} !< {}",
+            kind.name(),
+            tr.final_loss,
+            init_loss
+        );
+    }
+}
+
+#[test]
+fn coding_improves_every_robust_rule() {
+    // the meta-algorithm claim: LAD(d) <= plain(d=1) for each rule
+    let cfg = base_cfg();
+    let ds = dataset(&cfg, 3);
+    for kind in [AggregatorKind::Cwtm, AggregatorKind::Median, AggregatorKind::GeometricMedian] {
+        let mut plain = cfg.clone();
+        plain.d = 1;
+        plain.aggregator = kind;
+        let mut coded = cfg.clone();
+        coded.d = 10;
+        coded.aggregator = kind;
+        let t1 = run_variant(&ds, &Variant { label: "p".into(), cfg: plain, draco_r: None }, 4)
+            .unwrap();
+        let t2 = run_variant(&ds, &Variant { label: "c".into(), cfg: coded, draco_r: None }, 4)
+            .unwrap();
+        assert!(
+            t2.final_loss <= t1.final_loss * 1.05,
+            "{}: coded {} !<= plain {}",
+            kind.name(),
+            t2.final_loss,
+            t1.final_loss
+        );
+    }
+}
+
+#[test]
+fn compressed_training_converges_with_all_unbiased_ops() {
+    let mut cfg = base_cfg();
+    cfg.lr = 3e-5; // compression noise needs a smaller step
+    cfg.iters = 800;
+    let ds = dataset(&cfg, 5);
+    let init_loss = ds.loss(&vec![0.0; cfg.dim]);
+    for comp in [
+        CompressionKind::None,
+        CompressionKind::RandK { k: 10 },
+        CompressionKind::Qsgd { levels: 16 },
+    ] {
+        let mut c = cfg.clone();
+        c.compression = comp;
+        let tr = run_variant(
+            &ds,
+            &Variant { label: comp.name().into(), cfg: c, draco_r: None },
+            6,
+        )
+        .unwrap();
+        assert!(
+            tr.final_loss < init_loss * 0.9,
+            "{}: {} !< {}",
+            comp.name(),
+            tr.final_loss,
+            init_loss
+        );
+    }
+}
+
+#[test]
+fn compression_reduces_bits_proportionally() {
+    let mut cfg = base_cfg();
+    cfg.iters = 50;
+    let ds = dataset(&cfg, 7);
+    let mut dense_cfg = cfg.clone();
+    dense_cfg.compression = CompressionKind::None;
+    let mut sparse_cfg = cfg.clone();
+    sparse_cfg.compression = CompressionKind::RandK { k: 3 }; // 10% of Q=30
+    let dense =
+        run_variant(&ds, &Variant { label: "d".into(), cfg: dense_cfg, draco_r: None }, 8).unwrap();
+    let sparse =
+        run_variant(&ds, &Variant { label: "s".into(), cfg: sparse_cfg, draco_r: None }, 8)
+            .unwrap();
+    let ratio = sparse.total_bits() as f64 / dense.total_bits() as f64;
+    // 3·(32+5) / (30·32) ≈ 0.116
+    assert!(ratio < 0.15, "compression ratio {ratio}");
+}
+
+#[test]
+fn rotating_byzantine_identities_also_converges() {
+    use lad::attack::SignFlip;
+    use lad::compress::Identity;
+    use lad::grad::NativeLinReg;
+    use lad::server::trainer::Trainer;
+    let cfg = base_cfg();
+    let ds = dataset(&cfg, 9);
+    let agg = aggregation::from_config(&cfg);
+    let attack = SignFlip { coeff: -2.0 };
+    let mut trainer = Trainer::new(&cfg, agg.as_ref(), &attack, &Identity);
+    trainer.rotate_byzantine = true;
+    let mut oracle = NativeLinReg::new(ds.clone());
+    let mut x0 = vec![0.0; cfg.dim];
+    let tr = trainer.run(&mut oracle, &mut x0, "rotating", &mut Rng::new(10)).unwrap();
+    assert!(tr.final_loss < ds.loss(&vec![0.0; cfg.dim]) * 0.8);
+}
+
+#[test]
+fn stronger_attacks_do_not_break_lad_cwtm_nnm() {
+    let mut cfg = base_cfg();
+    cfg.nnm = true;
+    cfg.d = 10;
+    let ds = dataset(&cfg, 11);
+    let init_loss = ds.loss(&vec![0.0; cfg.dim]);
+    for atk in [
+        AttackKind::Alie,
+        AttackKind::Ipm { eps: 0.5 },
+        AttackKind::Zero,
+        AttackKind::RandomSpike { scale: 1e4 },
+        AttackKind::Mimic,
+    ] {
+        let mut c = cfg.clone();
+        c.attack = atk;
+        let tr =
+            run_variant(&ds, &Variant { label: atk.name().into(), cfg: c, draco_r: None }, 12)
+                .unwrap();
+        assert!(
+            tr.final_loss < init_loss,
+            "{}: {} !< init {}",
+            atk.name(),
+            tr.final_loss,
+            init_loss
+        );
+    }
+}
+
+#[test]
+fn trainer_is_deterministic_given_seed() {
+    let cfg = base_cfg();
+    let ds = dataset(&cfg, 13);
+    let v = Variant { label: "det".into(), cfg, draco_r: None };
+    let a = run_variant(&ds, &v, 14).unwrap();
+    let b = run_variant(&ds, &v, 14).unwrap();
+    assert_eq!(a.final_loss, b.final_loss);
+    assert_eq!(a.loss, b.loss);
+}

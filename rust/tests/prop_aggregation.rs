@@ -1,0 +1,211 @@
+//! Property tests on the κ-robust aggregation rules (Definition 1
+//! invariants) via the proptest_lite harness.
+
+use lad::aggregation::{
+    Aggregator, CoordinateMedian, Cwtm, Faba, GeometricMedian, Krum, Mcc, Mean, MultiKrum, Nnm,
+    Tgn,
+};
+use lad::proptest_lite::{ensure, forall, gen};
+use lad::util::math::{dist_sq, mean_of, norm};
+use lad::util::rng::Rng;
+
+fn all_rules(f: usize) -> Vec<Box<dyn Aggregator>> {
+    vec![
+        Box::new(Mean),
+        Box::new(Cwtm::new(0.2)),
+        Box::new(CoordinateMedian),
+        Box::new(GeometricMedian::default()),
+        Box::new(Krum::new(f)),
+        Box::new(MultiKrum::new(f)),
+        Box::new(Mcc::default()),
+        Box::new(Faba::new(f)),
+        Box::new(Tgn::new(0.2)),
+        Box::new(Nnm::new(f, Box::new(Cwtm::new(0.2)))),
+    ]
+}
+
+/// Agreement: if every device sends the same vector, every rule returns it.
+#[test]
+fn prop_agreement() {
+    forall(
+        60,
+        0xA1,
+        |rng: &mut Rng| {
+            let q = gen::usize_in(rng, 1, 24);
+            let n = gen::usize_in(rng, 4, 20);
+            (gen::vec_f32(rng, q, 10.0), n)
+        },
+        |(v, n)| {
+            for rule in all_rules(n / 4) {
+                let out = rule.aggregate(&vec![v.clone(); *n]);
+                let d = dist_sq(&out, v);
+                ensure(d < 1e-6, || format!("{}: agreement broken, d={d}", rule.name()))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Permutation invariance: message order must not matter.
+#[test]
+fn prop_permutation_invariance() {
+    forall(
+        40,
+        0xA2,
+        |rng: &mut Rng| {
+            let n = gen::usize_in(rng, 5, 14);
+            let q = gen::usize_in(rng, 2, 12);
+            let fam = gen::vec_family(rng, n, q, 3.0);
+            let perm = rng.permutation(n);
+            (fam, perm)
+        },
+        |(fam, perm)| {
+            let shuffled: Vec<Vec<f32>> = perm.iter().map(|&i| fam[i].clone()).collect();
+            for rule in all_rules(fam.len() / 4) {
+                let a = rule.aggregate(fam);
+                let b = rule.aggregate(&shuffled);
+                let d = dist_sq(&a, &b);
+                ensure(d < 1e-4, || {
+                    format!("{}: permutation changed output by {d}", rule.name())
+                })?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Translation equivariance for the coordinate-wise rules:
+/// agg({x_i + c}) = agg({x_i}) + c.
+#[test]
+fn prop_translation_equivariance() {
+    forall(
+        40,
+        0xA3,
+        |rng: &mut Rng| {
+            let n = gen::usize_in(rng, 5, 12);
+            let q = gen::usize_in(rng, 2, 10);
+            let fam = gen::vec_family(rng, n, q, 2.0);
+            let shift = gen::vec_f32(rng, q, 5.0);
+            (fam, shift)
+        },
+        |(fam, shift)| {
+            let rules: Vec<Box<dyn Aggregator>> = vec![
+                Box::new(Mean),
+                Box::new(Cwtm::new(0.2)),
+                Box::new(CoordinateMedian),
+            ];
+            let shifted: Vec<Vec<f32>> = fam
+                .iter()
+                .map(|v| v.iter().zip(shift).map(|(a, b)| a + b).collect())
+                .collect();
+            for rule in rules {
+                let a = rule.aggregate(fam);
+                let b = rule.aggregate(&shifted);
+                let back: Vec<f32> = b.iter().zip(shift).map(|(x, s)| x - s).collect();
+                let d = dist_sq(&a, &back);
+                ensure(d < 1e-3, || format!("{}: not translation-equivariant ({d})", rule.name()))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Bounded deviation (κ-robustness shape): for robust rules, the output
+/// stays within the honest hull scale even under adversarial outliers.
+#[test]
+fn prop_bounded_deviation_under_outliers() {
+    forall(
+        40,
+        0xA4,
+        |rng: &mut Rng| {
+            let h = gen::usize_in(rng, 7, 14);
+            let f = gen::usize_in(rng, 1, (h - 1) / 2);
+            let q = gen::usize_in(rng, 2, 10);
+            let honest = gen::vec_family(rng, h, q, 1.0);
+            let scale = 10f32.powi(gen::usize_in(rng, 1, 4) as i32);
+            (honest, f, scale)
+        },
+        |(honest, f, scale)| {
+            let q = honest[0].len();
+            let zbar = mean_of(&honest.iter().map(|v| v.as_slice()).collect::<Vec<_>>());
+            let spread: f64 = honest.iter().map(|z| dist_sq(z, &zbar)).sum::<f64>()
+                / honest.len() as f64;
+            let mut msgs = honest.clone();
+            for _ in 0..*f {
+                msgs.push(vec![*scale; q]);
+            }
+            // robust rules only (mean is unbounded by design); CWTM's trim
+            // count must cover f — robustness needs ⌊βN⌋ ≥ f (Yin et al.)
+            let n = honest.len() + f;
+            let beta = ((*f as f64 + 1.0) / n as f64).min(0.49);
+            let rules: Vec<Box<dyn Aggregator>> = vec![
+                Box::new(Cwtm::new(beta)),
+                Box::new(CoordinateMedian),
+                Box::new(GeometricMedian::default()),
+                Box::new(Krum::new(*f)),
+                Box::new(Faba::new(*f)),
+            ];
+            for rule in rules {
+                let out = rule.aggregate(&msgs);
+                let dev = dist_sq(&out, &zbar);
+                // generous κ bound: deviation ≤ 100 × honest spread + eps
+                ensure(dev <= 100.0 * spread + 1e-6, || {
+                    format!(
+                        "{}: deviation {dev} vs spread {spread} (scale {scale})",
+                        rule.name()
+                    )
+                })?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// NNM mixing never increases the honest-family variance.
+#[test]
+fn prop_nnm_contracts_variance() {
+    forall(
+        40,
+        0xA5,
+        |rng: &mut Rng| {
+            let n = gen::usize_in(rng, 6, 16);
+            let q = gen::usize_in(rng, 2, 8);
+            let f = gen::usize_in(rng, 0, n / 3);
+            (gen::vec_family(rng, n, q, 4.0), f)
+        },
+        |(fam, f)| {
+            let nnm = Nnm::new(*f, Box::new(Mean));
+            let mixed = nnm.mix(fam);
+            let var = |xs: &[Vec<f32>]| {
+                let mu = mean_of(&xs.iter().map(|v| v.as_slice()).collect::<Vec<_>>());
+                xs.iter().map(|x| dist_sq(x, &mu)).sum::<f64>() / xs.len() as f64
+            };
+            ensure(var(&mixed) <= var(fam) * (1.0 + 1e-6) + 1e-9, || {
+                format!("variance grew: {} -> {}", var(fam), var(&mixed))
+            })
+        },
+    );
+}
+
+/// Output is always finite for finite inputs.
+#[test]
+fn prop_finite_output() {
+    forall(
+        40,
+        0xA6,
+        |rng: &mut Rng| {
+            let n = gen::usize_in(rng, 4, 12);
+            let q = gen::usize_in(rng, 1, 8);
+            gen::vec_family(rng, n, q, 1e6)
+        },
+        |fam| {
+            for rule in all_rules(fam.len() / 3) {
+                let out = rule.aggregate(fam);
+                ensure(out.iter().all(|x| x.is_finite()), || {
+                    format!("{}: non-finite output {:?} (norm {})", rule.name(), out, norm(&out))
+                })?;
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,143 @@
+//! Property tests on the gradient-coding layer: Lemma 1, encoder
+//! unbiasedness and the cyclic matrix's optimality.
+
+use lad::coding::task_matrix::{lemma1_infimum, TaskMatrix};
+use lad::coding::{encode_coded, Assignment};
+use lad::proptest_lite::{ensure, forall, gen};
+use lad::util::math::Mat;
+use lad::util::rng::Rng;
+
+/// The closed-form Lemma-1 objective equals the paper's infimum exactly for
+/// the cyclic matrix, for every (N, H, d).
+#[test]
+fn prop_cyclic_attains_infimum() {
+    forall(
+        200,
+        0xC1,
+        |rng: &mut Rng| {
+            let n = gen::usize_in(rng, 3, 60);
+            let h = gen::usize_in(rng, n / 2 + 1, n);
+            let d = gen::usize_in(rng, 1, n);
+            (n, h, d)
+        },
+        |&(n, h, d)| {
+            let s = TaskMatrix::cyclic(n, d);
+            let cf = s.lemma1_objective(h);
+            let inf = lemma1_infimum(n, h, d);
+            ensure((cf - inf).abs() < 1e-10 * inf.max(1.0), || {
+                format!("N={n},H={h},d={d}: closed form {cf} vs infimum {inf}")
+            })
+        },
+    );
+}
+
+/// Random d-regular matrices never beat the cyclic matrix (Lemma 1).
+#[test]
+fn prop_cyclic_is_optimal_among_random() {
+    forall(
+        60,
+        0xC2,
+        |rng: &mut Rng| {
+            let n = gen::usize_in(rng, 4, 24);
+            let h = gen::usize_in(rng, n / 2 + 1, n - 1);
+            let d = gen::usize_in(rng, 1, n - 1);
+            let rand = TaskMatrix::random(n, d, rng);
+            (n, h, d, rand)
+        },
+        |(n, h, d, rand)| {
+            let cyc = TaskMatrix::cyclic(*n, *d).lemma1_objective(*h);
+            let r = rand.lemma1_objective(*h);
+            ensure(cyc <= r + 1e-10, || {
+                format!("N={n},H={h},d={d}: cyclic {cyc} > random {r}")
+            })
+        },
+    );
+}
+
+/// Every subset is covered exactly d times under any assignment.
+#[test]
+fn prop_cyclic_coverage_balanced() {
+    forall(
+        60,
+        0xC3,
+        |rng: &mut Rng| {
+            let n = gen::usize_in(rng, 3, 40);
+            let d = gen::usize_in(rng, 1, n);
+            let assign = Assignment::draw(n, rng);
+            (n, d, assign)
+        },
+        |(n, d, assign)| {
+            let s = TaskMatrix::cyclic(*n, *d);
+            let mut count = vec![0usize; *n];
+            for i in 0..*n {
+                for sub in assign.subsets_for(s.row(assign.tasks[i])) {
+                    count[sub] += 1;
+                }
+            }
+            ensure(count.iter().all(|&c| c == *d), || format!("coverage {count:?}"))
+        },
+    );
+}
+
+/// Encoder linearity: encoding a scaled gradient matrix scales the code.
+#[test]
+fn prop_encoder_linearity() {
+    forall(
+        40,
+        0xC4,
+        |rng: &mut Rng| {
+            let n = gen::usize_in(rng, 3, 12);
+            let q = gen::usize_in(rng, 1, 8);
+            let d = gen::usize_in(rng, 1, n);
+            let rows: Vec<Vec<f32>> = (0..n).map(|_| gen::vec_f32(rng, q, 5.0)).collect();
+            let alpha = rng.f32() * 4.0 - 2.0;
+            let assign = Assignment::draw(n, rng);
+            (rows, d, alpha, assign)
+        },
+        |(rows, d, alpha, assign)| {
+            let n = rows.len();
+            let g = Mat::from_rows(rows);
+            let scaled_rows: Vec<Vec<f32>> =
+                rows.iter().map(|r| r.iter().map(|x| alpha * x).collect()).collect();
+            let g2 = Mat::from_rows(&scaled_rows);
+            let s = TaskMatrix::cyclic(n, *d);
+            for i in 0..n {
+                let a = encode_coded(&g, s.row(assign.tasks[i]), assign);
+                let b = encode_coded(&g2, s.row(assign.tasks[i]), assign);
+                for j in 0..a.len() {
+                    let want = alpha * a[j];
+                    ensure((b[j] - want).abs() <= 1e-3 * want.abs().max(1.0), || {
+                        format!("linearity: {} vs {}", b[j], want)
+                    })?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Monte-Carlo Lemma 1: the empirical objective matches the closed form for
+/// arbitrary d-regular matrices (validates eq. (38)–(41) end to end).
+#[test]
+fn prop_lemma1_monte_carlo_matches() {
+    forall(
+        8,
+        0xC5,
+        |rng: &mut Rng| {
+            let n = gen::usize_in(rng, 6, 16);
+            let h = gen::usize_in(rng, n / 2 + 1, n - 1);
+            let d = gen::usize_in(rng, 1, n - 1);
+            let m = TaskMatrix::random(n, d, rng);
+            let seed = rng.next_u64();
+            (h, m, seed)
+        },
+        |(h, m, seed)| {
+            let mut rng = Rng::new(*seed);
+            let mc = m.lemma1_monte_carlo(*h, 30_000, &mut rng);
+            let cf = m.lemma1_objective(*h);
+            ensure((mc - cf).abs() < 0.2 * cf.max(1e-4), || {
+                format!("mc {mc} vs cf {cf}")
+            })
+        },
+    );
+}

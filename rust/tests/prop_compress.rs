@@ -1,0 +1,145 @@
+//! Property tests on the compression operators (Definition 2).
+
+use lad::compress::{measure_bias_delta, Compressor, Identity, Qsgd, RandK, TopK};
+use lad::proptest_lite::{ensure, forall, gen};
+use lad::util::rng::Rng;
+
+/// Unbiasedness (eq. 9) for the unbiased operators, across shapes/scales.
+#[test]
+fn prop_unbiased_operators_are_unbiased() {
+    forall(
+        12,
+        0xB1,
+        |rng: &mut Rng| {
+            let q = gen::usize_in(rng, 4, 64);
+            let k = gen::usize_in(rng, 1, q);
+            let scale = 10f32.powi(gen::usize_in(rng, 0, 3) as i32 - 1);
+            let g = gen::vec_f32(rng, q, scale);
+            let seed = rng.next_u64();
+            (g, k, seed)
+        },
+        |(g, k, seed)| {
+            let mut rng = Rng::new(*seed);
+            let ops: Vec<Box<dyn Compressor>> =
+                vec![Box::new(Identity), Box::new(RandK::new(*k)), Box::new(Qsgd::new(8))];
+            for op in ops {
+                let (bias, _) = measure_bias_delta(op.as_ref(), g, 8_000, &mut rng);
+                ensure(bias < 0.05, || format!("{}: bias {bias}", op.name()))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// δ bound (eq. 10): measured relative error ≤ theoretical δ (+ slack).
+#[test]
+fn prop_delta_bound_holds() {
+    forall(
+        12,
+        0xB2,
+        |rng: &mut Rng| {
+            let q = gen::usize_in(rng, 8, 64);
+            let k = gen::usize_in(rng, 1, q);
+            let g = gen::vec_f32(rng, q, 3.0);
+            let seed = rng.next_u64();
+            (g, k, seed)
+        },
+        |(g, k, seed)| {
+            let mut rng = Rng::new(*seed);
+            let q = g.len();
+            for op in [RandK::new(*k)] {
+                let bound = op.delta(q).unwrap();
+                let (_, d) = measure_bias_delta(&op, g, 8_000, &mut rng);
+                ensure(d <= bound * 1.25 + 0.05, || {
+                    format!("{}: δ̂ {d} > bound {bound}", op.name())
+                })?;
+            }
+            let qs = Qsgd::new(4);
+            let bound = qs.delta(q).unwrap();
+            let (_, d) = measure_bias_delta(&qs, g, 8_000, &mut rng);
+            ensure(d <= bound * 1.25 + 0.05, || format!("qsgd: δ̂ {d} > bound {bound}"))
+        },
+    );
+}
+
+/// Wire size is monotone in K and never exceeds dense f32.
+#[test]
+fn prop_bits_monotone_and_bounded() {
+    forall(
+        40,
+        0xB3,
+        |rng: &mut Rng| {
+            let q = gen::usize_in(rng, 8, 128);
+            let g = gen::vec_f32(rng, q, 1.0);
+            let seed = rng.next_u64();
+            (g, seed)
+        },
+        |(g, seed)| {
+            let mut rng = Rng::new(*seed);
+            let q = g.len();
+            let mut prev = 0usize;
+            for k in [1usize, q / 4 + 1, q / 2 + 1] {
+                let c = RandK::new(k.min(q)).compress(g, &mut rng);
+                ensure(c.bits >= prev, || format!("bits not monotone at k={k}"))?;
+                prev = c.bits;
+            }
+            let dense = Identity.compress(g, &mut rng);
+            let sparse = RandK::new((q / 4).max(1)).compress(g, &mut rng);
+            ensure(sparse.bits < dense.bits, || {
+                format!("rand-k ({}) not cheaper than dense ({})", sparse.bits, dense.bits)
+            })
+        },
+    );
+}
+
+/// Support size: rand-K and top-K keep exactly K nonzeros (for generic g).
+#[test]
+fn prop_sparsifiers_support_size() {
+    forall(
+        40,
+        0xB4,
+        |rng: &mut Rng| {
+            let q = gen::usize_in(rng, 4, 64);
+            let k = gen::usize_in(rng, 1, q);
+            // strictly nonzero entries so support is exactly K
+            let g: Vec<f32> =
+                (0..q).map(|_| (rng.f32() + 0.1) * if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+            let seed = rng.next_u64();
+            (g, k, seed)
+        },
+        |(g, k, seed)| {
+            let mut rng = Rng::new(*seed);
+            for op in [&RandK::new(*k) as &dyn Compressor, &TopK::new(*k)] {
+                let c = op.compress(g, &mut rng);
+                let nnz = c.vec.iter().filter(|&&x| x != 0.0).count();
+                ensure(nnz == *k, || format!("{}: nnz {nnz} != k {k}", op.name()))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Top-K reconstruction error is never worse than rand-K in L2 (it is the
+/// L2-optimal K-sparse approximation before scaling).
+#[test]
+fn prop_topk_beats_randk_in_l2() {
+    forall(
+        40,
+        0xB5,
+        |rng: &mut Rng| {
+            let q = gen::usize_in(rng, 8, 64);
+            let k = gen::usize_in(rng, 1, q / 2);
+            let g = gen::vec_f32(rng, q, 5.0);
+            let seed = rng.next_u64();
+            (g, k, seed)
+        },
+        |(g, k, seed)| {
+            let mut rng = Rng::new(*seed);
+            let t = TopK::new(*k).compress(g, &mut rng);
+            let r = RandK::new(*k).compress(g, &mut rng);
+            let et = lad::util::math::dist_sq(&t.vec, g);
+            let er = lad::util::math::dist_sq(&r.vec, g);
+            ensure(et <= er + 1e-6, || format!("top-k {et} > rand-k {er}"))
+        },
+    );
+}

@@ -1,0 +1,102 @@
+//! Theory ↔ experiment cross-checks: the closed-form constants of §VI
+//! against Monte-Carlo measurements from the actual implementation.
+
+use lad::coding::task_matrix::TaskMatrix;
+use lad::coding::{encode_coded, Assignment};
+use lad::data::linreg::LinRegDataset;
+use lad::theory::TheoryParams;
+use lad::util::math::{dist_sq, Mat};
+use lad::util::rng::Rng;
+
+/// Lemma 2: E‖g_i − μ‖² ≤ (N−d)/(d(N−1)) β², with β² the empirical
+/// heterogeneity of the dataset at the evaluation point.
+#[test]
+fn lemma2_coded_variance_bound_holds_empirically() {
+    let (n, q) = (20usize, 12usize);
+    let mut rng = Rng::new(91);
+    let ds = LinRegDataset::generate(n, q, 0.5, &mut rng);
+    let x = rng.gauss_vec(q);
+    let mut g = Mat::zeros(n, q);
+    ds.grad_matrix(&x, &mut g);
+    let beta_sq = ds.heterogeneity_at(&x);
+    let mu: Vec<f32> = (0..q)
+        .map(|j| (0..n).map(|k| g.row(k)[j]).sum::<f32>() / n as f32)
+        .collect();
+    for d in [2usize, 5, 10, 19] {
+        let s = TaskMatrix::cyclic(n, d);
+        let trials = 4000;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let assign = Assignment::draw(n, &mut rng);
+            let coded = encode_coded(&g, s.row(assign.tasks[0]), &assign);
+            acc += dist_sq(&coded, &mu);
+        }
+        let measured = acc / trials as f64;
+        let bound = (n - d) as f64 / (d as f64 * (n - 1) as f64) * beta_sq;
+        assert!(
+            measured <= bound * 1.1 + 1e-9,
+            "d={d}: measured {measured} > bound {bound}"
+        );
+        // and the bound is reasonably tight (within 3x)
+        assert!(measured * 3.0 > bound * 0.9, "d={d}: bound too loose? {measured} vs {bound}");
+    }
+}
+
+/// The d = N special case: coded messages are exactly μ (variance 0).
+#[test]
+fn lemma2_d_equals_n_is_exact() {
+    let (n, q) = (12usize, 8usize);
+    let mut rng = Rng::new(92);
+    let ds = LinRegDataset::generate(n, q, 0.3, &mut rng);
+    let x = rng.gauss_vec(q);
+    let mut g = Mat::zeros(n, q);
+    ds.grad_matrix(&x, &mut g);
+    let mu: Vec<f32> = (0..q)
+        .map(|j| (0..n).map(|k| g.row(k)[j]).sum::<f32>() / n as f32)
+        .collect();
+    let s = TaskMatrix::cyclic(n, n);
+    let assign = Assignment::draw(n, &mut rng);
+    for i in 0..n {
+        let coded = encode_coded(&g, s.row(assign.tasks[i]), &assign);
+        assert!(dist_sq(&coded, &mu) < 1e-6);
+    }
+}
+
+/// Theory: the error-term ordering ε(d=1) > ε(d=10) > ε(d=N) and the
+/// crossover-vs-baseline threshold from the paper's worked example.
+#[test]
+fn error_term_orderings() {
+    let mk = |d: usize| {
+        TheoryParams::new(100, 65, d).with_kappa(1.5).with_beta(1.0)
+    };
+    assert!(mk(1).error_term_lad_bigo() > mk(10).error_term_lad_bigo());
+    assert!(mk(10).error_term_lad_bigo() > mk(99).error_term_lad_bigo());
+    // paper: LAD beats O(β²κ) baseline from d ≥ 3 at N=100,H=65,κ=1.5
+    assert!(mk(2).error_term_lad_bigo() > mk(2).error_term_baseline());
+    assert!(mk(3).error_term_lad_bigo() <= mk(3).error_term_baseline());
+}
+
+/// Empirical κ of CWTM feeds the theory and predicts a finite error term.
+#[test]
+fn measured_kappa_gives_finite_bound() {
+    use lad::aggregation::{kappa::estimate_kappa, Cwtm};
+    let mut rng = Rng::new(93);
+    let k = estimate_kappa(&Cwtm::new(0.1), 16, 4, 10, 30, &mut rng);
+    assert!(k.is_finite() && k > 0.0);
+    let p = TheoryParams::new(20, 16, 10).with_kappa(k).with_beta(1.0);
+    let e = p.error_term_lad_bigo();
+    assert!(e.is_finite() && e > 0.0);
+}
+
+/// Assumption-2 scaling: empirical β² grows roughly linearly in σ_H.
+#[test]
+fn heterogeneity_scales_with_sigma() {
+    let mut prev = 0.0;
+    for (i, sigma) in [0.0f64, 0.25, 0.5, 1.0].iter().enumerate() {
+        let mut rng = Rng::new(100 + i as u64);
+        let ds = LinRegDataset::generate(40, 20, *sigma, &mut rng);
+        let b = ds.heterogeneity_at(&vec![0.0; 20]);
+        assert!(b >= prev * 0.7, "σ={sigma}: β²={b} vs prev {prev}");
+        prev = b;
+    }
+}
