@@ -1,16 +1,53 @@
 //! Micro-bench: aggregation rules at the paper's scale (N=100, Q=100) and
-//! at transformer scale (N=8, Q=0.4M) — the L3 hot path.
+//! at transformer scale (N=8, Q=0.4M) — the L3 hot path — plus the
+//! serial-vs-threaded comparison for the O(N²Q) pairwise-distance rules
+//! (Krum, Multi-Krum, NNM), whose parallel pass is bit-identical to serial.
 
 use lad::aggregation::{
     Aggregator, CoordinateMedian, Cwtm, Faba, GeometricMedian, Krum, Mcc, Mean, MultiKrum, Nnm,
     Tgn,
 };
 use lad::bench_support::{run, section};
+use lad::util::parallel::Parallelism;
 use lad::util::rng::Rng;
 
 fn family(n: usize, q: usize, seed: u64) -> Vec<Vec<f32>> {
     let mut rng = Rng::new(seed);
     (0..n).map(|_| rng.gauss_vec(q)).collect()
+}
+
+fn threaded_pairwise_section(title: &str, msgs: &[Vec<f32>], f: usize) {
+    let par = Parallelism::auto();
+    let t = par.threads();
+    section(&format!("{title} — pairwise rules, serial vs {t} threads"));
+    let pairs: Vec<(&str, Box<dyn Aggregator>, Box<dyn Aggregator>)> = vec![
+        (
+            "krum",
+            Box::new(Krum::new(f)),
+            Box::new(Krum::new(f).with_parallelism(par)),
+        ),
+        (
+            "multi-krum",
+            Box::new(MultiKrum::new(f)),
+            Box::new(MultiKrum::new(f).with_parallelism(par)),
+        ),
+        (
+            "cwtm-nnm",
+            Box::new(Nnm::new(f, Box::new(Cwtm::new(0.1)))),
+            Box::new(Nnm::new(f, Box::new(Cwtm::new(0.1))).with_parallelism(par)),
+        ),
+    ];
+    for (name, serial, threaded) in &pairs {
+        // sanity first: the two paths must agree bit-for-bit
+        assert_eq!(
+            serial.aggregate(msgs),
+            threaded.aggregate(msgs),
+            "{name}: parallel != serial"
+        );
+        let s = run(&format!("{name} (1 thread)"), 200.0, || serial.aggregate(msgs));
+        let p = run(&format!("{name} ({t} threads)"), 200.0, || threaded.aggregate(msgs));
+        println!("      speedup {:.2}x (median)", s.median_ns / p.median_ns);
+    }
 }
 
 fn main() {
@@ -37,4 +74,11 @@ fn main() {
     for rule in &rules {
         run(&rule.name(), 250.0, || rule.aggregate(&big));
     }
+
+    // threaded variants: the dense-N case (distance matrix bound) and the
+    // fat-Q case (few rows, huge dot products)
+    threaded_pairwise_section("N=100 Q=100", &msgs, 20);
+    let wide = family(100, 4096, 3);
+    threaded_pairwise_section("N=100 Q=4096", &wide, 20);
+    threaded_pairwise_section("N=8 Q=409k", &big, 2);
 }

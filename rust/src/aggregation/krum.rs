@@ -4,16 +4,44 @@
 //! messages; Krum returns the argmin message, Multi-Krum averages the
 //! m = n − f best-scored messages.
 
-use super::{check_family, Aggregator};
+use super::{check_family, par_gate, Aggregator};
 use crate::util::math::mean_of;
+use crate::util::parallel::{par_map, Parallelism};
 
-fn scores(msgs: &[Vec<f32>], f: usize) -> Vec<f64> {
+fn scores(msgs: &[Vec<f32>], f: usize, par: Parallelism) -> Vec<f64> {
     let n = msgs.len();
     // number of neighbors summed per Krum: n - f - 2, floored at 1
     let m = n.saturating_sub(f + 2).max(1);
-    // Perf: symmetric pairwise distances via the Gram expansion with cached
-    // norms — halves the dominant dot-product count (EXPERIMENTS.md §Perf).
     let norms: Vec<f64> = msgs.iter().map(|v| crate::util::math::norm_sq(v)).collect();
+    let q = msgs.first().map(|v| v.len()).unwrap_or(0);
+    if !par.is_serial() && par_gate(n, q) {
+        // Row-parallel: each score only needs row i's distances, so no
+        // shared matrix at all. Each d(i,j) is computed twice (once per
+        // row), but the rows split across T threads — wall-clock beats the
+        // halved serial pass for T ≥ 2. Bit-identical to the serial path:
+        // f64 +/× are commutative and both paths evaluate
+        // norms[i]+norms[j]−2·dot(i,j) with the same accumulation order.
+        return par_map(par, msgs, |i, mi| {
+            let mut dists: Vec<f64> = Vec::with_capacity(n - 1);
+            for (j, mj) in msgs.iter().enumerate() {
+                if j == i {
+                    continue;
+                }
+                dists.push(
+                    (norms[i] + norms[j] - 2.0 * crate::util::math::dot(mi, mj) as f64)
+                        .max(0.0),
+                );
+            }
+            let k = m.min(dists.len());
+            if k < dists.len() {
+                dists.select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));
+            }
+            dists[..k].iter().sum()
+        });
+    }
+    // Serial perf: symmetric pairwise distances via the Gram expansion with
+    // cached norms — halves the dominant dot-product count
+    // (EXPERIMENTS.md §Perf).
     let mut dist = vec![0.0f64; n * n];
     for i in 0..n {
         for j in i + 1..n {
@@ -42,18 +70,25 @@ fn scores(msgs: &[Vec<f32>], f: usize) -> Vec<f64> {
 #[derive(Debug, Clone, Copy)]
 pub struct Krum {
     f: usize,
+    par: Parallelism,
 }
 
 impl Krum {
     pub fn new(f: usize) -> Self {
-        Krum { f }
+        Krum { f, par: Parallelism::serial() }
+    }
+
+    /// Enable the row-parallel O(N²Q) distance pass.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
     }
 }
 
 impl Aggregator for Krum {
     fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
         check_family(msgs);
-        let s = scores(msgs, self.f);
+        let s = scores(msgs, self.f, self.par);
         let best = s
             .iter()
             .enumerate()
@@ -72,11 +107,18 @@ impl Aggregator for Krum {
 #[derive(Debug, Clone, Copy)]
 pub struct MultiKrum {
     f: usize,
+    par: Parallelism,
 }
 
 impl MultiKrum {
     pub fn new(f: usize) -> Self {
-        MultiKrum { f }
+        MultiKrum { f, par: Parallelism::serial() }
+    }
+
+    /// Enable the row-parallel O(N²Q) distance pass.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
     }
 }
 
@@ -85,7 +127,7 @@ impl Aggregator for MultiKrum {
         check_family(msgs);
         let n = msgs.len();
         let keep = n.saturating_sub(self.f).max(1);
-        let s = scores(msgs, self.f);
+        let s = scores(msgs, self.f, self.par);
         let mut idx: Vec<usize> = (0..n).collect();
         idx.sort_by(|&a, &b| s[a].partial_cmp(&s[b]).unwrap());
         let selected: Vec<&[f32]> =
@@ -142,5 +184,23 @@ mod tests {
         // f too large relative to n must still produce a sane answer
         let out = Krum::new(5).aggregate(&msgs);
         assert!(out[0] == 1.0 || out[0] == 2.0);
+    }
+
+    #[test]
+    fn parallel_scores_are_bit_identical_to_serial() {
+        // sized to clear the par gate (n²·q ≥ 2¹⁶)
+        let mut rng = Rng::new(4);
+        let msgs: Vec<Vec<f32>> = (0..40).map(|_| rng.gauss_vec(64)).collect();
+        let serial = scores(&msgs, 8, Parallelism::serial());
+        for threads in [2usize, 3, 8] {
+            let par = scores(&msgs, 8, Parallelism::new(threads));
+            assert_eq!(serial, par, "threads={threads}");
+        }
+        let a = Krum::new(8).aggregate(&msgs);
+        let b = Krum::new(8).with_parallelism(Parallelism::new(8)).aggregate(&msgs);
+        assert_eq!(a, b);
+        let a = MultiKrum::new(8).aggregate(&msgs);
+        let b = MultiKrum::new(8).with_parallelism(Parallelism::new(8)).aggregate(&msgs);
+        assert_eq!(a, b);
     }
 }

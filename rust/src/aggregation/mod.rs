@@ -4,10 +4,60 @@
 //! messages (honest + Byzantine, unlabeled) to one vector. Rules that need
 //! an assumed Byzantine count take `f = N − H` at construction.
 //!
-//! The zoo covers every baseline the paper references: averaging (VA),
-//! coordinate-wise trimmed mean (CWTM [7]), coordinate-wise median [4],
-//! geometric median [6,8], (Multi-)Krum [3], FABA [5], maximum-correntropy
-//! (MCC [9]), norm-thresholding (TGN [19]) and NNM pre-aggregation [23].
+//! # The κ-robustness constant
+//!
+//! Definition 1 calls `agg` **(f, κ)-robust** when, for every family of H
+//! honest messages `z₁..z_H` (mean `z̄`) and any f Byzantine messages,
+//!
+//! ```text
+//! ‖agg(z₁..z_H, z̃₁..z̃_f) − z̄‖² ≤ κ · (1/H) Σᵢ ‖zᵢ − z̄‖²
+//! ```
+//!
+//! i.e. the aggregate's deviation from the honest mean is bounded by κ times
+//! the honest empirical variance, **uniformly over adversarial inputs**.
+//! Plain averaging has no finite κ (one spike moves the mean arbitrarily);
+//! every robust rule below admits a finite κ for f < N/2, and κ enters the
+//! convergence bounds (Theorems 1–2) multiplicatively — smaller κ means a
+//! smaller error floor. [`kappa::estimate_kappa`] lower-bounds κ
+//! empirically; cyclic gradient coding (LAD) shrinks the *variance* term κ
+//! multiplies, which is how coding and robustness compose.
+//!
+//! # Rule zoo: cost and robustness at a glance
+//!
+//! For N messages of dimension Q, with f the assumed Byzantine count:
+//!
+//! | Rule                          | Per-call cost            | Notes |
+//! |-------------------------------|--------------------------|-------|
+//! | [`Mean`] (VA)                 | O(NQ)                    | κ unbounded — baseline only |
+//! | [`Cwtm`] (trimmed mean [7])   | O(NQ) expected           | per-coordinate double `select_nth` |
+//! | [`CoordinateMedian`] [4]      | O(NQ) expected           | linear-time selection per coordinate |
+//! | [`GeometricMedian`] [6,8]     | O(T·NQ), T Weiszfeld iters | breakdown point 1/2 |
+//! | [`Krum`] / [`MultiKrum`] [3]  | O(N²Q)                   | pairwise distances dominate; row-parallel |
+//! | [`Mcc`] (correntropy [9])     | O(T·NQ), T reweight iters | adaptive Gaussian kernel |
+//! | [`Faba`] [5]                  | O(f·NQ)                  | f farthest-from-mean removals |
+//! | [`Tgn`] (norm filter [19])    | O(NQ + N log N)          | drops ⌈βN⌉ largest norms |
+//! | [`Nnm`] pre-aggregation [23]  | O(N²Q) + inner rule      | row-parallel mixing pass |
+//!
+//! The two O(N²Q) rules accept a [`Parallelism`] via `with_parallelism`
+//! (wired from [`TrainConfig::threads`] by [`from_config`]); their parallel
+//! and serial passes are bit-identical.
+//!
+//! # Example
+//!
+//! ```
+//! use lad::aggregation::{Aggregator, Cwtm, Krum};
+//!
+//! // 9 honest messages near (1, 2) and one adversarial spike
+//! let mut msgs = vec![vec![1.0f32, 2.0]; 9];
+//! msgs.push(vec![1e6, -1e6]);
+//!
+//! let trimmed = Cwtm::new(0.2).aggregate(&msgs);
+//! assert!((trimmed[0] - 1.0).abs() < 1e-5 && (trimmed[1] - 2.0).abs() < 1e-5);
+//!
+//! // Krum returns one of the honest inputs
+//! let picked = Krum::new(1).aggregate(&msgs);
+//! assert_eq!(picked, vec![1.0, 2.0]);
+//! ```
 
 pub mod cwtm;
 pub mod faba;
@@ -21,6 +71,7 @@ pub mod nnm;
 pub mod tgn;
 
 use crate::config::{AggregatorKind, TrainConfig};
+use crate::util::parallel::Parallelism;
 
 /// A robust aggregation rule agg(·) (Definition 1).
 pub trait Aggregator: Send + Sync {
@@ -41,21 +92,23 @@ pub use nnm::Nnm;
 pub use tgn::Tgn;
 
 /// Build the aggregator described by a config (including NNM wrapping).
+/// The O(N²Q) rules pick up `cfg.threads` for their row-parallel passes.
 pub fn from_config(cfg: &TrainConfig) -> Box<dyn Aggregator> {
     let f = cfg.n_byz();
+    let par = Parallelism::new(cfg.threads);
     let base: Box<dyn Aggregator> = match cfg.aggregator {
         AggregatorKind::Mean => Box::new(Mean),
         AggregatorKind::Cwtm => Box::new(Cwtm::new(cfg.trim_frac)),
         AggregatorKind::Median => Box::new(CoordinateMedian),
         AggregatorKind::GeometricMedian => Box::new(GeometricMedian::default()),
-        AggregatorKind::Krum => Box::new(Krum::new(f)),
-        AggregatorKind::MultiKrum => Box::new(MultiKrum::new(f)),
+        AggregatorKind::Krum => Box::new(Krum::new(f).with_parallelism(par)),
+        AggregatorKind::MultiKrum => Box::new(MultiKrum::new(f).with_parallelism(par)),
         AggregatorKind::Mcc => Box::new(Mcc::default()),
         AggregatorKind::Faba => Box::new(Faba::new(f)),
         AggregatorKind::Tgn => Box::new(Tgn::new(cfg.trim_frac)),
     };
     if cfg.nnm {
-        Box::new(Nnm::new(f, base))
+        Box::new(Nnm::new(f, base).with_parallelism(par))
     } else {
         base
     }
@@ -67,6 +120,13 @@ pub(crate) fn check_family(msgs: &[Vec<f32>]) -> usize {
     let q = msgs[0].len();
     assert!(msgs.iter().all(|m| m.len() == q), "ragged message family");
     q
+}
+
+/// Size gate for the row-parallel O(N²Q) passes: below roughly 2¹⁶ units of
+/// distance work the spawn overhead dominates. Purely a performance
+/// heuristic — the serial and parallel passes are bit-identical either way.
+pub(crate) fn par_gate(n: usize, q: usize) -> bool {
+    n.saturating_mul(n).saturating_mul(q.max(1)) >= 1 << 16
 }
 
 #[cfg(test)]

@@ -7,29 +7,64 @@
 //! compute squared distances via the Gram expansion ‖a−b‖² = ‖a‖²+‖b‖²−2a·b
 //! with cached norms, then select the n−f nearest with a partial sort.
 
-use super::{check_family, Aggregator};
+use super::{check_family, par_gate, Aggregator};
 use crate::util::math::{axpy, dot, norm_sq, scale};
+use crate::util::parallel::{par_map, Parallelism};
 
 pub struct Nnm {
     f: usize,
     inner: Box<dyn Aggregator>,
+    par: Parallelism,
 }
 
 impl Nnm {
     pub fn new(f: usize, inner: Box<dyn Aggregator>) -> Self {
-        Nnm { f, inner }
+        Nnm { f, inner, par: Parallelism::serial() }
+    }
+
+    /// Enable the row-parallel O(N²Q) mixing pass.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
     }
 
     /// The mixing step alone (exposed for tests and ablation).
     ///
-    /// Perf: the O(n²) distance matrix is computed once, symmetrically
-    /// (d(i,j) = d(j,i)), via the Gram expansion with cached norms — this
-    /// halves the dominant dot-product count (see EXPERIMENTS.md §Perf).
+    /// Perf: serially, the O(n²) distance matrix is computed once,
+    /// symmetrically (d(i,j) = d(j,i)), via the Gram expansion with cached
+    /// norms — halving the dominant dot-product count (EXPERIMENTS.md
+    /// §Perf). With `threads > 1` each mixed row is produced independently
+    /// (its own distances, selection and average), which re-computes each
+    /// d(i,j) once per side but splits rows across threads — a wall-clock
+    /// win from 2 threads up, with bit-identical output (commutative f64
+    /// +/× and identical per-row evaluation order).
     pub fn mix(&self, msgs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         let q = check_family(msgs);
         let n = msgs.len();
         let keep = n.saturating_sub(self.f).max(1);
         let norms: Vec<f64> = msgs.iter().map(|m| norm_sq(m)).collect();
+        if !self.par.is_serial() && par_gate(n, q) {
+            return par_map(self.par, msgs, |i, mi| {
+                let mut d: Vec<(f64, usize)> = Vec::with_capacity(n);
+                for (j, mj) in msgs.iter().enumerate() {
+                    let dij = if j == i {
+                        0.0
+                    } else {
+                        (norms[i] + norms[j] - 2.0 * dot(mi, mj) as f64).max(0.0)
+                    };
+                    d.push((dij, j));
+                }
+                if keep < n {
+                    d.select_nth_unstable_by(keep - 1, |a, b| a.0.total_cmp(&b.0));
+                }
+                let mut y = vec![0.0f32; q];
+                for &(_, j) in &d[..keep] {
+                    axpy(1.0, &msgs[j], &mut y);
+                }
+                scale(&mut y, 1.0 / keep as f32);
+                y
+            });
+        }
         // symmetric distance matrix, upper triangle computed once
         let mut dist = vec![0.0f64; n * n];
         for i in 0..n {
@@ -134,6 +169,19 @@ mod tests {
             err_mixed <= err_plain * 1.5,
             "nnm {err_mixed} should not be much worse than plain {err_plain}"
         );
+    }
+
+    #[test]
+    fn parallel_mix_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(5);
+        let msgs: Vec<Vec<f32>> = (0..40).map(|_| rng.gauss_vec(64)).collect();
+        let serial = Nnm::new(6, Box::new(Mean)).mix(&msgs);
+        for threads in [2usize, 8] {
+            let par = Nnm::new(6, Box::new(Mean))
+                .with_parallelism(Parallelism::new(threads))
+                .mix(&msgs);
+            assert_eq!(serial, par, "threads={threads}");
+        }
     }
 
     #[test]

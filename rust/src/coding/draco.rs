@@ -12,11 +12,22 @@
 use crate::util::math::{axpy, dist_sq, Mat};
 
 /// Decode failure: some group had no majority cluster.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum DecodeError {
-    #[error("group {group} has no strict majority agreement")]
     NoMajority { group: usize },
 }
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::NoMajority { group } => {
+                write!(f, "group {group} has no strict majority agreement")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 /// Fractional-repetition scheme: device → group, group → subset chunk.
 #[derive(Debug, Clone)]

@@ -2,6 +2,22 @@
 //! (§IV, Lemma 1), per-iteration random assignment (Algorithm 1, lines 3–6),
 //! the coded-vector encoder (eq. 5), and the DRACO fractional-repetition
 //! baseline (§VII-A, [13]).
+//!
+//! How the pieces compose, per iteration t:
+//!
+//! 1. [`TaskMatrix::cyclic`] fixes Ŝ once per run — row i covers slots
+//!    {i, …, i+d−1 mod N}, the column-balanced layout attaining Lemma 1's
+//!    variance infimum (N−H)(N−d) / (dH(N−1)N).
+//! 2. [`Assignment::draw`] samples the two uniform permutations (T^t, p^t)
+//!    that randomize which device runs which task and which dataset subset
+//!    hides behind each slot — the source of LAD's unbiasedness (eq. 44).
+//! 3. [`encode_coded_into`] produces g_i = (1/d) Σ_{k∈row} ∇f_{p_k}(x), a
+//!    d-row gather + axpy over the per-subset gradient matrix: O(dQ) per
+//!    device, O(NdQ) per iteration — the L3 hot path that
+//!    `util::parallel` distributes across devices.
+//! 4. [`DracoScheme`] is the exact-recovery baseline: fractional-repetition
+//!    groups + majority-vote decode, O(r²Q) per group, recovering
+//!    (1/N)∇F exactly while every group keeps an honest majority.
 
 pub mod assignment;
 pub mod draco;

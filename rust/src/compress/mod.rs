@@ -1,16 +1,28 @@
 //! Communication compression operators (Definition 2) with bit accounting.
 //!
 //! Com-LAD requires *unbiased* operators: E[C(g)] = g and
-//! E‖C(g) − g‖² ≤ δ‖g‖². Provided: rand-K sparsification (paper's choice,
-//! δ = Q/K − 1), QSGD stochastic quantization, and — for the ablation —
-//! biased top-K. Every operator reports the exact wire size of its encoded
-//! message so experiments can plot loss vs bits.
+//! E‖C(g) − g‖² ≤ δ‖g‖² (eq. 9–10) — the constant δ enters the error term
+//! of Theorem 1 through κ₁..κ₄, which is why the biased top-K is ablation
+//! only. Every operator reports the exact wire size of its encoded message
+//! so experiments can plot loss vs bits.
+//!
+//! | Operator     | δ (eq. 10)            | Wire bits per message       |
+//! |--------------|-----------------------|-----------------------------|
+//! | [`Identity`] | 0                     | 32·Q                        |
+//! | [`RandK`]    | Q/K − 1               | K·(32 + ⌈log₂ Q⌉)           |
+//! | [`Qsgd`]     | ≤ min(Q/s², √Q/s)     | 32 + Q·(1 + ⌈log₂(s+1)⌉)    |
+//! | [`TopK`]     | biased (none)         | K·(32 + ⌈log₂ Q⌉)           |
+//!
+//! Batch uplink compression (one private RNG stream per device, thread-count
+//! invariant) is provided by [`compress_batch`] — the step both the fast
+//! trainer and the cluster leader execute per iteration.
 
 pub mod qsgd;
 pub mod rand_k;
 pub mod top_k;
 
 use crate::config::CompressionKind;
+use crate::util::parallel::{par_map_mut, Parallelism};
 use crate::util::rng::Rng;
 
 /// A compressed message: the dense reconstruction the server aggregates,
@@ -59,6 +71,34 @@ pub fn from_kind(kind: CompressionKind) -> Box<dyn Compressor> {
     }
 }
 
+/// Below this many total elements (messages × dim), per-device compression
+/// runs on the calling thread — spawn overhead would dominate. Purely a
+/// performance gate: each message owns its RNG stream, so serial and
+/// parallel execution are bit-identical regardless.
+const PAR_MIN_ELEMS: usize = 4096;
+
+/// Compress one message per pre-split RNG stream (device order), in
+/// parallel, returning the dense reconstructions and the total wire bits.
+///
+/// This is the uplink step of Algorithms 1–2 as both the fast trainer and
+/// the threaded cluster leader execute it. Determinism contract: `rngs[i]`
+/// is device i's private stream (see [`Rng::split`]); because no stream is
+/// shared, any thread count — including 1 — consumes identical randomness
+/// and produces identical messages.
+pub fn compress_batch(
+    comp: &dyn Compressor,
+    msgs: &[&[f32]],
+    rngs: &mut [Rng],
+    par: Parallelism,
+) -> (Vec<Vec<f32>>, u64) {
+    assert_eq!(msgs.len(), rngs.len(), "one RNG stream per message");
+    let q = msgs.first().map(|m| m.len()).unwrap_or(0);
+    let par = if msgs.len() * q >= PAR_MIN_ELEMS { par } else { Parallelism::serial() };
+    let compressed = par_map_mut(par, rngs, |i, rng| comp.compress(msgs[i], rng));
+    let bits = compressed.iter().map(|c| c.bits as u64).sum();
+    (compressed.into_iter().map(|c| c.vec).collect(), bits)
+}
+
 /// Empirically verify unbiasedness and measure δ̂ (used by tests and the
 /// compression ablation bench): returns (max |E[C(g)]−g| per coordinate /
 /// ‖g‖, E‖C(g)−g‖² / ‖g‖²).
@@ -97,6 +137,30 @@ mod tests {
         let c = Identity.compress(&g, &mut rng);
         assert_eq!(c.vec, g);
         assert_eq!(c.bits, 96);
+    }
+
+    #[test]
+    fn compress_batch_is_thread_count_invariant() {
+        use crate::util::rng::Rng;
+        // sized above the gate so the parallel path engages
+        let mut gen = Rng::new(9);
+        let msgs_owned: Vec<Vec<f32>> = (0..64).map(|_| gen.gauss_vec(128)).collect();
+        let msgs: Vec<&[f32]> = msgs_owned.iter().map(|m| m.as_slice()).collect();
+        let comp = RandK::new(17);
+        let parent = Rng::new(1234);
+        let mut rngs_serial = parent.split(msgs.len());
+        let (a, bits_a) =
+            compress_batch(&comp, &msgs, &mut rngs_serial, Parallelism::serial());
+        let mut rngs_par = parent.split(msgs.len());
+        let (b, bits_b) =
+            compress_batch(&comp, &msgs, &mut rngs_par, Parallelism::new(8));
+        assert_eq!(a, b, "messages diverged across thread counts");
+        assert_eq!(bits_a, bits_b);
+        // and the streams advanced identically
+        for (x, y) in rngs_serial.iter().zip(&rngs_par) {
+            let (mut x, mut y) = (x.clone(), y.clone());
+            assert_eq!(x.next_u64(), y.next_u64());
+        }
     }
 
     #[test]

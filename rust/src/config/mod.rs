@@ -160,6 +160,16 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Log every `log_every` iterations (0 = only final).
     pub log_every: usize,
+    /// Worker threads for the device-parallel stages (gradient oracle,
+    /// per-device compression, pairwise-distance aggregation). `1` = serial
+    /// (the default), `0` = all available cores. Any value produces
+    /// bit-identical traces: randomness is pre-split per device, never
+    /// shared across threads (see `util::parallel`). Note: compression
+    /// randomness now always comes from per-device split streams, so runs
+    /// with stochastic compressors (rand-K/QSGD) follow a different — but
+    /// equally seeded-deterministic — trajectory than the pre-parallel
+    /// trainer did; identity-compression runs are unchanged.
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -180,6 +190,7 @@ impl Default for TrainConfig {
             oracle: OracleKind::NativeLinreg,
             seed: 0xC0FFEE,
             log_every: 50,
+            threads: 1,
         }
     }
 }
@@ -256,6 +267,7 @@ fn apply_table(
             "trim_frac" => cfg.trim_frac = need_f64(key, v)?,
             "seed" => cfg.seed = need_usize(key, v)? as u64,
             "log_every" => cfg.log_every = need_usize(key, v)?,
+            "threads" => cfg.threads = need_usize(key, v)?,
             "nnm" => {
                 cfg.nnm = v.as_bool().with_context(|| format!("{key} must be bool"))?
             }
@@ -335,6 +347,15 @@ mod tests {
         assert_eq!(cfg.d, 3);
         assert!(cfg.nnm);
         assert_eq!(cfg.compression, CompressionKind::RandK { k: 30 });
+    }
+
+    #[test]
+    fn threads_key_parses_and_defaults_serial() {
+        assert_eq!(TrainConfig::default().threads, 1);
+        let cfg = TrainConfig::from_toml_str("threads = 8").unwrap();
+        assert_eq!(cfg.threads, 8);
+        let auto = TrainConfig::from_toml_str("threads = 0").unwrap();
+        assert_eq!(auto.threads, 0);
     }
 
     #[test]

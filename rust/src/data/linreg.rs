@@ -7,6 +7,7 @@
 //! ∇f_k(x) = (⟨x, z_k⟩ − y_k)·z_k, F = Σ_k f_k.
 
 use crate::util::math::{dot, Mat};
+use crate::util::parallel::{par_chunks_mut, Parallelism};
 use crate::util::rng::Rng;
 
 /// Generated regression workload.
@@ -55,6 +56,15 @@ impl LinRegDataset {
         }
     }
 
+    /// Row-parallel [`Self::residuals`]; bit-identical for any thread count
+    /// (each residual is an independent dot product).
+    pub fn residuals_par(&self, x: &[f32], out: &mut [f32], par: Parallelism) {
+        assert_eq!(out.len(), self.n());
+        par_chunks_mut(par, out, 1, |k, r| {
+            r[0] = dot(self.z.row(k), x) - self.y[k];
+        });
+    }
+
     /// F(x) = Σ_k ½ r_k².
     pub fn loss(&self, x: &[f32]) -> f64 {
         let mut r = vec![0.0f32; self.n()];
@@ -71,18 +81,25 @@ impl LinRegDataset {
     /// Per-subset gradient matrix G (row k = ∇f_k(x)) — the quantity the
     /// `coded_grad` Pallas kernel computes on the AOT path.
     pub fn grad_matrix(&self, x: &[f32], out: &mut Mat) {
+        self.grad_matrix_par(x, out, Parallelism::serial());
+    }
+
+    /// Row-parallel [`Self::grad_matrix`]: residuals and the rank-1 row
+    /// fills are independent per subset, so rows distribute across threads
+    /// with bit-identical output for any thread count.
+    pub fn grad_matrix_par(&self, x: &[f32], out: &mut Mat, par: Parallelism) {
         assert_eq!(out.rows, self.n());
         assert_eq!(out.cols, self.dim());
         let mut r = vec![0.0f32; self.n()];
-        self.residuals(x, &mut r);
-        for k in 0..self.n() {
+        self.residuals_par(x, &mut r, par);
+        let cols = self.dim();
+        par_chunks_mut(par, &mut out.data, cols, |k, dst| {
             let src = self.z.row(k);
-            let dst = out.row_mut(k);
             let rk = r[k];
             for (d, &s) in dst.iter_mut().zip(src) {
                 *d = rk * s;
             }
-        }
+        });
     }
 
     /// ∇F(x) = Σ_k ∇f_k(x).
@@ -169,6 +186,23 @@ mod tests {
             let rel = (fd - g[j] as f64).abs() / fd.abs().max(1.0);
             assert!(rel < 1e-2, "coord {j}: fd={fd} analytic={}", g[j]);
         }
+    }
+
+    #[test]
+    fn parallel_grad_matrix_matches_serial_bitwise() {
+        let mut rng = Rng::new(9);
+        let ds = LinRegDataset::generate(40, 64, 0.5, &mut rng);
+        let x = rng.gauss_vec(64);
+        let mut a = Mat::zeros(40, 64);
+        let mut b = Mat::zeros(40, 64);
+        ds.grad_matrix(&x, &mut a);
+        ds.grad_matrix_par(&x, &mut b, Parallelism::new(8));
+        assert_eq!(a.data, b.data);
+        let mut ra = vec![0.0f32; 40];
+        let mut rb = vec![0.0f32; 40];
+        ds.residuals(&x, &mut ra);
+        ds.residuals_par(&x, &mut rb, Parallelism::new(8));
+        assert_eq!(ra, rb);
     }
 
     #[test]

@@ -7,6 +7,7 @@ use super::common::{run_variant, ExperimentOutput, Series, Variant};
 use crate::config::{AggregatorKind, AttackKind, TrainConfig};
 use crate::data::linreg::LinRegDataset;
 use crate::theory::TheoryParams;
+use crate::util::parallel::{par_map, Parallelism};
 use crate::util::rng::Rng;
 use crate::Result;
 
@@ -20,6 +21,8 @@ pub struct ByzSweepParams {
     pub lr: f64,
     pub sigma_h: f64,
     pub seed: u64,
+    /// worker threads for the per-B fan-out (0 = all cores)
+    pub threads: usize,
 }
 
 impl Default for ByzSweepParams {
@@ -33,17 +36,22 @@ impl Default for ByzSweepParams {
             lr: 4e-5,
             sigma_h: 0.3,
             seed: 33,
+            threads: 0,
         }
     }
 }
 
 pub fn run(p: &ByzSweepParams) -> Result<ExperimentOutput> {
-    let mut rng = Rng::new(p.seed);
-    let ds = LinRegDataset::generate(p.n, p.q, p.sigma_h, &mut rng);
-    let mut empirical = Series::new(format!("final_loss(lad-cwtm,d={})", p.d));
-    let mut theory = Series::new("eps_lad_eq35");
+    // validate the whole grid before fanning out any training run
     for &b in &p.byz_counts {
         anyhow::ensure!(2 * (p.n - b) > p.n, "B={b} breaks honest majority");
+    }
+    let mut rng = Rng::new(p.seed);
+    let ds = LinRegDataset::generate(p.n, p.q, p.sigma_h, &mut rng);
+    // each B value is an independent training run with its own config and
+    // Rng::new(seed) — the fan-out is bit-identical to the serial sweep
+    let par = Parallelism::new(p.threads);
+    let finals = par_map(par, &p.byz_counts, |_, &b| -> Result<(usize, f64)> {
         let mut cfg = TrainConfig::default();
         cfg.n_devices = p.n;
         cfg.n_honest = p.n - b;
@@ -61,7 +69,13 @@ pub fn run(p: &ByzSweepParams) -> Result<ExperimentOutput> {
             &Variant { label: format!("b{b}"), cfg, draco_r: None },
             p.seed ^ 0xB,
         )?;
-        empirical.push(b as f64, tr.final_loss);
+        Ok((b, tr.final_loss))
+    });
+    let mut empirical = Series::new(format!("final_loss(lad-cwtm,d={})", p.d));
+    let mut theory = Series::new("eps_lad_eq35");
+    for r in finals {
+        let (b, final_loss): (usize, f64) = r?;
+        empirical.push(b as f64, final_loss);
         let tp = TheoryParams::new(p.n, p.n - b.max(1), p.d).with_kappa(1.5);
         theory.push(b as f64, tp.error_term_lad_bigo());
     }

@@ -11,6 +11,7 @@ use crate::runtime::Runtime;
 use crate::server::trainer::{DracoTrainer, Trainer};
 use crate::server::TrainTrace;
 use crate::util::csv::CsvWriter;
+use crate::util::parallel::{par_map, Parallelism};
 use crate::util::rng::Rng;
 use crate::Result;
 use std::path::Path;
@@ -130,6 +131,9 @@ fn make_oracle(ds: &LinRegDataset, kind: OracleKind) -> Result<Box<dyn CodedGrad
 }
 
 /// Run a family of variants over one generated dataset; returns traces.
+/// Variants run concurrently on all available cores (each variant owns its
+/// oracle, model and `Rng::new(run_seed)`, so results are bit-identical to
+/// the serial sweep); use [`run_figure_par`] to control the thread budget.
 pub fn run_figure(
     n: usize,
     q: usize,
@@ -138,16 +142,28 @@ pub fn run_figure(
     data_seed: u64,
     run_seed: u64,
 ) -> Result<Vec<TrainTrace>> {
+    run_figure_par(n, q, sigma_h, variants, data_seed, run_seed, Parallelism::auto())
+}
+
+/// [`run_figure`] with an explicit thread budget for the variant fan-out.
+pub fn run_figure_par(
+    n: usize,
+    q: usize,
+    sigma_h: f64,
+    variants: &[Variant],
+    data_seed: u64,
+    run_seed: u64,
+    par: Parallelism,
+) -> Result<Vec<TrainTrace>> {
     let mut rng = Rng::new(data_seed);
     let ds = LinRegDataset::generate(n, q, sigma_h, &mut rng);
-    variants
-        .iter()
-        .map(|v| {
-            let tr = run_variant(&ds, v, run_seed)?;
-            eprintln!("  {}", tr.summary());
-            Ok(tr)
-        })
-        .collect()
+    par_map(par, variants, |_, v| -> Result<TrainTrace> {
+        let tr = run_variant(&ds, v, run_seed)?;
+        eprintln!("  {}", tr.summary());
+        Ok(tr)
+    })
+    .into_iter()
+    .collect()
 }
 
 #[cfg(test)]

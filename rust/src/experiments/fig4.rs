@@ -5,8 +5,9 @@
 //! Methods: VA, CWTM, CWTM-NNM (all d=1, non-redundant), LAD-CWTM with
 //! d ∈ {5, 10, 20}, LAD-CWTM-NNM (d=10), DRACO.
 
-use super::common::{run_figure, ExperimentOutput, Series, Variant};
+use super::common::{run_figure_par, ExperimentOutput, Series, Variant};
 use crate::config::{AggregatorKind, AttackKind, CompressionKind, OracleKind, TrainConfig};
+use crate::util::parallel::Parallelism;
 use crate::Result;
 
 #[derive(Debug, Clone)]
@@ -21,6 +22,8 @@ pub struct Fig4Params {
     pub draco_r: usize,
     pub oracle: OracleKind,
     pub seed: u64,
+    /// worker threads for the variant fan-out (0 = all cores)
+    pub threads: usize,
 }
 
 impl Default for Fig4Params {
@@ -39,6 +42,7 @@ impl Default for Fig4Params {
             draco_r: 41,
             oracle: OracleKind::NativeLinreg,
             seed: 2026,
+            threads: 0,
         }
     }
 }
@@ -95,7 +99,15 @@ pub fn variants(p: &Fig4Params) -> Vec<Variant> {
 }
 
 pub fn run(p: &Fig4Params) -> Result<ExperimentOutput> {
-    let traces = run_figure(p.n, p.q, p.sigma_h, &variants(p), p.seed, p.seed ^ 0xABCD)?;
+    let traces = run_figure_par(
+        p.n,
+        p.q,
+        p.sigma_h,
+        &variants(p),
+        p.seed,
+        p.seed ^ 0xABCD,
+        Parallelism::new(p.threads),
+    )?;
     Ok(ExperimentOutput {
         name: "fig4_loss_vs_iters".into(),
         x_label: "iter".into(),

@@ -2,8 +2,9 @@
 //! levels σ_H ∈ {0, 0.1}. Paper setting: 20 Byzantine devices, d=10,
 //! γ=1e-6, CWTM 0.1. Methods: CWTM, CWTM-NNM, LAD-CWTM, LAD-CWTM-NNM.
 
-use super::common::{run_figure, ExperimentOutput, Series, Variant};
+use super::common::{run_figure_par, ExperimentOutput, Series, Variant};
 use crate::config::{AggregatorKind, AttackKind, OracleKind, TrainConfig};
+use crate::util::parallel::Parallelism;
 use crate::Result;
 
 #[derive(Debug, Clone)]
@@ -17,6 +18,8 @@ pub struct Fig5Params {
     pub d: usize,
     pub oracle: OracleKind,
     pub seed: u64,
+    /// worker threads for the variant fan-out (0 = all cores)
+    pub threads: usize,
 }
 
 impl Default for Fig5Params {
@@ -32,6 +35,7 @@ impl Default for Fig5Params {
             d: 10,
             oracle: OracleKind::NativeLinreg,
             seed: 5,
+            threads: 0,
         }
     }
 }
@@ -72,7 +76,15 @@ pub fn run(p: &Fig5Params) -> Result<Vec<ExperimentOutput>> {
             v.cfg.sigma_h = sigma;
         }
         eprintln!("fig5: σ_H = {sigma}");
-        let traces = run_figure(p.n, p.q, sigma, &vs, p.seed + idx as u64, p.seed ^ 0x55)?;
+        let traces = run_figure_par(
+            p.n,
+            p.q,
+            sigma,
+            &vs,
+            p.seed + idx as u64,
+            p.seed ^ 0x55,
+            Parallelism::new(p.threads),
+        )?;
         outs.push(ExperimentOutput {
             name: format!("fig5{}_sigma_{}", (b'a' + idx as u8) as char, sigma),
             x_label: "iter".into(),

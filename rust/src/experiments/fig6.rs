@@ -6,8 +6,9 @@
 //! Methods: Com-VA, Com-CWTM, Com-CWTM-NNM, Com-TGN, Com-LAD-CWTM,
 //! Com-LAD-CWTM-NNM.
 
-use super::common::{run_figure, ExperimentOutput, Series, Variant};
+use super::common::{run_figure_par, ExperimentOutput, Series, Variant};
 use crate::config::{AggregatorKind, AttackKind, CompressionKind, OracleKind, TrainConfig};
+use crate::util::parallel::Parallelism;
 use crate::Result;
 
 #[derive(Debug, Clone)]
@@ -22,6 +23,8 @@ pub struct Fig6Params {
     pub d: usize,
     pub oracle: OracleKind,
     pub seed: u64,
+    /// worker threads for the variant fan-out (0 = all cores)
+    pub threads: usize,
 }
 
 impl Default for Fig6Params {
@@ -39,6 +42,7 @@ impl Default for Fig6Params {
             d: 3,
             oracle: OracleKind::NativeLinreg,
             seed: 6,
+            threads: 0,
         }
     }
 }
@@ -83,7 +87,15 @@ fn variants(p: &Fig6Params) -> Vec<Variant> {
 }
 
 pub fn run(p: &Fig6Params) -> Result<ExperimentOutput> {
-    let traces = run_figure(p.n, p.q, p.sigma_h, &variants(p), p.seed, p.seed ^ 0x66)?;
+    let traces = run_figure_par(
+        p.n,
+        p.q,
+        p.sigma_h,
+        &variants(p),
+        p.seed,
+        p.seed ^ 0x66,
+        Parallelism::new(p.threads),
+    )?;
     Ok(ExperimentOutput {
         name: "fig6_compressed_loss_vs_iters".into(),
         x_label: "iter".into(),

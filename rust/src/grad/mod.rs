@@ -14,6 +14,7 @@ pub mod native;
 pub mod runtime_oracle;
 
 use crate::util::math::Mat;
+use crate::util::parallel::Parallelism;
 use crate::Result;
 
 /// The trainer's gradient interface.
@@ -37,6 +38,10 @@ pub trait CodedGradOracle {
     fn loss(&mut self, x: &[f32]) -> Result<f64>;
     /// Oracle label for logs.
     fn name(&self) -> &'static str;
+    /// Hint: the oracle may use up to this many worker threads for its
+    /// device-parallel compute. Implementations must stay bit-identical to
+    /// their serial path (default: ignore the hint).
+    fn set_parallelism(&mut self, _par: Parallelism) {}
 }
 
 pub use native::NativeLinReg;

@@ -7,22 +7,45 @@
 use super::CodedGradOracle;
 use crate::data::linreg::LinRegDataset;
 use crate::util::math::{axpy, scale, Mat};
+use crate::util::parallel::{par_chunks_mut, Parallelism};
 use crate::Result;
+
+/// Below this many output elements (rows × cols) the parallel row fill is
+/// all spawn overhead; stay on the calling thread. Purely a performance
+/// gate — both paths are bit-identical.
+const PAR_MIN_ELEMS: usize = 4096;
 
 pub struct NativeLinReg {
     ds: LinRegDataset,
     /// scratch: per-subset gradient matrix reused across iterations
     scratch: Mat,
+    /// worker-thread budget for the row-parallel kernels
+    par: Parallelism,
 }
 
 impl NativeLinReg {
     pub fn new(ds: LinRegDataset) -> Self {
         let scratch = Mat::zeros(ds.n(), ds.dim());
-        NativeLinReg { ds, scratch }
+        NativeLinReg { ds, scratch, par: Parallelism::serial() }
+    }
+
+    /// Builder-style parallelism override (same effect as
+    /// [`CodedGradOracle::set_parallelism`]).
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
     }
 
     pub fn dataset(&self) -> &LinRegDataset {
         &self.ds
+    }
+
+    fn effective_par(&self, elems: usize) -> Parallelism {
+        if elems >= PAR_MIN_ELEMS {
+            self.par
+        } else {
+            Parallelism::serial()
+        }
     }
 }
 
@@ -42,20 +65,28 @@ impl CodedGradOracle for NativeLinReg {
     ) -> Result<()> {
         assert_eq!(out.rows, subsets_per_device.len());
         assert_eq!(out.cols, self.ds.dim());
-        self.ds.grad_matrix(x, &mut self.scratch);
-        for (i, subs) in subsets_per_device.iter().enumerate() {
-            let row = out.row_mut(i);
+        let par = self.effective_par(out.rows * out.cols);
+        self.ds.grad_matrix_par(x, &mut self.scratch, par);
+        // Per-device encode: each output row only reads the shared scratch
+        // matrix, so rows parallelize with no synchronization. Accumulation
+        // order within a row is the subset order either way — bit-identical
+        // to the serial loop.
+        let cols = out.cols;
+        let scratch = &self.scratch;
+        par_chunks_mut(par, &mut out.data, cols, |i, row| {
+            let subs = &subsets_per_device[i];
             row.iter_mut().for_each(|v| *v = 0.0);
             for &k in subs {
-                axpy(1.0, self.scratch.row(k), row);
+                axpy(1.0, scratch.row(k), row);
             }
             scale(row, 1.0 / subs.len() as f32);
-        }
+        });
         Ok(())
     }
 
     fn grad_matrix(&mut self, x: &[f32], out: &mut Mat) -> Result<()> {
-        self.ds.grad_matrix(x, out);
+        let par = self.effective_par(out.rows * out.cols);
+        self.ds.grad_matrix_par(x, out, par);
         Ok(())
     }
 
@@ -65,6 +96,10 @@ impl CodedGradOracle for NativeLinReg {
 
     fn name(&self) -> &'static str {
         "native-linreg"
+    }
+
+    fn set_parallelism(&mut self, par: Parallelism) {
+        self.par = par;
     }
 }
 
@@ -95,6 +130,30 @@ mod tests {
                 assert!((out.row(i)[j] - want[j]).abs() < 1e-4);
             }
         }
+    }
+
+    #[test]
+    fn parallel_oracle_is_bit_identical_to_serial() {
+        // sized above PAR_MIN_ELEMS so the parallel path actually engages
+        let mut rng = Rng::new(3);
+        let (n, q) = (64, 128);
+        let ds = LinRegDataset::generate(n, q, 0.4, &mut rng);
+        let x = rng.gauss_vec(q);
+        let subsets: Vec<Vec<usize>> =
+            (0..n).map(|i| vec![i, (i + 3) % n, (i + 17) % n]).collect();
+        let mut serial = NativeLinReg::new(ds.clone());
+        let mut threaded =
+            NativeLinReg::new(ds).with_parallelism(Parallelism::new(8));
+        let mut a = Mat::zeros(n, q);
+        let mut b = Mat::zeros(n, q);
+        serial.coded_grads(&x, &subsets, &mut a).unwrap();
+        threaded.coded_grads(&x, &subsets, &mut b).unwrap();
+        assert_eq!(a.data, b.data, "coded_grads diverged");
+        let mut ga = Mat::zeros(n, q);
+        let mut gb = Mat::zeros(n, q);
+        serial.grad_matrix(&x, &mut ga).unwrap();
+        threaded.grad_matrix(&x, &mut gb).unwrap();
+        assert_eq!(ga.data, gb.data, "grad_matrix diverged");
     }
 
     #[test]

@@ -22,9 +22,17 @@
 //! * [`theory`] — closed-form error terms (κ₁..κ₄, ξ₁..ξ₄, ε) from the
 //!   convergence analysis, used by the Fig. 2/3 reproductions.
 //! * [`experiments`] — drivers that regenerate every figure in the paper.
+//! * [`util::parallel`] — the zero-dependency scoped-thread engine behind
+//!   the device loop, the O(N²Q) aggregation rules and the figure sweeps;
+//!   bit-identical results for any thread count (`TrainConfig::threads`).
 //!
 //! Python/JAX/Pallas run only at build time (`make artifacts`); at run time
-//! the coordinator loads `artifacts/*.hlo.txt` through [`runtime`].
+//! the coordinator loads `artifacts/*.hlo.txt` through [`runtime`] (stubbed
+//! unless built with `--features pjrt`).
+//!
+//! The crate is **zero-external-dependency**: the only `[dependencies]`
+//! entry is the vendored `anyhow` shim under `rust/vendor/anyhow`, so the
+//! whole workspace builds offline.
 
 pub mod aggregation;
 pub mod attack;

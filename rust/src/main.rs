@@ -31,18 +31,23 @@ SUBCOMMANDS
                     --config FILE | --devices N --honest H --d D --dim Q
                     --iters T --lr G --sigma-h S --agg RULE --nnm
                     --attack A --compression C --q-hat K --oracle native|runtime
-                    --seed S --out DIR
+                    --seed S --threads W --out DIR
   fig2              error term vs delta (theory)          [--out DIR]
   fig3              error term vs d (theory)              [--out DIR]
-  fig4              loss curves, sign-flip, no compression [--iters T --oracle O --out DIR]
-  fig5              loss curves vs heterogeneity           [--iters T --oracle O --out DIR]
-  fig6              loss curves, compressed communication  [--iters T --oracle O --out DIR]
+  fig4              loss curves, sign-flip, no compression [--iters T --oracle O --threads W --out DIR]
+  fig5              loss curves vs heterogeneity           [--iters T --oracle O --threads W --out DIR]
+  fig6              loss curves, compressed communication  [--iters T --oracle O --threads W --out DIR]
   e2e               transformer e2e via PJRT artifacts     [--iters T --d D]
-  byz-sweep         final loss vs Byzantine count ablation [--d D --iters T]
+  byz-sweep         final loss vs Byzantine count ablation [--d D --iters T --threads W]
   kappa             estimate robustness coefficient        [--agg RULE --n N --honest H]
   theory            print closed-form constants            [--n N --honest H --d D --delta X]
   artifacts-check   load artifacts, compare vs native oracle
   help              print this text
+
+OPTIONS
+  --threads W       worker threads for device/variant-parallel stages
+                    (1 = serial, 0 = all cores; traces are bit-identical
+                    for any W — randomness is pre-split per device)
 ";
 
 fn main() {
@@ -94,6 +99,7 @@ fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
     cfg.trim_frac = args.get_f64("trim", cfg.trim_frac)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     cfg.log_every = args.get_usize("log-every", cfg.log_every)?;
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
     if let Some(a) = args.get("agg") {
         cfg.aggregator = AggregatorKind::parse(a)?;
     }
@@ -176,6 +182,7 @@ fn cmd_fig4(args: &Args) -> Result<()> {
     p.iters = args.get_usize("iters", p.iters)?;
     p.lr = args.get_f64("lr", p.lr)?;
     p.oracle = oracle_arg(args)?;
+    p.threads = args.get_usize("threads", p.threads)?;
     args.reject_unknown()?;
     let out = fig4::run(&p)?;
     out.print_table();
@@ -190,6 +197,7 @@ fn cmd_fig5(args: &Args) -> Result<()> {
     p.iters = args.get_usize("iters", p.iters)?;
     p.lr = args.get_f64("lr", p.lr)?;
     p.oracle = oracle_arg(args)?;
+    p.threads = args.get_usize("threads", p.threads)?;
     args.reject_unknown()?;
     for out in fig5::run(&p)? {
         out.print_table();
@@ -205,6 +213,7 @@ fn cmd_fig6(args: &Args) -> Result<()> {
     p.iters = args.get_usize("iters", p.iters)?;
     p.lr = args.get_f64("lr", p.lr)?;
     p.oracle = oracle_arg(args)?;
+    p.threads = args.get_usize("threads", p.threads)?;
     args.reject_unknown()?;
     let out = fig6::run(&p)?;
     out.print_table();
@@ -241,6 +250,7 @@ fn cmd_byz_sweep(args: &Args) -> Result<()> {
     let mut p = byz_sweep::ByzSweepParams::default();
     p.d = args.get_usize("d", p.d)?;
     p.iters = args.get_usize("iters", p.iters)?;
+    p.threads = args.get_usize("threads", p.threads)?;
     args.reject_unknown()?;
     let out = byz_sweep::run(&p)?;
     out.print_table();

@@ -6,13 +6,30 @@
 //! parser reassigns ids (see /opt/xla-example/README.md). Executables are
 //! compiled once per artifact and cached; every call after the first is a
 //! pure PJRT execute.
+//!
+//! # Feature gating
+//!
+//! The actual PJRT execution paths depend on the environment-provided `xla`
+//! extension crate and are compiled only with `--features pjrt` (after
+//! adding the `xla` dependency — see the README's "PJRT runtime" section).
+//! The default build ships a **stub** [`Runtime`] with the same API: it
+//! still loads and validates manifests (so configuration errors surface
+//! identically), but [`Runtime::exec_f32`] returns a clear error instead of
+//! executing. Everything that doesn't touch artifacts — the native oracle,
+//! all figure drivers, the cluster — is unaffected.
 
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 use crate::util::timer::Timer;
 use crate::Result;
-use anyhow::{anyhow, bail, Context};
-use manifest::{DType, Manifest, TensorSpec};
+#[cfg(feature = "pjrt")]
+use anyhow::anyhow;
+use anyhow::{bail, Context};
+use manifest::{DType, Manifest};
+#[cfg(feature = "pjrt")]
+use manifest::TensorSpec;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -40,6 +57,7 @@ impl<'a> TensorIn<'a> {
             TensorIn::I32(..) => DType::I32,
         }
     }
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         let lit = match self {
             TensorIn::F32(data, dims) => xla::Literal::vec1(data).reshape(dims)?,
@@ -58,11 +76,14 @@ pub struct RuntimeStats {
     pub execute_s: f64,
 }
 
-/// PJRT CPU runtime with a compiled-executable cache.
+/// PJRT CPU runtime with a compiled-executable cache (stub without the
+/// `pjrt` feature — see the module docs).
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
     pub stats: RuntimeStats,
 }
@@ -73,8 +94,22 @@ impl Runtime {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(dir.join("manifest.json"))
             .with_context(|| format!("loading manifest from {dir:?} — run `make artifacts`"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime { client, dir, manifest, cache: HashMap::new(), stats: RuntimeStats::default() })
+        #[cfg(feature = "pjrt")]
+        {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(Runtime {
+                client,
+                dir,
+                manifest,
+                cache: HashMap::new(),
+                stats: RuntimeStats::default(),
+            })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            Ok(Runtime { dir, manifest, stats: RuntimeStats::default() })
+        }
     }
 
     /// Default artifact dir: $LAD_ARTIFACTS or ./artifacts.
@@ -85,7 +120,14 @@ impl Runtime {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "pjrt")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            "stub (rebuild with --features pjrt to execute artifacts)".to_string()
+        }
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -96,6 +138,7 @@ impl Runtime {
         self.manifest.entries.contains_key(name)
     }
 
+    #[cfg(feature = "pjrt")]
     fn ensure_compiled(&mut self, name: &str) -> Result<()> {
         if self.cache.contains_key(name) {
             return Ok(());
@@ -145,7 +188,10 @@ impl Runtime {
             }
             let want: i64 = spec.shape.iter().product();
             if want as usize != got.elem_count() {
-                bail!("{name} input {i}: buffer has {} elems, shape wants {want}", got.elem_count());
+                bail!(
+                    "{name} input {i}: buffer has {} elems, shape wants {want}",
+                    got.elem_count()
+                );
             }
         }
         Ok(())
@@ -153,6 +199,7 @@ impl Runtime {
 
     /// Execute an artifact; returns each output flattened to f32.
     /// (All our artifact outputs are f32 or scalar f32.)
+    #[cfg(feature = "pjrt")]
     pub fn exec_f32(&mut self, name: &str, inputs: &[TensorIn]) -> Result<Vec<Vec<f32>>> {
         self.ensure_compiled(name)?;
         self.check_inputs(name, inputs)?;
@@ -180,8 +227,24 @@ impl Runtime {
         }
         Ok(out)
     }
+
+    /// Stub `exec_f32`: validates the request against the manifest exactly
+    /// like the real runtime, then reports that execution is unavailable.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn exec_f32(&mut self, name: &str, inputs: &[TensorIn]) -> Result<Vec<Vec<f32>>> {
+        if !self.manifest.entries.contains_key(name) {
+            bail!("artifact {name:?} not in manifest");
+        }
+        self.check_inputs(name, inputs)?;
+        bail!(
+            "cannot execute artifact {name:?} from {:?}: built without the `pjrt` \
+             feature (see README \"PJRT runtime\")",
+            self.dir
+        )
+    }
 }
 
+#[cfg(feature = "pjrt")]
 fn literal_to_f32(lit: &xla::Literal, spec: &TensorSpec) -> Result<Vec<f32>> {
     let v = match spec.dtype {
         DType::F32 => lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?,
@@ -223,5 +286,35 @@ mod tests {
         };
         let msg = format!("{err:#}");
         assert!(msg.contains("manifest"), "{msg}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_loads_manifests_but_refuses_to_execute() {
+        // build a minimal artifact dir with a manifest but no executor
+        let dir = std::env::temp_dir().join("lad_stub_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "artifacts": {"toy": {
+                "file": "toy.hlo.txt",
+                "inputs": [{"shape": [2], "dtype": "f32"}],
+                "outputs": [{"shape": [], "dtype": "f32"}]
+            }}}"#,
+        )
+        .unwrap();
+        let mut rt = Runtime::load(&dir).unwrap();
+        assert!(rt.has("toy"));
+        assert!(rt.platform().contains("stub"));
+        // input validation still happens before the stub error
+        let wrong = rt.exec_f32("toy", &[]).unwrap_err();
+        assert!(format!("{wrong}").contains("inputs"), "{wrong}");
+        // correct shapes reach the feature-gate error
+        let x = [1.0f32, 2.0];
+        let err = rt.exec_f32("toy", &[TensorIn::F32(&x, &[2])]).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+        let missing = rt.exec_f32("nope", &[]).unwrap_err();
+        assert!(format!("{missing}").contains("not in manifest"), "{missing}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -11,11 +11,12 @@
 use crate::aggregation::Aggregator;
 use crate::attack::{Attack, AttackContext};
 use crate::coding::{Assignment, TaskMatrix};
-use crate::compress::Compressor;
+use crate::compress::{compress_batch, Compressor};
 use crate::config::TrainConfig;
 use crate::data::linreg::LinRegDataset;
 use crate::server::metrics::TrainTrace;
 use crate::util::math::norm;
+use crate::util::parallel::Parallelism;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 use crate::Result;
@@ -46,6 +47,11 @@ pub fn run_cluster(
     let timer = Timer::start();
     let n = cfg.n_devices;
     let ds = Arc::new(ds.clone());
+    let par = Parallelism::new(cfg.threads);
+    // Same pre-split per-device compression streams as Trainer::run — the
+    // cluster path must consume RNG identically to stay trace-identical
+    // with the central fast path (cluster_tests.rs pins this).
+    let mut comp_rngs = rng.split(n);
     let mut trace = TrainTrace::new(label);
     let s_hat = TaskMatrix::cyclic(n, cfg.d);
     let mut bits_total: u64 = 0;
@@ -103,12 +109,14 @@ pub fn run_cluster(
                 let mut ctx = AttackContext { honest: &honest, own_true: &byz_true, rng };
                 attack.craft(&mut ctx)
             };
-            let mut msgs = Vec::with_capacity(n);
-            for m in honest.iter().chain(lies.iter()) {
-                let c = comp.compress(m, rng);
-                bits_total += c.bits as u64;
-                msgs.push(c.vec);
-            }
+            // leader-side compression, one pre-split stream per device
+            let all: Vec<&[f32]> = honest
+                .iter()
+                .map(|m| m.as_slice())
+                .chain(lies.iter().map(|m| m.as_slice()))
+                .collect();
+            let (msgs, bits) = compress_batch(comp, &all, &mut comp_rngs, par);
+            bits_total += bits;
             let update = agg.aggregate(&msgs);
             for (xi, ui) in x0.iter_mut().zip(&update) {
                 *xi -= cfg.lr as f32 * ui;

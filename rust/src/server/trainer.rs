@@ -15,11 +15,12 @@
 use crate::aggregation::Aggregator;
 use crate::attack::{Attack, AttackContext};
 use crate::coding::{Assignment, DracoScheme, TaskMatrix};
-use crate::compress::Compressor;
+use crate::compress::{compress_batch, Compressor};
 use crate::config::TrainConfig;
 use crate::grad::CodedGradOracle;
 use crate::server::metrics::TrainTrace;
 use crate::util::math::{norm, Mat};
+use crate::util::parallel::Parallelism;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 use crate::Result;
@@ -77,6 +78,15 @@ impl<'a> Trainer<'a> {
         assert_eq!(oracle.n(), cfg.n_devices, "oracle N != config N");
         assert_eq!(oracle.dim(), cfg.dim, "oracle Q != config Q");
         let timer = Timer::start();
+        let par = Parallelism::new(cfg.threads);
+        oracle.set_parallelism(par);
+        // One private compression stream per device, pre-split (not forked)
+        // from the run RNG: the main stream is left untouched, and because
+        // no stream is shared across devices, serial and multi-threaded
+        // execution consume identical randomness — the determinism contract
+        // of util::parallel. Streams persist across iterations, exactly as
+        // a real device's local RNG would.
+        let mut comp_rngs = rng.split(cfg.n_devices);
         let mut trace = TrainTrace::new(label);
         let s_hat = TaskMatrix::cyclic(cfg.n_devices, cfg.d);
         let mut coded = Mat::zeros(cfg.n_devices, cfg.dim);
@@ -112,13 +122,26 @@ impl<'a> Trainer<'a> {
                 self.attack.craft(&mut ctx)
             };
 
-            // (4) compression + bit accounting (every device uplinks once)
-            let mut msgs: Vec<Vec<f32>> = Vec::with_capacity(cfg.n_devices);
-            for m in honest_true.iter().chain(lies.iter()) {
-                let c = self.comp.compress(m, rng);
-                bits_total += c.bits as u64;
-                msgs.push(c.vec);
+            // (4) compression + bit accounting: every device uplinks once,
+            // on its own RNG stream, in parallel when cfg.threads > 1.
+            // Messages are stitched back into DEVICE order so comp_rngs[i]
+            // really is device i's stream even under rotating Byzantine
+            // identities. With fixed identities (the default) device order
+            // equals the honest-then-lies order used everywhere else.
+            let mut device_msgs: Vec<&[f32]> = Vec::with_capacity(cfg.n_devices);
+            let (mut hi, mut li) = (0usize, 0usize);
+            for &byz in &is_byz {
+                if byz {
+                    device_msgs.push(&lies[li]);
+                    li += 1;
+                } else {
+                    device_msgs.push(&honest_true[hi]);
+                    hi += 1;
+                }
             }
+            let (msgs, bits) =
+                compress_batch(self.comp, &device_msgs, &mut comp_rngs, par);
+            bits_total += bits;
 
             // (5) robust aggregation + model update
             let update = self.agg.aggregate(&msgs);
@@ -158,6 +181,7 @@ impl<'a> DracoTrainer<'a> {
     ) -> Result<TrainTrace> {
         let cfg = self.cfg;
         let timer = Timer::start();
+        oracle.set_parallelism(Parallelism::new(cfg.threads));
         let mut trace = TrainTrace::new(label);
         let scheme = DracoScheme::new(cfg.n_devices, self.r);
         let mut grads = Mat::zeros(cfg.n_devices, cfg.dim);

@@ -1,12 +1,14 @@
-//! Dependency-free substrate utilities: RNG, vector/matrix math, JSON,
-//! CSV, timing and summary statistics.
+//! Dependency-free substrate utilities: RNG, vector/matrix math, the
+//! scoped-thread parallel engine, JSON, CSV, timing and summary statistics.
 
 pub mod csv;
 pub mod json;
 pub mod math;
+pub mod parallel;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
 pub use math::Mat;
+pub use parallel::Parallelism;
 pub use rng::Rng;

@@ -1,0 +1,328 @@
+//! Zero-dependency data-parallel execution engine (no rayon).
+//!
+//! Built entirely on [`std::thread::scope`]: each primitive splits its input
+//! into at most [`Parallelism::threads`] contiguous chunks, spawns one scoped
+//! worker per extra chunk, processes the first chunk on the calling thread,
+//! and joins in order — so results are always returned in input order and no
+//! work queue, channel or allocation-per-item is needed.
+//!
+//! # Determinism contract
+//!
+//! Every primitive here is a *pure scheduler*: the closure is applied to the
+//! same items, in the same per-item state, regardless of the thread count.
+//! Callers keep bit-identical results across `threads = 1` and `threads = N`
+//! by never sharing mutable state between items — in particular, seeded RNG
+//! streams must be pre-split per item ([`crate::util::rng::Rng::split`])
+//! rather than shared. `rust/tests/parallel_determinism.rs` pins this
+//! contract end-to-end for the LAD / Com-LAD training loop.
+//!
+//! # Panics
+//!
+//! A panic inside a worker closure is propagated to the caller (the scope
+//! join panics), matching the behaviour of the serial fallback.
+
+/// How many worker threads a parallel stage may use.
+///
+/// `Parallelism` is a plain `Copy` value (not a pool): threads are scoped to
+/// each call, so nesting and concurrent use from multiple tests are safe.
+/// `0` means "all available cores" at construction time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    threads: usize,
+}
+
+impl Parallelism {
+    /// `threads` workers; `0` resolves to [`available_threads`].
+    pub fn new(threads: usize) -> Self {
+        Parallelism { threads: if threads == 0 { available_threads() } else { threads } }
+    }
+
+    /// All available cores.
+    pub fn auto() -> Self {
+        Parallelism::new(0)
+    }
+
+    /// Exactly one thread (the calling one) — the serial fallback.
+    pub fn serial() -> Self {
+        Parallelism { threads: 1 }
+    }
+
+    /// Resolved worker count (always ≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads.max(1)
+    }
+
+    /// True when no worker threads would be spawned.
+    pub fn is_serial(&self) -> bool {
+        self.threads() == 1
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Parallelism::auto()
+    }
+}
+
+/// Cores visible to this process (≥ 1).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Parallel, order-preserving map over a shared slice.
+///
+/// `f(index, item)` runs once per item; the result vector matches the input
+/// order exactly.
+pub fn par_map<T, R, F>(par: Parallelism, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = par.threads().min(items.len());
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    let mut out: Vec<Vec<R>> = Vec::with_capacity(threads);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut handles = Vec::with_capacity(threads - 1);
+        for (c, slice) in items.chunks(chunk).enumerate().skip(1) {
+            handles.push(scope.spawn(move || {
+                slice
+                    .iter()
+                    .enumerate()
+                    .map(|(i, t)| f(c * chunk + i, t))
+                    .collect::<Vec<R>>()
+            }));
+        }
+        // first chunk on the calling thread, overlapping the workers
+        out.push(items[..chunk].iter().enumerate().map(|(i, t)| f(i, t)).collect());
+        for h in handles {
+            out.push(h.join().expect("par_map worker panicked"));
+        }
+    });
+    out.into_iter().flatten().collect()
+}
+
+/// Parallel, order-preserving map with exclusive access to each item.
+///
+/// Items are `&mut` — the canonical use is one pre-split RNG or scratch
+/// buffer per device, mutated in place while producing a result.
+pub fn par_map_mut<T, R, F>(par: Parallelism, items: &mut [T], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let threads = par.threads().min(items.len());
+    if threads <= 1 {
+        return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    let mut out: Vec<Vec<R>> = Vec::with_capacity(threads);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let (first, mut rest) = items.split_at_mut(chunk);
+        let mut handles = Vec::with_capacity(threads - 1);
+        let mut offset = chunk;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            let start = offset;
+            offset += take;
+            handles.push(scope.spawn(move || {
+                head.iter_mut()
+                    .enumerate()
+                    .map(|(i, t)| f(start + i, t))
+                    .collect::<Vec<R>>()
+            }));
+        }
+        out.push(first.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect());
+        for h in handles {
+            out.push(h.join().expect("par_map_mut worker panicked"));
+        }
+    });
+    out.into_iter().flatten().collect()
+}
+
+/// Parallel for over an index range `0..n`.
+pub fn par_for<F>(par: Parallelism, n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = par.threads().min(n);
+    if threads <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut handles = Vec::with_capacity(threads - 1);
+        let mut start = chunk;
+        while start < n {
+            let end = (start + chunk).min(n);
+            handles.push(scope.spawn(move || {
+                for i in start..end {
+                    f(i);
+                }
+            }));
+            start = end;
+        }
+        for i in 0..chunk {
+            f(i);
+        }
+        for h in handles {
+            h.join().expect("par_for worker panicked");
+        }
+    });
+}
+
+/// Parallel for over disjoint `chunk_len`-sized windows of a mutable slice —
+/// the primitive behind row-parallel matrix fills (`chunk_len` = row width).
+///
+/// `f(chunk_index, chunk)` receives the same windows `data.chunks_mut(
+/// chunk_len)` would yield, in chunk order within each worker; the final
+/// window may be shorter when `chunk_len` does not divide `data.len()`.
+pub fn par_chunks_mut<T, F>(par: Parallelism, data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    if data.is_empty() {
+        return;
+    }
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let threads = par.threads().min(n_chunks);
+    if threads <= 1 {
+        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    // whole chunks per worker so no window straddles a thread boundary
+    let per_thread = n_chunks.div_ceil(threads);
+    let block = per_thread * chunk_len;
+    std::thread::scope(|scope| {
+        let f = &f;
+        let split = block.min(data.len());
+        let (first, mut rest) = data.split_at_mut(split);
+        let mut handles = Vec::with_capacity(threads - 1);
+        let mut next_chunk = per_thread;
+        while !rest.is_empty() {
+            let take = block.min(rest.len());
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            let start = next_chunk;
+            next_chunk += head.len().div_ceil(chunk_len);
+            handles.push(scope.spawn(move || {
+                for (i, c) in head.chunks_mut(chunk_len).enumerate() {
+                    f(start + i, c);
+                }
+            }));
+        }
+        for (i, c) in first.chunks_mut(chunk_len).enumerate() {
+            f(i, c);
+        }
+        for h in handles {
+            h.join().expect("par_chunks_mut worker panicked");
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn parallelism_resolution() {
+        assert!(Parallelism::auto().threads() >= 1);
+        assert_eq!(Parallelism::serial().threads(), 1);
+        assert!(Parallelism::serial().is_serial());
+        assert_eq!(Parallelism::new(5).threads(), 5);
+        assert_eq!(Parallelism::new(0).threads(), available_threads());
+    }
+
+    #[test]
+    fn par_map_preserves_order_and_matches_serial() {
+        let items: Vec<u64> = (0..257).collect();
+        let serial = par_map(Parallelism::serial(), &items, |i, &x| x * 3 + i as u64);
+        for threads in [2usize, 3, 8, 300] {
+            let par = par_map(Parallelism::new(threads), &items, |i, &x| x * 3 + i as u64);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_edge_sizes() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(par_map(Parallelism::new(4), &empty, |_, &x| x).is_empty());
+        assert_eq!(par_map(Parallelism::new(4), &[7u32], |i, &x| (i, x)), vec![(0, 7)]);
+    }
+
+    #[test]
+    fn par_map_mut_gives_exclusive_state_per_item() {
+        let mut counters = vec![0u64; 100];
+        let out = par_map_mut(Parallelism::new(7), &mut counters, |i, c| {
+            *c += i as u64;
+            *c * 2
+        });
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<u64>>());
+        assert_eq!(counters, (0..100).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn par_for_visits_every_index_once() {
+        let n = 501;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        par_for(Parallelism::new(6), n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_chunks_mut_matches_serial_chunking() {
+        // rows*cols with a ragged tail chunk
+        for (len, chunk_len) in [(12 * 7, 7), (100, 9), (5, 8), (8, 8)] {
+            let mut a: Vec<usize> = vec![0; len];
+            let mut b: Vec<usize> = vec![0; len];
+            let fill = |i: usize, c: &mut [usize]| {
+                for (j, v) in c.iter_mut().enumerate() {
+                    *v = i * 1000 + j;
+                }
+            };
+            for (i, c) in a.chunks_mut(chunk_len).enumerate() {
+                fill(i, c);
+            }
+            par_chunks_mut(Parallelism::new(4), &mut b, chunk_len, fill);
+            assert_eq!(a, b, "len={len} chunk_len={chunk_len}");
+        }
+    }
+
+    #[test]
+    fn more_threads_than_items_is_fine() {
+        let items = vec![1u32, 2, 3];
+        assert_eq!(par_map(Parallelism::new(64), &items, |_, &x| x + 1), vec![2, 3, 4]);
+        let mut data = vec![0u8; 3];
+        par_chunks_mut(Parallelism::new(64), &mut data, 1, |i, c| c[0] = i as u8);
+        assert_eq!(data, vec![0, 1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn worker_panic_propagates() {
+        let items: Vec<usize> = (0..64).collect();
+        par_map(Parallelism::new(4), &items, |_, &x| {
+            assert!(x != 63, "boom");
+            x
+        });
+    }
+}

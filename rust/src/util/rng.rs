@@ -40,6 +40,24 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
+    /// Pre-split `n` independent child streams **without advancing** this
+    /// generator.
+    ///
+    /// Unlike repeated [`Rng::fork`] calls, splitting is non-consuming: the
+    /// parent stream continues exactly as if `split` had never been called.
+    /// This is the primitive behind deterministic parallelism — give every
+    /// device/chunk its own stream up front, and serial and multi-threaded
+    /// execution consume identical randomness (see
+    /// [`crate::util::parallel`]). The derived seeds are salted so the
+    /// children do not replay the parent's own output.
+    pub fn split(&self, n: usize) -> Vec<Rng> {
+        let mut probe = self.clone();
+        let base = probe.next_u64() ^ 0xD1B5_4A32_D192_ED03;
+        (0..n as u64)
+            .map(|i| Rng::new(base ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15)))
+            .collect()
+    }
+
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -232,6 +250,35 @@ mod tests {
         // each index expected 2500 times
         for h in hits {
             assert!((h as f64 - 2500.0).abs() < 300.0, "hits {h}");
+        }
+    }
+
+    #[test]
+    fn split_does_not_advance_parent_and_streams_are_independent() {
+        let parent = Rng::new(77);
+        let mut a = parent.clone();
+        let streams = parent.split(4);
+        let mut b = parent.clone();
+        // parent untouched by split
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // children pairwise (and vs parent) decorrelated
+        let mut all = streams;
+        all.push(parent.clone());
+        for i in 0..all.len() {
+            for j in i + 1..all.len() {
+                let (mut x, mut y) = (all[i].clone(), all[j].clone());
+                let same = (0..64).filter(|_| x.next_u32() == y.next_u32()).count();
+                assert!(same < 4, "streams {i},{j} correlated");
+            }
+        }
+        // and deterministic: same parent state ⇒ same children
+        let again = Rng::new(77).split(4);
+        let first = Rng::new(77).split(4);
+        for (p, q) in again.iter().zip(&first) {
+            let (mut p, mut q) = (p.clone(), q.clone());
+            assert_eq!(p.next_u64(), q.next_u64());
         }
     }
 

@@ -1,0 +1,126 @@
+//! The parallel execution engine's end-to-end contract: `threads = 1` and
+//! `threads = 8` must produce **bit-identical** `TrainTrace`s for LAD and
+//! Com-LAD, across aggregators (including the row-parallel O(N²Q) rules)
+//! and attacks. Randomness is pre-split per device (`Rng::split`), never
+//! shared across threads, so the schedule cannot leak into the math.
+//!
+//! Problem sizes are chosen above every internal parallelism gate
+//! (oracle: N·Q ≥ 4096; pairwise rules: N²·Q ≥ 2¹⁶; compression:
+//! N·Q ≥ 4096) so the multi-threaded paths genuinely execute.
+
+use lad::config::{AggregatorKind, AttackKind, CompressionKind, TrainConfig};
+use lad::data::linreg::LinRegDataset;
+use lad::experiments::common::{run_figure_par, run_variant, Variant};
+use lad::server::TrainTrace;
+use lad::util::parallel::Parallelism;
+use lad::util::rng::Rng;
+
+fn base_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.n_devices = 64;
+    cfg.n_honest = 48;
+    cfg.d = 8;
+    cfg.dim = 128;
+    cfg.iters = 40;
+    cfg.lr = 1e-6;
+    cfg.sigma_h = 0.3;
+    cfg.log_every = 10;
+    cfg
+}
+
+fn run_with_threads(mut cfg: TrainConfig, threads: usize, seed: u64) -> TrainTrace {
+    cfg.threads = threads;
+    let mut rng = Rng::new(seed);
+    let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng);
+    run_variant(&ds, &Variant { label: format!("{threads}t"), cfg, draco_r: None }, seed ^ 0xD)
+        .unwrap()
+}
+
+fn assert_traces_identical(a: &TrainTrace, b: &TrainTrace, what: &str) {
+    assert_eq!(a.iters, b.iters, "{what}: sampled iterations differ");
+    assert_eq!(a.loss, b.loss, "{what}: loss trace differs");
+    assert_eq!(
+        a.grad_update_norm, b.grad_update_norm,
+        "{what}: update-norm trace differs"
+    );
+    assert_eq!(a.bits, b.bits, "{what}: bit accounting differs");
+    assert_eq!(a.final_loss, b.final_loss, "{what}: final loss differs");
+}
+
+#[test]
+fn lad_traces_bit_identical_across_thread_counts() {
+    // LAD (no compression), two aggregators incl. the row-parallel rules
+    for (agg, nnm) in [
+        (AggregatorKind::Cwtm, true),  // CWTM-NNM: parallel mixing pass
+        (AggregatorKind::MultiKrum, false), // parallel pairwise scores
+    ] {
+        let mut cfg = base_cfg();
+        cfg.aggregator = agg;
+        cfg.nnm = nnm;
+        cfg.attack = AttackKind::SignFlip { coeff: -2.0 };
+        let serial = run_with_threads(cfg.clone(), 1, 11);
+        for threads in [2usize, 8] {
+            let par = run_with_threads(cfg.clone(), threads, 11);
+            assert_traces_identical(
+                &serial,
+                &par,
+                &format!("lad/{agg:?}/nnm={nnm}/threads={threads}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn com_lad_traces_bit_identical_across_thread_counts() {
+    // Com-LAD: stochastic rand-K compression exercises the pre-split
+    // per-device RNG streams — the hardest part of the contract
+    for attack in [AttackKind::SignFlip { coeff: -2.0 }, AttackKind::Alie] {
+        let mut cfg = base_cfg();
+        cfg.aggregator = AggregatorKind::Cwtm;
+        cfg.nnm = true;
+        cfg.attack = attack;
+        cfg.compression = CompressionKind::RandK { k: 32 };
+        let serial = run_with_threads(cfg.clone(), 1, 13);
+        let par = run_with_threads(cfg.clone(), 8, 13);
+        assert_traces_identical(&serial, &par, &format!("com-lad/{attack:?}"));
+        // compression actually happened: rand-K wire size < dense
+        assert!(serial.total_bits() < (cfg.n_devices * cfg.dim * 32 * cfg.iters) as u64);
+    }
+}
+
+#[test]
+fn com_lad_qsgd_trace_bit_identical_across_thread_counts() {
+    let mut cfg = base_cfg();
+    cfg.aggregator = AggregatorKind::MultiKrum;
+    cfg.attack = AttackKind::SignFlip { coeff: -2.0 };
+    cfg.compression = CompressionKind::Qsgd { levels: 16 };
+    let serial = run_with_threads(cfg.clone(), 1, 17);
+    let par = run_with_threads(cfg, 8, 17);
+    assert_traces_identical(&serial, &par, "com-lad/qsgd/multi-krum");
+}
+
+#[test]
+fn variant_fanout_matches_serial_sweep() {
+    // driver-level parallelism: the same variant family run serially and
+    // with the thread fan-out must produce identical traces, in order
+    let mk = |label: &str, d: usize, agg: AggregatorKind| {
+        let mut cfg = base_cfg();
+        cfg.d = d;
+        cfg.aggregator = agg;
+        Variant { label: label.into(), cfg, draco_r: None }
+    };
+    let variants = vec![
+        mk("cwtm-d1", 1, AggregatorKind::Cwtm),
+        mk("cwtm-d8", 8, AggregatorKind::Cwtm),
+        mk("median-d8", 8, AggregatorKind::Median),
+        mk("faba-d8", 8, AggregatorKind::Faba),
+    ];
+    let serial =
+        run_figure_par(64, 128, 0.3, &variants, 21, 22, Parallelism::serial()).unwrap();
+    let fanned = run_figure_par(64, 128, 0.3, &variants, 21, 22, Parallelism::new(4)).unwrap();
+    assert_eq!(serial.len(), fanned.len());
+    for (a, b) in serial.iter().zip(&fanned) {
+        assert_eq!(a.label, b.label, "fan-out reordered variants");
+        assert_traces_identical(a, b, &a.label);
+    }
+}

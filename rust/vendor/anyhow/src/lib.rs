@@ -1,0 +1,276 @@
+//! Vendored, dependency-free shim covering the slice of the `anyhow` API
+//! this workspace uses: [`Error`], [`Result`], the [`Context`] extension
+//! trait for `Result`/`Option`, and the `anyhow!` / `bail!` / `ensure!`
+//! macros.
+//!
+//! The offline sandbox has no crates.io access, so instead of the real
+//! `anyhow` (which the seed code was written against) the workspace builds
+//! this path dependency. Semantics intentionally match where observable:
+//!
+//! * `Display` prints the outermost message only;
+//! * the alternate form (`{err:#}`) prints the whole context chain,
+//!   outermost first, `": "`-separated;
+//! * `Debug` prints the message plus a `Caused by:` list (what `.unwrap()`
+//!   and `fn main() -> Result<()>` show);
+//! * any `std::error::Error + Send + Sync + 'static` converts via `?`,
+//!   preserving its source chain as text.
+//!
+//! Like the real `anyhow::Error`, [`Error`] does **not** implement
+//! `std::error::Error` — that is what makes the blanket `From` impl
+//! coherent.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the same default type parameter shape as
+/// the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-backed error with an optional chain of causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from any displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain, outermost first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    /// The innermost error in the chain.
+    pub fn root_cause(&self) -> &Error {
+        let mut cur = self;
+        while let Some(src) = cur.source.as_deref() {
+            cur = src;
+        }
+        cur
+    }
+}
+
+/// Iterator over an error's context chain (see [`Error::chain`]).
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+    fn next(&mut self) -> Option<&'a Error> {
+        let cur = self.next?;
+        self.next = cur.source.as_deref();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if let Some(first) = self.source.as_deref() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = Some(first);
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+// Coherent because `Error` itself does not implement `std::error::Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        fn build(msg: String, src: Option<&(dyn std::error::Error + 'static)>) -> Error {
+            Error {
+                msg,
+                source: src.map(|s| Box::new(build(s.to_string(), s.source()))),
+            }
+        }
+        build(e.to_string(), e.source())
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(|| ..)` to
+/// `Result` and `Option`.
+pub trait Context<T, E> {
+    /// Wrap the error value (or `None`) with a context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error value (or `None`) with a lazily evaluated context
+    /// message.
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context())
+        })
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(context()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "Condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_is_outer_message_only() {
+        let e: Error = Error::from(io_err()).context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+    }
+
+    #[test]
+    fn alternate_prints_chain() {
+        let e = Error::msg("inner").context("middle").context("outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: inner");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::msg("root").context("top");
+        let d = format!("{e:?}");
+        assert!(d.starts_with("top"), "{d}");
+        assert!(d.contains("Caused by:") && d.contains("root"), "{d}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(format!("{e}").contains("missing thing"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 3: missing thing");
+        let o: Option<u32> = None;
+        let e = o.context("nothing there").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing there");
+        assert_eq!(Some(5u32).context("fine").unwrap(), 5);
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 7);
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(format!("{}", f(12).unwrap_err()).contains("x too big: 12"));
+        assert!(format!("{}", f(7).unwrap_err()).contains("x != 7"));
+        assert!(format!("{}", f(3).unwrap_err()).contains("right out"));
+        let e = anyhow!("code {}", 42);
+        assert_eq!(format!("{e}"), "code 42");
+    }
+
+    #[test]
+    fn chain_and_root_cause() {
+        let e = Error::msg("a").context("b").context("c");
+        let msgs: Vec<String> = e.chain().map(|x| format!("{x}")).collect();
+        assert_eq!(msgs, vec!["c", "b", "a"]);
+        assert_eq!(format!("{}", e.root_cause()), "a");
+    }
+}
