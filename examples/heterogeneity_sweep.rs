@@ -39,7 +39,8 @@ fn main() -> lad::Result<()> {
         let mut lad_cfg = base_cfg.clone();
         lad_cfg.d = 10;
 
-        let t1 = run_variant(&ds, &Variant { label: "cwtm".into(), cfg: cwtm_cfg, draco_r: None }, 7)?;
+        let t1 =
+            run_variant(&ds, &Variant { label: "cwtm".into(), cfg: cwtm_cfg, draco_r: None }, 7)?;
         let t2 =
             run_variant(&ds, &Variant { label: "lad".into(), cfg: lad_cfg, draco_r: None }, 7)?;
         let gain = t1.final_loss / t2.final_loss;

@@ -1,56 +1,110 @@
 //! Micro-bench: aggregation rules at the paper's scale (N=100, Q=100) and
 //! at transformer scale (N=8, Q=0.4M) — the L3 hot path — plus the
-//! serial-vs-threaded comparison for the O(N²Q) pairwise-distance rules
-//! (Krum, Multi-Krum, NNM), whose parallel pass is bit-identical to serial.
+//! per-rule execution-strategy comparison for the O(N²Q) pairwise-distance
+//! rules (Krum, Multi-Krum, NNM): serial shared-Gram pass vs scoped spawns
+//! vs the persistent worker pool, all bit-identical by construction.
+//!
+//! Machine-readable results are written to `BENCH_aggregation.json` at the
+//! repository root (one snapshot per run; commit it per PR to track the
+//! perf trajectory). Set
+//! `LAD_BENCH_QUICK=1` (the CI smoke mode) to shrink budgets and skip the
+//! transformer-scale section.
 
 use lad::aggregation::{
     Aggregator, CoordinateMedian, Cwtm, Faba, GeometricMedian, Krum, Mcc, Mean, MultiKrum, Nnm,
     Tgn,
 };
-use lad::bench_support::{run, section};
-use lad::util::parallel::Parallelism;
+use lad::bench_support::{run, section, BenchResult};
+use lad::util::json::Json;
+use lad::util::parallel::{available_threads, Parallelism, Pool};
 use lad::util::rng::Rng;
+use std::collections::BTreeMap;
 
 fn family(n: usize, q: usize, seed: u64) -> Vec<Vec<f32>> {
     let mut rng = Rng::new(seed);
     (0..n).map(|_| rng.gauss_vec(q)).collect()
 }
 
-fn threaded_pairwise_section(title: &str, msgs: &[Vec<f32>], f: usize) {
-    let par = Parallelism::auto();
-    let t = par.threads();
-    section(&format!("{title} — pairwise rules, serial vs {t} threads"));
-    let pairs: Vec<(&str, Box<dyn Aggregator>, Box<dyn Aggregator>)> = vec![
+fn quick() -> bool {
+    std::env::var("LAD_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+fn budget(ms: f64) -> f64 {
+    if quick() {
+        ms / 8.0
+    } else {
+        ms
+    }
+}
+
+/// One JSON record for `BENCH_aggregation.json`.
+fn record(scale: &str, rule: &str, variant: &str, r: &BenchResult, speedup: f64) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("scale".into(), Json::Str(scale.into()));
+    o.insert("rule".into(), Json::Str(rule.into()));
+    o.insert("variant".into(), Json::Str(variant.into()));
+    o.insert("median_ns".into(), Json::Num(r.median_ns));
+    o.insert("min_ns".into(), Json::Num(r.min_ns));
+    o.insert("p95_ns".into(), Json::Num(r.p95_ns));
+    o.insert("speedup_vs_serial".into(), Json::Num(speedup));
+    Json::Obj(o)
+}
+
+/// Serial vs scoped-spawn vs persistent-pool comparison for the
+/// distance-bound rules; the sanity assert keeps the bit-identical contract
+/// in the bench loop itself.
+fn strategy_section(
+    scale: &str,
+    msgs: &[Vec<f32>],
+    f: usize,
+    pool: &Pool,
+    entries: &mut Vec<Json>,
+) {
+    let t = pool.threads();
+    section(&format!("{scale} — pairwise rules: serial vs scoped({t}) vs pool({t})"));
+    let scoped = Parallelism::new(t);
+    let rules: Vec<(&str, Box<dyn Aggregator>, Box<dyn Aggregator>, Box<dyn Aggregator>)> = vec![
         (
             "krum",
             Box::new(Krum::new(f)),
-            Box::new(Krum::new(f).with_parallelism(par)),
+            Box::new(Krum::new(f).with_parallelism(scoped)),
+            Box::new(Krum::new(f).with_pool(pool)),
         ),
         (
             "multi-krum",
             Box::new(MultiKrum::new(f)),
-            Box::new(MultiKrum::new(f).with_parallelism(par)),
+            Box::new(MultiKrum::new(f).with_parallelism(scoped)),
+            Box::new(MultiKrum::new(f).with_pool(pool)),
         ),
         (
             "cwtm-nnm",
             Box::new(Nnm::new(f, Box::new(Cwtm::new(0.1)))),
-            Box::new(Nnm::new(f, Box::new(Cwtm::new(0.1))).with_parallelism(par)),
+            Box::new(Nnm::new(f, Box::new(Cwtm::new(0.1))).with_parallelism(scoped)),
+            Box::new(Nnm::new(f, Box::new(Cwtm::new(0.1))).with_pool(pool)),
         ),
     ];
-    for (name, serial, threaded) in &pairs {
-        // sanity first: the two paths must agree bit-for-bit
-        assert_eq!(
-            serial.aggregate(msgs),
-            threaded.aggregate(msgs),
-            "{name}: parallel != serial"
+    for (name, serial, scoped, pooled) in &rules {
+        // sanity first: all strategies must agree bit-for-bit
+        let want = serial.aggregate(msgs);
+        assert_eq!(want, scoped.aggregate(msgs), "{name}: scoped != serial");
+        assert_eq!(want, pooled.aggregate(msgs), "{name}: pool != serial");
+        let s = run(&format!("{name} (serial gram)"), budget(200.0), || serial.aggregate(msgs));
+        let c = run(&format!("{name} (scoped {t}t)"), budget(200.0), || scoped.aggregate(msgs));
+        let p = run(&format!("{name} (pool {t}t)"), budget(200.0), || pooled.aggregate(msgs));
+        println!(
+            "      speedup vs serial: scoped {:.2}x, pool {:.2}x (median)",
+            s.median_ns / c.median_ns,
+            s.median_ns / p.median_ns
         );
-        let s = run(&format!("{name} (1 thread)"), 200.0, || serial.aggregate(msgs));
-        let p = run(&format!("{name} ({t} threads)"), 200.0, || threaded.aggregate(msgs));
-        println!("      speedup {:.2}x (median)", s.median_ns / p.median_ns);
+        entries.push(record(scale, name, "serial", &s, 1.0));
+        entries.push(record(scale, name, "scoped", &c, s.median_ns / c.median_ns));
+        entries.push(record(scale, name, "pool", &p, s.median_ns / p.median_ns));
     }
 }
 
 fn main() {
+    let mut entries: Vec<Json> = Vec::new();
+
     section("aggregation rules, N=100 Q=100 (paper scale)");
     let msgs = family(100, 100, 1);
     let rules: Vec<Box<dyn Aggregator>> = vec![
@@ -66,19 +120,42 @@ fn main() {
         Box::new(Nnm::new(20, Box::new(Cwtm::new(0.1)))),
     ];
     for rule in &rules {
-        run(&rule.name(), 150.0, || rule.aggregate(&msgs));
+        let r = run(&rule.name(), budget(150.0), || rule.aggregate(&msgs));
+        entries.push(record("N=100,Q=100", &rule.name(), "serial", &r, 1.0));
     }
 
-    section("aggregation rules, N=8 Q=409k (e2e transformer scale)");
-    let big = family(8, 409_000, 2);
-    for rule in &rules {
-        run(&rule.name(), 250.0, || rule.aggregate(&big));
-    }
+    let big = if quick() {
+        Vec::new()
+    } else {
+        section("aggregation rules, N=8 Q=409k (e2e transformer scale)");
+        let big = family(8, 409_000, 2);
+        for rule in &rules {
+            let r = run(&rule.name(), budget(250.0), || rule.aggregate(&big));
+            entries.push(record("N=8,Q=409k", &rule.name(), "serial", &r, 1.0));
+        }
+        big
+    };
 
-    // threaded variants: the dense-N case (distance matrix bound) and the
-    // fat-Q case (few rows, huge dot products)
-    threaded_pairwise_section("N=100 Q=100", &msgs, 20);
+    // strategy comparison: the dense-N case (distance matrix bound), the
+    // fat-Q case (few rows, huge dot products), and transformer scale
+    let pool = Pool::new(0);
+    strategy_section("N=100,Q=100", &msgs, 20, &pool, &mut entries);
     let wide = family(100, 4096, 3);
-    threaded_pairwise_section("N=100 Q=4096", &wide, 20);
-    threaded_pairwise_section("N=8 Q=409k", &big, 2);
+    strategy_section("N=100,Q=4096", &wide, 20, &pool, &mut entries);
+    if !quick() {
+        strategy_section("N=8,Q=409k", &big, 2, &pool, &mut entries);
+    }
+
+    // machine-readable dump at the repo root (perf trajectory across PRs)
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("aggregation".into()));
+    root.insert("threads".into(), Json::Num(available_threads() as f64));
+    root.insert("simd".into(), Json::Bool(lad::util::math::SIMD_ACTIVE));
+    root.insert("quick".into(), Json::Bool(quick()));
+    root.insert("entries".into(), Json::Arr(entries));
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_aggregation.json");
+    match std::fs::write(path, Json::Obj(root).to_pretty_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
 }

@@ -1,20 +1,37 @@
 //! Geometric median via Weiszfeld iteration (Chen et al. [6], Pillutla et
 //! al. [8]). Minimizes Σᵢ‖y − xᵢ‖; breakdown point 1/2.
+//!
+//! Each Weiszfeld iteration needs every ‖xᵢ − y‖; the shared
+//! [`CenterScratch`] kernel reuses one distance buffer across iterations
+//! (stable subtract-first distances — essential here, where y converges
+//! onto a message and a Gram expansion would cancel to zero and blow up
+//! the 1/dist weight), and the f32 image of y is materialized once per
+//! iteration (the old loop re-allocated it once per *message*).
 
+use super::gram::CenterScratch;
 use super::{check_family, Aggregator};
-use crate::util::math::dist_sq;
+use crate::util::parallel::Pool;
 
 /// Smoothed Weiszfeld with fixed iteration budget and tolerance.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct GeometricMedian {
     pub max_iters: usize,
     pub tol: f64,
     pub eps: f64,
+    pool: Pool,
 }
 
 impl Default for GeometricMedian {
     fn default() -> Self {
-        GeometricMedian { max_iters: 100, tol: 1e-10, eps: 1e-12 }
+        GeometricMedian { max_iters: 100, tol: 1e-10, eps: 1e-12, pool: Pool::serial() }
+    }
+}
+
+impl GeometricMedian {
+    /// Share a worker pool for the per-iteration distance pass.
+    pub fn with_pool(mut self, pool: &Pool) -> Self {
+        self.pool = pool.clone();
+        self
     }
 }
 
@@ -22,6 +39,7 @@ impl Aggregator for GeometricMedian {
     fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
         let q = check_family(msgs);
         let n = msgs.len();
+        let mut scratch = CenterScratch::new();
         // init at coordinate mean
         let mut y = vec![0.0f64; q];
         for m in msgs {
@@ -31,13 +49,17 @@ impl Aggregator for GeometricMedian {
         }
         y.iter_mut().for_each(|v| *v /= n as f64);
 
+        let mut yd = vec![0.0f32; q];
         let mut next = vec![0.0f64; q];
         for _ in 0..self.max_iters {
+            for (f32v, &f64v) in yd.iter_mut().zip(&y) {
+                *f32v = f64v as f32;
+            }
+            let d2 = scratch.dist_sq_to(msgs, &yd, &self.pool);
             let mut wsum = 0.0f64;
             next.iter_mut().for_each(|v| *v = 0.0);
-            for m in msgs {
-                let yd: Vec<f32> = y.iter().map(|&v| v as f32).collect();
-                let dist = dist_sq(m, &yd).sqrt().max(self.eps);
+            for (m, &d2i) in msgs.iter().zip(d2) {
+                let dist = d2i.sqrt().max(self.eps);
                 let w = 1.0 / dist;
                 wsum += w;
                 for j in 0..q {
@@ -91,5 +113,15 @@ mod tests {
         let msgs = vec![vec![0.0], vec![2.0]];
         let out = GeometricMedian::default().aggregate(&msgs);
         assert!(out[0] >= 0.0 && out[0] <= 2.0);
+    }
+
+    #[test]
+    fn pooled_aggregate_is_bit_identical_to_serial() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let msgs: Vec<Vec<f32>> = (0..40).map(|_| rng.gauss_vec(128)).collect();
+        let serial = GeometricMedian::default().aggregate(&msgs);
+        let pool = Pool::new(8);
+        let pooled = GeometricMedian::default().with_pool(&pool).aggregate(&msgs);
+        assert_eq!(serial, pooled);
     }
 }

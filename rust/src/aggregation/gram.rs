@@ -1,0 +1,281 @@
+//! Shared pairwise-distance kernel for the O(N²Q) aggregation rules.
+//!
+//! Krum, Multi-Krum and NNM all consume the same triangular matrix of
+//! squared distances d(i,j) = ‖xᵢ − xⱼ‖². [`PairwiseDistances`] computes it
+//! exactly once per aggregate call via the Gram expansion
+//! `‖i‖² + ‖j‖² − 2⟨i,j⟩` with cached norms — N(N−1)/2 dot products total,
+//! half of what PR 1's row-parallel pass spent (each d(i,j) was evaluated
+//! once per side there).
+//!
+//! The parallel pass tiles the upper triangle into `TILE`×`TILE` blocks of
+//! (i, j) pairs; each block is one task producing its own scratch vector
+//! (disjoint output, no synchronization), scattered into the full symmetric
+//! matrix afterwards. Every entry is produced by exactly one task with the
+//! same expression the serial loop uses, so serial, scoped and pooled
+//! execution are bit-identical by construction (pinned by
+//! `tests/fuzz_determinism.rs`).
+//!
+//! [`CenterScratch`] is the kernel's one-vs-many sibling for the iterative
+//! reweighting rules (MCC, geometric median) and the κ estimator: the
+//! distance buffer is allocated once and refilled across every reweight
+//! iteration, with the per-message distances fanned out over the pool.
+//! Unlike the pairwise pass it does **not** use the Gram expansion: near a
+//! converged center the expansion cancels catastrophically in f32 (the
+//! Weiszfeld weights would blow up on a clamped-to-zero distance), so each
+//! entry is the numerically stable subtract-first [`dist_sq`], which the
+//! SIMD backend accelerates directly.
+
+use super::par_gate;
+use crate::util::math::{dist_sq, dot, norm_sq};
+use crate::util::parallel::Pool;
+
+/// Maximum row-block edge of one parallel tile: 16×16 pairs of Q-dim dot
+/// products is plenty of work per task while still load-balancing N=100
+/// across many workers (⌈100/16⌉ = 7 row blocks ⇒ 28 tasks). Small
+/// families shrink the tile instead of going serial — see [`tile_for`].
+const TILE: usize = 16;
+
+/// Tile edge for an N-message family on `threads` workers: small enough
+/// that the triangle yields ≥ ~4 tasks per worker (so a fat-Q N=8 family
+/// still spreads its dots), capped at [`TILE`]. Purely a scheduling choice
+/// — every entry is computed by the same expression whatever the tiling,
+/// so results are bit-identical for any tile edge.
+fn tile_for(n: usize, threads: usize) -> usize {
+    let target_blocks = ((4.0 * threads as f64).sqrt().ceil() as usize).max(2);
+    n.div_ceil(target_blocks).clamp(1, TILE)
+}
+
+/// The symmetric N×N squared-distance matrix of a message family, computed
+/// once via the Gram expansion.
+#[derive(Debug, Clone)]
+pub struct PairwiseDistances {
+    n: usize,
+    /// full symmetric matrix, diagonal 0 (row access beats triangular
+    /// packing on the consumer side; N ≤ a few hundred keeps this small)
+    dist: Vec<f64>,
+    norms: Vec<f64>,
+}
+
+impl PairwiseDistances {
+    /// Compute the matrix for `msgs` (equal-length vectors), tiling the
+    /// triangular pass over `pool` when the family is large enough.
+    pub fn compute(msgs: &[Vec<f32>], pool: &Pool) -> Self {
+        let n = msgs.len();
+        let q = msgs.first().map(|m| m.len()).unwrap_or(0);
+        let norms: Vec<f64> = msgs.iter().map(|m| norm_sq(m)).collect();
+        let mut dist = vec![0.0f64; n * n];
+        let entry = |i: usize, j: usize| -> f64 {
+            (norms[i] + norms[j] - 2.0 * dot(&msgs[i], &msgs[j]) as f64).max(0.0)
+        };
+        if pool.is_serial() || !par_gate(n, q) || n < 2 {
+            for i in 0..n {
+                for j in i + 1..n {
+                    let d = entry(i, j);
+                    dist[i * n + j] = d;
+                    dist[j * n + i] = d;
+                }
+            }
+        } else {
+            let tile = tile_for(n, pool.threads());
+            let blocks = n.div_ceil(tile);
+            let mut tasks: Vec<(usize, usize)> = Vec::with_capacity(blocks * (blocks + 1) / 2);
+            for bi in 0..blocks {
+                for bj in bi..blocks {
+                    tasks.push((bi, bj));
+                }
+            }
+            // per-task scratch tiles: disjoint output, stitched serially
+            let tiles: Vec<Vec<f64>> = pool.par_map(&tasks, |_, &(bi, bj)| {
+                let mut out = Vec::with_capacity(tile * tile);
+                for i in bi * tile..((bi + 1) * tile).min(n) {
+                    for j in (bj * tile).max(i + 1)..((bj + 1) * tile).min(n) {
+                        out.push(entry(i, j));
+                    }
+                }
+                out
+            });
+            for (&(bi, bj), t) in tasks.iter().zip(&tiles) {
+                let mut it = t.iter();
+                for i in bi * tile..((bi + 1) * tile).min(n) {
+                    for j in (bj * tile).max(i + 1)..((bj + 1) * tile).min(n) {
+                        let d = *it.next().expect("tile layout mismatch");
+                        dist[i * n + j] = d;
+                        dist[j * n + i] = d;
+                    }
+                }
+            }
+        }
+        PairwiseDistances { n, dist, norms }
+    }
+
+    /// Family size N.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// d(i,j); 0 on the diagonal.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.n && j < self.n);
+        self.dist[i * self.n + j]
+    }
+
+    /// Full row i (diagonal entry included, = 0).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.n);
+        &self.dist[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Cached squared norms ‖xᵢ‖² (free byproduct of the Gram pass).
+    pub fn norms(&self) -> &[f64] {
+        &self.norms
+    }
+}
+
+/// Below this many total elements (messages × dim) the one-vs-many pass
+/// stays on the calling thread — dispatch overhead would dominate.
+const CENTER_PAR_MIN_ELEMS: usize = 1 << 12;
+
+/// Reusable distance scratch for repeated distances-to-a-moving-center
+/// queries — the shape of every iteratively-reweighted rule (MCC
+/// reweighting, Weiszfeld iterations) and of the κ estimator's spread
+/// computation. The output buffer is allocated once and reused across
+/// iterations; each entry is the subtract-first [`dist_sq`] (stable near a
+/// converged center, where the Gram expansion would cancel to a clamped
+/// zero and explode the reweight), fanned out over the pool when the
+/// family is large enough — bit-identical either way (entries are
+/// independent).
+#[derive(Debug, Clone, Default)]
+pub struct CenterScratch {
+    d2: Vec<f64>,
+}
+
+impl CenterScratch {
+    pub fn new() -> Self {
+        CenterScratch { d2: Vec::new() }
+    }
+
+    /// Fill the internal buffer with ‖msgs[i] − c‖² and return it.
+    pub fn dist_sq_to(&mut self, msgs: &[Vec<f32>], c: &[f32], pool: &Pool) -> &[f64] {
+        self.d2.clear();
+        if !pool.is_serial() && msgs.len() * c.len() >= CENTER_PAR_MIN_ELEMS {
+            self.d2.extend(pool.par_map(msgs, |_, m| dist_sq(m, c)));
+        } else {
+            self.d2.extend(msgs.iter().map(|m| dist_sq(m, c)));
+        }
+        &self.d2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math::dist_sq;
+    use crate::util::parallel::Parallelism;
+    use crate::util::rng::Rng;
+
+    fn family(n: usize, q: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.gauss_vec(q)).collect()
+    }
+
+    #[test]
+    fn matches_direct_distances_within_float_error() {
+        let msgs = family(12, 9, 1);
+        let pd = PairwiseDistances::compute(&msgs, &Pool::serial());
+        for i in 0..12 {
+            assert_eq!(pd.get(i, i), 0.0);
+            for j in 0..12 {
+                let direct = dist_sq(&msgs[i], &msgs[j]);
+                let scale = direct.max(1.0);
+                assert!(
+                    (pd.get(i, j) - direct).abs() < 1e-4 * scale,
+                    "d({i},{j}): gram {} vs direct {direct}",
+                    pd.get(i, j)
+                );
+                assert_eq!(pd.get(i, j), pd.get(j, i), "symmetry");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_parallel_pass_is_bit_identical_to_serial() {
+        // n ≥ 2·TILE and n²·q above the gate so tiling genuinely engages
+        let msgs = family(45, 64, 2);
+        let serial = PairwiseDistances::compute(&msgs, &Pool::serial());
+        for pool in [Pool::new(4), Pool::new(8), Pool::scoped(Parallelism::new(3))] {
+            let par = PairwiseDistances::compute(&msgs, &pool);
+            assert_eq!(serial.dist, par.dist, "{pool:?}");
+            assert_eq!(serial.norms, par.norms, "{pool:?}");
+        }
+    }
+
+    #[test]
+    fn ragged_tile_edges_are_covered() {
+        // n not a multiple of the tile edge: every off-diagonal entry must
+        // be filled
+        let msgs = family(2 * TILE + 3, 97, 3);
+        let pd = PairwiseDistances::compute(&msgs, &Pool::new(4));
+        for i in 0..pd.n() {
+            for j in 0..pd.n() {
+                if i != j {
+                    assert!(pd.get(i, j) > 0.0, "unfilled entry d({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_n_fat_q_still_tiles_and_matches_serial() {
+        // n far below TILE but n²·q above the gate: the adaptive tile must
+        // engage (fat-Q regime) and stay bit-identical to serial
+        for n in [2usize, 3, 8, 20] {
+            let msgs = family(n, 70_000 / (n * n) + 16, 40 + n as u64);
+            let serial = PairwiseDistances::compute(&msgs, &Pool::serial());
+            let par = PairwiseDistances::compute(&msgs, &Pool::new(8));
+            assert_eq!(serial.dist, par.dist, "n={n}");
+        }
+        // tile_for spreads small families over multiple blocks
+        assert!(tile_for(8, 8) < 8);
+        assert!(tile_for(1, 8) >= 1);
+        assert!(tile_for(1000, 8) <= TILE);
+    }
+
+    #[test]
+    fn norms_accessor_matches_norm_sq() {
+        let msgs = family(6, 17, 4);
+        let pd = PairwiseDistances::compute(&msgs, &Pool::serial());
+        for (m, &n2) in msgs.iter().zip(pd.norms()) {
+            assert_eq!(n2, norm_sq(m));
+        }
+    }
+
+    #[test]
+    fn center_scratch_matches_direct_and_is_pool_invariant() {
+        let msgs = family(40, 120, 5);
+        let c = family(1, 120, 6).pop().unwrap();
+        let mut scratch = CenterScratch::new();
+        let serial: Vec<f64> = scratch.dist_sq_to(&msgs, &c, &Pool::serial()).to_vec();
+        for (m, &d2) in msgs.iter().zip(&serial) {
+            assert_eq!(d2, dist_sq(m, &c), "stable direct distance, exactly");
+        }
+        let pooled: Vec<f64> = scratch.dist_sq_to(&msgs, &c, &Pool::new(4)).to_vec();
+        assert_eq!(serial, pooled);
+        // reuse: second query with another center refills the same buffer
+        let c2 = family(1, 120, 7).pop().unwrap();
+        assert_eq!(scratch.dist_sq_to(&msgs, &c2, &Pool::serial()).len(), msgs.len());
+    }
+
+    #[test]
+    fn center_scratch_is_stable_near_a_converged_center() {
+        // the reason CenterScratch is NOT Gram-based: center == a message
+        // with large norms must give exactly 0, not cancellation noise
+        let big: Vec<f32> = (0..4096).map(|i| 100.0 + (i % 7) as f32).collect();
+        let msgs = vec![big.clone(), big.iter().map(|x| x + 1.0).collect()];
+        let mut scratch = CenterScratch::new();
+        let d2 = scratch.dist_sq_to(&msgs, &big, &Pool::serial()).to_vec();
+        assert_eq!(d2[0], 0.0);
+        assert!((d2[1] - 4096.0).abs() < 1e-6, "{}", d2[1]);
+    }
+}

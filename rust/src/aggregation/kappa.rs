@@ -6,20 +6,30 @@
 //! small portfolio of adversarial placements — enough to (a) sanity-check
 //! that robust rules have small κ while the mean does not, and (b) feed a
 //! measured κ into the theory formulas for the Fig. 2/3 reproductions.
+//!
+//! The honest spread Σ‖zᵢ − z̄‖² is computed through the shared
+//! [`CenterScratch`] kernel (one distance buffer reused across every trial)
+//! and shared by the whole adversarial portfolio of each trial.
 
+use super::gram::CenterScratch;
 use super::Aggregator;
 use crate::util::math::{dist_sq, mean_of};
+use crate::util::parallel::Pool;
 use crate::util::rng::Rng;
 
-/// One adversarial scenario's ratio; κ̂ is the max over scenarios.
-fn ratio(agg: &dyn Aggregator, honest: &[Vec<f32>], byz: &[Vec<f32>]) -> f64 {
-    let zbar = mean_of(&honest.iter().map(|v| v.as_slice()).collect::<Vec<_>>());
-    let spread: f64 =
-        honest.iter().map(|z| dist_sq(z, &zbar)).sum::<f64>() / honest.len() as f64;
+/// One adversarial scenario's ratio against a precomputed honest baseline;
+/// κ̂ is the max over scenarios.
+fn ratio(
+    agg: &dyn Aggregator,
+    honest: &[Vec<f32>],
+    byz: &[Vec<f32>],
+    zbar: &[f32],
+    spread: f64,
+) -> f64 {
     let mut msgs: Vec<Vec<f32>> = honest.to_vec();
     msgs.extend_from_slice(byz);
     let out = agg.aggregate(&msgs);
-    let dev = dist_sq(&out, &zbar);
+    let dev = dist_sq(&out, zbar);
     if spread < 1e-18 {
         if dev < 1e-18 {
             0.0
@@ -40,24 +50,29 @@ pub fn estimate_kappa(
     trials: usize,
     rng: &mut Rng,
 ) -> f64 {
+    let pool = Pool::serial();
+    let mut scratch = CenterScratch::new();
     let mut kappa: f64 = 0.0;
     for _ in 0..trials {
-        let spread = 10f64.powf(rng.f64() * 2.0 - 1.0); // 0.1 .. 10
+        let spread_scale = 10f64.powf(rng.f64() * 2.0 - 1.0); // 0.1 .. 10
         let honest: Vec<Vec<f32>> = (0..h)
-            .map(|_| (0..dim).map(|_| rng.normal(0.0, spread) as f32).collect())
+            .map(|_| (0..dim).map(|_| rng.normal(0.0, spread_scale) as f32).collect())
             .collect();
         let zbar =
             mean_of(&honest.iter().map(|v| v.as_slice()).collect::<Vec<_>>());
+        let d2 = scratch.dist_sq_to(&honest, &zbar, &pool);
+        let spread = d2.iter().sum::<f64>() / h as f64;
         // adversarial portfolio: far point, sign-flip of mean, mimic extreme
         // honest, small-norm bias
-        let far: Vec<f32> = zbar.iter().map(|x| x + 100.0 * spread as f32).collect();
+        let far: Vec<f32> =
+            zbar.iter().map(|x| x + 100.0 * spread_scale as f32).collect();
         let flip: Vec<f32> = zbar.iter().map(|x| -2.0 * x).collect();
         let zero = vec![0.0f32; dim];
         let shifted: Vec<f32> =
-            zbar.iter().map(|x| x + 3.0 * spread as f32).collect();
+            zbar.iter().map(|x| x + 3.0 * spread_scale as f32).collect();
         for adv in [&far, &flip, &zero, &shifted] {
             let byz: Vec<Vec<f32>> = (0..f).map(|_| adv.clone()).collect();
-            let r = ratio(agg, &honest, &byz);
+            let r = ratio(agg, &honest, &byz, &zbar, spread);
             if r.is_finite() {
                 kappa = kappa.max(r);
             }

@@ -3,60 +3,30 @@
 //! score(i) = Σ of the n−f−2 smallest squared distances from xᵢ to the other
 //! messages; Krum returns the argmin message, Multi-Krum averages the
 //! m = n − f best-scored messages.
+//!
+//! Both rules read the shared [`PairwiseDistances`] kernel: one triangular
+//! Gram pass (tiled over the pool when large enough) feeds every score, so
+//! each d(i,j) is computed exactly once — half the dot products of the old
+//! row-parallel pass, and Krum + Multi-Krum on the same family share the
+//! same kernel shape. The per-row partial sort is O(N²) with no Q factor
+//! and stays serial.
 
-use super::{check_family, par_gate, Aggregator};
+use super::gram::PairwiseDistances;
+use super::{check_family, Aggregator};
 use crate::util::math::mean_of;
-use crate::util::parallel::{par_map, Parallelism};
+use crate::util::parallel::{Parallelism, Pool};
 
-fn scores(msgs: &[Vec<f32>], f: usize, par: Parallelism) -> Vec<f64> {
+fn scores(msgs: &[Vec<f32>], f: usize, pool: &Pool) -> Vec<f64> {
     let n = msgs.len();
     // number of neighbors summed per Krum: n - f - 2, floored at 1
     let m = n.saturating_sub(f + 2).max(1);
-    let norms: Vec<f64> = msgs.iter().map(|v| crate::util::math::norm_sq(v)).collect();
-    let q = msgs.first().map(|v| v.len()).unwrap_or(0);
-    if !par.is_serial() && par_gate(n, q) {
-        // Row-parallel: each score only needs row i's distances, so no
-        // shared matrix at all. Each d(i,j) is computed twice (once per
-        // row), but the rows split across T threads — wall-clock beats the
-        // halved serial pass for T ≥ 2. Bit-identical to the serial path:
-        // f64 +/× are commutative and both paths evaluate
-        // norms[i]+norms[j]−2·dot(i,j) with the same accumulation order.
-        return par_map(par, msgs, |i, mi| {
-            let mut dists: Vec<f64> = Vec::with_capacity(n - 1);
-            for (j, mj) in msgs.iter().enumerate() {
-                if j == i {
-                    continue;
-                }
-                dists.push(
-                    (norms[i] + norms[j] - 2.0 * crate::util::math::dot(mi, mj) as f64)
-                        .max(0.0),
-                );
-            }
-            let k = m.min(dists.len());
-            if k < dists.len() {
-                dists.select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));
-            }
-            dists[..k].iter().sum()
-        });
-    }
-    // Serial perf: symmetric pairwise distances via the Gram expansion with
-    // cached norms — halves the dominant dot-product count
-    // (EXPERIMENTS.md §Perf).
-    let mut dist = vec![0.0f64; n * n];
-    for i in 0..n {
-        for j in i + 1..n {
-            let dij = (norms[i] + norms[j]
-                - 2.0 * crate::util::math::dot(&msgs[i], &msgs[j]) as f64)
-                .max(0.0);
-            dist[i * n + j] = dij;
-            dist[j * n + i] = dij;
-        }
-    }
+    let pd = PairwiseDistances::compute(msgs, pool);
     let mut out = Vec::with_capacity(n);
-    let mut dists: Vec<f64> = Vec::with_capacity(n - 1);
+    let mut dists: Vec<f64> = Vec::with_capacity(n.saturating_sub(1));
     for i in 0..n {
         dists.clear();
-        dists.extend((0..n).filter(|&j| j != i).map(|j| dist[i * n + j]));
+        let row = pd.row(i);
+        dists.extend((0..n).filter(|&j| j != i).map(|j| row[j]));
         let k = m.min(dists.len());
         if k < dists.len() {
             dists.select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));
@@ -67,28 +37,34 @@ fn scores(msgs: &[Vec<f32>], f: usize, par: Parallelism) -> Vec<f64> {
 }
 
 /// Classic Krum: select the single most central message.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct Krum {
     f: usize,
-    par: Parallelism,
+    pool: Pool,
 }
 
 impl Krum {
     pub fn new(f: usize) -> Self {
-        Krum { f, par: Parallelism::serial() }
+        Krum { f, pool: Pool::serial() }
     }
 
-    /// Enable the row-parallel O(N²Q) distance pass.
-    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
-        self.par = par;
+    /// Share a worker pool for the tiled O(N²Q) distance pass.
+    pub fn with_pool(mut self, pool: &Pool) -> Self {
+        self.pool = pool.clone();
         self
+    }
+
+    /// Scoped-spawn parallelism (no persistent workers) — the pre-pool API.
+    pub fn with_parallelism(self, par: Parallelism) -> Self {
+        let pool = Pool::scoped(par);
+        self.with_pool(&pool)
     }
 }
 
 impl Aggregator for Krum {
     fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
         check_family(msgs);
-        let s = scores(msgs, self.f, self.par);
+        let s = scores(msgs, self.f, &self.pool);
         let best = s
             .iter()
             .enumerate()
@@ -104,21 +80,27 @@ impl Aggregator for Krum {
 }
 
 /// Multi-Krum: average the n−f best-scored messages.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct MultiKrum {
     f: usize,
-    par: Parallelism,
+    pool: Pool,
 }
 
 impl MultiKrum {
     pub fn new(f: usize) -> Self {
-        MultiKrum { f, par: Parallelism::serial() }
+        MultiKrum { f, pool: Pool::serial() }
     }
 
-    /// Enable the row-parallel O(N²Q) distance pass.
-    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
-        self.par = par;
+    /// Share a worker pool for the tiled O(N²Q) distance pass.
+    pub fn with_pool(mut self, pool: &Pool) -> Self {
+        self.pool = pool.clone();
         self
+    }
+
+    /// Scoped-spawn parallelism (no persistent workers) — the pre-pool API.
+    pub fn with_parallelism(self, par: Parallelism) -> Self {
+        let pool = Pool::scoped(par);
+        self.with_pool(&pool)
     }
 }
 
@@ -127,7 +109,7 @@ impl Aggregator for MultiKrum {
         check_family(msgs);
         let n = msgs.len();
         let keep = n.saturating_sub(self.f).max(1);
-        let s = scores(msgs, self.f, self.par);
+        let s = scores(msgs, self.f, &self.pool);
         let mut idx: Vec<usize> = (0..n).collect();
         idx.sort_by(|&a, &b| s[a].partial_cmp(&s[b]).unwrap());
         let selected: Vec<&[f32]> =
@@ -187,17 +169,18 @@ mod tests {
     }
 
     #[test]
-    fn parallel_scores_are_bit_identical_to_serial() {
-        // sized to clear the par gate (n²·q ≥ 2¹⁶)
+    fn pooled_scores_are_bit_identical_to_serial() {
+        // sized to clear the tile gate (n ≥ 32, n²·q ≥ 2¹⁶)
         let mut rng = Rng::new(4);
         let msgs: Vec<Vec<f32>> = (0..40).map(|_| rng.gauss_vec(64)).collect();
-        let serial = scores(&msgs, 8, Parallelism::serial());
-        for threads in [2usize, 3, 8] {
-            let par = scores(&msgs, 8, Parallelism::new(threads));
-            assert_eq!(serial, par, "threads={threads}");
+        let serial = scores(&msgs, 8, &Pool::serial());
+        for pool in [Pool::new(2), Pool::new(8), Pool::scoped(Parallelism::new(3))] {
+            let par = scores(&msgs, 8, &pool);
+            assert_eq!(serial, par, "{pool:?}");
         }
+        let pool = Pool::new(8);
         let a = Krum::new(8).aggregate(&msgs);
-        let b = Krum::new(8).with_parallelism(Parallelism::new(8)).aggregate(&msgs);
+        let b = Krum::new(8).with_pool(&pool).aggregate(&msgs);
         assert_eq!(a, b);
         let a = MultiKrum::new(8).aggregate(&msgs);
         let b = MultiKrum::new(8).with_parallelism(Parallelism::new(8)).aggregate(&msgs);

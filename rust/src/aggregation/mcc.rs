@@ -3,20 +3,35 @@
 //! Iteratively-reweighted mean with Gaussian-kernel weights
 //! wᵢ = exp(−‖xᵢ − c‖² / (2σ²)); σ² is set adaptively to the mean squared
 //! deviation so the kernel bandwidth tracks the honest spread.
+//!
+//! The per-iteration distance pass runs through the shared
+//! [`CenterScratch`] kernel: one reused distance buffer across reweight
+//! iterations, numerically stable subtract-first distances, pool-parallel
+//! over messages when the family is large.
 
+use super::gram::CenterScratch;
 use super::{check_family, Aggregator};
-use crate::util::math::dist_sq;
+use crate::util::parallel::Pool;
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct Mcc {
     pub iters: usize,
     /// bandwidth multiplier on the adaptive σ²
     pub sigma_scale: f64,
+    pool: Pool,
 }
 
 impl Default for Mcc {
     fn default() -> Self {
-        Mcc { iters: 10, sigma_scale: 1.0 }
+        Mcc { iters: 10, sigma_scale: 1.0, pool: Pool::serial() }
+    }
+}
+
+impl Mcc {
+    /// Share a worker pool for the per-iteration distance pass.
+    pub fn with_pool(mut self, pool: &Pool) -> Self {
+        self.pool = pool.clone();
+        self
     }
 }
 
@@ -24,6 +39,7 @@ impl Aggregator for Mcc {
     fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
         let q = check_family(msgs);
         let n = msgs.len();
+        let mut scratch = CenterScratch::new();
         let mut c: Vec<f32> = {
             let mut s = vec![0.0f64; q];
             for m in msgs {
@@ -34,7 +50,7 @@ impl Aggregator for Mcc {
             s.iter().map(|&v| (v / n as f64) as f32).collect()
         };
         for _ in 0..self.iters {
-            let d2: Vec<f64> = msgs.iter().map(|m| dist_sq(m, &c)).collect();
+            let d2 = scratch.dist_sq_to(msgs, &c, &self.pool);
             let sigma2 =
                 (d2.iter().sum::<f64>() / n as f64).max(1e-12) * self.sigma_scale;
             let w: Vec<f64> =
@@ -90,5 +106,16 @@ mod tests {
         msgs.push(vec![10.0]);
         let out = Mcc::default().aggregate(&msgs);
         assert!(out[0] < 1.5, "{}", out[0]);
+    }
+
+    #[test]
+    fn pooled_aggregate_is_bit_identical_to_serial() {
+        // sized above the center-distance gate (n·q ≥ 4096)
+        let mut rng = Rng::new(2);
+        let msgs: Vec<Vec<f32>> = (0..40).map(|_| rng.gauss_vec(128)).collect();
+        let serial = Mcc::default().aggregate(&msgs);
+        let pool = Pool::new(8);
+        let pooled = Mcc::default().with_pool(&pool).aggregate(&msgs);
+        assert_eq!(serial, pooled);
     }
 }

@@ -26,21 +26,33 @@
 //!
 //! For N messages of dimension Q, with f the assumed Byzantine count:
 //!
-//! | Rule                          | Per-call cost            | Notes |
-//! |-------------------------------|--------------------------|-------|
-//! | [`Mean`] (VA)                 | O(NQ)                    | κ unbounded — baseline only |
-//! | [`Cwtm`] (trimmed mean [7])   | O(NQ) expected           | per-coordinate double `select_nth` |
-//! | [`CoordinateMedian`] [4]      | O(NQ) expected           | linear-time selection per coordinate |
-//! | [`GeometricMedian`] [6,8]     | O(T·NQ), T Weiszfeld iters | breakdown point 1/2 |
-//! | [`Krum`] / [`MultiKrum`] [3]  | O(N²Q)                   | pairwise distances dominate; row-parallel |
-//! | [`Mcc`] (correntropy [9])     | O(T·NQ), T reweight iters | adaptive Gaussian kernel |
-//! | [`Faba`] [5]                  | O(f·NQ)                  | f farthest-from-mean removals |
-//! | [`Tgn`] (norm filter [19])    | O(NQ + N log N)          | drops ⌈βN⌉ largest norms |
-//! | [`Nnm`] pre-aggregation [23]  | O(N²Q) + inner rule      | row-parallel mixing pass |
+//! | Rule                         | Per-call cost          | Notes |
+//! |------------------------------|------------------------|-------|
+//! | [`Mean`] (VA)                | O(NQ)                  | κ unbounded — baseline only |
+//! | [`Cwtm`] (trimmed mean [7])  | O(NQ) expected         | per-coord double `select_nth` |
+//! | [`CoordinateMedian`] [4]     | O(NQ) expected         | linear-time selection per coord |
+//! | [`GeometricMedian`] [6,8]    | O(T·NQ), T Weiszfeld   | `CenterScratch`; breakdown 1/2 |
+//! | [`Krum`] / [`MultiKrum`] [3] | O(N²Q/2) + O(N²)       | one shared tiled Gram pass |
+//! | [`Mcc`] (correntropy [9])    | O(T·NQ), T reweights   | `CenterScratch`; adaptive kernel |
+//! | [`Faba`] [5]                 | O(f·NQ)                | f farthest-from-mean removals |
+//! | [`Tgn`] (norm filter [19])   | O(NQ + N log N)        | drops ⌈βN⌉ largest norms |
+//! | [`Nnm`] pre-aggregation [23] | O(N²Q/2) + inner rule  | Gram pass + parallel mixing |
 //!
-//! The two O(N²Q) rules accept a [`Parallelism`] via `with_parallelism`
-//! (wired from [`TrainConfig::threads`] by [`from_config`]); their parallel
-//! and serial passes are bit-identical.
+//! # The gram/pool subsystem
+//!
+//! The distance-consuming rules are built on two shared kernels in
+//! [`gram`]: [`gram::PairwiseDistances`] computes the triangular distance
+//! matrix exactly once per aggregate call via `‖i‖²+‖j‖²−2⟨i,j⟩` (tiled
+//! into disjoint per-task scratch for the parallel pass), and
+//! [`gram::CenterScratch`] reuses one pool-parallel distance buffer across
+//! the reweight iterations of MCC / geometric median and the κ estimator
+//! (stable subtract-first distances, not the Gram form). Underneath,
+//! every rule that parallelizes holds a [`Pool`] handle — a persistent
+//! worker pool shared with the trainer's gradient oracle and compression
+//! stages via [`from_config_pooled`] (the [`TrainConfig::threads`] wiring);
+//! `with_parallelism` keeps the scoped-spawn engine available behind the
+//! same API. Serial, scoped and pooled passes are bit-identical — pinned by
+//! `tests/fuzz_determinism.rs`.
 //!
 //! # Example
 //!
@@ -62,6 +74,7 @@
 pub mod cwtm;
 pub mod faba;
 pub mod geometric_median;
+pub mod gram;
 pub mod kappa;
 pub mod krum;
 pub mod mcc;
@@ -71,7 +84,7 @@ pub mod nnm;
 pub mod tgn;
 
 use crate::config::{AggregatorKind, TrainConfig};
-use crate::util::parallel::Parallelism;
+use crate::util::parallel::Pool;
 
 /// A robust aggregation rule agg(·) (Definition 1).
 pub trait Aggregator: Send + Sync {
@@ -91,24 +104,34 @@ pub use median::CoordinateMedian;
 pub use nnm::Nnm;
 pub use tgn::Tgn;
 
-/// Build the aggregator described by a config (including NNM wrapping).
-/// The O(N²Q) rules pick up `cfg.threads` for their row-parallel passes.
+/// Build the aggregator described by a config (including NNM wrapping),
+/// spinning up a private [`Pool`] from `cfg.threads`. Prefer
+/// [`from_config_pooled`] when the run already owns a pool (the trainer
+/// path), so aggregation shares workers with the oracle and compression.
 pub fn from_config(cfg: &TrainConfig) -> Box<dyn Aggregator> {
+    from_config_pooled(cfg, &Pool::new(cfg.threads))
+}
+
+/// [`from_config`] with an explicit shared worker pool. Every rule with a
+/// parallel pass (Krum, Multi-Krum, NNM, MCC, geometric median) clones the
+/// handle; the workers live until the last clone drops.
+pub fn from_config_pooled(cfg: &TrainConfig, pool: &Pool) -> Box<dyn Aggregator> {
     let f = cfg.n_byz();
-    let par = Parallelism::new(cfg.threads);
     let base: Box<dyn Aggregator> = match cfg.aggregator {
         AggregatorKind::Mean => Box::new(Mean),
         AggregatorKind::Cwtm => Box::new(Cwtm::new(cfg.trim_frac)),
         AggregatorKind::Median => Box::new(CoordinateMedian),
-        AggregatorKind::GeometricMedian => Box::new(GeometricMedian::default()),
-        AggregatorKind::Krum => Box::new(Krum::new(f).with_parallelism(par)),
-        AggregatorKind::MultiKrum => Box::new(MultiKrum::new(f).with_parallelism(par)),
-        AggregatorKind::Mcc => Box::new(Mcc::default()),
+        AggregatorKind::GeometricMedian => {
+            Box::new(GeometricMedian::default().with_pool(pool))
+        }
+        AggregatorKind::Krum => Box::new(Krum::new(f).with_pool(pool)),
+        AggregatorKind::MultiKrum => Box::new(MultiKrum::new(f).with_pool(pool)),
+        AggregatorKind::Mcc => Box::new(Mcc::default().with_pool(pool)),
         AggregatorKind::Faba => Box::new(Faba::new(f)),
         AggregatorKind::Tgn => Box::new(Tgn::new(cfg.trim_frac)),
     };
     if cfg.nnm {
-        Box::new(Nnm::new(f, base).with_parallelism(par))
+        Box::new(Nnm::new(f, base).with_pool(pool))
     } else {
         base
     }
@@ -122,9 +145,10 @@ pub(crate) fn check_family(msgs: &[Vec<f32>]) -> usize {
     q
 }
 
-/// Size gate for the row-parallel O(N²Q) passes: below roughly 2¹⁶ units of
-/// distance work the spawn overhead dominates. Purely a performance
-/// heuristic — the serial and parallel passes are bit-identical either way.
+/// Size gate for the parallel O(N²Q) passes (tiled Gram fill, NNM row
+/// mixing): below roughly 2¹⁶ units of distance work the dispatch overhead
+/// dominates. Purely a performance heuristic — the serial and parallel
+/// passes are bit-identical either way.
 pub(crate) fn par_gate(n: usize, q: usize) -> bool {
     n.saturating_mul(n).saturating_mul(q.max(1)) >= 1 << 16
 }
@@ -151,6 +175,21 @@ mod tests {
             let agg = from_config(&cfg);
             let out = agg.aggregate(&vec![vec![1.0, 2.0]; 10]);
             assert_eq!(out.len(), 2);
+        }
+    }
+
+    #[test]
+    fn from_config_pooled_shares_one_pool_and_matches_serial() {
+        let pool = Pool::new(4);
+        for kind in [AggregatorKind::Krum, AggregatorKind::MultiKrum, AggregatorKind::Mcc] {
+            let mut cfg = TrainConfig::default();
+            cfg.aggregator = kind;
+            cfg.nnm = true;
+            let msgs: Vec<Vec<f32>> =
+                (0..40).map(|i| (0..64).map(|j| ((i * 64 + j) % 13) as f32).collect()).collect();
+            let serial = from_config(&cfg).aggregate(&msgs);
+            let pooled = from_config_pooled(&cfg, &pool).aggregate(&msgs);
+            assert_eq!(serial, pooled, "{kind:?}");
         }
     }
 

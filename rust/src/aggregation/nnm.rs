@@ -3,84 +3,49 @@
 //! (including itself), then apply any base rule. NNM provably upgrades any
 //! (f, κ)-robust rule to optimal robustness under heterogeneity.
 //!
-//! Hot-path note: the O(n²) distance pass dominates at N=100, Q=100; we
-//! compute squared distances via the Gram expansion ‖a−b‖² = ‖a‖²+‖b‖²−2a·b
-//! with cached norms, then select the n−f nearest with a partial sort.
+//! Hot-path note: the O(n²Q) distance pass reads the shared
+//! [`PairwiseDistances`] kernel — one tiled triangular Gram pass, each
+//! d(i,j) computed exactly once. The per-row selection + averaging
+//! (O(nQ) per row) is parallelized over the pool on top of the shared
+//! matrix; both stages are bit-identical to serial by construction.
 
+use super::gram::PairwiseDistances;
 use super::{check_family, par_gate, Aggregator};
-use crate::util::math::{axpy, dot, norm_sq, scale};
-use crate::util::parallel::{par_map, Parallelism};
+use crate::util::math::{axpy, scale};
+use crate::util::parallel::{Parallelism, Pool};
 
 pub struct Nnm {
     f: usize,
     inner: Box<dyn Aggregator>,
-    par: Parallelism,
+    pool: Pool,
 }
 
 impl Nnm {
     pub fn new(f: usize, inner: Box<dyn Aggregator>) -> Self {
-        Nnm { f, inner, par: Parallelism::serial() }
+        Nnm { f, inner, pool: Pool::serial() }
     }
 
-    /// Enable the row-parallel O(N²Q) mixing pass.
-    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
-        self.par = par;
+    /// Share a worker pool for the tiled distance pass and the row mixing.
+    pub fn with_pool(mut self, pool: &Pool) -> Self {
+        self.pool = pool.clone();
         self
     }
 
+    /// Scoped-spawn parallelism (no persistent workers) — the pre-pool API.
+    pub fn with_parallelism(self, par: Parallelism) -> Self {
+        let pool = Pool::scoped(par);
+        self.with_pool(&pool)
+    }
+
     /// The mixing step alone (exposed for tests and ablation).
-    ///
-    /// Perf: serially, the O(n²) distance matrix is computed once,
-    /// symmetrically (d(i,j) = d(j,i)), via the Gram expansion with cached
-    /// norms — halving the dominant dot-product count (EXPERIMENTS.md
-    /// §Perf). With `threads > 1` each mixed row is produced independently
-    /// (its own distances, selection and average), which re-computes each
-    /// d(i,j) once per side but splits rows across threads — a wall-clock
-    /// win from 2 threads up, with bit-identical output (commutative f64
-    /// +/× and identical per-row evaluation order).
     pub fn mix(&self, msgs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         let q = check_family(msgs);
         let n = msgs.len();
         let keep = n.saturating_sub(self.f).max(1);
-        let norms: Vec<f64> = msgs.iter().map(|m| norm_sq(m)).collect();
-        if !self.par.is_serial() && par_gate(n, q) {
-            return par_map(self.par, msgs, |i, mi| {
-                let mut d: Vec<(f64, usize)> = Vec::with_capacity(n);
-                for (j, mj) in msgs.iter().enumerate() {
-                    let dij = if j == i {
-                        0.0
-                    } else {
-                        (norms[i] + norms[j] - 2.0 * dot(mi, mj) as f64).max(0.0)
-                    };
-                    d.push((dij, j));
-                }
-                if keep < n {
-                    d.select_nth_unstable_by(keep - 1, |a, b| a.0.total_cmp(&b.0));
-                }
-                let mut y = vec![0.0f32; q];
-                for &(_, j) in &d[..keep] {
-                    axpy(1.0, &msgs[j], &mut y);
-                }
-                scale(&mut y, 1.0 / keep as f32);
-                y
-            });
-        }
-        // symmetric distance matrix, upper triangle computed once
-        let mut dist = vec![0.0f64; n * n];
-        for i in 0..n {
-            for j in i + 1..n {
-                let dij = (norms[i] + norms[j]
-                    - 2.0 * dot(&msgs[i], &msgs[j]) as f64)
-                    .max(0.0);
-                dist[i * n + j] = dij;
-                dist[j * n + i] = dij;
-            }
-        }
-        let mut mixed = Vec::with_capacity(n);
-        let mut d: Vec<(f64, usize)> = Vec::with_capacity(n);
-        for i in 0..n {
-            d.clear();
-            d.extend(dist[i * n..(i + 1) * n].iter().copied().zip(0..n));
+        let pd = PairwiseDistances::compute(msgs, &self.pool);
+        let mix_row = |i: usize| -> Vec<f32> {
+            // the diagonal entry d(i,i) = 0 keeps xᵢ among its own neighbors
+            let mut d: Vec<(f64, usize)> = pd.row(i).iter().copied().zip(0..n).collect();
             if keep < n {
                 d.select_nth_unstable_by(keep - 1, |a, b| a.0.total_cmp(&b.0));
             }
@@ -89,9 +54,14 @@ impl Nnm {
                 axpy(1.0, &msgs[j], &mut y);
             }
             scale(&mut y, 1.0 / keep as f32);
-            mixed.push(y);
+            y
+        };
+        if !self.pool.is_serial() && par_gate(n, q) {
+            let idx: Vec<usize> = (0..n).collect();
+            self.pool.par_map(&idx, |_, &i| mix_row(i))
+        } else {
+            (0..n).map(mix_row).collect()
         }
-        mixed
     }
 }
 
@@ -172,15 +142,13 @@ mod tests {
     }
 
     #[test]
-    fn parallel_mix_is_bit_identical_to_serial() {
+    fn pooled_mix_is_bit_identical_to_serial() {
         let mut rng = Rng::new(5);
         let msgs: Vec<Vec<f32>> = (0..40).map(|_| rng.gauss_vec(64)).collect();
         let serial = Nnm::new(6, Box::new(Mean)).mix(&msgs);
-        for threads in [2usize, 8] {
-            let par = Nnm::new(6, Box::new(Mean))
-                .with_parallelism(Parallelism::new(threads))
-                .mix(&msgs);
-            assert_eq!(serial, par, "threads={threads}");
+        for pool in [Pool::new(2), Pool::new(8), Pool::scoped(Parallelism::new(8))] {
+            let par = Nnm::new(6, Box::new(Mean)).with_pool(&pool).mix(&msgs);
+            assert_eq!(serial, par, "{pool:?}");
         }
     }
 

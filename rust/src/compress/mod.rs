@@ -22,7 +22,7 @@ pub mod rand_k;
 pub mod top_k;
 
 use crate::config::CompressionKind;
-use crate::util::parallel::{par_map_mut, Parallelism};
+use crate::util::parallel::Pool;
 use crate::util::rng::Rng;
 
 /// A compressed message: the dense reconstruction the server aggregates,
@@ -72,13 +72,14 @@ pub fn from_kind(kind: CompressionKind) -> Box<dyn Compressor> {
 }
 
 /// Below this many total elements (messages × dim), per-device compression
-/// runs on the calling thread — spawn overhead would dominate. Purely a
+/// runs on the calling thread — dispatch overhead would dominate. Purely a
 /// performance gate: each message owns its RNG stream, so serial and
 /// parallel execution are bit-identical regardless.
 const PAR_MIN_ELEMS: usize = 4096;
 
 /// Compress one message per pre-split RNG stream (device order), in
-/// parallel, returning the dense reconstructions and the total wire bits.
+/// parallel on the shared worker pool, returning the dense reconstructions
+/// and the total wire bits.
 ///
 /// This is the uplink step of Algorithms 1–2 as both the fast trainer and
 /// the threaded cluster leader execute it. Determinism contract: `rngs[i]`
@@ -89,12 +90,13 @@ pub fn compress_batch(
     comp: &dyn Compressor,
     msgs: &[&[f32]],
     rngs: &mut [Rng],
-    par: Parallelism,
+    pool: &Pool,
 ) -> (Vec<Vec<f32>>, u64) {
     assert_eq!(msgs.len(), rngs.len(), "one RNG stream per message");
     let q = msgs.first().map(|m| m.len()).unwrap_or(0);
-    let par = if msgs.len() * q >= PAR_MIN_ELEMS { par } else { Parallelism::serial() };
-    let compressed = par_map_mut(par, rngs, |i, rng| comp.compress(msgs[i], rng));
+    let serial = Pool::serial();
+    let pool = if msgs.len() * q >= PAR_MIN_ELEMS { pool } else { &serial };
+    let compressed = pool.par_map_mut(rngs, |i, rng| comp.compress(msgs[i], rng));
     let bits = compressed.iter().map(|c| c.bits as u64).sum();
     (compressed.into_iter().map(|c| c.vec).collect(), bits)
 }
@@ -149,11 +151,9 @@ mod tests {
         let comp = RandK::new(17);
         let parent = Rng::new(1234);
         let mut rngs_serial = parent.split(msgs.len());
-        let (a, bits_a) =
-            compress_batch(&comp, &msgs, &mut rngs_serial, Parallelism::serial());
+        let (a, bits_a) = compress_batch(&comp, &msgs, &mut rngs_serial, &Pool::serial());
         let mut rngs_par = parent.split(msgs.len());
-        let (b, bits_b) =
-            compress_batch(&comp, &msgs, &mut rngs_par, Parallelism::new(8));
+        let (b, bits_b) = compress_batch(&comp, &msgs, &mut rngs_par, &Pool::new(8));
         assert_eq!(a, b, "messages diverged across thread counts");
         assert_eq!(bits_a, bits_b);
         // and the streams advanced identically
@@ -161,6 +161,16 @@ mod tests {
             let (mut x, mut y) = (x.clone(), y.clone());
             assert_eq!(x.next_u64(), y.next_u64());
         }
+        // scoped fallback agrees too
+        let mut rngs_scoped = parent.split(msgs.len());
+        let (c, bits_c) = compress_batch(
+            &comp,
+            &msgs,
+            &mut rngs_scoped,
+            &Pool::scoped(crate::util::parallel::Parallelism::new(4)),
+        );
+        assert_eq!(a, c);
+        assert_eq!(bits_a, bits_c);
     }
 
     #[test]

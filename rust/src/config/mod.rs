@@ -161,14 +161,16 @@ pub struct TrainConfig {
     /// Log every `log_every` iterations (0 = only final).
     pub log_every: usize,
     /// Worker threads for the device-parallel stages (gradient oracle,
-    /// per-device compression, pairwise-distance aggregation). `1` = serial
-    /// (the default), `0` = all available cores. Any value produces
-    /// bit-identical traces: randomness is pre-split per device, never
-    /// shared across threads (see `util::parallel`). Note: compression
-    /// randomness now always comes from per-device split streams, so runs
-    /// with stochastic compressors (rand-K/QSGD) follow a different — but
-    /// equally seeded-deterministic — trajectory than the pre-parallel
-    /// trainer did; identity-compression runs are unchanged.
+    /// per-device compression, tiled pairwise-distance aggregation). `1` =
+    /// serial (the default), `0` = all available cores. The trainer spins
+    /// up one persistent `util::parallel::Pool` per run and shares it
+    /// across all three stages, so no per-iteration spawn cost remains.
+    /// Any value produces bit-identical traces: randomness is pre-split per
+    /// device, never shared across threads (see `util::parallel`). Note:
+    /// compression randomness always comes from per-device split streams,
+    /// so runs with stochastic compressors (rand-K/QSGD) follow a
+    /// different — but equally seeded-deterministic — trajectory than the
+    /// pre-parallel trainer did; identity-compression runs are unchanged.
     pub threads: usize,
 }
 

@@ -7,7 +7,7 @@
 //! ∇f_k(x) = (⟨x, z_k⟩ − y_k)·z_k, F = Σ_k f_k.
 
 use crate::util::math::{dot, Mat};
-use crate::util::parallel::{par_chunks_mut, Parallelism};
+use crate::util::parallel::{Parallelism, Pool};
 use crate::util::rng::Rng;
 
 /// Generated regression workload.
@@ -59,8 +59,13 @@ impl LinRegDataset {
     /// Row-parallel [`Self::residuals`]; bit-identical for any thread count
     /// (each residual is an independent dot product).
     pub fn residuals_par(&self, x: &[f32], out: &mut [f32], par: Parallelism) {
+        self.residuals_pool(x, out, &Pool::scoped(par));
+    }
+
+    /// [`Self::residuals_par`] on a shared worker pool.
+    pub fn residuals_pool(&self, x: &[f32], out: &mut [f32], pool: &Pool) {
         assert_eq!(out.len(), self.n());
-        par_chunks_mut(par, out, 1, |k, r| {
+        pool.par_chunks_mut(out, 1, |k, r| {
             r[0] = dot(self.z.row(k), x) - self.y[k];
         });
     }
@@ -88,12 +93,17 @@ impl LinRegDataset {
     /// fills are independent per subset, so rows distribute across threads
     /// with bit-identical output for any thread count.
     pub fn grad_matrix_par(&self, x: &[f32], out: &mut Mat, par: Parallelism) {
+        self.grad_matrix_pool(x, out, &Pool::scoped(par));
+    }
+
+    /// [`Self::grad_matrix_par`] on a shared worker pool.
+    pub fn grad_matrix_pool(&self, x: &[f32], out: &mut Mat, pool: &Pool) {
         assert_eq!(out.rows, self.n());
         assert_eq!(out.cols, self.dim());
         let mut r = vec![0.0f32; self.n()];
-        self.residuals_par(x, &mut r, par);
+        self.residuals_pool(x, &mut r, pool);
         let cols = self.dim();
-        par_chunks_mut(par, &mut out.data, cols, |k, dst| {
+        pool.par_chunks_mut(&mut out.data, cols, |k, dst| {
             let src = self.z.row(k);
             let rk = r[k];
             for (d, &s) in dst.iter_mut().zip(src) {
@@ -198,11 +208,18 @@ mod tests {
         ds.grad_matrix(&x, &mut a);
         ds.grad_matrix_par(&x, &mut b, Parallelism::new(8));
         assert_eq!(a.data, b.data);
+        let pool = Pool::new(8);
+        let mut c = Mat::zeros(40, 64);
+        ds.grad_matrix_pool(&x, &mut c, &pool);
+        assert_eq!(a.data, c.data);
         let mut ra = vec![0.0f32; 40];
         let mut rb = vec![0.0f32; 40];
         ds.residuals(&x, &mut ra);
         ds.residuals_par(&x, &mut rb, Parallelism::new(8));
         assert_eq!(ra, rb);
+        let mut rc = vec![0.0f32; 40];
+        ds.residuals_pool(&x, &mut rc, &pool);
+        assert_eq!(ra, rc);
     }
 
     #[test]

@@ -11,7 +11,7 @@ use crate::runtime::Runtime;
 use crate::server::trainer::{DracoTrainer, Trainer};
 use crate::server::TrainTrace;
 use crate::util::csv::CsvWriter;
-use crate::util::parallel::{par_map, Parallelism};
+use crate::util::parallel::{par_map, Parallelism, Pool};
 use crate::util::rng::Rng;
 use crate::Result;
 use std::path::Path;
@@ -103,7 +103,9 @@ pub struct Variant {
 }
 
 /// Run one variant against a shared dataset; every variant sees the same
-/// data and the same seed so curves are comparable.
+/// data and the same seed so curves are comparable. One persistent worker
+/// pool (from `cfg.threads`) is shared by the oracle, compression and
+/// aggregation stages of the run.
 pub fn run_variant(ds: &LinRegDataset, v: &Variant, seed: u64) -> Result<TrainTrace> {
     let mut oracle = make_oracle(ds, v.cfg.oracle)?;
     let mut x0 = vec![0.0f32; v.cfg.dim];
@@ -113,10 +115,11 @@ pub fn run_variant(ds: &LinRegDataset, v: &Variant, seed: u64) -> Result<TrainTr
         let trainer = DracoTrainer { cfg: &v.cfg, attack: attack.as_ref(), r };
         trainer.run(oracle.as_mut(), &mut x0, &v.label, &mut rng)
     } else {
-        let agg = aggregation::from_config(&v.cfg);
+        let pool = Pool::new(v.cfg.threads);
+        let agg = aggregation::from_config_pooled(&v.cfg, &pool);
         let comp = compress::from_kind(v.cfg.compression);
-        let trainer =
-            Trainer::new(&v.cfg, agg.as_ref(), attack.as_ref(), comp.as_ref());
+        let trainer = Trainer::new(&v.cfg, agg.as_ref(), attack.as_ref(), comp.as_ref())
+            .with_pool(&pool);
         trainer.run(oracle.as_mut(), &mut x0, &v.label, &mut rng)
     }
 }

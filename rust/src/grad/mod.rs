@@ -14,7 +14,7 @@ pub mod native;
 pub mod runtime_oracle;
 
 use crate::util::math::Mat;
-use crate::util::parallel::Parallelism;
+use crate::util::parallel::{Parallelism, Pool};
 use crate::Result;
 
 /// The trainer's gradient interface.
@@ -42,6 +42,13 @@ pub trait CodedGradOracle {
     /// device-parallel compute. Implementations must stay bit-identical to
     /// their serial path (default: ignore the hint).
     fn set_parallelism(&mut self, _par: Parallelism) {}
+    /// Adopt a shared persistent worker pool for the device-parallel
+    /// compute. The default degrades to [`Self::set_parallelism`] (scoped
+    /// spawns with the pool's thread budget); implementations that can hold
+    /// the handle should override to reuse the workers across iterations.
+    fn set_pool(&mut self, pool: &Pool) {
+        self.set_parallelism(pool.parallelism());
+    }
 }
 
 pub use native::NativeLinReg;

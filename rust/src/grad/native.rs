@@ -7,11 +7,11 @@
 use super::CodedGradOracle;
 use crate::data::linreg::LinRegDataset;
 use crate::util::math::{axpy, scale, Mat};
-use crate::util::parallel::{par_chunks_mut, Parallelism};
+use crate::util::parallel::{Parallelism, Pool};
 use crate::Result;
 
 /// Below this many output elements (rows × cols) the parallel row fill is
-/// all spawn overhead; stay on the calling thread. Purely a performance
+/// all dispatch overhead; stay on the calling thread. Purely a performance
 /// gate — both paths are bit-identical.
 const PAR_MIN_ELEMS: usize = 4096;
 
@@ -19,20 +19,28 @@ pub struct NativeLinReg {
     ds: LinRegDataset,
     /// scratch: per-subset gradient matrix reused across iterations
     scratch: Mat,
-    /// worker-thread budget for the row-parallel kernels
-    par: Parallelism,
+    /// worker pool for the row-parallel kernels (serial by default; the
+    /// trainer injects its run-wide pool via [`CodedGradOracle::set_pool`])
+    pool: Pool,
 }
 
 impl NativeLinReg {
     pub fn new(ds: LinRegDataset) -> Self {
         let scratch = Mat::zeros(ds.n(), ds.dim());
-        NativeLinReg { ds, scratch, par: Parallelism::serial() }
+        NativeLinReg { ds, scratch, pool: Pool::serial() }
     }
 
-    /// Builder-style parallelism override (same effect as
+    /// Builder-style scoped-spawn parallelism (same effect as
     /// [`CodedGradOracle::set_parallelism`]).
     pub fn with_parallelism(mut self, par: Parallelism) -> Self {
-        self.par = par;
+        self.pool = Pool::scoped(par);
+        self
+    }
+
+    /// Builder-style shared worker pool (same effect as
+    /// [`CodedGradOracle::set_pool`]).
+    pub fn with_pool(mut self, pool: &Pool) -> Self {
+        self.pool = pool.clone();
         self
     }
 
@@ -40,11 +48,11 @@ impl NativeLinReg {
         &self.ds
     }
 
-    fn effective_par(&self, elems: usize) -> Parallelism {
+    fn effective_pool(&self, elems: usize) -> Pool {
         if elems >= PAR_MIN_ELEMS {
-            self.par
+            self.pool.clone()
         } else {
-            Parallelism::serial()
+            Pool::serial()
         }
     }
 }
@@ -65,15 +73,15 @@ impl CodedGradOracle for NativeLinReg {
     ) -> Result<()> {
         assert_eq!(out.rows, subsets_per_device.len());
         assert_eq!(out.cols, self.ds.dim());
-        let par = self.effective_par(out.rows * out.cols);
-        self.ds.grad_matrix_par(x, &mut self.scratch, par);
+        let pool = self.effective_pool(out.rows * out.cols);
+        self.ds.grad_matrix_pool(x, &mut self.scratch, &pool);
         // Per-device encode: each output row only reads the shared scratch
         // matrix, so rows parallelize with no synchronization. Accumulation
         // order within a row is the subset order either way — bit-identical
         // to the serial loop.
         let cols = out.cols;
         let scratch = &self.scratch;
-        par_chunks_mut(par, &mut out.data, cols, |i, row| {
+        pool.par_chunks_mut(&mut out.data, cols, |i, row| {
             let subs = &subsets_per_device[i];
             row.iter_mut().for_each(|v| *v = 0.0);
             for &k in subs {
@@ -85,8 +93,8 @@ impl CodedGradOracle for NativeLinReg {
     }
 
     fn grad_matrix(&mut self, x: &[f32], out: &mut Mat) -> Result<()> {
-        let par = self.effective_par(out.rows * out.cols);
-        self.ds.grad_matrix_par(x, out, par);
+        let pool = self.effective_pool(out.rows * out.cols);
+        self.ds.grad_matrix_pool(x, out, &pool);
         Ok(())
     }
 
@@ -99,7 +107,11 @@ impl CodedGradOracle for NativeLinReg {
     }
 
     fn set_parallelism(&mut self, par: Parallelism) {
-        self.par = par;
+        self.pool = Pool::scoped(par);
+    }
+
+    fn set_pool(&mut self, pool: &Pool) {
+        self.pool = pool.clone();
     }
 }
 
@@ -141,19 +153,27 @@ mod tests {
         let x = rng.gauss_vec(q);
         let subsets: Vec<Vec<usize>> =
             (0..n).map(|i| vec![i, (i + 3) % n, (i + 17) % n]).collect();
+        let pool = Pool::new(8);
         let mut serial = NativeLinReg::new(ds.clone());
         let mut threaded =
-            NativeLinReg::new(ds).with_parallelism(Parallelism::new(8));
+            NativeLinReg::new(ds.clone()).with_parallelism(Parallelism::new(8));
+        let mut pooled = NativeLinReg::new(ds).with_pool(&pool);
         let mut a = Mat::zeros(n, q);
         let mut b = Mat::zeros(n, q);
+        let mut c = Mat::zeros(n, q);
         serial.coded_grads(&x, &subsets, &mut a).unwrap();
         threaded.coded_grads(&x, &subsets, &mut b).unwrap();
-        assert_eq!(a.data, b.data, "coded_grads diverged");
+        pooled.coded_grads(&x, &subsets, &mut c).unwrap();
+        assert_eq!(a.data, b.data, "coded_grads diverged (scoped)");
+        assert_eq!(a.data, c.data, "coded_grads diverged (pool)");
         let mut ga = Mat::zeros(n, q);
         let mut gb = Mat::zeros(n, q);
+        let mut gc = Mat::zeros(n, q);
         serial.grad_matrix(&x, &mut ga).unwrap();
         threaded.grad_matrix(&x, &mut gb).unwrap();
-        assert_eq!(ga.data, gb.data, "grad_matrix diverged");
+        pooled.grad_matrix(&x, &mut gc).unwrap();
+        assert_eq!(ga.data, gb.data, "grad_matrix diverged (scoped)");
+        assert_eq!(ga.data, gc.data, "grad_matrix diverged (pool)");
     }
 
     #[test]

@@ -22,9 +22,12 @@
 //! * [`theory`] — closed-form error terms (κ₁..κ₄, ξ₁..ξ₄, ε) from the
 //!   convergence analysis, used by the Fig. 2/3 reproductions.
 //! * [`experiments`] — drivers that regenerate every figure in the paper.
-//! * [`util::parallel`] — the zero-dependency scoped-thread engine behind
-//!   the device loop, the O(N²Q) aggregation rules and the figure sweeps;
-//!   bit-identical results for any thread count (`TrainConfig::threads`).
+//! * [`util::parallel`] — the zero-dependency parallel engine (persistent
+//!   `Pool` + scoped-spawn fallback) behind the device loop, the shared
+//!   Gram distance kernel of the O(N²Q) aggregation rules
+//!   ([`aggregation::gram`]) and the figure sweeps; bit-identical results
+//!   for any thread count (`TrainConfig::threads`) and for the scalar vs
+//!   SIMD math backends (`--features simd`).
 //!
 //! Python/JAX/Pallas run only at build time (`make artifacts`); at run time
 //! the coordinator loads `artifacts/*.hlo.txt` through [`runtime`] (stubbed

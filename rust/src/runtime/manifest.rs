@@ -115,7 +115,12 @@ impl Manifest {
             }
             entries.insert(
                 name.clone(),
-                ArtifactEntry { file, inputs: parse_specs("inputs")?, outputs: parse_specs("outputs")?, meta },
+                ArtifactEntry {
+                    file,
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                    meta,
+                },
             );
         }
         Ok(Manifest { version, entries })

@@ -16,7 +16,7 @@ use crate::config::TrainConfig;
 use crate::data::linreg::LinRegDataset;
 use crate::server::metrics::TrainTrace;
 use crate::util::math::norm;
-use crate::util::parallel::Parallelism;
+use crate::util::parallel::Pool;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 use crate::Result;
@@ -47,7 +47,9 @@ pub fn run_cluster(
     let timer = Timer::start();
     let n = cfg.n_devices;
     let ds = Arc::new(ds.clone());
-    let par = Parallelism::new(cfg.threads);
+    // Leader-side persistent pool for the compression step (the per-device
+    // compute runs on the dedicated worker threads below).
+    let pool = Pool::new(cfg.threads);
     // Same pre-split per-device compression streams as Trainer::run — the
     // cluster path must consume RNG identically to stay trace-identical
     // with the central fast path (cluster_tests.rs pins this).
@@ -115,7 +117,7 @@ pub fn run_cluster(
                 .map(|m| m.as_slice())
                 .chain(lies.iter().map(|m| m.as_slice()))
                 .collect();
-            let (msgs, bits) = compress_batch(comp, &all, &mut comp_rngs, par);
+            let (msgs, bits) = compress_batch(comp, &all, &mut comp_rngs, &pool);
             bits_total += bits;
             let update = agg.aggregate(&msgs);
             for (xi, ui) in x0.iter_mut().zip(&update) {

@@ -20,7 +20,7 @@ use crate::config::TrainConfig;
 use crate::grad::CodedGradOracle;
 use crate::server::metrics::TrainTrace;
 use crate::util::math::{norm, Mat};
-use crate::util::parallel::Parallelism;
+use crate::util::parallel::Pool;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 use crate::Result;
@@ -52,6 +52,8 @@ pub struct Trainer<'a> {
     pub rotate_byzantine: bool,
     /// optional learning-rate schedule; `None` ⇒ the paper's fixed γ⁰
     pub schedule: Option<crate::server::schedule::Schedule>,
+    /// shared worker pool; `None` ⇒ `run` builds one from `cfg.threads`
+    pub pool: Option<Pool>,
 }
 
 impl<'a> Trainer<'a> {
@@ -61,7 +63,23 @@ impl<'a> Trainer<'a> {
         attack: &'a dyn Attack,
         comp: &'a dyn Compressor,
     ) -> Self {
-        Trainer { cfg, agg, attack, comp, rotate_byzantine: false, schedule: None }
+        Trainer {
+            cfg,
+            agg,
+            attack,
+            comp,
+            rotate_byzantine: false,
+            schedule: None,
+            pool: None,
+        }
+    }
+
+    /// Share an existing worker pool (ideally the same one the aggregator
+    /// was built with, see `aggregation::from_config_pooled`) instead of
+    /// spawning a private one per `run`.
+    pub fn with_pool(mut self, pool: &Pool) -> Self {
+        self.pool = Some(pool.clone());
+        self
     }
 
     /// Run the loop from `x0`; returns the metric trace (and leaves the
@@ -78,8 +96,15 @@ impl<'a> Trainer<'a> {
         assert_eq!(oracle.n(), cfg.n_devices, "oracle N != config N");
         assert_eq!(oracle.dim(), cfg.dim, "oracle Q != config Q");
         let timer = Timer::start();
-        let par = Parallelism::new(cfg.threads);
-        oracle.set_parallelism(par);
+        // One persistent worker pool for the whole run: the oracle's
+        // row-parallel kernels, per-device compression and the aggregation
+        // rules (when built via from_config_pooled) all share its workers,
+        // so no per-iteration spawn cost remains.
+        let pool = match &self.pool {
+            Some(p) => p.clone(),
+            None => Pool::new(cfg.threads),
+        };
+        oracle.set_pool(&pool);
         // One private compression stream per device, pre-split (not forked)
         // from the run RNG: the main stream is left untouched, and because
         // no stream is shared across devices, serial and multi-threaded
@@ -140,7 +165,7 @@ impl<'a> Trainer<'a> {
                 }
             }
             let (msgs, bits) =
-                compress_batch(self.comp, &device_msgs, &mut comp_rngs, par);
+                compress_batch(self.comp, &device_msgs, &mut comp_rngs, &pool);
             bits_total += bits;
 
             // (5) robust aggregation + model update
@@ -181,7 +206,8 @@ impl<'a> DracoTrainer<'a> {
     ) -> Result<TrainTrace> {
         let cfg = self.cfg;
         let timer = Timer::start();
-        oracle.set_parallelism(Parallelism::new(cfg.threads));
+        let pool = Pool::new(cfg.threads);
+        oracle.set_pool(&pool);
         let mut trace = TrainTrace::new(label);
         let scheme = DracoScheme::new(cfg.n_devices, self.r);
         let mut grads = Mat::zeros(cfg.n_devices, cfg.dim);
@@ -288,8 +314,9 @@ mod tests {
         let cfg = small_cfg();
         let flip = SignFlip { coeff: -2.0 };
         let (mut o1, mut x1, mut r1) = setup(&cfg, 2);
-        let mean_tr =
-            Trainer::new(&cfg, &Mean, &flip, &Identity).run(&mut o1, &mut x1, "va", &mut r1).unwrap();
+        let mean_tr = Trainer::new(&cfg, &Mean, &flip, &Identity)
+            .run(&mut o1, &mut x1, "va", &mut r1)
+            .unwrap();
         let (mut o2, mut x2, mut r2) = setup(&cfg, 2);
         let cwtm = Cwtm::new(0.2);
         let cwtm_tr = Trainer::new(&cfg, &cwtm, &flip, &Identity)

@@ -58,6 +58,55 @@ impl Json {
         s
     }
 
+    /// Serialize with 2-space indentation (diff-friendly metric dumps).
+    pub fn to_pretty_string(&self) -> String {
+        let mut s = String::new();
+        self.write_pretty(&mut s, 0);
+        s
+    }
+
+    fn write_pretty(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Arr(a) if !a.is_empty() => {
+                out.push_str("[\n");
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    for _ in 0..indent + 2 {
+                        out.push(' ');
+                    }
+                    v.write_pretty(out, indent + 2);
+                }
+                out.push('\n');
+                for _ in 0..indent {
+                    out.push(' ');
+                }
+                out.push(']');
+            }
+            Json::Obj(o) if !o.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    for _ in 0..indent + 2 {
+                        out.push(' ');
+                    }
+                    write_escaped(k, out);
+                    out.push_str(": ");
+                    v.write_pretty(out, indent + 2);
+                }
+                out.push('\n');
+                for _ in 0..indent {
+                    out.push(' ');
+                }
+                out.push('}');
+            }
+            other => other.write(out),
+        }
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -180,8 +229,10 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.i += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
-        {
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
             self.i += 1;
         }
         std::str::from_utf8(&self.b[start..self.i])
@@ -308,6 +359,15 @@ mod tests {
         // serialize and reparse
         let v2 = parse(&v.to_string()).unwrap();
         assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn pretty_roundtrip() {
+        let doc = r#"{"a": 1, "b": [true, {"c": "x"}, []], "d": {}}"#;
+        let v = parse(doc).unwrap();
+        let pretty = v.to_pretty_string();
+        assert!(pretty.contains("\n  "), "indented: {pretty}");
+        assert_eq!(parse(&pretty).unwrap(), v);
     }
 
     #[test]

@@ -10,5 +10,5 @@ pub mod stats;
 pub mod timer;
 
 pub use math::Mat;
-pub use parallel::Parallelism;
+pub use parallel::{Parallelism, Pool};
 pub use rng::Rng;

@@ -1,25 +1,44 @@
 //! Zero-dependency data-parallel execution engine (no rayon).
 //!
-//! Built entirely on [`std::thread::scope`]: each primitive splits its input
-//! into at most [`Parallelism::threads`] contiguous chunks, spawns one scoped
-//! worker per extra chunk, processes the first chunk on the calling thread,
-//! and joins in order — so results are always returned in input order and no
-//! work queue, channel or allocation-per-item is needed.
+//! Two execution strategies share one chunking discipline:
+//!
+//! * **Scoped spawns** (the free functions [`par_map`], [`par_map_mut`],
+//!   [`par_for`], [`par_chunks_mut`]): each call splits its input into at
+//!   most [`Parallelism::threads`] contiguous chunks, spawns one scoped
+//!   worker per extra chunk, processes the first chunk on the calling
+//!   thread, and joins in order. No state persists between calls.
+//! * **Persistent pool** ([`Pool`]): `Pool::new(threads)` parks `threads−1`
+//!   workers on a shared injector once; every subsequent `pool.par_map(...)`
+//!   call dispatches chunk tasks to the already-running workers, so the
+//!   per-call ~10µs spawn cost disappears from the many-small-iteration
+//!   regime. The caller thread claims chunks too (help-first join), which
+//!   also makes nested dispatch deadlock-free. `Pool::scoped(par)` preserves
+//!   the scoped-spawn engine behind the same method API.
+//!
+//! Both strategies produce identical chunk boundaries and apply the closure
+//! to items in the same order, so swapping one for the other can never
+//! change a result.
 //!
 //! # Determinism contract
 //!
 //! Every primitive here is a *pure scheduler*: the closure is applied to the
-//! same items, in the same per-item state, regardless of the thread count.
-//! Callers keep bit-identical results across `threads = 1` and `threads = N`
-//! by never sharing mutable state between items — in particular, seeded RNG
-//! streams must be pre-split per item ([`crate::util::rng::Rng::split`])
-//! rather than shared. `rust/tests/parallel_determinism.rs` pins this
-//! contract end-to-end for the LAD / Com-LAD training loop.
+//! same items, in the same per-item state, regardless of the thread count
+//! or execution strategy. Callers keep bit-identical results across
+//! `threads = 1` and `threads = N` by never sharing mutable state between
+//! items — in particular, seeded RNG streams must be pre-split per item
+//! ([`crate::util::rng::Rng::split`]) rather than shared.
+//! `rust/tests/parallel_determinism.rs` and `rust/tests/fuzz_determinism.rs`
+//! pin this contract end-to-end for the LAD / Com-LAD training loop.
 //!
 //! # Panics
 //!
-//! A panic inside a worker closure is propagated to the caller (the scope
-//! join panics), matching the behaviour of the serial fallback.
+//! A panic inside a worker closure is propagated to the caller: the scoped
+//! engine panics with a `"... worker panicked"` message, the pool resumes
+//! the original payload on the dispatching thread.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// How many worker threads a parallel stage may use.
 ///
@@ -236,6 +255,407 @@ where
     });
 }
 
+// ---------------------------------------------------------------------------
+// Persistent worker pool
+// ---------------------------------------------------------------------------
+
+/// Lifetime-erased pointer to a dispatch closure.
+///
+/// SAFETY: [`Pool::dispatch`] blocks until every task index of its batch has
+/// completed, so the referent strictly outlives every dereference; workers
+/// holding the batch `Arc` after completion only touch its atomics, never
+/// this pointer.
+#[derive(Clone, Copy)]
+struct TaskRef(*const (dyn Fn(usize) + Sync + 'static));
+
+unsafe impl Send for TaskRef {}
+unsafe impl Sync for TaskRef {}
+
+fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> TaskRef {
+    // SAFETY: only lengthens the trait object's lifetime bound; the pointer
+    // is dereferenced exclusively while the dispatching call is blocked in
+    // `Batch::wait` (see `TaskRef`).
+    let long: &'static (dyn Fn(usize) + Sync + 'static) = unsafe {
+        std::mem::transmute::<
+            &'a (dyn Fn(usize) + Sync + 'a),
+            &'static (dyn Fn(usize) + Sync + 'static),
+        >(f)
+    };
+    TaskRef(long as *const _)
+}
+
+/// One dispatched family of task indices `0..total`, claimed atomically by
+/// workers and the dispatching caller alike.
+struct Batch {
+    task: TaskRef,
+    total: usize,
+    next: AtomicUsize,
+    done: Mutex<usize>,
+    done_cv: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Batch {
+    fn claim(&self) -> Option<usize> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        if i < self.total {
+            Some(i)
+        } else {
+            None
+        }
+    }
+
+    /// Claim and run task indices until the batch is drained.
+    fn work(&self) {
+        while let Some(i) = self.claim() {
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // SAFETY: a successfully claimed index implies the batch is
+                // not complete, so the dispatcher is still blocked and the
+                // closure is alive (see `TaskRef`).
+                (unsafe { &*self.task.0 })(i)
+            }));
+            if let Err(payload) = run {
+                *self.panic.lock().unwrap() = Some(payload);
+            }
+            let mut done = self.done.lock().unwrap();
+            *done += 1;
+            if *done == self.total {
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    fn wait(&self) {
+        let mut done = self.done.lock().unwrap();
+        while *done < self.total {
+            done = self.done_cv.wait(done).unwrap();
+        }
+    }
+}
+
+/// Shared injector the parked workers wait on: FIFO of in-flight batches plus
+/// the shutdown flag.
+struct Injector {
+    queue: Mutex<(VecDeque<Arc<Batch>>, bool)>,
+    cv: Condvar,
+}
+
+fn worker_loop(inj: Arc<Injector>) {
+    loop {
+        let batch = {
+            let mut state = inj.queue.lock().unwrap();
+            loop {
+                if let Some(b) = state.0.front() {
+                    break Arc::clone(b);
+                }
+                if state.1 {
+                    return;
+                }
+                state = inj.cv.wait(state).unwrap();
+            }
+        };
+        batch.work();
+        // Fully claimed: pop it if it is still at the front so later waits
+        // don't busy-spin over an exhausted batch.
+        let mut state = inj.queue.lock().unwrap();
+        if state.0.front().is_some_and(|b| Arc::ptr_eq(b, &batch)) {
+            state.0.pop_front();
+        }
+    }
+}
+
+/// The spawned workers plus their join handles; dropping the last [`Pool`]
+/// handle shuts the workers down and joins them.
+struct PoolCore {
+    injector: Arc<Injector>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for PoolCore {
+    fn drop(&mut self) {
+        self.injector.queue.lock().unwrap().1 = true;
+        self.injector.cv.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[derive(Clone)]
+enum Mode {
+    /// Everything on the calling thread.
+    Serial,
+    /// Per-call scoped spawns — the pre-pool engine, kept as a fallback.
+    Scoped,
+    /// Persistent parked workers.
+    Persistent(Arc<PoolCore>),
+}
+
+/// A reusable worker-thread handle with the same chunked `par_map`/`par_for`
+/// API as the free functions.
+///
+/// `Pool::new(threads)` spawns `threads − 1` persistent workers once; the
+/// handle is cheaply cloneable (`Arc` inside) and `Send + Sync`, so one pool
+/// can serve the gradient oracle, per-device compression and the
+/// pairwise-distance aggregation rules of a whole training run. The workers
+/// shut down when the last clone drops.
+///
+/// Chunk boundaries and per-item evaluation order are identical to the
+/// scoped free functions, so a `Pool` upholds the module's bit-identical
+/// determinism contract by construction.
+pub struct Pool {
+    mode: Mode,
+    threads: usize,
+}
+
+impl Clone for Pool {
+    fn clone(&self) -> Self {
+        Pool { mode: self.mode.clone(), threads: self.threads }
+    }
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mode = match self.mode {
+            Mode::Serial => "serial",
+            Mode::Scoped => "scoped",
+            Mode::Persistent(_) => "persistent",
+        };
+        write!(f, "Pool({mode}, threads={})", self.threads)
+    }
+}
+
+impl Default for Pool {
+    /// A serial pool — mirrors `TrainConfig::threads = 1`.
+    fn default() -> Self {
+        Pool::serial()
+    }
+}
+
+impl Pool {
+    /// Persistent pool with `threads` workers total (the calling thread
+    /// counts as one); `0` resolves to all available cores, `1` degrades to
+    /// [`Pool::serial`] and spawns nothing.
+    pub fn new(threads: usize) -> Pool {
+        let t = Parallelism::new(threads).threads();
+        if t <= 1 {
+            return Pool::serial();
+        }
+        let injector =
+            Arc::new(Injector { queue: Mutex::new((VecDeque::new(), false)), cv: Condvar::new() });
+        let handles = (0..t - 1)
+            .map(|w| {
+                let inj = Arc::clone(&injector);
+                std::thread::Builder::new()
+                    .name(format!("lad-pool-{w}"))
+                    .spawn(move || worker_loop(inj))
+                    .expect("spawning pool worker failed")
+            })
+            .collect();
+        Pool {
+            mode: Mode::Persistent(Arc::new(PoolCore { injector, handles: Mutex::new(handles) })),
+            threads: t,
+        }
+    }
+
+    /// Everything on the calling thread; spawns nothing, ever.
+    pub fn serial() -> Pool {
+        Pool { mode: Mode::Serial, threads: 1 }
+    }
+
+    /// The scoped-spawn fallback behind the pool API: every call spawns and
+    /// joins its own scoped workers (exactly the free functions). Useful
+    /// where a persistent pool must not outlive a call site.
+    pub fn scoped(par: Parallelism) -> Pool {
+        if par.is_serial() {
+            Pool::serial()
+        } else {
+            Pool { mode: Mode::Scoped, threads: par.threads() }
+        }
+    }
+
+    /// Worker budget (always ≥ 1, counting the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// True when every primitive runs on the calling thread.
+    pub fn is_serial(&self) -> bool {
+        self.threads <= 1
+    }
+
+    /// The equivalent thread budget, for APIs still taking [`Parallelism`].
+    pub fn parallelism(&self) -> Parallelism {
+        Parallelism::new(self.threads)
+    }
+
+    /// Dispatch `total` task indices onto the persistent workers; the caller
+    /// helps drain the batch, then blocks until every index completed.
+    fn dispatch(&self, core: &PoolCore, total: usize, task: &(dyn Fn(usize) + Sync)) {
+        let batch = Arc::new(Batch {
+            task: erase(task),
+            total,
+            next: AtomicUsize::new(0),
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        core.injector.queue.lock().unwrap().0.push_back(Arc::clone(&batch));
+        core.injector.cv.notify_all();
+        batch.work();
+        batch.wait();
+        let mut state = core.injector.queue.lock().unwrap();
+        if let Some(pos) = state.0.iter().position(|b| Arc::ptr_eq(b, &batch)) {
+            state.0.remove(pos);
+        }
+        drop(state);
+        if let Some(payload) = batch.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Pool counterpart of [`par_map`]: order-preserving map over a shared
+    /// slice, chunked exactly like the free function.
+    pub fn par_map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let threads = self.threads.min(items.len());
+        if threads <= 1 {
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let core = match &self.mode {
+            Mode::Scoped => return par_map(self.parallelism(), items, f),
+            Mode::Persistent(core) => core,
+            Mode::Serial => unreachable!("serial pools have threads == 1"),
+        };
+        let chunk = items.len().div_ceil(threads);
+        let n_chunks = items.len().div_ceil(chunk);
+        let slots: Vec<Mutex<Vec<R>>> = (0..n_chunks).map(|_| Mutex::new(Vec::new())).collect();
+        self.dispatch(core, n_chunks, &|c| {
+            let start = c * chunk;
+            let end = (start + chunk).min(items.len());
+            let out: Vec<R> =
+                items[start..end].iter().enumerate().map(|(i, t)| f(start + i, t)).collect();
+            *slots[c].lock().unwrap() = out;
+        });
+        slots.into_iter().flat_map(|s| s.into_inner().unwrap()).collect()
+    }
+
+    /// Pool counterpart of [`par_map_mut`]: exclusive access to each item.
+    pub fn par_map_mut<T, R, F>(&self, items: &mut [T], f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut T) -> R + Sync,
+    {
+        let threads = self.threads.min(items.len());
+        if threads <= 1 {
+            return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let core = match &self.mode {
+            Mode::Scoped => return par_map_mut(self.parallelism(), items, f),
+            Mode::Persistent(core) => core,
+            Mode::Serial => unreachable!("serial pools have threads == 1"),
+        };
+        let chunk = items.len().div_ceil(threads);
+        let parts: Vec<Mutex<(usize, &mut [T])>> = {
+            let mut v = Vec::new();
+            let mut start = 0;
+            for c in items.chunks_mut(chunk) {
+                let s = start;
+                start += c.len();
+                v.push(Mutex::new((s, c)));
+            }
+            v
+        };
+        let slots: Vec<Mutex<Vec<R>>> = (0..parts.len()).map(|_| Mutex::new(Vec::new())).collect();
+        self.dispatch(core, parts.len(), &|c| {
+            let mut part = parts[c].lock().unwrap();
+            let start = part.0;
+            let out: Vec<R> =
+                part.1.iter_mut().enumerate().map(|(i, t)| f(start + i, t)).collect();
+            *slots[c].lock().unwrap() = out;
+        });
+        slots.into_iter().flat_map(|s| s.into_inner().unwrap()).collect()
+    }
+
+    /// Pool counterpart of [`par_for`].
+    pub fn par_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let threads = self.threads.min(n);
+        if threads <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let core = match &self.mode {
+            Mode::Scoped => return par_for(self.parallelism(), n, f),
+            Mode::Persistent(core) => core,
+            Mode::Serial => unreachable!("serial pools have threads == 1"),
+        };
+        let chunk = n.div_ceil(threads);
+        let n_chunks = n.div_ceil(chunk);
+        self.dispatch(core, n_chunks, &|c| {
+            let start = c * chunk;
+            let end = (start + chunk).min(n);
+            for i in start..end {
+                f(i);
+            }
+        });
+    }
+
+    /// Pool counterpart of [`par_chunks_mut`]: disjoint `chunk_len` windows
+    /// of a mutable slice, whole windows per task.
+    pub fn par_chunks_mut<T, F>(&self, data: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk_len > 0, "chunk_len must be positive");
+        if data.is_empty() {
+            return;
+        }
+        let n_chunks = data.len().div_ceil(chunk_len);
+        let threads = self.threads.min(n_chunks);
+        if threads <= 1 {
+            for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+                f(i, c);
+            }
+            return;
+        }
+        let core = match &self.mode {
+            Mode::Scoped => return par_chunks_mut(self.parallelism(), data, chunk_len, f),
+            Mode::Persistent(core) => core,
+            Mode::Serial => unreachable!("serial pools have threads == 1"),
+        };
+        let per_thread = n_chunks.div_ceil(threads);
+        let block = per_thread * chunk_len;
+        let blocks: Vec<Mutex<(usize, &mut [T])>> = {
+            let mut v = Vec::new();
+            let mut next_chunk = 0;
+            for b in data.chunks_mut(block) {
+                let s = next_chunk;
+                next_chunk += b.len().div_ceil(chunk_len);
+                v.push(Mutex::new((s, b)));
+            }
+            v
+        };
+        self.dispatch(core, blocks.len(), &|c| {
+            let mut part = blocks[c].lock().unwrap();
+            let start = part.0;
+            for (i, w) in part.1.chunks_mut(chunk_len).enumerate() {
+                f(start + i, w);
+            }
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -322,6 +742,107 @@ mod tests {
         let items: Vec<usize> = (0..64).collect();
         par_map(Parallelism::new(4), &items, |_, &x| {
             assert!(x != 63, "boom");
+            x
+        });
+    }
+
+    #[test]
+    fn pool_resolution_and_modes() {
+        assert!(Pool::new(1).is_serial());
+        assert!(Pool::serial().is_serial());
+        assert!(Pool::scoped(Parallelism::serial()).is_serial());
+        assert_eq!(Pool::new(3).threads(), 3);
+        assert_eq!(Pool::scoped(Parallelism::new(5)).threads(), 5);
+        assert_eq!(Pool::new(0).threads(), available_threads());
+        assert_eq!(Pool::default().threads(), 1);
+        assert_eq!(Pool::new(4).parallelism().threads(), 4);
+    }
+
+    #[test]
+    fn pool_par_map_matches_free_function_across_modes() {
+        let items: Vec<u64> = (0..257).collect();
+        let want = par_map(Parallelism::serial(), &items, |i, &x| x * 3 + i as u64);
+        for pool in [Pool::serial(), Pool::scoped(Parallelism::new(3)), Pool::new(4)] {
+            let got = pool.par_map(&items, |i, &x| x * 3 + i as u64);
+            assert_eq!(got, want, "{pool:?}");
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_calls() {
+        // the persistent-worker point: many small dispatches on one pool
+        let pool = Pool::new(4);
+        let items: Vec<u32> = (0..37).collect();
+        let want: Vec<u32> = items.iter().map(|&x| x + 1).collect();
+        for _ in 0..200 {
+            assert_eq!(pool.par_map(&items, |_, &x| x + 1), want);
+        }
+    }
+
+    #[test]
+    fn pool_par_map_mut_and_par_for_and_chunks() {
+        let pool = Pool::new(5);
+        let mut counters = vec![0u64; 100];
+        let out = pool.par_map_mut(&mut counters, |i, c| {
+            *c += i as u64;
+            *c * 2
+        });
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<u64>>());
+        assert_eq!(counters, (0..100).collect::<Vec<u64>>());
+
+        let n = 501;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.par_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+
+        for (len, chunk_len) in [(12 * 7, 7), (100, 9), (5, 8), (8, 8)] {
+            let mut a: Vec<usize> = vec![0; len];
+            let mut b: Vec<usize> = vec![0; len];
+            let fill = |i: usize, c: &mut [usize]| {
+                for (j, v) in c.iter_mut().enumerate() {
+                    *v = i * 1000 + j;
+                }
+            };
+            for (i, c) in a.chunks_mut(chunk_len).enumerate() {
+                fill(i, c);
+            }
+            pool.par_chunks_mut(&mut b, chunk_len, fill);
+            assert_eq!(a, b, "len={len} chunk_len={chunk_len}");
+        }
+    }
+
+    #[test]
+    fn pool_clones_share_workers_and_outlive_each_other() {
+        let pool = Pool::new(3);
+        let clone = pool.clone();
+        drop(pool);
+        let items = vec![1u32, 2, 3, 4, 5, 6, 7, 8];
+        assert_eq!(clone.par_map(&items, |_, &x| x * 2)[7], 16);
+    }
+
+    #[test]
+    fn pool_nested_dispatch_does_not_deadlock() {
+        // a pool task dispatching onto the same pool must complete (the
+        // caller helps drain its own batch instead of blocking)
+        let pool = Pool::new(2);
+        let outer: Vec<usize> = (0..4).collect();
+        let got = pool.par_map(&outer, |_, &i| {
+            let inner: Vec<usize> = (0..8).collect();
+            pool.par_map(&inner, |_, &j| i * 100 + j).iter().sum::<usize>()
+        });
+        let want: Vec<usize> = (0..4).map(|i| (0..8).map(|j| i * 100 + j).sum()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool boom")]
+    fn pool_task_panic_propagates_to_caller() {
+        let pool = Pool::new(4);
+        let items: Vec<usize> = (0..64).collect();
+        pool.par_map(&items, |_, &x| {
+            assert!(x != 63, "pool boom");
             x
         });
     }

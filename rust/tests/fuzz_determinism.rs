@@ -1,0 +1,196 @@
+//! Seed-stream audit (ROADMAP item): randomized configurations pushed
+//! through the full LAD / Com-LAD loop must stay **bit-identical** between
+//! serial and parallel execution — and, per the `util::math` lane contract,
+//! between the scalar and SIMD kernel backends (build with
+//! `--features simd` to exercise the intrinsics side; the scalar reference
+//! is always compiled for comparison).
+//!
+//! Unlike `parallel_determinism.rs` (a few hand-picked large configs), this
+//! fuzzes the corner lattice: tiny families below every parallelism gate,
+//! families straddling the gates, ragged tile edges, every aggregator with
+//! a parallel pass, stochastic compressors on pre-split streams.
+
+use lad::aggregation::gram::PairwiseDistances;
+use lad::config::{AggregatorKind, AttackKind, CompressionKind, TrainConfig};
+use lad::data::linreg::LinRegDataset;
+use lad::experiments::common::{run_variant, Variant};
+use lad::proptest_lite::{ensure, forall, gen};
+use lad::server::TrainTrace;
+use lad::util::math::{self, norm_sq};
+use lad::util::parallel::{Parallelism, Pool};
+use lad::util::rng::Rng;
+
+#[derive(Debug)]
+struct Case {
+    n: usize,
+    q: usize,
+    d: usize,
+    f: usize,
+    threads: usize,
+    agg: AggregatorKind,
+    nnm: bool,
+    comp: CompressionKind,
+    attack: AttackKind,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let n = gen::usize_in(rng, 6, 20);
+    let q = gen::usize_in(rng, 4, 96);
+    let aggs = [
+        AggregatorKind::Cwtm,
+        AggregatorKind::Median,
+        AggregatorKind::Krum,
+        AggregatorKind::MultiKrum,
+        AggregatorKind::Faba,
+        AggregatorKind::Mcc,
+        AggregatorKind::GeometricMedian,
+    ];
+    let comps = [
+        CompressionKind::None,
+        CompressionKind::RandK { k: gen::usize_in(rng, 1, q) },
+        CompressionKind::Qsgd { levels: gen::usize_in(rng, 2, 16) as u32 },
+    ];
+    let attacks = [
+        AttackKind::SignFlip { coeff: -2.0 },
+        AttackKind::Alie,
+        AttackKind::None,
+    ];
+    Case {
+        n,
+        q,
+        d: gen::usize_in(rng, 1, n),
+        f: rng.below(n / 2),
+        threads: [2, 3, 8][rng.below(3)],
+        agg: aggs[rng.below(aggs.len())],
+        nnm: rng.below(2) == 0,
+        comp: comps[rng.below(comps.len())],
+        attack: attacks[rng.below(attacks.len())],
+    }
+}
+
+fn cfg_of(case: &Case, threads: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.n_devices = case.n;
+    cfg.n_honest = case.n - case.f;
+    cfg.d = case.d;
+    cfg.dim = case.q;
+    cfg.iters = 6;
+    cfg.lr = 1e-6;
+    cfg.sigma_h = 0.3;
+    cfg.log_every = 2;
+    cfg.aggregator = case.agg;
+    cfg.nnm = case.nnm;
+    cfg.compression = case.comp;
+    cfg.attack = case.attack;
+    cfg.threads = threads;
+    cfg
+}
+
+fn run_case(case: &Case, threads: usize, seed: u64) -> TrainTrace {
+    let cfg = cfg_of(case, threads);
+    let mut rng = Rng::new(seed);
+    let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng);
+    let label = format!("{threads}t");
+    run_variant(&ds, &Variant { label, cfg, draco_r: None }, seed ^ 0xF)
+        .expect("fuzz case failed to run")
+}
+
+fn traces_equal(a: &TrainTrace, b: &TrainTrace) -> Result<(), String> {
+    ensure(a.iters == b.iters, || "sampled iterations differ".into())?;
+    ensure(a.loss == b.loss, || format!("loss {:?} vs {:?}", a.loss, b.loss))?;
+    ensure(a.grad_update_norm == b.grad_update_norm, || "update norms differ".into())?;
+    ensure(a.bits == b.bits, || "bit accounting differs".into())?;
+    ensure(a.final_loss == b.final_loss, || {
+        format!("final loss {} vs {}", a.final_loss, b.final_loss)
+    })
+}
+
+#[test]
+fn fuzzed_training_traces_are_thread_count_invariant() {
+    forall(14, 0xA0D1, gen_case, |case| {
+        let seed = 0xBEE5 ^ ((case.n as u64) << 8) ^ case.q as u64;
+        let serial = run_case(case, 1, seed);
+        let par = run_case(case, case.threads, seed);
+        traces_equal(&serial, &par)
+    });
+}
+
+#[test]
+fn fuzzed_pairwise_kernel_matches_reference_and_is_schedule_invariant() {
+    // sizes chosen to land on both sides of the par gate and on ragged
+    // tile edges (TILE = 16): the tiled pass must agree bitwise with the
+    // serial triangular pass AND with the direct Gram formula
+    forall(
+        10,
+        0xD15,
+        |rng| {
+            let n = gen::usize_in(rng, 2, 48);
+            let q = gen::usize_in(rng, 1, 160);
+            gen::vec_family(rng, n, q, 2.0)
+        },
+        |msgs| {
+            let serial = PairwiseDistances::compute(msgs, &Pool::serial());
+            for pool in [Pool::new(4), Pool::scoped(Parallelism::new(3))] {
+                let par = PairwiseDistances::compute(msgs, &pool);
+                for i in 0..msgs.len() {
+                    ensure(serial.row(i) == par.row(i), || {
+                        format!("row {i} differs under {pool:?}")
+                    })?;
+                }
+            }
+            for i in 0..msgs.len() {
+                for j in 0..msgs.len() {
+                    let want = if i == j {
+                        0.0
+                    } else {
+                        (norm_sq(&msgs[i]) + norm_sq(&msgs[j])
+                            - 2.0 * math::dot(&msgs[i], &msgs[j]) as f64)
+                            .max(0.0)
+                    };
+                    ensure(serial.get(i, j) == want, || {
+                        format!("entry ({i},{j}): {} vs formula {want}", serial.get(i, j))
+                    })?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fuzzed_active_math_backend_matches_scalar_reference() {
+    // trivially true without --features simd; the CI simd job makes this
+    // the scalar-vs-SSE2 lane-contract pin
+    forall(
+        32,
+        0x51D,
+        |rng| {
+            let len = gen::usize_in(rng, 0, 300);
+            (gen::vec_f32(rng, len, 8.0), gen::vec_f32(rng, len, 5.0))
+        },
+        |(a, b)| {
+            ensure(
+                math::dot(a, b).to_bits() == math::scalar::dot(a, b).to_bits(),
+                || format!("dot mismatch at len {}", a.len()),
+            )?;
+            ensure(
+                math::norm_sq(a).to_bits() == math::scalar::norm_sq(a).to_bits(),
+                || format!("norm_sq mismatch at len {}", a.len()),
+            )?;
+            ensure(
+                math::dist_sq(a, b).to_bits() == math::scalar::dist_sq(a, b).to_bits(),
+                || format!("dist_sq mismatch at len {}", a.len()),
+            )?;
+            let mut y1 = b.clone();
+            let mut y2 = b.clone();
+            math::axpy(1.618, a, &mut y1);
+            math::scalar::axpy(1.618, a, &mut y2);
+            ensure(y1 == y2, || format!("axpy mismatch at len {}", a.len()))?;
+            let mut x1 = a.clone();
+            let mut x2 = a.clone();
+            math::scale(&mut x1, -0.577);
+            math::scalar::scale(&mut x2, -0.577);
+            ensure(x1 == x2, || format!("scale mismatch at len {}", a.len()))
+        },
+    );
+}

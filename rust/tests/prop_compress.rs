@@ -102,8 +102,9 @@ fn prop_sparsifiers_support_size() {
             let q = gen::usize_in(rng, 4, 64);
             let k = gen::usize_in(rng, 1, q);
             // strictly nonzero entries so support is exactly K
-            let g: Vec<f32> =
-                (0..q).map(|_| (rng.f32() + 0.1) * if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+            let g: Vec<f32> = (0..q)
+                .map(|_| (rng.f32() + 0.1) * if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                .collect();
             let seed = rng.next_u64();
             (g, k, seed)
         },
