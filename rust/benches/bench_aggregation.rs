@@ -4,18 +4,27 @@
 //! rules (Krum, Multi-Krum, NNM): serial shared-Gram pass vs scoped spawns
 //! vs the persistent worker pool, all bit-identical by construction.
 //!
+//! Two kernel-stack sections track the PR 3 work: a **per-tier** kernel
+//! table (scalar vs SSE2 vs AVX2+FMA `dot`/`dist_sq`/`norm_sq`, every tier
+//! the CPU can run) and a **storage footprint** line for the
+//! packed-triangular `PairwiseDistances` vs the full symmetric matrix it
+//! replaced.
+//!
 //! Machine-readable results are written to `BENCH_aggregation.json` at the
 //! repository root (one snapshot per run; commit it per PR to track the
-//! perf trajectory). Set
-//! `LAD_BENCH_QUICK=1` (the CI smoke mode) to shrink budgets and skip the
-//! transformer-scale section.
+//! perf trajectory — the CI simd matrix uploads one artifact per pinned
+//! tier). Set `LAD_BENCH_QUICK=1` (the CI smoke mode) to shrink budgets and
+//! skip the transformer-scale section; set `LAD_SIMD_TIER` to pin the
+//! dispatched tier the rule sections run under.
 
+use lad::aggregation::gram::PairwiseDistances;
 use lad::aggregation::{
     Aggregator, CoordinateMedian, Cwtm, Faba, GeometricMedian, Krum, Mcc, Mean, MultiKrum, Nnm,
     Tgn,
 };
 use lad::bench_support::{run, section, BenchResult};
 use lad::util::json::Json;
+use lad::util::math::{self, Tier};
 use lad::util::parallel::{available_threads, Parallelism, Pool};
 use lad::util::rng::Rng;
 use std::collections::BTreeMap;
@@ -37,17 +46,83 @@ fn budget(ms: f64) -> f64 {
     }
 }
 
-/// One JSON record for `BENCH_aggregation.json`.
-fn record(scale: &str, rule: &str, variant: &str, r: &BenchResult, speedup: f64) -> Json {
+/// One JSON record for `BENCH_aggregation.json`. `tier` is the kernel tier
+/// the timed code ran on (the dispatched tier for rules, the explicit one
+/// for kernel rows).
+fn record(
+    scale: &str,
+    rule: &str,
+    variant: &str,
+    tier: Tier,
+    r: &BenchResult,
+    speedup: f64,
+) -> Json {
     let mut o = BTreeMap::new();
     o.insert("scale".into(), Json::Str(scale.into()));
     o.insert("rule".into(), Json::Str(rule.into()));
     o.insert("variant".into(), Json::Str(variant.into()));
+    o.insert("tier".into(), Json::Str(tier.name().into()));
     o.insert("median_ns".into(), Json::Num(r.median_ns));
     o.insert("min_ns".into(), Json::Num(r.min_ns));
     o.insert("p95_ns".into(), Json::Num(r.p95_ns));
     o.insert("speedup_vs_serial".into(), Json::Num(speedup));
     Json::Obj(o)
+}
+
+/// Per-tier kernel columns: the same `dot` / `dist_sq` / `norm_sq` workload
+/// timed on every tier this CPU can execute, so the JSON trajectory shows
+/// what each ladder rung buys. Each kernel gets its own scalar baseline
+/// (the first detected tier is always scalar), and the timed closures go
+/// through [`Tier::kernels_checked`] so the support assert is paid once
+/// outside the loop — per-call cost matches the dispatched free functions.
+fn tier_kernel_section(q: usize, entries: &mut Vec<Json>) {
+    let scale = format!("kernel,Q={q}");
+    section(&format!("kernel tiers, Q={q} (scalar vs SSE2 vs AVX2+FMA)"));
+    let a = family(1, q, 11).pop().unwrap();
+    let b = family(1, q, 12).pop().unwrap();
+    // (dot, dist_sq, norm_sq) scalar medians
+    let mut baseline: Option<(f64, f64, f64)> = None;
+    for tier in math::detected_tiers() {
+        let n = tier.name();
+        let k = tier.kernels_checked();
+        let d = run(&format!("dot ({n})"), budget(60.0), || k.dot(&a, &b));
+        let s = run(&format!("dist_sq ({n})"), budget(60.0), || k.dist_sq(&a, &b));
+        let m = run(&format!("norm_sq ({n})"), budget(60.0), || k.norm_sq(&a));
+        let (bd, bs, bm) = *baseline.get_or_insert((d.median_ns, s.median_ns, m.median_ns));
+        println!(
+            "      speedup vs scalar: dot {:.2}x, dist_sq {:.2}x, norm_sq {:.2}x (median)",
+            bd / d.median_ns,
+            bs / s.median_ns,
+            bm / m.median_ns
+        );
+        entries.push(record(&scale, "dot", "kernel", tier, &d, bd / d.median_ns));
+        entries.push(record(&scale, "dist_sq", "kernel", tier, &s, bs / s.median_ns));
+        entries.push(record(&scale, "norm_sq", "kernel", tier, &m, bm / m.median_ns));
+    }
+}
+
+/// The packed-triangular storage footprint vs the full symmetric matrix the
+/// kernel stored before — one JSON line per N so the trajectory records the
+/// halving.
+fn storage_footprint_section(entries: &mut Vec<Json>) {
+    section("PairwiseDistances storage: packed triangle vs full N×N");
+    for n in [100usize, 1000] {
+        let msgs = family(n, 4, 21);
+        let pd = PairwiseDistances::compute(&msgs, &Pool::serial());
+        let packed = pd.packed_bytes();
+        let full = pd.full_bytes_equivalent();
+        println!(
+            "  N={n:<5} packed {packed:>9} B   full-equivalent {full:>9} B   ratio {:.3}",
+            packed as f64 / full as f64
+        );
+        let mut o = BTreeMap::new();
+        o.insert("kind".into(), Json::Str("storage".into()));
+        o.insert("n".into(), Json::Num(n as f64));
+        o.insert("packed_bytes".into(), Json::Num(packed as f64));
+        o.insert("full_bytes".into(), Json::Num(full as f64));
+        o.insert("ratio".into(), Json::Num(packed as f64 / full as f64));
+        entries.push(Json::Obj(o));
+    }
 }
 
 /// Serial vs scoped-spawn vs persistent-pool comparison for the
@@ -61,6 +136,7 @@ fn strategy_section(
     entries: &mut Vec<Json>,
 ) {
     let t = pool.threads();
+    let tier = math::active_tier();
     section(&format!("{scale} — pairwise rules: serial vs scoped({t}) vs pool({t})"));
     let scoped = Parallelism::new(t);
     let rules: Vec<(&str, Box<dyn Aggregator>, Box<dyn Aggregator>, Box<dyn Aggregator>)> = vec![
@@ -96,14 +172,24 @@ fn strategy_section(
             s.median_ns / c.median_ns,
             s.median_ns / p.median_ns
         );
-        entries.push(record(scale, name, "serial", &s, 1.0));
-        entries.push(record(scale, name, "scoped", &c, s.median_ns / c.median_ns));
-        entries.push(record(scale, name, "pool", &p, s.median_ns / p.median_ns));
+        entries.push(record(scale, name, "serial", tier, &s, 1.0));
+        entries.push(record(scale, name, "scoped", tier, &c, s.median_ns / c.median_ns));
+        entries.push(record(scale, name, "pool", tier, &p, s.median_ns / p.median_ns));
     }
 }
 
 fn main() {
     let mut entries: Vec<Json> = Vec::new();
+    let tier = math::active_tier();
+    println!("kernel tier: {} (dispatched; LAD_SIMD_TIER pins)", tier.name());
+
+    // per-tier kernel columns + the packed-storage footprint first — these
+    // are the PR-over-PR trajectory rows
+    tier_kernel_section(100, &mut entries);
+    if !quick() {
+        tier_kernel_section(409_000, &mut entries);
+    }
+    storage_footprint_section(&mut entries);
 
     section("aggregation rules, N=100 Q=100 (paper scale)");
     let msgs = family(100, 100, 1);
@@ -121,7 +207,7 @@ fn main() {
     ];
     for rule in &rules {
         let r = run(&rule.name(), budget(150.0), || rule.aggregate(&msgs));
-        entries.push(record("N=100,Q=100", &rule.name(), "serial", &r, 1.0));
+        entries.push(record("N=100,Q=100", &rule.name(), "serial", tier, &r, 1.0));
     }
 
     let big = if quick() {
@@ -131,7 +217,7 @@ fn main() {
         let big = family(8, 409_000, 2);
         for rule in &rules {
             let r = run(&rule.name(), budget(250.0), || rule.aggregate(&big));
-            entries.push(record("N=8,Q=409k", &rule.name(), "serial", &r, 1.0));
+            entries.push(record("N=8,Q=409k", &rule.name(), "serial", tier, &r, 1.0));
         }
         big
     };
@@ -151,6 +237,11 @@ fn main() {
     root.insert("bench".into(), Json::Str("aggregation".into()));
     root.insert("threads".into(), Json::Num(available_threads() as f64));
     root.insert("simd".into(), Json::Bool(lad::util::math::SIMD_ACTIVE));
+    root.insert("tier".into(), Json::Str(tier.name().into()));
+    root.insert(
+        "tiers_detected".into(),
+        Json::Arr(math::detected_tiers().iter().map(|t| Json::Str(t.name().into())).collect()),
+    );
     root.insert("quick".into(), Json::Bool(quick()));
     root.insert("entries".into(), Json::Arr(entries));
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_aggregation.json");

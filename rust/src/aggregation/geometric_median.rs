@@ -3,10 +3,11 @@
 //!
 //! Each Weiszfeld iteration needs every ‖xᵢ − y‖; the shared
 //! [`CenterScratch`] kernel reuses one distance buffer across iterations
-//! (stable subtract-first distances — essential here, where y converges
-//! onto a message and a Gram expansion would cancel to zero and blow up
-//! the 1/dist weight), and the f32 image of y is materialized once per
-//! iteration (the old loop re-allocated it once per *message*).
+//! (stable subtract-first distances on the runtime-dispatched `dist_sq`
+//! tier — essential here, where y converges onto a message and a Gram
+//! expansion would cancel to zero and blow up the 1/dist weight), and the
+//! f32 image of y is materialized once per iteration (the old loop
+//! re-allocated it once per *message*).
 
 use super::gram::CenterScratch;
 use super::{check_family, Aggregator};

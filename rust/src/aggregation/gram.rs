@@ -5,15 +5,31 @@
 //! exactly once per aggregate call via the Gram expansion
 //! `‖i‖² + ‖j‖² − 2⟨i,j⟩` with cached norms — N(N−1)/2 dot products total,
 //! half of what PR 1's row-parallel pass spent (each d(i,j) was evaluated
-//! once per side there).
+//! once per side there). The dots themselves run on whatever kernel tier
+//! the [`crate::util::math`] dispatcher selected (scalar / SSE2 /
+//! AVX2+FMA), bit-identical across tiers by the lane contract.
+//!
+//! # Packed-triangular storage
+//!
+//! Only the strict upper triangle is stored — n(n−1)/2 f64 values in
+//! row-major pair order — which halves the footprint of the full symmetric
+//! matrix PR 2 kept (at the federated-scale N ≳ 10³ sweeps that is ~4 MB
+//! saved per aggregate call, and the build pass writes each entry once
+//! instead of mirroring it). Consumers keep their row-oriented access
+//! pattern through the [`RowView`] adapter: `pd.row(i)` yields the same
+//! n-length logical row (diagonal 0) the full layout exposed, walking the
+//! column segment j < i with a decreasing stride and the row segment j > i
+//! contiguously.
 //!
 //! The parallel pass tiles the upper triangle into `TILE`×`TILE` blocks of
 //! (i, j) pairs; each block is one task producing its own scratch vector
-//! (disjoint output, no synchronization), scattered into the full symmetric
-//! matrix afterwards. Every entry is produced by exactly one task with the
-//! same expression the serial loop uses, so serial, scoped and pooled
-//! execution are bit-identical by construction (pinned by
-//! `tests/fuzz_determinism.rs`).
+//! (disjoint output, no synchronization), scattered into the packed
+//! triangle afterwards — one write per entry, where the full-matrix layout
+//! paid two. Every entry is produced by exactly one task with the same
+//! expression the serial loop uses, so serial, scoped and pooled execution
+//! are bit-identical by construction (pinned by
+//! `tests/fuzz_determinism.rs`, which also pins packed-vs-full equality
+//! against a naively built N×N reference).
 //!
 //! [`CenterScratch`] is the kernel's one-vs-many sibling for the iterative
 //! reweighting rules (MCC, geometric median) and the κ estimator: the
@@ -22,8 +38,8 @@
 //! Unlike the pairwise pass it does **not** use the Gram expansion: near a
 //! converged center the expansion cancels catastrophically in f32 (the
 //! Weiszfeld weights would blow up on a clamped-to-zero distance), so each
-//! entry is the numerically stable subtract-first [`dist_sq`], which the
-//! SIMD backend accelerates directly.
+//! entry is the numerically stable subtract-first [`dist_sq`], which every
+//! intrinsics tier accelerates directly.
 
 use super::par_gate;
 use crate::util::math::{dist_sq, dot, norm_sq};
@@ -45,14 +61,29 @@ fn tile_for(n: usize, threads: usize) -> usize {
     n.div_ceil(target_blocks).clamp(1, TILE)
 }
 
+/// Index of pair (i, j), i < j, in the packed strict upper triangle
+/// (row-major: row 0's n−1 entries, then row 1's n−2, …).
+#[inline]
+fn tri_index(n: usize, i: usize, j: usize) -> usize {
+    debug_assert!(i < j && j < n);
+    i * n - i * (i + 1) / 2 + (j - i - 1)
+}
+
+/// Packed offset where row i's contiguous segment (j > i) begins.
+#[inline]
+fn row_start(n: usize, i: usize) -> usize {
+    i * n - i * (i + 1) / 2
+}
+
 /// The symmetric N×N squared-distance matrix of a message family, computed
-/// once via the Gram expansion.
+/// once via the Gram expansion and stored as a packed strict upper triangle
+/// (n(n−1)/2 f64 — half the full-matrix footprint).
 #[derive(Debug, Clone)]
 pub struct PairwiseDistances {
     n: usize,
-    /// full symmetric matrix, diagonal 0 (row access beats triangular
-    /// packing on the consumer side; N ≤ a few hundred keeps this small)
-    dist: Vec<f64>,
+    /// strict upper triangle in row-major pair order; entry (i,j), i<j, at
+    /// [`tri_index`]`(n, i, j)`
+    tri: Vec<f64>,
     norms: Vec<f64>,
 }
 
@@ -63,18 +94,19 @@ impl PairwiseDistances {
         let n = msgs.len();
         let q = msgs.first().map(|m| m.len()).unwrap_or(0);
         let norms: Vec<f64> = msgs.iter().map(|m| norm_sq(m)).collect();
-        let mut dist = vec![0.0f64; n * n];
+        let pairs = n * n.saturating_sub(1) / 2;
         let entry = |i: usize, j: usize| -> f64 {
             (norms[i] + norms[j] - 2.0 * dot(&msgs[i], &msgs[j]) as f64).max(0.0)
         };
-        if pool.is_serial() || !par_gate(n, q) || n < 2 {
+        let tri = if pool.is_serial() || !par_gate(n, q) || n < 2 {
+            // serial pass appends in exactly packed order — no index math
+            let mut tri = Vec::with_capacity(pairs);
             for i in 0..n {
                 for j in i + 1..n {
-                    let d = entry(i, j);
-                    dist[i * n + j] = d;
-                    dist[j * n + i] = d;
+                    tri.push(entry(i, j));
                 }
             }
+            tri
         } else {
             let tile = tile_for(n, pool.threads());
             let blocks = n.div_ceil(tile);
@@ -84,7 +116,8 @@ impl PairwiseDistances {
                     tasks.push((bi, bj));
                 }
             }
-            // per-task scratch tiles: disjoint output, stitched serially
+            // per-task scratch tiles: disjoint pair sets, stitched into the
+            // packed triangle serially (one write per entry)
             let tiles: Vec<Vec<f64>> = pool.par_map(&tasks, |_, &(bi, bj)| {
                 let mut out = Vec::with_capacity(tile * tile);
                 for i in bi * tile..((bi + 1) * tile).min(n) {
@@ -94,18 +127,19 @@ impl PairwiseDistances {
                 }
                 out
             });
+            let mut tri = vec![0.0f64; pairs];
             for (&(bi, bj), t) in tasks.iter().zip(&tiles) {
                 let mut it = t.iter();
                 for i in bi * tile..((bi + 1) * tile).min(n) {
+                    let base = row_start(n, i);
                     for j in (bj * tile).max(i + 1)..((bj + 1) * tile).min(n) {
-                        let d = *it.next().expect("tile layout mismatch");
-                        dist[i * n + j] = d;
-                        dist[j * n + i] = d;
+                        tri[base + (j - i - 1)] = *it.next().expect("tile layout mismatch");
                     }
                 }
             }
-        }
-        PairwiseDistances { n, dist, norms }
+            tri
+        };
+        PairwiseDistances { n, tri, norms }
     }
 
     /// Family size N.
@@ -113,25 +147,149 @@ impl PairwiseDistances {
         self.n
     }
 
-    /// d(i,j); 0 on the diagonal.
+    /// d(i,j); 0 on the diagonal, symmetric by construction.
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f64 {
         debug_assert!(i < self.n && j < self.n);
-        self.dist[i * self.n + j]
+        match i.cmp(&j) {
+            std::cmp::Ordering::Less => self.tri[tri_index(self.n, i, j)],
+            std::cmp::Ordering::Equal => 0.0,
+            std::cmp::Ordering::Greater => self.tri[tri_index(self.n, j, i)],
+        }
     }
 
-    /// Full row i (diagonal entry included, = 0).
+    /// Logical row i as a [`RowView`] — the same n entries (diagonal 0) the
+    /// full-matrix layout used to expose, adapted onto the packed triangle.
     #[inline]
-    pub fn row(&self, i: usize) -> &[f64] {
+    pub fn row(&self, i: usize) -> RowView<'_> {
         debug_assert!(i < self.n);
-        &self.dist[i * self.n..(i + 1) * self.n]
+        RowView { pd: self, i }
     }
 
     /// Cached squared norms ‖xᵢ‖² (free byproduct of the Gram pass).
     pub fn norms(&self) -> &[f64] {
         &self.norms
     }
+
+    /// Stored distance entries (the packed strict upper triangle).
+    pub fn packed_len(&self) -> usize {
+        self.tri.len()
+    }
+
+    /// Bytes held by the packed distance storage.
+    pub fn packed_bytes(&self) -> usize {
+        self.tri.len() * std::mem::size_of::<f64>()
+    }
+
+    /// Bytes the PR 2 full symmetric N×N layout would have held — the
+    /// denominator of the bench's storage-footprint line.
+    pub fn full_bytes_equivalent(&self) -> usize {
+        self.n * self.n * std::mem::size_of::<f64>()
+    }
 }
+
+/// Borrowed view of one logical row of a [`PairwiseDistances`]: n entries
+/// in column order j = 0..n, diagonal 0. Row-pattern consumers (Krum
+/// scoring, NNM neighbor selection) iterate this exactly as they iterated
+/// the old full-matrix row slice.
+#[derive(Clone, Copy)]
+pub struct RowView<'a> {
+    pd: &'a PairwiseDistances,
+    i: usize,
+}
+
+impl<'a> RowView<'a> {
+    /// Row length (= n).
+    pub fn len(&self) -> usize {
+        self.pd.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pd.n == 0
+    }
+
+    /// d(i, j).
+    #[inline]
+    pub fn get(&self, j: usize) -> f64 {
+        self.pd.get(self.i, j)
+    }
+
+    /// Iterate the row's n entries in column order. The column segment
+    /// (j < i) walks the packed triangle with a decreasing stride; the row
+    /// segment (j > i) is one contiguous packed slice.
+    pub fn iter(&self) -> RowIter<'a> {
+        let n = self.pd.n;
+        let i = self.i;
+        RowIter {
+            tri: &self.pd.tri,
+            n,
+            i,
+            j: 0,
+            // (0, i) for the column walk; (i, i+1) for the contiguous tail.
+            // Placeholder 0 when the respective segment is empty.
+            col_idx: if i > 0 { tri_index(n, 0, i) } else { 0 },
+            row_idx: if i + 1 < n { tri_index(n, i, i + 1) } else { 0 },
+        }
+    }
+
+    /// Materialize the logical row (tests / debugging).
+    pub fn to_vec(&self) -> Vec<f64> {
+        self.iter().collect()
+    }
+}
+
+impl<'a> IntoIterator for RowView<'a> {
+    type Item = f64;
+    type IntoIter = RowIter<'a>;
+    fn into_iter(self) -> RowIter<'a> {
+        self.iter()
+    }
+}
+
+/// Iterator over one logical row of the packed triangle (see
+/// [`RowView::iter`]).
+pub struct RowIter<'a> {
+    tri: &'a [f64],
+    n: usize,
+    i: usize,
+    j: usize,
+    col_idx: usize,
+    row_idx: usize,
+}
+
+impl Iterator for RowIter<'_> {
+    type Item = f64;
+
+    #[inline]
+    fn next(&mut self) -> Option<f64> {
+        if self.j >= self.n {
+            return None;
+        }
+        let j = self.j;
+        self.j += 1;
+        Some(match j.cmp(&self.i) {
+            std::cmp::Ordering::Less => {
+                let v = self.tri[self.col_idx];
+                // next column entry (j+1, i) sits n−j−2 further on
+                self.col_idx += self.n - j - 2;
+                v
+            }
+            std::cmp::Ordering::Equal => 0.0,
+            std::cmp::Ordering::Greater => {
+                let v = self.tri[self.row_idx];
+                self.row_idx += 1;
+                v
+            }
+        })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = self.n - self.j;
+        (left, Some(left))
+    }
+}
+
+impl ExactSizeIterator for RowIter<'_> {}
 
 /// Below this many total elements (messages × dim) the one-vs-many pass
 /// stays on the calling thread — dispatch overhead would dominate.
@@ -181,9 +339,24 @@ mod tests {
     }
 
     #[test]
+    fn tri_index_is_the_packed_row_major_order() {
+        // n = 5: (0,1)(0,2)(0,3)(0,4)(1,2)(1,3)(1,4)(2,3)(2,4)(3,4)
+        let mut k = 0;
+        for i in 0..5 {
+            assert_eq!(row_start(5, i), k);
+            for j in i + 1..5 {
+                assert_eq!(tri_index(5, i, j), k, "({i},{j})");
+                k += 1;
+            }
+        }
+        assert_eq!(k, 10);
+    }
+
+    #[test]
     fn matches_direct_distances_within_float_error() {
         let msgs = family(12, 9, 1);
         let pd = PairwiseDistances::compute(&msgs, &Pool::serial());
+        assert_eq!(pd.packed_len(), 12 * 11 / 2);
         for i in 0..12 {
             assert_eq!(pd.get(i, i), 0.0);
             for j in 0..12 {
@@ -200,13 +373,42 @@ mod tests {
     }
 
     #[test]
+    fn row_view_matches_entrywise_access() {
+        for n in [1usize, 2, 3, 7, 12] {
+            let msgs = family(n, 5, 100 + n as u64);
+            let pd = PairwiseDistances::compute(&msgs, &Pool::serial());
+            for i in 0..n {
+                let row = pd.row(i);
+                assert_eq!(row.len(), n);
+                assert_eq!(row.iter().len(), n, "ExactSize i={i}");
+                let v = row.to_vec();
+                assert_eq!(v.len(), n);
+                for j in 0..n {
+                    assert_eq!(v[j], pd.get(i, j), "n={n} ({i},{j})");
+                    assert_eq!(row.get(j), pd.get(i, j), "n={n} get({i},{j})");
+                }
+                assert_eq!(v[i], 0.0, "diagonal");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_storage_halves_the_full_matrix_footprint() {
+        let msgs = family(20, 4, 7);
+        let pd = PairwiseDistances::compute(&msgs, &Pool::serial());
+        assert_eq!(pd.packed_bytes(), 20 * 19 / 2 * 8);
+        assert_eq!(pd.full_bytes_equivalent(), 20 * 20 * 8);
+        assert!(pd.packed_bytes() * 2 < pd.full_bytes_equivalent());
+    }
+
+    #[test]
     fn tiled_parallel_pass_is_bit_identical_to_serial() {
         // n ≥ 2·TILE and n²·q above the gate so tiling genuinely engages
         let msgs = family(45, 64, 2);
         let serial = PairwiseDistances::compute(&msgs, &Pool::serial());
         for pool in [Pool::new(4), Pool::new(8), Pool::scoped(Parallelism::new(3))] {
             let par = PairwiseDistances::compute(&msgs, &pool);
-            assert_eq!(serial.dist, par.dist, "{pool:?}");
+            assert_eq!(serial.tri, par.tri, "{pool:?}");
             assert_eq!(serial.norms, par.norms, "{pool:?}");
         }
     }
@@ -234,7 +436,7 @@ mod tests {
             let msgs = family(n, 70_000 / (n * n) + 16, 40 + n as u64);
             let serial = PairwiseDistances::compute(&msgs, &Pool::serial());
             let par = PairwiseDistances::compute(&msgs, &Pool::new(8));
-            assert_eq!(serial.dist, par.dist, "n={n}");
+            assert_eq!(serial.tri, par.tri, "n={n}");
         }
         // tile_for spreads small families over multiple blocks
         assert!(tile_for(8, 8) < 8);

@@ -8,8 +8,9 @@
 //! measured κ into the theory formulas for the Fig. 2/3 reproductions.
 //!
 //! The honest spread Σ‖zᵢ − z̄‖² is computed through the shared
-//! [`CenterScratch`] kernel (one distance buffer reused across every trial)
-//! and shared by the whole adversarial portfolio of each trial.
+//! [`CenterScratch`] kernel (one distance buffer reused across every trial,
+//! on the runtime-dispatched `dist_sq` tier) and shared by the whole
+//! adversarial portfolio of each trial.
 
 use super::gram::CenterScratch;
 use super::Aggregator;

@@ -8,8 +8,10 @@
 //! Gram pass (tiled over the pool when large enough) feeds every score, so
 //! each d(i,j) is computed exactly once — half the dot products of the old
 //! row-parallel pass, and Krum + Multi-Krum on the same family share the
-//! same kernel shape. The per-row partial sort is O(N²) with no Q factor
-//! and stays serial.
+//! same kernel shape. Scoring walks the packed triangle through the
+//! [`crate::aggregation::gram::RowView`] adapter (same logical rows as the
+//! old full matrix, half the memory). The per-row partial sort is O(N²)
+//! with no Q factor and stays serial.
 
 use super::gram::PairwiseDistances;
 use super::{check_family, Aggregator};
@@ -25,8 +27,7 @@ fn scores(msgs: &[Vec<f32>], f: usize, pool: &Pool) -> Vec<f64> {
     let mut dists: Vec<f64> = Vec::with_capacity(n.saturating_sub(1));
     for i in 0..n {
         dists.clear();
-        let row = pd.row(i);
-        dists.extend((0..n).filter(|&j| j != i).map(|j| row[j]));
+        dists.extend(pd.row(i).iter().enumerate().filter(|&(j, _)| j != i).map(|(_, d)| d));
         let k = m.min(dists.len());
         if k < dists.len() {
             dists.select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));

@@ -6,8 +6,9 @@
 //!
 //! The per-iteration distance pass runs through the shared
 //! [`CenterScratch`] kernel: one reused distance buffer across reweight
-//! iterations, numerically stable subtract-first distances, pool-parallel
-//! over messages when the family is large.
+//! iterations, numerically stable subtract-first distances (on the
+//! runtime-dispatched `dist_sq` kernel tier), pool-parallel over messages
+//! when the family is large.
 
 use super::gram::CenterScratch;
 use super::{check_family, Aggregator};

@@ -43,13 +43,19 @@
 //! The distance-consuming rules are built on two shared kernels in
 //! [`gram`]: [`gram::PairwiseDistances`] computes the triangular distance
 //! matrix exactly once per aggregate call via `‖i‖²+‖j‖²−2⟨i,j⟩` (tiled
-//! into disjoint per-task scratch for the parallel pass), and
+//! into disjoint per-task scratch for the parallel pass) into
+//! **packed-triangular storage** — n(n−1)/2 f64, half the full-matrix
+//! footprint — consumed per logical row through the `RowView` adapter; and
 //! [`gram::CenterScratch`] reuses one pool-parallel distance buffer across
 //! the reweight iterations of MCC / geometric median and the κ estimator
-//! (stable subtract-first distances, not the Gram form). Underneath,
-//! every rule that parallelizes holds a [`Pool`] handle — a persistent
-//! worker pool shared with the trainer's gradient oracle and compression
-//! stages via [`from_config_pooled`] (the [`TrainConfig::threads`] wiring);
+//! (stable subtract-first distances, not the Gram form). The dots and
+//! distances themselves run on the widest kernel tier the
+//! [`crate::util::math`] dispatcher detected (scalar / SSE2 / AVX2+FMA,
+//! bit-identical by the lane contract). Underneath, every rule that
+//! parallelizes holds a [`Pool`] handle — a persistent worker pool shared
+//! with the trainer's gradient oracle and compression stages via
+//! [`from_config_pooled`] (the [`TrainConfig::threads`] wiring), and with
+//! the figure fan-outs via the two-level `Pool::budgeted` API;
 //! `with_parallelism` keeps the scoped-spawn engine available behind the
 //! same API. Serial, scoped and pooled passes are bit-identical — pinned by
 //! `tests/fuzz_determinism.rs`.

@@ -5,9 +5,17 @@
 //!
 //! Hot-path note: the O(n²Q) distance pass reads the shared
 //! [`PairwiseDistances`] kernel — one tiled triangular Gram pass, each
-//! d(i,j) computed exactly once. The per-row selection + averaging
+//! d(i,j) computed exactly once into packed-triangular storage, consumed
+//! per row through the `RowView` adapter. The per-row selection + averaging
 //! (O(nQ) per row) is parallelized over the pool on top of the shared
 //! matrix; both stages are bit-identical to serial by construction.
+//!
+//! Degenerate-mixing fast path: when `keep == n` (f = 0) every row keeps
+//! all n messages, so the mixed family is n copies of the global mean — an
+//! affine image of the input that needs no distances at all. [`Nnm::mix`]
+//! detects this and skips the O(n²Q) `PairwiseDistances` pass entirely,
+//! producing the same bits the generic path would (same axpy order), which
+//! makes `f = 0` reference runs as cheap as their non-NNM counterparts.
 
 use super::gram::PairwiseDistances;
 use super::{check_family, par_gate, Aggregator};
@@ -42,10 +50,22 @@ impl Nnm {
         let q = check_family(msgs);
         let n = msgs.len();
         let keep = n.saturating_sub(self.f).max(1);
+        if keep == n {
+            // Degenerate mixing (f = 0): every row keeps all n neighbors,
+            // so each mixed row is the same global mean. Computing it once
+            // with the exact axpy order the generic row loop uses keeps the
+            // result bit-identical while skipping the O(n²Q) distance pass.
+            let mut y = vec![0.0f32; q];
+            for m in msgs {
+                axpy(1.0, m, &mut y);
+            }
+            scale(&mut y, 1.0 / keep as f32);
+            return vec![y; n];
+        }
         let pd = PairwiseDistances::compute(msgs, &self.pool);
         let mix_row = |i: usize| -> Vec<f32> {
             // the diagonal entry d(i,i) = 0 keeps xᵢ among its own neighbors
-            let mut d: Vec<(f64, usize)> = pd.row(i).iter().copied().zip(0..n).collect();
+            let mut d: Vec<(f64, usize)> = pd.row(i).iter().zip(0..n).collect();
             if keep < n {
                 d.select_nth_unstable_by(keep - 1, |a, b| a.0.total_cmp(&b.0));
             }
@@ -139,6 +159,26 @@ mod tests {
             err_mixed <= err_plain * 1.5,
             "nnm {err_mixed} should not be much worse than plain {err_plain}"
         );
+    }
+
+    #[test]
+    fn degenerate_keep_all_fast_path_matches_generic_mean() {
+        let mut rng = Rng::new(9);
+        let msgs: Vec<Vec<f32>> = (0..10).map(|_| rng.gauss_vec(33)).collect();
+        let mixed = Nnm::new(0, Box::new(Mean)).mix(&msgs);
+        // the generic row loop would sum all n messages in index order and
+        // scale by 1/n — the fast path must reproduce those exact bits
+        let mut want = vec![0.0f32; 33];
+        for m in &msgs {
+            axpy(1.0, m, &mut want);
+        }
+        scale(&mut want, 1.0 / 10.0);
+        for row in &mixed {
+            assert_eq!(row, &want);
+        }
+        // pooled calls take the same fast path (no distance dispatch at all)
+        let pool = Pool::new(4);
+        assert_eq!(Nnm::new(0, Box::new(Mean)).with_pool(&pool).mix(&msgs), mixed);
     }
 
     #[test]

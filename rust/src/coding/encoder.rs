@@ -3,7 +3,10 @@
 //!
 //! The per-subset gradient matrix G (row k = ∇f_k) is produced by a gradient
 //! oracle (native Rust or the PJRT artifact); encoding is a d-row gather +
-//! axpy, which is the L3 hot path at d = O(N).
+//! axpy, which is the L3 hot path at d = O(N). The axpy/scale calls run on
+//! the widest kernel tier the `util::math` dispatcher detected (scalar /
+//! SSE2 / AVX2+FMA — bit-identical across tiers, so coded vectors never
+//! depend on the host CPU).
 
 use crate::coding::assignment::Assignment;
 use crate::util::math::{axpy, scale, Mat};
@@ -13,7 +16,7 @@ use crate::util::math::{axpy, scale, Mat};
 /// and the iteration's assignment.
 pub fn encode_coded_into(grads: &Mat, row: &[usize], assign: &Assignment, out: &mut [f32]) {
     debug_assert_eq!(out.len(), grads.cols);
-    out.iter_mut().for_each(|x| *x = 0.0);
+    out.fill(0.0);
     for &k in row {
         axpy(1.0, grads.row(assign.p[k]), out);
     }

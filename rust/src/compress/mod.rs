@@ -15,7 +15,10 @@
 //!
 //! Batch uplink compression (one private RNG stream per device, thread-count
 //! invariant) is provided by [`compress_batch`] — the step both the fast
-//! trainer and the cluster leader execute per iteration.
+//! trainer and the cluster leader execute per iteration. Norm computations
+//! inside the operators (QSGD's ‖g‖, the δ̂ estimator's distances) run on
+//! the runtime-dispatched `util::math` kernel tier, bit-identical across
+//! tiers, so compressed messages never depend on the host CPU.
 
 pub mod qsgd;
 pub mod rand_k;

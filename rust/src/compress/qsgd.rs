@@ -3,6 +3,9 @@
 //! Each coordinate is quantized to s levels of |g_j|/‖g‖·s, rounding up or
 //! down stochastically so that E[C(g)] = g. δ ≤ min(Q/s², √Q/s).
 //! Wire format: 32-bit norm + per coordinate (sign + ⌈log₂(s+1)⌉ level bits).
+//! The ‖g‖ pass is the tier-dispatched `util::math::norm` (4-lane f64
+//! contract — identical bits on every tier, so quantized messages are
+//! CPU-independent).
 
 use super::{CompressedMsg, Compressor};
 use crate::util::math::norm;

@@ -25,9 +25,9 @@ impl Compressor for TopK {
         let k = self.k.min(q);
         let mut idx: Vec<usize> = (0..q).collect();
         if k < q {
-            idx.select_nth_unstable_by(k - 1, |&a, &b| {
-                g[b].abs().partial_cmp(&g[a].abs()).unwrap()
-            });
+            // total_cmp: same order as partial_cmp on the non-negative abs
+            // values, but NaN-proof (no unwrap on adversarial gradients)
+            idx.select_nth_unstable_by(k - 1, |&a, &b| g[b].abs().total_cmp(&g[a].abs()));
         }
         let mut out = vec![0.0f32; q];
         for &j in &idx[..k] {

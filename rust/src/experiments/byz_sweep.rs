@@ -3,11 +3,11 @@
 //! (eq. 35 with H = N − B). Not a paper figure — an ablation of the
 //! robustness margin that Theorem 2 predicts.
 
-use super::common::{run_variant, ExperimentOutput, Series, Variant};
+use super::common::{run_variant_in, ExperimentOutput, Series, Variant};
 use crate::config::{AggregatorKind, AttackKind, TrainConfig};
 use crate::data::linreg::LinRegDataset;
 use crate::theory::TheoryParams;
-use crate::util::parallel::{par_map, Parallelism};
+use crate::util::parallel::Pool;
 use crate::util::rng::Rng;
 use crate::Result;
 
@@ -21,7 +21,8 @@ pub struct ByzSweepParams {
     pub lr: f64,
     pub sigma_h: f64,
     pub seed: u64,
-    /// worker threads for the per-B fan-out (0 = all cores)
+    /// total thread budget for the sweep (0 = all cores): the per-B
+    /// fan-out and each run's inner stages share one budgeted pool
     pub threads: usize,
 }
 
@@ -49,9 +50,11 @@ pub fn run(p: &ByzSweepParams) -> Result<ExperimentOutput> {
     let mut rng = Rng::new(p.seed);
     let ds = LinRegDataset::generate(p.n, p.q, p.sigma_h, &mut rng);
     // each B value is an independent training run with its own config and
-    // Rng::new(seed) — the fan-out is bit-identical to the serial sweep
-    let par = Parallelism::new(p.threads);
-    let finals = par_map(par, &p.byz_counts, |_, &b| -> Result<(usize, f64)> {
+    // Rng::new(seed) — the fan-out is bit-identical to the serial sweep.
+    // One two-level budget bounds total threads at p.threads: the per-B
+    // fan-out shares a pool and each run borrows an inner slice of it.
+    let budget = Pool::budgeted(p.threads, p.byz_counts.len());
+    let finals = budget.outer().par_map(&p.byz_counts, |_, &b| -> Result<(usize, f64)> {
         let mut cfg = TrainConfig::default();
         cfg.n_devices = p.n;
         cfg.n_honest = p.n - b;
@@ -64,10 +67,11 @@ pub fn run(p: &ByzSweepParams) -> Result<ExperimentOutput> {
         cfg.trim_frac = ((b as f64 + 1.0) / p.n as f64).min(0.45);
         cfg.attack = AttackKind::SignFlip { coeff: -2.0 };
         cfg.log_every = 0;
-        let tr = run_variant(
+        let tr = run_variant_in(
             &ds,
             &Variant { label: format!("b{b}"), cfg, draco_r: None },
             p.seed ^ 0xB,
+            &budget.inner(),
         )?;
         Ok((b, tr.final_loss))
     });

@@ -11,7 +11,7 @@ use crate::runtime::Runtime;
 use crate::server::trainer::{DracoTrainer, Trainer};
 use crate::server::TrainTrace;
 use crate::util::csv::CsvWriter;
-use crate::util::parallel::{par_map, Parallelism, Pool};
+use crate::util::parallel::{Parallelism, Pool};
 use crate::util::rng::Rng;
 use crate::Result;
 use std::path::Path;
@@ -103,10 +103,27 @@ pub struct Variant {
 }
 
 /// Run one variant against a shared dataset; every variant sees the same
-/// data and the same seed so curves are comparable. One persistent worker
-/// pool (from `cfg.threads`) is shared by the oracle, compression and
-/// aggregation stages of the run.
+/// data and the same seed so curves are comparable. Spins up a private
+/// worker pool from `cfg.threads`; prefer [`run_variant_in`] when the
+/// caller already owns a pool (the budgeted figure fan-outs), so variants
+/// share workers instead of multiplying them.
 pub fn run_variant(ds: &LinRegDataset, v: &Variant, seed: u64) -> Result<TrainTrace> {
+    let pool =
+        if v.draco_r.is_some() { Pool::serial() } else { Pool::new(v.cfg.threads) };
+    run_variant_in(ds, v, seed, &pool)
+}
+
+/// [`run_variant`] with an explicit worker pool for the run's inner stages
+/// (oracle, compression, aggregation). The pool only schedules — traces are
+/// bit-identical for any pool width, so a borrowed budget slice
+/// ([`Pool::borrow`]) gives the same curve a private pool would. The DRACO
+/// path is decode-bound and ignores the pool.
+pub fn run_variant_in(
+    ds: &LinRegDataset,
+    v: &Variant,
+    seed: u64,
+    pool: &Pool,
+) -> Result<TrainTrace> {
     let mut oracle = make_oracle(ds, v.cfg.oracle)?;
     let mut x0 = vec![0.0f32; v.cfg.dim];
     let mut rng = Rng::new(seed);
@@ -115,11 +132,10 @@ pub fn run_variant(ds: &LinRegDataset, v: &Variant, seed: u64) -> Result<TrainTr
         let trainer = DracoTrainer { cfg: &v.cfg, attack: attack.as_ref(), r };
         trainer.run(oracle.as_mut(), &mut x0, &v.label, &mut rng)
     } else {
-        let pool = Pool::new(v.cfg.threads);
-        let agg = aggregation::from_config_pooled(&v.cfg, &pool);
+        let agg = aggregation::from_config_pooled(&v.cfg, pool);
         let comp = compress::from_kind(v.cfg.compression);
-        let trainer = Trainer::new(&v.cfg, agg.as_ref(), attack.as_ref(), comp.as_ref())
-            .with_pool(&pool);
+        let trainer =
+            Trainer::new(&v.cfg, agg.as_ref(), attack.as_ref(), comp.as_ref()).with_pool(pool);
         trainer.run(oracle.as_mut(), &mut x0, &v.label, &mut rng)
     }
 }
@@ -134,9 +150,10 @@ fn make_oracle(ds: &LinRegDataset, kind: OracleKind) -> Result<Box<dyn CodedGrad
 }
 
 /// Run a family of variants over one generated dataset; returns traces.
-/// Variants run concurrently on all available cores (each variant owns its
-/// oracle, model and `Rng::new(run_seed)`, so results are bit-identical to
-/// the serial sweep); use [`run_figure_par`] to control the thread budget.
+/// Variants run concurrently under one all-cores [`Pool::budgeted`] budget
+/// (each variant owns its oracle, model and `Rng::new(run_seed)`, so
+/// results are bit-identical to the serial sweep); use [`run_figure_par`]
+/// to control the total thread budget.
 pub fn run_figure(
     n: usize,
     q: usize,
@@ -148,7 +165,16 @@ pub fn run_figure(
     run_figure_par(n, q, sigma_h, variants, data_seed, run_seed, Parallelism::auto())
 }
 
-/// [`run_figure`] with an explicit thread budget for the variant fan-out.
+/// [`run_figure`] with an explicit **total** thread budget for the figure.
+///
+/// The budget is two-level: the variant fan-out and every variant's inner
+/// stages (oracle, compression, aggregation) share one worker pool, each
+/// variant borrowing a `⌈total / branches⌉`-wide slice further capped by
+/// its own `cfg.threads`. Pre-budget, each variant built a private
+/// `Pool::new(cfg.threads)` under a scoped fan-out, oversubscribing small
+/// machines at `variants × threads`; total live threads are now bounded by
+/// `par` alone, and the traces are unchanged (thread counts never alter a
+/// trace — pinned by `tests/fuzz_determinism.rs`).
 pub fn run_figure_par(
     n: usize,
     q: usize,
@@ -160,13 +186,16 @@ pub fn run_figure_par(
 ) -> Result<Vec<TrainTrace>> {
     let mut rng = Rng::new(data_seed);
     let ds = LinRegDataset::generate(n, q, sigma_h, &mut rng);
-    par_map(par, variants, |_, v| -> Result<TrainTrace> {
-        let tr = run_variant(&ds, v, run_seed)?;
-        eprintln!("  {}", tr.summary());
-        Ok(tr)
-    })
-    .into_iter()
-    .collect()
+    let budget = Pool::budgeted(par.threads(), variants.len());
+    budget
+        .outer()
+        .par_map(variants, |_, v| -> Result<TrainTrace> {
+            let tr = run_variant_in(&ds, v, run_seed, &budget.inner_capped(v.cfg.threads))?;
+            eprintln!("  {}", tr.summary());
+            Ok(tr)
+        })
+        .into_iter()
+        .collect()
 }
 
 #[cfg(test)]

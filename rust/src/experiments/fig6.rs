@@ -23,7 +23,8 @@ pub struct Fig6Params {
     pub d: usize,
     pub oracle: OracleKind,
     pub seed: u64,
-    /// worker threads for the variant fan-out (0 = all cores)
+    /// total thread budget for the figure (0 = all cores): the variant
+    /// fan-out and each variant's inner stages share one budgeted pool
     pub threads: usize,
 }
 

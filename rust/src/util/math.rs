@@ -4,30 +4,64 @@
 //! [`Mat`]. Everything here is allocation-conscious: the training loop calls
 //! these per iteration per device.
 //!
-//! # Kernel backends and the lane contract
+//! # The kernel tier ladder
 //!
-//! Each hot kernel (`dot`, `norm_sq`, `dist_sq`, `axpy`, `scale`) has two
-//! implementations selected at compile time:
+//! Each hot kernel (`dot`, `norm_sq`, `dist_sq`, `axpy`, `scale`) exists in
+//! up to three tiers, all implementing one **lane contract** (below) so that
+//! every tier produces bit-identical results and swapping tiers can never
+//! change a training trace:
 //!
-//! * [`scalar`] — the portable reference, always compiled;
-//! * `simd_x86` — SSE2 intrinsics (`core::arch::x86_64`, baseline on every
-//!   x86-64 CPU, stable Rust), compiled and used when the crate is built
-//!   with `--features simd` on x86-64. On other targets the feature falls
-//!   back to [`scalar`].
+//! * [`Tier::Scalar`] — the portable reference in [`scalar`], always
+//!   compiled, and the only tier on non-x86-64 targets or without
+//!   `--features simd`;
+//! * [`Tier::Sse2`] — SSE2 intrinsics (baseline on every x86-64 CPU, no
+//!   detection needed), implementing the widened contract with register
+//!   pairs;
+//! * [`Tier::Avx2Fma`] — AVX2 intrinsics compiled with
+//!   `#[target_feature(enable = "avx2,fma")]`, selected only when the
+//!   running CPU reports both feature bits (they ship together on every
+//!   AVX2-era core). The kernels deliberately use *separate* multiply and
+//!   add instructions — a fused `vfmadd` rounds once where the contract
+//!   rounds twice, which would break cross-tier bit-identity; enabling the
+//!   `fma` target feature is still safe because rustc never auto-contracts
+//!   float expressions.
 //!
-//! Both backends follow one **lane contract**, so their results are
-//! bit-identical and swapping backends can never change a training trace
-//! (pinned by `active_kernels_match_scalar_reference` below and by
-//! `rust/tests/fuzz_determinism.rs`):
+//! # Runtime dispatch
 //!
-//! * f32 accumulations (`dot`) run 4 independent lanes over strided
-//!   elements, reduced as `((l0 + l1) + l2) + l3`, then a sequential
-//!   remainder loop;
-//! * f64 accumulations of f32 inputs (`norm_sq`, `dist_sq`) run 2
-//!   independent lanes (even/odd elements), reduced as `l0 + l1`, then the
-//!   final odd element if any;
-//! * element-wise kernels (`axpy`, `scale`) are trivially identical per
-//!   element.
+//! With `--features simd` on x86-64 the widest safe tier is selected **once
+//! per process**: the first kernel call runs `is_x86_feature_detected!`,
+//! resolves the optional `LAD_SIMD_TIER` override (values `scalar`, `sse2`,
+//! `avx2`; requests above what the CPU supports clamp down with a note on
+//! stderr — used by CI to pin each tier), and publishes a `&'static`
+//! function-pointer table through an `AtomicPtr`. Every later call is one
+//! relaxed load plus an indirect call — no per-call feature detection and no
+//! tier branching. Without the feature (or off x86-64) the public functions
+//! compile straight to the scalar reference and the dispatcher does not
+//! exist.
+//!
+//! Per-tier kernels stay reachable for tests and benches through the
+//! [`Tier`] methods ([`Tier::dot`], …); [`active_tier`], [`compiled_tiers`]
+//! and [`detected_tiers`] report what the dispatcher can and did pick.
+//!
+//! # The lane contract (widened: 8 f32 / 4 f64 lanes)
+//!
+//! * `dot` runs 8 independent f32 lanes, lane `k` accumulating elements
+//!   `8·i + k` in index order; reduction folds the high half onto the low
+//!   (`m[k] = l[k] + l[k+4]`) and then sums `((m0 + m1) + m2) + m3`;
+//!   remaining elements (< 8) are added sequentially afterwards.
+//! * `norm_sq` / `dist_sq` accumulate f64 squares in 4 independent lanes,
+//!   lane `k` taking elements `4·i + k` (for `dist_sq` the difference is
+//!   taken in f32 first, then widened — the numerically stable
+//!   subtract-first form); reduction is `(l0 + l2) + (l1 + l3)`; remaining
+//!   elements (< 4) are squared and added sequentially afterwards.
+//! * `axpy` / `scale` are element-wise and trivially identical per element
+//!   at any vector width.
+//!
+//! PR 2's contract was 4 f32 / 2 f64 lanes; the widening (so one AVX2
+//! register is one lane set) shifts absolute trace values by ~1 ulp while
+//! every invariant and equality pin in the test suite holds. Cross-tier
+//! bit-identity is pinned by `tier_kernels_match_scalar_reference` below and
+//! fuzzed in `rust/tests/fuzz_determinism.rs`.
 
 /// Row-major dense f32 matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -75,64 +109,69 @@ impl Mat {
     }
 }
 
-/// Portable reference kernels, always compiled. The public free functions
-/// dispatch here unless the `simd` feature selects the intrinsics backend;
-/// equivalence tests compare the active backend against these.
+/// Portable reference kernels, always compiled — the definition of the lane
+/// contract. The public free functions run these directly unless the `simd`
+/// feature installs the dispatcher; every intrinsics tier is tested against
+/// this module bit-for-bit.
 pub mod scalar {
-    /// Dot product: 4 f32 lanes + sequential remainder (lane contract).
+    /// Dot product: 8 f32 lanes + high-onto-low fold + sequential remainder
+    /// (lane contract).
     #[inline]
     pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         debug_assert_eq!(a.len(), b.len());
-        let mut acc = [0.0f32; 4];
-        let chunks = a.len() / 4;
+        let mut acc = [0.0f32; 8];
+        let chunks = a.len() / 8;
         for i in 0..chunks {
-            let j = i * 4;
-            acc[0] += a[j] * b[j];
-            acc[1] += a[j + 1] * b[j + 1];
-            acc[2] += a[j + 2] * b[j + 2];
-            acc[3] += a[j + 3] * b[j + 3];
+            let j = i * 8;
+            for (k, l) in acc.iter_mut().enumerate() {
+                *l += a[j + k] * b[j + k];
+            }
         }
-        let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-        for j in chunks * 4..a.len() {
+        let m = [acc[0] + acc[4], acc[1] + acc[5], acc[2] + acc[6], acc[3] + acc[7]];
+        let mut s = ((m[0] + m[1]) + m[2]) + m[3];
+        for j in chunks * 8..a.len() {
             s += a[j] * b[j];
         }
         s
     }
 
-    /// Squared norm: 2 f64 lanes over even/odd elements + odd tail.
+    /// Squared norm: 4 f64 lanes over elements `4i + k` + sequential tail.
     #[inline]
     pub fn norm_sq(x: &[f32]) -> f64 {
-        let mut acc = [0.0f64; 2];
-        let pairs = x.len() / 2;
-        for i in 0..pairs {
-            let a = x[2 * i] as f64;
-            let b = x[2 * i + 1] as f64;
-            acc[0] += a * a;
-            acc[1] += b * b;
+        let mut acc = [0.0f64; 4];
+        let blocks = x.len() / 4;
+        for i in 0..blocks {
+            let j = i * 4;
+            for (k, l) in acc.iter_mut().enumerate() {
+                let v = x[j + k] as f64;
+                *l += v * v;
+            }
         }
-        let mut s = acc[0] + acc[1];
-        if x.len() % 2 == 1 {
-            let v = x[x.len() - 1] as f64;
+        let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+        for j in blocks * 4..x.len() {
+            let v = x[j] as f64;
             s += v * v;
         }
         s
     }
 
-    /// Squared distance: f32 subtraction, then the [`norm_sq`] lane scheme.
+    /// Squared distance: f32 subtraction first, then the [`norm_sq`] lane
+    /// scheme on the differences.
     #[inline]
     pub fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
         debug_assert_eq!(a.len(), b.len());
-        let mut acc = [0.0f64; 2];
-        let pairs = a.len() / 2;
-        for i in 0..pairs {
-            let d0 = (a[2 * i] - b[2 * i]) as f64;
-            let d1 = (a[2 * i + 1] - b[2 * i + 1]) as f64;
-            acc[0] += d0 * d0;
-            acc[1] += d1 * d1;
+        let mut acc = [0.0f64; 4];
+        let blocks = a.len() / 4;
+        for i in 0..blocks {
+            let j = i * 4;
+            for (k, l) in acc.iter_mut().enumerate() {
+                let d = (a[j + k] - b[j + k]) as f64;
+                *l += d * d;
+            }
         }
-        let mut s = acc[0] + acc[1];
-        if a.len() % 2 == 1 {
-            let d = (a[a.len() - 1] - b[a.len() - 1]) as f64;
+        let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+        for j in blocks * 4..a.len() {
+            let d = (a[j] - b[j]) as f64;
             s += d * d;
         }
         s
@@ -156,11 +195,13 @@ pub mod scalar {
     }
 }
 
-/// SSE2 backend (baseline on x86-64, no runtime detection needed). Each
-/// kernel reproduces the scalar lane contract exactly — same lanes, same
-/// per-lane operation order, same reduction — so results are bit-identical.
+/// SSE2 tier (baseline on x86-64, no runtime detection needed). The widened
+/// 8 f32 / 4 f64 lane contract is implemented with register *pairs*: two
+/// `__m128` accumulators carry f32 lanes 0–3 / 4–7, two `__m128d`
+/// accumulators carry f64 lanes 0–1 / 2–3, and the reductions mirror the
+/// scalar fold exactly, so results are bit-identical.
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
-mod simd_x86 {
+mod sse2 {
     use std::arch::x86_64::{
         _mm_add_pd, _mm_add_ps, _mm_cvtps_pd, _mm_loadu_ps, _mm_movehl_ps, _mm_mul_pd,
         _mm_mul_ps, _mm_set1_ps, _mm_setzero_pd, _mm_setzero_ps, _mm_storeu_pd, _mm_storeu_ps,
@@ -170,20 +211,25 @@ mod simd_x86 {
     #[inline]
     pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         debug_assert_eq!(a.len(), b.len());
-        let chunks = a.len() / 4;
-        // SAFETY: unaligned loads/stores within slice bounds (4·chunks ≤ len).
+        let chunks = a.len() / 8;
+        // SAFETY: unaligned loads within slice bounds (8·chunks ≤ len).
         unsafe {
-            let mut acc = _mm_setzero_ps();
+            let mut lo = _mm_setzero_ps(); // f32 lanes 0..4
+            let mut hi = _mm_setzero_ps(); // f32 lanes 4..8
             for i in 0..chunks {
-                let j = 4 * i;
-                let va = _mm_loadu_ps(a.as_ptr().add(j));
-                let vb = _mm_loadu_ps(b.as_ptr().add(j));
-                acc = _mm_add_ps(acc, _mm_mul_ps(va, vb));
+                let j = 8 * i;
+                let a0 = _mm_loadu_ps(a.as_ptr().add(j));
+                let b0 = _mm_loadu_ps(b.as_ptr().add(j));
+                lo = _mm_add_ps(lo, _mm_mul_ps(a0, b0));
+                let a1 = _mm_loadu_ps(a.as_ptr().add(j + 4));
+                let b1 = _mm_loadu_ps(b.as_ptr().add(j + 4));
+                hi = _mm_add_ps(hi, _mm_mul_ps(a1, b1));
             }
-            let mut lanes = [0.0f32; 4];
-            _mm_storeu_ps(lanes.as_mut_ptr(), acc);
-            let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
-            for j in chunks * 4..a.len() {
+            // contract fold: m[k] = l[k] + l[k+4], then ((m0+m1)+m2)+m3
+            let mut m = [0.0f32; 4];
+            _mm_storeu_ps(m.as_mut_ptr(), _mm_add_ps(lo, hi));
+            let mut s = ((m[0] + m[1]) + m[2]) + m[3];
+            for j in chunks * 8..a.len() {
                 s += a[j] * b[j];
             }
             s
@@ -195,28 +241,21 @@ mod simd_x86 {
         let blocks = x.len() / 4;
         // SAFETY: unaligned loads within slice bounds (4·blocks ≤ len).
         unsafe {
-            let mut acc = _mm_setzero_pd();
+            let mut lo = _mm_setzero_pd(); // f64 lanes 0..2
+            let mut hi = _mm_setzero_pd(); // f64 lanes 2..4
             for i in 0..blocks {
                 let v = _mm_loadu_ps(x.as_ptr().add(4 * i));
-                let lo = _mm_cvtps_pd(v);
-                let hi = _mm_cvtps_pd(_mm_movehl_ps(v, v));
-                acc = _mm_add_pd(acc, _mm_mul_pd(lo, lo));
-                acc = _mm_add_pd(acc, _mm_mul_pd(hi, hi));
+                let v01 = _mm_cvtps_pd(v);
+                let v23 = _mm_cvtps_pd(_mm_movehl_ps(v, v));
+                lo = _mm_add_pd(lo, _mm_mul_pd(v01, v01));
+                hi = _mm_add_pd(hi, _mm_mul_pd(v23, v23));
             }
-            let mut lanes = [0.0f64; 2];
-            _mm_storeu_pd(lanes.as_mut_ptr(), acc);
-            // tail keeps the even/odd lane pattern (4·blocks is even)
-            let mut i = blocks * 4;
-            while i + 1 < x.len() {
-                let a = x[i] as f64;
-                let b = x[i + 1] as f64;
-                lanes[0] += a * a;
-                lanes[1] += b * b;
-                i += 2;
-            }
-            let mut s = lanes[0] + lanes[1];
-            if i < x.len() {
-                let v = x[i] as f64;
+            // contract fold: (l0+l2) + (l1+l3)
+            let mut m = [0.0f64; 2];
+            _mm_storeu_pd(m.as_mut_ptr(), _mm_add_pd(lo, hi));
+            let mut s = m[0] + m[1];
+            for j in blocks * 4..x.len() {
+                let v = x[j] as f64;
                 s += v * v;
             }
             s
@@ -229,29 +268,22 @@ mod simd_x86 {
         let blocks = a.len() / 4;
         // SAFETY: unaligned loads within slice bounds (4·blocks ≤ len).
         unsafe {
-            let mut acc = _mm_setzero_pd();
+            let mut lo = _mm_setzero_pd();
+            let mut hi = _mm_setzero_pd();
             for i in 0..blocks {
                 let va = _mm_loadu_ps(a.as_ptr().add(4 * i));
                 let vb = _mm_loadu_ps(b.as_ptr().add(4 * i));
                 let d = _mm_sub_ps(va, vb);
-                let lo = _mm_cvtps_pd(d);
-                let hi = _mm_cvtps_pd(_mm_movehl_ps(d, d));
-                acc = _mm_add_pd(acc, _mm_mul_pd(lo, lo));
-                acc = _mm_add_pd(acc, _mm_mul_pd(hi, hi));
+                let d01 = _mm_cvtps_pd(d);
+                let d23 = _mm_cvtps_pd(_mm_movehl_ps(d, d));
+                lo = _mm_add_pd(lo, _mm_mul_pd(d01, d01));
+                hi = _mm_add_pd(hi, _mm_mul_pd(d23, d23));
             }
-            let mut lanes = [0.0f64; 2];
-            _mm_storeu_pd(lanes.as_mut_ptr(), acc);
-            let mut i = blocks * 4;
-            while i + 1 < a.len() {
-                let d0 = (a[i] - b[i]) as f64;
-                let d1 = (a[i + 1] - b[i + 1]) as f64;
-                lanes[0] += d0 * d0;
-                lanes[1] += d1 * d1;
-                i += 2;
-            }
-            let mut s = lanes[0] + lanes[1];
-            if i < a.len() {
-                let d = (a[i] - b[i]) as f64;
+            let mut m = [0.0f64; 2];
+            _mm_storeu_pd(m.as_mut_ptr(), _mm_add_pd(lo, hi));
+            let mut s = m[0] + m[1];
+            for j in blocks * 4..a.len() {
+                let d = (a[j] - b[j]) as f64;
                 s += d * d;
             }
             s
@@ -295,31 +327,492 @@ mod simd_x86 {
     }
 }
 
+/// AVX2+FMA tier: one 256-bit register is one full lane set (8 f32 lanes in
+/// a `__m256`, 4 f64 lanes in a `__m256d`), and the high-onto-low reductions
+/// are literal `vextractf128` + add — the widened contract was chosen so
+/// this tier is the natural one.
+///
+/// Every function is `unsafe` with `#[target_feature(enable = "avx2,fma")]`:
+/// callers must guarantee the CPU supports both features (the dispatcher
+/// only installs this table after `is_x86_feature_detected!` confirms them).
+/// Accumulating kernels use separate `vmulps`/`vaddps` rather than fused
+/// `vfmadd` on purpose: FMA's single rounding would diverge from the scalar
+/// mirror and break the cross-tier bit-identity pledge. rustc performs no
+/// automatic contraction, so the `fma` feature bit only helps instruction
+/// scheduling here.
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
-use self::simd_x86 as active;
+mod avx2 {
+    use std::arch::x86_64::{
+        _mm256_add_pd, _mm256_add_ps, _mm256_castpd256_pd128, _mm256_castps256_ps128,
+        _mm256_cvtps_pd, _mm256_extractf128_pd, _mm256_extractf128_ps, _mm256_loadu_ps,
+        _mm256_mul_pd, _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_pd, _mm256_setzero_ps,
+        _mm256_storeu_ps, _mm_add_pd, _mm_add_ps, _mm_loadu_ps, _mm_storeu_pd, _mm_storeu_ps,
+        _mm_sub_ps,
+    };
 
-#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
-use self::scalar as active;
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let chunks = a.len() / 8;
+        let mut acc = _mm256_setzero_ps(); // f32 lanes 0..8
+        for i in 0..chunks {
+            let j = 8 * i;
+            // SAFETY (fn contract): unaligned loads within bounds (8·chunks ≤ len)
+            let va = _mm256_loadu_ps(a.as_ptr().add(j));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(j));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        // contract fold: m[k] = l[k] + l[k+4], then ((m0+m1)+m2)+m3
+        let fold = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps::<1>(acc));
+        let mut m = [0.0f32; 4];
+        _mm_storeu_ps(m.as_mut_ptr(), fold);
+        let mut s = ((m[0] + m[1]) + m[2]) + m[3];
+        for j in chunks * 8..a.len() {
+            s += a[j] * b[j];
+        }
+        s
+    }
 
-/// True when the intrinsics backend is compiled in and active.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn norm_sq(x: &[f32]) -> f64 {
+        let blocks = x.len() / 4;
+        let mut acc = _mm256_setzero_pd(); // f64 lanes 0..4
+        for i in 0..blocks {
+            // SAFETY (fn contract): 4-float load within bounds (4·blocks ≤ len)
+            let v = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(4 * i)));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(v, v));
+        }
+        // contract fold: (l0+l2) + (l1+l3)
+        let fold = _mm_add_pd(_mm256_castpd256_pd128(acc), _mm256_extractf128_pd::<1>(acc));
+        let mut m = [0.0f64; 2];
+        _mm_storeu_pd(m.as_mut_ptr(), fold);
+        let mut s = m[0] + m[1];
+        for j in blocks * 4..x.len() {
+            let v = x[j] as f64;
+            s += v * v;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let blocks = a.len() / 4;
+        let mut acc = _mm256_setzero_pd();
+        for i in 0..blocks {
+            // SAFETY (fn contract): 4-float loads within bounds (4·blocks ≤ len)
+            let va = _mm_loadu_ps(a.as_ptr().add(4 * i));
+            let vb = _mm_loadu_ps(b.as_ptr().add(4 * i));
+            let d = _mm256_cvtps_pd(_mm_sub_ps(va, vb));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(d, d));
+        }
+        let fold = _mm_add_pd(_mm256_castpd256_pd128(acc), _mm256_extractf128_pd::<1>(acc));
+        let mut m = [0.0f64; 2];
+        _mm_storeu_pd(m.as_mut_ptr(), fold);
+        let mut s = m[0] + m[1];
+        for j in blocks * 4..a.len() {
+            let d = (a[j] - b[j]) as f64;
+            s += d * d;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let chunks = x.len() / 8;
+        let va = _mm256_set1_ps(alpha);
+        for i in 0..chunks {
+            let j = 8 * i;
+            // SAFETY (fn contract): unaligned 8-float ops within bounds
+            let vx = _mm256_loadu_ps(x.as_ptr().add(j));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(j));
+            _mm256_storeu_ps(y.as_mut_ptr().add(j), _mm256_add_ps(vy, _mm256_mul_ps(va, vx)));
+        }
+        for j in chunks * 8..x.len() {
+            y[j] += alpha * x[j];
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn scale(x: &mut [f32], alpha: f32) {
+        let chunks = x.len() / 8;
+        let va = _mm256_set1_ps(alpha);
+        for i in 0..chunks {
+            let j = 8 * i;
+            // SAFETY (fn contract): unaligned 8-float ops within bounds
+            let vx = _mm256_loadu_ps(x.as_ptr().add(j));
+            _mm256_storeu_ps(x.as_mut_ptr().add(j), _mm256_mul_ps(vx, va));
+        }
+        for j in chunks * 8..x.len() {
+            x[j] *= alpha;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tier registry + runtime dispatch
+// ---------------------------------------------------------------------------
+
+/// One kernel backend tier. Ordered narrowest to widest; the dispatcher
+/// picks the widest [`detected`](detected_tiers) tier unless `LAD_SIMD_TIER`
+/// pins a narrower one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum Tier {
+    /// Portable reference ([`scalar`]) — always available.
+    Scalar = 0,
+    /// SSE2 intrinsics — compiled under `--features simd` on x86-64
+    /// (baseline, always CPU-supported there).
+    Sse2 = 1,
+    /// AVX2 intrinsics behind `avx2`+`fma` runtime detection.
+    Avx2Fma = 2,
+}
+
+/// Per-tier kernel entry points. Scalar and SSE2 entries are safe functions
+/// coerced to `unsafe fn`; the AVX2 entries genuinely require the feature
+/// bits, which is why the whole table is threaded through `unsafe fn`
+/// pointers and every call site documents the detection invariant.
+struct Kernels {
+    dot: unsafe fn(&[f32], &[f32]) -> f32,
+    norm_sq: unsafe fn(&[f32]) -> f64,
+    dist_sq: unsafe fn(&[f32], &[f32]) -> f64,
+    axpy: unsafe fn(f32, &[f32], &mut [f32]),
+    scale: unsafe fn(&mut [f32], f32),
+}
+
+static SCALAR_KERNELS: Kernels = Kernels {
+    dot: scalar::dot,
+    norm_sq: scalar::norm_sq,
+    dist_sq: scalar::dist_sq,
+    axpy: scalar::axpy,
+    scale: scalar::scale,
+};
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+static SSE2_KERNELS: Kernels = Kernels {
+    dot: sse2::dot,
+    norm_sq: sse2::norm_sq,
+    dist_sq: sse2::dist_sq,
+    axpy: sse2::axpy,
+    scale: sse2::scale,
+};
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+static AVX2_KERNELS: Kernels = Kernels {
+    dot: avx2::dot,
+    norm_sq: avx2::norm_sq,
+    dist_sq: avx2::dist_sq,
+    axpy: avx2::axpy,
+    scale: avx2::scale,
+};
+
+/// True when the intrinsics tiers are compiled into this binary (the scalar
+/// reference is always present; which tier actually runs is
+/// [`active_tier`]).
 pub const SIMD_ACTIVE: bool = cfg!(all(feature = "simd", target_arch = "x86_64"));
 
-/// Dot product (4-lane contract; SSE2 under `--features simd` on x86-64).
+impl Tier {
+    /// Stable lowercase name (also the `LAD_SIMD_TIER` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Sse2 => "sse2",
+            Tier::Avx2Fma => "avx2",
+        }
+    }
+
+    /// Parse a `LAD_SIMD_TIER` request (case-insensitive; `avx2`,
+    /// `avx2fma` and `avx2+fma` all mean [`Tier::Avx2Fma`]).
+    pub fn parse(s: &str) -> Option<Tier> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Tier::Scalar),
+            "sse2" => Some(Tier::Sse2),
+            "avx2" | "avx2fma" | "avx2+fma" => Some(Tier::Avx2Fma),
+            _ => None,
+        }
+    }
+
+    /// Whether this tier's kernels are compiled into the binary.
+    pub fn is_compiled(self) -> bool {
+        self == Tier::Scalar || SIMD_ACTIVE
+    }
+
+    /// Whether this tier is compiled **and** the running CPU supports it —
+    /// i.e. it is safe for the dispatcher (or a test) to execute.
+    pub fn is_supported(self) -> bool {
+        match self {
+            Tier::Scalar => true,
+            Tier::Sse2 => SIMD_ACTIVE,
+            Tier::Avx2Fma => {
+                #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+                {
+                    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+                }
+                #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    fn kernels(self) -> &'static Kernels {
+        match self {
+            Tier::Scalar => &SCALAR_KERNELS,
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            Tier::Sse2 => &SSE2_KERNELS,
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            Tier::Avx2Fma => &AVX2_KERNELS,
+            #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+            _ => unreachable!("intrinsics tier not compiled (guarded by is_supported)"),
+        }
+    }
+
+    /// Run this tier's `dot` directly (tests/benches). Panics if the tier is
+    /// not supported on this binary + CPU.
+    pub fn dot(self, a: &[f32], b: &[f32]) -> f32 {
+        assert!(self.is_supported(), "tier {} not supported here", self.name());
+        // SAFETY: is_supported() checked the CPU feature bits for this tier.
+        unsafe { (self.kernels().dot)(a, b) }
+    }
+
+    /// Per-tier `norm_sq` (see [`Tier::dot`]).
+    pub fn norm_sq(self, x: &[f32]) -> f64 {
+        assert!(self.is_supported(), "tier {} not supported here", self.name());
+        // SAFETY: is_supported() checked the CPU feature bits for this tier.
+        unsafe { (self.kernels().norm_sq)(x) }
+    }
+
+    /// Per-tier `dist_sq` (see [`Tier::dot`]).
+    pub fn dist_sq(self, a: &[f32], b: &[f32]) -> f64 {
+        assert!(self.is_supported(), "tier {} not supported here", self.name());
+        // SAFETY: is_supported() checked the CPU feature bits for this tier.
+        unsafe { (self.kernels().dist_sq)(a, b) }
+    }
+
+    /// Per-tier `axpy` (see [`Tier::dot`]).
+    pub fn axpy(self, alpha: f32, x: &[f32], y: &mut [f32]) {
+        assert!(self.is_supported(), "tier {} not supported here", self.name());
+        // SAFETY: is_supported() checked the CPU feature bits for this tier.
+        unsafe { (self.kernels().axpy)(alpha, x, y) }
+    }
+
+    /// Per-tier `scale` (see [`Tier::dot`]).
+    pub fn scale(self, x: &mut [f32], alpha: f32) {
+        assert!(self.is_supported(), "tier {} not supported here", self.name());
+        // SAFETY: is_supported() checked the CPU feature bits for this tier.
+        unsafe { (self.kernels().scale)(x, alpha) }
+    }
+
+    /// Resolve this tier's table with the support check paid once, for
+    /// call-in-a-loop uses (benches). Panics if unsupported, like
+    /// [`Tier::dot`].
+    pub fn kernels_checked(self) -> TierKernels {
+        assert!(self.is_supported(), "tier {} not supported here", self.name());
+        TierKernels { table: self.kernels() }
+    }
+}
+
+/// Handle to one tier's kernel table with the support check paid **once**
+/// at construction ([`Tier::kernels_checked`]): each call is a bare
+/// indirect call, matching what the dispatched free functions cost — the
+/// right entry point for per-tier micro-benches, where [`Tier::dot`]'s
+/// per-call assert would inflate small-Q timings.
+#[derive(Clone, Copy)]
+pub struct TierKernels {
+    table: &'static Kernels,
+}
+
+impl TierKernels {
+    /// See [`Tier::dot`].
+    #[inline]
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: construction verified CPU support for this tier, and CPU
+        // feature bits never change over a process lifetime.
+        unsafe { (self.table.dot)(a, b) }
+    }
+
+    /// See [`Tier::norm_sq`].
+    #[inline]
+    pub fn norm_sq(&self, x: &[f32]) -> f64 {
+        // SAFETY: construction verified CPU support (see `dot`).
+        unsafe { (self.table.norm_sq)(x) }
+    }
+
+    /// See [`Tier::dist_sq`].
+    #[inline]
+    pub fn dist_sq(&self, a: &[f32], b: &[f32]) -> f64 {
+        // SAFETY: construction verified CPU support (see `dot`).
+        unsafe { (self.table.dist_sq)(a, b) }
+    }
+
+    /// See [`Tier::axpy`].
+    #[inline]
+    pub fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]) {
+        // SAFETY: construction verified CPU support (see `dot`).
+        unsafe { (self.table.axpy)(alpha, x, y) }
+    }
+
+    /// See [`Tier::scale`].
+    #[inline]
+    pub fn scale(&self, x: &mut [f32], alpha: f32) {
+        // SAFETY: construction verified CPU support (see `dot`).
+        unsafe { (self.table.scale)(x, alpha) }
+    }
+}
+
+/// The tiers compiled into this binary, narrowest first.
+pub fn compiled_tiers() -> &'static [Tier] {
+    if SIMD_ACTIVE {
+        &[Tier::Scalar, Tier::Sse2, Tier::Avx2Fma]
+    } else {
+        &[Tier::Scalar]
+    }
+}
+
+/// The compiled tiers the running CPU can execute, narrowest first.
+pub fn detected_tiers() -> Vec<Tier> {
+    compiled_tiers().iter().copied().filter(|t| t.is_supported()).collect()
+}
+
+/// The tier the dispatcher selected (widest detected, unless
+/// `LAD_SIMD_TIER` pinned a narrower one). Always [`Tier::Scalar`] without
+/// `--features simd` on x86-64. Forces dispatcher initialization.
+pub fn active_tier() -> Tier {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        dispatch::active_tier()
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        Tier::Scalar
+    }
+}
+
+/// Once-per-process tier selection and the cached function-pointer table.
+/// Hot path: one relaxed `AtomicPtr` load + indirect call per kernel
+/// invocation; the slow init runs feature detection and the env override at
+/// the first call (idempotent — a racing second init stores the same
+/// pointers).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod dispatch {
+    use super::{Kernels, Tier, AVX2_KERNELS, SCALAR_KERNELS, SSE2_KERNELS};
+    use std::sync::atomic::{AtomicPtr, AtomicU8, Ordering};
+
+    static ACTIVE: AtomicPtr<Kernels> = AtomicPtr::new(std::ptr::null_mut());
+    static ACTIVE_TIER: AtomicU8 = AtomicU8::new(u8::MAX);
+
+    #[inline]
+    pub fn active() -> &'static Kernels {
+        let p = ACTIVE.load(Ordering::Relaxed);
+        if p.is_null() {
+            init()
+        } else {
+            // SAFETY: a non-null pointer was stored by init() and always
+            // references one of the three 'static kernel tables.
+            unsafe { &*p }
+        }
+    }
+
+    pub fn active_tier() -> Tier {
+        let t = ACTIVE_TIER.load(Ordering::Relaxed);
+        if t == u8::MAX {
+            init();
+        }
+        match ACTIVE_TIER.load(Ordering::Relaxed) {
+            0 => Tier::Scalar,
+            1 => Tier::Sse2,
+            _ => Tier::Avx2Fma,
+        }
+    }
+
+    #[cold]
+    fn init() -> &'static Kernels {
+        let tier = select_tier();
+        let table: &'static Kernels = match tier {
+            Tier::Scalar => &SCALAR_KERNELS,
+            Tier::Sse2 => &SSE2_KERNELS,
+            Tier::Avx2Fma => &AVX2_KERNELS,
+        };
+        ACTIVE_TIER.store(tier as u8, Ordering::Relaxed);
+        ACTIVE.store(table as *const Kernels as *mut Kernels, Ordering::Relaxed);
+        table
+    }
+
+    /// Widest CPU-supported tier, clamped by a `LAD_SIMD_TIER` request if
+    /// one is set. Malformed or too-wide requests keep the process running
+    /// (scientific sweeps should not die over an env typo) but say so once
+    /// on stderr.
+    fn select_tier() -> Tier {
+        let widest =
+            if Tier::Avx2Fma.is_supported() { Tier::Avx2Fma } else { Tier::Sse2 };
+        match std::env::var("LAD_SIMD_TIER") {
+            Err(_) => widest,
+            Ok(raw) => match Tier::parse(&raw) {
+                None => {
+                    eprintln!(
+                        "lad: LAD_SIMD_TIER={raw:?} not one of scalar|sse2|avx2; \
+                         using {}",
+                        widest.name()
+                    );
+                    widest
+                }
+                Some(req) if req <= widest => req,
+                Some(req) => {
+                    eprintln!(
+                        "lad: LAD_SIMD_TIER={} exceeds CPU support; clamping to {}",
+                        req.name(),
+                        widest.name()
+                    );
+                    widest
+                }
+            },
+        }
+    }
+}
+
+/// Dot product (8-lane contract; tier-dispatched under `--features simd`).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    active::dot(a, b)
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        // SAFETY: the dispatch table only holds intrinsics tiers the CPU
+        // passed feature detection for (see `dispatch`).
+        unsafe { (dispatch::active().dot)(a, b) }
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        scalar::dot(a, b)
+    }
 }
 
 /// y += alpha * x.
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    active::axpy(alpha, x, y)
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        // SAFETY: dispatch table is detection-gated (see `dispatch`).
+        unsafe { (dispatch::active().axpy)(alpha, x, y) }
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        scalar::axpy(alpha, x, y)
+    }
 }
 
 /// x *= alpha.
 #[inline]
 pub fn scale(x: &mut [f32], alpha: f32) {
-    active::scale(x, alpha)
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        // SAFETY: dispatch table is detection-gated (see `dispatch`).
+        unsafe { (dispatch::active().scale)(x, alpha) }
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        scalar::scale(x, alpha)
+    }
 }
 
 /// out = a - b.
@@ -328,10 +821,18 @@ pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
     a.iter().zip(b).map(|(x, y)| x - y).collect()
 }
 
-/// Squared Euclidean norm (f64 accumulation, 2-lane contract).
+/// Squared Euclidean norm (f64 accumulation, 4-lane contract).
 #[inline]
 pub fn norm_sq(x: &[f32]) -> f64 {
-    active::norm_sq(x)
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        // SAFETY: dispatch table is detection-gated (see `dispatch`).
+        unsafe { (dispatch::active().norm_sq)(x) }
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        scalar::norm_sq(x)
+    }
 }
 
 /// Euclidean norm.
@@ -340,10 +841,18 @@ pub fn norm(x: &[f32]) -> f64 {
     norm_sq(x).sqrt()
 }
 
-/// Squared Euclidean distance (no allocation, 2-lane contract).
+/// Squared Euclidean distance (no allocation, 4-lane contract).
 #[inline]
 pub fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
-    active::dist_sq(a, b)
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        // SAFETY: dispatch table is detection-gated (see `dispatch`).
+        unsafe { (dispatch::active().dist_sq)(a, b) }
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        scalar::dist_sq(a, b)
+    }
 }
 
 /// Coordinate-wise mean of a family of equal-length vectors.
@@ -419,33 +928,85 @@ mod tests {
         assert_eq!(m.row(0), &[0.0, 0.0]);
     }
 
-    /// The backend equivalence pin: whatever backend is active must agree
-    /// bit-for-bit with the scalar reference on awkward lengths (remainder
-    /// paths included). Trivial when `simd` is off; the real check runs
-    /// under `--features simd`.
     #[test]
-    fn active_kernels_match_scalar_reference() {
+    fn tier_registry_is_consistent() {
+        assert!(compiled_tiers().contains(&Tier::Scalar));
+        let detected = detected_tiers();
+        assert!(detected.contains(&Tier::Scalar));
+        for t in &detected {
+            assert!(t.is_compiled() && t.is_supported(), "{t:?}");
+        }
+        // the dispatcher's pick must be executable
+        let active = active_tier();
+        assert!(detected.contains(&active), "active {active:?} not in {detected:?}");
+        // ordering: the ladder is monotone narrow → wide
+        assert!(Tier::Scalar < Tier::Sse2 && Tier::Sse2 < Tier::Avx2Fma);
+        // the check-once handle runs the same kernels as the per-call API
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let b = [0.5f32, -1.0, 2.0, -3.0, 0.25];
+        for t in detected {
+            let k = t.kernels_checked();
+            assert_eq!(k.dot(&a, &b).to_bits(), t.dot(&a, &b).to_bits(), "{t:?}");
+            assert_eq!(k.dist_sq(&a, &b).to_bits(), t.dist_sq(&a, &b).to_bits(), "{t:?}");
+        }
+    }
+
+    #[test]
+    fn tier_parse_round_trips() {
+        for t in [Tier::Scalar, Tier::Sse2, Tier::Avx2Fma] {
+            assert_eq!(Tier::parse(t.name()), Some(t));
+        }
+        assert_eq!(Tier::parse("AVX2+FMA"), Some(Tier::Avx2Fma));
+        assert_eq!(Tier::parse(" sse2 "), Some(Tier::Sse2));
+        assert_eq!(Tier::parse("neon"), None);
+        assert_eq!(Tier::parse(""), None);
+    }
+
+    /// The cross-tier equivalence pin: every tier the CPU can execute must
+    /// agree bit-for-bit with the scalar reference on awkward lengths
+    /// (remainder paths included). Only the scalar row runs without
+    /// `--features simd`; the CI simd jobs make this the real ladder check.
+    #[test]
+    fn tier_kernels_match_scalar_reference() {
         let mut rng = crate::util::rng::Rng::new(0x51_AD);
-        for len in [0usize, 1, 2, 3, 4, 5, 6, 7, 8, 15, 16, 17, 31, 64, 100, 103, 1021] {
+        for len in [0usize, 1, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17, 31, 64, 100, 103, 1021] {
             let a: Vec<f32> = (0..len).map(|_| rng.normal(0.0, 3.0) as f32).collect();
             let b: Vec<f32> = (0..len).map(|_| rng.normal(1.0, 2.0) as f32).collect();
-            assert_eq!(dot(&a, &b).to_bits(), scalar::dot(&a, &b).to_bits(), "dot len={len}");
-            assert_eq!(norm_sq(&a).to_bits(), scalar::norm_sq(&a).to_bits(), "norm len={len}");
+            for tier in detected_tiers() {
+                let n = tier.name();
+                assert_eq!(
+                    tier.dot(&a, &b).to_bits(),
+                    scalar::dot(&a, &b).to_bits(),
+                    "{n} dot len={len}"
+                );
+                assert_eq!(
+                    tier.norm_sq(&a).to_bits(),
+                    scalar::norm_sq(&a).to_bits(),
+                    "{n} norm len={len}"
+                );
+                assert_eq!(
+                    tier.dist_sq(&a, &b).to_bits(),
+                    scalar::dist_sq(&a, &b).to_bits(),
+                    "{n} dist len={len}"
+                );
+                let mut y1 = b.clone();
+                let mut y2 = b.clone();
+                tier.axpy(0.37, &a, &mut y1);
+                scalar::axpy(0.37, &a, &mut y2);
+                assert_eq!(y1, y2, "{n} axpy len={len}");
+                let mut x1 = a.clone();
+                let mut x2 = a.clone();
+                tier.scale(&mut x1, -1.25);
+                scalar::scale(&mut x2, -1.25);
+                assert_eq!(x1, x2, "{n} scale len={len}");
+            }
+            // and the dispatched free functions match whatever tier is active
+            assert_eq!(dot(&a, &b).to_bits(), scalar::dot(&a, &b).to_bits(), "free dot {len}");
             assert_eq!(
                 dist_sq(&a, &b).to_bits(),
                 scalar::dist_sq(&a, &b).to_bits(),
-                "dist len={len}"
+                "free dist {len}"
             );
-            let mut y1 = b.clone();
-            let mut y2 = b.clone();
-            axpy(0.37, &a, &mut y1);
-            scalar::axpy(0.37, &a, &mut y2);
-            assert_eq!(y1, y2, "axpy len={len}");
-            let mut x1 = a.clone();
-            let mut x2 = a.clone();
-            scale(&mut x1, -1.25);
-            scalar::scale(&mut x2, -1.25);
-            assert_eq!(x1, x2, "scale len={len}");
         }
     }
 }

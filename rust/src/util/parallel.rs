@@ -19,6 +19,13 @@
 //! to items in the same order, so swapping one for the other can never
 //! change a result.
 //!
+//! A third layer composes the pool for nested fan-outs: [`Pool::budgeted`]
+//! builds a **two-level thread budget** — one shared worker set, an outer
+//! fan-out dispatched onto it, and per-branch inner handles
+//! ([`Pool::borrow`]) whose chunking width is capped so `branches ×
+//! inner_threads` stays at the total instead of multiplying past it. See
+//! [`PoolBudget`].
+//!
 //! # Determinism contract
 //!
 //! Every primitive here is a *pure scheduler*: the closure is applied to the
@@ -489,6 +496,46 @@ impl Pool {
         Parallelism::new(self.threads)
     }
 
+    /// Borrow a handle onto the **same workers** with a capped chunking
+    /// width: the returned pool dispatches to this pool's worker set but
+    /// splits each call into at most `width` chunks. `0` means the full
+    /// budget; widths above it clamp down; `1` degrades to
+    /// [`Pool::serial`]. Because chunk boundaries are a pure scheduling
+    /// choice, a borrowed handle produces bit-identical results to any
+    /// other width — it only bounds how much of the shared pool one stage
+    /// can occupy at a time.
+    ///
+    /// Caveat: on a [`Pool::scoped`] handle there is no persistent worker
+    /// set to share — the borrow caps the *width* of each call's scoped
+    /// spawns, but concurrent borrowers still spawn their own threads
+    /// (up to branches × width live). Use a persistent pool
+    /// ([`Pool::new`] / [`Pool::budgeted`]) when the total must be a hard
+    /// bound.
+    pub fn borrow(&self, width: usize) -> Pool {
+        let w = if width == 0 { self.threads } else { width.min(self.threads) };
+        if w <= 1 {
+            return Pool::serial();
+        }
+        Pool { mode: self.mode.clone(), threads: w }
+    }
+
+    /// Build a two-level budget: one pool of `total` workers (resolved like
+    /// [`Pool::new`]) shared between an outer fan-out of `branches` tasks
+    /// and each branch's inner stages. The outer level dispatches branches
+    /// onto [`PoolBudget::outer`]; each branch runs its parallel stages on
+    /// [`PoolBudget::inner`], a borrowed handle capped at
+    /// `⌈total / min(branches, total)⌉` so the fan-out no longer
+    /// oversubscribes small machines at `branches × total` threads (the
+    /// pre-budget failure mode of the figure sweeps). Nested dispatch onto
+    /// the shared pool is deadlock-free (callers help drain their own
+    /// batches), and results are bit-identical to any other thread split.
+    pub fn budgeted(total: usize, branches: usize) -> PoolBudget {
+        let pool = Pool::new(total);
+        let t = pool.threads();
+        let outer = branches.clamp(1, t);
+        PoolBudget { inner_width: t.div_ceil(outer), pool }
+    }
+
     /// Dispatch `total` task indices onto the persistent workers; the caller
     /// helps drain the batch, then blocks until every index completed.
     fn dispatch(&self, core: &PoolCore, total: usize, task: &(dyn Fn(usize) + Sync)) {
@@ -653,6 +700,48 @@ impl Pool {
                 f(start + i, w);
             }
         });
+    }
+}
+
+/// A two-level thread budget over one shared worker set (see
+/// [`Pool::budgeted`]): the outer fan-out and every branch's inner stages
+/// draw from the same `total` workers, so total live parallelism is bounded
+/// by the pool width no matter how many branches run concurrently.
+///
+/// The handle is cheap to clone (the pool is `Arc`-backed) and the workers
+/// shut down when the last clone — outer or borrowed inner — drops.
+#[derive(Debug, Clone)]
+pub struct PoolBudget {
+    pool: Pool,
+    inner_width: usize,
+}
+
+impl PoolBudget {
+    /// The shared pool: fan the outer branches out on this handle.
+    pub fn outer(&self) -> &Pool {
+        &self.pool
+    }
+
+    /// A capped handle for one branch's inner stages (same workers,
+    /// chunking width `⌈total / branches⌉`).
+    pub fn inner(&self) -> Pool {
+        self.pool.borrow(self.inner_width)
+    }
+
+    /// [`PoolBudget::inner`] additionally capped at `width` — the hook for
+    /// per-branch configuration like `TrainConfig::threads`. `0` keeps the
+    /// full inner slice.
+    pub fn inner_capped(&self, width: usize) -> Pool {
+        if width == 0 {
+            self.inner()
+        } else {
+            self.pool.borrow(self.inner_width.min(width))
+        }
+    }
+
+    /// The inner chunking width (≥ 1; exposed for tests and bench labels).
+    pub fn inner_width(&self) -> usize {
+        self.inner_width
     }
 }
 
@@ -833,6 +922,62 @@ mod tests {
             pool.par_map(&inner, |_, &j| i * 100 + j).iter().sum::<usize>()
         });
         let want: Vec<usize> = (0..4).map(|i| (0..8).map(|j| i * 100 + j).sum()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn borrow_caps_width_and_shares_workers() {
+        let pool = Pool::new(4);
+        assert_eq!(pool.borrow(0).threads(), 4, "0 = full budget");
+        assert_eq!(pool.borrow(9).threads(), 4, "clamped to the pool");
+        assert_eq!(pool.borrow(2).threads(), 2);
+        assert!(pool.borrow(1).is_serial());
+        // borrowed handles stay functional after the original drops
+        let narrow = pool.borrow(2);
+        drop(pool);
+        let items: Vec<u32> = (0..64).collect();
+        let want: Vec<u32> = items.iter().map(|&x| x * 2).collect();
+        assert_eq!(narrow.par_map(&items, |_, &x| x * 2), want);
+        // borrowing from serial/scoped pools keeps their semantics
+        assert!(Pool::serial().borrow(8).is_serial());
+        assert_eq!(Pool::scoped(Parallelism::new(6)).borrow(3).threads(), 3);
+    }
+
+    #[test]
+    fn budgeted_splits_total_across_levels() {
+        let b = Pool::budgeted(8, 4);
+        assert_eq!(b.outer().threads(), 8);
+        assert_eq!(b.inner_width(), 2);
+        assert_eq!(b.inner().threads(), 2);
+        assert_eq!(b.inner_capped(1).threads(), 1);
+        assert_eq!(b.inner_capped(0).threads(), 2);
+        assert_eq!(b.inner_capped(64).threads(), 2);
+        // more branches than workers: inner degrades to serial
+        let wide = Pool::budgeted(4, 100);
+        assert_eq!(wide.inner_width(), 1);
+        assert!(wide.inner().is_serial());
+        // serial total: everything serial
+        let serial = Pool::budgeted(1, 10);
+        assert!(serial.outer().is_serial() && serial.inner().is_serial());
+        // few branches, many workers: inner gets the surplus
+        let fat = Pool::budgeted(9, 2);
+        assert_eq!(fat.inner_width(), 5);
+    }
+
+    #[test]
+    fn budgeted_nested_fanout_matches_serial_reference() {
+        // the run_figure shape: outer branches each running inner stages on
+        // a borrowed slice of the same pool — results must match the fully
+        // serial evaluation exactly
+        let budget = Pool::budgeted(4, 3);
+        let branches: Vec<u64> = (0..6).collect();
+        let inner_items: Vec<u64> = (0..40).collect();
+        let got = budget.outer().par_map(&branches, |_, &b| {
+            let inner = budget.inner();
+            inner.par_map(&inner_items, |_, &x| b * 1000 + x * 3).iter().sum::<u64>()
+        });
+        let want: Vec<u64> =
+            branches.iter().map(|&b| inner_items.iter().map(|&x| b * 1000 + x * 3).sum()).collect();
         assert_eq!(got, want);
     }
 

@@ -1,14 +1,19 @@
 //! Seed-stream audit (ROADMAP item): randomized configurations pushed
 //! through the full LAD / Com-LAD loop must stay **bit-identical** between
 //! serial and parallel execution — and, per the `util::math` lane contract,
-//! between the scalar and SIMD kernel backends (build with
-//! `--features simd` to exercise the intrinsics side; the scalar reference
-//! is always compiled for comparison).
+//! between every compiled kernel tier (scalar / SSE2 / AVX2+FMA; build with
+//! `--features simd` to exercise the intrinsics ladder; the scalar
+//! reference is always compiled for comparison). The training-trace fuzz
+//! runs under whatever tier the dispatcher selected, so the CI matrix legs
+//! that pin `LAD_SIMD_TIER` turn it into a per-tier end-to-end pin; the
+//! kernel-level fuzz below additionally compares every detected tier
+//! in-process.
 //!
 //! Unlike `parallel_determinism.rs` (a few hand-picked large configs), this
 //! fuzzes the corner lattice: tiny families below every parallelism gate,
-//! families straddling the gates, ragged tile edges, every aggregator with
-//! a parallel pass, stochastic compressors on pre-split streams.
+//! families straddling the gates, ragged tile edges, packed-triangular
+//! row adapters, every aggregator with a parallel pass, stochastic
+//! compressors on pre-split streams.
 
 use lad::aggregation::gram::PairwiseDistances;
 use lad::config::{AggregatorKind, AttackKind, CompressionKind, TrainConfig};
@@ -16,7 +21,7 @@ use lad::data::linreg::LinRegDataset;
 use lad::experiments::common::{run_variant, Variant};
 use lad::proptest_lite::{ensure, forall, gen};
 use lad::server::TrainTrace;
-use lad::util::math::{self, norm_sq};
+use lad::util::math::{self, norm_sq, Tier};
 use lad::util::parallel::{Parallelism, Pool};
 use lad::util::rng::Rng;
 
@@ -133,7 +138,7 @@ fn fuzzed_pairwise_kernel_matches_reference_and_is_schedule_invariant() {
             for pool in [Pool::new(4), Pool::scoped(Parallelism::new(3))] {
                 let par = PairwiseDistances::compute(msgs, &pool);
                 for i in 0..msgs.len() {
-                    ensure(serial.row(i) == par.row(i), || {
+                    ensure(serial.row(i).to_vec() == par.row(i).to_vec(), || {
                         format!("row {i} differs under {pool:?}")
                     })?;
                 }
@@ -154,6 +159,123 @@ fn fuzzed_pairwise_kernel_matches_reference_and_is_schedule_invariant() {
             }
             Ok(())
         },
+    );
+}
+
+#[test]
+fn fuzzed_packed_storage_matches_a_full_matrix_reference() {
+    // the packed strict-upper-triangle layout + RowView adapter must be
+    // indistinguishable from the full symmetric N×N matrix PR 2 stored:
+    // build the full reference naively from the same Gram expression and
+    // compare every access path (get, row iteration, materialized rows)
+    forall(
+        12,
+        0x9AC,
+        |rng| {
+            let n = gen::usize_in(rng, 1, 40);
+            let q = gen::usize_in(rng, 1, 96);
+            gen::vec_family(rng, n, q, 3.0)
+        },
+        |msgs| {
+            let n = msgs.len();
+            let pd = PairwiseDistances::compute(msgs, &Pool::new(4));
+            ensure(pd.packed_len() == n * n.saturating_sub(1) / 2, || {
+                format!("packed len {} for n={n}", pd.packed_len())
+            })?;
+            // full reference, every (i, j) from the same expression
+            let mut full = vec![0.0f64; n * n];
+            for i in 0..n {
+                for j in i + 1..n {
+                    let d = (norm_sq(&msgs[i]) + norm_sq(&msgs[j])
+                        - 2.0 * math::dot(&msgs[i], &msgs[j]) as f64)
+                        .max(0.0);
+                    full[i * n + j] = d;
+                    full[j * n + i] = d;
+                }
+            }
+            for i in 0..n {
+                let row = pd.row(i).to_vec();
+                ensure(row == full[i * n..(i + 1) * n], || format!("row {i} vs full"))?;
+                for j in 0..n {
+                    ensure(pd.get(i, j) == full[i * n + j], || {
+                        format!("get({i},{j}) vs full")
+                    })?;
+                    ensure(pd.get(i, j) == pd.get(j, i), || format!("symmetry ({i},{j})"))?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fuzzed_kernel_tiers_are_bit_identical() {
+    // every tier the CPU can run (scalar always; SSE2 + AVX2 under
+    // --features simd on capable hosts) must agree with the scalar
+    // reference bit-for-bit on random lengths, including remainder paths
+    let tiers = math::detected_tiers();
+    assert!(tiers.contains(&Tier::Scalar));
+    forall(
+        24,
+        0x71E2,
+        |rng| {
+            let len = gen::usize_in(rng, 0, 300);
+            (gen::vec_f32(rng, len, 8.0), gen::vec_f32(rng, len, 5.0))
+        },
+        |(a, b)| {
+            for &tier in &tiers {
+                let n = tier.name();
+                ensure(
+                    tier.dot(a, b).to_bits() == math::scalar::dot(a, b).to_bits(),
+                    || format!("{n} dot mismatch at len {}", a.len()),
+                )?;
+                ensure(
+                    tier.norm_sq(a).to_bits() == math::scalar::norm_sq(a).to_bits(),
+                    || format!("{n} norm_sq mismatch at len {}", a.len()),
+                )?;
+                ensure(
+                    tier.dist_sq(a, b).to_bits() == math::scalar::dist_sq(a, b).to_bits(),
+                    || format!("{n} dist_sq mismatch at len {}", a.len()),
+                )?;
+                let mut y1 = b.clone();
+                let mut y2 = b.clone();
+                tier.axpy(1.618, a, &mut y1);
+                math::scalar::axpy(1.618, a, &mut y2);
+                ensure(y1 == y2, || format!("{n} axpy mismatch at len {}", a.len()))?;
+                let mut x1 = a.clone();
+                let mut x2 = a.clone();
+                tier.scale(&mut x1, -0.577);
+                math::scalar::scale(&mut x2, -0.577);
+                ensure(x1 == x2, || format!("{n} scale mismatch at len {}", a.len()))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn simd_tier_env_override_is_respected() {
+    // the CI matrix legs pin LAD_SIMD_TIER per process; when the variable
+    // is set (and the binary compiled the intrinsics tiers), the dispatcher
+    // must select exactly min(requested, widest detected)
+    let Ok(raw) = std::env::var("LAD_SIMD_TIER") else {
+        return; // nothing pinned in this process
+    };
+    let Some(requested) = Tier::parse(&raw) else {
+        return; // malformed request falls back to auto — covered by unit tests
+    };
+    if !math::SIMD_ACTIVE {
+        assert_eq!(math::active_tier(), Tier::Scalar, "non-simd builds are scalar-only");
+        return;
+    }
+    let widest = *math::detected_tiers().last().expect("scalar is always detected");
+    let expect = requested.min(widest);
+    assert_eq!(
+        math::active_tier(),
+        expect,
+        "LAD_SIMD_TIER={raw} should pin {} (widest {})",
+        expect.name(),
+        widest.name()
     );
 }
 
