@@ -11,10 +11,10 @@
 
 use lad::config::{AggregatorKind, AttackKind, CompressionKind, TrainConfig};
 use lad::data::linreg::LinRegDataset;
-use lad::experiments::common::{run_variant, Variant};
+use lad::experiments::common::{run_variant_in, Variant};
 use lad::experiments::e2e::{run_default, E2eParams};
 use lad::runtime::Runtime;
-use lad::util::parallel::available_threads;
+use lad::util::parallel::{available_threads, Pool};
 use lad::util::rng::Rng;
 
 fn native_stack_scaling() {
@@ -40,13 +40,19 @@ fn native_stack_scaling() {
     let mut rng = Rng::new(97);
     let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng);
 
+    // One process-level budget for the whole sweep: each leg borrows a
+    // width-capped slice of the same worker set instead of spawning a
+    // private pool per variant (threads never alter a trace, so the
+    // serial-vs-threaded bit-identity assertion below still bites).
+    let budget = Pool::budgeted(cores, 1);
     let mut walls = Vec::new();
     let mut traces = Vec::new();
     for threads in [1usize, cores] {
         let mut c = cfg.clone();
         c.threads = threads;
         let v = Variant { label: format!("{threads}t"), cfg: c, draco_r: None };
-        let tr = run_variant(&ds, &v, 98).expect("native stack run");
+        let tr =
+            run_variant_in(&ds, &v, 98, &budget.inner_capped(threads)).expect("native stack run");
         println!(
             "  threads={threads:<3} wall {:8.3}s  final_loss {:.6e}",
             tr.wall_s, tr.final_loss

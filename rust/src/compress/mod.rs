@@ -28,12 +28,32 @@ use crate::config::CompressionKind;
 use crate::util::parallel::Pool;
 use crate::util::rng::Rng;
 
+/// How a compressed message is packed on the wire by `net::wire` — the
+/// per-variant encoding that makes measured bytes track the analytic bit
+/// accounting. Every operator tags its output with the encoding that
+/// reconstructs its dense vector exactly; `net::wire::Payload` verifies
+/// the round trip bitwise and falls back to `Dense` on any mismatch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WireEnc {
+    /// Dense little-endian f32s — [`Identity`] (and the exactness
+    /// fallback for every other operator).
+    Dense,
+    /// Nonzero (index, value) pairs — [`RandK`] / [`TopK`]
+    /// sparsification.
+    Sparse,
+    /// ‖g‖ plus one (sign bit, level index) pair per coordinate —
+    /// [`Qsgd`] stochastic quantization with `levels` levels.
+    Quantized { levels: u32, norm: f32 },
+}
+
 /// A compressed message: the dense reconstruction the server aggregates,
-/// plus the exact number of bits the encoding would occupy on the wire.
+/// the exact number of bits the encoding would occupy on the wire, and
+/// the wire encoding that realizes that cost (see [`WireEnc`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct CompressedMsg {
     pub vec: Vec<f32>,
     pub bits: usize,
+    pub enc: WireEnc,
 }
 
 /// A compression operator C : R^Q → R^Q.
@@ -50,7 +70,7 @@ pub struct Identity;
 
 impl Compressor for Identity {
     fn compress(&self, g: &[f32], _rng: &mut Rng) -> CompressedMsg {
-        CompressedMsg { vec: g.to_vec(), bits: 32 * g.len() }
+        CompressedMsg { vec: g.to_vec(), bits: 32 * g.len(), enc: WireEnc::Dense }
     }
     fn delta(&self, _dim: usize) -> Option<f64> {
         Some(0.0)

@@ -7,7 +7,7 @@
 //! contract — identical bits on every tier, so quantized messages are
 //! CPU-independent).
 
-use super::{CompressedMsg, Compressor};
+use super::{CompressedMsg, Compressor, WireEnc};
 use crate::util::math::norm;
 use crate::util::rng::Rng;
 
@@ -29,7 +29,11 @@ impl Compressor for Qsgd {
         let s = self.levels as f32;
         let gnorm = norm(g) as f32;
         if gnorm == 0.0 {
-            return CompressedMsg { vec: vec![0.0; q], bits: 32 + q };
+            return CompressedMsg {
+                vec: vec![0.0; q],
+                bits: 32 + q,
+                enc: WireEnc::Quantized { levels: self.levels, norm: 0.0 },
+            };
         }
         let mut out = vec![0.0f32; q];
         for j in 0..q {
@@ -39,7 +43,11 @@ impl Compressor for Qsgd {
             out[j] = g[j].signum() * level * gnorm / s;
         }
         let level_bits = (32 - self.levels.leading_zeros()) as usize; // ⌈log2(s+1)⌉
-        CompressedMsg { vec: out, bits: 32 + q * (1 + level_bits) }
+        CompressedMsg {
+            vec: out,
+            bits: 32 + q * (1 + level_bits),
+            enc: WireEnc::Quantized { levels: self.levels, norm: gnorm },
+        }
     }
 
     fn delta(&self, dim: usize) -> Option<f64> {

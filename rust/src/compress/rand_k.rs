@@ -4,7 +4,7 @@
 //! E[C(g)] = g and E‖C(g) − g‖² = (Q/K − 1)‖g‖², i.e. δ = Q/K − 1.
 //! Wire format: K × (index + f32 value); indices cost ⌈log₂ Q⌉ bits.
 
-use super::{CompressedMsg, Compressor};
+use super::{CompressedMsg, Compressor, WireEnc};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, Copy)]
@@ -32,7 +32,7 @@ impl Compressor for RandK {
             out[idx] = g[idx] * scale;
         }
         let idx_bits = (usize::BITS - (q - 1).leading_zeros()) as usize;
-        CompressedMsg { vec: out, bits: k * (32 + idx_bits) }
+        CompressedMsg { vec: out, bits: k * (32 + idx_bits), enc: WireEnc::Sparse }
     }
 
     fn delta(&self, dim: usize) -> Option<f64> {

@@ -4,7 +4,7 @@
 //! unbiasedness requirement (9) of Com-LAD; included to demonstrate
 //! empirically why Definition 2 demands unbiased operators.
 
-use super::{CompressedMsg, Compressor};
+use super::{CompressedMsg, Compressor, WireEnc};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, Copy)]
@@ -34,7 +34,7 @@ impl Compressor for TopK {
             out[j] = g[j];
         }
         let idx_bits = (usize::BITS - (q.max(2) - 1).leading_zeros()) as usize;
-        CompressedMsg { vec: out, bits: k * (32 + idx_bits) }
+        CompressedMsg { vec: out, bits: k * (32 + idx_bits), enc: WireEnc::Sparse }
     }
 
     fn delta(&self, _dim: usize) -> Option<f64> {

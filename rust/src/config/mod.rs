@@ -127,6 +127,35 @@ pub enum OracleKind {
     RuntimeLinreg,
 }
 
+/// Multi-node transport settings (the `[net]` table; consumed by
+/// `lad node-leader` / `lad node-worker`). Execution-local: excluded from
+/// the handshake config digest, so leader and workers may differ here.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetConfig {
+    /// Leader listen / worker connect address: `tcp://host:port` (or a
+    /// bare `host:port`), or `uds:/path/to.sock` for a Unix-domain socket.
+    pub addr: String,
+    /// Per-iteration gather deadline in milliseconds; 0 waits forever. A
+    /// positive deadline lets the leader proceed past stalled
+    /// (crash-Byzantine) workers, counting them as trace anomalies.
+    pub gather_deadline_ms: u64,
+    /// Compression site: `true` = honest devices compress their own
+    /// uplink (Com-LAD device-side, compressed bytes on the wire);
+    /// `false` = devices ship dense vectors and the leader compresses
+    /// (the historical simulation mode; required for omniscient attacks).
+    pub device_compression: bool,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            addr: "tcp://127.0.0.1:7700".into(),
+            gather_deadline_ms: 0,
+            device_compression: false,
+        }
+    }
+}
+
 /// Top-level run configuration (defaults reproduce Fig. 4's LAD-CWTM d=10).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -172,6 +201,8 @@ pub struct TrainConfig {
     /// different — but equally seeded-deterministic — trajectory than the
     /// pre-parallel trainer did; identity-compression runs are unchanged.
     pub threads: usize,
+    /// Multi-node transport settings (`[net]` table).
+    pub net: NetConfig,
 }
 
 impl Default for TrainConfig {
@@ -193,6 +224,7 @@ impl Default for TrainConfig {
             seed: 0xC0FFEE,
             log_every: 50,
             threads: 1,
+            net: NetConfig::default(),
         }
     }
 }
@@ -247,9 +279,46 @@ impl TrainConfig {
                 apply_table(&mut cfg, kv, &doc)?;
             }
         }
+        if let Some(kv) = doc.get("net") {
+            apply_net_table(&mut cfg.net, kv)?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
+}
+
+fn apply_net_table(
+    net: &mut NetConfig,
+    kv: &std::collections::BTreeMap<String, TomlValue>,
+) -> Result<()> {
+    // `addr`/`listen`/`connect` are aliases for one field; two of them in
+    // one file is a contradiction (key order, not file order, would pick
+    // the winner), so reject it instead of silently resolving
+    let mut addr_key: Option<&str> = None;
+    for (key, v) in kv {
+        match key.as_str() {
+            "addr" | "listen" | "connect" => {
+                if let Some(prev) = addr_key {
+                    bail!("[net] key {key:?} conflicts with {prev:?} — set only one address");
+                }
+                addr_key = Some(key.as_str());
+                net.addr = v.as_str().context("net.addr must be a string")?.to_string()
+            }
+            "gather_deadline_ms" | "deadline_ms" => {
+                net.gather_deadline_ms = need_usize(key, v)? as u64
+            }
+            "compression_site" => {
+                net.device_compression =
+                    match v.as_str().context("net.compression_site must be a string")? {
+                        "device" => true,
+                        "leader" => false,
+                        other => bail!("net.compression_site must be leader|device, got {other:?}"),
+                    }
+            }
+            other => bail!("unknown [net] key {other:?}"),
+        }
+    }
+    Ok(())
 }
 
 fn apply_table(
@@ -358,6 +427,33 @@ mod tests {
         assert_eq!(cfg.threads, 8);
         let auto = TrainConfig::from_toml_str("threads = 0").unwrap();
         assert_eq!(auto.threads, 0);
+    }
+
+    #[test]
+    fn net_table_parses_and_defaults() {
+        let cfg = TrainConfig::default();
+        assert_eq!(cfg.net, NetConfig::default());
+        assert_eq!(cfg.net.gather_deadline_ms, 0);
+        assert!(!cfg.net.device_compression);
+        let cfg = TrainConfig::from_toml_str(
+            r#"
+            devices = 10
+            honest = 8
+            [net]
+            listen = "uds:/tmp/lad.sock"
+            gather_deadline_ms = 250
+            compression_site = "device"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.net.addr, "uds:/tmp/lad.sock");
+        assert_eq!(cfg.net.gather_deadline_ms, 250);
+        assert!(cfg.net.device_compression);
+        assert!(TrainConfig::from_toml_str("[net]\ncompression_site = \"nowhere\"").is_err());
+        assert!(TrainConfig::from_toml_str("[net]\nbogus = 1").is_err());
+        // contradictory address aliases are rejected, not key-order-resolved
+        let conflict = "[net]\nconnect = \"tcp://a:1\"\nlisten = \"uds:/tmp/x\"";
+        assert!(TrainConfig::from_toml_str(conflict).is_err());
     }
 
     #[test]

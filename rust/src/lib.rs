@@ -19,6 +19,12 @@
 //!   artifacts produced by `python/compile/aot.py`.
 //! * [`server`] — the training loop (Algorithms 1 and 2), metrics, and a
 //!   threaded leader/worker cluster simulation.
+//! * [`net`] — the multi-node transport layer: a versioned binary wire
+//!   codec with per-compressor payload encodings, CRC32 framing, and a
+//!   `Transport` trait (in-process channels / TCP / Unix-domain sockets)
+//!   behind the leader and worker event loops, so the Fig. 1 topology runs
+//!   across real processes (`lad node-leader` / `lad node-worker`) with
+//!   measured — not just analytic — communication bytes.
 //! * [`theory`] — closed-form error terms (κ₁..κ₄, ξ₁..ξ₄, ε) from the
 //!   convergence analysis, used by the Fig. 2/3 reproductions.
 //! * [`experiments`] — drivers that regenerate every figure in the paper.
@@ -47,6 +53,7 @@ pub mod config;
 pub mod data;
 pub mod experiments;
 pub mod grad;
+pub mod net;
 pub mod proptest_lite;
 pub mod runtime;
 pub mod server;

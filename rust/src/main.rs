@@ -10,11 +10,14 @@
 
 use anyhow::{bail, Context};
 use lad::aggregation;
+use lad::attack;
 use lad::cli::Args;
+use lad::compress;
 use lad::config::{AggregatorKind, AttackKind, CompressionKind, OracleKind, TrainConfig};
 use lad::data::linreg::LinRegDataset;
 use lad::experiments::{common, fig2, fig3, fig4, fig5, fig6};
 use lad::grad::{CodedGradOracle, NativeLinReg, RuntimeLinReg};
+use lad::net;
 use lad::runtime::Runtime;
 use lad::theory::TheoryParams;
 use lad::util::math::{rel_err, Mat};
@@ -41,6 +44,11 @@ SUBCOMMANDS
   byz-sweep         final loss vs Byzantine count ablation [--d D --iters T --threads W]
   kappa             estimate robustness coefficient        [--agg RULE --n N --honest H]
   theory            print closed-form constants            [--n N --honest H --d D --delta X]
+  node-leader       serve one run to remote workers over TCP/UDS
+                    [train flags or --config FILE] --listen tcp://HOST:PORT|uds:PATH
+                    [--gather-deadline-ms MS] [--device-compression] [--out DIR]
+  node-worker       join a leader as one device
+                    --connect tcp://HOST:PORT|uds:PATH --device I [--config FILE]
   artifacts-check   load artifacts, compare vs native oracle
   help              print this text
 
@@ -78,6 +86,8 @@ fn run() -> Result<()> {
         Some("byz-sweep") => cmd_byz_sweep(&args),
         Some("kappa") => cmd_kappa(&args),
         Some("theory") => cmd_theory(&args),
+        Some("node-leader") => cmd_node_leader(&args),
+        Some("node-worker") => cmd_node_worker(&args),
         Some("artifacts-check") => cmd_artifacts_check(&args),
         Some(other) => bail!("unknown subcommand {other:?} (try `lad help`)"),
     }
@@ -256,6 +266,84 @@ fn cmd_byz_sweep(args: &Args) -> Result<()> {
     out.print_table();
     let path = out.save_csv(&out_dir)?;
     println!("written {path:?}");
+    Ok(())
+}
+
+fn cmd_node_leader(args: &Args) -> Result<()> {
+    use lad::net::Transport as _;
+    use lad::util::parallel::Pool;
+    let cfg = cfg_from_args(args)?;
+    let addr = args.get_str("listen", &cfg.net.addr);
+    let deadline_ms = args.get_u64("gather-deadline-ms", cfg.net.gather_deadline_ms)?;
+    let device_compression =
+        args.has_flag("device-compression") || cfg.net.device_compression;
+    let out_dir = args.get_str("out", "results");
+    args.reject_unknown()?;
+
+    // same dataset/run seeding as `lad train`, so the node trace is
+    // directly comparable to the central one
+    let mut data_rng = Rng::new(cfg.seed);
+    let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut data_rng);
+    let listener = net::NetListener::bind(&addr)?;
+    println!(
+        "leader listening on {} — waiting for {} workers (digest {:#018x})",
+        listener.local_addr()?,
+        cfg.n_devices,
+        net::config_digest(&cfg)
+    );
+    let mut links = Vec::with_capacity(cfg.n_devices);
+    for i in 0..cfg.n_devices {
+        let link = listener.accept()?;
+        println!("  [{}/{}] {}", i + 1, cfg.n_devices, link.peer());
+        links.push(link);
+    }
+    let pool = Pool::new(cfg.threads);
+    let agg = aggregation::from_config_pooled(&cfg, &pool);
+    let atk = attack::from_kind(cfg.attack);
+    let comp = compress::from_kind(cfg.compression);
+    let leader = net::Leader {
+        cfg: &cfg,
+        ds: &ds,
+        agg: agg.as_ref(),
+        attack: atk.as_ref(),
+        comp: comp.as_ref(),
+        opts: net::LeaderOpts {
+            gather_deadline: (deadline_ms > 0)
+                .then(|| std::time::Duration::from_millis(deadline_ms)),
+            device_compression,
+        },
+        pool,
+        send_dataset: true,
+    };
+    let mut x0 = vec![0.0f32; cfg.dim];
+    let trace = leader.run(links, &mut x0, "node-leader", &mut Rng::new(cfg.seed ^ 0x7A17))?;
+    println!("{}", trace.summary());
+    std::fs::create_dir_all(&out_dir)?;
+    let path = format!("{out_dir}/node_trace.csv");
+    trace.save_csv(&path)?;
+    println!("trace written to {path}");
+    Ok(())
+}
+
+fn cmd_node_worker(args: &Args) -> Result<()> {
+    let device = args.get_usize("device", 0)?;
+    let local_cfg = match args.get("config") {
+        Some(path) => Some(TrainConfig::from_file(path)?),
+        None => None,
+    };
+    let local_digest = local_cfg.as_ref().map(net::config_digest);
+    // --connect beats the config's [net] addr beats the built-in default
+    let default_addr =
+        local_cfg.map(|c| c.net.addr).unwrap_or_else(|| TrainConfig::default().net.addr);
+    let addr = args.get_str("connect", &default_addr);
+    args.reject_unknown()?;
+    println!("worker {device} connecting to {addr}");
+    let link = net::connect(&addr)?;
+    let report = net::run_worker(link, device, None, local_digest)?;
+    println!(
+        "worker {} done: {} iterations, {} B up, {} B down",
+        report.device, report.iters, report.up_bytes, report.down_bytes
+    );
     Ok(())
 }
 

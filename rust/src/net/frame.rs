@@ -1,0 +1,224 @@
+//! Length-prefixed framing with CRC32 integrity checking.
+//!
+//! Every protocol message travels inside one frame:
+//!
+//! | offset | size | field                                  |
+//! |--------|------|----------------------------------------|
+//! | 0      | 4    | payload length, u32 little-endian      |
+//! | 4      | 4    | CRC32 (IEEE) of the payload, u32 LE    |
+//! | 8      | len  | payload (one `wire::Msg` encoding)     |
+//!
+//! The reader validates the length against a hard cap *before* allocating
+//! (a corrupt or hostile length cannot trigger an OOM) and the CRC after
+//! reading, so a flipped bit anywhere in the payload is rejected instead of
+//! being decoded into a garbage message. The CRC is the standard reflected
+//! IEEE 802.3 polynomial (`0xEDB88320`), computed byte-at-a-time from a
+//! compile-time table — no external crates, same digest as zlib's `crc32`.
+
+use std::io::Read;
+
+/// Bytes of framing before the payload (length + CRC).
+pub const HEADER_LEN: usize = 8;
+
+/// Hard cap on a single frame's payload. Large enough for a broadcast or a
+/// dataset block at production sizes, small enough that a corrupted length
+/// field cannot ask the receiver to allocate unbounded memory.
+pub const MAX_PAYLOAD: usize = 1 << 28;
+
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 == 1 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = make_table();
+
+/// CRC32 (IEEE, reflected) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Framing / integrity failure.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Underlying stream error (disconnect, reset, ...).
+    Io(std::io::Error),
+    /// The stream ended inside a header or payload.
+    Truncated,
+    /// The length field exceeds the receiver's payload cap.
+    Oversized { len: usize, max: usize },
+    /// Payload bytes do not match the header checksum.
+    Crc { expected: u32, got: u32 },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "frame i/o error: {e}"),
+            FrameError::Truncated => write!(f, "truncated frame"),
+            FrameError::Oversized { len, max } => {
+                write!(f, "frame payload length {len} exceeds cap {max}")
+            }
+            FrameError::Crc { expected, got } => {
+                write!(f, "frame CRC mismatch: header {expected:#010x}, payload {got:#010x}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FrameError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// Frame a payload: header (length + CRC) followed by the payload bytes.
+///
+/// Panics if the payload exceeds [`MAX_PAYLOAD`] — encoders construct
+/// payloads bounded far below the cap, so an oversized send is a bug, not
+/// an input condition.
+pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_PAYLOAD, "frame payload too large: {}", payload.len());
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Validate one complete frame held in `buf` and return its payload slice.
+///
+/// The buffer must contain exactly one frame (header + payload, no excess)
+/// — the shape a datagram-like transport (in-process channels) delivers.
+pub fn decode_frame(buf: &[u8]) -> Result<&[u8], FrameError> {
+    if buf.len() < HEADER_LEN {
+        return Err(FrameError::Truncated);
+    }
+    let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(FrameError::Oversized { len, max: MAX_PAYLOAD });
+    }
+    if buf.len() != HEADER_LEN + len {
+        return Err(FrameError::Truncated);
+    }
+    let expected = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]);
+    let payload = &buf[HEADER_LEN..];
+    let got = crc32(payload);
+    if got != expected {
+        return Err(FrameError::Crc { expected, got });
+    }
+    Ok(payload)
+}
+
+fn read_exact_mapped(r: &mut impl Read, buf: &mut [u8]) -> Result<(), FrameError> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            FrameError::Truncated
+        } else {
+            FrameError::Io(e)
+        }
+    })
+}
+
+/// Read one frame from a byte stream (TCP / UDS): header first, length
+/// validated against `max_payload` before the payload allocation, CRC
+/// checked after the read. Returns `(payload, total bytes consumed)`.
+pub fn read_frame(r: &mut impl Read, max_payload: usize) -> Result<(Vec<u8>, u64), FrameError> {
+    let mut header = [0u8; HEADER_LEN];
+    read_exact_mapped(r, &mut header)?;
+    let len = u32::from_le_bytes([header[0], header[1], header[2], header[3]]) as usize;
+    if len > max_payload {
+        return Err(FrameError::Oversized { len, max: max_payload });
+    }
+    let expected = u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
+    let mut payload = vec![0u8; len];
+    read_exact_mapped(r, &mut payload)?;
+    let got = crc32(&payload);
+    if got != expected {
+        return Err(FrameError::Crc { expected, got });
+    }
+    Ok((payload, (HEADER_LEN + len) as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // the canonical IEEE check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn frame_round_trip() {
+        for payload in [&b""[..], b"x", b"hello frame", &[0u8; 1000]] {
+            let f = encode_frame(payload);
+            assert_eq!(f.len(), HEADER_LEN + payload.len());
+            assert_eq!(decode_frame(&f).unwrap(), payload);
+            let mut cursor = &f[..];
+            let (p, n) = read_frame(&mut cursor, MAX_PAYLOAD).unwrap();
+            assert_eq!(p, payload);
+            assert_eq!(n, f.len() as u64);
+        }
+    }
+
+    #[test]
+    fn corrupted_byte_is_rejected() {
+        let f = encode_frame(b"some payload bytes");
+        for i in HEADER_LEN..f.len() {
+            let mut bad = f.clone();
+            bad[i] ^= 0x40;
+            assert!(
+                matches!(decode_frame(&bad), Err(FrameError::Crc { .. })),
+                "flip at {i} undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_and_oversized_are_rejected() {
+        let f = encode_frame(b"0123456789");
+        assert!(matches!(decode_frame(&f[..f.len() - 1]), Err(FrameError::Truncated)));
+        assert!(matches!(decode_frame(&f[..4]), Err(FrameError::Truncated)));
+        // a stream that dies mid-payload
+        let mut cursor = &f[..f.len() - 3];
+        assert!(matches!(read_frame(&mut cursor, MAX_PAYLOAD), Err(FrameError::Truncated)));
+        // hostile length field: rejected from the header alone, no allocation
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        huge.extend_from_slice(&[0u8; 4]);
+        let mut cursor = &huge[..];
+        assert!(matches!(
+            read_frame(&mut cursor, MAX_PAYLOAD),
+            Err(FrameError::Oversized { .. })
+        ));
+        assert!(matches!(decode_frame(&huge), Err(FrameError::Oversized { .. })));
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected_by_slice_decoder() {
+        let mut f = encode_frame(b"abc");
+        f.push(0);
+        assert!(matches!(decode_frame(&f), Err(FrameError::Truncated)));
+    }
+}

@@ -1,0 +1,464 @@
+//! The server-side event loop (Fig. 1, left-hand side; Algorithms 1–2
+//! over real connections).
+//!
+//! [`Leader::run`] drives one training run over any set of [`Transport`]
+//! connections — in-process channels (the refactored `server::cluster`),
+//! TCP, or Unix-domain sockets (`lad node-leader`). Per iteration it
+//! draws the random assignment (T^t, p^t), broadcasts the iterate plus
+//! each device's resolved subset list, gathers the coded uplinks, emulates
+//! the Byzantine devices (crafting their lies centrally from the gathered
+//! messages — the omniscient adversary cannot live on a real node),
+//! compresses whatever is still uncompressed, aggregates with the
+//! configured κ-robust rule and steps the model.
+//!
+//! **Gather deadline.** With [`LeaderOpts::gather_deadline`] set, a
+//! stalled (crash-Byzantine) worker cannot hang an iteration: when the
+//! deadline expires the leader proceeds with the messages it has, counts
+//! the missing devices as anomalies, and keeps the run alive — exactly
+//! the partial-participation stress the robust aggregators are built to
+//! absorb. Late uploads for old iterations are discarded by iteration
+//! tag. Without a deadline (the default, and the trace-parity mode) the
+//! leader waits for every device, and a disconnect is an error.
+//!
+//! **Determinism.** With every device live, traces are bit-identical to
+//! `Trainer::run`'s central fast path: the leader consumes the run RNG in
+//! the same order (assignment, then attack crafting), per-device
+//! compression randomness comes from the same pre-split streams
+//! (`Rng::split_seeds` — honest devices consume their stream on-device
+//! under device-side compression, the leader consumes the Byzantine
+//! streams when compressing the crafted lies), and the wire codec
+//! reconstructs every message bit-exactly. Under device-side compression
+//! the attack context sees the *post-compression* honest reconstructions
+//! (all a device-side adversary could see); omniscient attacks that read
+//! `ctx.honest` therefore match the central path only under leader-side
+//! compression or the Identity operator.
+
+use super::transport::Transport;
+use super::wire::{config_digest, DatasetBlock, Msg, WIRE_VERSION};
+use crate::aggregation::Aggregator;
+use crate::attack::{Attack, AttackContext};
+use crate::coding::{Assignment, TaskMatrix};
+use crate::compress::{compress_batch, Compressor};
+use crate::config::TrainConfig;
+use crate::data::linreg::LinRegDataset;
+use crate::server::metrics::TrainTrace;
+use crate::util::math::norm;
+use crate::util::parallel::Pool;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Consecutive gather-deadline misses after which a device is retired
+/// (deadline mode): a permanently stalled worker costs this many timeouts
+/// total, not one per remaining iteration — and its broadcast queue stops
+/// growing once it is dead.
+pub const MISS_RETIRE_STREAK: usize = 3;
+
+/// Retire a device mid-run (deadline mode only): it is never broadcast to
+/// again, and if its upload was still pending this iteration the miss is
+/// charged to the trace as an anomaly immediately so the gather can stop
+/// waiting on it.
+fn drop_device(
+    dev: usize,
+    dead: &mut [bool],
+    expecting: &mut [bool],
+    got: &[Option<(Vec<f32>, u64)>],
+    want: &mut usize,
+    trace: &mut TrainTrace,
+) {
+    dead[dev] = true;
+    if expecting[dev] && got[dev].is_none() {
+        expecting[dev] = false;
+        trace.anomalies += 1;
+        *want -= 1;
+    }
+}
+
+/// Leader-side policy knobs that are not part of the training semantics.
+#[derive(Debug, Clone, Default)]
+pub struct LeaderOpts {
+    /// Per-iteration gather budget. `None` waits for every device.
+    pub gather_deadline: Option<Duration>,
+    /// Honest devices compress their own uplink (Com-LAD device-side);
+    /// `false` reproduces the leader-side compression of the historical
+    /// cluster simulation (and keeps omniscient attacks exact).
+    pub device_compression: bool,
+}
+
+/// The server of a multi-node run: configuration, dataset, and the
+/// injected aggregation rule / attack / compression operator.
+pub struct Leader<'a> {
+    pub cfg: &'a TrainConfig,
+    pub ds: &'a LinRegDataset,
+    pub agg: &'a dyn Aggregator,
+    pub attack: &'a dyn Attack,
+    pub comp: &'a dyn Compressor,
+    pub opts: LeaderOpts,
+    /// Worker pool for the leader-side compression batch (share a budgeted
+    /// slice via [`Pool::borrow`] to respect a process-level thread budget).
+    pub pool: Pool,
+    /// Ship the dataset in `Hello` (remote workers); the in-process
+    /// cluster passes `false` and workers borrow the leader's copy.
+    pub send_dataset: bool,
+}
+
+impl Leader<'_> {
+    /// Handshake every connection, then run `cfg.iters` iterations of
+    /// Algorithm 1/2 and return the metric trace (final iterate in `x0`).
+    pub fn run(
+        &self,
+        links: Vec<Box<dyn Transport>>,
+        x0: &mut Vec<f32>,
+        label: &str,
+        rng: &mut Rng,
+    ) -> Result<TrainTrace> {
+        let cfg = self.cfg;
+        cfg.validate()?;
+        let n = cfg.n_devices;
+        ensure!(links.len() == n, "need {n} connections, got {}", links.len());
+        ensure!(self.ds.n() == n, "dataset has {} subsets, config {n}", self.ds.n());
+        ensure!(self.ds.dim() == cfg.dim, "dataset dim {} != config {}", self.ds.dim(), cfg.dim);
+        ensure!(x0.len() == cfg.dim, "x0 dim {} != config {}", x0.len(), cfg.dim);
+        let timer = Timer::start();
+        let digest = config_digest(cfg);
+        // Same pre-split per-device compression streams as Trainer::run —
+        // the seeds go to honest devices in Hello (device-side mode), the
+        // leader keeps the streams for everything it compresses itself.
+        let comp_seeds = rng.split_seeds(n);
+        let mut comp_rngs: Vec<Rng> = comp_seeds.iter().map(|&s| Rng::new(s)).collect();
+        let mut wire_up = 0u64;
+        let mut wire_down = 0u64;
+
+        // ---- handshake: Join in, Hello out, order links by device id ----
+        let mut by_dev: Vec<Option<Box<dyn Transport>>> = (0..n).map(|_| None).collect();
+        for mut link in links {
+            let (msg, nb) = link.recv().context("waiting for a worker join")?;
+            wire_up += nb;
+            let (version, device, worker_digest) = match msg {
+                Msg::Join { version, device, digest } => (version, device, digest),
+                other => bail!("expected join, got {other:?} from {}", link.peer()),
+            };
+            ensure!(
+                version == WIRE_VERSION,
+                "protocol version mismatch: worker {version}, leader {WIRE_VERSION}"
+            );
+            let device = device as usize;
+            ensure!(device < n, "worker joined as device {device}, config has {n}");
+            ensure!(by_dev[device].is_none(), "device {device} joined twice");
+            ensure!(
+                worker_digest == 0 || worker_digest == digest,
+                "config digest mismatch: worker {device} has {worker_digest:#018x}, \
+                 leader {digest:#018x}"
+            );
+            let hello = Msg::Hello {
+                version: WIRE_VERSION,
+                device: device as u32,
+                n_devices: n as u32,
+                dim: cfg.dim as u32,
+                byzantine: device >= cfg.n_honest,
+                device_compression: self.opts.device_compression,
+                comp_seed: comp_seeds[device],
+                digest,
+                compression: cfg.compression,
+                dataset: if self.send_dataset {
+                    Some(DatasetBlock::from_dataset(self.ds))
+                } else {
+                    None
+                },
+            };
+            wire_down += link.send(&hello)?;
+            by_dev[device] = Some(link);
+        }
+
+        // ---- split: sends stay here, one detached reader per device ----
+        // Readers forward (device, Some((msg, bytes))) into a single
+        // queue — the gather deadline is then one recv_timeout on that
+        // queue, so a stalled connection never blocks the others — and a
+        // final (device, None) when their connection dies (EOF, reset, or
+        // a corrupt frame), so the leader fails fast (or, in deadline
+        // mode, drops the device) instead of waiting on a reader that
+        // silently exited.
+        type RxEvent = (usize, Option<(Msg, u64)>);
+        let (fwd_tx, fwd_rx) = mpsc::channel::<RxEvent>();
+        let mut txs: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+        for (dev, link) in by_dev.into_iter().enumerate() {
+            let (mut tx_half, mut rx_half) = link.expect("handshake fills every slot").split()?;
+            if let Some(d) = self.opts.gather_deadline {
+                // crash tolerance must also cover a worker that stops
+                // draining its socket: bound blocking broadcast writes so
+                // the send fails (and the device is retired) instead of
+                // wedging the leader in write_all
+                tx_half.set_send_timeout(Some(d))?;
+            }
+            txs.push(tx_half);
+            let fwd = fwd_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("lad-net-rx-{dev}"))
+                .spawn(move || loop {
+                    match rx_half.recv() {
+                        Ok(item) => {
+                            if fwd.send((dev, Some(item))).is_err() {
+                                return;
+                            }
+                        }
+                        Err(_) => {
+                            let _ = fwd.send((dev, None));
+                            return;
+                        }
+                    }
+                })
+                .context("spawning reader thread")?;
+        }
+        drop(fwd_tx);
+
+        // ---- training loop ----
+        let mut trace = TrainTrace::new(label);
+        let s_hat = TaskMatrix::cyclic(n, cfg.d);
+        let mut bits_total = 0u64;
+        let mut dead = vec![false; n];
+        let mut miss_streak = vec![0usize; n];
+
+        for t in 0..cfg.iters {
+            let assign = Assignment::draw(n, rng);
+            let mut expecting = vec![false; n];
+            for i in 0..n {
+                if dead[i] {
+                    continue;
+                }
+                let subsets: Vec<u32> = assign
+                    .subsets_for(s_hat.row(assign.tasks[i]))
+                    .map(|k| k as u32)
+                    .collect();
+                let msg = Msg::Broadcast { iter: t as u32, x: x0.clone(), subsets };
+                match txs[i].send(&msg) {
+                    Ok(nb) => {
+                        wire_down += nb;
+                        expecting[i] = true;
+                    }
+                    Err(e) => {
+                        if self.opts.gather_deadline.is_some() {
+                            // crash-Byzantine: drop the device, keep going
+                            dead[i] = true;
+                            trace.anomalies += 1;
+                        } else {
+                            return Err(e).context(format!("broadcast to device {i}"));
+                        }
+                    }
+                }
+            }
+            let mut want = expecting.iter().filter(|&&b| b).count();
+            ensure!(want > 0, "iteration {t}: no live workers left");
+
+            // gather until complete or the deadline expires
+            let mut got: Vec<Option<(Vec<f32>, u64)>> = (0..n).map(|_| None).collect();
+            let deadline = self.opts.gather_deadline.map(|d| Instant::now() + d);
+            while want > 0 {
+                let item = match deadline {
+                    None => match fwd_rx.recv() {
+                        Ok(x) => x,
+                        Err(_) => bail!("iteration {t}: all workers disconnected"),
+                    },
+                    Some(dl) => {
+                        let now = Instant::now();
+                        if now >= dl {
+                            break;
+                        }
+                        match fwd_rx.recv_timeout(dl - now) {
+                            Ok(x) => x,
+                            Err(mpsc::RecvTimeoutError::Timeout) => break,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                bail!("iteration {t}: all workers disconnected")
+                            }
+                        }
+                    }
+                };
+                let (dev, event) = item;
+                let (msg, nb) = match event {
+                    Some(x) => x,
+                    None => {
+                        // this device's connection died (EOF / corrupt frame)
+                        if self.opts.gather_deadline.is_none() {
+                            bail!(
+                                "iteration {t}: device {dev} disconnected or sent a \
+                                 corrupt frame"
+                            );
+                        }
+                        drop_device(dev, &mut dead, &mut expecting, &got, &mut want, &mut trace);
+                        continue;
+                    }
+                };
+                wire_up += nb;
+                match msg {
+                    Msg::Upload { iter, device, analytic_bits, payload } => {
+                        if iter as usize != t || device as usize != dev {
+                            continue; // stale upload from a past deadline miss
+                        }
+                        if !expecting[dev] || got[dev].is_some() {
+                            continue;
+                        }
+                        // dimension checked on the cheap accessor BEFORE
+                        // reconstructing, so a hostile dim never allocates
+                        let vec =
+                            if payload.dim() == cfg.dim { payload.to_dense().ok() } else { None };
+                        match vec {
+                            Some(v) if v.len() == cfg.dim => {
+                                got[dev] = Some((v, analytic_bits));
+                                want -= 1;
+                            }
+                            _ => {
+                                if self.opts.gather_deadline.is_none() {
+                                    bail!(
+                                        "device {dev} sent an invalid upload \
+                                         (payload dim != {})",
+                                        cfg.dim
+                                    );
+                                }
+                                drop_device(
+                                    dev,
+                                    &mut dead,
+                                    &mut expecting,
+                                    &got,
+                                    &mut want,
+                                    &mut trace,
+                                );
+                            }
+                        }
+                    }
+                    other => {
+                        // a protocol deviation from one worker must not
+                        // kill the run when crash tolerance was asked for
+                        if self.opts.gather_deadline.is_none() {
+                            bail!("unexpected mid-run message from device {dev}: {other:?}");
+                        }
+                        drop_device(dev, &mut dead, &mut expecting, &got, &mut want, &mut trace);
+                    }
+                }
+            }
+            trace.anomalies += want; // devices that missed the deadline
+            // retire chronic stragglers so a permanently stalled worker
+            // costs a bounded number of timeouts, not one per iteration
+            for i in 0..n {
+                if !expecting[i] {
+                    continue;
+                }
+                if got[i].is_some() {
+                    miss_streak[i] = 0;
+                } else {
+                    miss_streak[i] += 1;
+                    if miss_streak[i] >= MISS_RETIRE_STREAK {
+                        dead[i] = true;
+                    }
+                }
+            }
+
+            let present: Vec<usize> = (0..n).filter(|&i| got[i].is_some()).collect();
+            ensure!(!present.is_empty(), "iteration {t}: no uploads before the deadline");
+            let honest_ids: Vec<usize> =
+                present.iter().copied().filter(|&i| i < cfg.n_honest).collect();
+            let byz_ids: Vec<usize> =
+                present.iter().copied().filter(|&i| i >= cfg.n_honest).collect();
+
+            // Fixed identities (last N−H Byzantine, as Trainer defaults):
+            // gather the uploads, craft the lies, compress what is still
+            // uncompressed, and stitch back into device order (honest ids
+            // all precede Byzantine ids, so concatenation IS device order).
+            let msgs: Vec<Vec<f32>> = if self.opts.device_compression {
+                let mut honest_rec = Vec::with_capacity(honest_ids.len());
+                for &i in &honest_ids {
+                    let (vec, bits) = got[i].take().expect("present");
+                    bits_total += bits;
+                    honest_rec.push(vec);
+                }
+                let byz_true: Vec<Vec<f32>> =
+                    byz_ids.iter().map(|&i| got[i].take().expect("present").0).collect();
+                let lies = if byz_true.is_empty() {
+                    Vec::new()
+                } else {
+                    let mut ctx =
+                        AttackContext { honest: &honest_rec, own_true: &byz_true, rng };
+                    self.attack.craft(&mut ctx)
+                };
+                // the emulated Byzantine uplinks are compressed with their
+                // own device streams, exactly as the central path does
+                let mut out = honest_rec;
+                if byz_ids.iter().copied().eq(cfg.n_honest..n) {
+                    let refs: Vec<&[f32]> = lies.iter().map(|l| l.as_slice()).collect();
+                    let (rec, bits) = compress_batch(
+                        self.comp,
+                        &refs,
+                        &mut comp_rngs[cfg.n_honest..],
+                        &self.pool,
+                    );
+                    bits_total += bits;
+                    out.extend(rec);
+                } else {
+                    for (j, &i) in byz_ids.iter().enumerate() {
+                        let c = self.comp.compress(&lies[j], &mut comp_rngs[i]);
+                        bits_total += c.bits as u64;
+                        out.push(c.vec);
+                    }
+                }
+                out
+            } else {
+                let honest_true: Vec<Vec<f32>> =
+                    honest_ids.iter().map(|&i| got[i].take().expect("present").0).collect();
+                let byz_true: Vec<Vec<f32>> =
+                    byz_ids.iter().map(|&i| got[i].take().expect("present").0).collect();
+                let lies = if byz_true.is_empty() {
+                    Vec::new()
+                } else {
+                    let mut ctx =
+                        AttackContext { honest: &honest_true, own_true: &byz_true, rng };
+                    self.attack.craft(&mut ctx)
+                };
+                if present.len() == n {
+                    // full gather: the exact leader-side compression batch
+                    // of the historical cluster path (and the fast trainer)
+                    let all: Vec<&[f32]> = honest_true
+                        .iter()
+                        .map(|m| m.as_slice())
+                        .chain(lies.iter().map(|m| m.as_slice()))
+                        .collect();
+                    let (msgs, bits) = compress_batch(self.comp, &all, &mut comp_rngs, &self.pool);
+                    bits_total += bits;
+                    msgs
+                } else {
+                    let mut out = Vec::with_capacity(present.len());
+                    for (j, &i) in honest_ids.iter().enumerate() {
+                        let c = self.comp.compress(&honest_true[j], &mut comp_rngs[i]);
+                        bits_total += c.bits as u64;
+                        out.push(c.vec);
+                    }
+                    for (j, &i) in byz_ids.iter().enumerate() {
+                        let c = self.comp.compress(&lies[j], &mut comp_rngs[i]);
+                        bits_total += c.bits as u64;
+                        out.push(c.vec);
+                    }
+                    out
+                }
+            };
+
+            let update = self.agg.aggregate(&msgs);
+            for (xi, ui) in x0.iter_mut().zip(&update) {
+                *xi -= cfg.lr as f32 * ui;
+            }
+            if (cfg.log_every > 0 && t % cfg.log_every == 0) || t + 1 == cfg.iters {
+                trace.record(t, self.ds.loss(x0), norm(&update), bits_total);
+            }
+        }
+
+        for tx in txs.iter_mut() {
+            if let Ok(nb) = tx.send(&Msg::Shutdown) {
+                wire_down += nb;
+            }
+        }
+        trace.final_loss = self.ds.loss(x0);
+        trace.wall_s = timer.elapsed_s();
+        trace.wire_up_bytes = wire_up;
+        trace.wire_down_bytes = wire_down;
+        Ok(trace)
+    }
+}

@@ -1,0 +1,64 @@
+//! Zero-dependency multi-node transport: the leader–worker protocol of
+//! Fig. 1 over real connections.
+//!
+//! The paper's system model is a star topology — a server broadcasts the
+//! iterate `x^t` plus cyclic task assignments and gathers coded
+//! (optionally compressed) uplinks from `n` devices. This module turns the
+//! in-process cluster simulation into an actual multi-node runner while
+//! keeping the training semantics (and, with every device live, the exact
+//! trace) of the central fast path:
+//!
+//! * [`wire`] — the versioned little-endian codec: `Join` / `Hello`
+//!   (config-digest handshake, optional dataset shipping) /
+//!   `Broadcast {x, subsets}` / `Upload {payload}` / `Shutdown`, with a
+//!   **variant-specific payload encoding** per compression operator
+//!   (dense f32s for Identity, index+value pairs for rand-K/top-K, packed
+//!   sign+level bits for QSGD) so the bytes on the wire track the
+//!   operators' analytic bit accounting — communication cost is measured,
+//!   not just computed.
+//! * [`frame`] — length-prefixed framing with a hard payload cap and a
+//!   hand-rolled table-based CRC32, so corrupt or truncated frames are
+//!   rejected before they become garbage messages.
+//! * [`transport`] — the [`Transport`] trait with three implementations:
+//!   in-process byte channels (the refactored `server::cluster` path), TCP
+//!   and Unix-domain sockets, all carrying identical frames.
+//! * [`leader`] / [`worker`] — the two event loops, generic over the
+//!   transport, with a configurable gather deadline so a stalled
+//!   (crash-Byzantine) worker cannot hang an iteration.
+//!
+//! # Wire format (version 1)
+//!
+//! Frame: `u32 LE payload length | u32 LE CRC32(payload) | payload`.
+//! Message payloads (first byte = tag; see [`wire`] for field tables):
+//!
+//! | tag | message     | sent by | purpose                                |
+//! |-----|-------------|---------|----------------------------------------|
+//! | 1   | `Join`      | worker  | identify device, cross-check config    |
+//! | 2   | `Hello`     | leader  | role, compression seed, dataset        |
+//! | 3   | `Broadcast` | leader  | iterate + resolved subset list         |
+//! | 4   | `Upload`    | worker  | coded (compressed) message + bit count |
+//! | 5   | `Shutdown`  | leader  | end of run                             |
+//!
+//! # Quick start
+//!
+//! In-process (what `server::cluster::run_cluster` does), or across real
+//! processes:
+//!
+//! ```text
+//! # terminal 1 — leader (TCP; use uds:/tmp/lad.sock for a local socket)
+//! lad node-leader --listen tcp://127.0.0.1:7700 --devices 8 --honest 6 \
+//!     --d 3 --dim 16 --iters 100
+//! # terminals 2..9 — one worker per device index
+//! lad node-worker --connect tcp://127.0.0.1:7700 --device 0
+//! ```
+
+pub mod frame;
+pub mod leader;
+pub mod transport;
+pub mod wire;
+pub mod worker;
+
+pub use leader::{Leader, LeaderOpts, MISS_RETIRE_STREAK};
+pub use transport::{connect, ChannelTransport, NetListener, TcpTransport, Transport};
+pub use wire::{config_digest, DatasetBlock, Msg, Payload, WIRE_VERSION};
+pub use worker::{run_worker, WorkerReport};

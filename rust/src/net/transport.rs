@@ -1,0 +1,382 @@
+//! Message transports: one trait, three implementations.
+//!
+//! * [`ChannelTransport`] — in-process `mpsc` channels carrying *framed
+//!   bytes* (not decoded structs), so the in-process cluster simulation
+//!   exercises the exact codec + CRC path the socket transports use and
+//!   pays the same byte accounting.
+//! * [`TcpTransport`] — framed messages over a `TcpStream`
+//!   (`TCP_NODELAY`; one `write_all` per frame).
+//! * [`UdsTransport`] — the same over a Unix-domain socket (unix only).
+//!
+//! Addresses select the transport: `tcp://HOST:PORT` (or a bare
+//! `HOST:PORT`) binds/connects TCP; `uds:PATH` (or `uds://PATH` /
+//! `unix:PATH`) a Unix-domain socket. [`NetListener::bind`] +
+//! [`connect`] are the only entry points the leader/worker loops need.
+//!
+//! [`Transport::split`] divides a connection into independently owned
+//! send and receive halves (socket clones; channel halves), which is how
+//! the leader runs one blocking reader thread per worker while sending
+//! broadcasts from the training loop.
+
+use super::frame;
+use super::wire::Msg;
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// A bidirectional, message-oriented connection. `send`/`recv` return the
+/// number of wire bytes moved (frame header included) for byte accounting.
+pub trait Transport: Send {
+    /// Encode, frame and transmit one message; returns bytes written.
+    fn send(&mut self, msg: &Msg) -> Result<u64>;
+    /// Block for the next message; returns it with the bytes read.
+    fn recv(&mut self) -> Result<(Msg, u64)>;
+    /// Split into `(send half, receive half)`. Each half supports only its
+    /// own direction; using the wrong direction is an error.
+    fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>)>;
+    /// Bound blocking sends: with a timeout set, a peer that stops
+    /// draining its socket makes `send` error out instead of blocking the
+    /// caller forever (the leader sets this in crash-tolerant mode). A
+    /// no-op for in-process channels, whose queue is unbounded.
+    fn set_send_timeout(&mut self, t: Option<Duration>) -> Result<()> {
+        let _ = t;
+        Ok(())
+    }
+    /// Human-readable peer description for diagnostics.
+    fn peer(&self) -> String;
+}
+
+// ---------------------------------------------------------------------------
+// in-process channels
+// ---------------------------------------------------------------------------
+
+/// In-process transport: a cross-wired pair of byte channels. Frames (and
+/// therefore CRCs and byte counts) are identical to the socket transports.
+pub struct ChannelTransport {
+    tx: Option<mpsc::Sender<Vec<u8>>>,
+    rx: Option<mpsc::Receiver<Vec<u8>>>,
+}
+
+impl ChannelTransport {
+    /// A connected pair (leader half, worker half).
+    pub fn pair() -> (ChannelTransport, ChannelTransport) {
+        let (a_tx, b_rx) = mpsc::channel();
+        let (b_tx, a_rx) = mpsc::channel();
+        (
+            ChannelTransport { tx: Some(a_tx), rx: Some(a_rx) },
+            ChannelTransport { tx: Some(b_tx), rx: Some(b_rx) },
+        )
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn send(&mut self, msg: &Msg) -> Result<u64> {
+        let tx = self.tx.as_ref().context("send on a receive-only channel half")?;
+        let bytes = frame::encode_frame(&msg.encode());
+        let n = bytes.len() as u64;
+        tx.send(bytes).map_err(|_| anyhow!("channel peer disconnected"))?;
+        Ok(n)
+    }
+
+    fn recv(&mut self) -> Result<(Msg, u64)> {
+        let rx = self.rx.as_ref().context("recv on a send-only channel half")?;
+        let bytes = rx.recv().map_err(|_| anyhow!("channel peer disconnected"))?;
+        let n = bytes.len() as u64;
+        let payload = frame::decode_frame(&bytes)?;
+        Ok((Msg::decode(payload)?, n))
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>)> {
+        let me = *self;
+        Ok((
+            Box::new(ChannelTransport { tx: me.tx, rx: None }),
+            Box::new(ChannelTransport { tx: None, rx: me.rx }),
+        ))
+    }
+
+    fn peer(&self) -> String {
+        "channel".into()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP
+// ---------------------------------------------------------------------------
+
+/// Framed messages over TCP.
+pub struct TcpTransport {
+    stream: TcpStream,
+}
+
+impl TcpTransport {
+    pub fn new(stream: TcpStream) -> TcpTransport {
+        // latency matters more than throughput for per-iteration messages
+        let _ = stream.set_nodelay(true);
+        TcpTransport { stream }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, msg: &Msg) -> Result<u64> {
+        let bytes = frame::encode_frame(&msg.encode());
+        self.stream.write_all(&bytes).context("tcp send")?;
+        Ok(bytes.len() as u64)
+    }
+
+    fn recv(&mut self) -> Result<(Msg, u64)> {
+        let (payload, n) = frame::read_frame(&mut self.stream, frame::MAX_PAYLOAD)?;
+        Ok((Msg::decode(&payload)?, n))
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>)> {
+        let clone = self.stream.try_clone().context("cloning tcp stream for split")?;
+        Ok((
+            Box::new(TcpTransport { stream: clone }),
+            Box::new(TcpTransport { stream: self.stream }),
+        ))
+    }
+
+    fn set_send_timeout(&mut self, t: Option<Duration>) -> Result<()> {
+        self.stream.set_write_timeout(t).context("setting tcp write timeout")?;
+        Ok(())
+    }
+
+    fn peer(&self) -> String {
+        self.stream
+            .peer_addr()
+            .map(|a| format!("tcp://{a}"))
+            .unwrap_or_else(|_| "tcp://?".into())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Unix-domain sockets
+// ---------------------------------------------------------------------------
+
+/// Framed messages over a Unix-domain socket.
+#[cfg(unix)]
+pub struct UdsTransport {
+    stream: std::os::unix::net::UnixStream,
+    path: String,
+}
+
+#[cfg(unix)]
+impl Transport for UdsTransport {
+    fn send(&mut self, msg: &Msg) -> Result<u64> {
+        let bytes = frame::encode_frame(&msg.encode());
+        self.stream.write_all(&bytes).context("uds send")?;
+        Ok(bytes.len() as u64)
+    }
+
+    fn recv(&mut self) -> Result<(Msg, u64)> {
+        let (payload, n) = frame::read_frame(&mut self.stream, frame::MAX_PAYLOAD)?;
+        Ok((Msg::decode(&payload)?, n))
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>)> {
+        let clone = self.stream.try_clone().context("cloning uds stream for split")?;
+        let path = self.path.clone();
+        Ok((
+            Box::new(UdsTransport { stream: clone, path }),
+            Box::new(UdsTransport { stream: self.stream, path: self.path }),
+        ))
+    }
+
+    fn set_send_timeout(&mut self, t: Option<Duration>) -> Result<()> {
+        self.stream.set_write_timeout(t).context("setting uds write timeout")?;
+        Ok(())
+    }
+
+    fn peer(&self) -> String {
+        format!("uds:{}", self.path)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// address scheme + listener
+// ---------------------------------------------------------------------------
+
+enum Addr<'a> {
+    Tcp(&'a str),
+    Uds(&'a str),
+}
+
+fn parse_addr(addr: &str) -> Addr<'_> {
+    for prefix in ["uds://", "unix://", "uds:", "unix:"] {
+        if let Some(rest) = addr.strip_prefix(prefix) {
+            return Addr::Uds(rest);
+        }
+    }
+    Addr::Tcp(addr.strip_prefix("tcp://").unwrap_or(addr))
+}
+
+/// A bound accept socket for either transport. Dropping a UDS listener
+/// removes its socket file.
+pub enum NetListener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Uds(std::os::unix::net::UnixListener, String),
+}
+
+impl NetListener {
+    /// Bind `tcp://host:port` (port 0 picks a free port — read it back via
+    /// [`NetListener::local_addr`]) or `uds:/path/to.sock` (a stale socket
+    /// file at the path is removed first).
+    pub fn bind(addr: &str) -> Result<NetListener> {
+        match parse_addr(addr) {
+            Addr::Tcp(hostport) => {
+                let l = TcpListener::bind(hostport)
+                    .with_context(|| format!("binding tcp listener on {hostport}"))?;
+                Ok(NetListener::Tcp(l))
+            }
+            #[cfg(unix)]
+            Addr::Uds(path) => {
+                let _ = std::fs::remove_file(path);
+                let l = std::os::unix::net::UnixListener::bind(path)
+                    .with_context(|| format!("binding uds listener on {path}"))?;
+                Ok(NetListener::Uds(l, path.to_string()))
+            }
+            #[cfg(not(unix))]
+            Addr::Uds(path) => {
+                Err(anyhow!("unix-domain sockets unavailable on this platform: {path}"))
+            }
+        }
+    }
+
+    /// The bound address in connectable form (`tcp://ip:port` / `uds:path`).
+    pub fn local_addr(&self) -> Result<String> {
+        match self {
+            NetListener::Tcp(l) => Ok(format!("tcp://{}", l.local_addr()?)),
+            #[cfg(unix)]
+            NetListener::Uds(_, path) => Ok(format!("uds:{path}")),
+        }
+    }
+
+    /// Accept one connection.
+    pub fn accept(&self) -> Result<Box<dyn Transport>> {
+        match self {
+            NetListener::Tcp(l) => {
+                let (stream, _) = l.accept().context("tcp accept")?;
+                Ok(Box::new(TcpTransport::new(stream)))
+            }
+            #[cfg(unix)]
+            NetListener::Uds(l, path) => {
+                let (stream, _) = l.accept().context("uds accept")?;
+                Ok(Box::new(UdsTransport { stream, path: path.clone() }))
+            }
+        }
+    }
+}
+
+impl Drop for NetListener {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let NetListener::Uds(_, path) = self {
+            let _ = std::fs::remove_file(path.as_str());
+        }
+    }
+}
+
+/// Connect to a leader at `tcp://host:port` / `host:port` / `uds:path`.
+pub fn connect(addr: &str) -> Result<Box<dyn Transport>> {
+    match parse_addr(addr) {
+        Addr::Tcp(hostport) => {
+            let stream = TcpStream::connect(hostport)
+                .with_context(|| format!("connecting to tcp leader at {hostport}"))?;
+            Ok(Box::new(TcpTransport::new(stream)))
+        }
+        #[cfg(unix)]
+        Addr::Uds(path) => {
+            let stream = std::os::unix::net::UnixStream::connect(path)
+                .with_context(|| format!("connecting to uds leader at {path}"))?;
+            Ok(Box::new(UdsTransport { stream, path: path.to_string() }))
+        }
+        #[cfg(not(unix))]
+        Addr::Uds(path) => Err(anyhow!("unix-domain sockets unavailable on this platform: {path}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_pair_round_trips_messages() {
+        let (mut a, mut b) = ChannelTransport::pair();
+        let msg = Msg::Broadcast { iter: 3, x: vec![1.0, 2.0], subsets: vec![0, 1] };
+        let sent = a.send(&msg).unwrap();
+        let (got, read) = b.recv().unwrap();
+        assert_eq!(got, msg);
+        assert_eq!(sent, read);
+        // and the reverse direction
+        b.send(&Msg::Shutdown).unwrap();
+        assert_eq!(a.recv().unwrap().0, Msg::Shutdown);
+    }
+
+    #[test]
+    fn channel_split_enforces_directions() {
+        let (a, mut b) = ChannelTransport::pair();
+        let (mut tx, mut rx) = (Box::new(a) as Box<dyn Transport>).split().unwrap();
+        assert!(tx.recv().is_err());
+        assert!(rx.send(&Msg::Shutdown).is_err());
+        tx.send(&Msg::Shutdown).unwrap();
+        assert_eq!(b.recv().unwrap().0, Msg::Shutdown);
+        b.send(&Msg::Join { version: 1, device: 0, digest: 0 }).unwrap();
+        assert!(matches!(rx.recv().unwrap().0, Msg::Join { .. }));
+    }
+
+    #[test]
+    fn channel_disconnect_is_an_error() {
+        let (mut a, b) = ChannelTransport::pair();
+        drop(b);
+        assert!(a.send(&Msg::Shutdown).is_err());
+        assert!(a.recv().is_err());
+    }
+
+    #[test]
+    fn tcp_loopback_round_trip() {
+        let listener = NetListener::bind("tcp://127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut t = connect(&addr).unwrap();
+            t.send(&Msg::Join { version: 1, device: 5, digest: 9 }).unwrap();
+            t.recv().unwrap().0
+        });
+        let mut server = listener.accept().unwrap();
+        let (msg, _) = server.recv().unwrap();
+        assert_eq!(msg, Msg::Join { version: 1, device: 5, digest: 9 });
+        server.send(&Msg::Shutdown).unwrap();
+        assert_eq!(h.join().unwrap(), Msg::Shutdown);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn uds_loopback_round_trip() {
+        let path = std::env::temp_dir().join(format!("lad_uds_rt_{}.sock", std::process::id()));
+        let addr = format!("uds:{}", path.display());
+        let listener = NetListener::bind(&addr).unwrap();
+        let addr2 = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut t = connect(&addr2).unwrap();
+            t.send(&Msg::Shutdown).unwrap();
+        });
+        let mut server = listener.accept().unwrap();
+        assert_eq!(server.recv().unwrap().0, Msg::Shutdown);
+        h.join().unwrap();
+        drop(server);
+        drop(listener); // removes the socket file
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn addr_scheme_parses() {
+        assert!(matches!(parse_addr("tcp://1.2.3.4:5"), Addr::Tcp("1.2.3.4:5")));
+        assert!(matches!(parse_addr("1.2.3.4:5"), Addr::Tcp("1.2.3.4:5")));
+        assert!(matches!(parse_addr("uds:/tmp/x.sock"), Addr::Uds("/tmp/x.sock")));
+        assert!(matches!(parse_addr("uds:///tmp/x.sock"), Addr::Uds("/tmp/x.sock")));
+        assert!(matches!(parse_addr("unix:/tmp/x.sock"), Addr::Uds("/tmp/x.sock")));
+    }
+}

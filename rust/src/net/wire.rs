@@ -1,0 +1,870 @@
+//! Versioned little-endian binary codec for the leader–worker protocol.
+//!
+//! Every [`Msg`] encodes to one frame payload (see [`crate::net::frame`]).
+//! All integers are little-endian; floats are IEEE-754 bit patterns. The
+//! first byte of every payload is the message tag:
+//!
+//! | tag | message     | direction       | body                                     |
+//! |-----|-------------|-----------------|------------------------------------------|
+//! | 1   | `Join`      | worker → leader | version u8, device u32, config digest u64 |
+//! | 2   | `Hello`     | leader → worker | version u8, device u32, N u32, Q u32, byzantine u8, device_compression u8, comp_seed u64, digest u64, compression kind, dataset option |
+//! | 3   | `Broadcast` | leader → worker | iter u32, x (u32 len + f32s), subsets (u32 len + u32s) |
+//! | 4   | `Upload`    | worker → leader | iter u32, device u32, analytic_bits u64, payload |
+//! | 5   | `Shutdown`  | leader → worker | —                                        |
+//!
+//! [`Payload`] is the uplink body: the *variant-specific* encoding of a
+//! compressed message, chosen from [`crate::compress::WireEnc`] so the
+//! serialized size tracks the operator's analytic bit accounting instead of
+//! always paying dense f32 freight:
+//!
+//! | tag | payload     | body                                                   |
+//! |-----|-------------|--------------------------------------------------------|
+//! | 0   | `Dense`     | u32 len, len × f32 (Identity, and the exactness fallback) |
+//! | 1   | `Sparse`    | u32 dim, u32 nnz, nnz × (u32 index, f32 value) — rand-K / top-K |
+//! | 2   | `Quantized` | u32 dim, u32 levels, f32 ‖g‖, packed (1 sign bit + ⌈log₂(s+1)⌉ level bits) per coordinate — QSGD; empty when ‖g‖ = 0 |
+//!
+//! Decoding a payload reconstructs the compressor's dense output
+//! **bit-identically**: [`Payload::from_compressed`] verifies the exact
+//! f32 round trip at encode time and falls back to `Dense` on any
+//! mismatch, so the remote path can never diverge from the central
+//! trainer by a ulp. Decoders validate every length against the remaining
+//! buffer before allocating, and [`Msg::decode`] requires the payload to
+//! be fully consumed — trailing bytes are a protocol error, not slack.
+
+use crate::compress::{CompressedMsg, WireEnc};
+use crate::config::{CompressionKind, TrainConfig};
+use crate::data::linreg::LinRegDataset;
+use crate::util::math::Mat;
+use crate::Result;
+use anyhow::{bail, ensure};
+
+/// Protocol version; bumped on any wire-format change. A `Join`/`Hello`
+/// version mismatch aborts the handshake.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Cap on any payload's claimed reconstruction dimension — the largest
+/// vector a dense frame could carry (`frame::MAX_PAYLOAD` / 4 bytes per
+/// f32). Sparse and quantized payloads state `dim` explicitly, so without
+/// this bound a tiny hostile frame could claim a multi-GiB reconstruction
+/// and OOM the decoder's `to_dense`.
+pub const MAX_WIRE_DIM: usize = super::frame::MAX_PAYLOAD / 4;
+
+// ---------------------------------------------------------------------------
+// byte-level writer / reader
+// ---------------------------------------------------------------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn with_capacity(cap: usize) -> Self {
+        Writer { buf: Vec::with_capacity(cap) }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+    /// u32 length prefix + raw f32s.
+    fn f32_slice(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+    fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let left = self.remaining();
+        ensure!(left >= n, "wire: short read ({left} of {n} bytes left)");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    /// A length prefix for `elem_size`-byte elements, validated against the
+    /// remaining buffer so a corrupt count cannot drive a huge allocation.
+    fn len_prefix(&mut self, elem_size: usize) -> Result<usize> {
+        let len = self.u32()? as usize;
+        ensure!(
+            len.checked_mul(elem_size).is_some_and(|b| b <= self.remaining()),
+            "wire: length {len} x {elem_size}B exceeds {} remaining bytes",
+            self.remaining()
+        );
+        Ok(len)
+    }
+    fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let len = self.len_prefix(4)?;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+    fn u32_vec(&mut self) -> Result<Vec<u32>> {
+        let len = self.len_prefix(4)?;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+    fn done(self) -> Result<()> {
+        ensure!(self.remaining() == 0, "wire: {} trailing bytes after message", self.remaining());
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bit packing for the quantized payload
+// ---------------------------------------------------------------------------
+
+fn put_bits(buf: &mut [u8], pos: &mut usize, value: u32, nbits: usize) {
+    for b in 0..nbits {
+        if (value >> b) & 1 == 1 {
+            buf[(*pos + b) / 8] |= 1 << ((*pos + b) % 8);
+        }
+    }
+    *pos += nbits;
+}
+
+fn get_bits(buf: &[u8], pos: &mut usize, nbits: usize) -> u32 {
+    let mut v = 0u32;
+    for b in 0..nbits {
+        let bit = (buf[(*pos + b) / 8] >> ((*pos + b) % 8)) & 1;
+        v |= (bit as u32) << b;
+    }
+    *pos += nbits;
+    v
+}
+
+/// ⌈log₂(levels + 1)⌉ — bits needed for one QSGD level index (the same
+/// figure the operator's analytic bit accounting charges).
+fn level_bits(levels: u32) -> usize {
+    (32 - levels.leading_zeros()) as usize
+}
+
+fn pack_quantized(values: &[f32], levels: u32, norm: f32) -> Option<Vec<u8>> {
+    if norm == 0.0 {
+        // a zero-norm message decodes to all-zeros from the header alone;
+        // shipping per-coordinate bits would overshoot the operator's
+        // 32 + q analytic accounting for the degenerate case
+        return Some(Vec::new());
+    }
+    let s = levels as f32;
+    let lb = level_bits(levels);
+    let total_bits = values.len() * (1 + lb);
+    let mut buf = vec![0u8; total_bits.div_ceil(8)];
+    let mut pos = 0usize;
+    for &v in values {
+        // v was produced as sign · level · ‖g‖ / s in f32 (norm > 0 here —
+        // the zero-norm case returned above); the inverse rounds to the
+        // exact integer whenever levels is sane, and the caller verifies
+        // the round trip bitwise, falling back to Dense otherwise
+        let a = (v.abs() * s / norm).round();
+        if !a.is_finite() || a < 0.0 || a > s {
+            return None;
+        }
+        let level = a as u32;
+        put_bits(&mut buf, &mut pos, u32::from(v.is_sign_negative()), 1);
+        put_bits(&mut buf, &mut pos, level, lb);
+    }
+    Some(buf)
+}
+
+fn unpack_quantized(dim: usize, levels: u32, norm: f32, packed: &[u8]) -> Vec<f32> {
+    let s = levels as f32;
+    let lb = level_bits(levels);
+    let mut pos = 0usize;
+    let mut out = Vec::with_capacity(dim);
+    for _ in 0..dim {
+        let sign = get_bits(packed, &mut pos, 1) == 1;
+        let level = get_bits(packed, &mut pos, lb);
+        let sign_f: f32 = if sign { -1.0 } else { 1.0 };
+        // same expression (and evaluation order) as Qsgd::compress, so the
+        // reconstruction is bit-identical to the sender's dense output
+        out.push(sign_f * level as f32 * norm / s);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// payload
+// ---------------------------------------------------------------------------
+
+/// Wire body of one uplink message — the encoded form of a compressor's
+/// output (see the module table for the byte layout of each variant).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    Dense { values: Vec<f32> },
+    Sparse { dim: u32, idx: Vec<u32>, values: Vec<f32> },
+    Quantized { dim: u32, levels: u32, norm: f32, packed: Vec<u8> },
+}
+
+impl Payload {
+    /// Encode a compressed message per its operator's [`WireEnc`]. The
+    /// compact encodings are verified to reconstruct the dense vector
+    /// bit-for-bit; any mismatch (degenerate norms, absurd level counts)
+    /// falls back to `Dense`, trading bytes for guaranteed exactness.
+    pub fn from_compressed(msg: &CompressedMsg) -> Payload {
+        match msg.enc {
+            WireEnc::Dense => Payload::Dense { values: msg.vec.clone() },
+            WireEnc::Sparse => {
+                // keep every entry with a nonzero bit pattern (including
+                // -0.0), so the scatter reconstruction is exact by
+                // construction
+                let mut idx = Vec::new();
+                let mut values = Vec::new();
+                for (j, &v) in msg.vec.iter().enumerate() {
+                    if v.to_bits() != 0 {
+                        idx.push(j as u32);
+                        values.push(v);
+                    }
+                }
+                Payload::Sparse { dim: msg.vec.len() as u32, idx, values }
+            }
+            WireEnc::Quantized { levels, norm } => {
+                if let Some(packed) = pack_quantized(&msg.vec, levels, norm) {
+                    let cand = Payload::Quantized {
+                        dim: msg.vec.len() as u32,
+                        levels,
+                        norm,
+                        packed,
+                    };
+                    if let Ok(back) = cand.to_dense() {
+                        let exact = back.len() == msg.vec.len()
+                            && back
+                                .iter()
+                                .zip(&msg.vec)
+                                .all(|(a, b)| a.to_bits() == b.to_bits());
+                        if exact {
+                            return cand;
+                        }
+                    }
+                }
+                Payload::Dense { values: msg.vec.clone() }
+            }
+        }
+    }
+
+    /// Reconstruct the dense vector the sender's compressor produced.
+    pub fn to_dense(&self) -> Result<Vec<f32>> {
+        match self {
+            Payload::Dense { values } => Ok(values.clone()),
+            Payload::Sparse { dim, idx, values } => {
+                ensure!(idx.len() == values.len(), "sparse payload index/value mismatch");
+                let dim = *dim as usize;
+                let mut out = vec![0.0f32; dim];
+                for (&j, &v) in idx.iter().zip(values) {
+                    ensure!((j as usize) < dim, "sparse index {j} out of range {dim}");
+                    out[j as usize] = v;
+                }
+                Ok(out)
+            }
+            Payload::Quantized { dim, levels, norm, packed } => {
+                ensure!(*levels >= 1, "quantized payload with zero levels");
+                let dim = *dim as usize;
+                if *norm == 0.0 {
+                    ensure!(packed.is_empty(), "zero-norm quantized payload carries data");
+                    return Ok(vec![0.0f32; dim]);
+                }
+                let need = (dim * (1 + level_bits(*levels))).div_ceil(8);
+                ensure!(
+                    packed.len() == need,
+                    "quantized payload: {} bytes, need {need}",
+                    packed.len()
+                );
+                Ok(unpack_quantized(dim, *levels, *norm, packed))
+            }
+        }
+    }
+
+    /// Exact serialized size of this payload in bytes (tag + body) — the
+    /// per-variant wire-cost accessor the byte accounting is built on.
+    pub fn encoded_len(&self) -> usize {
+        match self {
+            Payload::Dense { values } => 1 + 4 + 4 * values.len(),
+            Payload::Sparse { idx, .. } => 1 + 4 + 4 + 8 * idx.len(),
+            Payload::Quantized { packed, .. } => 1 + 4 + 4 + 4 + packed.len(),
+        }
+    }
+
+    /// The reconstructed dimension.
+    pub fn dim(&self) -> usize {
+        match self {
+            Payload::Dense { values } => values.len(),
+            Payload::Sparse { dim, .. } | Payload::Quantized { dim, .. } => *dim as usize,
+        }
+    }
+
+    fn encode_into(&self, w: &mut Writer) {
+        match self {
+            Payload::Dense { values } => {
+                w.u8(0);
+                w.f32_slice(values);
+            }
+            Payload::Sparse { dim, idx, values } => {
+                w.u8(1);
+                w.u32(*dim);
+                w.u32(idx.len() as u32);
+                for (&j, &v) in idx.iter().zip(values) {
+                    w.u32(j);
+                    w.f32(v);
+                }
+            }
+            Payload::Quantized { dim, levels, norm, packed } => {
+                w.u8(2);
+                w.u32(*dim);
+                w.u32(*levels);
+                w.f32(*norm);
+                w.bytes(packed);
+            }
+        }
+    }
+
+    fn decode(r: &mut Reader) -> Result<Payload> {
+        match r.u8()? {
+            0 => Ok(Payload::Dense { values: r.f32_vec()? }),
+            1 => {
+                let dim = r.u32()?;
+                ensure!(dim as usize <= MAX_WIRE_DIM, "sparse payload: implausible dim {dim}");
+                let nnz = r.len_prefix(8)?;
+                ensure!(nnz <= dim as usize, "sparse payload: nnz {nnz} > dim {dim}");
+                let mut idx = Vec::with_capacity(nnz);
+                let mut values = Vec::with_capacity(nnz);
+                for _ in 0..nnz {
+                    idx.push(r.u32()?);
+                    values.push(r.f32()?);
+                }
+                Ok(Payload::Sparse { dim, idx, values })
+            }
+            2 => {
+                let dim = r.u32()?;
+                ensure!(dim as usize <= MAX_WIRE_DIM, "quantized payload: implausible dim {dim}");
+                let levels = r.u32()?;
+                ensure!(levels >= 1, "quantized payload with zero levels");
+                let norm = r.f32()?;
+                let need = if norm == 0.0 {
+                    0 // zero-norm messages carry no per-coordinate bits
+                } else {
+                    let bytes = (dim as usize)
+                        .checked_mul(1 + level_bits(levels))
+                        .map(|b| b.div_ceil(8));
+                    match bytes {
+                        Some(n) if n <= r.remaining() => n,
+                        _ => bail!("quantized payload: implausible dim {dim}"),
+                    }
+                };
+                Ok(Payload::Quantized { dim, levels, norm, packed: r.take(need)?.to_vec() })
+            }
+            tag => bail!("unknown payload tag {tag}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dataset block
+// ---------------------------------------------------------------------------
+
+/// The §VII linear-regression workload, shipped to workers in `Hello` so a
+/// remote process needs no local data file (tiny at experiment scale; for
+/// real deployments workers would load shards locally and pass
+/// `local_ds` to `run_worker` instead).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetBlock {
+    pub n: u32,
+    pub q: u32,
+    pub sigma_h: f64,
+    pub z: Vec<f32>,
+    pub y: Vec<f32>,
+}
+
+impl DatasetBlock {
+    pub fn from_dataset(ds: &LinRegDataset) -> Self {
+        DatasetBlock {
+            n: ds.n() as u32,
+            q: ds.dim() as u32,
+            sigma_h: ds.sigma_h,
+            z: ds.z.data.clone(),
+            y: ds.y.clone(),
+        }
+    }
+
+    pub fn into_dataset(self) -> Result<LinRegDataset> {
+        let (n, q) = (self.n as usize, self.q as usize);
+        ensure!(
+            self.z.len() == n * q,
+            "dataset block: z has {} entries, want {}",
+            self.z.len(),
+            n * q
+        );
+        ensure!(self.y.len() == n, "dataset block: y has {} entries, want {n}", self.y.len());
+        Ok(LinRegDataset {
+            z: Mat { rows: n, cols: q, data: self.z },
+            y: self.y,
+            sigma_h: self.sigma_h,
+        })
+    }
+
+    fn encode_into(&self, w: &mut Writer) {
+        w.u32(self.n);
+        w.u32(self.q);
+        w.f64(self.sigma_h);
+        for &v in &self.z {
+            w.f32(v);
+        }
+        for &v in &self.y {
+            w.f32(v);
+        }
+    }
+
+    fn decode(r: &mut Reader) -> Result<DatasetBlock> {
+        let n = r.u32()?;
+        let q = r.u32()?;
+        let sigma_h = r.f64()?;
+        let cells = (n as usize)
+            .checked_mul(q as usize)
+            .and_then(|c| c.checked_add(n as usize))
+            .and_then(|c| c.checked_mul(4));
+        match cells {
+            Some(bytes) if bytes <= r.remaining() => {}
+            _ => bail!("dataset block: implausible shape {n}x{q}"),
+        }
+        let mut z = Vec::with_capacity(n as usize * q as usize);
+        for _ in 0..n as usize * q as usize {
+            z.push(r.f32()?);
+        }
+        let mut y = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            y.push(r.f32()?);
+        }
+        Ok(DatasetBlock { n, q, sigma_h, z, y })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// messages
+// ---------------------------------------------------------------------------
+
+fn encode_compression(kind: CompressionKind, w: &mut Writer) {
+    match kind {
+        CompressionKind::None => {
+            w.u8(0);
+            w.u32(0);
+        }
+        CompressionKind::RandK { k } => {
+            w.u8(1);
+            w.u32(k as u32);
+        }
+        CompressionKind::TopK { k } => {
+            w.u8(2);
+            w.u32(k as u32);
+        }
+        CompressionKind::Qsgd { levels } => {
+            w.u8(3);
+            w.u32(levels);
+        }
+    }
+}
+
+fn decode_compression(r: &mut Reader) -> Result<CompressionKind> {
+    let tag = r.u8()?;
+    let param = r.u32()?;
+    Ok(match tag {
+        0 => CompressionKind::None,
+        1 => CompressionKind::RandK { k: param as usize },
+        2 => CompressionKind::TopK { k: param as usize },
+        3 => CompressionKind::Qsgd { levels: param },
+        other => bail!("unknown compression tag {other}"),
+    })
+}
+
+/// One protocol message (see the module-level wire-format table).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Worker → leader, first message after connect. `digest` is the
+    /// worker's local config digest, or 0 when it has no local config and
+    /// will trust `Hello`.
+    Join { version: u8, device: u32, digest: u64 },
+    /// Leader → worker handshake reply: identity, run shape, the device's
+    /// private compression stream seed, and (optionally) the dataset.
+    Hello {
+        version: u8,
+        device: u32,
+        n_devices: u32,
+        dim: u32,
+        /// This device plays the Byzantine role in the simulation (it
+        /// uploads its true vector densely; the leader crafts its lie).
+        byzantine: bool,
+        /// Honest devices compress their own uplink (Com-LAD device-side)
+        /// instead of shipping dense vectors for leader-side compression.
+        device_compression: bool,
+        comp_seed: u64,
+        digest: u64,
+        compression: CompressionKind,
+        dataset: Option<DatasetBlock>,
+    },
+    /// Leader → worker, one per iteration: the iterate and the device's
+    /// already-resolved subset list (the leader applies the cyclic task
+    /// row and the slot permutation p^t before sending).
+    Broadcast { iter: u32, x: Vec<f32>, subsets: Vec<u32> },
+    /// Worker → leader: the coded (optionally compressed) uplink.
+    /// `analytic_bits` is the operator's exact bit accounting for this
+    /// message (0 when the payload is an uncompressed true vector).
+    Upload { iter: u32, device: u32, analytic_bits: u64, payload: Payload },
+    /// Leader → worker: end of run.
+    Shutdown,
+}
+
+impl Msg {
+    /// Serialize to one frame payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(64);
+        match self {
+            Msg::Join { version, device, digest } => {
+                w.u8(1);
+                w.u8(*version);
+                w.u32(*device);
+                w.u64(*digest);
+            }
+            Msg::Hello {
+                version,
+                device,
+                n_devices,
+                dim,
+                byzantine,
+                device_compression,
+                comp_seed,
+                digest,
+                compression,
+                dataset,
+            } => {
+                w.u8(2);
+                w.u8(*version);
+                w.u32(*device);
+                w.u32(*n_devices);
+                w.u32(*dim);
+                w.u8(u8::from(*byzantine));
+                w.u8(u8::from(*device_compression));
+                w.u64(*comp_seed);
+                w.u64(*digest);
+                encode_compression(*compression, &mut w);
+                match dataset {
+                    None => w.u8(0),
+                    Some(block) => {
+                        w.u8(1);
+                        block.encode_into(&mut w);
+                    }
+                }
+            }
+            Msg::Broadcast { iter, x, subsets } => {
+                w.u8(3);
+                w.u32(*iter);
+                w.f32_slice(x);
+                w.u32(subsets.len() as u32);
+                for &s in subsets {
+                    w.u32(s);
+                }
+            }
+            Msg::Upload { iter, device, analytic_bits, payload } => {
+                w.u8(4);
+                w.u32(*iter);
+                w.u32(*device);
+                w.u64(*analytic_bits);
+                payload.encode_into(&mut w);
+            }
+            Msg::Shutdown => w.u8(5),
+        }
+        w.finish()
+    }
+
+    /// Parse one frame payload; the whole buffer must be consumed.
+    pub fn decode(buf: &[u8]) -> Result<Msg> {
+        let mut r = Reader::new(buf);
+        let msg = match r.u8()? {
+            1 => Msg::Join { version: r.u8()?, device: r.u32()?, digest: r.u64()? },
+            2 => {
+                let version = r.u8()?;
+                let device = r.u32()?;
+                let n_devices = r.u32()?;
+                let dim = r.u32()?;
+                let byzantine = r.u8()? != 0;
+                let device_compression = r.u8()? != 0;
+                let comp_seed = r.u64()?;
+                let digest = r.u64()?;
+                let compression = decode_compression(&mut r)?;
+                let dataset = match r.u8()? {
+                    0 => None,
+                    1 => Some(DatasetBlock::decode(&mut r)?),
+                    other => bail!("bad dataset-presence byte {other}"),
+                };
+                Msg::Hello {
+                    version,
+                    device,
+                    n_devices,
+                    dim,
+                    byzantine,
+                    device_compression,
+                    comp_seed,
+                    digest,
+                    compression,
+                    dataset,
+                }
+            }
+            3 => Msg::Broadcast { iter: r.u32()?, x: r.f32_vec()?, subsets: r.u32_vec()? },
+            4 => Msg::Upload {
+                iter: r.u32()?,
+                device: r.u32()?,
+                analytic_bits: r.u64()?,
+                payload: Payload::decode(&mut r)?,
+            },
+            5 => Msg::Shutdown,
+            tag => bail!("unknown message tag {tag}"),
+        };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// config digest
+// ---------------------------------------------------------------------------
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01B3);
+    }
+    h
+}
+
+/// FNV-1a digest of the semantic run configuration (and the wire version),
+/// exchanged during the handshake so a leader and a worker launched with
+/// diverging configs fail fast instead of training different problems.
+/// Execution-local knobs (`threads`, the `[net]` table) are excluded — two
+/// nodes may legitimately differ there.
+pub fn config_digest(cfg: &TrainConfig) -> u64 {
+    let canon = format!(
+        "v{}|n{}|h{}|d{}|q{}|t{}|lr{:016x}|sh{:016x}|tf{:016x}|agg:{}|nnm{}|atk:{:?}|comp:{:?}|orc:{:?}|seed{:016x}|log{}",
+        WIRE_VERSION,
+        cfg.n_devices,
+        cfg.n_honest,
+        cfg.d,
+        cfg.dim,
+        cfg.iters,
+        cfg.lr.to_bits(),
+        cfg.sigma_h.to_bits(),
+        cfg.trim_frac.to_bits(),
+        cfg.aggregator.name(),
+        cfg.nnm,
+        cfg.attack,
+        cfg.compression,
+        cfg.oracle,
+        cfg.seed,
+        cfg.log_every,
+    );
+    fnv1a64(canon.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, Identity, Qsgd, RandK, TopK};
+    use crate::util::rng::Rng;
+
+    fn round_trip(msg: &Msg) -> Msg {
+        Msg::decode(&msg.encode()).unwrap()
+    }
+
+    #[test]
+    fn join_and_shutdown_round_trip() {
+        let j = Msg::Join { version: WIRE_VERSION, device: 17, digest: 0xDEAD_BEEF_0BAD_F00D };
+        assert_eq!(round_trip(&j), j);
+        assert_eq!(round_trip(&Msg::Shutdown), Msg::Shutdown);
+    }
+
+    #[test]
+    fn hello_round_trip_with_and_without_dataset() {
+        let mut rng = Rng::new(3);
+        let ds = LinRegDataset::generate(5, 4, 0.3, &mut rng);
+        for dataset in [None, Some(DatasetBlock::from_dataset(&ds))] {
+            let h = Msg::Hello {
+                version: WIRE_VERSION,
+                device: 3,
+                n_devices: 5,
+                dim: 4,
+                byzantine: true,
+                device_compression: true,
+                comp_seed: 42,
+                digest: 7,
+                compression: CompressionKind::Qsgd { levels: 16 },
+                dataset,
+            };
+            assert_eq!(round_trip(&h), h);
+        }
+    }
+
+    #[test]
+    fn dataset_block_reconstructs_exactly() {
+        let mut rng = Rng::new(9);
+        let ds = LinRegDataset::generate(7, 6, 0.5, &mut rng);
+        let back = DatasetBlock::from_dataset(&ds).into_dataset().unwrap();
+        assert_eq!(back.z.data, ds.z.data);
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.sigma_h, ds.sigma_h);
+    }
+
+    #[test]
+    fn broadcast_and_upload_round_trip() {
+        let b = Msg::Broadcast { iter: 12, x: vec![1.5, -2.25, 0.0], subsets: vec![4, 0, 2] };
+        assert_eq!(round_trip(&b), b);
+        let u = Msg::Upload {
+            iter: 12,
+            device: 2,
+            analytic_bits: 999,
+            payload: Payload::Sparse { dim: 6, idx: vec![1, 4], values: vec![2.0, -3.0] },
+        };
+        assert_eq!(round_trip(&u), u);
+    }
+
+    #[test]
+    fn payload_encodings_reconstruct_bit_identically() {
+        let mut rng = Rng::new(11);
+        let g: Vec<f32> = (0..64).map(|i| ((i as f32) * 0.37).sin() * 5.0).collect();
+        let comps: Vec<Box<dyn Compressor>> = vec![
+            Box::new(Identity),
+            Box::new(RandK::new(9)),
+            Box::new(TopK::new(9)),
+            Box::new(Qsgd::new(16)),
+        ];
+        for comp in &comps {
+            let c = comp.compress(&g, &mut rng);
+            let p = Payload::from_compressed(&c);
+            let back = p.to_dense().unwrap();
+            assert_eq!(back.len(), c.vec.len(), "{}", comp.name());
+            for (a, b) in back.iter().zip(&c.vec) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", comp.name());
+            }
+        }
+    }
+
+    #[test]
+    fn compact_payloads_are_actually_compact() {
+        let mut rng = Rng::new(12);
+        let g: Vec<f32> = (0..256).map(|i| (i as f32) * 0.01 - 1.0).collect();
+        let dense = Identity.compress(&g, &mut rng);
+        let dense_p = Payload::from_compressed(&dense);
+        let sparse = RandK::new(16).compress(&g, &mut rng);
+        let sparse_p = Payload::from_compressed(&sparse);
+        let quant = Qsgd::new(8).compress(&g, &mut rng);
+        let quant_p = Payload::from_compressed(&quant);
+        let (d, s, q) = (dense_p.encoded_len(), sparse_p.encoded_len(), quant_p.encoded_len());
+        assert!(s < d, "sparse {s} !< dense {d}");
+        assert!(q < d, "quantized {q} !< dense {d}");
+        // encoded_len is exact, not an estimate
+        for p in [&dense_p, &sparse_p, &quant_p] {
+            let mut w = Writer::with_capacity(0);
+            p.encode_into(&mut w);
+            assert_eq!(w.finish().len(), p.encoded_len());
+        }
+    }
+
+    #[test]
+    fn zero_norm_qsgd_payload_round_trips() {
+        let mut rng = Rng::new(13);
+        let c = Qsgd::new(4).compress(&[0.0f32; 10], &mut rng);
+        let p = Payload::from_compressed(&c);
+        assert!(matches!(p, Payload::Quantized { .. }));
+        assert_eq!(p.to_dense().unwrap(), vec![0.0f32; 10]);
+        // degenerate messages carry no per-coordinate bits on the wire
+        assert_eq!(p.encoded_len(), 13, "header only");
+        let msg = Msg::Upload { iter: 0, device: 0, analytic_bits: c.bits as u64, payload: p };
+        assert_eq!(Msg::decode(&msg.encode()).unwrap(), msg);
+    }
+
+    #[test]
+    fn corrupt_payload_lengths_are_rejected() {
+        // sparse with nnz > dim
+        let mut w = Writer::with_capacity(16);
+        w.u8(4); // Upload
+        w.u32(0);
+        w.u32(0);
+        w.u64(0);
+        w.u8(1); // Sparse
+        w.u32(2); // dim
+        w.u32(3); // nnz > dim
+        for _ in 0..3 {
+            w.u32(0);
+            w.f32(0.0);
+        }
+        assert!(Msg::decode(&w.finish()).is_err());
+        // truncated broadcast
+        let b = Msg::Broadcast { iter: 0, x: vec![1.0; 8], subsets: vec![1, 2] };
+        let enc = b.encode();
+        assert!(Msg::decode(&enc[..enc.len() - 3]).is_err());
+        // trailing garbage
+        let mut enc2 = b.encode();
+        enc2.push(0xFF);
+        assert!(Msg::decode(&enc2).is_err());
+    }
+
+    #[test]
+    fn digest_tracks_semantic_fields_only() {
+        let a = TrainConfig::default();
+        let mut b = a.clone();
+        assert_eq!(config_digest(&a), config_digest(&b));
+        b.threads = 32; // execution-local: digest unchanged
+        assert_eq!(config_digest(&a), config_digest(&b));
+        b.d = a.d + 1; // semantic: digest changes
+        assert_ne!(config_digest(&a), config_digest(&b));
+        let mut c = a.clone();
+        c.seed ^= 1;
+        assert_ne!(config_digest(&a), config_digest(&c));
+    }
+}

@@ -1,0 +1,152 @@
+//! The device-side event loop (Fig. 1, right-hand side).
+//!
+//! A worker joins the leader, handshakes (`Join` → `Hello`, with a config
+//! digest cross-check), then serves broadcasts until `Shutdown`: for every
+//! `Broadcast {x, subsets}` it computes its coded vector (eq. 5 — the mean
+//! of its assigned subset gradients) and uploads it. Honest devices under
+//! device-side compression (Com-LAD) compress with their private pre-split
+//! RNG stream (`Hello.comp_seed`) before uploading, so the bytes on the
+//! wire ARE the compressed message; devices playing the Byzantine role
+//! upload their true vector densely and the leader crafts their lie
+//! centrally (the omniscient-adversary emulation cannot live on a real
+//! device).
+//!
+//! The same function serves every transport: the in-process cluster
+//! simulation passes a borrowed dataset (no copy per worker), while the
+//! `lad node-worker` CLI decodes the dataset from `Hello`.
+
+use super::transport::Transport;
+use super::wire::{Msg, Payload, WIRE_VERSION};
+use crate::compress;
+use crate::data::linreg::LinRegDataset;
+use crate::util::math::{axpy, scale};
+use crate::util::rng::Rng;
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+
+/// What a worker did over its lifetime (printed by `lad node-worker`).
+#[derive(Debug, Clone)]
+pub struct WorkerReport {
+    pub device: usize,
+    /// Iterations served (broadcasts answered with an upload).
+    pub iters: usize,
+    /// Uplink bytes written (frames included).
+    pub up_bytes: u64,
+    /// Downlink bytes read (frames included).
+    pub down_bytes: u64,
+}
+
+/// Run one device until the leader shuts the run down.
+///
+/// * `local_ds`: the dataset, when this process already holds it (the
+///   in-process cluster borrows the leader's copy — no per-worker clone).
+///   When `None`, the dataset must arrive in `Hello`.
+/// * `local_digest`: digest of a locally loaded config (`--config`),
+///   verified against the leader's; `None` trusts the leader.
+pub fn run_worker(
+    mut link: Box<dyn Transport>,
+    device: usize,
+    local_ds: Option<&LinRegDataset>,
+    local_digest: Option<u64>,
+) -> Result<WorkerReport> {
+    let mut up = 0u64;
+    let mut down = 0u64;
+    up += link.send(&Msg::Join {
+        version: WIRE_VERSION,
+        device: device as u32,
+        digest: local_digest.unwrap_or(0),
+    })?;
+
+    let (hello, n) = link.recv().context("waiting for leader hello")?;
+    down += n;
+    let Msg::Hello {
+        version,
+        device: dev,
+        n_devices: _,
+        dim,
+        byzantine,
+        device_compression,
+        comp_seed,
+        digest,
+        compression,
+        dataset,
+    } = hello
+    else {
+        bail!("expected hello from leader (protocol error)");
+    };
+    ensure!(
+        version == WIRE_VERSION,
+        "protocol version mismatch: leader {version}, us {WIRE_VERSION}"
+    );
+    ensure!(dev as usize == device, "leader assigned device {dev}, we are {device}");
+    if let Some(local) = local_digest {
+        ensure!(
+            local == digest,
+            "config digest mismatch: leader {digest:#018x}, local {local:#018x}"
+        );
+    }
+    let owned: Option<LinRegDataset> = match (local_ds, dataset) {
+        (Some(_), _) => None,
+        (None, Some(block)) => Some(block.into_dataset().context("decoding dataset block")?),
+        (None, None) => bail!("leader sent no dataset and none was provided locally"),
+    };
+    let ds: &LinRegDataset = match local_ds {
+        Some(d) => d,
+        None => owned.as_ref().unwrap(),
+    };
+    ensure!(ds.dim() == dim as usize, "dataset dim {} != leader dim {dim}", ds.dim());
+
+    // reject degenerate operator params with an error, not a constructor
+    // panic, since they arrive over the wire
+    match compression {
+        crate::config::CompressionKind::RandK { k }
+        | crate::config::CompressionKind::TopK { k } => {
+            ensure!(k >= 1, "hello carries a degenerate sparsifier (k = 0)");
+        }
+        crate::config::CompressionKind::Qsgd { levels } => {
+            ensure!(levels >= 1, "hello carries a degenerate quantizer (0 levels)");
+        }
+        crate::config::CompressionKind::None => {}
+    }
+    let comp = compress::from_kind(compression);
+    let mut comp_rng = Rng::new(comp_seed);
+    let compress_uplink = device_compression && !byzantine;
+    let mut iters = 0usize;
+
+    loop {
+        let (msg, n) = link.recv().context("connection to leader lost")?;
+        down += n;
+        match msg {
+            Msg::Broadcast { iter, x, subsets } => {
+                ensure!(!subsets.is_empty(), "broadcast with no subsets");
+                ensure!(x.len() == ds.dim(), "broadcast x has dim {}", x.len());
+                // coded vector: mean of the assigned subset gradients —
+                // identical arithmetic (axpy then scale) to the central
+                // oracle, so traces stay bit-identical
+                let mut coded = vec![0.0f32; ds.dim()];
+                for &k in &subsets {
+                    ensure!((k as usize) < ds.n(), "subset index {k} out of range {}", ds.n());
+                    let g = ds.subset_grad(k as usize, &x);
+                    axpy(1.0, &g, &mut coded);
+                }
+                scale(&mut coded, 1.0 / subsets.len() as f32);
+                let (payload, analytic_bits) = if compress_uplink {
+                    let c = comp.compress(&coded, &mut comp_rng);
+                    (Payload::from_compressed(&c), c.bits as u64)
+                } else {
+                    (Payload::Dense { values: coded }, 0)
+                };
+                up += link.send(&Msg::Upload {
+                    iter,
+                    device: device as u32,
+                    analytic_bits,
+                    payload,
+                })?;
+                iters += 1;
+            }
+            Msg::Shutdown => break,
+            other => bail!("unexpected message from leader: {other:?}"),
+        }
+    }
+    Ok(WorkerReport { device, iters, up_bytes: up, down_bytes: down })
+}

@@ -2,37 +2,40 @@
 //!
 //! The fast trainer computes all device messages centrally (bit-identical,
 //! see DESIGN.md); this module runs the *actual distributed topology*: one
-//! worker thread per device, the leader broadcasting (x^t, task row,
-//! permutation) over channels and collecting messages, exactly as Fig. 1 of
-//! the paper. Used by `examples/cluster_demo` and `rust/tests/cluster_tests`
-//! to verify that the central fast path and the message-passing path
-//! produce identical traces.
+//! worker thread per device and a leader exchanging the real wire protocol
+//! (`net::wire` messages in CRC32 frames) over in-process channel
+//! transports — the same [`crate::net::Leader`] / [`crate::net::run_worker`]
+//! event loops that serve TCP and Unix-domain sockets in `lad node-leader`
+//! / `lad node-worker`. Used by `examples/cluster_demo` and
+//! `rust/tests/cluster_tests` to verify that the central fast path and the
+//! message-passing path produce identical traces.
+//!
+//! Workers borrow the caller's dataset directly (scoped threads), so a
+//! multi-variant sweep no longer clones the dataset per `run_cluster`
+//! call the way the old `Arc::new(ds.clone())` plumbing did.
 
 use crate::aggregation::Aggregator;
-use crate::attack::{Attack, AttackContext};
-use crate::coding::{Assignment, TaskMatrix};
-use crate::compress::{compress_batch, Compressor};
+use crate::attack::Attack;
+use crate::compress::Compressor;
 use crate::config::TrainConfig;
 use crate::data::linreg::LinRegDataset;
+use crate::net::transport::{ChannelTransport, Transport};
+use crate::net::worker::run_worker;
+use crate::net::{Leader, LeaderOpts};
 use crate::server::metrics::TrainTrace;
-use crate::util::math::norm;
 use crate::util::parallel::Pool;
 use crate::util::rng::Rng;
-use crate::util::timer::Timer;
 use crate::Result;
-use std::sync::mpsc;
-use std::sync::Arc;
 
-/// Message from leader to a worker: the broadcast of iteration t.
-struct Broadcast {
-    x: Arc<Vec<f32>>,
-    /// subsets this worker must compute (already T/p-resolved)
-    subsets: Vec<usize>,
-}
-
-/// Run Algorithm 1/2 over real threads + channels. Honest workers compute
-/// their own coded vector from the shared dataset; Byzantine crafting and
-/// compression happen device-side, aggregation happens on the leader.
+/// Run Algorithm 1/2 over real threads + the wire protocol. Honest workers
+/// compute their own coded vector from the shared dataset; Byzantine
+/// crafting and compression happen on the leader (the historical
+/// leader-side compression mode, trace-identical to `Trainer::run`).
+///
+/// Builds a private pool from `cfg.threads`; prefer [`run_cluster_in`]
+/// when the caller already owns a (budgeted) pool, so the cluster
+/// simulation respects a process-level thread budget instead of
+/// multiplying workers per call.
 pub fn run_cluster(
     cfg: &TrainConfig,
     ds: &LinRegDataset,
@@ -43,98 +46,50 @@ pub fn run_cluster(
     label: &str,
     rng: &mut Rng,
 ) -> Result<TrainTrace> {
-    cfg.validate()?;
-    let timer = Timer::start();
-    let n = cfg.n_devices;
-    let ds = Arc::new(ds.clone());
-    // Leader-side persistent pool for the compression step (the per-device
-    // compute runs on the dedicated worker threads below).
-    let pool = Pool::new(cfg.threads);
-    // Same pre-split per-device compression streams as Trainer::run — the
-    // cluster path must consume RNG identically to stay trace-identical
-    // with the central fast path (cluster_tests.rs pins this).
-    let mut comp_rngs = rng.split(n);
-    let mut trace = TrainTrace::new(label);
-    let s_hat = TaskMatrix::cyclic(n, cfg.d);
-    let mut bits_total: u64 = 0;
+    run_cluster_in(cfg, ds, agg, attack, comp, x0, label, rng, &Pool::new(cfg.threads))
+}
 
-    std::thread::scope(|scope| -> Result<()> {
-        // per-worker channels
-        let mut to_workers = Vec::with_capacity(n);
-        let (result_tx, result_rx) = mpsc::channel::<(usize, Vec<f32>)>();
+/// [`run_cluster`] with an explicit worker pool for the leader's
+/// compression batch — pass a [`Pool::budgeted`] slice (see
+/// `PoolBudget::inner_capped`) to bound total threads across concurrent
+/// cluster runs. The pool only schedules; traces are bit-identical for
+/// any pool width.
+pub fn run_cluster_in(
+    cfg: &TrainConfig,
+    ds: &LinRegDataset,
+    agg: &dyn Aggregator,
+    attack: &dyn Attack,
+    comp: &dyn Compressor,
+    x0: &mut Vec<f32>,
+    label: &str,
+    rng: &mut Rng,
+    pool: &Pool,
+) -> Result<TrainTrace> {
+    cfg.validate()?;
+    let n = cfg.n_devices;
+    std::thread::scope(|scope| {
+        let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
         for i in 0..n {
-            let (tx, rx) = mpsc::channel::<Broadcast>();
-            to_workers.push(tx);
-            let ds = Arc::clone(&ds);
-            let result_tx = result_tx.clone();
+            let (leader_half, worker_half) = ChannelTransport::pair();
+            links.push(Box::new(leader_half));
             scope.spawn(move || {
-                // worker event loop: compute coded vector for each broadcast
-                while let Ok(msg) = rx.recv() {
-                    let mut coded = vec![0.0f32; ds.dim()];
-                    for &k in &msg.subsets {
-                        let g = ds.subset_grad(k, &msg.x);
-                        crate::util::math::axpy(1.0, &g, &mut coded);
-                    }
-                    crate::util::math::scale(&mut coded, 1.0 / msg.subsets.len() as f32);
-                    if result_tx.send((i, coded)).is_err() {
-                        break;
-                    }
-                }
+                // worker event loop: join, then answer every broadcast;
+                // errors surface on the leader side as a lost connection
+                let _ = run_worker(Box::new(worker_half), i, Some(ds), None);
             });
         }
-        drop(result_tx);
-
-        for t in 0..cfg.iters {
-            let assign = Assignment::draw(n, rng);
-            let x_arc = Arc::new(x0.clone());
-            for i in 0..n {
-                let subsets: Vec<usize> =
-                    assign.subsets_for(s_hat.row(assign.tasks[i])).collect();
-                to_workers[i]
-                    .send(Broadcast { x: Arc::clone(&x_arc), subsets })
-                    .map_err(|_| anyhow::anyhow!("worker {i} died"))?;
-            }
-            // gather
-            let mut coded: Vec<Option<Vec<f32>>> = vec![None; n];
-            for _ in 0..n {
-                let (i, v) = result_rx.recv().map_err(|_| anyhow::anyhow!("gather failed"))?;
-                coded[i] = Some(v);
-            }
-            let coded: Vec<Vec<f32>> = coded.into_iter().map(|v| v.unwrap()).collect();
-
-            // fixed identities: last N−H byzantine (matches Trainer default)
-            let honest: Vec<Vec<f32>> = coded[..cfg.n_honest].to_vec();
-            let byz_true: Vec<Vec<f32>> = coded[cfg.n_honest..].to_vec();
-            let lies = if byz_true.is_empty() {
-                Vec::new()
-            } else {
-                let mut ctx = AttackContext { honest: &honest, own_true: &byz_true, rng };
-                attack.craft(&mut ctx)
-            };
-            // leader-side compression, one pre-split stream per device
-            let all: Vec<&[f32]> = honest
-                .iter()
-                .map(|m| m.as_slice())
-                .chain(lies.iter().map(|m| m.as_slice()))
-                .collect();
-            let (msgs, bits) = compress_batch(comp, &all, &mut comp_rngs, &pool);
-            bits_total += bits;
-            let update = agg.aggregate(&msgs);
-            for (xi, ui) in x0.iter_mut().zip(&update) {
-                *xi -= cfg.lr as f32 * ui;
-            }
-            if (cfg.log_every > 0 && t % cfg.log_every == 0) || t + 1 == cfg.iters {
-                trace.record(t, ds.loss(x0), norm(&update), bits_total);
-            }
-        }
-        // closing the senders terminates the workers
-        drop(to_workers);
-        Ok(())
-    })?;
-
-    trace.final_loss = ds.loss(x0);
-    trace.wall_s = timer.elapsed_s();
-    Ok(trace)
+        let leader = Leader {
+            cfg,
+            ds,
+            agg,
+            attack,
+            comp,
+            opts: LeaderOpts::default(),
+            pool: pool.clone(),
+            send_dataset: false,
+        };
+        leader.run(links, x0, label, rng)
+    })
 }
 
 #[cfg(test)]
@@ -171,5 +126,44 @@ mod tests {
         )
         .unwrap();
         assert!(tr.final_loss < l0, "{} !< {l0}", tr.final_loss);
+        // the in-process transport carries real frames: bytes are measured
+        assert!(tr.wire_up_bytes > 0 && tr.wire_down_bytes > 0);
+    }
+
+    #[test]
+    fn cluster_respects_a_shared_budgeted_pool() {
+        let mut cfg = TrainConfig::default();
+        cfg.n_devices = 8;
+        cfg.n_honest = 6;
+        cfg.d = 2;
+        cfg.dim = 6;
+        cfg.iters = 20;
+        cfg.lr = 5e-5;
+        cfg.log_every = 10;
+        let mut rng = Rng::new(21);
+        let ds = LinRegDataset::generate(8, 6, 0.2, &mut rng);
+        let cwtm = Cwtm::new(0.2);
+        let budget = Pool::budgeted(4, 2);
+        let mut run = |pool: &Pool, seed: u64| {
+            let mut x0 = vec![0.0f32; 6];
+            let tr = run_cluster_in(
+                &cfg,
+                &ds,
+                &cwtm,
+                &SignFlip { coeff: -2.0 },
+                &Identity,
+                &mut x0,
+                "budgeted",
+                &mut Rng::new(seed),
+                pool,
+            )
+            .unwrap();
+            (tr, x0)
+        };
+        // a borrowed budget slice and a private pool give identical traces
+        let (tr_a, x_a) = run(&budget.inner(), 31);
+        let (tr_b, x_b) = run(&Pool::new(cfg.threads), 31);
+        assert_eq!(x_a, x_b);
+        assert_eq!(tr_a.loss, tr_b.loss);
     }
 }

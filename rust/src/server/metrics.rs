@@ -15,10 +15,16 @@ pub struct TrainTrace {
     pub grad_update_norm: Vec<f64>,
     /// cumulative uplink bits transmitted by all devices up to each sample
     pub bits: Vec<u64>,
-    /// decode failures (DRACO) or other anomalies
+    /// decode failures (DRACO), gather-deadline misses, or other anomalies
     pub anomalies: usize,
     pub wall_s: f64,
     pub final_loss: f64,
+    /// uplink bytes actually framed on the wire, cumulative over the run
+    /// (set by the `net` leader; 0 on the central fast path, where `bits`
+    /// is the analytic accounting and nothing is serialized)
+    pub wire_up_bytes: u64,
+    /// downlink (broadcast + handshake) bytes framed on the wire
+    pub wire_down_bytes: u64,
 }
 
 impl TrainTrace {
@@ -56,11 +62,19 @@ impl TrainTrace {
     /// Pretty one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "{:<28} final_loss={:.6e}  bits={:.3e}  wall={:.2}s{}",
+            "{:<28} final_loss={:.6e}  bits={:.3e}  wall={:.2}s{}{}",
             self.label,
             self.final_loss,
             self.total_bits() as f64,
             self.wall_s,
+            if self.wire_up_bytes > 0 {
+                format!(
+                    "  wire_up={:.3e}B wire_down={:.3e}B",
+                    self.wire_up_bytes as f64, self.wire_down_bytes as f64
+                )
+            } else {
+                String::new()
+            },
             if self.anomalies > 0 {
                 format!("  anomalies={}", self.anomalies)
             } else {
@@ -95,5 +109,16 @@ mod tests {
         let mut t = TrainTrace::new("lad-cwtm-d10");
         t.final_loss = 1.0;
         assert!(t.summary().contains("lad-cwtm-d10"));
+    }
+
+    #[test]
+    fn summary_reports_wire_bytes_only_for_net_runs() {
+        let mut t = TrainTrace::new("central");
+        t.final_loss = 1.0;
+        assert!(!t.summary().contains("wire_up"));
+        t.wire_up_bytes = 12_345;
+        t.wire_down_bytes = 678;
+        let s = t.summary();
+        assert!(s.contains("wire_up") && s.contains("wire_down"), "{s}");
     }
 }

@@ -51,11 +51,18 @@ impl Rng {
     /// [`crate::util::parallel`]). The derived seeds are salted so the
     /// children do not replay the parent's own output.
     pub fn split(&self, n: usize) -> Vec<Rng> {
+        self.split_seeds(n).into_iter().map(Rng::new).collect()
+    }
+
+    /// The seeds [`Rng::split`] would construct its child streams from,
+    /// without building the streams. `Rng::new(split_seeds(n)[i])` is
+    /// bit-identical to `split(n)[i]`, which is what lets a leader hand
+    /// device `i` its private stream over the wire as a single `u64`
+    /// (`net::wire::Msg::Hello`) while keeping its own copy.
+    pub fn split_seeds(&self, n: usize) -> Vec<u64> {
         let mut probe = self.clone();
         let base = probe.next_u64() ^ 0xD1B5_4A32_D192_ED03;
-        (0..n as u64)
-            .map(|i| Rng::new(base ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15)))
-            .collect()
+        (0..n as u64).map(|i| base ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15)).collect()
     }
 
     #[inline]
@@ -279,6 +286,19 @@ mod tests {
         for (p, q) in again.iter().zip(&first) {
             let (mut p, mut q) = (p.clone(), q.clone());
             assert_eq!(p.next_u64(), q.next_u64());
+        }
+    }
+
+    #[test]
+    fn split_seeds_reconstruct_split_streams() {
+        let parent = Rng::new(2024);
+        let streams = parent.split(6);
+        let seeds = parent.split_seeds(6);
+        for (s, seed) in streams.iter().zip(seeds) {
+            let (mut a, mut b) = (s.clone(), Rng::new(seed));
+            for _ in 0..16 {
+                assert_eq!(a.next_u64(), b.next_u64());
+            }
         }
     }
 

@@ -1,0 +1,231 @@
+//! Loopback integration tests for the multi-node transport: a leader plus
+//! n workers over real TCP (and UDS) sockets must produce a `TrainTrace`
+//! bit-identical to `Trainer::run`'s central fast path — for LAD
+//! (Identity) and Com-LAD (QSGD, device-side compression) — and a stalled
+//! worker must not hang an iteration once a gather deadline is set.
+
+use lad::aggregation::Cwtm;
+use lad::attack::SignFlip;
+use lad::compress::{Compressor, Identity, Qsgd};
+use lad::config::{CompressionKind, TrainConfig};
+use lad::data::linreg::LinRegDataset;
+use lad::grad::NativeLinReg;
+use lad::net::transport::{connect, ChannelTransport, NetListener, Transport};
+use lad::net::wire::{Msg, Payload, WIRE_VERSION};
+use lad::net::{run_worker, Leader, LeaderOpts, MISS_RETIRE_STREAK};
+use lad::server::metrics::TrainTrace;
+use lad::server::trainer::Trainer;
+use lad::util::parallel::Pool;
+use lad::util::rng::Rng;
+use std::time::Duration;
+
+fn cfg(n: usize, h: usize, d: usize, compression: CompressionKind) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.n_devices = n;
+    cfg.n_honest = h;
+    cfg.d = d;
+    cfg.dim = 10;
+    cfg.iters = 40;
+    cfg.lr = 8e-5;
+    cfg.sigma_h = 0.3;
+    cfg.log_every = 10;
+    cfg.compression = compression;
+    cfg
+}
+
+fn central(
+    cfg: &TrainConfig,
+    ds: &LinRegDataset,
+    comp: &dyn Compressor,
+    seed: u64,
+) -> (TrainTrace, Vec<f32>) {
+    let cwtm = Cwtm::new(0.1);
+    let flip = SignFlip { coeff: -2.0 };
+    let mut oracle = NativeLinReg::new(ds.clone());
+    let mut x = vec![0.0f32; cfg.dim];
+    let tr = Trainer::new(cfg, &cwtm, &flip, comp)
+        .run(&mut oracle, &mut x, "central", &mut Rng::new(seed))
+        .unwrap();
+    (tr, x)
+}
+
+/// Leader + n socket workers; workers receive the dataset over the wire
+/// and compress their own uplinks (device-side Com-LAD).
+fn net_loopback(
+    cfg: &TrainConfig,
+    ds: &LinRegDataset,
+    comp: &dyn Compressor,
+    seed: u64,
+    bind_addr: &str,
+) -> (TrainTrace, Vec<f32>) {
+    let listener = NetListener::bind(bind_addr).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let n = cfg.n_devices;
+    let mut workers = Vec::with_capacity(n);
+    for i in 0..n {
+        let addr = addr.clone();
+        workers.push(std::thread::spawn(move || {
+            let link = connect(&addr).unwrap();
+            run_worker(link, i, None, None).unwrap()
+        }));
+    }
+    let links: Vec<Box<dyn Transport>> = (0..n).map(|_| listener.accept().unwrap()).collect();
+    let cwtm = Cwtm::new(0.1);
+    let flip = SignFlip { coeff: -2.0 };
+    let leader = Leader {
+        cfg,
+        ds,
+        agg: &cwtm,
+        attack: &flip,
+        comp,
+        opts: LeaderOpts { gather_deadline: None, device_compression: true },
+        pool: Pool::serial(),
+        send_dataset: true,
+    };
+    let mut x = vec![0.0f32; cfg.dim];
+    let tr = leader.run(links, &mut x, "net", &mut Rng::new(seed)).unwrap();
+    for w in workers {
+        let report = w.join().unwrap();
+        assert_eq!(report.iters, cfg.iters, "worker served every iteration");
+        assert!(report.up_bytes > 0 && report.down_bytes > 0);
+    }
+    (tr, x)
+}
+
+fn assert_trace_identical(net: &TrainTrace, central: &TrainTrace) {
+    assert_eq!(net.iters, central.iters, "sample grid diverged");
+    assert_eq!(net.loss, central.loss, "loss trace diverged");
+    assert_eq!(net.grad_update_norm, central.grad_update_norm, "update norms diverged");
+    assert_eq!(net.bits, central.bits, "bit accounting diverged");
+    assert_eq!(net.final_loss, central.final_loss, "final loss diverged");
+    assert_eq!(net.anomalies, 0);
+}
+
+#[test]
+fn tcp_identity_matches_central_and_measures_wire_bytes() {
+    let c = cfg(8, 6, 3, CompressionKind::None);
+    let mut rng = Rng::new(601);
+    let ds = LinRegDataset::generate(c.n_devices, c.dim, c.sigma_h, &mut rng);
+    let (tn, xn) = net_loopback(&c, &ds, &Identity, 602, "tcp://127.0.0.1:0");
+    let (tc, xc) = central(&c, &ds, &Identity, 602);
+    assert_eq!(xn, xc, "model diverged between TCP and central paths");
+    assert_trace_identical(&tn, &tc);
+    // Identity ships every f32 densely: the measured uplink bytes must
+    // cover the analytic accounting, the excess being framing/headers only
+    assert!(
+        tn.wire_up_bytes >= tn.total_bits() / 8,
+        "wire {}B < analytic {}b/8",
+        tn.wire_up_bytes,
+        tn.total_bits()
+    );
+    assert!(tn.wire_down_bytes > 0);
+    assert_eq!(tc.wire_up_bytes, 0, "central path serializes nothing");
+}
+
+#[test]
+fn tcp_qsgd_com_lad_matches_central() {
+    // device-side compression: the compressed QSGD payloads are what
+    // crosses the socket, and the trace still matches the fast path
+    let c = cfg(8, 6, 3, CompressionKind::Qsgd { levels: 16 });
+    let mut rng = Rng::new(701);
+    let ds = LinRegDataset::generate(c.n_devices, c.dim, c.sigma_h, &mut rng);
+    let comp = Qsgd::new(16);
+    let (tn, xn) = net_loopback(&c, &ds, &comp, 702, "tcp://127.0.0.1:0");
+    let (tc, xc) = central(&c, &ds, &comp, 702);
+    assert_eq!(xn, xc, "model diverged between TCP and central paths");
+    assert_trace_identical(&tn, &tc);
+    assert!(tn.total_bits() > 0);
+}
+
+#[cfg(unix)]
+#[test]
+fn uds_identity_matches_central() {
+    let c = cfg(6, 5, 2, CompressionKind::None);
+    let mut rng = Rng::new(801);
+    let ds = LinRegDataset::generate(c.n_devices, c.dim, c.sigma_h, &mut rng);
+    let path = std::env::temp_dir().join(format!("lad_net_cluster_{}.sock", std::process::id()));
+    let addr = format!("uds:{}", path.display());
+    let (tn, xn) = net_loopback(&c, &ds, &Identity, 802, &addr);
+    let (tc, xc) = central(&c, &ds, &Identity, 802);
+    assert_eq!(xn, xc, "model diverged between UDS and central paths");
+    assert_trace_identical(&tn, &tc);
+}
+
+/// A worker that serves the first `serve` iterations, then stalls: keeps
+/// its connection open but never uploads again (crash-Byzantine).
+fn stalling_worker(mut link: Box<dyn Transport>, device: usize, serve: usize) {
+    link.send(&Msg::Join { version: WIRE_VERSION, device: device as u32, digest: 0 }).unwrap();
+    let (hello, _) = link.recv().unwrap();
+    assert!(matches!(hello, Msg::Hello { .. }));
+    let mut served = 0;
+    loop {
+        match link.recv() {
+            Ok((Msg::Broadcast { iter, x, .. }, _)) if served < serve => {
+                let payload = Payload::Dense { values: vec![0.0f32; x.len()] };
+                link.send(&Msg::Upload {
+                    iter,
+                    device: device as u32,
+                    analytic_bits: 0,
+                    payload,
+                })
+                .unwrap();
+                served += 1;
+            }
+            Ok((Msg::Broadcast { .. }, _)) => {} // stall: swallow silently
+            Ok((Msg::Shutdown, _)) | Err(_) => break,
+            Ok((other, _)) => panic!("unexpected {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn gather_deadline_survives_a_stalled_worker() {
+    let mut c = cfg(5, 4, 2, CompressionKind::None);
+    c.dim = 6;
+    c.iters = 6;
+    c.log_every = 2;
+    let mut rng = Rng::new(901);
+    let ds = LinRegDataset::generate(c.n_devices, c.dim, c.sigma_h, &mut rng);
+    let cwtm = Cwtm::new(0.1);
+    let flip = SignFlip { coeff: -2.0 };
+    let (tr, x) = std::thread::scope(|scope| {
+        let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(c.n_devices);
+        for i in 0..c.n_devices {
+            let (leader_half, worker_half) = ChannelTransport::pair();
+            links.push(Box::new(leader_half));
+            let dsr = &ds;
+            if i == 1 {
+                scope.spawn(move || stalling_worker(Box::new(worker_half), 1, 2));
+            } else {
+                scope.spawn(move || {
+                    let _ = run_worker(Box::new(worker_half), i, Some(dsr), None);
+                });
+            }
+        }
+        let leader = Leader {
+            cfg: &c,
+            ds: &ds,
+            agg: &cwtm,
+            attack: &flip,
+            comp: &Identity,
+            opts: LeaderOpts {
+                gather_deadline: Some(Duration::from_millis(200)),
+                device_compression: false,
+            },
+            pool: Pool::serial(),
+            send_dataset: false,
+        };
+        let mut x0 = vec![0.0f32; c.dim];
+        let tr = leader.run(links, &mut x0, "deadline", &mut Rng::new(902)).unwrap();
+        (tr, x0)
+    });
+    // device 1 answered iterations 0 and 1, then stalled: the leader eats
+    // one timeout per miss until the retire streak, then stops waiting on
+    // (and broadcasting to) the dead device entirely — a permanent stall
+    // costs a bounded number of timeouts, not one per remaining iteration
+    assert_eq!(tr.anomalies, MISS_RETIRE_STREAK, "one anomaly per miss until retirement");
+    assert!(tr.final_loss.is_finite());
+    assert!(x.iter().all(|v| v.is_finite()));
+    // the run still records its full sample grid
+    assert_eq!(tr.iters.last().copied(), Some(c.iters - 1));
+}

@@ -1,0 +1,245 @@
+//! Property tests for the `net` wire codec and framing: every message and
+//! every compressed-payload variant must round-trip bit-exactly, and
+//! corrupted frames (flipped bytes, truncations, hostile lengths) must be
+//! rejected.
+
+use lad::compress::{Compressor, Identity, Qsgd, RandK, TopK};
+use lad::config::CompressionKind;
+use lad::data::linreg::LinRegDataset;
+use lad::net::frame::{self, FrameError};
+use lad::net::wire::{DatasetBlock, Msg, Payload, WIRE_VERSION};
+use lad::proptest_lite::{ensure, forall, gen};
+use lad::util::rng::Rng;
+
+fn rand_compression(rng: &mut Rng) -> CompressionKind {
+    match rng.below(4) {
+        0 => CompressionKind::None,
+        1 => CompressionKind::RandK { k: gen::usize_in(rng, 1, 64) },
+        2 => CompressionKind::TopK { k: gen::usize_in(rng, 1, 64) },
+        _ => CompressionKind::Qsgd { levels: gen::usize_in(rng, 1, 1024) as u32 },
+    }
+}
+
+fn rand_payload(rng: &mut Rng) -> Payload {
+    match rng.below(3) {
+        0 => Payload::Dense { values: gen::vec_f32(rng, gen::usize_in(rng, 0, 40), 10.0) },
+        1 => {
+            let dim = gen::usize_in(rng, 1, 50);
+            let nnz = gen::usize_in(rng, 0, dim);
+            let mut idx: Vec<u32> = (0..dim as u32).collect();
+            rng.shuffle(&mut idx);
+            idx.truncate(nnz);
+            idx.sort_unstable();
+            Payload::Sparse { dim: dim as u32, idx, values: gen::vec_f32(rng, nnz, 10.0) }
+        }
+        _ => {
+            let dim = gen::usize_in(rng, 0, 40);
+            let levels = gen::usize_in(rng, 1, 64) as u32;
+            let lb = (32 - levels.leading_zeros()) as usize;
+            let packed = vec![0xA5u8; (dim * (1 + lb)).div_ceil(8)];
+            // norm strictly positive: zero-norm payloads carry no packed
+            // bytes, a shape the dedicated unit test covers
+            Payload::Quantized { dim: dim as u32, levels, norm: rng.f32() * 100.0 + 0.5, packed }
+        }
+    }
+}
+
+fn rand_msg(rng: &mut Rng) -> Msg {
+    match rng.below(5) {
+        0 => Msg::Join {
+            version: rng.below(256) as u8,
+            device: rng.below(10_000) as u32,
+            digest: rng.next_u64(),
+        },
+        1 => {
+            let dataset = if rng.bernoulli(0.5) {
+                let n = gen::usize_in(rng, 1, 6);
+                let q = gen::usize_in(rng, 1, 5);
+                let ds = LinRegDataset::generate(n, q, rng.f64(), rng);
+                Some(DatasetBlock::from_dataset(&ds))
+            } else {
+                None
+            };
+            Msg::Hello {
+                version: WIRE_VERSION,
+                device: rng.below(100) as u32,
+                n_devices: rng.below(1000) as u32,
+                dim: rng.below(1000) as u32,
+                byzantine: rng.bernoulli(0.5),
+                device_compression: rng.bernoulli(0.5),
+                comp_seed: rng.next_u64(),
+                digest: rng.next_u64(),
+                compression: rand_compression(rng),
+                dataset,
+            }
+        }
+        2 => Msg::Broadcast {
+            iter: rng.below(1 << 20) as u32,
+            x: gen::vec_f32(rng, gen::usize_in(rng, 1, 60), 100.0),
+            subsets: (0..gen::usize_in(rng, 1, 12)).map(|_| rng.below(64) as u32).collect(),
+        },
+        3 => Msg::Upload {
+            iter: rng.below(1 << 20) as u32,
+            device: rng.below(100) as u32,
+            analytic_bits: rng.next_u64() >> 20,
+            payload: rand_payload(rng),
+        },
+        _ => Msg::Shutdown,
+    }
+}
+
+#[test]
+fn every_message_type_round_trips() {
+    forall(400, 0xA11CE, rand_msg, |msg| {
+        let decoded = Msg::decode(&msg.encode()).map_err(|e| format!("{e:#}"))?;
+        ensure(&decoded == msg, || format!("round trip changed the message: {decoded:?}"))
+    });
+}
+
+#[test]
+fn every_compressed_variant_reconstructs_bit_exactly() {
+    forall(
+        200,
+        0xB0B,
+        |rng| {
+            let q = gen::usize_in(rng, 1, 96);
+            let scale = [0.01f32, 1.0, 1e4][rng.below(3)];
+            let mut g = gen::vec_f32(rng, q, scale);
+            if rng.bernoulli(0.1) {
+                g = vec![0.0; q]; // degenerate all-zero gradient
+            }
+            let which = rng.below(4);
+            (g, which, gen::usize_in(rng, 1, 96), gen::usize_in(rng, 1, 4096) as u32)
+        },
+        |(g, which, k, levels)| {
+            let comp: Box<dyn Compressor> = match which {
+                0 => Box::new(Identity),
+                1 => Box::new(RandK::new(*k)),
+                2 => Box::new(TopK::new(*k)),
+                _ => Box::new(Qsgd::new(*levels)),
+            };
+            let mut crng = Rng::new(7 ^ *which as u64);
+            let c = comp.compress(g, &mut crng);
+            let payload = Payload::from_compressed(&c);
+            // and through the full message codec, as the worker sends it
+            let msg = Msg::Upload {
+                iter: 0,
+                device: 0,
+                analytic_bits: c.bits as u64,
+                payload,
+            };
+            let Msg::Upload { payload: back, .. } =
+                Msg::decode(&msg.encode()).map_err(|e| format!("{e:#}"))?
+            else {
+                return Err("decoded to a different message type".into());
+            };
+            let dense = back.to_dense().map_err(|e| format!("{e:#}"))?;
+            ensure(dense.len() == c.vec.len(), || "dim changed".into())?;
+            for (j, (a, b)) in dense.iter().zip(&c.vec).enumerate() {
+                ensure(a.to_bits() == b.to_bits(), || {
+                    format!("{}: coord {j} changed {b} -> {a}", comp.name())
+                })?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quantized_payload_is_near_analytic_size() {
+    // the point of the variant encodings: wire bytes track the operator's
+    // bit accounting instead of dense f32 freight
+    let mut rng = Rng::new(5);
+    let g: Vec<f32> = (0..512).map(|i| ((i as f32) * 0.11).cos() * 3.0).collect();
+    let comp = Qsgd::new(16);
+    let c = comp.compress(&g, &mut rng);
+    let p = Payload::from_compressed(&c);
+    assert!(matches!(p, Payload::Quantized { .. }));
+    // payload ≤ analytic bits/8 + fixed header slack
+    assert!(
+        p.encoded_len() as u64 <= c.bits as u64 / 8 + 16,
+        "quantized payload {}B vs analytic {}b",
+        p.encoded_len(),
+        c.bits
+    );
+}
+
+#[test]
+fn corrupted_frames_are_rejected() {
+    forall(
+        150,
+        0xC0DE,
+        |rng| {
+            let msg = rand_msg(rng);
+            let framed = frame::encode_frame(&msg.encode());
+            let pos = gen::usize_in(rng, 0, framed.len() - 1);
+            let bit = 1u8 << rng.below(8);
+            (framed, pos, bit)
+        },
+        |(framed, pos, bit)| {
+            let mut bad = framed.clone();
+            bad[*pos] ^= *bit;
+            // any single-bit corruption must fail framing or change the
+            // decoded message — silent identical decode is the only bug
+            match frame::decode_frame(&bad) {
+                Err(_) => Ok(()),
+                Ok(payload) => {
+                    let orig = frame::decode_frame(framed).expect("original frame valid");
+                    ensure(payload != orig, || {
+                        format!("flip at {pos} decoded identically")
+                    })
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn truncated_and_oversized_frames_are_rejected() {
+    let msg = Msg::Broadcast { iter: 1, x: vec![1.0; 32], subsets: vec![0, 1, 2] };
+    let framed = frame::encode_frame(&msg.encode());
+    for cut in [0, 3, frame::HEADER_LEN, framed.len() - 1] {
+        let mut cursor = &framed[..cut];
+        let got = frame::read_frame(&mut cursor, frame::MAX_PAYLOAD);
+        assert!(matches!(&got, Err(FrameError::Truncated)), "cut at {cut} accepted: {got:?}");
+    }
+    // hostile length: rejected before any payload allocation
+    let mut hostile = Vec::new();
+    hostile.extend_from_slice(&(u32::MAX).to_le_bytes());
+    hostile.extend_from_slice(&[0; 4]);
+    let mut cursor = &hostile[..];
+    assert!(matches!(
+        frame::read_frame(&mut cursor, frame::MAX_PAYLOAD),
+        Err(FrameError::Oversized { .. })
+    ));
+}
+
+#[test]
+fn decoder_rejects_hostile_reconstruction_dims() {
+    // a tiny, CRC-valid frame must not be able to claim a multi-GiB
+    // reconstruction: dim is capped at decode time, before to_dense
+    let hostile = Msg::Upload {
+        iter: 0,
+        device: 0,
+        analytic_bits: 0,
+        payload: Payload::Sparse { dim: u32::MAX, idx: Vec::new(), values: Vec::new() },
+    };
+    assert!(Msg::decode(&hostile.encode()).is_err());
+    let hostile_q = Msg::Upload {
+        iter: 0,
+        device: 0,
+        analytic_bits: 0,
+        payload: Payload::Quantized { dim: u32::MAX, levels: 1, norm: 1.0, packed: Vec::new() },
+    };
+    assert!(Msg::decode(&hostile_q.encode()).is_err());
+}
+
+#[test]
+fn decoder_rejects_lying_length_prefixes() {
+    // a Broadcast whose x-length claims more floats than the buffer holds
+    let msg = Msg::Broadcast { iter: 0, x: vec![1.0; 4], subsets: vec![1] };
+    let mut enc = msg.encode();
+    // x length prefix sits right after tag(1) + iter(4)
+    enc[5..9].copy_from_slice(&(u32::MAX).to_le_bytes());
+    assert!(Msg::decode(&enc).is_err());
+}
