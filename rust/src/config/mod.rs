@@ -8,7 +8,7 @@ pub mod toml;
 use crate::Result;
 use anyhow::{bail, Context};
 use std::path::Path;
-use toml::{TomlDoc, TomlValue};
+use toml::TomlValue;
 
 /// Which robust aggregation rule the server applies (§II-A / Def. 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -139,6 +139,12 @@ pub struct NetConfig {
     /// positive deadline lets the leader proceed past stalled
     /// (crash-Byzantine) workers, counting them as trace anomalies.
     pub gather_deadline_ms: u64,
+    /// Join-handshake deadline in milliseconds; 0 waits forever. With a
+    /// positive deadline, an accepted connection that never sends a valid
+    /// `Join` is dropped after this long and its device slot reclaimed
+    /// (`net::Leader::serve`) instead of occupying one of the N slots
+    /// forever.
+    pub join_deadline_ms: u64,
     /// Compression site: `true` = honest devices compress their own
     /// uplink (Com-LAD device-side, compressed bytes on the wire);
     /// `false` = devices ship dense vectors and the leader compresses
@@ -151,6 +157,7 @@ impl Default for NetConfig {
         NetConfig {
             addr: "tcp://127.0.0.1:7700".into(),
             gather_deadline_ms: 0,
+            join_deadline_ms: 0,
             device_compression: false,
         }
     }
@@ -276,7 +283,7 @@ impl TrainConfig {
         let mut cfg = TrainConfig::default();
         for table in ["", "train"] {
             if let Some(kv) = doc.get(table) {
-                apply_table(&mut cfg, kv, &doc)?;
+                apply_train_table(&mut cfg, kv)?;
             }
         }
         if let Some(kv) = doc.get("net") {
@@ -287,14 +294,18 @@ impl TrainConfig {
     }
 }
 
-fn apply_net_table(
+/// Apply one `key = value` table of `[net]` keys (shared with the sweep
+/// spec's `[net]` section).
+pub(crate) fn apply_net_table(
     net: &mut NetConfig,
     kv: &std::collections::BTreeMap<String, TomlValue>,
 ) -> Result<()> {
-    // `addr`/`listen`/`connect` are aliases for one field; two of them in
-    // one file is a contradiction (key order, not file order, would pick
-    // the winner), so reject it instead of silently resolving
+    // `addr`/`listen`/`connect` (and `gather_deadline_ms`/`deadline_ms`)
+    // are aliases for one field; two of them in one file is a
+    // contradiction (key order, not file order, would pick the winner),
+    // so reject it instead of silently resolving
     let mut addr_key: Option<&str> = None;
+    let mut deadline_key: Option<&str> = None;
     for (key, v) in kv {
         match key.as_str() {
             "addr" | "listen" | "connect" => {
@@ -305,8 +316,13 @@ fn apply_net_table(
                 net.addr = v.as_str().context("net.addr must be a string")?.to_string()
             }
             "gather_deadline_ms" | "deadline_ms" => {
+                if let Some(prev) = deadline_key {
+                    bail!("[net] key {key:?} conflicts with {prev:?} — set only one deadline");
+                }
+                deadline_key = Some(key.as_str());
                 net.gather_deadline_ms = need_usize(key, v)? as u64
             }
+            "join_deadline_ms" => net.join_deadline_ms = need_usize(key, v)? as u64,
             "compression_site" => {
                 net.device_compression =
                     match v.as_str().context("net.compression_site must be a string")? {
@@ -321,10 +337,14 @@ fn apply_net_table(
     Ok(())
 }
 
-fn apply_table(
+/// Apply one `key = value` table of training keys onto a config (shared
+/// between `[train]` / top-level config loading and the sweep spec's
+/// `[fixed]` section). Relies on `BTreeMap` iteration order: `q_hat` sorts
+/// after `compression`, so the sparsifier width lands on the operator the
+/// same table selected.
+pub(crate) fn apply_train_table(
     cfg: &mut TrainConfig,
     kv: &std::collections::BTreeMap<String, TomlValue>,
-    _doc: &TomlDoc,
 ) -> Result<()> {
     for (key, v) in kv {
         match key.as_str() {
@@ -442,17 +462,21 @@ mod tests {
             [net]
             listen = "uds:/tmp/lad.sock"
             gather_deadline_ms = 250
+            join_deadline_ms = 900
             compression_site = "device"
             "#,
         )
         .unwrap();
         assert_eq!(cfg.net.addr, "uds:/tmp/lad.sock");
         assert_eq!(cfg.net.gather_deadline_ms, 250);
+        assert_eq!(cfg.net.join_deadline_ms, 900);
         assert!(cfg.net.device_compression);
         assert!(TrainConfig::from_toml_str("[net]\ncompression_site = \"nowhere\"").is_err());
         assert!(TrainConfig::from_toml_str("[net]\nbogus = 1").is_err());
-        // contradictory address aliases are rejected, not key-order-resolved
+        // contradictory aliases are rejected, not key-order-resolved
         let conflict = "[net]\nconnect = \"tcp://a:1\"\nlisten = \"uds:/tmp/x\"";
+        assert!(TrainConfig::from_toml_str(conflict).is_err());
+        let conflict = "[net]\ndeadline_ms = 5000\ngather_deadline_ms = 100";
         assert!(TrainConfig::from_toml_str(conflict).is_err());
     }
 

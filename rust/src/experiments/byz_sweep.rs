@@ -3,12 +3,11 @@
 //! (eq. 35 with H = N − B). Not a paper figure — an ablation of the
 //! robustness margin that Theorem 2 predicts.
 
-use super::common::{run_variant_in, ExperimentOutput, Series, Variant};
+use super::common::{ExperimentOutput, Series, Variant};
 use crate::config::{AggregatorKind, AttackKind, TrainConfig};
-use crate::data::linreg::LinRegDataset;
+use crate::sweep;
 use crate::theory::TheoryParams;
-use crate::util::parallel::Pool;
-use crate::util::rng::Rng;
+use crate::util::parallel::Parallelism;
 use crate::Result;
 
 #[derive(Debug, Clone)]
@@ -47,39 +46,44 @@ pub fn run(p: &ByzSweepParams) -> Result<ExperimentOutput> {
     for &b in &p.byz_counts {
         anyhow::ensure!(2 * (p.n - b) > p.n, "B={b} breaks honest majority");
     }
-    let mut rng = Rng::new(p.seed);
-    let ds = LinRegDataset::generate(p.n, p.q, p.sigma_h, &mut rng);
-    // each B value is an independent training run with its own config and
-    // Rng::new(seed) — the fan-out is bit-identical to the serial sweep.
-    // One two-level budget bounds total threads at p.threads: the per-B
-    // fan-out shares a pool and each run borrows an inner slice of it.
-    let budget = Pool::budgeted(p.threads, p.byz_counts.len());
-    let finals = budget.outer().par_map(&p.byz_counts, |_, &b| -> Result<(usize, f64)> {
-        let mut cfg = TrainConfig::default();
-        cfg.n_devices = p.n;
-        cfg.n_honest = p.n - b;
-        cfg.d = p.d;
-        cfg.dim = p.q;
-        cfg.iters = p.iters;
-        cfg.lr = p.lr;
-        cfg.sigma_h = p.sigma_h;
-        cfg.aggregator = AggregatorKind::Cwtm;
-        cfg.trim_frac = ((b as f64 + 1.0) / p.n as f64).min(0.45);
-        cfg.attack = AttackKind::SignFlip { coeff: -2.0 };
-        cfg.log_every = 0;
-        let tr = run_variant_in(
-            &ds,
-            &Variant { label: format!("b{b}"), cfg, draco_r: None },
-            p.seed ^ 0xB,
-            &budget.inner(),
-        )?;
-        Ok((b, tr.final_loss))
-    });
+    // The per-B configs as a sweep-engine job batch (`f` axis): every job
+    // regenerates the same dataset from `Rng::new(p.seed)` and runs with
+    // `Rng::new(p.seed ^ 0xB)`, so the fan-out is bit-identical to the
+    // pre-engine serial sweep, and the engine's two-level budget bounds
+    // total threads at p.threads.
+    let jobs: Vec<sweep::Job> = p
+        .byz_counts
+        .iter()
+        .map(|&b| {
+            let mut cfg = TrainConfig::default();
+            cfg.n_devices = p.n;
+            cfg.n_honest = p.n - b;
+            cfg.d = p.d;
+            cfg.dim = p.q;
+            cfg.iters = p.iters;
+            cfg.lr = p.lr;
+            cfg.sigma_h = p.sigma_h;
+            cfg.aggregator = AggregatorKind::Cwtm;
+            cfg.trim_frac = ((b as f64 + 1.0) / p.n as f64).min(0.45);
+            cfg.attack = AttackKind::SignFlip { coeff: -2.0 };
+            cfg.log_every = 0;
+            // scheduling-only: keep the pre-engine behaviour of giving each
+            // run the full inner budget slice (threads never alter a trace)
+            cfg.threads = 0;
+            let mut job = sweep::Job::from_variant(
+                &Variant { label: format!("b{b}"), cfg, draco_r: None },
+                p.seed,
+                p.seed ^ 0xB,
+            );
+            job.axes = vec![("f", b.to_string())];
+            job
+        })
+        .collect();
+    let traces = sweep::queue::execute(&jobs, Parallelism::new(p.threads))?;
     let mut empirical = Series::new(format!("final_loss(lad-cwtm,d={})", p.d));
     let mut theory = Series::new("eps_lad_eq35");
-    for r in finals {
-        let (b, final_loss): (usize, f64) = r?;
-        empirical.push(b as f64, final_loss);
+    for (&b, tr) in p.byz_counts.iter().zip(&traces) {
+        empirical.push(b as f64, tr.final_loss);
         let tp = TheoryParams::new(p.n, p.n - b.max(1), p.d).with_kappa(1.5);
         theory.push(b as f64, tp.error_term_lad_bigo());
     }

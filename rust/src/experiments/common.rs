@@ -51,9 +51,26 @@ pub struct ExperimentOutput {
 }
 
 impl ExperimentOutput {
+    /// True when the series do not share one x grid — the resample-by-index
+    /// fallback of [`ExperimentOutput::save_csv`] then misaligns rows.
+    pub fn x_grids_disagree(&self) -> bool {
+        match self.series.split_first() {
+            None => false,
+            Some((first, rest)) => rest.iter().any(|s| s.x != first.x),
+        }
+    }
+
     /// Save `x,<label1>,<label2>,...` rows (series must share x grids; any
-    /// series with a different grid is resampled by index).
+    /// series with a different grid is resampled by index, with a warning —
+    /// rows of such a CSV are not directly comparable across columns).
     pub fn save_csv<P: AsRef<Path>>(&self, dir: P) -> Result<std::path::PathBuf> {
+        if self.x_grids_disagree() {
+            eprintln!(
+                "warning: {}: series x-grids disagree — resampling by index; \
+                 rows mix different x values across columns",
+                self.name
+            );
+        }
         let path = dir.as_ref().join(format!("{}.csv", self.name));
         let mut header: Vec<&str> = vec![self.x_label.as_str()];
         header.extend(self.series.iter().map(|s| s.label.as_str()));
@@ -167,14 +184,16 @@ pub fn run_figure(
 
 /// [`run_figure`] with an explicit **total** thread budget for the figure.
 ///
-/// The budget is two-level: the variant fan-out and every variant's inner
-/// stages (oracle, compression, aggregation) share one worker pool, each
-/// variant borrowing a `⌈total / branches⌉`-wide slice further capped by
-/// its own `cfg.threads`. Pre-budget, each variant built a private
-/// `Pool::new(cfg.threads)` under a scoped fan-out, oversubscribing small
-/// machines at `variants × threads`; total live threads are now bounded by
-/// `par` alone, and the traces are unchanged (thread counts never alter a
-/// trace — pinned by `tests/fuzz_determinism.rs`).
+/// Since the sweep engine landed this is a thin wrapper: the variants are
+/// wrapped as sweep jobs (`sweep::jobs_from_variants`) and executed by
+/// `sweep::queue::execute` on one two-level [`Pool::budgeted`] budget —
+/// the variant fan-out and every variant's inner stages (oracle,
+/// compression, aggregation) share one worker pool, each variant
+/// borrowing a capped slice. Traces are bit-identical to the pre-engine
+/// driver: each job regenerates the figure dataset from the same
+/// `Rng::new(data_seed)` and runs under the same `run_seed`, and thread
+/// counts never alter a trace (pinned by `tests/fuzz_determinism.rs` and
+/// `tests/parallel_determinism.rs`).
 pub fn run_figure_par(
     n: usize,
     q: usize,
@@ -184,18 +203,15 @@ pub fn run_figure_par(
     run_seed: u64,
     par: Parallelism,
 ) -> Result<Vec<TrainTrace>> {
-    let mut rng = Rng::new(data_seed);
-    let ds = LinRegDataset::generate(n, q, sigma_h, &mut rng);
-    let budget = Pool::budgeted(par.threads(), variants.len());
-    budget
-        .outer()
-        .par_map(variants, |_, v| -> Result<TrainTrace> {
-            let tr = run_variant_in(&ds, v, run_seed, &budget.inner_capped(v.cfg.threads))?;
-            eprintln!("  {}", tr.summary());
-            Ok(tr)
-        })
-        .into_iter()
-        .collect()
+    for v in variants {
+        anyhow::ensure!(
+            v.cfg.n_devices == n && v.cfg.dim == q && v.cfg.sigma_h == sigma_h,
+            "variant {} disagrees with the figure dataset shape (N={n}, Q={q}, σ_H={sigma_h})",
+            v.label
+        );
+    }
+    let jobs = crate::sweep::jobs_from_variants(variants, data_seed, run_seed);
+    crate::sweep::queue::execute(&jobs, par)
 }
 
 #[cfg(test)]
@@ -210,6 +226,32 @@ mod tests {
         let s = Series::from_trace(&t);
         assert_eq!(s.x, vec![0.0, 5.0]);
         assert_eq!(s.y, vec![3.0, 1.0]);
+    }
+
+    #[test]
+    fn mismatched_x_grids_are_detected_and_still_export() {
+        let mut out = ExperimentOutput {
+            name: "unit_mismatch".into(),
+            x_label: "iter".into(),
+            y_label: "loss".into(),
+            series: vec![
+                Series { label: "a".into(), x: vec![0.0, 1.0], y: vec![5.0, 4.0] },
+                Series { label: "b".into(), x: vec![0.0, 2.0], y: vec![3.0, 2.0] },
+            ],
+        };
+        assert!(out.x_grids_disagree(), "different grids must be flagged");
+        // the export still succeeds (resample-by-index, with a warning)
+        let dir = std::env::temp_dir().join("lad_exp_mismatch_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = out.save_csv(&dir).unwrap();
+        assert_eq!(std::fs::read_to_string(p).unwrap().lines().count(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+        // aligned grids are not flagged
+        out.series[1].x = vec![0.0, 1.0];
+        assert!(!out.x_grids_disagree());
+        // degenerate shapes
+        out.series.clear();
+        assert!(!out.x_grids_disagree());
     }
 
     #[test]

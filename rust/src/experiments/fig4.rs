@@ -100,6 +100,10 @@ pub fn variants(p: &Fig4Params) -> Vec<Variant> {
 }
 
 pub fn run(p: &Fig4Params) -> Result<ExperimentOutput> {
+    // the variant list runs as a sweep-engine job batch: run_figure_par
+    // wraps it via sweep::jobs_from_variants and delegates execution to
+    // sweep::queue::execute (traces bit-identical to the pre-engine
+    // driver), keeping the dataset-shape guard in one place
     let traces = run_figure_par(
         p.n,
         p.q,

@@ -77,6 +77,9 @@ pub fn run(p: &Fig5Params) -> Result<Vec<ExperimentOutput>> {
             v.cfg.sigma_h = sigma;
         }
         eprintln!("fig5: σ_H = {sigma}");
+        // one sweep-engine job batch per heterogeneity level (via
+        // run_figure_par's delegation) — each level keeps its own dataset
+        // seed, exactly as the pre-engine driver did
         let traces = run_figure_par(
             p.n,
             p.q,

@@ -88,6 +88,9 @@ fn variants(p: &Fig6Params) -> Vec<Variant> {
 }
 
 pub fn run(p: &Fig6Params) -> Result<ExperimentOutput> {
+    // the compressed-communication variant list as a sweep-engine job
+    // batch, via run_figure_par's delegation (traces bit-identical to
+    // the pre-engine driver)
     let traces = run_figure_par(
         p.n,
         p.q,

@@ -28,6 +28,11 @@
 //! * [`theory`] — closed-form error terms (κ₁..κ₄, ξ₁..ξ₄, ε) from the
 //!   convergence analysis, used by the Fig. 2/3 reproductions.
 //! * [`experiments`] — drivers that regenerate every figure in the paper.
+//! * [`sweep`] — the declarative scenario-sweep engine: TOML grid specs
+//!   expanded into content-addressed jobs, a resumable journaled queue
+//!   over one two-level thread budget, and a JSONL/CSV result sink; the
+//!   figure drivers delegate execution to it, and `lad sweep` runs
+//!   arbitrary attack × rule × compressor × participation grids.
 //! * [`util::parallel`] — the zero-dependency parallel engine (persistent
 //!   `Pool` + scoped-spawn fallback) behind the device loop, the shared
 //!   Gram distance kernel of the O(N²Q) aggregation rules
@@ -57,6 +62,7 @@ pub mod net;
 pub mod proptest_lite;
 pub mod runtime;
 pub mod server;
+pub mod sweep;
 pub mod theory;
 pub mod util;
 

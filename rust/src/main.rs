@@ -42,11 +42,19 @@ SUBCOMMANDS
   fig6              loss curves, compressed communication  [--iters T --oracle O --threads W --out DIR]
   e2e               transformer e2e via PJRT artifacts     [--iters T --d D]
   byz-sweep         final loss vs Byzantine count ablation [--d D --iters T --threads W]
+  sweep             declarative scenario sweep (TOML grid over attack x rule x
+                    compressor x f x d x sigma_h x stall_prob x deadline x seed)
+                    --spec FILE | --preset partial-participation|attack-zoo
+                    [--out DIR] [--resume] [--limit N] [--threads W]
+                    journals each job to DIR/manifest.jsonl; --resume skips
+                    finished jobs and the final results.jsonl/results.csv are
+                    bit-identical to an uninterrupted run
   kappa             estimate robustness coefficient        [--agg RULE --n N --honest H]
   theory            print closed-form constants            [--n N --honest H --d D --delta X]
   node-leader       serve one run to remote workers over TCP/UDS
                     [train flags or --config FILE] --listen tcp://HOST:PORT|uds:PATH
-                    [--gather-deadline-ms MS] [--device-compression] [--out DIR]
+                    [--gather-deadline-ms MS] [--join-deadline-ms MS]
+                    [--device-compression] [--out DIR]
   node-worker       join a leader as one device
                     --connect tcp://HOST:PORT|uds:PATH --device I [--config FILE]
   artifacts-check   load artifacts, compare vs native oracle
@@ -84,6 +92,7 @@ fn run() -> Result<()> {
         Some("fig6") => cmd_fig6(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("byz-sweep") => cmd_byz_sweep(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("kappa") => cmd_kappa(&args),
         Some("theory") => cmd_theory(&args),
         Some("node-leader") => cmd_node_leader(&args),
@@ -269,12 +278,48 @@ fn cmd_byz_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use lad::sweep::{queue, scenarios, SweepSpec};
+    use lad::util::parallel::Parallelism;
+    let spec = match (args.get("spec").map(str::to_string), args.get("preset")) {
+        (Some(path), None) => SweepSpec::from_file(path)?,
+        (None, Some(name)) => scenarios::preset(name)?,
+        (Some(_), Some(_)) => bail!("--spec and --preset are mutually exclusive"),
+        (None, None) => bail!("lad sweep needs --spec FILE or --preset NAME (try `lad help`)"),
+    };
+    let out_dir = args.get_str("out", &format!("results/sweep_{}", spec.name));
+    let resume = args.has_flag("resume");
+    let limit = match args.get_usize("limit", 0)? {
+        0 => None,
+        l => Some(l),
+    };
+    let threads = args.get_usize("threads", 0)?;
+    args.reject_unknown()?;
+    let outcome = queue::run_sweep(
+        &spec,
+        std::path::Path::new(&out_dir),
+        resume,
+        limit,
+        Parallelism::new(threads),
+    )?;
+    println!(
+        "sweep {}: {} jobs — {} ran, {} skipped (journaled), {} pending",
+        spec.name, outcome.total, outcome.ran, outcome.skipped, outcome.pending
+    );
+    println!("journal: {:?}", outcome.manifest_path);
+    match (&outcome.results_path, &outcome.csv_path) {
+        (Some(r), Some(c)) => println!("written {r:?} and {c:?}"),
+        _ => println!("sweep incomplete — rerun with --resume to finish the remaining jobs"),
+    }
+    Ok(())
+}
+
 fn cmd_node_leader(args: &Args) -> Result<()> {
-    use lad::net::Transport as _;
     use lad::util::parallel::Pool;
     let cfg = cfg_from_args(args)?;
     let addr = args.get_str("listen", &cfg.net.addr);
     let deadline_ms = args.get_u64("gather-deadline-ms", cfg.net.gather_deadline_ms)?;
+    let join_ms = args.get_u64("join-deadline-ms", cfg.net.join_deadline_ms)?;
     let device_compression =
         args.has_flag("device-compression") || cfg.net.device_compression;
     let out_dir = args.get_str("out", "results");
@@ -291,12 +336,6 @@ fn cmd_node_leader(args: &Args) -> Result<()> {
         cfg.n_devices,
         net::config_digest(&cfg)
     );
-    let mut links = Vec::with_capacity(cfg.n_devices);
-    for i in 0..cfg.n_devices {
-        let link = listener.accept()?;
-        println!("  [{}/{}] {}", i + 1, cfg.n_devices, link.peer());
-        links.push(link);
-    }
     let pool = Pool::new(cfg.threads);
     let agg = aggregation::from_config_pooled(&cfg, &pool);
     let atk = attack::from_kind(cfg.attack);
@@ -311,12 +350,16 @@ fn cmd_node_leader(args: &Args) -> Result<()> {
             gather_deadline: (deadline_ms > 0)
                 .then(|| std::time::Duration::from_millis(deadline_ms)),
             device_compression,
+            join_deadline: (join_ms > 0)
+                .then(|| std::time::Duration::from_millis(join_ms)),
         },
         pool,
         send_dataset: true,
     };
+    // serve() owns the accept loop: a connection that never sends a valid
+    // Join is dropped after --join-deadline-ms and its slot reclaimed
     let mut x0 = vec![0.0f32; cfg.dim];
-    let trace = leader.run(links, &mut x0, "node-leader", &mut Rng::new(cfg.seed ^ 0x7A17))?;
+    let trace = leader.serve(&listener, &mut x0, "node-leader", &mut Rng::new(cfg.seed ^ 0x7A17))?;
     println!("{}", trace.summary());
     std::fs::create_dir_all(&out_dir)?;
     let path = format!("{out_dir}/node_trace.csv");

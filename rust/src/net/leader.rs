@@ -20,6 +20,15 @@
 //! tag. Without a deadline (the default, and the trace-parity mode) the
 //! leader waits for every device, and a disconnect is an error.
 //!
+//! **Join deadline.** With [`LeaderOpts::join_deadline`] set, a
+//! connection that goes silent before completing a valid `Join` is
+//! dropped after the deadline instead of blocking startup forever;
+//! under [`Leader::serve`] (which owns the accept loop) the device slot
+//! is then reclaimed by the next connection, so a stray connector
+//! cannot permanently occupy one of the N slots. The deadline is
+//! per-read, not per-handshake — a deliberate byte-trickling adversary
+//! still needs concurrent handshakes to defeat (ROADMAP).
+//!
 //! **Determinism.** With every device live, traces are bit-identical to
 //! `Trainer::run`'s central fast path: the leader consumes the run RNG in
 //! the same order (assignment, then attack crafting), per-device
@@ -86,6 +95,17 @@ pub struct LeaderOpts {
     /// `false` reproduces the leader-side compression of the historical
     /// cluster simulation (and keeps omniscient attacks exact).
     pub device_compression: bool,
+    /// Per-link Join-handshake budget. `None` waits forever (the
+    /// trusting default for pre-connected in-process links). With a
+    /// deadline set, a connection that goes **silent** for this long
+    /// before completing a valid `Join` is dropped — and under
+    /// [`Leader::serve`] its device slot is reclaimed by the accept
+    /// loop, so a stray connection cannot wedge startup (ROADMAP
+    /// transport-hardening item). Note the deadline bounds each *read*,
+    /// not the handshake as a whole: an adversary trickling one byte per
+    /// deadline can still hold the serial accept loop (see ROADMAP —
+    /// concurrent handshakes are the remaining hardening step).
+    pub join_deadline: Option<Duration>,
 }
 
 /// The server of a multi-node run: configuration, dataset, and the
@@ -106,8 +126,84 @@ pub struct Leader<'a> {
 }
 
 impl Leader<'_> {
-    /// Handshake every connection, then run `cfg.iters` iterations of
-    /// Algorithm 1/2 and return the metric trace (final iterate in `x0`).
+    /// Shape checks shared by the [`Leader::run`] / [`Leader::serve`]
+    /// entry points.
+    fn check_shapes(&self, x0: &[f32]) -> Result<()> {
+        let cfg = self.cfg;
+        cfg.validate()?;
+        let n = cfg.n_devices;
+        ensure!(self.ds.n() == n, "dataset has {} subsets, config {n}", self.ds.n());
+        ensure!(self.ds.dim() == cfg.dim, "dataset dim {} != config {}", self.ds.dim(), cfg.dim);
+        ensure!(x0.len() == cfg.dim, "x0 dim {} != config {}", x0.len(), cfg.dim);
+        Ok(())
+    }
+
+    /// Receive and validate one `Join` (honoring the join deadline);
+    /// returns the claimed device id and the bytes read. The recv timeout
+    /// is cleared again before the link joins the training loop, whose
+    /// reader threads must block indefinitely.
+    fn recv_join(&self, link: &mut Box<dyn Transport>, digest: u64) -> Result<(usize, u64)> {
+        let n = self.cfg.n_devices;
+        if let Some(d) = self.opts.join_deadline {
+            link.set_recv_timeout(Some(d))?;
+        }
+        let (msg, nb) = link.recv().context("waiting for a worker join")?;
+        if self.opts.join_deadline.is_some() {
+            link.set_recv_timeout(None)?;
+        }
+        let (version, device, worker_digest) = match msg {
+            Msg::Join { version, device, digest } => (version, device, digest),
+            other => bail!("expected join, got {other:?} from {}", link.peer()),
+        };
+        ensure!(
+            version == WIRE_VERSION,
+            "protocol version mismatch: worker {version}, leader {WIRE_VERSION}"
+        );
+        let device = device as usize;
+        ensure!(device < n, "worker joined as device {device}, config has {n}");
+        ensure!(
+            worker_digest == 0 || worker_digest == digest,
+            "config digest mismatch: worker {device} has {worker_digest:#018x}, \
+             leader {digest:#018x}"
+        );
+        Ok((device, nb))
+    }
+
+    /// Send the `Hello` that completes one device's handshake; returns
+    /// bytes written.
+    fn send_hello(
+        &self,
+        link: &mut Box<dyn Transport>,
+        device: usize,
+        digest: u64,
+        comp_seed: u64,
+    ) -> Result<u64> {
+        let cfg = self.cfg;
+        let hello = Msg::Hello {
+            version: WIRE_VERSION,
+            device: device as u32,
+            n_devices: cfg.n_devices as u32,
+            dim: cfg.dim as u32,
+            byzantine: device >= cfg.n_honest,
+            device_compression: self.opts.device_compression,
+            comp_seed,
+            digest,
+            compression: cfg.compression,
+            dataset: if self.send_dataset {
+                Some(DatasetBlock::from_dataset(self.ds))
+            } else {
+                None
+            },
+        };
+        link.send(&hello)
+    }
+
+    /// Handshake every pre-established connection, then run `cfg.iters`
+    /// iterations of Algorithm 1/2 and return the metric trace (final
+    /// iterate in `x0`). A handshake failure — including a join-deadline
+    /// expiry — is an error here, since the fixed link set leaves no way
+    /// to refill the slot; use [`Leader::serve`] to own the accept loop
+    /// and reclaim slots instead.
     pub fn run(
         &self,
         links: Vec<Box<dyn Transport>>,
@@ -116,62 +212,102 @@ impl Leader<'_> {
         rng: &mut Rng,
     ) -> Result<TrainTrace> {
         let cfg = self.cfg;
-        cfg.validate()?;
+        self.check_shapes(x0)?;
         let n = cfg.n_devices;
         ensure!(links.len() == n, "need {n} connections, got {}", links.len());
-        ensure!(self.ds.n() == n, "dataset has {} subsets, config {n}", self.ds.n());
-        ensure!(self.ds.dim() == cfg.dim, "dataset dim {} != config {}", self.ds.dim(), cfg.dim);
-        ensure!(x0.len() == cfg.dim, "x0 dim {} != config {}", x0.len(), cfg.dim);
-        let timer = Timer::start();
         let digest = config_digest(cfg);
         // Same pre-split per-device compression streams as Trainer::run —
         // the seeds go to honest devices in Hello (device-side mode), the
         // leader keeps the streams for everything it compresses itself.
         let comp_seeds = rng.split_seeds(n);
-        let mut comp_rngs: Vec<Rng> = comp_seeds.iter().map(|&s| Rng::new(s)).collect();
         let mut wire_up = 0u64;
         let mut wire_down = 0u64;
 
         // ---- handshake: Join in, Hello out, order links by device id ----
         let mut by_dev: Vec<Option<Box<dyn Transport>>> = (0..n).map(|_| None).collect();
         for mut link in links {
-            let (msg, nb) = link.recv().context("waiting for a worker join")?;
+            let (device, nb) = self.recv_join(&mut link, digest)?;
             wire_up += nb;
-            let (version, device, worker_digest) = match msg {
-                Msg::Join { version, device, digest } => (version, device, digest),
-                other => bail!("expected join, got {other:?} from {}", link.peer()),
-            };
-            ensure!(
-                version == WIRE_VERSION,
-                "protocol version mismatch: worker {version}, leader {WIRE_VERSION}"
-            );
-            let device = device as usize;
-            ensure!(device < n, "worker joined as device {device}, config has {n}");
             ensure!(by_dev[device].is_none(), "device {device} joined twice");
-            ensure!(
-                worker_digest == 0 || worker_digest == digest,
-                "config digest mismatch: worker {device} has {worker_digest:#018x}, \
-                 leader {digest:#018x}"
-            );
-            let hello = Msg::Hello {
-                version: WIRE_VERSION,
-                device: device as u32,
-                n_devices: n as u32,
-                dim: cfg.dim as u32,
-                byzantine: device >= cfg.n_honest,
-                device_compression: self.opts.device_compression,
-                comp_seed: comp_seeds[device],
-                digest,
-                compression: cfg.compression,
-                dataset: if self.send_dataset {
-                    Some(DatasetBlock::from_dataset(self.ds))
-                } else {
-                    None
-                },
-            };
-            wire_down += link.send(&hello)?;
+            wire_down += self.send_hello(&mut link, device, digest, comp_seeds[device])?;
             by_dev[device] = Some(link);
         }
+        self.train(by_dev, &comp_seeds, wire_up, wire_down, x0, label, rng)
+    }
+
+    /// [`Leader::run`], but owning the accept loop: keep accepting
+    /// connections until all `n` device slots hold a handshaked worker.
+    /// A connection that fails its handshake — never sends a `Join`
+    /// within [`LeaderOpts::join_deadline`], sends garbage, or claims an
+    /// occupied slot — is dropped and its slot stays open for the next
+    /// connection, so a stray or hostile connector cannot permanently
+    /// occupy one of the N slots.
+    pub fn serve(
+        &self,
+        listener: &super::transport::NetListener,
+        x0: &mut Vec<f32>,
+        label: &str,
+        rng: &mut Rng,
+    ) -> Result<TrainTrace> {
+        let cfg = self.cfg;
+        self.check_shapes(x0)?;
+        let n = cfg.n_devices;
+        let digest = config_digest(cfg);
+        let comp_seeds = rng.split_seeds(n);
+        let mut wire_up = 0u64;
+        let mut wire_down = 0u64;
+        let mut by_dev: Vec<Option<Box<dyn Transport>>> = (0..n).map(|_| None).collect();
+        let mut filled = 0usize;
+        while filled < n {
+            let mut link = listener.accept()?;
+            let peer = link.peer();
+            match self.recv_join(&mut link, digest) {
+                Ok((device, join_bytes)) => {
+                    if by_dev[device].is_some() {
+                        eprintln!(
+                            "leader: dropping duplicate join for device {device} from {peer}"
+                        );
+                        continue;
+                    }
+                    match self.send_hello(&mut link, device, digest, comp_seeds[device]) {
+                        Ok(nb) => {
+                            // count handshake bytes only for admitted
+                            // devices — rejected connections are not part
+                            // of the run the trace measures
+                            wire_up += join_bytes;
+                            wire_down += nb;
+                            by_dev[device] = Some(link);
+                            filled += 1;
+                            eprintln!("leader: [{filled}/{n}] device {device} joined ({peer})");
+                        }
+                        Err(e) => {
+                            eprintln!("leader: dropping device {device} ({peer}): {e:#}")
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("leader: dropping connection from {peer}: {e:#} — slot reclaimed")
+                }
+            }
+        }
+        self.train(by_dev, &comp_seeds, wire_up, wire_down, x0, label, rng)
+    }
+
+    /// The training loop proper, over a fully handshaked device set.
+    fn train(
+        &self,
+        by_dev: Vec<Option<Box<dyn Transport>>>,
+        comp_seeds: &[u64],
+        mut wire_up: u64,
+        mut wire_down: u64,
+        x0: &mut Vec<f32>,
+        label: &str,
+        rng: &mut Rng,
+    ) -> Result<TrainTrace> {
+        let cfg = self.cfg;
+        let n = cfg.n_devices;
+        let timer = Timer::start();
+        let mut comp_rngs: Vec<Rng> = comp_seeds.iter().map(|&s| Rng::new(s)).collect();
 
         // ---- split: sends stay here, one detached reader per device ----
         // Readers forward (device, Some((msg, bytes))) into a single

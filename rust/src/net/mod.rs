@@ -61,4 +61,4 @@ pub mod worker;
 pub use leader::{Leader, LeaderOpts, MISS_RETIRE_STREAK};
 pub use transport::{connect, ChannelTransport, NetListener, TcpTransport, Transport};
 pub use wire::{config_digest, DatasetBlock, Msg, Payload, WIRE_VERSION};
-pub use worker::{run_worker, WorkerReport};
+pub use worker::{run_worker, run_worker_opts, WorkerOpts, WorkerReport};

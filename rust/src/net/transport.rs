@@ -45,6 +45,12 @@ pub trait Transport: Send {
         let _ = t;
         Ok(())
     }
+    /// Bound blocking receives: with a timeout set, `recv` errors out
+    /// instead of waiting forever on a silent peer. The leader sets this
+    /// during the Join handshake (`LeaderOpts::join_deadline`) so a stray
+    /// connection that never joins cannot occupy a device slot, and
+    /// clears it before the training loop's reader threads take over.
+    fn set_recv_timeout(&mut self, t: Option<Duration>) -> Result<()>;
     /// Human-readable peer description for diagnostics.
     fn peer(&self) -> String;
 }
@@ -58,6 +64,7 @@ pub trait Transport: Send {
 pub struct ChannelTransport {
     tx: Option<mpsc::Sender<Vec<u8>>>,
     rx: Option<mpsc::Receiver<Vec<u8>>>,
+    recv_timeout: Option<Duration>,
 }
 
 impl ChannelTransport {
@@ -66,8 +73,8 @@ impl ChannelTransport {
         let (a_tx, b_rx) = mpsc::channel();
         let (b_tx, a_rx) = mpsc::channel();
         (
-            ChannelTransport { tx: Some(a_tx), rx: Some(a_rx) },
-            ChannelTransport { tx: Some(b_tx), rx: Some(b_rx) },
+            ChannelTransport { tx: Some(a_tx), rx: Some(a_rx), recv_timeout: None },
+            ChannelTransport { tx: Some(b_tx), rx: Some(b_rx), recv_timeout: None },
         )
     }
 }
@@ -83,7 +90,18 @@ impl Transport for ChannelTransport {
 
     fn recv(&mut self) -> Result<(Msg, u64)> {
         let rx = self.rx.as_ref().context("recv on a send-only channel half")?;
-        let bytes = rx.recv().map_err(|_| anyhow!("channel peer disconnected"))?;
+        let bytes = match self.recv_timeout {
+            None => rx.recv().map_err(|_| anyhow!("channel peer disconnected"))?,
+            Some(d) => match rx.recv_timeout(d) {
+                Ok(b) => b,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    return Err(anyhow!("channel recv timed out after {d:?}"))
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(anyhow!("channel peer disconnected"))
+                }
+            },
+        };
         let n = bytes.len() as u64;
         let payload = frame::decode_frame(&bytes)?;
         Ok((Msg::decode(payload)?, n))
@@ -92,9 +110,14 @@ impl Transport for ChannelTransport {
     fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>)> {
         let me = *self;
         Ok((
-            Box::new(ChannelTransport { tx: me.tx, rx: None }),
-            Box::new(ChannelTransport { tx: None, rx: me.rx }),
+            Box::new(ChannelTransport { tx: me.tx, rx: None, recv_timeout: None }),
+            Box::new(ChannelTransport { tx: None, rx: me.rx, recv_timeout: me.recv_timeout }),
         ))
+    }
+
+    fn set_recv_timeout(&mut self, t: Option<Duration>) -> Result<()> {
+        self.recv_timeout = t;
+        Ok(())
     }
 
     fn peer(&self) -> String {
@@ -144,6 +167,11 @@ impl Transport for TcpTransport {
         Ok(())
     }
 
+    fn set_recv_timeout(&mut self, t: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(t).context("setting tcp read timeout")?;
+        Ok(())
+    }
+
     fn peer(&self) -> String {
         self.stream
             .peer_addr()
@@ -187,6 +215,11 @@ impl Transport for UdsTransport {
 
     fn set_send_timeout(&mut self, t: Option<Duration>) -> Result<()> {
         self.stream.set_write_timeout(t).context("setting uds write timeout")?;
+        Ok(())
+    }
+
+    fn set_recv_timeout(&mut self, t: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(t).context("setting uds read timeout")?;
         Ok(())
     }
 
@@ -369,6 +402,22 @@ mod tests {
         drop(server);
         drop(listener); // removes the socket file
         assert!(!path.exists());
+    }
+
+    #[test]
+    fn channel_recv_timeout_fires_and_clears() {
+        let (a, mut b) = ChannelTransport::pair();
+        let mut a = Box::new(a) as Box<dyn Transport>;
+        a.set_recv_timeout(Some(Duration::from_millis(20))).unwrap();
+        assert!(a.recv().is_err(), "silent peer must time out");
+        a.set_recv_timeout(None).unwrap();
+        b.send(&Msg::Shutdown).unwrap();
+        assert_eq!(a.recv().unwrap().0, Msg::Shutdown);
+        // the timeout survives a split onto the receive half
+        let mut c = Box::new(b) as Box<dyn Transport>;
+        c.set_recv_timeout(Some(Duration::from_millis(20))).unwrap();
+        let (_tx, mut rx) = c.split().unwrap();
+        assert!(rx.recv().is_err(), "split receive half keeps the timeout");
     }
 
     #[test]

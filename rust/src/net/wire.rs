@@ -675,7 +675,9 @@ impl Msg {
 // config digest
 // ---------------------------------------------------------------------------
 
-fn fnv1a64(bytes: &[u8]) -> u64 {
+/// FNV-1a 64-bit hash — shared by [`config_digest`] and the sweep engine's
+/// content-addressed job ids (`sweep::spec`).
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h = 0xCBF2_9CE4_8422_2325u64;
     for &b in bytes {
         h ^= b as u64;

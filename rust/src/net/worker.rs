@@ -14,6 +14,12 @@
 //! The same function serves every transport: the in-process cluster
 //! simulation passes a borrowed dataset (no copy per worker), while the
 //! `lad node-worker` CLI decodes the dataset from `Hello`.
+//!
+//! [`run_worker_opts`] adds fault injection for the partial-participation
+//! experiments: with [`WorkerOpts::stall_prob`] set, the worker swallows
+//! broadcasts from a private seeded stream instead of uploading —
+//! deterministic crash-fault emulation against the leader's gather
+//! deadline and retirement machinery.
 
 use super::transport::Transport;
 use super::wire::{Msg, Payload, WIRE_VERSION};
@@ -30,10 +36,27 @@ pub struct WorkerReport {
     pub device: usize,
     /// Iterations served (broadcasts answered with an upload).
     pub iters: usize,
+    /// Broadcasts deliberately left unanswered ([`WorkerOpts::stall_prob`]).
+    pub stalled: usize,
     /// Uplink bytes written (frames included).
     pub up_bytes: u64,
     /// Downlink bytes read (frames included).
     pub down_bytes: u64,
+}
+
+/// Fault-injection knobs for a worker — the device side of the
+/// partial-participation experiments (`sweep::scenarios`).
+#[derive(Debug, Clone, Default)]
+pub struct WorkerOpts {
+    /// Per-broadcast probability of simulating a stall: the worker
+    /// swallows the broadcast and never uploads for that iteration, so
+    /// the leader's gather deadline expires and (on a long enough streak)
+    /// retires the device. `0.0` (the default) never stalls.
+    pub stall_prob: f64,
+    /// Seed of the private stall stream. Stall decisions draw from their
+    /// own `Rng`, never from training randomness, so a stalling worker's
+    /// served iterations stay bit-identical to a live worker's.
+    pub stall_seed: u64,
 }
 
 /// Run one device until the leader shuts the run down.
@@ -44,10 +67,21 @@ pub struct WorkerReport {
 /// * `local_digest`: digest of a locally loaded config (`--config`),
 ///   verified against the leader's; `None` trusts the leader.
 pub fn run_worker(
+    link: Box<dyn Transport>,
+    device: usize,
+    local_ds: Option<&LinRegDataset>,
+    local_digest: Option<u64>,
+) -> Result<WorkerReport> {
+    run_worker_opts(link, device, local_ds, local_digest, &WorkerOpts::default())
+}
+
+/// [`run_worker`] with fault-injection options (see [`WorkerOpts`]).
+pub fn run_worker_opts(
     mut link: Box<dyn Transport>,
     device: usize,
     local_ds: Option<&LinRegDataset>,
     local_digest: Option<u64>,
+    opts: &WorkerOpts,
 ) -> Result<WorkerReport> {
     let mut up = 0u64;
     let mut down = 0u64;
@@ -110,14 +144,23 @@ pub fn run_worker(
     }
     let comp = compress::from_kind(compression);
     let mut comp_rng = Rng::new(comp_seed);
+    let mut stall_rng = Rng::new(opts.stall_seed);
     let compress_uplink = device_compression && !byzantine;
     let mut iters = 0usize;
+    let mut stalled = 0usize;
 
     loop {
         let (msg, n) = link.recv().context("connection to leader lost")?;
         down += n;
         match msg {
             Msg::Broadcast { iter, x, subsets } => {
+                // crash-fault emulation: swallow the broadcast before any
+                // compute so a stalled iteration consumes no training
+                // randomness (the stall stream is private)
+                if opts.stall_prob > 0.0 && stall_rng.bernoulli(opts.stall_prob) {
+                    stalled += 1;
+                    continue;
+                }
                 ensure!(!subsets.is_empty(), "broadcast with no subsets");
                 ensure!(x.len() == ds.dim(), "broadcast x has dim {}", x.len());
                 // coded vector: mean of the assigned subset gradients —
@@ -148,5 +191,5 @@ pub fn run_worker(
             other => bail!("unexpected message from leader: {other:?}"),
         }
     }
-    Ok(WorkerReport { device, iters, up_bytes: up, down_bytes: down })
+    Ok(WorkerReport { device, iters, stalled, up_bytes: up, down_bytes: down })
 }

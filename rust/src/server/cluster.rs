@@ -20,12 +20,28 @@ use crate::compress::Compressor;
 use crate::config::TrainConfig;
 use crate::data::linreg::LinRegDataset;
 use crate::net::transport::{ChannelTransport, Transport};
-use crate::net::worker::run_worker;
+use crate::net::worker::{run_worker_opts, WorkerOpts};
 use crate::net::{Leader, LeaderOpts};
 use crate::server::metrics::TrainTrace;
 use crate::util::parallel::Pool;
 use crate::util::rng::Rng;
 use crate::Result;
+
+/// Fault-injection options for [`run_cluster_with`] — the
+/// partial-participation experiment knobs (sweep `stall_prob` ×
+/// `gather_deadline_ms` axes).
+#[derive(Debug, Clone, Default)]
+pub struct ClusterOpts {
+    /// Leader policy (gather deadline, compression site, join deadline).
+    pub leader: LeaderOpts,
+    /// Per-broadcast stall probability applied to every worker (each
+    /// worker draws from its own pre-split stream, so stall patterns are
+    /// deterministic and independent of thread scheduling). Requires a
+    /// gather deadline — a deadline-less leader would wait forever.
+    pub stall_prob: f64,
+    /// Seed the per-worker stall streams are split from.
+    pub stall_seed: u64,
+}
 
 /// Run Algorithm 1/2 over real threads + the wire protocol. Honest workers
 /// compute their own coded vector from the shared dataset; Byzantine
@@ -65,17 +81,45 @@ pub fn run_cluster_in(
     rng: &mut Rng,
     pool: &Pool,
 ) -> Result<TrainTrace> {
+    run_cluster_with(cfg, ds, agg, attack, comp, x0, label, rng, pool, &ClusterOpts::default())
+}
+
+/// [`run_cluster_in`] with fault injection: per-worker stall streams and
+/// the leader's crash-tolerance knobs ([`ClusterOpts`]). This is the
+/// engine behind the partial-participation sweep — a stalled upload
+/// costs a gather-deadline miss, a long enough streak retires the device
+/// (`net::MISS_RETIRE_STREAK`), and the trace's anomaly counter records
+/// every miss. With a generous deadline the miss set is exactly the
+/// (seeded, deterministic) stall set, so traces are reproducible.
+pub fn run_cluster_with(
+    cfg: &TrainConfig,
+    ds: &LinRegDataset,
+    agg: &dyn Aggregator,
+    attack: &dyn Attack,
+    comp: &dyn Compressor,
+    x0: &mut Vec<f32>,
+    label: &str,
+    rng: &mut Rng,
+    pool: &Pool,
+    opts: &ClusterOpts,
+) -> Result<TrainTrace> {
     cfg.validate()?;
+    anyhow::ensure!(
+        opts.stall_prob == 0.0 || opts.leader.gather_deadline.is_some(),
+        "stalling workers need a gather deadline (the leader would wait forever)"
+    );
     let n = cfg.n_devices;
+    let stall_seeds = Rng::new(opts.stall_seed).split_seeds(n);
     std::thread::scope(|scope| {
         let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
         for i in 0..n {
             let (leader_half, worker_half) = ChannelTransport::pair();
             links.push(Box::new(leader_half));
+            let wopts = WorkerOpts { stall_prob: opts.stall_prob, stall_seed: stall_seeds[i] };
             scope.spawn(move || {
                 // worker event loop: join, then answer every broadcast;
                 // errors surface on the leader side as a lost connection
-                let _ = run_worker(Box::new(worker_half), i, Some(ds), None);
+                let _ = run_worker_opts(Box::new(worker_half), i, Some(ds), None, &wopts);
             });
         }
         let leader = Leader {
@@ -84,7 +128,7 @@ pub fn run_cluster_in(
             agg,
             attack,
             comp,
-            opts: LeaderOpts::default(),
+            opts: opts.leader.clone(),
             pool: pool.clone(),
             send_dataset: false,
         };

@@ -1,0 +1,37 @@
+//! Declarative scenario-sweep engine: TOML-driven grid expansion, a
+//! resumable job queue, and a JSONL result sink.
+//!
+//! The paper's claims are comparative — LAD / Com-LAD against the robust
+//! aggregation baselines across attacks, Byzantine counts and compression
+//! budgets — and this module is the machine that runs such comparisons
+//! from one declarative spec instead of a bespoke driver per figure:
+//!
+//! * [`spec`] — the TOML scenario spec: `[grid]` lists over the
+//!   experiment axes (attack, rule, compressor, Byzantine count `f`,
+//!   coding load `d`, heterogeneity, stall probability, gather deadline,
+//!   seeds), `[fixed]`/`[net]` scalar overrides, Cartesian expansion in a
+//!   canonical axis order, and a content-addressed id per job.
+//! * [`queue`] — execution over one [`crate::util::parallel::Pool::budgeted`]
+//!   two-level thread budget, journaling every completed job so `--resume`
+//!   skips finished work; resumed and uninterrupted sweeps emit
+//!   bit-identical results.
+//! * [`sink`] — the append-only JSONL journal/results pair plus a CSV
+//!   pivot for plotting. Records echo the full config and every
+//!   deterministic trace field (wall-clock is excluded by design).
+//! * [`scenarios`] — flagship presets: the partial-participation sweep
+//!   (stall probability × gather deadline × rule through the `net`
+//!   leader's retirement path) and the attack-zoo robustness grid.
+//!
+//! The figure drivers (`fig4`/`fig5`/`fig6`/`byz-sweep`) build their
+//! variant lists as job batches and delegate execution to [`queue::execute`],
+//! so the engine has in-tree consumers whose CSVs are pinned bit-identical
+//! to the pre-engine drivers. CLI: `lad sweep --spec FILE [--resume]
+//! [--out DIR] [--limit N]` or `lad sweep --preset NAME`.
+
+pub mod queue;
+pub mod scenarios;
+pub mod sink;
+pub mod spec;
+
+pub use queue::{execute, run_job, run_sweep, SweepOutcome};
+pub use spec::{jobs_from_variants, Grid, Job, SweepSpec};

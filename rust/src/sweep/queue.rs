@@ -1,0 +1,309 @@
+//! The resumable job queue: one shared two-level thread budget, a
+//! crash-safe journal, and deterministic results.
+//!
+//! Execution is two-level over one [`Pool::budgeted`] worker set: the
+//! outer level fans jobs out, each job's inner stages (oracle,
+//! compression, aggregation) run on a borrowed slice capped by the job's
+//! own `threads` — total live parallelism is bounded by the budget no
+//! matter how many jobs run concurrently, and thread counts never change
+//! a trace (the `util::parallel` determinism contract). The exception is
+//! wall-clock-sensitive jobs (gather deadline / stall injection, whose
+//! cluster runs also spawn one OS thread per device outside the pool):
+//! they execute **serially after** the concurrent leg, one cluster at a
+//! time, so deadline misses reflect the seeded stall set rather than
+//! fan-out load — reruns and resumes stay reproducible.
+//!
+//! [`run_sweep`] journals every completed job to `manifest.jsonl`
+//! (append + flush per job), so a killed sweep resumes with `--resume`
+//! by skipping journaled ids; once all jobs are journaled it rewrites
+//! them in spec order as `results.jsonl` + a `results.csv` pivot. Journal
+//! lines are copied verbatim into the results, so an interrupted-and-
+//! resumed sweep emits output bit-identical to an uninterrupted one.
+//!
+//! [`execute`] is the same engine without the journal — the in-memory
+//! path the figure drivers (fig4/5/6, byz-sweep) delegate to.
+
+use crate::config::OracleKind;
+use crate::data::linreg::LinRegDataset;
+use crate::experiments::common::{run_variant_in, Variant};
+use crate::net::LeaderOpts;
+use crate::server::cluster::{run_cluster_with, ClusterOpts};
+use crate::server::TrainTrace;
+use crate::sweep::sink;
+use crate::sweep::spec::{Job, SweepSpec};
+use crate::util::parallel::{Parallelism, Pool};
+use crate::util::rng::Rng;
+use crate::{aggregation, attack, compress, Result};
+use anyhow::{ensure, Context};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Salt between a job's run seed and the stall stream fed to the
+/// crash-fault workers, so stalling never replays training randomness.
+pub const STALL_SEED_SALT: u64 = 0x57A11;
+
+/// Cache key of a generated dataset: everything `LinRegDataset::generate`
+/// consumes. Jobs agreeing on all four share one dataset within a batch —
+/// the figure-driver shape (one dataset, many variants) pays one
+/// generation, exactly like the pre-engine shared borrow.
+type DsKey = (u64, usize, usize, u64);
+
+fn ds_key(job: &Job) -> DsKey {
+    (job.data_seed, job.cfg.n_devices, job.cfg.dim, job.cfg.sigma_h.to_bits())
+}
+
+/// The one place a job's dataset is generated — [`ds_key`] names exactly
+/// these inputs, so the cache and the standalone path cannot drift.
+fn generate_dataset(job: &Job) -> LinRegDataset {
+    let mut rng = Rng::new(job.data_seed);
+    LinRegDataset::generate(job.cfg.n_devices, job.cfg.dim, job.cfg.sigma_h, &mut rng)
+}
+
+/// Per-batch dataset cache. Generation happens under the one lock, so two
+/// concurrent jobs with the same key never generate twice; distinct keys
+/// convoy on their *first* touch, which is fine — generation is trivial
+/// next to the training run that follows.
+type DsCache = Mutex<BTreeMap<DsKey, std::sync::Arc<LinRegDataset>>>;
+
+fn dataset_for(job: &Job, cache: &DsCache) -> std::sync::Arc<LinRegDataset> {
+    let mut map = cache.lock().unwrap();
+    std::sync::Arc::clone(
+        map.entry(ds_key(job)).or_insert_with(|| std::sync::Arc::new(generate_dataset(job))),
+    )
+}
+
+/// Run one job to its trace. Deterministic: the dataset comes from
+/// `Rng::new(data_seed)`, the run from `Rng::new(run_seed)`, and the pool
+/// only schedules. Jobs with a stall probability or a gather deadline run
+/// through the `net::Leader` retirement path (in-process cluster over the
+/// real wire protocol); everything else takes the central fast path.
+pub fn run_job(job: &Job, pool: &Pool) -> Result<TrainTrace> {
+    run_job_on(job, &generate_dataset(job), pool)
+}
+
+/// [`run_job`] against an already-generated dataset (must match
+/// [`ds_key`] — the batch scheduler shares one dataset across agreeing
+/// jobs via the cache).
+fn run_job_on(job: &Job, ds: &LinRegDataset, pool: &Pool) -> Result<TrainTrace> {
+    let cfg = &job.cfg;
+    let faulty = job.stall_prob > 0.0 || cfg.net.gather_deadline_ms > 0;
+    if !faulty {
+        let v = Variant { label: job.label.clone(), cfg: cfg.clone(), draco_r: job.draco_r };
+        return run_variant_in(ds, &v, job.run_seed, pool);
+    }
+    ensure!(
+        cfg.net.gather_deadline_ms > 0,
+        "job {}: stall_prob > 0 needs gather_deadline_ms > 0",
+        job.label
+    );
+    ensure!(job.draco_r.is_none(), "job {}: DRACO has no partial-participation path", job.label);
+    ensure!(
+        cfg.oracle == OracleKind::NativeLinreg,
+        "job {}: partial-participation jobs need the native oracle",
+        job.label
+    );
+    let agg = aggregation::from_config_pooled(cfg, pool);
+    let atk = attack::from_kind(cfg.attack);
+    let comp = compress::from_kind(cfg.compression);
+    let opts = ClusterOpts {
+        leader: LeaderOpts {
+            gather_deadline: Some(Duration::from_millis(cfg.net.gather_deadline_ms)),
+            device_compression: cfg.net.device_compression,
+            join_deadline: None,
+        },
+        stall_prob: job.stall_prob,
+        stall_seed: job.run_seed ^ STALL_SEED_SALT,
+    };
+    let mut x0 = vec![0.0f32; cfg.dim];
+    run_cluster_with(
+        cfg,
+        ds,
+        agg.as_ref(),
+        atk.as_ref(),
+        comp.as_ref(),
+        &mut x0,
+        &job.label,
+        &mut Rng::new(job.run_seed),
+        pool,
+        &opts,
+    )
+}
+
+/// True when a job's outcome depends on wall-clock deadlines (gather
+/// deadline / stall injection): such jobs run one at a time with the full
+/// thread budget, never concurrently with sibling jobs, so an honest
+/// worker's upload cannot miss the deadline just because the machine was
+/// oversubscribed by the fan-out — reruns and resumes stay reproducible.
+fn is_wall_clock_sensitive(job: &Job) -> bool {
+    job.stall_prob > 0.0 || job.cfg.net.gather_deadline_ms > 0
+}
+
+/// The one scheduler behind both [`execute`] and [`run_sweep`]: run every
+/// job under a shared two-level budget — the deterministic-math jobs
+/// concurrently, the wall-clock-sensitive ones serially afterwards — and
+/// invoke `on_done` the moment each job completes (the journaling hook;
+/// called from worker threads, hence `Sync`). Returns traces in job order.
+fn execute_with(
+    jobs: &[&Job],
+    par: Parallelism,
+    on_done: &(dyn Fn(&Job, &TrainTrace) -> Result<()> + Sync),
+) -> Result<Vec<TrainTrace>> {
+    let fast: Vec<usize> =
+        (0..jobs.len()).filter(|&i| !is_wall_clock_sensitive(jobs[i])).collect();
+    let budget = Pool::budgeted(par.threads(), fast.len().max(1));
+    let cache: DsCache = Mutex::new(BTreeMap::new());
+    let mut out: Vec<Option<TrainTrace>> = (0..jobs.len()).map(|_| None).collect();
+    let done = budget.outer().par_map(&fast, |_, &i| -> Result<(usize, TrainTrace)> {
+        let ds = dataset_for(jobs[i], &cache);
+        let tr = run_job_on(jobs[i], &ds, &budget.inner_capped(jobs[i].cfg.threads))?;
+        eprintln!("  {}", tr.summary());
+        on_done(jobs[i], &tr)?;
+        Ok((i, tr))
+    });
+    for r in done {
+        let (i, tr) = r?;
+        out[i] = Some(tr);
+    }
+    for i in (0..jobs.len()).filter(|&i| is_wall_clock_sensitive(jobs[i])) {
+        let ds = dataset_for(jobs[i], &cache);
+        let tr = run_job_on(jobs[i], &ds, &budget.outer().borrow(jobs[i].cfg.threads))?;
+        eprintln!("  {}", tr.summary());
+        on_done(jobs[i], &tr)?;
+        out[i] = Some(tr);
+    }
+    Ok(out.into_iter().map(|t| t.expect("every job ran")).collect())
+}
+
+/// Run a job batch in memory (no journal) under one two-level budget;
+/// returns the traces in job order. This is the engine the figure
+/// drivers delegate to — traces are bit-identical to running each job
+/// serially with a private pool. Deadline-driven jobs
+/// ([`is_wall_clock_sensitive`]) are executed serially after the
+/// concurrent leg.
+pub fn execute(jobs: &[Job], par: Parallelism) -> Result<Vec<TrainTrace>> {
+    let refs: Vec<&Job> = jobs.iter().collect();
+    execute_with(&refs, par, &|_, _| Ok(()))
+}
+
+/// What a [`run_sweep`] call did.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    /// Jobs in the expanded spec.
+    pub total: usize,
+    /// Jobs executed by this call.
+    pub ran: usize,
+    /// Jobs skipped because the journal already had them (`--resume`).
+    pub skipped: usize,
+    /// Jobs still missing after this call (a `--limit` run).
+    pub pending: usize,
+    pub manifest_path: PathBuf,
+    /// Written only once every job is journaled.
+    pub results_path: Option<PathBuf>,
+    pub csv_path: Option<PathBuf>,
+}
+
+/// Expand and run a spec against an output directory.
+///
+/// * `resume = false` starts fresh (an existing journal is discarded);
+///   `resume = true` keeps it and skips every journaled job of this spec
+///   (journaled ids from an edited spec no longer in the grid are
+///   dropped, so a stale journal cannot leak foreign records).
+/// * `limit` caps how many pending jobs this call executes — the hook CI
+///   uses to exercise the kill-and-resume path deterministically.
+pub fn run_sweep(
+    spec: &SweepSpec,
+    out_dir: &Path,
+    resume: bool,
+    limit: Option<usize>,
+    par: Parallelism,
+) -> Result<SweepOutcome> {
+    let jobs = spec.expand()?;
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating sweep output dir {out_dir:?}"))?;
+    let manifest_path = out_dir.join("manifest.jsonl");
+    // results files are only ever valid for a *completed* run of *this*
+    // spec — remove them up front (they are rewritten below once every
+    // job is journaled) so a partial or edited-spec rerun can never leave
+    // a previous sweep's output masquerading as current
+    for stale in ["results.jsonl", "results.csv"] {
+        let p = out_dir.join(stale);
+        if p.exists() {
+            std::fs::remove_file(&p).with_context(|| format!("clearing stale {p:?}"))?;
+        }
+    }
+    let mut done: BTreeMap<String, String> = BTreeMap::new();
+    if resume {
+        done = sink::read_manifest(&manifest_path)?;
+        let ids: std::collections::BTreeSet<&str> = jobs.iter().map(|j| j.id.as_str()).collect();
+        let before = done.len();
+        done.retain(|id, _| ids.contains(id.as_str()));
+        if done.len() < before {
+            eprintln!(
+                "sweep: dropped {} journaled job(s) not in this spec (spec edited?)",
+                before - done.len()
+            );
+        }
+        // Compact the journal before appending: rewrite it (atomically)
+        // with exactly the retained lines. This clears a torn final line
+        // left by a kill mid-append — otherwise the next append would
+        // glue onto it and corrupt the journal mid-file — and drops
+        // edited-spec leftovers from disk, not just from memory.
+        let tmp = out_dir.join("manifest.jsonl.tmp");
+        let mut body = String::with_capacity(done.values().map(|l| l.len() + 1).sum());
+        for line in done.values() {
+            body.push_str(line);
+            body.push('\n');
+        }
+        std::fs::write(&tmp, body).with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, &manifest_path)
+            .with_context(|| format!("compacting manifest {manifest_path:?}"))?;
+    } else if manifest_path.exists() {
+        std::fs::remove_file(&manifest_path)
+            .with_context(|| format!("clearing stale manifest {manifest_path:?}"))?;
+    }
+    let skipped = done.len();
+    let pending: Vec<&Job> = jobs.iter().filter(|j| !done.contains_key(&j.id)).collect();
+    let to_run: &[&Job] = match limit {
+        Some(l) => &pending[..l.min(pending.len())],
+        None => &pending[..],
+    };
+    // journaled jobs keep their original lines; fresh jobs run on the
+    // shared scheduler (`execute_with`: concurrent leg, then the
+    // wall-clock-sensitive jobs serially) and append to the journal the
+    // moment they complete — completion order on disk, spec order
+    // restored in results.jsonl.
+    let writer = Mutex::new(sink::ManifestWriter::append(&manifest_path)?);
+    let fresh: Mutex<Vec<(String, String)>> = Mutex::new(Vec::new());
+    execute_with(to_run, par, &|job, tr| {
+        let line = sink::job_record(job, tr).to_string();
+        writer.lock().unwrap().append_line(&line)?;
+        fresh.lock().unwrap().push((job.id.clone(), line));
+        Ok(())
+    })?;
+    drop(writer);
+    let fresh = fresh.into_inner().unwrap();
+    let ran = fresh.len();
+    for (id, line) in fresh {
+        done.insert(id, line);
+    }
+    let pending_after = jobs.len() - done.len();
+    let (results_path, csv_path) = if pending_after == 0 {
+        (
+            Some(sink::write_results(out_dir, &jobs, &done)?),
+            Some(sink::write_pivot_csv(out_dir, &jobs, &done)?),
+        )
+    } else {
+        (None, None)
+    };
+    Ok(SweepOutcome {
+        total: jobs.len(),
+        ran,
+        skipped,
+        pending: pending_after,
+        manifest_path,
+        results_path,
+        csv_path,
+    })
+}

@@ -1,0 +1,123 @@
+//! Flagship in-tree scenarios, expressed as sweep specs.
+//!
+//! * [`partial_participation`] — the ROADMAP crash-fault sweep: stall
+//!   probability × gather deadline × aggregation rule (× Byzantine
+//!   count), driven through the `net::Leader` retirement path, so the
+//!   numbers quantify how much participation slack each κ-robust rule
+//!   actually absorbs next to the paper's Byzantine sweeps.
+//! * [`attack_zoo`] — the robustness grid: attack × rule × compressor,
+//!   the comparative core of the paper's §VII generalized beyond the
+//!   hand-picked figure settings.
+//!
+//! Both return plain [`SweepSpec`]s: run them via
+//! `lad sweep --preset <name>`, or use them as templates for a custom
+//! TOML spec (`examples/sweep_quickstart.toml`).
+
+use crate::config::{AggregatorKind, AttackKind, CompressionKind, TrainConfig};
+use crate::sweep::spec::{Grid, SweepSpec};
+use crate::Result;
+use anyhow::bail;
+
+/// Resolve a preset by CLI name.
+pub fn preset(name: &str) -> Result<SweepSpec> {
+    Ok(match name {
+        "partial-participation" | "partial" => partial_participation(),
+        "attack-zoo" | "attacks" => attack_zoo(),
+        other => bail!("unknown preset {other:?} (partial-participation | attack-zoo)"),
+    })
+}
+
+/// Shared small-but-honest base setting: large enough that the robust
+/// rules have signal, small enough that a full grid runs in minutes.
+fn small_base() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.n_devices = 24;
+    cfg.n_honest = 24;
+    cfg.d = 4;
+    cfg.dim = 24;
+    cfg.iters = 150;
+    cfg.lr = 1e-4;
+    cfg.sigma_h = 0.3;
+    cfg.trim_frac = 0.15;
+    cfg.attack = AttackKind::SignFlip { coeff: -2.0 };
+    cfg.log_every = 25;
+    cfg.seed = 2026;
+    cfg
+}
+
+/// Stall probability × gather deadline × rule (× Byzantine count): every
+/// job runs the in-process cluster over the real wire protocol with a
+/// gather deadline, workers skipping uploads with the given probability,
+/// and the leader retiring chronic stragglers (`net::MISS_RETIRE_STREAK`).
+pub fn partial_participation() -> SweepSpec {
+    let spec = SweepSpec::new("partial_participation", small_base());
+    SweepSpec {
+        grid: Grid {
+            rule: vec![
+                AggregatorKind::Cwtm,
+                AggregatorKind::Krum,
+                AggregatorKind::GeometricMedian,
+            ],
+            f: vec![0, 4],
+            stall_prob: vec![0.0, 0.1, 0.3],
+            // generous vs the microsecond in-process uploads: the miss set
+            // is the seeded stall set, so runs are reproducible (deadline
+            // jobs additionally run one at a time — see queue docs)
+            gather_deadline_ms: vec![150],
+            ..Grid::default()
+        },
+        ..spec
+    }
+}
+
+/// Attack × rule × compressor: the robustness comparison grid. Byzantine
+/// count fixed at the Fig. 4 ratio (N−H = 5 of 24).
+pub fn attack_zoo() -> SweepSpec {
+    let mut base = small_base();
+    base.n_honest = 19;
+    base.iters = 300;
+    let spec = SweepSpec::new("attack_zoo", base);
+    SweepSpec {
+        grid: Grid {
+            attack: vec![
+                AttackKind::SignFlip { coeff: -2.0 },
+                AttackKind::Alie,
+                AttackKind::Ipm { eps: 0.5 },
+                AttackKind::Zero,
+                AttackKind::Gaussian { std: 10.0 },
+                AttackKind::Mimic,
+            ],
+            rule: vec![
+                AggregatorKind::Cwtm,
+                AggregatorKind::Krum,
+                AggregatorKind::GeometricMedian,
+                AggregatorKind::Median,
+            ],
+            compressor: vec![CompressionKind::None, CompressionKind::RandK { k: 8 }],
+            ..Grid::default()
+        },
+        ..spec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_expand_cleanly() {
+        let pp = partial_participation();
+        let jobs = pp.expand().unwrap();
+        assert_eq!(jobs.len(), 3 * 2 * 3);
+        // every stalling job carries the deadline the retirement path needs
+        assert!(jobs.iter().all(|j| j.cfg.net.gather_deadline_ms > 0));
+        assert!(jobs.iter().any(|j| j.stall_prob > 0.0));
+        let zoo = attack_zoo();
+        let jobs = zoo.expand().unwrap();
+        assert_eq!(jobs.len(), 6 * 4 * 2);
+        assert!(jobs.iter().all(|j| j.cfg.n_honest == 19));
+        assert!(preset("partial-participation").is_ok());
+        assert!(preset("attack-zoo").is_ok());
+        assert!(preset("nope").is_err());
+    }
+}

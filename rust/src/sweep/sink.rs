@@ -1,0 +1,345 @@
+//! Append-only JSONL result sink for the sweep queue.
+//!
+//! Two files live in a sweep's output directory:
+//!
+//! * `manifest.jsonl` — the crash-safe **journal**: one compact JSON
+//!   record per *completed* job, appended (and flushed) the moment the
+//!   job finishes, in completion order. `--resume` reads it back, skips
+//!   every journaled job, and compacts the file (atomically) first, so a
+//!   torn final line from a kill mid-append is dropped rather than glued
+//!   onto the next appended record.
+//! * `results.jsonl` — the deterministic **sink**: the same records,
+//!   rewritten in spec (job) order once every job of the spec is
+//!   journaled. Resumed and uninterrupted sweeps emit bit-identical
+//!   `results.jsonl` because the journal lines are copied verbatim —
+//!   a record is serialized exactly once, when its job completes.
+//!
+//! Records echo the full resolved configuration plus every
+//! *deterministic* trace field (final loss, sampled loss curve, analytic
+//! bit accounting, measured wire bytes, anomaly count). Wall-clock time
+//! is deliberately excluded — it would break the bit-identity contract.
+//! Non-finite floats (a diverged run's `NaN`/`inf` loss) are encoded as
+//! strings, since JSON has no literal for them.
+//!
+//! `results.csv` is the pivot for plotting: one row per job — id, label,
+//! one column per grid axis, and the headline metrics.
+
+use crate::config::CompressionKind;
+use crate::server::TrainTrace;
+use crate::sweep::spec::Job;
+use crate::util::json::{self, Json};
+use crate::Result;
+use anyhow::{ensure, Context};
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+/// JSON number that survives non-finite values (encoded as strings).
+fn num(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Str(format!("{x}"))
+    }
+}
+
+/// Build the one-line JSON record for a completed job.
+pub fn job_record(job: &Job, tr: &TrainTrace) -> Json {
+    let cfg = &job.cfg;
+    let mut config = BTreeMap::new();
+    config.insert("n_devices".to_string(), Json::Num(cfg.n_devices as f64));
+    config.insert("n_honest".to_string(), Json::Num(cfg.n_honest as f64));
+    config.insert("d".to_string(), Json::Num(cfg.d as f64));
+    config.insert("dim".to_string(), Json::Num(cfg.dim as f64));
+    config.insert("iters".to_string(), Json::Num(cfg.iters as f64));
+    config.insert("lr".to_string(), num(cfg.lr));
+    config.insert("sigma_h".to_string(), num(cfg.sigma_h));
+    config.insert("aggregator".to_string(), Json::Str(cfg.aggregator.name().to_string()));
+    config.insert("nnm".to_string(), Json::Bool(cfg.nnm));
+    config.insert("trim_frac".to_string(), num(cfg.trim_frac));
+    config.insert("attack".to_string(), Json::Str(cfg.attack.name().to_string()));
+    config.insert("compression".to_string(), Json::Str(cfg.compression.name().to_string()));
+    match cfg.compression {
+        CompressionKind::RandK { k } | CompressionKind::TopK { k } => {
+            config.insert("compression_k".to_string(), Json::Num(k as f64));
+        }
+        CompressionKind::Qsgd { levels } => {
+            config.insert("compression_levels".to_string(), Json::Num(levels as f64));
+        }
+        CompressionKind::None => {}
+    }
+    config.insert("log_every".to_string(), Json::Num(cfg.log_every as f64));
+    // seeds are echoed as decimal strings: a u64 above 2^53 would be
+    // silently rounded through the f64-backed Json::Num, corrupting the
+    // exact-reproduction contract of the config echo
+    config.insert("data_seed".to_string(), Json::Str(job.data_seed.to_string()));
+    config.insert("run_seed".to_string(), Json::Str(job.run_seed.to_string()));
+    config.insert("stall_prob".to_string(), num(job.stall_prob));
+    config.insert(
+        "gather_deadline_ms".to_string(),
+        Json::Num(cfg.net.gather_deadline_ms as f64),
+    );
+    config.insert("device_compression".to_string(), Json::Bool(cfg.net.device_compression));
+    if let Some(r) = job.draco_r {
+        config.insert("draco_r".to_string(), Json::Num(r as f64));
+    }
+
+    let mut axes = BTreeMap::new();
+    for (k, v) in &job.axes {
+        axes.insert(k.to_string(), Json::Str(v.clone()));
+    }
+
+    let mut rec = BTreeMap::new();
+    rec.insert("id".to_string(), Json::Str(job.id.clone()));
+    rec.insert("label".to_string(), Json::Str(job.label.clone()));
+    rec.insert("axes".to_string(), Json::Obj(axes));
+    rec.insert("config".to_string(), Json::Obj(config));
+    rec.insert("final_loss".to_string(), num(tr.final_loss));
+    rec.insert("total_bits".to_string(), Json::Num(tr.total_bits() as f64));
+    rec.insert("anomalies".to_string(), Json::Num(tr.anomalies as f64));
+    rec.insert("wire_up_bytes".to_string(), Json::Num(tr.wire_up_bytes as f64));
+    rec.insert("wire_down_bytes".to_string(), Json::Num(tr.wire_down_bytes as f64));
+    rec.insert(
+        "iters".to_string(),
+        Json::Arr(tr.iters.iter().map(|&i| Json::Num(i as f64)).collect()),
+    );
+    rec.insert("loss".to_string(), Json::Arr(tr.loss.iter().map(|&x| num(x)).collect()));
+    rec.insert(
+        "update_norm".to_string(),
+        Json::Arr(tr.grad_update_norm.iter().map(|&x| num(x)).collect()),
+    );
+    rec.insert(
+        "bits".to_string(),
+        Json::Arr(tr.bits.iter().map(|&b| Json::Num(b as f64)).collect()),
+    );
+    // wall-clock time is deliberately NOT recorded: records must be
+    // bit-identical across reruns and resumes
+    Json::Obj(rec)
+}
+
+/// Append-only, per-line-flushed journal writer.
+pub struct ManifestWriter {
+    out: BufWriter<File>,
+}
+
+impl ManifestWriter {
+    /// Open (creating if needed) the journal for appending.
+    pub fn append<P: AsRef<Path>>(path: P) -> Result<ManifestWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening sweep manifest {:?}", path.as_ref()))?;
+        Ok(ManifestWriter { out: BufWriter::new(f) })
+    }
+
+    /// Append one record line and flush, so a killed sweep loses at most
+    /// the in-flight job.
+    pub fn append_line(&mut self, line: &str) -> Result<()> {
+        writeln!(self.out, "{line}")?;
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Read the journal back as `job id → verbatim record line`. A truncated
+/// final line (the killed-mid-write case `--resume` exists for) is
+/// ignored with a note; corruption anywhere else is an error.
+pub fn read_manifest<P: AsRef<Path>>(path: P) -> Result<BTreeMap<String, String>> {
+    let path = path.as_ref();
+    if !path.exists() {
+        return Ok(BTreeMap::new());
+    }
+    let body =
+        std::fs::read_to_string(path).with_context(|| format!("reading manifest {path:?}"))?;
+    let lines: Vec<&str> = body.lines().collect();
+    let mut map = BTreeMap::new();
+    for (i, line) in lines.iter().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match json::parse(line) {
+            Ok(rec) => {
+                let id = rec
+                    .get("id")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("manifest line {} has no \"id\"", i + 1))?;
+                map.insert(id.to_string(), line.to_string());
+            }
+            Err(e) => {
+                ensure!(
+                    i + 1 == lines.len(),
+                    "corrupt manifest line {} of {path:?}: {e}",
+                    i + 1
+                );
+                eprintln!(
+                    "sweep: ignoring truncated final manifest line {} ({e}) — \
+                     the interrupted job will rerun",
+                    i + 1
+                );
+            }
+        }
+    }
+    Ok(map)
+}
+
+/// Atomic file write (tmp + rename): a kill mid-write can never leave a
+/// truncated file that looks complete.
+fn write_atomic(path: &Path, body: &str) -> Result<()> {
+    // append (not replace) the extension so results.jsonl and results.csv
+    // never share one temp name
+    let mut name = path.file_name().map(|s| s.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    let tmp = path.with_file_name(name);
+    std::fs::write(&tmp, body).with_context(|| format!("writing {tmp:?}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming into {path:?}"))?;
+    Ok(())
+}
+
+/// Write `results.jsonl`: the journaled record of every job, in spec
+/// order, copied verbatim (see the module docs for why this makes resumed
+/// and uninterrupted sweeps bit-identical).
+pub fn write_results(
+    out_dir: &Path,
+    jobs: &[Job],
+    records: &BTreeMap<String, String>,
+) -> Result<PathBuf> {
+    let path = out_dir.join("results.jsonl");
+    let mut body = String::new();
+    for job in jobs {
+        let line = records
+            .get(&job.id)
+            .with_context(|| format!("job {} ({}) missing from the journal", job.id, job.label))?;
+        body.push_str(line);
+        body.push('\n');
+    }
+    write_atomic(&path, &body)?;
+    Ok(path)
+}
+
+/// Write `results.csv`: one row per job — id, label, one column per grid
+/// axis (canonical order), and the headline metrics — the pivot the
+/// plotting scripts consume.
+pub fn write_pivot_csv(
+    out_dir: &Path,
+    jobs: &[Job],
+    records: &BTreeMap<String, String>,
+) -> Result<PathBuf> {
+    let path = out_dir.join("results.csv");
+    let axis_keys: Vec<&'static str> =
+        jobs.first().map(|j| j.axes.iter().map(|(k, _)| *k).collect()).unwrap_or_default();
+    let mut body = String::new();
+    body.push_str("id,label");
+    for k in &axis_keys {
+        body.push(',');
+        body.push_str(k);
+    }
+    body.push_str(",final_loss,total_bits,anomalies\n");
+    for job in jobs {
+        let line = records
+            .get(&job.id)
+            .with_context(|| format!("job {} missing from the journal", job.id))?;
+        let rec = json::parse(line).map_err(|e| anyhow::anyhow!("re-parsing record: {e}"))?;
+        let metric = |key: &str| -> String {
+            match rec.get(key) {
+                Some(Json::Num(x)) => format!("{x}"),
+                Some(Json::Str(s)) => s.clone(), // non-finite encoded as string
+                _ => String::new(),
+            }
+        };
+        body.push_str(&crate::util::csv::escape(&job.id));
+        body.push(',');
+        body.push_str(&crate::util::csv::escape(&job.label));
+        for (_, v) in &job.axes {
+            body.push(',');
+            body.push_str(&crate::util::csv::escape(v));
+        }
+        body.push(',');
+        body.push_str(&metric("final_loss"));
+        body.push(',');
+        body.push_str(&metric("total_bits"));
+        body.push(',');
+        body.push_str(&metric("anomalies"));
+        body.push('\n');
+    }
+    write_atomic(&path, &body)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::experiments::common::Variant;
+    use crate::sweep::spec::Job;
+
+    fn job() -> Job {
+        Job::from_variant(
+            &Variant { label: "unit".into(), cfg: TrainConfig::default(), draco_r: None },
+            1,
+            2,
+        )
+    }
+
+    fn trace() -> TrainTrace {
+        let mut t = TrainTrace::new("unit");
+        t.record(0, 3.0, 0.5, 64);
+        t.record(10, 1.5, 0.25, 128);
+        t.final_loss = 1.5;
+        t.wall_s = 123.0; // must NOT leak into the record
+        t
+    }
+
+    #[test]
+    fn record_round_trips_and_excludes_wall_clock() {
+        let rec = job_record(&job(), &trace());
+        let line = rec.to_string();
+        assert!(!line.contains("wall"), "wall-clock leaked into the record: {line}");
+        let back = json::parse(&line).unwrap();
+        assert_eq!(back, rec, "record must survive a parse round trip");
+        // re-serialization is byte-stable — the resume bit-identity hinge
+        assert_eq!(back.to_string(), line);
+        assert_eq!(back.get("final_loss").unwrap().as_f64(), Some(1.5));
+        assert_eq!(back.get("id").unwrap().as_str(), Some(job().id.as_str()));
+    }
+
+    #[test]
+    fn non_finite_metrics_stay_parseable() {
+        let mut t = trace();
+        t.final_loss = f64::NAN;
+        t.loss[1] = f64::INFINITY;
+        let line = job_record(&job(), &t).to_string();
+        let back = json::parse(&line).unwrap();
+        assert_eq!(back.get("final_loss").unwrap().as_str(), Some("NaN"));
+        assert_eq!(back.to_string(), line);
+    }
+
+    #[test]
+    fn manifest_journal_round_trips_and_tolerates_a_torn_tail() {
+        let dir = std::env::temp_dir().join(format!("lad_sink_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.jsonl");
+        let rec = job_record(&job(), &trace()).to_string();
+        {
+            let mut w = ManifestWriter::append(&path).unwrap();
+            w.append_line(&rec).unwrap();
+        }
+        // simulate a kill mid-append: a torn, unparseable final line
+        {
+            use std::io::Write as _;
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"id\": \"deadbeef\", \"final_lo").unwrap();
+        }
+        let map = read_manifest(&path).unwrap();
+        assert_eq!(map.len(), 1, "torn tail ignored, good line kept");
+        assert_eq!(map.values().next().unwrap(), &rec);
+        // corruption NOT at the tail is an error
+        std::fs::write(&path, format!("garbage\n{rec}\n")).unwrap();
+        assert!(read_manifest(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,676 @@
+//! Declarative scenario specs: a TOML grid over the experiment axes,
+//! expanded into a deterministic, content-addressed job list.
+//!
+//! A spec has four sections:
+//!
+//! * `[sweep]` — engine metadata: `name` (output naming), `stall_prob`
+//!   (a fixed per-iteration stall probability applied to every job),
+//!   `q_hat` / `levels` (operator parameters for the `compressor` axis).
+//! * `[fixed]` — scalar `TrainConfig` overrides applied to every job
+//!   (same keys as a `lad train --config` file's `[train]` table).
+//! * `[net]` — transport knobs (`gather_deadline_ms`,
+//!   `compression_site`, …) applied to every job; a positive gather
+//!   deadline routes jobs through the `net::Leader` retirement path.
+//! * `[grid]` — the axes. Every key maps to a **list** of values and the
+//!   job list is the Cartesian product, expanded in the canonical axis
+//!   order [`AXIS_ORDER`] with the **last axis varying fastest**
+//!   (row-major), so a spec always expands to the same jobs in the same
+//!   order no matter how its file is formatted.
+//!
+//! Every job gets a content-addressed id: an FNV-1a digest of the fully
+//! resolved configuration (grid coordinates *and* fixed overrides, seeds,
+//! stall probability, deadlines). Ids are what the resumable queue
+//! journals, so editing any knob of a spec invalidates exactly the jobs
+//! whose behaviour it changes.
+
+use crate::config::toml::{self, TomlValue};
+use crate::config::{
+    apply_net_table, apply_train_table, AggregatorKind, AttackKind, CompressionKind, OracleKind,
+    TrainConfig,
+};
+use crate::experiments::common::Variant;
+use crate::net::wire::fnv1a64;
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// Salt between a job's data seed (dataset generation) and its run seed
+/// (assignment/attack/compression randomness) — the same relation
+/// `lad train` uses, so a one-job sweep reproduces a `train` run exactly.
+pub const RUN_SEED_SALT: u64 = 0x7A17;
+
+/// Canonical axis order (expansion order; last axis varies fastest).
+pub const AXIS_ORDER: [&str; 10] = [
+    "attack",
+    "rule",
+    "nnm",
+    "compressor",
+    "f",
+    "d",
+    "sigma_h",
+    "stall_prob",
+    "gather_deadline_ms",
+    "seed",
+];
+
+/// Hard ceiling on a spec's expanded size — a typo'd axis should fail
+/// loudly, not allocate a hundred-million-job plan.
+pub const MAX_JOBS: usize = 100_000;
+
+/// One fully resolved unit of work: a training run the queue can execute,
+/// journal and resume independently.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// Content-addressed id (16 hex chars, FNV-1a of [`Job::canonical`]).
+    pub id: String,
+    /// Human-readable label: the grid coordinates (`attack=alie,rule=krum`).
+    pub label: String,
+    pub cfg: TrainConfig,
+    /// DRACO decoding instead of robust aggregation (figure delegation
+    /// only; not expressible from a TOML grid).
+    pub draco_r: Option<usize>,
+    /// Seed for dataset generation.
+    pub data_seed: u64,
+    /// Seed for the training run (assignment / attack / compression).
+    pub run_seed: u64,
+    /// Per-iteration probability that a worker skips its upload
+    /// (crash-fault emulation; requires `net.gather_deadline_ms > 0`).
+    pub stall_prob: f64,
+    /// Grid coordinates, in canonical axis order (echoed to the sink).
+    pub axes: Vec<(&'static str, String)>,
+}
+
+impl Job {
+    /// Wrap one figure [`Variant`] as a job (the fig4/5/6/byz-sweep
+    /// delegation path: same dataset/run seeding as `run_figure_par`).
+    pub fn from_variant(v: &Variant, data_seed: u64, run_seed: u64) -> Job {
+        let mut job = Job {
+            id: String::new(),
+            label: v.label.clone(),
+            cfg: v.cfg.clone(),
+            draco_r: v.draco_r,
+            data_seed,
+            run_seed,
+            stall_prob: 0.0,
+            axes: Vec::new(),
+        };
+        job.id = job_id(&job);
+        job
+    }
+
+    /// The canonical description the content-addressed id hashes: every
+    /// semantic knob of the run, floats as IEEE-754 bit patterns so the
+    /// encoding is exact and stable. Scheduling-only knobs (`threads`,
+    /// the transport address) are excluded — they never change a trace.
+    pub fn canonical(&self) -> String {
+        let fb = |x: f64| format!("{:016x}", x.to_bits());
+        let f32b = |x: f32| format!("{:08x}", x.to_bits());
+        let cfg = &self.cfg;
+        let atk = match cfg.attack {
+            AttackKind::None => "none".to_string(),
+            AttackKind::SignFlip { coeff } => format!("sign-flip:{}", f32b(coeff)),
+            AttackKind::Gaussian { std } => format!("gaussian:{}", f32b(std)),
+            AttackKind::Zero => "zero".to_string(),
+            AttackKind::Alie => "alie".to_string(),
+            AttackKind::Ipm { eps } => format!("ipm:{}", f32b(eps)),
+            AttackKind::Mimic => "mimic".to_string(),
+            AttackKind::RandomSpike { scale } => format!("spike:{}", f32b(scale)),
+        };
+        let comp = match cfg.compression {
+            CompressionKind::None => "none".to_string(),
+            CompressionKind::RandK { k } => format!("rand-k:{k}"),
+            CompressionKind::TopK { k } => format!("top-k:{k}"),
+            CompressionKind::Qsgd { levels } => format!("qsgd:{levels}"),
+        };
+        let oracle = match cfg.oracle {
+            OracleKind::NativeLinreg => "native",
+            OracleKind::RuntimeLinreg => "runtime",
+        };
+        format!(
+            "v1;n={};h={};d={};q={};t={};lr={};sh={};agg={};nnm={};trim={};atk={};comp={};\
+             oracle={};log={};data_seed={};run_seed={};stall={};deadline={};dcomp={};draco={}",
+            cfg.n_devices,
+            cfg.n_honest,
+            cfg.d,
+            cfg.dim,
+            cfg.iters,
+            fb(cfg.lr),
+            fb(cfg.sigma_h),
+            cfg.aggregator.name(),
+            cfg.nnm,
+            fb(cfg.trim_frac),
+            atk,
+            comp,
+            oracle,
+            cfg.log_every,
+            self.data_seed,
+            self.run_seed,
+            fb(self.stall_prob),
+            cfg.net.gather_deadline_ms,
+            cfg.net.device_compression,
+            self.draco_r.map(|r| r.to_string()).unwrap_or_else(|| "-".to_string()),
+        )
+    }
+}
+
+/// Content-addressed job id: 16 hex chars of FNV-1a over [`Job::canonical`].
+pub fn job_id(job: &Job) -> String {
+    format!("{:016x}", fnv1a64(job.canonical().as_bytes()))
+}
+
+/// Wrap a figure variant list as a job batch sharing one dataset/run seed
+/// pair — the delegation path behind `run_figure_par`.
+pub fn jobs_from_variants(variants: &[Variant], data_seed: u64, run_seed: u64) -> Vec<Job> {
+    variants.iter().map(|v| Job::from_variant(v, data_seed, run_seed)).collect()
+}
+
+/// The `[grid]` axes of a spec. An empty vector means the axis is absent
+/// (the `[fixed]` / default value applies to every job); a present axis
+/// must be non-empty and duplicate-free.
+#[derive(Debug, Clone, Default)]
+pub struct Grid {
+    pub attack: Vec<AttackKind>,
+    pub rule: Vec<AggregatorKind>,
+    pub nnm: Vec<bool>,
+    pub compressor: Vec<CompressionKind>,
+    /// Byzantine counts: each value `f` sets `n_honest = n_devices − f`.
+    pub f: Vec<usize>,
+    pub d: Vec<usize>,
+    pub sigma_h: Vec<f64>,
+    pub stall_prob: Vec<f64>,
+    pub gather_deadline_ms: Vec<u64>,
+    /// Data seeds (`run_seed = seed ^ RUN_SEED_SALT` per job).
+    pub seed: Vec<u64>,
+}
+
+/// A parsed scenario-sweep spec: base config + grid axes.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub name: String,
+    /// `[fixed]` + `[net]` applied over `TrainConfig::default()`.
+    pub base: TrainConfig,
+    /// Fixed per-iteration stall probability (`[sweep] stall_prob`).
+    pub base_stall: f64,
+    pub grid: Grid,
+}
+
+impl SweepSpec {
+    /// A spec with no axes: one job from the base config.
+    pub fn new(name: impl Into<String>, base: TrainConfig) -> SweepSpec {
+        SweepSpec { name: name.into(), base, base_stall: 0.0, grid: Grid::default() }
+    }
+
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<SweepSpec> {
+        let body = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading sweep spec {:?}", path.as_ref()))?;
+        Self::from_toml_str(&body)
+    }
+
+    /// Parse a spec from TOML text. Unknown tables, unknown keys, scalar
+    /// grid values and empty axes are all hard errors — a typo must never
+    /// silently shrink a sweep.
+    pub fn from_toml_str(body: &str) -> Result<SweepSpec> {
+        let doc = toml::parse(body).map_err(|e| anyhow::anyhow!("sweep spec parse error: {e}"))?;
+        for table in doc.keys() {
+            match table.as_str() {
+                "" | "sweep" | "fixed" | "grid" | "net" => {}
+                other => bail!("unknown sweep table [{other}] (expected sweep/fixed/grid/net)"),
+            }
+        }
+        if let Some(kv) = doc.get("") {
+            if let Some(key) = kv.keys().next() {
+                bail!(
+                    "top-level key {key:?} — sweep specs keep keys under [sweep]/[fixed]/[grid]"
+                );
+            }
+        }
+        let mut name = "sweep".to_string();
+        let mut base_stall = 0.0f64;
+        let mut q_hat = 30usize;
+        let mut levels = 16u32;
+        if let Some(kv) = doc.get("sweep") {
+            for (key, v) in kv {
+                match key.as_str() {
+                    "name" => name = v.as_str().context("sweep.name must be a string")?.to_string(),
+                    "stall_prob" => {
+                        base_stall = v.as_f64().context("sweep.stall_prob must be a number")?
+                    }
+                    "q_hat" => {
+                        q_hat = v.as_usize().context("sweep.q_hat must be a positive integer")?
+                    }
+                    "levels" => {
+                        levels = v.as_usize().context("sweep.levels must be a positive integer")?
+                            as u32
+                    }
+                    other => bail!("unknown [sweep] key {other:?}"),
+                }
+            }
+        }
+        let mut base = TrainConfig::default();
+        if let Some(kv) = doc.get("fixed") {
+            apply_train_table(&mut base, kv)?;
+        }
+        if let Some(kv) = doc.get("net") {
+            apply_net_table(&mut base.net, kv)?;
+        }
+        let mut grid = Grid::default();
+        if let Some(kv) = doc.get("grid") {
+            for (key, v) in kv {
+                let arr = match v {
+                    TomlValue::Arr(items) => items,
+                    _ => bail!("[grid] {key} must be a list (scalars belong in [fixed])"),
+                };
+                ensure!(!arr.is_empty(), "[grid] {key} is an empty list");
+                match key.as_str() {
+                    "attack" => {
+                        grid.attack = arr
+                            .iter()
+                            .map(|x| AttackKind::parse(need_str(key, x)?))
+                            .collect::<Result<_>>()?
+                    }
+                    "rule" | "aggregator" => {
+                        grid.rule = arr
+                            .iter()
+                            .map(|x| AggregatorKind::parse(need_str(key, x)?))
+                            .collect::<Result<_>>()?
+                    }
+                    "nnm" => {
+                        grid.nnm = arr
+                            .iter()
+                            .map(|x| {
+                                x.as_bool()
+                                    .with_context(|| format!("[grid] {key} values must be bool"))
+                            })
+                            .collect::<Result<_>>()?
+                    }
+                    "compressor" | "compression" => {
+                        grid.compressor = arr
+                            .iter()
+                            .map(|x| parse_compressor(need_str(key, x)?, q_hat, levels))
+                            .collect::<Result<_>>()?
+                    }
+                    "f" | "byz" => grid.f = need_usizes(key, arr)?,
+                    "d" | "load" => grid.d = need_usizes(key, arr)?,
+                    "sigma_h" => grid.sigma_h = need_f64s(key, arr)?,
+                    "stall_prob" => {
+                        grid.stall_prob = need_f64s(key, arr)?;
+                        for &p in &grid.stall_prob {
+                            ensure!(
+                                (0.0..=1.0).contains(&p),
+                                "[grid] stall_prob value {p} outside [0, 1]"
+                            );
+                        }
+                    }
+                    "gather_deadline_ms" => {
+                        grid.gather_deadline_ms =
+                            need_usizes(key, arr)?.into_iter().map(|x| x as u64).collect()
+                    }
+                    "seed" => {
+                        grid.seed = need_usizes(key, arr)?.into_iter().map(|x| x as u64).collect()
+                    }
+                    other => bail!(
+                        "unknown [grid] axis {other:?} (expected one of {})",
+                        AXIS_ORDER.join("/")
+                    ),
+                }
+            }
+        }
+        let spec = SweepSpec { name, base, base_stall, grid };
+        ensure!(
+            (0.0..=1.0).contains(&spec.base_stall),
+            "sweep.stall_prob {} outside [0, 1]",
+            spec.base_stall
+        );
+        Ok(spec)
+    }
+
+    /// Expand the grid into the full job list: Cartesian product in
+    /// canonical axis order ([`AXIS_ORDER`], last axis fastest), each job
+    /// validated and content-addressed. Errors on duplicate axis values
+    /// (they would collapse to one job id) and on any job that fails
+    /// `TrainConfig::validate`.
+    pub fn expand(&self) -> Result<Vec<Job>> {
+        // one (key, #values, apply) entry per *present* axis, canonical order
+        type Apply<'a> = Box<dyn Fn(usize, &mut TrainConfig, &mut f64) -> String + 'a>;
+        let mut axes: Vec<(&'static str, usize, Apply<'_>)> = Vec::new();
+        let g = &self.grid;
+        if !g.attack.is_empty() {
+            axes.push((
+                "attack",
+                g.attack.len(),
+                Box::new(|i, cfg: &mut TrainConfig, _: &mut f64| {
+                    cfg.attack = g.attack[i];
+                    g.attack[i].name().to_string()
+                }),
+            ));
+        }
+        if !g.rule.is_empty() {
+            axes.push((
+                "rule",
+                g.rule.len(),
+                Box::new(|i, cfg, _| {
+                    cfg.aggregator = g.rule[i];
+                    g.rule[i].name().to_string()
+                }),
+            ));
+        }
+        if !g.nnm.is_empty() {
+            axes.push((
+                "nnm",
+                g.nnm.len(),
+                Box::new(|i, cfg, _| {
+                    cfg.nnm = g.nnm[i];
+                    g.nnm[i].to_string()
+                }),
+            ));
+        }
+        if !g.compressor.is_empty() {
+            axes.push((
+                "compressor",
+                g.compressor.len(),
+                Box::new(|i, cfg, _| {
+                    cfg.compression = g.compressor[i];
+                    g.compressor[i].name().to_string()
+                }),
+            ));
+        }
+        if !g.f.is_empty() {
+            axes.push((
+                "f",
+                g.f.len(),
+                Box::new(|i, cfg, _| {
+                    cfg.n_honest = cfg.n_devices.saturating_sub(g.f[i]);
+                    g.f[i].to_string()
+                }),
+            ));
+        }
+        if !g.d.is_empty() {
+            axes.push((
+                "d",
+                g.d.len(),
+                Box::new(|i, cfg, _| {
+                    cfg.d = g.d[i];
+                    g.d[i].to_string()
+                }),
+            ));
+        }
+        if !g.sigma_h.is_empty() {
+            axes.push((
+                "sigma_h",
+                g.sigma_h.len(),
+                Box::new(|i, cfg, _| {
+                    cfg.sigma_h = g.sigma_h[i];
+                    g.sigma_h[i].to_string()
+                }),
+            ));
+        }
+        if !g.stall_prob.is_empty() {
+            axes.push((
+                "stall_prob",
+                g.stall_prob.len(),
+                Box::new(|i, _, stall: &mut f64| {
+                    *stall = g.stall_prob[i];
+                    g.stall_prob[i].to_string()
+                }),
+            ));
+        }
+        if !g.gather_deadline_ms.is_empty() {
+            axes.push((
+                "gather_deadline_ms",
+                g.gather_deadline_ms.len(),
+                Box::new(|i, cfg, _| {
+                    cfg.net.gather_deadline_ms = g.gather_deadline_ms[i];
+                    g.gather_deadline_ms[i].to_string()
+                }),
+            ));
+        }
+        if !g.seed.is_empty() {
+            axes.push((
+                "seed",
+                g.seed.len(),
+                Box::new(|i, cfg, _| {
+                    cfg.seed = g.seed[i];
+                    g.seed[i].to_string()
+                }),
+            ));
+        }
+
+        let total: usize = axes.iter().map(|(_, len, _)| *len).product();
+        ensure!(total <= MAX_JOBS, "sweep expands to {total} jobs (cap {MAX_JOBS})");
+        let mut jobs = Vec::with_capacity(total);
+        let mut seen = BTreeSet::new();
+        let mut idx = vec![0usize; axes.len()];
+        loop {
+            let mut cfg = self.base.clone();
+            let mut stall = self.base_stall;
+            let mut echo: Vec<(&'static str, String)> = Vec::with_capacity(axes.len());
+            for (a, (key, _, apply)) in axes.iter().enumerate() {
+                echo.push((*key, apply(idx[a], &mut cfg, &mut stall)));
+            }
+            let label = if echo.is_empty() {
+                self.name.clone()
+            } else {
+                echo.iter()
+                    .map(|(k, v)| format!("{k}={v}"))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            };
+            cfg.validate().with_context(|| format!("sweep job {label}"))?;
+            ensure!(
+                stall == 0.0 || cfg.net.gather_deadline_ms > 0,
+                "job {label}: stall_prob > 0 needs gather_deadline_ms > 0 \
+                 (a leader without a deadline would wait on the stalled worker forever)"
+            );
+            ensure!(
+                (stall == 0.0 && cfg.net.gather_deadline_ms == 0)
+                    || cfg.oracle == OracleKind::NativeLinreg,
+                "job {label}: partial-participation jobs need the native oracle"
+            );
+            let mut job = Job {
+                id: String::new(),
+                label,
+                data_seed: cfg.seed,
+                run_seed: cfg.seed ^ RUN_SEED_SALT,
+                cfg,
+                draco_r: None,
+                stall_prob: stall,
+                axes: echo,
+            };
+            job.id = job_id(&job);
+            ensure!(
+                seen.insert(job.id.clone()),
+                "duplicate job {} ({}) — an axis repeats a value or two axes collide",
+                job.id,
+                job.label
+            );
+            jobs.push(job);
+            // odometer: last axis fastest
+            let mut a = axes.len();
+            loop {
+                if a == 0 {
+                    return Ok(jobs);
+                }
+                a -= 1;
+                idx[a] += 1;
+                if idx[a] < axes[a].1 {
+                    break;
+                }
+                idx[a] = 0;
+            }
+        }
+    }
+}
+
+fn parse_compressor(s: &str, q_hat: usize, levels: u32) -> Result<CompressionKind> {
+    Ok(match s {
+        "none" | "identity" => CompressionKind::None,
+        "rand-k" | "randk" => CompressionKind::RandK { k: q_hat },
+        "top-k" | "topk" => CompressionKind::TopK { k: q_hat },
+        "qsgd" => CompressionKind::Qsgd { levels },
+        other => bail!("unknown compressor {other:?} (none|rand-k|top-k|qsgd)"),
+    })
+}
+
+fn need_str<'a>(key: &str, v: &'a TomlValue) -> Result<&'a str> {
+    v.as_str().with_context(|| format!("[grid] {key} values must be strings"))
+}
+
+fn need_usizes(key: &str, arr: &[TomlValue]) -> Result<Vec<usize>> {
+    arr.iter()
+        .map(|x| {
+            x.as_usize()
+                .with_context(|| format!("[grid] {key} values must be non-negative integers"))
+        })
+        .collect()
+}
+
+fn need_f64s(key: &str, arr: &[TomlValue]) -> Result<Vec<f64>> {
+    arr.iter()
+        .map(|x| x.as_f64().with_context(|| format!("[grid] {key} values must be numbers")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = r#"
+        [sweep]
+        name = "unit"
+        q_hat = 4
+
+        [fixed]
+        devices = 12
+        honest = 9
+        dim = 8
+        d = 2
+        iters = 20
+        lr = 1e-4
+        log_every = 0
+
+        [grid]
+        attack = ["sign-flip", "alie"]
+        rule = ["cwtm", "krum"]
+        compressor = ["none", "rand-k"]
+    "#;
+
+    #[test]
+    fn expansion_is_row_major_in_canonical_axis_order() {
+        let spec = SweepSpec::from_toml_str(TINY).unwrap();
+        let jobs = spec.expand().unwrap();
+        assert_eq!(jobs.len(), 8);
+        let labels: Vec<&str> = jobs.iter().map(|j| j.label.as_str()).collect();
+        // attack slowest, compressor fastest — regardless of file order
+        assert_eq!(
+            labels,
+            vec![
+                "attack=sign-flip,rule=cwtm,compressor=none",
+                "attack=sign-flip,rule=cwtm,compressor=rand-k",
+                "attack=sign-flip,rule=krum,compressor=none",
+                "attack=sign-flip,rule=krum,compressor=rand-k",
+                "attack=alie,rule=cwtm,compressor=none",
+                "attack=alie,rule=cwtm,compressor=rand-k",
+                "attack=alie,rule=krum,compressor=none",
+                "attack=alie,rule=krum,compressor=rand-k",
+            ]
+        );
+        // q_hat flowed into the compressor axis
+        let rk = jobs.iter().find(|j| j.label.ends_with("rand-k")).unwrap();
+        assert_eq!(rk.cfg.compression, CompressionKind::RandK { k: 4 });
+    }
+
+    #[test]
+    fn job_ids_are_stable_and_distinct() {
+        let a = SweepSpec::from_toml_str(TINY).unwrap().expand().unwrap();
+        let b = SweepSpec::from_toml_str(TINY).unwrap().expand().unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id, "re-parsing a spec must reproduce every id");
+            assert_eq!(x.id.len(), 16);
+        }
+        let ids: BTreeSet<&str> = a.iter().map(|j| j.id.as_str()).collect();
+        assert_eq!(ids.len(), a.len(), "distinct jobs must get distinct ids");
+        // reordering the [grid] keys in the file changes nothing
+        let permuted = TINY.replace(
+            "attack = [\"sign-flip\", \"alie\"]\n        rule = [\"cwtm\", \"krum\"]",
+            "rule = [\"cwtm\", \"krum\"]\n        attack = [\"sign-flip\", \"alie\"]",
+        );
+        assert_ne!(permuted, TINY);
+        let c = SweepSpec::from_toml_str(&permuted).unwrap().expand().unwrap();
+        for (x, y) in a.iter().zip(&c) {
+            assert_eq!(x.id, y.id, "axis order is canonical, not file order");
+        }
+        // and any semantic change moves every affected id
+        let edited = TINY.replace("iters = 20", "iters = 21");
+        let d = SweepSpec::from_toml_str(&edited).unwrap().expand().unwrap();
+        for (x, y) in a.iter().zip(&d) {
+            assert_ne!(x.id, y.id, "an iters change must re-address the jobs");
+        }
+    }
+
+    #[test]
+    fn job_id_pins_the_canonical_encoding() {
+        // the default TrainConfig as a single job — the id is pinned so an
+        // accidental change to the canonical serialization fails loudly
+        let job = Job::from_variant(
+            &Variant { label: "pin".into(), cfg: TrainConfig::default(), draco_r: None },
+            7,
+            11,
+        );
+        assert_eq!(
+            job.canonical(),
+            "v1;n=100;h=80;d=10;q=100;t=500;lr=3eb0c6f7a0b5ed8d;sh=3fd3333333333333;\
+             agg=cwtm;nnm=false;trim=3fb999999999999a;atk=sign-flip:c0000000;comp=none;\
+             oracle=native;log=50;data_seed=7;run_seed=11;stall=0000000000000000;\
+             deadline=0;dcomp=false;draco=-"
+        );
+        // independently computed FNV-1a of the canonical string above
+        assert_eq!(job.id, "6d71af87f6a38e78");
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        // unknown table / key / axis
+        assert!(SweepSpec::from_toml_str("[bogus]\nx = 1").is_err());
+        assert!(SweepSpec::from_toml_str("[sweep]\nbogus = 1").is_err());
+        assert!(SweepSpec::from_toml_str("[grid]\nwarp = [1]").is_err());
+        // top-level keys are ambiguous — rejected
+        assert!(SweepSpec::from_toml_str("name = \"x\"").is_err());
+        // scalar where a list is required
+        assert!(SweepSpec::from_toml_str("[grid]\nd = 3").is_err());
+        // empty axis
+        assert!(SweepSpec::from_toml_str("[grid]\nd = []").is_err());
+        // bad enum values
+        assert!(SweepSpec::from_toml_str("[grid]\nattack = [\"meteor\"]").is_err());
+        assert!(SweepSpec::from_toml_str("[grid]\ncompressor = [\"gzip\"]").is_err());
+        // stall probability out of range
+        assert!(SweepSpec::from_toml_str("[grid]\nstall_prob = [1.5]").is_err());
+        // duplicate axis values collapse job ids — rejected at expansion
+        let dup = SweepSpec::from_toml_str("[grid]\nd = [5, 5]").unwrap();
+        assert!(dup.expand().is_err());
+        // honest-majority violation surfaces with the job label attached
+        let spec = SweepSpec::from_toml_str(
+            "[fixed]\ndevices = 10\nhonest = 8\n[grid]\nf = [1, 6]",
+        )
+        .unwrap();
+        let err = spec.expand().unwrap_err().to_string();
+        assert!(err.contains("f=6"), "error names the offending job: {err}");
+        // stalling without a gather deadline would hang the leader
+        let spec =
+            SweepSpec::from_toml_str("[sweep]\nstall_prob = 0.2\n[grid]\nd = [1, 2]").unwrap();
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn net_table_routes_every_job_through_the_deadline_path() {
+        let spec = SweepSpec::from_toml_str(
+            "[net]\ngather_deadline_ms = 150\n[grid]\nstall_prob = [0.0, 0.3]",
+        )
+        .unwrap();
+        let jobs = spec.expand().unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert!(jobs.iter().all(|j| j.cfg.net.gather_deadline_ms == 150));
+        assert_eq!(jobs[0].stall_prob, 0.0);
+        assert_eq!(jobs[1].stall_prob, 0.3);
+    }
+}

@@ -38,7 +38,9 @@ impl CsvWriter {
     }
 }
 
-fn escape(s: &str) -> String {
+/// Quote a CSV cell when it contains a delimiter, quote or newline (also
+/// used by the sweep sink's pivot export).
+pub(crate) fn escape(s: &str) -> String {
     if s.contains(',') || s.contains('"') || s.contains('\n') {
         format!("\"{}\"", s.replace('"', "\"\""))
     } else {

@@ -78,7 +78,7 @@ fn net_loopback(
         agg: &cwtm,
         attack: &flip,
         comp,
-        opts: LeaderOpts { gather_deadline: None, device_compression: true },
+        opts: LeaderOpts { gather_deadline: None, device_compression: true, ..Default::default() },
         pool: Pool::serial(),
         send_dataset: true,
     };
@@ -151,6 +151,61 @@ fn uds_identity_matches_central() {
     assert_trace_identical(&tn, &tc);
 }
 
+#[test]
+fn serve_reclaims_slot_from_silent_connector() {
+    // A stray connection that never sends a Join must not occupy one of
+    // the N device slots: with a join deadline, Leader::serve drops it
+    // and the real workers fill every slot — and the resulting trace is
+    // still bit-identical to the central fast path.
+    let c = cfg(4, 3, 2, CompressionKind::None);
+    let mut rng = Rng::new(951);
+    let ds = LinRegDataset::generate(c.n_devices, c.dim, c.sigma_h, &mut rng);
+    let listener = NetListener::bind("tcp://127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // the silent connector arrives first and holds its connection open
+    // well past the join deadline
+    let silent_addr = addr.clone();
+    let silent = std::thread::spawn(move || {
+        let link = connect(&silent_addr).unwrap();
+        std::thread::sleep(Duration::from_millis(1200));
+        drop(link);
+    });
+    std::thread::sleep(Duration::from_millis(50)); // let it connect first
+    let mut workers = Vec::with_capacity(c.n_devices);
+    for i in 0..c.n_devices {
+        let addr = addr.clone();
+        workers.push(std::thread::spawn(move || {
+            let link = connect(&addr).unwrap();
+            run_worker(link, i, None, None).unwrap()
+        }));
+    }
+    let cwtm = Cwtm::new(0.1);
+    let flip = SignFlip { coeff: -2.0 };
+    let leader = Leader {
+        cfg: &c,
+        ds: &ds,
+        agg: &cwtm,
+        attack: &flip,
+        comp: &Identity,
+        opts: LeaderOpts {
+            join_deadline: Some(Duration::from_millis(150)),
+            device_compression: true,
+            ..Default::default()
+        },
+        pool: Pool::serial(),
+        send_dataset: true,
+    };
+    let mut x = vec![0.0f32; c.dim];
+    let tn = leader.serve(&listener, &mut x, "serve", &mut Rng::new(952)).unwrap();
+    for w in workers {
+        assert_eq!(w.join().unwrap().iters, c.iters);
+    }
+    silent.join().unwrap();
+    let (tc, xc) = central(&c, &ds, &Identity, 952);
+    assert_eq!(x, xc, "model diverged between serve() and central paths");
+    assert_trace_identical(&tn, &tc);
+}
+
 /// A worker that serves the first `serve` iterations, then stalls: keeps
 /// its connection open but never uploads again (crash-Byzantine).
 fn stalling_worker(mut link: Box<dyn Transport>, device: usize, serve: usize) {
@@ -211,6 +266,7 @@ fn gather_deadline_survives_a_stalled_worker() {
             opts: LeaderOpts {
                 gather_deadline: Some(Duration::from_millis(200)),
                 device_compression: false,
+                ..Default::default()
             },
             pool: Pool::serial(),
             send_dataset: false,

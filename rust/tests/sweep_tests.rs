@@ -1,0 +1,272 @@
+//! Sweep-engine integration tests: the figure-delegation invariant
+//! (engine traces bit-identical to direct runs), the interrupted-resume
+//! contract (a sweep killed mid-run and resumed emits JSONL bit-identical
+//! to an uninterrupted run), and the partial-participation path through
+//! the net leader's retirement machinery.
+
+use lad::config::{AggregatorKind, AttackKind, CompressionKind, TrainConfig};
+use lad::data::linreg::LinRegDataset;
+use lad::experiments::common::{run_variant_in, Variant};
+use lad::server::TrainTrace;
+use lad::sweep::{self, queue, SweepSpec};
+use lad::util::parallel::{Parallelism, Pool};
+use lad::util::rng::Rng;
+use std::path::PathBuf;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lad_sweep_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_traces_identical(a: &TrainTrace, b: &TrainTrace, what: &str) {
+    assert_eq!(a.iters, b.iters, "{what}: sampled iterations differ");
+    assert_eq!(a.loss, b.loss, "{what}: loss trace differs");
+    assert_eq!(a.grad_update_norm, b.grad_update_norm, "{what}: update norms differ");
+    assert_eq!(a.bits, b.bits, "{what}: bit accounting differs");
+    assert_eq!(a.final_loss, b.final_loss, "{what}: final loss differs");
+}
+
+#[test]
+fn engine_traces_match_direct_variant_runs() {
+    // the delegation invariant behind the fig4/5/6/byz-sweep refactor:
+    // wrapping a variant list as sweep jobs and executing through the
+    // engine must reproduce run_variant_in bit-for-bit
+    let mut base = TrainConfig::default();
+    base.n_devices = 12;
+    base.n_honest = 9;
+    base.d = 3;
+    base.dim = 10;
+    base.iters = 30;
+    base.lr = 5e-5;
+    base.sigma_h = 0.3;
+    base.log_every = 10;
+    let mut variants = Vec::new();
+    for (label, agg, comp) in [
+        ("cwtm", AggregatorKind::Cwtm, CompressionKind::None),
+        ("krum-randk", AggregatorKind::Krum, CompressionKind::RandK { k: 4 }),
+        ("median-qsgd", AggregatorKind::Median, CompressionKind::Qsgd { levels: 8 }),
+    ] {
+        let mut cfg = base.clone();
+        cfg.aggregator = agg;
+        cfg.compression = comp;
+        variants.push(Variant { label: label.into(), cfg, draco_r: None });
+    }
+    let (data_seed, run_seed) = (401u64, 402u64);
+    let jobs = sweep::jobs_from_variants(&variants, data_seed, run_seed);
+    let engine = queue::execute(&jobs, Parallelism::new(3)).unwrap();
+    let mut rng = Rng::new(data_seed);
+    let ds = LinRegDataset::generate(base.n_devices, base.dim, base.sigma_h, &mut rng);
+    for (v, tr) in variants.iter().zip(&engine) {
+        let direct = run_variant_in(&ds, v, run_seed, &Pool::serial()).unwrap();
+        assert_traces_identical(tr, &direct, &v.label);
+    }
+}
+
+const RESUME_SPEC: &str = r#"
+    [sweep]
+    name = "resume_grid"
+    q_hat = 3
+
+    [fixed]
+    devices = 10
+    honest = 8
+    dim = 8
+    d = 2
+    iters = 15
+    lr = 1e-4
+    log_every = 5
+    seed = 77
+
+    [grid]
+    attack = ["sign-flip", "alie", "zero"]
+    rule = ["cwtm", "krum", "median"]
+    compressor = ["none", "rand-k"]
+"#;
+
+#[test]
+fn interrupted_resume_emits_bit_identical_results() {
+    let spec = SweepSpec::from_toml_str(RESUME_SPEC).unwrap();
+    assert_eq!(spec.expand().unwrap().len(), 18, "3 attacks x 3 rules x 2 compressors");
+
+    // leg 1: "killed" after 5 jobs (the deterministic interruption hook)
+    let dir_a = tmp_dir("resume_a");
+    let leg1 =
+        queue::run_sweep(&spec, &dir_a, false, Some(5), Parallelism::new(2)).unwrap();
+    assert_eq!(leg1.ran, 5);
+    assert_eq!(leg1.pending, 13);
+    assert!(leg1.results_path.is_none(), "incomplete sweeps must not write results");
+    assert!(leg1.manifest_path.exists());
+
+    // simulate the kill landing mid-append: a torn, unparseable final
+    // line in the journal — resume must compact it away, not glue the
+    // next record onto it
+    {
+        use std::io::Write as _;
+        let mut f =
+            std::fs::OpenOptions::new().append(true).open(&leg1.manifest_path).unwrap();
+        write!(f, "{{\"id\": \"feedface\", \"final_lo").unwrap();
+    }
+
+    // leg 2: resume to completion
+    let leg2 = queue::run_sweep(&spec, &dir_a, true, None, Parallelism::new(2)).unwrap();
+    assert_eq!(leg2.skipped, 5, "journaled jobs are not rerun");
+    assert_eq!(leg2.ran, 13);
+    assert_eq!(leg2.pending, 0);
+    // the compacted journal is fully parseable — the torn tail is gone
+    let journal = lad::sweep::sink::read_manifest(&leg2.manifest_path).unwrap();
+    assert_eq!(journal.len(), 18);
+    let results_a = std::fs::read(leg2.results_path.as_ref().unwrap()).unwrap();
+    let csv_a = std::fs::read(leg2.csv_path.as_ref().unwrap()).unwrap();
+
+    // reference: one uninterrupted run in a fresh directory
+    let dir_b = tmp_dir("resume_b");
+    let full = queue::run_sweep(&spec, &dir_b, false, None, Parallelism::new(4)).unwrap();
+    assert_eq!(full.ran, 18);
+    let results_b = std::fs::read(full.results_path.as_ref().unwrap()).unwrap();
+    let csv_b = std::fs::read(full.csv_path.as_ref().unwrap()).unwrap();
+
+    assert!(
+        results_a == results_b,
+        "interrupted+resumed results.jsonl differs from the uninterrupted run"
+    );
+    assert_eq!(csv_a, csv_b, "pivot CSVs diverged");
+    assert!(!results_a.is_empty());
+    let first = String::from_utf8(results_a.clone()).unwrap();
+    let first = first.lines().next().unwrap();
+    assert!(first.contains("\"final_loss\"") && first.contains("\"id\""));
+
+    // a third resume call is a no-op that still (re)writes identical output
+    let noop = queue::run_sweep(&spec, &dir_a, true, None, Parallelism::new(1)).unwrap();
+    assert_eq!(noop.ran, 0);
+    assert_eq!(noop.skipped, 18);
+    assert_eq!(std::fs::read(noop.results_path.unwrap()).unwrap(), results_b);
+
+    // a fresh partial rerun into a completed directory must clear the old
+    // results files — an incomplete sweep leaves no stale output behind
+    let partial = queue::run_sweep(&spec, &dir_b, false, Some(2), Parallelism::new(1)).unwrap();
+    assert_eq!(partial.ran, 2);
+    assert!(partial.results_path.is_none());
+    assert!(!dir_b.join("results.jsonl").exists(), "stale results.jsonl survived a fresh rerun");
+    assert!(!dir_b.join("results.csv").exists(), "stale results.csv survived a fresh rerun");
+
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+}
+
+#[test]
+fn stall_jobs_run_the_retirement_path_deterministically() {
+    // the ROADMAP partial-participation workload: stalling workers under
+    // a gather deadline, driven through the net leader (miss accounting +
+    // chronic-straggler retirement). With a generous deadline the miss
+    // set is exactly the seeded stall set, so two runs are bit-identical.
+    let spec = SweepSpec::from_toml_str(
+        r#"
+        [sweep]
+        name = "stall_unit"
+
+        [fixed]
+        devices = 12
+        honest = 9
+        dim = 8
+        d = 2
+        iters = 6
+        lr = 1e-4
+        log_every = 3
+        seed = 55
+
+        # generous vs the in-process microsecond uploads, so an honest
+        # worker descheduled on a loaded CI runner still makes the
+        # deadline — the miss set must be exactly the seeded stall set
+        [net]
+        gather_deadline_ms = 700
+
+        [grid]
+        stall_prob = [0.0, 0.45]
+        "#,
+    )
+    .unwrap();
+    let jobs = spec.expand().unwrap();
+    assert_eq!(jobs.len(), 2);
+
+    // the stall-free job through the deadline path matches the central
+    // fast path exactly (all devices live)
+    let live = queue::run_job(&jobs[0], &Pool::serial()).unwrap();
+    let mut rng = Rng::new(jobs[0].data_seed);
+    let ds = LinRegDataset::generate(12, 8, jobs[0].cfg.sigma_h, &mut rng);
+    let central = run_variant_in(
+        &ds,
+        &Variant { label: "central".into(), cfg: jobs[0].cfg.clone(), draco_r: None },
+        jobs[0].run_seed,
+        &Pool::serial(),
+    )
+    .unwrap();
+    assert_traces_identical(&live, &central, "deadline path, all live");
+    assert_eq!(live.anomalies, 0);
+
+    // the stalling job: misses recorded, run completes, and reruns are
+    // bit-identical (stall decisions come from seeded private streams)
+    let a = queue::run_job(&jobs[1], &Pool::serial()).unwrap();
+    assert!(a.anomalies > 0, "stall_prob=0.45 over 6 iterations must miss at least once");
+    assert!(a.final_loss.is_finite());
+    let b = queue::run_job(&jobs[1], &Pool::serial()).unwrap();
+    assert_traces_identical(&a, &b, "stall job rerun");
+    assert_eq!(a.anomalies, b.anomalies, "anomaly accounting must be deterministic");
+}
+
+#[test]
+fn quickstart_example_spec_parses_and_expands() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/sweep_quickstart.toml");
+    let spec = SweepSpec::from_file(path).unwrap();
+    let jobs = spec.expand().unwrap();
+    // the documented acceptance shape: >=3 attacks x >=3 rules x 2 compressors
+    assert!(jobs.len() >= 18, "quickstart grid shrank to {} jobs", jobs.len());
+    let attacks: std::collections::BTreeSet<_> =
+        jobs.iter().map(|j| j.cfg.attack.name()).collect();
+    let rules: std::collections::BTreeSet<_> =
+        jobs.iter().map(|j| j.cfg.aggregator.name()).collect();
+    let comps: std::collections::BTreeSet<_> =
+        jobs.iter().map(|j| j.cfg.compression.name()).collect();
+    assert!(attacks.len() >= 3, "attacks: {attacks:?}");
+    assert!(rules.len() >= 3, "rules: {rules:?}");
+    assert!(comps.len() >= 2, "compressors: {comps:?}");
+}
+
+#[test]
+fn smoke_example_spec_is_ci_sized() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/sweep_smoke.toml");
+    let spec = SweepSpec::from_file(path).unwrap();
+    let jobs = spec.expand().unwrap();
+    assert!(
+        (2..=8).contains(&jobs.len()),
+        "CI smoke spec must stay tiny, got {} jobs",
+        jobs.len()
+    );
+    assert!(jobs.iter().all(|j| j.cfg.iters <= 30), "smoke jobs must be short");
+}
+
+#[test]
+fn attack_kind_detail_reaches_the_job_config() {
+    // AttackKind axis values carry their canonical parameters; the stall
+    // probability of one job never leaks into its siblings
+    let spec = SweepSpec::from_toml_str(
+        r#"
+        [net]
+        gather_deadline_ms = 100
+        [grid]
+        attack = ["ipm", "gaussian"]
+        stall_prob = [0.0, 0.2]
+        "#,
+    )
+    .unwrap();
+    let jobs = spec.expand().unwrap();
+    assert_eq!(jobs.len(), 4);
+    assert_eq!(jobs[0].cfg.attack, AttackKind::Ipm { eps: 0.5 });
+    assert_eq!(jobs[2].cfg.attack, AttackKind::Gaussian { std: 10.0 });
+    assert_eq!(jobs[0].stall_prob, 0.0);
+    assert_eq!(jobs[1].stall_prob, 0.2);
+    // ids differ across every coordinate
+    let ids: std::collections::BTreeSet<_> = jobs.iter().map(|j| j.id.clone()).collect();
+    assert_eq!(ids.len(), 4);
+}
