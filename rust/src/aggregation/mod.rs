@@ -36,6 +36,7 @@
 //! | [`Mcc`] (correntropy [9])    | O(T·NQ), T reweights   | `CenterScratch`; adaptive kernel |
 //! | [`Faba`] [5]                 | O(f·NQ)                | f farthest-from-mean removals |
 //! | [`Tgn`] (norm filter [19])   | O(NQ + N log N)        | drops ⌈βN⌉ largest norms |
+//! | [`MomentumFilter`] (CMF)     | O(NQ) expected         | momentum, median-dist filter |
 //! | [`Nnm`] pre-aggregation [23] | O(N²Q/2) + inner rule  | Gram pass + parallel mixing |
 //!
 //! # The gram/pool subsystem
@@ -86,6 +87,7 @@ pub mod krum;
 pub mod mcc;
 pub mod mean;
 pub mod median;
+pub mod momentum_filter;
 pub mod nnm;
 pub mod tgn;
 
@@ -107,6 +109,7 @@ pub use krum::{Krum, MultiKrum};
 pub use mcc::Mcc;
 pub use mean::Mean;
 pub use median::CoordinateMedian;
+pub use momentum_filter::MomentumFilter;
 pub use nnm::Nnm;
 pub use tgn::Tgn;
 
@@ -135,6 +138,9 @@ pub fn from_config_pooled(cfg: &TrainConfig, pool: &Pool) -> Box<dyn Aggregator>
         AggregatorKind::Mcc => Box::new(Mcc::default().with_pool(pool)),
         AggregatorKind::Faba => Box::new(Faba::new(f)),
         AggregatorKind::Tgn => Box::new(Tgn::new(cfg.trim_frac)),
+        AggregatorKind::MomentumFilter => {
+            Box::new(MomentumFilter::new(f, momentum_filter::DEFAULT_ALPHA))
+        }
     };
     if cfg.nnm {
         Box::new(Nnm::new(f, base).with_pool(pool))
@@ -175,6 +181,7 @@ mod tests {
             AggregatorKind::Mcc,
             AggregatorKind::Faba,
             AggregatorKind::Tgn,
+            AggregatorKind::MomentumFilter,
         ] {
             let mut cfg = TrainConfig::default();
             cfg.aggregator = kind;

@@ -1,0 +1,160 @@
+//! Server-side momentum filtering (Compressed Momentum Filtering,
+//! arXiv 2409.08640).
+//!
+//! The server keeps one momentum buffer per device and folds each round's
+//! received message into it before aggregating:
+//!
+//! ```text
+//! mᵢᵗ = (1 − α)·mᵢᵗ⁻¹ + α·xᵢᵗ      (first observation: mᵢ = xᵢ)
+//! out = mean{ mᵢ : i in the N − f momenta closest to cw-median(m) }
+//! ```
+//!
+//! Momentum smoothing shrinks the honest variance the filter has to
+//! tolerate (the same quantity κ multiplies in Definition 1), which is the
+//! core of the CMF argument; the filter itself is a distance test against
+//! the coordinate-wise median of the momenta, keeping the N − f closest
+//! and averaging them in device-index order.
+//!
+//! Determinism and semantics contract:
+//!
+//! * The first call on fresh buffers initializes mᵢ = xᵢ, so a single
+//!   call is exactly the *filtered mean* — translation-equivariant, and
+//!   with f = 0 bitwise equal to [`super::Mean`] (same axpy-then-scale
+//!   summation in index order).
+//! * Momentum is tied to device slots. If the family size or dimension
+//!   changes between calls (a retired device under the net leader's
+//!   partial-participation path), all buffers reset — mirroring the EF
+//!   residual-reset rule in [`crate::compress::ef`]: membership changes
+//!   never replay stale per-device memory.
+//! * All state lives behind a `Mutex` (the [`Aggregator`] trait is
+//!   `&self`); calls are serialized, and the training loop is the only
+//!   caller, so traces stay bit-identical across thread counts and
+//!   kernel tiers.
+
+use super::{check_family, Aggregator, CoordinateMedian};
+use crate::util::math::{axpy, dist_sq, scale};
+use std::sync::Mutex;
+
+/// Default momentum weight on the incoming message (m ← (1−α)m + αx).
+/// Hard-coded rather than configurable so the sweep engine's canonical
+/// job strings stay stable — `momentum-filter` is a parameter-free rule
+/// axis value.
+pub const DEFAULT_ALPHA: f32 = 0.9;
+
+/// Per-device momentum buffers + median-distance filter (see module docs).
+pub struct MomentumFilter {
+    f: usize,
+    alpha: f32,
+    buffers: Mutex<Vec<Vec<f32>>>,
+}
+
+impl MomentumFilter {
+    /// `f` = assumed Byzantine count (the filter discards the `f` momenta
+    /// farthest from the coordinate-wise median); `alpha` ∈ (0, 1] is the
+    /// weight on the incoming message.
+    pub fn new(f: usize, alpha: f32) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "momentum weight must be in (0, 1]");
+        MomentumFilter { f, alpha, buffers: Mutex::new(Vec::new()) }
+    }
+
+    /// Drop all momentum buffers; the next call re-initializes mᵢ = xᵢ.
+    pub fn reset(&self) {
+        self.buffers.lock().unwrap().clear();
+    }
+}
+
+impl Aggregator for MomentumFilter {
+    fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
+        let q = check_family(msgs);
+        let n = msgs.len();
+        let mut buf = self.buffers.lock().unwrap();
+        if buf.len() != n || buf.iter().any(|m| m.len() != q) {
+            buf.clear();
+        }
+        if buf.is_empty() {
+            *buf = msgs.to_vec();
+        } else {
+            for (m, x) in buf.iter_mut().zip(msgs) {
+                for j in 0..q {
+                    m[j] = (1.0 - self.alpha) * m[j] + self.alpha * x[j];
+                }
+            }
+        }
+        // score momenta by distance to their coordinate-wise median, keep
+        // the N − f closest (ties broken by device index), average the
+        // kept momenta in index order
+        let center = CoordinateMedian.aggregate(&buf);
+        let mut scored: Vec<(f64, usize)> =
+            buf.iter().enumerate().map(|(i, m)| (dist_sq(m, &center), i)).collect();
+        scored.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let keep = n - self.f.min(n - 1);
+        let mut kept: Vec<usize> = scored[..keep].iter().map(|&(_, i)| i).collect();
+        kept.sort_unstable();
+        let mut out = vec![0.0f32; q];
+        for &i in &kept {
+            axpy(1.0, &buf[i], &mut out);
+        }
+        scale(&mut out, 1.0 / keep as f32);
+        out
+    }
+
+    fn name(&self) -> String {
+        "momentum-filter".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::Mean;
+
+    #[test]
+    fn fresh_f0_call_is_bitwise_mean() {
+        let msgs: Vec<Vec<f32>> =
+            (0..7).map(|i| (0..5).map(|j| (i * 5 + j) as f32 * 0.3 - 2.0).collect()).collect();
+        let mf = MomentumFilter::new(0, DEFAULT_ALPHA);
+        assert_eq!(mf.aggregate(&msgs), Mean.aggregate(&msgs));
+    }
+
+    #[test]
+    fn filter_discards_the_far_momentum() {
+        let mut msgs = vec![vec![1.0f32, 2.0]; 9];
+        msgs.push(vec![1e6, -1e6]);
+        let out = MomentumFilter::new(1, DEFAULT_ALPHA).aggregate(&msgs);
+        assert!((out[0] - 1.0).abs() < 1e-5 && (out[1] - 2.0).abs() < 1e-5, "{out:?}");
+    }
+
+    #[test]
+    fn momentum_carries_across_calls() {
+        let mf = MomentumFilter::new(0, 0.5);
+        let a = vec![vec![4.0f32]; 3];
+        let b = vec![vec![0.0f32]; 3];
+        assert_eq!(mf.aggregate(&a), vec![4.0]);
+        // m = 0.5·4 + 0.5·0 = 2
+        assert_eq!(mf.aggregate(&b), vec![2.0]);
+        // m = 0.5·2 + 0.5·0 = 1
+        assert_eq!(mf.aggregate(&b), vec![1.0]);
+    }
+
+    #[test]
+    fn membership_change_resets_the_buffers() {
+        let mf = MomentumFilter::new(0, 0.5);
+        let _ = mf.aggregate(&vec![vec![8.0f32]; 4]);
+        // family shrank: buffers reset, so this is a fresh filtered mean
+        let out = mf.aggregate(&vec![vec![2.0f32]; 3]);
+        assert_eq!(out, vec![2.0], "stale momentum leaked across a membership change");
+    }
+
+    #[test]
+    fn explicit_reset_clears_state() {
+        let mf = MomentumFilter::new(0, 0.5);
+        let _ = mf.aggregate(&vec![vec![8.0f32]; 2]);
+        mf.reset();
+        assert_eq!(mf.aggregate(&vec![vec![2.0f32]; 2]), vec![2.0]);
+    }
+
+    #[test]
+    fn name_matches_the_config_axis_value() {
+        assert_eq!(MomentumFilter::new(1, DEFAULT_ALPHA).name(), "momentum-filter");
+    }
+}

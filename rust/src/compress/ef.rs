@@ -1,0 +1,247 @@
+//! Error-feedback (EF) compression memory stage.
+//!
+//! Implements the residual-memory scheme of Rammal et al., *"Communication
+//! compression for Byzantine robust learning: new efficient algorithms and
+//! improved rates"* (arXiv 2310.09804): each device carries a residual
+//! vector eᵢ across iterations, transmits C(eᵢ + gᵢ), and stores the
+//! compression error back:
+//!
+//! ```text
+//! aᵢᵗ = eᵢᵗ + gᵢᵗ            (the EF input, computed with axpy)
+//! tᵢᵗ = C(aᵢᵗ)               (what crosses the wire — base-operator bits)
+//! eᵢᵗ⁺¹ = aᵢᵗ − tᵢᵗ          (elementwise f32 subtraction, stored)
+//! ```
+//!
+//! The decomposition is exact by construction: the stored residual is the
+//! bitwise elementwise difference `aᵢ − tᵢ`, so `tᵢ` plus the stored
+//! residual recovers `eᵢ + gᵢ` up to one IEEE-754 rounding of the final
+//! re-addition, and on every coordinate a sparsifier zeroes (`tᵢ[j] = 0`)
+//! the residual keeps `aᵢ[j]` bit-exactly. EF turns the *biased* top-K
+//! into a contractive scheme and keeps the unbiased operators' wire cost
+//! unchanged — the transmitted message is a plain base-operator output, so
+//! `net::wire::Payload` encodings apply verbatim.
+//!
+//! Determinism contract: the EF input is formed with the runtime-dispatched
+//! [`crate::util::math::axpy`] kernel (bit-identical across SIMD tiers) and
+//! the residual update is an elementwise scalar subtraction, so central,
+//! device-side (worker-held state, see `net::worker`) and any thread count
+//! produce bit-identical traces. State lifecycle: one residual per device,
+//! zero-initialized per run; a device retired by the net leader has its
+//! residual [`EfState::reset`] to zero (and a worker process restarted into
+//! a new run always starts from zero), so a rejoining device can never
+//! replay stale memory.
+
+use super::{compress_batch, CompressedMsg, Compressor};
+use crate::config::CompressionKind;
+use crate::util::math::axpy;
+use crate::util::parallel::Pool;
+use crate::util::rng::Rng;
+
+/// The stateless face of an EF kind: delegates compression to the wrapped
+/// base operator (the caller owns the residual memory via [`EfState`]) and
+/// reports the `ef-` prefixed operator name. `compress::from_kind` returns
+/// this for the `Ef*` kinds so bit accounting, `delta` and wire encodings
+/// are exactly the base operator's.
+pub struct Ef {
+    base: Box<dyn Compressor>,
+}
+
+impl Ef {
+    /// Wrap the stateless base operator of `kind` (its [`ef_base`] for EF
+    /// kinds, `kind` itself otherwise).
+    ///
+    /// [`ef_base`]: CompressionKind::ef_base
+    pub fn new(kind: CompressionKind) -> Self {
+        Ef { base: super::from_kind(kind.ef_base().unwrap_or(kind)) }
+    }
+}
+
+impl Compressor for Ef {
+    /// Compress an already-formed EF input (residual + gradient). Without
+    /// an [`EfState`] in front this is exactly the base operator.
+    fn compress(&self, g: &[f32], rng: &mut Rng) -> CompressedMsg {
+        self.base.compress(g, rng)
+    }
+    /// The base operator's per-step δ (eq. 10). The EF *iteration* enjoys
+    /// a tighter effective error (see `theory::TheoryParams::error_term_ef_bigo`).
+    fn delta(&self, dim: usize) -> Option<f64> {
+        self.base.delta(dim)
+    }
+    fn name(&self) -> String {
+        format!("ef-{}", self.base.name())
+    }
+}
+
+/// Per-device error-feedback residual memory, carried across iterations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EfState {
+    residuals: Vec<Vec<f32>>,
+}
+
+impl EfState {
+    /// `n` devices × `dim` coordinates, all residuals zero.
+    pub fn new(n: usize, dim: usize) -> Self {
+        EfState { residuals: vec![vec![0.0f32; dim]; n] }
+    }
+
+    /// Residual memory for `kind` if it is an EF kind, else `None` — the
+    /// one-liner the trainer/leader/worker use to decide whether the EF
+    /// stage is active.
+    pub fn for_kind(kind: CompressionKind, n: usize, dim: usize) -> Option<EfState> {
+        kind.is_ef().then(|| EfState::new(n, dim))
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.residuals.len()
+    }
+
+    /// Device `i`'s carried residual.
+    pub fn residual(&self, device: usize) -> &[f32] {
+        &self.residuals[device]
+    }
+
+    /// Zero device `i`'s residual — called when the net leader retires a
+    /// device, so a slot that were ever rejoined starts from fresh memory.
+    pub fn reset(&mut self, device: usize) {
+        self.residuals[device].iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// The EF input aᵢ = eᵢ + gᵢ (residual clone + `axpy(1.0, g, ·)`,
+    /// running on the active kernel tier).
+    pub fn input(&self, device: usize, g: &[f32]) -> Vec<f32> {
+        let mut a = self.residuals[device].clone();
+        axpy(1.0, g, &mut a);
+        a
+    }
+
+    /// Store the compression error eᵢ ← aᵢ − tᵢ (elementwise f32).
+    pub fn absorb(&mut self, device: usize, input: &[f32], transmitted: &[f32]) {
+        let e = &mut self.residuals[device];
+        debug_assert_eq!(e.len(), input.len());
+        for j in 0..e.len() {
+            e[j] = input[j] - transmitted[j];
+        }
+    }
+
+    /// One full EF step for a single device: form the input, compress it
+    /// with the device's private stream, absorb the error, return the
+    /// transmitted message. This is the worker-side (and per-device
+    /// leader-side) path; [`compress_batch_ef`] is the batched equivalent
+    /// and produces bit-identical messages.
+    pub fn step(
+        &mut self,
+        device: usize,
+        g: &[f32],
+        comp: &dyn Compressor,
+        rng: &mut Rng,
+    ) -> CompressedMsg {
+        let input = self.input(device, g);
+        let c = comp.compress(&input, rng);
+        self.absorb(device, &input, &c.vec);
+        c
+    }
+}
+
+/// The EF uplink step for a whole device family: form every EF input,
+/// compress the batch on the pool (thread-count invariant — each device
+/// owns its stream and its residual row), absorb every error. Message `i`
+/// uses residual `i` and `rngs[i]`; bit accounting is the base operator's.
+pub fn compress_batch_ef(
+    comp: &dyn Compressor,
+    state: &mut EfState,
+    msgs: &[&[f32]],
+    rngs: &mut [Rng],
+    pool: &Pool,
+) -> (Vec<Vec<f32>>, u64) {
+    assert_eq!(msgs.len(), state.n_devices(), "one residual per message");
+    let inputs: Vec<Vec<f32>> =
+        msgs.iter().enumerate().map(|(i, g)| state.input(i, g)).collect();
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let (out, bits) = compress_batch(comp, &refs, rngs, pool);
+    for i in 0..msgs.len() {
+        state.absorb(i, &inputs[i], &out[i]);
+    }
+    (out, bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, RandK, TopK};
+
+    #[test]
+    fn identity_keeps_residual_exactly_zero() {
+        let mut st = EfState::new(1, 8);
+        let mut rng = Rng::new(3);
+        for step in 0..5 {
+            let g: Vec<f32> = (0..8).map(|j| (j as f32 + 1.0) * 0.25 - step as f32).collect();
+            let c = st.step(0, &g, &Identity, &mut rng);
+            assert_eq!(c.vec, g, "identity EF transmits the gradient itself");
+            assert!(st.residual(0).iter().all(|&e| e == 0.0), "residual drifted");
+        }
+    }
+
+    #[test]
+    fn residual_carries_the_untransmitted_mass() {
+        // top-1 on a 3-vector: the two dropped coordinates accumulate
+        let mut st = EfState::new(1, 3);
+        let mut rng = Rng::new(1);
+        let g = vec![10.0f32, 1.0, 2.0];
+        let c = st.step(0, &g, &TopK::new(1), &mut rng);
+        assert_eq!(c.vec, vec![10.0, 0.0, 0.0]);
+        assert_eq!(st.residual(0), &[0.0, 1.0, 2.0]);
+        // second step compresses residual + gradient
+        let c = st.step(0, &g, &TopK::new(1), &mut rng);
+        assert_eq!(c.vec, vec![10.0, 0.0, 0.0]);
+        assert_eq!(st.residual(0), &[0.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn reset_zeroes_one_device_only() {
+        let mut st = EfState::new(2, 2);
+        let mut rng = Rng::new(2);
+        for dev in 0..2 {
+            st.step(dev, &[1.0, 2.0], &TopK::new(1), &mut rng);
+        }
+        assert!(st.residual(0).iter().any(|&e| e != 0.0));
+        st.reset(0);
+        assert_eq!(st.residual(0), &[0.0, 0.0]);
+        assert!(st.residual(1).iter().any(|&e| e != 0.0), "other device untouched");
+    }
+
+    #[test]
+    fn batch_matches_per_device_steps_bitwise() {
+        let mut gen = Rng::new(77);
+        let msgs_owned: Vec<Vec<f32>> = (0..6).map(|_| gen.gauss_vec(40)).collect();
+        let msgs: Vec<&[f32]> = msgs_owned.iter().map(|m| m.as_slice()).collect();
+        let comp = RandK::new(7);
+        let parent = Rng::new(99);
+        let mut st_a = EfState::new(6, 40);
+        let mut st_b = EfState::new(6, 40);
+        for round in 0..3 {
+            let mut rngs = parent.split(6);
+            let (batch, bits) =
+                compress_batch_ef(&comp, &mut st_a, &msgs, &mut rngs, &Pool::new(4));
+            let mut rngs = parent.split(6);
+            let singles: Vec<Vec<f32>> = (0..6)
+                .map(|i| st_b.step(i, msgs[i], &comp, &mut rngs[i]).vec)
+                .collect();
+            assert_eq!(batch, singles, "round {round}");
+            assert_eq!(st_a, st_b, "round {round}: residuals diverged");
+            assert!(bits > 0);
+        }
+    }
+
+    #[test]
+    fn ef_wrapper_names_and_delegates() {
+        let ef = Ef::new(CompressionKind::EfRandK { k: 5 });
+        assert_eq!(ef.name(), "ef-rand-5");
+        assert_eq!(ef.delta(20), RandK::new(5).delta(20));
+        let mut a = Rng::new(8);
+        let mut b = Rng::new(8);
+        let g: Vec<f32> = (0..20).map(|j| j as f32 * 0.5 - 3.0).collect();
+        assert_eq!(ef.compress(&g, &mut a), RandK::new(5).compress(&g, &mut b));
+        assert!(EfState::for_kind(CompressionKind::EfQsgd { levels: 4 }, 3, 7).is_some());
+        assert!(EfState::for_kind(CompressionKind::Qsgd { levels: 4 }, 3, 7).is_none());
+    }
+}

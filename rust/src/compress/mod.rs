@@ -12,6 +12,14 @@
 //! | [`RandK`]    | Q/K − 1               | K·(32 + ⌈log₂ Q⌉)           |
 //! | [`Qsgd`]     | ≤ min(Q/s², √Q/s)     | 32 + Q·(1 + ⌈log₂(s+1)⌉)    |
 //! | [`TopK`]     | biased (none)         | K·(32 + ⌈log₂ Q⌉)           |
+//! | [`ef::Ef`]   | base per step (EF memory) | base operator's bits    |
+//!
+//! The [`ef`] module adds the error-feedback memory stage (Rammal et al.,
+//! arXiv 2310.09804): a per-device residual carried across iterations,
+//! compressing `residual + gradient` with any base operator above and
+//! storing the compression error back ([`ef::EfState`] +
+//! [`ef::compress_batch_ef`]). Wire cost and payload encodings are the
+//! base operator's — only the input changes.
 //!
 //! Batch uplink compression (one private RNG stream per device, thread-count
 //! invariant) is provided by [`compress_batch`] — the step both the fast
@@ -20,6 +28,7 @@
 //! the runtime-dispatched `util::math` kernel tier, bit-identical across
 //! tiers, so compressed messages never depend on the host CPU.
 
+pub mod ef;
 pub mod qsgd;
 pub mod rand_k;
 pub mod top_k;
@@ -80,17 +89,25 @@ impl Compressor for Identity {
     }
 }
 
+pub use ef::{compress_batch_ef, Ef, EfState};
 pub use qsgd::Qsgd;
 pub use rand_k::RandK;
 pub use top_k::TopK;
 
-/// Build from a config kind.
+/// Build from a config kind. EF kinds get the [`Ef`] wrapper — the same
+/// stateless `Compressor` face over the base operator, with the `ef-`
+/// name; the residual memory lives in the caller-held [`EfState`]
+/// (`EfState::for_kind`), which the trainer, net leader and net worker
+/// each maintain for their devices.
 pub fn from_kind(kind: CompressionKind) -> Box<dyn Compressor> {
     match kind {
         CompressionKind::None => Box::new(Identity),
         CompressionKind::RandK { k } => Box::new(RandK::new(k)),
         CompressionKind::TopK { k } => Box::new(TopK::new(k)),
         CompressionKind::Qsgd { levels } => Box::new(Qsgd::new(levels)),
+        CompressionKind::EfRandK { .. }
+        | CompressionKind::EfTopK { .. }
+        | CompressionKind::EfQsgd { .. } => Box::new(Ef::new(kind)),
     }
 }
 
@@ -205,11 +222,15 @@ mod tests {
             CompressionKind::RandK { k: 10 },
             CompressionKind::TopK { k: 10 },
             CompressionKind::Qsgd { levels: 8 },
+            CompressionKind::EfRandK { k: 10 },
+            CompressionKind::EfTopK { k: 10 },
+            CompressionKind::EfQsgd { levels: 8 },
         ] {
             let c = from_kind(kind);
             let out = c.compress(&g, &mut rng);
             assert_eq!(out.vec.len(), 40, "{}", c.name());
             assert!(out.bits > 0);
+            assert_eq!(c.name().starts_with("ef-"), kind.is_ef());
         }
     }
 }

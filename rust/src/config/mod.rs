@@ -22,6 +22,9 @@ pub enum AggregatorKind {
     Mcc,
     Faba,
     Tgn,
+    /// Server-side momentum filtering (arXiv 2409.08640): per-device
+    /// momentum buffers folded into a distance-filtered aggregate.
+    MomentumFilter,
 }
 
 impl AggregatorKind {
@@ -36,6 +39,7 @@ impl AggregatorKind {
             "mcc" | "correntropy" => AggregatorKind::Mcc,
             "faba" => AggregatorKind::Faba,
             "tgn" | "norm-threshold" => AggregatorKind::Tgn,
+            "momentum-filter" | "momfilter" | "cmf" => AggregatorKind::MomentumFilter,
             other => bail!("unknown aggregator {other:?}"),
         })
     }
@@ -50,6 +54,7 @@ impl AggregatorKind {
             AggregatorKind::Mcc => "mcc",
             AggregatorKind::Faba => "faba",
             AggregatorKind::Tgn => "tgn",
+            AggregatorKind::MomentumFilter => "momentum-filter",
         }
     }
 }
@@ -105,6 +110,15 @@ pub enum CompressionKind {
     TopK { k: usize },
     /// QSGD-style stochastic quantization with `levels` levels.
     Qsgd { levels: u32 },
+    /// Error-feedback rand-K (arXiv 2310.09804): per-device residual
+    /// memory wrapped around rand-K — `residual + gradient` is compressed
+    /// and the compression error is carried to the next iteration.
+    EfRandK { k: usize },
+    /// Error-feedback top-K: EF memory turns the biased sparsifier into a
+    /// contractive scheme (the Rammal et al. setting).
+    EfTopK { k: usize },
+    /// Error-feedback QSGD.
+    EfQsgd { levels: u32 },
 }
 
 impl CompressionKind {
@@ -114,7 +128,26 @@ impl CompressionKind {
             CompressionKind::RandK { .. } => "rand-k",
             CompressionKind::TopK { .. } => "top-k",
             CompressionKind::Qsgd { .. } => "qsgd",
+            CompressionKind::EfRandK { .. } => "ef-rand-k",
+            CompressionKind::EfTopK { .. } => "ef-top-k",
+            CompressionKind::EfQsgd { .. } => "ef-qsgd",
         }
+    }
+
+    /// For an error-feedback kind, the underlying stateless operator the
+    /// EF memory stage wraps; `None` for the plain (memoryless) kinds.
+    pub fn ef_base(&self) -> Option<CompressionKind> {
+        match *self {
+            CompressionKind::EfRandK { k } => Some(CompressionKind::RandK { k }),
+            CompressionKind::EfTopK { k } => Some(CompressionKind::TopK { k }),
+            CompressionKind::EfQsgd { levels } => Some(CompressionKind::Qsgd { levels }),
+            _ => None,
+        }
+    }
+
+    /// Whether this kind carries per-device error-feedback state.
+    pub fn is_ef(&self) -> bool {
+        self.ef_base().is_some()
     }
 }
 
@@ -262,7 +295,11 @@ impl TrainConfig {
         if self.lr <= 0.0 {
             bail!("lr must be positive");
         }
-        if let CompressionKind::RandK { k } | CompressionKind::TopK { k } = self.compression {
+        if let CompressionKind::RandK { k }
+        | CompressionKind::TopK { k }
+        | CompressionKind::EfRandK { k }
+        | CompressionKind::EfTopK { k } = self.compression
+        {
             if k == 0 || k > self.dim {
                 bail!("compression k={} out of range 1..={}", k, self.dim);
             }
@@ -382,6 +419,9 @@ pub(crate) fn apply_train_table(
                     "rand-k" | "randk" => CompressionKind::RandK { k: 30 },
                     "top-k" | "topk" => CompressionKind::TopK { k: 30 },
                     "qsgd" => CompressionKind::Qsgd { levels: 16 },
+                    "ef-rand-k" | "ef-randk" => CompressionKind::EfRandK { k: 30 },
+                    "ef-top-k" | "ef-topk" => CompressionKind::EfTopK { k: 30 },
+                    "ef-qsgd" => CompressionKind::EfQsgd { levels: 16 },
                     other => bail!("unknown compression {other:?}"),
                 }
             }
@@ -389,7 +429,11 @@ pub(crate) fn apply_train_table(
                 let k = need_usize(key, v)?;
                 cfg.compression = match cfg.compression {
                     CompressionKind::TopK { .. } => CompressionKind::TopK { k },
-                    CompressionKind::Qsgd { .. } => bail!("q_hat does not apply to qsgd"),
+                    CompressionKind::EfTopK { .. } => CompressionKind::EfTopK { k },
+                    CompressionKind::EfRandK { .. } => CompressionKind::EfRandK { k },
+                    CompressionKind::Qsgd { .. } | CompressionKind::EfQsgd { .. } => {
+                        bail!("q_hat does not apply to qsgd")
+                    }
                     _ => CompressionKind::RandK { k },
                 };
             }
@@ -512,8 +556,34 @@ mod tests {
             AggregatorKind::Mcc,
             AggregatorKind::Faba,
             AggregatorKind::Tgn,
+            AggregatorKind::MomentumFilter,
         ] {
             assert_eq!(AggregatorKind::parse(k.name()).unwrap(), k);
         }
+    }
+
+    #[test]
+    fn ef_kinds_parse_validate_and_unwrap() {
+        let cfg = TrainConfig::from_toml_str(
+            r#"
+            devices = 100
+            honest = 80
+            compression = "ef-rand-k"
+            q_hat = 12
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.compression, CompressionKind::EfRandK { k: 12 });
+        assert_eq!(cfg.compression.ef_base(), Some(CompressionKind::RandK { k: 12 }));
+        assert!(cfg.compression.is_ef());
+        assert!(!CompressionKind::Qsgd { levels: 4 }.is_ef());
+        let cfg = TrainConfig::from_toml_str("compression = \"ef-qsgd\"").unwrap();
+        assert_eq!(cfg.compression, CompressionKind::EfQsgd { levels: 16 });
+        // q_hat does not retarget a quantizer, EF or not
+        assert!(TrainConfig::from_toml_str("compression = \"ef-qsgd\"\nq_hat = 5").is_err());
+        // k range checks cover the EF sparsifiers
+        let mut bad = TrainConfig::default();
+        bad.compression = CompressionKind::EfTopK { k: bad.dim + 1 };
+        assert!(bad.validate().is_err());
     }
 }

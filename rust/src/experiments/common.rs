@@ -146,6 +146,12 @@ pub fn run_variant_in(
     let mut rng = Rng::new(seed);
     let attack = attack::from_kind(v.cfg.attack);
     if let Some(r) = v.draco_r {
+        anyhow::ensure!(
+            !v.cfg.compression.is_ef(),
+            "variant {}: DRACO decoding has no error-feedback state — \
+             ef-* compression applies to the LAD/Com-LAD trainers only",
+            v.label
+        );
         let trainer = DracoTrainer { cfg: &v.cfg, attack: attack.as_ref(), r };
         trainer.run(oracle.as_mut(), &mut x0, &v.label, &mut rng)
     } else {

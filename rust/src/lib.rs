@@ -10,10 +10,13 @@
 //!   per-iteration random assignment, the coded-vector encoder (eq. 5) and a
 //!   DRACO fractional-repetition baseline decoder.
 //! * [`aggregation`] — a zoo of κ-robust aggregation rules (CWTM, median,
-//!   geometric median, Krum, MCC, FABA, TGN) plus NNM pre-aggregation.
+//!   geometric median, Krum, MCC, FABA, TGN, momentum-filter) plus NNM
+//!   pre-aggregation.
 //! * [`attack`] — Byzantine behaviours (sign-flip, ALIE, IPM, …).
 //! * [`compress`] — unbiased compression operators (rand-K, QSGD) with exact
-//!   bit accounting, plus biased top-K for ablations.
+//!   bit accounting, biased top-K for ablations, and an error-feedback
+//!   memory stage (`ef-rand-k` / `ef-top-k` / `ef-qsgd`) carrying each
+//!   device's compression residual across iterations.
 //! * [`grad`] — gradient oracles: a native Rust linear-regression oracle and
 //!   the PJRT-backed oracle that executes the AOT-lowered JAX/Pallas
 //!   artifacts produced by `python/compile/aot.py`.

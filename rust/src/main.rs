@@ -44,7 +44,7 @@ SUBCOMMANDS
   byz-sweep         final loss vs Byzantine count ablation [--d D --iters T --threads W]
   sweep             declarative scenario sweep (TOML grid over attack x rule x
                     compressor x f x d x sigma_h x stall_prob x deadline x seed)
-                    --spec FILE | --preset partial-participation|attack-zoo
+                    --spec FILE | --preset partial-participation|attack-zoo|ef-vs-coding
                     [--out DIR] [--resume] [--limit N] [--threads W]
                     journals each job to DIR/manifest.jsonl; --resume skips
                     finished jobs and the final results.jsonl/results.csv are
@@ -135,6 +135,11 @@ fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
             "rand-k" => CompressionKind::RandK { k: args.get_usize("q-hat", 30)? },
             "top-k" => CompressionKind::TopK { k: args.get_usize("q-hat", 30)? },
             "qsgd" => CompressionKind::Qsgd { levels: args.get_usize("levels", 16)? as u32 },
+            "ef-rand-k" => CompressionKind::EfRandK { k: args.get_usize("q-hat", 30)? },
+            "ef-top-k" => CompressionKind::EfTopK { k: args.get_usize("q-hat", 30)? },
+            "ef-qsgd" => {
+                CompressionKind::EfQsgd { levels: args.get_usize("levels", 16)? as u32 }
+            }
             other => bail!("unknown compression {other:?}"),
         };
     } else {

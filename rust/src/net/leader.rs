@@ -41,13 +41,24 @@
 //! (all a device-side adversary could see); omniscient attacks that read
 //! `ctx.honest` therefore match the central path only under leader-side
 //! compression or the Identity operator.
+//!
+//! **Error feedback.** Under an `ef-*` compression kind the leader keeps
+//! an [`EfState`] mirror: under leader-side compression it holds every
+//! device's residual; under device-side compression honest workers hold
+//! their own rows (`net::worker`) and the leader steps only the Byzantine
+//! rows when compressing the crafted lies — so full-participation runs
+//! stay bit-identical to `Trainer::run`. Residual-reset semantics, pinned
+//! by `tests/net_cluster.rs`: a device that merely misses a gather
+//! deadline keeps its residual (mirroring its untouched RNG stream), but
+//! a **retired** device's residual is zeroed the moment it is dropped, so
+//! a slot can never replay stale memory.
 
 use super::transport::Transport;
 use super::wire::{config_digest, DatasetBlock, Msg, WIRE_VERSION};
 use crate::aggregation::Aggregator;
 use crate::attack::{Attack, AttackContext};
 use crate::coding::{Assignment, TaskMatrix};
-use crate::compress::{compress_batch, Compressor};
+use crate::compress::{compress_batch, compress_batch_ef, Compressor, EfState};
 use crate::config::TrainConfig;
 use crate::data::linreg::LinRegDataset;
 use crate::server::metrics::TrainTrace;
@@ -67,9 +78,10 @@ use std::time::{Duration, Instant};
 pub const MISS_RETIRE_STREAK: usize = 3;
 
 /// Retire a device mid-run (deadline mode only): it is never broadcast to
-/// again, and if its upload was still pending this iteration the miss is
-/// charged to the trace as an anomaly immediately so the gather can stop
-/// waiting on it.
+/// again, its EF residual (when error feedback is active) is zeroed so the
+/// slot can never replay stale memory, and if its upload was still pending
+/// this iteration the miss is charged to the trace as an anomaly
+/// immediately so the gather can stop waiting on it.
 fn drop_device(
     dev: usize,
     dead: &mut [bool],
@@ -77,8 +89,12 @@ fn drop_device(
     got: &[Option<(Vec<f32>, u64)>],
     want: &mut usize,
     trace: &mut TrainTrace,
+    ef: Option<&mut EfState>,
 ) {
     dead[dev] = true;
+    if let Some(st) = ef {
+        st.reset(dev);
+    }
     if expecting[dev] && got[dev].is_none() {
         expecting[dev] = false;
         trace.anomalies += 1;
@@ -308,6 +324,11 @@ impl Leader<'_> {
         let n = cfg.n_devices;
         let timer = Timer::start();
         let mut comp_rngs: Vec<Rng> = comp_seeds.iter().map(|&s| Rng::new(s)).collect();
+        // EF residual mirror (Some only for ef-* kinds): leader-side
+        // compression steps every row; device-side compression steps only
+        // the Byzantine rows (honest workers hold their own). Rows are
+        // zeroed on retirement — see the module docs.
+        let mut ef = EfState::for_kind(cfg.compression, n, cfg.dim);
 
         // ---- split: sends stay here, one detached reader per device ----
         // Readers forward (device, Some((msg, bytes))) into a single
@@ -378,6 +399,9 @@ impl Leader<'_> {
                         if self.opts.gather_deadline.is_some() {
                             // crash-Byzantine: drop the device, keep going
                             dead[i] = true;
+                            if let Some(st) = ef.as_mut() {
+                                st.reset(i);
+                            }
                             trace.anomalies += 1;
                         } else {
                             return Err(e).context(format!("broadcast to device {i}"));
@@ -422,7 +446,15 @@ impl Leader<'_> {
                                  corrupt frame"
                             );
                         }
-                        drop_device(dev, &mut dead, &mut expecting, &got, &mut want, &mut trace);
+                        drop_device(
+                            dev,
+                            &mut dead,
+                            &mut expecting,
+                            &got,
+                            &mut want,
+                            &mut trace,
+                            ef.as_mut(),
+                        );
                         continue;
                     }
                 };
@@ -459,6 +491,7 @@ impl Leader<'_> {
                                     &got,
                                     &mut want,
                                     &mut trace,
+                                    ef.as_mut(),
                                 );
                             }
                         }
@@ -469,7 +502,15 @@ impl Leader<'_> {
                         if self.opts.gather_deadline.is_none() {
                             bail!("unexpected mid-run message from device {dev}: {other:?}");
                         }
-                        drop_device(dev, &mut dead, &mut expecting, &got, &mut want, &mut trace);
+                        drop_device(
+                            dev,
+                            &mut dead,
+                            &mut expecting,
+                            &got,
+                            &mut want,
+                            &mut trace,
+                            ef.as_mut(),
+                        );
                     }
                 }
             }
@@ -486,6 +527,11 @@ impl Leader<'_> {
                     miss_streak[i] += 1;
                     if miss_streak[i] >= MISS_RETIRE_STREAK {
                         dead[i] = true;
+                        // retirement zeroes the slot's residual; a mere
+                        // deadline miss (above) leaves it untouched
+                        if let Some(st) = ef.as_mut() {
+                            st.reset(i);
+                        }
                     }
                 }
             }
@@ -518,9 +564,17 @@ impl Leader<'_> {
                     self.attack.craft(&mut ctx)
                 };
                 // the emulated Byzantine uplinks are compressed with their
-                // own device streams, exactly as the central path does
+                // own device streams, exactly as the central path does —
+                // under EF, with their own residual rows too (honest rows
+                // live on the workers in this mode)
                 let mut out = honest_rec;
-                if byz_ids.iter().copied().eq(cfg.n_honest..n) {
+                if let Some(st) = ef.as_mut() {
+                    for (j, &i) in byz_ids.iter().enumerate() {
+                        let c = st.step(i, &lies[j], self.comp, &mut comp_rngs[i]);
+                        bits_total += c.bits as u64;
+                        out.push(c.vec);
+                    }
+                } else if byz_ids.iter().copied().eq(cfg.n_honest..n) {
                     let refs: Vec<&[f32]> = lies.iter().map(|l| l.as_slice()).collect();
                     let (rec, bits) = compress_batch(
                         self.comp,
@@ -558,18 +612,32 @@ impl Leader<'_> {
                         .map(|m| m.as_slice())
                         .chain(lies.iter().map(|m| m.as_slice()))
                         .collect();
-                    let (msgs, bits) = compress_batch(self.comp, &all, &mut comp_rngs, &self.pool);
+                    let (msgs, bits) = match ef.as_mut() {
+                        Some(st) => {
+                            compress_batch_ef(self.comp, st, &all, &mut comp_rngs, &self.pool)
+                        }
+                        None => compress_batch(self.comp, &all, &mut comp_rngs, &self.pool),
+                    };
                     bits_total += bits;
                     msgs
                 } else {
+                    // partial gather: per-device compression consumes only
+                    // the present devices' streams (and EF residual rows) —
+                    // an absent device's stream and residual stay untouched
                     let mut out = Vec::with_capacity(present.len());
                     for (j, &i) in honest_ids.iter().enumerate() {
-                        let c = self.comp.compress(&honest_true[j], &mut comp_rngs[i]);
+                        let c = match ef.as_mut() {
+                            Some(st) => st.step(i, &honest_true[j], self.comp, &mut comp_rngs[i]),
+                            None => self.comp.compress(&honest_true[j], &mut comp_rngs[i]),
+                        };
                         bits_total += c.bits as u64;
                         out.push(c.vec);
                     }
                     for (j, &i) in byz_ids.iter().enumerate() {
-                        let c = self.comp.compress(&lies[j], &mut comp_rngs[i]);
+                        let c = match ef.as_mut() {
+                            Some(st) => st.step(i, &lies[j], self.comp, &mut comp_rngs[i]),
+                            None => self.comp.compress(&lies[j], &mut comp_rngs[i]),
+                        };
                         bits_total += c.bits as u64;
                         out.push(c.vec);
                     }

@@ -509,6 +509,18 @@ fn encode_compression(kind: CompressionKind, w: &mut Writer) {
             w.u8(3);
             w.u32(levels);
         }
+        CompressionKind::EfRandK { k } => {
+            w.u8(4);
+            w.u32(k as u32);
+        }
+        CompressionKind::EfTopK { k } => {
+            w.u8(5);
+            w.u32(k as u32);
+        }
+        CompressionKind::EfQsgd { levels } => {
+            w.u8(6);
+            w.u32(levels);
+        }
     }
 }
 
@@ -520,6 +532,9 @@ fn decode_compression(r: &mut Reader) -> Result<CompressionKind> {
         1 => CompressionKind::RandK { k: param as usize },
         2 => CompressionKind::TopK { k: param as usize },
         3 => CompressionKind::Qsgd { levels: param },
+        4 => CompressionKind::EfRandK { k: param as usize },
+        5 => CompressionKind::EfTopK { k: param as usize },
+        6 => CompressionKind::EfQsgd { levels: param },
         other => bail!("unknown compression tag {other}"),
     })
 }
@@ -749,6 +764,33 @@ mod tests {
                 dataset,
             };
             assert_eq!(round_trip(&h), h);
+        }
+    }
+
+    #[test]
+    fn every_compression_kind_round_trips_in_hello() {
+        for compression in [
+            CompressionKind::None,
+            CompressionKind::RandK { k: 5 },
+            CompressionKind::TopK { k: 6 },
+            CompressionKind::Qsgd { levels: 16 },
+            CompressionKind::EfRandK { k: 5 },
+            CompressionKind::EfTopK { k: 6 },
+            CompressionKind::EfQsgd { levels: 16 },
+        ] {
+            let h = Msg::Hello {
+                version: WIRE_VERSION,
+                device: 0,
+                n_devices: 4,
+                dim: 8,
+                byzantine: false,
+                device_compression: true,
+                comp_seed: 1,
+                digest: 2,
+                compression,
+                dataset: None,
+            };
+            assert_eq!(round_trip(&h), h, "{compression:?}");
         }
     }
 

@@ -11,6 +11,14 @@
 //! centrally (the omniscient-adversary emulation cannot live on a real
 //! device).
 //!
+//! Under an error-feedback kind (`ef-*`, see [`crate::compress::ef`]) the
+//! worker holds its own residual memory: each served broadcast compresses
+//! `residual + coded` and stores the error back. The residual starts at
+//! zero with the process, a stalled iteration leaves it untouched (no
+//! compute happens), and a retired device's memory simply dies with the
+//! leader's interest in it — the leader's mirror of that slot is reset, so
+//! a rejoining slot can never replay stale state.
+//!
 //! The same function serves every transport: the in-process cluster
 //! simulation passes a borrowed dataset (no copy per worker), while the
 //! `lad node-worker` CLI decodes the dataset from `Hello`.
@@ -134,16 +142,22 @@ pub fn run_worker_opts(
     // panic, since they arrive over the wire
     match compression {
         crate::config::CompressionKind::RandK { k }
-        | crate::config::CompressionKind::TopK { k } => {
+        | crate::config::CompressionKind::TopK { k }
+        | crate::config::CompressionKind::EfRandK { k }
+        | crate::config::CompressionKind::EfTopK { k } => {
             ensure!(k >= 1, "hello carries a degenerate sparsifier (k = 0)");
         }
-        crate::config::CompressionKind::Qsgd { levels } => {
+        crate::config::CompressionKind::Qsgd { levels }
+        | crate::config::CompressionKind::EfQsgd { levels } => {
             ensure!(levels >= 1, "hello carries a degenerate quantizer (0 levels)");
         }
         crate::config::CompressionKind::None => {}
     }
     let comp = compress::from_kind(compression);
     let mut comp_rng = Rng::new(comp_seed);
+    // worker-held EF residual memory (one row, this device): zero at
+    // process start; a stalled iteration never touches it
+    let mut ef = compress::EfState::for_kind(compression, 1, ds.dim());
     let mut stall_rng = Rng::new(opts.stall_seed);
     let compress_uplink = device_compression && !byzantine;
     let mut iters = 0usize;
@@ -174,7 +188,10 @@ pub fn run_worker_opts(
                 }
                 scale(&mut coded, 1.0 / subsets.len() as f32);
                 let (payload, analytic_bits) = if compress_uplink {
-                    let c = comp.compress(&coded, &mut comp_rng);
+                    let c = match ef.as_mut() {
+                        Some(st) => st.step(0, &coded, comp.as_ref(), &mut comp_rng),
+                        None => comp.compress(&coded, &mut comp_rng),
+                    };
                     (Payload::from_compressed(&c), c.bits as u64)
                 } else {
                     (Payload::Dense { values: coded }, 0)

@@ -8,14 +8,16 @@
 //! 3. Byzantine devices craft their lies from their true messages (and, for
 //!    omniscient attacks, the honest messages);
 //! 4. all messages pass the compression operator C (Com-LAD; identity for
-//!    LAD), with exact uplink-bit accounting;
+//!    LAD), with exact uplink-bit accounting — under an `ef-*` kind the
+//!    error-feedback stage (`compress::ef`) compresses residual + message
+//!    per device and carries the compression error forward;
 //! 5. the server aggregates with the configured κ-robust rule and applies
 //!    x ← x − γ·agg(·).
 
 use crate::aggregation::Aggregator;
 use crate::attack::{Attack, AttackContext};
 use crate::coding::{Assignment, DracoScheme, TaskMatrix};
-use crate::compress::{compress_batch, Compressor};
+use crate::compress::{compress_batch, compress_batch_ef, Compressor, EfState};
 use crate::config::TrainConfig;
 use crate::grad::CodedGradOracle;
 use crate::server::metrics::TrainTrace;
@@ -112,6 +114,9 @@ impl<'a> Trainer<'a> {
         // of util::parallel. Streams persist across iterations, exactly as
         // a real device's local RNG would.
         let mut comp_rngs = rng.split(cfg.n_devices);
+        // Error-feedback residual memory (Some only for ef-* kinds): one
+        // row per device, zero at run start, carried across iterations.
+        let mut ef = EfState::for_kind(cfg.compression, cfg.n_devices, cfg.dim);
         let mut trace = TrainTrace::new(label);
         let s_hat = TaskMatrix::cyclic(cfg.n_devices, cfg.d);
         let mut coded = Mat::zeros(cfg.n_devices, cfg.dim);
@@ -164,8 +169,12 @@ impl<'a> Trainer<'a> {
                     hi += 1;
                 }
             }
-            let (msgs, bits) =
-                compress_batch(self.comp, &device_msgs, &mut comp_rngs, &pool);
+            let (msgs, bits) = match ef.as_mut() {
+                Some(st) => {
+                    compress_batch_ef(self.comp, st, &device_msgs, &mut comp_rngs, &pool)
+                }
+                None => compress_batch(self.comp, &device_msgs, &mut comp_rngs, &pool),
+            };
             bits_total += bits;
 
             // (5) robust aggregation + model update

@@ -20,7 +20,10 @@
 //!   deterministic trace field (wall-clock is excluded by design).
 //! * [`scenarios`] — flagship presets: the partial-participation sweep
 //!   (stall probability × gather deadline × rule through the `net`
-//!   leader's retirement path) and the attack-zoo robustness grid.
+//!   leader's retirement path), the attack-zoo robustness grid, and the
+//!   `ef-vs-coding` head-to-head (cyclic gradient coding vs error-feedback
+//!   compression vs momentum-filter aggregation from one rule × compressor
+//!   grid — the `ef-*` compressor and `momentum-filter` rule axes).
 //!
 //! The figure drivers (`fig4`/`fig5`/`fig6`/`byz-sweep`) build their
 //! variant lists as job batches and delegate execution to [`queue::execute`],

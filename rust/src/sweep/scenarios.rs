@@ -8,10 +8,14 @@
 //! * [`attack_zoo`] — the robustness grid: attack × rule × compressor,
 //!   the comparative core of the paper's §VII generalized beyond the
 //!   hand-picked figure settings.
+//! * [`ef_vs_coding`] — the head-to-head the literature lacks: cyclic
+//!   gradient coding (LAD / Com-LAD under CWTM) against error-feedback
+//!   compression (Rammal et al., arXiv 2310.09804) and momentum-filter
+//!   aggregation (arXiv 2409.08640), all from one rule × compressor grid.
 //!
-//! Both return plain [`SweepSpec`]s: run them via
+//! All return plain [`SweepSpec`]s: run them via
 //! `lad sweep --preset <name>`, or use them as templates for a custom
-//! TOML spec (`examples/sweep_quickstart.toml`).
+//! TOML spec (`examples/sweep_quickstart.toml`, `examples/ef_vs_coding.toml`).
 
 use crate::config::{AggregatorKind, AttackKind, CompressionKind, TrainConfig};
 use crate::sweep::spec::{Grid, SweepSpec};
@@ -23,7 +27,10 @@ pub fn preset(name: &str) -> Result<SweepSpec> {
     Ok(match name {
         "partial-participation" | "partial" => partial_participation(),
         "attack-zoo" | "attacks" => attack_zoo(),
-        other => bail!("unknown preset {other:?} (partial-participation | attack-zoo)"),
+        "ef-vs-coding" | "ef" => ef_vs_coding(),
+        other => {
+            bail!("unknown preset {other:?} (partial-participation | attack-zoo | ef-vs-coding)")
+        }
     })
 }
 
@@ -100,6 +107,29 @@ pub fn attack_zoo() -> SweepSpec {
     }
 }
 
+/// Rule × compressor, under the Fig. 4 Byzantine ratio and sign-flip:
+/// the four algorithm arms of the heterogeneity-robustness comparison in
+/// one grid — `cwtm × none` is LAD, `cwtm × qsgd` is Com-LAD,
+/// `cwtm × ef-qsgd` is error-feedback compression under the paper's rule,
+/// and the `momentum-filter` row is Compressed Momentum Filtering.
+pub fn ef_vs_coding() -> SweepSpec {
+    let mut base = small_base();
+    base.n_honest = 19;
+    let spec = SweepSpec::new("ef_vs_coding", base);
+    SweepSpec {
+        grid: Grid {
+            rule: vec![AggregatorKind::Cwtm, AggregatorKind::MomentumFilter],
+            compressor: vec![
+                CompressionKind::None,
+                CompressionKind::Qsgd { levels: 16 },
+                CompressionKind::EfQsgd { levels: 16 },
+            ],
+            ..Grid::default()
+        },
+        ..spec
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,8 +146,27 @@ mod tests {
         let jobs = zoo.expand().unwrap();
         assert_eq!(jobs.len(), 6 * 4 * 2);
         assert!(jobs.iter().all(|j| j.cfg.n_honest == 19));
+        let ef = ef_vs_coding();
+        let jobs = ef.expand().unwrap();
+        assert_eq!(jobs.len(), 2 * 3, "rule x compressor");
+        assert!(jobs.iter().all(|j| j.cfg.n_honest == 19));
+        // the four named arms are all present
+        let arms: std::collections::BTreeSet<(String, String)> = jobs
+            .iter()
+            .map(|j| {
+                (j.cfg.aggregator.name().to_string(), j.cfg.compression.name().to_string())
+            })
+            .collect();
+        assert!(arms.contains(&("cwtm".into(), "none".into())), "LAD arm");
+        assert!(arms.contains(&("cwtm".into(), "qsgd".into())), "Com-LAD arm");
+        assert!(arms.contains(&("cwtm".into(), "ef-qsgd".into())), "EF arm");
+        assert!(
+            arms.iter().any(|(r, _)| r == "momentum-filter"),
+            "momentum-filter arm: {arms:?}"
+        );
         assert!(preset("partial-participation").is_ok());
         assert!(preset("attack-zoo").is_ok());
+        assert!(preset("ef-vs-coding").is_ok());
         assert!(preset("nope").is_err());
     }
 }

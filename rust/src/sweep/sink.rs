@@ -61,10 +61,13 @@ pub fn job_record(job: &Job, tr: &TrainTrace) -> Json {
     config.insert("attack".to_string(), Json::Str(cfg.attack.name().to_string()));
     config.insert("compression".to_string(), Json::Str(cfg.compression.name().to_string()));
     match cfg.compression {
-        CompressionKind::RandK { k } | CompressionKind::TopK { k } => {
+        CompressionKind::RandK { k }
+        | CompressionKind::TopK { k }
+        | CompressionKind::EfRandK { k }
+        | CompressionKind::EfTopK { k } => {
             config.insert("compression_k".to_string(), Json::Num(k as f64));
         }
-        CompressionKind::Qsgd { levels } => {
+        CompressionKind::Qsgd { levels } | CompressionKind::EfQsgd { levels } => {
             config.insert("compression_levels".to_string(), Json::Num(levels as f64));
         }
         CompressionKind::None => {}
@@ -221,9 +224,23 @@ pub fn write_results(
     Ok(path)
 }
 
+/// True when the journaled records' `iters` arrays (each job's loss-curve
+/// x grid) do not all match. The sweep-pivot analogue of
+/// [`crate::experiments::common::ExperimentOutput::x_grids_disagree`]: a
+/// plot overlaying the pivot's per-job curves on one x axis would then
+/// silently compare samples taken at different iterations (e.g. an
+/// `ef-vs-coding` run whose arms were edited to log on different grids).
+pub fn pivot_x_grids_disagree(grids: &[Json]) -> bool {
+    match grids.split_first() {
+        None => false,
+        Some((first, rest)) => rest.iter().any(|g| g != first),
+    }
+}
+
 /// Write `results.csv`: one row per job — id, label, one column per grid
 /// axis (canonical order), and the headline metrics — the pivot the
-/// plotting scripts consume.
+/// plotting scripts consume. Warns (like `save_csv` does for the figure
+/// CSVs) when the jobs' loss curves sample different iteration grids.
 pub fn write_pivot_csv(
     out_dir: &Path,
     jobs: &[Job],
@@ -239,11 +256,15 @@ pub fn write_pivot_csv(
         body.push_str(k);
     }
     body.push_str(",final_loss,total_bits,anomalies\n");
+    let mut grids: Vec<Json> = Vec::with_capacity(jobs.len());
     for job in jobs {
         let line = records
             .get(&job.id)
             .with_context(|| format!("job {} missing from the journal", job.id))?;
         let rec = json::parse(line).map_err(|e| anyhow::anyhow!("re-parsing record: {e}"))?;
+        if let Some(g) = rec.get("iters") {
+            grids.push(g.clone());
+        }
         let metric = |key: &str| -> String {
             match rec.get(key) {
                 Some(Json::Num(x)) => format!("{x}"),
@@ -265,6 +286,14 @@ pub fn write_pivot_csv(
         body.push(',');
         body.push_str(&metric("anomalies"));
         body.push('\n');
+    }
+    if pivot_x_grids_disagree(&grids) {
+        eprintln!(
+            "warning: {}: job loss curves sample different iteration grids — \
+             overlaying results.csv curves on one x axis mixes different \
+             iterations across jobs",
+            path.display()
+        );
     }
     write_atomic(&path, &body)?;
     Ok(path)
@@ -316,6 +345,34 @@ mod tests {
         let back = json::parse(&line).unwrap();
         assert_eq!(back.get("final_loss").unwrap().as_str(), Some("NaN"));
         assert_eq!(back.to_string(), line);
+    }
+
+    #[test]
+    fn pivot_flags_disagreeing_iteration_grids_and_still_exports() {
+        let aligned = Json::Arr(vec![Json::Num(0.0), Json::Num(10.0)]);
+        let shifted = Json::Arr(vec![Json::Num(0.0), Json::Num(20.0)]);
+        assert!(pivot_x_grids_disagree(&[aligned.clone(), shifted]));
+        assert!(!pivot_x_grids_disagree(&[aligned.clone(), aligned]));
+        assert!(!pivot_x_grids_disagree(&[]));
+
+        // two jobs logging on different grids: the pivot warns but writes
+        let v1 = Variant { label: "a".into(), cfg: TrainConfig::default(), draco_r: None };
+        let mut v2 = v1.clone();
+        v2.cfg.iters += 100; // distinct job id
+        let (j1, j2) = (Job::from_variant(&v1, 1, 2), Job::from_variant(&v2, 1, 2));
+        assert_ne!(j1.id, j2.id);
+        let mut t2 = TrainTrace::new("b");
+        t2.record(0, 3.0, 0.5, 64);
+        t2.record(20, 1.0, 0.25, 128);
+        t2.final_loss = 1.0;
+        let mut records = BTreeMap::new();
+        records.insert(j1.id.clone(), job_record(&j1, &trace()).to_string());
+        records.insert(j2.id.clone(), job_record(&j2, &t2).to_string());
+        let dir = std::env::temp_dir().join(format!("lad_pivot_grid_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = write_pivot_csv(&dir, &[j1, j2], &records).unwrap();
+        assert_eq!(std::fs::read_to_string(p).unwrap().lines().count(), 3);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

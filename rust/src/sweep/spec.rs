@@ -122,6 +122,9 @@ impl Job {
             CompressionKind::RandK { k } => format!("rand-k:{k}"),
             CompressionKind::TopK { k } => format!("top-k:{k}"),
             CompressionKind::Qsgd { levels } => format!("qsgd:{levels}"),
+            CompressionKind::EfRandK { k } => format!("ef-rand-k:{k}"),
+            CompressionKind::EfTopK { k } => format!("ef-top-k:{k}"),
+            CompressionKind::EfQsgd { levels } => format!("ef-qsgd:{levels}"),
         };
         let oracle = match cfg.oracle {
             OracleKind::NativeLinreg => "native",
@@ -508,7 +511,12 @@ fn parse_compressor(s: &str, q_hat: usize, levels: u32) -> Result<CompressionKin
         "rand-k" | "randk" => CompressionKind::RandK { k: q_hat },
         "top-k" | "topk" => CompressionKind::TopK { k: q_hat },
         "qsgd" => CompressionKind::Qsgd { levels },
-        other => bail!("unknown compressor {other:?} (none|rand-k|top-k|qsgd)"),
+        "ef-rand-k" | "ef-randk" => CompressionKind::EfRandK { k: q_hat },
+        "ef-top-k" | "ef-topk" => CompressionKind::EfTopK { k: q_hat },
+        "ef-qsgd" => CompressionKind::EfQsgd { levels },
+        other => bail!(
+            "unknown compressor {other:?} (none|rand-k|top-k|qsgd|ef-rand-k|ef-top-k|ef-qsgd)"
+        ),
     })
 }
 

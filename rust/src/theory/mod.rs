@@ -128,6 +128,23 @@ impl TheoryParams {
         self.kappa1() * self.kappa.sqrt() / self.kappa2().sqrt()
     }
 
+    /// Big-O error term under error-feedback compression: eq. (33)
+    /// re-evaluated at the EF-attenuated constant δ_EF = δ²/(1+δ).
+    ///
+    /// Not a bound from the source paper. Error feedback (Rammal et al.,
+    /// arXiv 2310.09804; the same memory mechanism underlying the
+    /// momentum-filter analysis of arXiv 2409.08640) carries each round's
+    /// compression error into the next round's input instead of discarding
+    /// it, so the asymptotic penalty of a δ-approximate compressor enters
+    /// at order δ² rather than δ. This helper plots that attenuation on
+    /// the paper's own ε axis for the `ef-vs-coding` sweep: it coincides
+    /// with [`Self::error_term_bigo`] at δ = 0 and never exceeds it
+    /// (δ²/(1+δ) ≤ δ for all δ ≥ 0).
+    pub fn error_term_ef_bigo(&self) -> f64 {
+        let delta_ef = self.delta * self.delta / (1.0 + self.delta);
+        TheoryParams { delta: delta_ef, ..*self }.error_term_bigo()
+    }
+
     /// LAD big-O error term (eq. 35): β²√(κ(N−d)N / (dH(N−H))).
     pub fn error_term_lad_bigo(&self) -> f64 {
         let TheoryParams { n, h, d, beta, kappa, .. } = *self;
@@ -208,6 +225,22 @@ mod tests {
             let e = p.error_term_bigo();
             assert!(e >= prev, "δ={delta}: {e} < {prev}");
             prev = e;
+        }
+    }
+
+    #[test]
+    fn ef_error_term_attenuates_the_compression_penalty() {
+        // δ = 0: EF is a no-op on the bound
+        let p0 = fig_params().with_delta(0.0);
+        assert!((p0.error_term_ef_bigo() - p0.error_term_bigo()).abs() < 1e-12);
+        // δ > 0: the EF term never exceeds the plain term, stays monotone
+        let mut prev = 0.0;
+        for delta in [0.25, 0.5, 1.0, 2.0] {
+            let p = fig_params().with_delta(delta);
+            let ef = p.error_term_ef_bigo();
+            assert!(ef <= p.error_term_bigo(), "δ={delta}: EF term above plain");
+            assert!(ef >= prev, "δ={delta}: not monotone");
+            prev = ef;
         }
     }
 

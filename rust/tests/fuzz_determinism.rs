@@ -13,7 +13,9 @@
 //! fuzzes the corner lattice: tiny families below every parallelism gate,
 //! families straddling the gates, ragged tile edges, packed-triangular
 //! row adapters, every aggregator with a parallel pass, stochastic
-//! compressors on pre-split streams.
+//! compressors on pre-split streams — including the error-feedback
+//! (`ef-*`) compressors' residual carry and the stateful momentum-filter
+//! rule, whose traces must be just as thread/tier invariant.
 
 use lad::aggregation::gram::PairwiseDistances;
 use lad::config::{AggregatorKind, AttackKind, CompressionKind, TrainConfig};
@@ -49,11 +51,14 @@ fn gen_case(rng: &mut Rng) -> Case {
         AggregatorKind::Faba,
         AggregatorKind::Mcc,
         AggregatorKind::GeometricMedian,
+        AggregatorKind::MomentumFilter,
     ];
     let comps = [
         CompressionKind::None,
         CompressionKind::RandK { k: gen::usize_in(rng, 1, q) },
         CompressionKind::Qsgd { levels: gen::usize_in(rng, 2, 16) as u32 },
+        CompressionKind::EfRandK { k: gen::usize_in(rng, 1, q) },
+        CompressionKind::EfQsgd { levels: gen::usize_in(rng, 2, 16) as u32 },
     ];
     let attacks = [
         AttackKind::SignFlip { coeff: -2.0 },

@@ -137,6 +137,24 @@ fn tcp_qsgd_com_lad_matches_central() {
     assert!(tn.total_bits() > 0);
 }
 
+#[test]
+fn tcp_ef_qsgd_device_side_matches_central() {
+    // Error feedback over the wire: each worker holds its own 1-row
+    // residual state and compresses residual + gradient device-side; the
+    // trace must still be bit-identical to the central trainer's EF path
+    // (leader-held residuals for every device), because worker i's stream
+    // seed (Hello's comp_seed) and residual evolution match central row i.
+    let c = cfg(8, 6, 3, CompressionKind::EfQsgd { levels: 16 });
+    let mut rng = Rng::new(711);
+    let ds = LinRegDataset::generate(c.n_devices, c.dim, c.sigma_h, &mut rng);
+    let comp = lad::compress::from_kind(c.compression);
+    let (tn, xn) = net_loopback(&c, &ds, comp.as_ref(), 712, "tcp://127.0.0.1:0");
+    let (tc, xc) = central(&c, &ds, comp.as_ref(), 712);
+    assert_eq!(xn, xc, "model diverged between device-side EF and central EF");
+    assert_trace_identical(&tn, &tc);
+    assert!(tn.total_bits() > 0);
+}
+
 #[cfg(unix)]
 #[test]
 fn uds_identity_matches_central() {
@@ -231,6 +249,69 @@ fn stalling_worker(mut link: Box<dyn Transport>, device: usize, serve: usize) {
             Ok((other, _)) => panic!("unexpected {other:?}"),
         }
     }
+}
+
+#[test]
+fn ef_residual_reset_on_retirement_is_deterministic() {
+    // EF + gather deadline + a worker that stalls after 2 iterations: the
+    // leader eats one anomaly per miss until MISS_RETIRE_STREAK, then
+    // retires the device and zeroes its EF residual row. The semantics
+    // pinned here: a mere deadline miss leaves the residual (and the
+    // device's compression stream) untouched; only retirement resets it —
+    // and the whole scenario is deterministic, so two runs bit-match.
+    let mut c = cfg(5, 4, 2, CompressionKind::EfQsgd { levels: 16 });
+    c.dim = 6;
+    c.iters = 6;
+    c.log_every = 2;
+    let mut rng = Rng::new(911);
+    let ds = LinRegDataset::generate(c.n_devices, c.dim, c.sigma_h, &mut rng);
+    let comp = lad::compress::from_kind(c.compression);
+    let run_once = || {
+        let cwtm = Cwtm::new(0.1);
+        let flip = SignFlip { coeff: -2.0 };
+        std::thread::scope(|scope| {
+            let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(c.n_devices);
+            for i in 0..c.n_devices {
+                let (leader_half, worker_half) = ChannelTransport::pair();
+                links.push(Box::new(leader_half));
+                let dsr = &ds;
+                if i == 1 {
+                    scope.spawn(move || stalling_worker(Box::new(worker_half), 1, 2));
+                } else {
+                    scope.spawn(move || {
+                        let _ = run_worker(Box::new(worker_half), i, Some(dsr), None);
+                    });
+                }
+            }
+            let leader = Leader {
+                cfg: &c,
+                ds: &ds,
+                agg: &cwtm,
+                attack: &flip,
+                comp: comp.as_ref(),
+                opts: LeaderOpts {
+                    gather_deadline: Some(Duration::from_millis(200)),
+                    device_compression: false,
+                    ..Default::default()
+                },
+                pool: Pool::serial(),
+                send_dataset: false,
+            };
+            let mut x0 = vec![0.0f32; c.dim];
+            let tr = leader.run(links, &mut x0, "ef-retire", &mut Rng::new(912)).unwrap();
+            (tr, x0)
+        })
+    };
+    let (t1, x1) = run_once();
+    let (t2, x2) = run_once();
+    assert_eq!(t1.anomalies, MISS_RETIRE_STREAK, "one anomaly per miss until retirement");
+    assert_eq!(x1, x2, "EF retirement path is not deterministic");
+    assert_eq!(t1.loss, t2.loss, "loss trace diverged across reruns");
+    assert_eq!(t1.grad_update_norm, t2.grad_update_norm, "update norms diverged");
+    assert_eq!(t1.bits, t2.bits, "bit accounting diverged");
+    assert_eq!(t2.anomalies, MISS_RETIRE_STREAK);
+    assert!(t1.final_loss.is_finite());
+    assert_eq!(t1.iters.last().copied(), Some(c.iters - 1));
 }
 
 #[test]

@@ -2,12 +2,18 @@
 //! invariants) via the proptest_lite harness.
 
 use lad::aggregation::{
-    Aggregator, CoordinateMedian, Cwtm, Faba, GeometricMedian, Krum, Mcc, Mean, MultiKrum, Nnm,
-    Tgn,
+    kappa::estimate_kappa, momentum_filter::DEFAULT_ALPHA, Aggregator, CoordinateMedian, Cwtm,
+    Faba, GeometricMedian, Krum, Mcc, Mean, MomentumFilter, MultiKrum, Nnm, Tgn,
 };
 use lad::proptest_lite::{ensure, forall, gen};
+use lad::theory::TheoryParams;
 use lad::util::math::{dist_sq, mean_of, norm};
 use lad::util::rng::Rng;
+
+// MomentumFilter is deliberately NOT in `all_rules`: it carries per-device
+// momentum across `aggregate` calls, and the harness above reuses one
+// instance per case (the permutation test aggregates twice) — its
+// properties are pinned below with a fresh instance per call instead.
 
 fn all_rules(f: usize) -> Vec<Box<dyn Aggregator>> {
     vec![
@@ -185,6 +191,82 @@ fn prop_nnm_contracts_variance() {
             })
         },
     );
+}
+
+/// Momentum-filter device-permutation equivariance: with fresh (empty)
+/// buffers, permuting the device family permutes the momenta with it, so
+/// the filtered aggregate is unchanged (up to f32 summation-order noise in
+/// the kept-set mean; the kept *set* itself is order-free because scoring
+/// ties break by index only on exact f64 score equality).
+#[test]
+fn prop_momentum_filter_fresh_permutation_invariance() {
+    forall(
+        40,
+        0xA7,
+        |rng: &mut Rng| {
+            let n = gen::usize_in(rng, 5, 14);
+            let q = gen::usize_in(rng, 2, 12);
+            let fam = gen::vec_family(rng, n, q, 3.0);
+            let perm = rng.permutation(n);
+            (fam, perm)
+        },
+        |(fam, perm)| {
+            let shuffled: Vec<Vec<f32>> = perm.iter().map(|&i| fam[i].clone()).collect();
+            let f = fam.len() / 4;
+            let a = MomentumFilter::new(f, DEFAULT_ALPHA).aggregate(fam);
+            let b = MomentumFilter::new(f, DEFAULT_ALPHA).aggregate(&shuffled);
+            let d = dist_sq(&a, &b);
+            ensure(d < 1e-4, || format!("momentum-filter: permutation moved output by {d}"))
+        },
+    );
+}
+
+/// With f = 0 and fresh buffers, momentum-filter *is* the mean, bitwise:
+/// the first observation initializes every momentum to the message itself,
+/// nothing is filtered, and the kept-set average runs in the same index
+/// order (axpy then scale) as [`Mean`].
+#[test]
+fn prop_momentum_filter_f0_fresh_is_bitwise_mean() {
+    forall(
+        40,
+        0xA8,
+        |rng: &mut Rng| {
+            let n = gen::usize_in(rng, 3, 16);
+            let q = gen::usize_in(rng, 1, 12);
+            gen::vec_family(rng, n, q, 5.0)
+        },
+        |fam| {
+            let a = MomentumFilter::new(0, DEFAULT_ALPHA).aggregate(fam);
+            let b = Mean.aggregate(fam);
+            for j in 0..a.len() {
+                ensure(a[j].to_bits() == b[j].to_bits(), || {
+                    format!("coord {j}: momentum-filter {} != mean {}", a[j], b[j])
+                })?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// κ-robustness sanity on small N: against the `estimate_kappa` adversarial
+/// portfolio (state reset between trials, so each trial starts from fresh
+/// momenta), momentum-filter's κ̂ stays bounded like the other robust
+/// rules, and the measured κ̂ keeps the Theorem-1 convergence condition
+/// √(κκ₂) < 1/N satisfiable at d = N−1 in the `theory` closed forms.
+#[test]
+fn momentum_filter_kappa_bounded_on_small_n() {
+    let mut rng = Rng::new(0xA9);
+    let (h, f) = (8usize, 2usize);
+    let mf = MomentumFilter::new(f, DEFAULT_ALPHA);
+    let mut kappa: f64 = 0.0;
+    for _ in 0..20 {
+        mf.reset();
+        kappa = kappa.max(estimate_kappa(&mf, h, f, 5, 1, &mut rng));
+    }
+    assert!(kappa.is_finite() && kappa >= 0.0, "κ̂ = {kappa}");
+    assert!(kappa < 60.0, "momentum-filter κ̂ = {kappa}: not bounded like a robust rule");
+    let p = TheoryParams::new(h + f, h, h + f - 1).with_kappa(kappa.max(0.1));
+    assert!(p.converges(), "measured κ̂ = {kappa} breaks √(κκ₂) < 1/N at d = N−1");
 }
 
 /// Output is always finite for finite inputs.

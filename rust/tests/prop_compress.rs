@@ -1,7 +1,12 @@
-//! Property tests on the compression operators (Definition 2).
+//! Property tests on the compression operators (Definition 2) and the
+//! error-feedback memory stage wrapped around them (arXiv 2310.09804).
 
-use lad::compress::{measure_bias_delta, Compressor, Identity, Qsgd, RandK, TopK};
+use lad::compress::{
+    compress_batch_ef, measure_bias_delta, Compressor, EfState, Identity, Qsgd, RandK, TopK,
+};
 use lad::proptest_lite::{ensure, forall, gen};
+use lad::util::math::axpy;
+use lad::util::parallel::Pool;
 use lad::util::rng::Rng;
 
 /// Unbiasedness (eq. 9) for the unbiased operators, across shapes/scales.
@@ -114,6 +119,148 @@ fn prop_sparsifiers_support_size() {
                 let c = op.compress(g, &mut rng);
                 let nnz = c.vec.iter().filter(|&&x| x != 0.0).count();
                 ensure(nnz == *k, || format!("{}: nnz {nnz} != k {k}", op.name()))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// EF decomposition is exact by construction, for every base operator
+/// (rand-K, top-K, QSGD) and across consecutive steps: after a step, the
+/// stored residual is *bitwise* the elementwise difference between the EF
+/// input (residual_in + gradient, formed with `axpy` in the same op order
+/// as `EfState::input`) and the transmitted message — and on every
+/// coordinate a sparsifier zeroes, the residual keeps the input bit-exactly.
+#[test]
+fn prop_ef_residual_decomposition_is_construction_exact() {
+    forall(
+        24,
+        0xE1,
+        |rng: &mut Rng| {
+            let q = gen::usize_in(rng, 4, 64);
+            let k = gen::usize_in(rng, 1, q);
+            let levels = gen::usize_in(rng, 2, 16) as u32;
+            let g0 = gen::vec_f32(rng, q, 3.0);
+            let g1 = gen::vec_f32(rng, q, 3.0);
+            let seed = rng.next_u64();
+            (g0, g1, k, levels, seed)
+        },
+        |(g0, g1, k, levels, seed)| {
+            let ops: Vec<Box<dyn Compressor>> = vec![
+                Box::new(RandK::new(*k)),
+                Box::new(TopK::new(*k)),
+                Box::new(Qsgd::new(*levels)),
+            ];
+            for op in ops {
+                let mut st = EfState::new(1, g0.len());
+                let mut rng = Rng::new(*seed);
+                for g in [g0, g1] {
+                    // recompute the EF input exactly as EfState::input does
+                    let mut a = st.residual(0).to_vec();
+                    axpy(1.0, g, &mut a);
+                    let c = st.step(0, g, op.as_ref(), &mut rng);
+                    for j in 0..g.len() {
+                        let want = a[j] - c.vec[j];
+                        ensure(st.residual(0)[j].to_bits() == want.to_bits(), || {
+                            format!(
+                                "{}: coord {j}: residual {} != input - transmitted {}",
+                                op.name(),
+                                st.residual(0)[j],
+                                want
+                            )
+                        })?;
+                        if c.vec[j] == 0.0 {
+                            ensure(st.residual(0)[j].to_bits() == a[j].to_bits(), || {
+                                format!(
+                                    "{}: dropped coord {j} lost input mass bitwise",
+                                    op.name()
+                                )
+                            })?;
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Under the Identity operator the EF stage is inert: the residual stays
+/// exactly 0.0 on every coordinate over any gradient sequence, and the
+/// transmitted message is the gradient itself.
+#[test]
+fn prop_ef_identity_residual_stays_zero() {
+    forall(
+        24,
+        0xE2,
+        |rng: &mut Rng| {
+            let q = gen::usize_in(rng, 2, 48);
+            let steps = gen::usize_in(rng, 1, 6);
+            let gs: Vec<Vec<f32>> =
+                (0..steps).map(|_| gen::vec_f32(rng, q, 50.0)).collect();
+            gs
+        },
+        |gs| {
+            let mut st = EfState::new(1, gs[0].len());
+            let mut rng = Rng::new(0);
+            for g in gs {
+                let c = st.step(0, g, &Identity, &mut rng);
+                ensure(c.vec == *g, || "identity EF altered the gradient".into())?;
+                ensure(st.residual(0).iter().all(|e| e.to_bits() == 0), || {
+                    format!("residual drifted off zero: {:?}", st.residual(0))
+                })?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The batched EF uplink is invariant to the pool width and bit-identical
+/// to the per-device `EfState::step` path — messages AND carried residuals
+/// — because each device owns its pre-split stream and its residual row.
+#[test]
+fn prop_ef_batch_thread_count_invariant() {
+    forall(
+        10,
+        0xE3,
+        |rng: &mut Rng| {
+            let n = gen::usize_in(rng, 2, 8);
+            let q = gen::usize_in(rng, 8, 48);
+            let k = gen::usize_in(rng, 1, q);
+            let fam = gen::vec_family(rng, n, q, 2.0);
+            let seed = rng.next_u64();
+            (fam, k, seed)
+        },
+        |(fam, k, seed)| {
+            let n = fam.len();
+            let msgs: Vec<&[f32]> = fam.iter().map(|m| m.as_slice()).collect();
+            let comp = RandK::new(*k);
+            let parent = Rng::new(*seed);
+            let mut runs: Vec<(Vec<Vec<f32>>, EfState)> = Vec::new();
+            for pool in [Pool::serial(), Pool::new(2), Pool::new(5)] {
+                let mut st = EfState::new(n, msgs[0].len());
+                let mut all = Vec::new();
+                for _ in 0..3 {
+                    let mut rngs = parent.split(n);
+                    let (out, _) =
+                        compress_batch_ef(&comp, &mut st, &msgs, &mut rngs, &pool);
+                    all.extend(out);
+                }
+                runs.push((all, st));
+            }
+            // the per-device step path, serial
+            let mut st = EfState::new(n, msgs[0].len());
+            let mut all = Vec::new();
+            for _ in 0..3 {
+                let mut rngs = parent.split(n);
+                for i in 0..n {
+                    all.push(st.step(i, msgs[i], &comp, &mut rngs[i]).vec);
+                }
+            }
+            runs.push((all, st));
+            for (out, st) in &runs[1..] {
+                ensure(*out == runs[0].0, || "messages differ across pool widths".into())?;
+                ensure(*st == runs[0].1, || "residuals differ across pool widths".into())?;
             }
             Ok(())
         },

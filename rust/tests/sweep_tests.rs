@@ -216,6 +216,88 @@ fn stall_jobs_run_the_retirement_path_deterministically() {
 }
 
 #[test]
+fn ef_and_momentum_axes_expand_with_a_pinned_job_id() {
+    // the new first-class arms: `ef-*` compressor values and the
+    // `momentum-filter` rule expand like any other axis value, with
+    // stable, distinct, content-addressed ids
+    let src = r#"
+        [grid]
+        rule = ["cwtm", "momentum-filter"]
+        compressor = ["none", "qsgd", "ef-qsgd", "ef-rand-k"]
+    "#;
+    let jobs = SweepSpec::from_toml_str(src).unwrap().expand().unwrap();
+    assert_eq!(jobs.len(), 2 * 4);
+    let ids: std::collections::BTreeSet<_> = jobs.iter().map(|j| j.id.clone()).collect();
+    assert_eq!(ids.len(), jobs.len(), "new arms must content-address distinctly");
+    let again = SweepSpec::from_toml_str(src).unwrap().expand().unwrap();
+    for (a, b) in jobs.iter().zip(&again) {
+        assert_eq!(a.id, b.id, "re-expansion must reproduce every id");
+    }
+    // EF arms inherit the base-operator parameters (spec q_hat / levels)
+    assert!(jobs
+        .iter()
+        .any(|j| j.cfg.compression == CompressionKind::EfQsgd { levels: 16 }));
+    assert!(jobs.iter().any(|j| j.cfg.compression == CompressionKind::EfRandK { k: 30 }));
+    assert!(jobs.iter().any(|j| j.cfg.aggregator.name() == "momentum-filter"));
+    // one literal pin, FNV-1a 64 computed independently of job_id: an
+    // accidental change to the canonical encoding of the new arms (or a
+    // new unconditional canonical field) fails loudly here
+    let mut cfg = TrainConfig::default();
+    cfg.aggregator = AggregatorKind::MomentumFilter;
+    cfg.compression = CompressionKind::EfQsgd { levels: 16 };
+    let job = sweep::Job::from_variant(
+        &Variant { label: "pin".into(), cfg, draco_r: None },
+        7,
+        11,
+    );
+    let canon = job.canonical();
+    assert!(
+        canon.contains("agg=momentum-filter") && canon.contains("comp=ef-qsgd:16"),
+        "canonical lost the new arms: {canon}"
+    );
+    assert_eq!(job.id, "d60381fe3154a832");
+}
+
+#[test]
+fn ef_vs_coding_preset_resume_is_bit_identical() {
+    // the new preset (LAD / Com-LAD / EF-compression / momentum-filter
+    // from one rule x compressor grid) through the interrupt + --resume
+    // contract; the two legs and the reference run use different thread
+    // counts, so this also pins thread-count invariance for the new arms
+    let spec = lad::sweep::scenarios::preset("ef-vs-coding").unwrap();
+    assert_eq!(spec.expand().unwrap().len(), 6, "2 rules x 3 compressors");
+
+    let dir_a = tmp_dir("efvc_a");
+    let leg1 = queue::run_sweep(&spec, &dir_a, false, Some(2), Parallelism::new(2)).unwrap();
+    assert_eq!(leg1.ran, 2);
+    assert!(leg1.results_path.is_none(), "incomplete sweeps must not write results");
+    let leg2 = queue::run_sweep(&spec, &dir_a, true, None, Parallelism::new(2)).unwrap();
+    assert_eq!(leg2.skipped, 2, "journaled jobs are not rerun");
+    assert_eq!(leg2.ran, 4);
+    let results_a = std::fs::read(leg2.results_path.as_ref().unwrap()).unwrap();
+    let csv_a = std::fs::read(leg2.csv_path.as_ref().unwrap()).unwrap();
+
+    let dir_b = tmp_dir("efvc_b");
+    let full = queue::run_sweep(&spec, &dir_b, false, None, Parallelism::new(4)).unwrap();
+    assert_eq!(full.ran, 6);
+    let results_b = std::fs::read(full.results_path.as_ref().unwrap()).unwrap();
+    let csv_b = std::fs::read(full.csv_path.as_ref().unwrap()).unwrap();
+
+    assert!(
+        results_a == results_b,
+        "interrupted+resumed ef-vs-coding results.jsonl differs from the uninterrupted run"
+    );
+    assert_eq!(csv_a, csv_b, "ef-vs-coding pivot CSVs diverged");
+    let body = String::from_utf8(results_a).unwrap();
+    assert!(
+        body.contains("\"momentum-filter\"") && body.contains("\"ef-qsgd\""),
+        "the new arms are missing from the journaled records"
+    );
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+}
+
+#[test]
 fn quickstart_example_spec_parses_and_expands() {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/sweep_quickstart.toml");
     let spec = SweepSpec::from_file(path).unwrap();
@@ -244,6 +326,28 @@ fn smoke_example_spec_is_ci_sized() {
         jobs.len()
     );
     assert!(jobs.iter().all(|j| j.cfg.iters <= 30), "smoke jobs must be short");
+}
+
+#[test]
+fn ef_vs_coding_example_spec_is_ci_sized() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/ef_vs_coding.toml");
+    let spec = SweepSpec::from_file(path).unwrap();
+    let jobs = spec.expand().unwrap();
+    assert_eq!(jobs.len(), 6, "2 rules x 3 compressors");
+    assert!(jobs.iter().all(|j| j.cfg.iters <= 30), "smoke jobs must be short");
+    // all four algorithm arms are present in the grid
+    let arms: std::collections::BTreeSet<_> = jobs
+        .iter()
+        .map(|j| (j.cfg.aggregator.name().to_string(), j.cfg.compression.name().to_string()))
+        .collect();
+    assert!(arms.contains(&("cwtm".to_string(), "none".to_string())));
+    assert!(arms.contains(&("cwtm".to_string(), "qsgd".to_string())));
+    assert!(arms.contains(&("cwtm".to_string(), "ef-qsgd".to_string())));
+    assert!(arms.iter().any(|(r, _)| r == "momentum-filter"));
+    // the [sweep] levels key flowed into both qsgd-family compressor arms
+    assert!(jobs
+        .iter()
+        .any(|j| j.cfg.compression == lad::config::CompressionKind::EfQsgd { levels: 8 }));
 }
 
 #[test]
