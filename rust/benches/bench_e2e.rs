@@ -1,37 +1,81 @@
-//! End-to-end bench, two parts:
+//! End-to-end bench, three parts:
 //!
 //! 1. **Native LAD stack scaling** (always runs): one full Com-LAD training
 //!    job — coded gradients, sign-flip attack, rand-K compression,
 //!    CWTM-NNM aggregation — at `threads = 1` vs `threads = all cores`.
 //!    The two runs are bit-identical (asserted) so the wall-clock ratio is
 //!    a pure measurement of the `util::parallel` engine.
-//! 2. **PJRT transformer e2e** (needs `make artifacts` + `--features
+//! 2. **Pipelined vs phase-serial cluster loop** (always runs): the
+//!    8-worker loopback scenario — a real leader/worker cluster over
+//!    in-process channel transports — once with the legacy phase-serial
+//!    leader (`pipeline: false`: per-device `Msg::Broadcast` encoding on
+//!    one thread) and once pipelined (shared x-frame prefix encoded once,
+//!    per-device tails spliced on the pool, staged t+1 assignment, slab
+//!    decode). Traces are asserted bit-identical, so the wall-clock ratio
+//!    and the per-phase `broadcast/gather/aggregate` columns measure pure
+//!    scheduling. This is the leg the committed `BENCH_e2e.json` baseline
+//!    tracks.
+//! 3. **PJRT transformer e2e** (needs `make artifacts` + `--features
 //!    pjrt`): per-iteration cost of the full AOT path and the breakdown
 //!    between runtime execution and coordinator overhead.
+//!
+//! Machine-readable results go to `BENCH_e2e.json` at the repository root.
+//! If a committed baseline is present it is read **before** being
+//! overwritten and the fresh pipelined-vs-serial speedup is diffed against
+//! it within a tolerance band — a warning by default, a hard failure with
+//! `LAD_BENCH_ENFORCE=1` (the CI bench leg). `LAD_BENCH_QUICK=1` shrinks
+//! the workload for smoke runs.
 
 use lad::config::{AggregatorKind, AttackKind, CompressionKind, TrainConfig};
 use lad::data::linreg::LinRegDataset;
 use lad::experiments::common::{run_variant_in, Variant};
 use lad::experiments::e2e::{run_default, E2eParams};
+use lad::net::LeaderOpts;
 use lad::runtime::Runtime;
+use lad::server::cluster::{run_cluster_with, ClusterOpts};
+use lad::server::TrainTrace;
+use lad::util::json::{self, Json};
 use lad::util::parallel::{available_threads, Pool};
 use lad::util::rng::Rng;
+use std::collections::BTreeMap;
 
-fn native_stack_scaling() {
+/// Fraction of the baseline pipelined-vs-serial speedup the fresh run must
+/// retain before the diff counts as a regression (wall-clock noise band).
+const BASELINE_TOLERANCE: f64 = 0.8;
+
+fn quick() -> bool {
+    std::env::var("LAD_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+fn entry(section: &str, leg: &str, tr: &TrainTrace, speedup: f64) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("section".into(), Json::Str(section.into()));
+    o.insert("leg".into(), Json::Str(leg.into()));
+    o.insert("wall_s".into(), Json::Num(tr.wall_s));
+    o.insert("broadcast_ms".into(), Json::Num(tr.broadcast_ns as f64 / 1e6));
+    o.insert("gather_ms".into(), Json::Num(tr.gather_ns as f64 / 1e6));
+    o.insert("aggregate_ms".into(), Json::Num(tr.aggregate_ns as f64 / 1e6));
+    o.insert("wire_up_bytes".into(), Json::Num(tr.wire_up_bytes as f64));
+    o.insert("wire_down_bytes".into(), Json::Num(tr.wire_down_bytes as f64));
+    o.insert("speedup_vs_serial".into(), Json::Num(speedup));
+    Json::Obj(o)
+}
+
+fn native_stack_scaling(entries: &mut Vec<Json>) {
     let cores = available_threads();
     let mut cfg = TrainConfig::default();
     cfg.n_devices = 64;
     cfg.n_honest = 48;
     cfg.d = 8;
-    cfg.dim = 4096;
-    cfg.iters = 25;
+    cfg.dim = if quick() { 1024 } else { 4096 };
+    cfg.iters = if quick() { 8 } else { 25 };
     cfg.lr = 1e-8;
     cfg.sigma_h = 0.3;
     cfg.aggregator = AggregatorKind::Cwtm;
     cfg.nnm = true;
     cfg.trim_frac = 0.1;
     cfg.attack = AttackKind::SignFlip { coeff: -2.0 };
-    cfg.compression = CompressionKind::RandK { k: 1024 };
+    cfg.compression = CompressionKind::RandK { k: cfg.dim / 4 };
     cfg.log_every = 0;
     println!(
         "=== native Com-LAD stack: N={} d={} Q={} T={} (CWTM-NNM, rand-K, sign-flip) ===",
@@ -63,11 +107,87 @@ fn native_stack_scaling() {
     // the determinism contract, enforced where the perf numbers are made
     assert_eq!(traces[0].loss, traces[1].loss, "threaded trace diverged from serial");
     assert_eq!(traces[0].bits, traces[1].bits);
+    let speedup = walls[0] / walls[1].max(1e-12);
+    println!("  speedup {speedup:.2}x with {cores} threads (bit-identical traces)");
+    entries.push(entry("native-scaling", "1t", &traces[0], 1.0));
+    entries.push(entry("native-scaling", &format!("{cores}t"), &traces[1], speedup));
+}
+
+/// The 8-worker loopback scenario behind the committed baseline: identical
+/// cluster runs with `pipeline` off (phase-serial reference) and on.
+/// Returns the pipelined-vs-serial wall speedup.
+fn cluster_pipeline_section(entries: &mut Vec<Json>) -> f64 {
+    let mut cfg = TrainConfig::default();
+    cfg.n_devices = 8;
+    cfg.n_honest = 6;
+    cfg.d = 1;
+    cfg.dim = if quick() { 8_192 } else { 65_536 };
+    cfg.iters = if quick() { 10 } else { 40 };
+    cfg.lr = 1e-8;
+    cfg.sigma_h = 0.3;
+    cfg.aggregator = AggregatorKind::Cwtm;
+    cfg.trim_frac = 0.1;
+    cfg.attack = AttackKind::SignFlip { coeff: -2.0 };
+    cfg.compression = CompressionKind::None;
+    cfg.log_every = 0;
+    cfg.threads = 0; // all cores for the leader's pooled stages
     println!(
-        "  speedup {:.2}x with {} threads (bit-identical traces)",
-        walls[0] / walls[1].max(1e-12),
-        cores
+        "\n=== loopback cluster: {} workers, Q={}, T={} — phase-serial vs pipelined ===",
+        cfg.n_devices, cfg.dim, cfg.iters
     );
+    let mut rng = Rng::new(101);
+    let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng);
+    let pool = Pool::new(cfg.threads);
+    let reps = if quick() { 2 } else { 3 };
+    let mut best: Vec<TrainTrace> = Vec::new();
+    for (leg, pipeline) in [("phase-serial", false), ("pipelined", true)] {
+        let mut leg_best: Option<TrainTrace> = None;
+        for _ in 0..reps {
+            let agg = lad::aggregation::from_config_pooled(&cfg, &pool);
+            let atk = lad::attack::from_kind(cfg.attack);
+            let comp = lad::compress::from_kind(cfg.compression);
+            let opts = ClusterOpts {
+                leader: LeaderOpts { pipeline, ..Default::default() },
+                ..Default::default()
+            };
+            let mut x0 = vec![0.0f32; cfg.dim];
+            let tr = run_cluster_with(
+                &cfg,
+                &ds,
+                agg.as_ref(),
+                atk.as_ref(),
+                comp.as_ref(),
+                &mut x0,
+                leg,
+                &mut Rng::new(102),
+                &pool,
+                &opts,
+            )
+            .expect("loopback cluster run");
+            if leg_best.as_ref().map(|b| tr.wall_s < b.wall_s).unwrap_or(true) {
+                leg_best = Some(tr);
+            }
+        }
+        let tr = leg_best.expect("at least one rep");
+        println!(
+            "  {leg:<13} wall {:7.3}s  bcast {:7.1}ms  gather {:7.1}ms  agg {:7.1}ms",
+            tr.wall_s,
+            tr.broadcast_ns as f64 / 1e6,
+            tr.gather_ns as f64 / 1e6,
+            tr.aggregate_ns as f64 / 1e6
+        );
+        best.push(tr);
+    }
+    // the hard gate: pipelining is pure scheduling, the traces must match
+    assert_eq!(best[0].loss, best[1].loss, "pipelined trace diverged from phase-serial");
+    assert_eq!(best[0].bits, best[1].bits);
+    assert_eq!(best[0].wire_up_bytes, best[1].wire_up_bytes);
+    assert_eq!(best[0].wire_down_bytes, best[1].wire_down_bytes);
+    let speedup = best[0].wall_s / best[1].wall_s.max(1e-12);
+    println!("  pipelined speedup {speedup:.2}x (bit-identical traces + wire bytes)");
+    entries.push(entry("cluster-loopback", "phase-serial", &best[0], 1.0));
+    entries.push(entry("cluster-loopback", "pipelined", &best[1], speedup));
+    speedup
 }
 
 fn pjrt_e2e() {
@@ -114,7 +234,56 @@ fn pjrt_e2e() {
     );
 }
 
+/// Pull the pipelined leg's `speedup_vs_serial` out of a baseline JSON.
+fn baseline_speedup(body: &str) -> Option<f64> {
+    let root = json::parse(body).ok()?;
+    root.get("entries")?.as_arr()?.iter().find_map(|e| {
+        (e.get("section")?.as_str()? == "cluster-loopback"
+            && e.get("leg")?.as_str()? == "pipelined")
+            .then(|| e.get("speedup_vs_serial")?.as_f64())
+            .flatten()
+    })
+}
+
 fn main() {
-    native_stack_scaling();
+    let mut entries: Vec<Json> = Vec::new();
+    native_stack_scaling(&mut entries);
+    let speedup = cluster_pipeline_section(&mut entries);
     pjrt_e2e();
+
+    // read the committed baseline BEFORE overwriting it, then dump the
+    // fresh snapshot (the CI bench leg uploads it as an artifact; commit
+    // that artifact at the repo root to advance the baseline)
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_e2e.json");
+    let baseline = std::fs::read_to_string(path).ok();
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("e2e".into()));
+    root.insert("threads".into(), Json::Num(available_threads() as f64));
+    root.insert("quick".into(), Json::Bool(quick()));
+    root.insert("entries".into(), Json::Arr(entries));
+    match std::fs::write(path, Json::Obj(root).to_pretty_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+    match baseline.as_deref().and_then(baseline_speedup) {
+        None => println!("no committed BENCH_e2e.json baseline — skipping the tolerance diff"),
+        Some(base) => {
+            let floor = base * BASELINE_TOLERANCE;
+            println!(
+                "baseline pipelined speedup {base:.2}x — fresh {speedup:.2}x \
+                 (tolerance floor {floor:.2}x)"
+            );
+            if speedup < floor {
+                let msg = format!(
+                    "pipelined speedup regressed below the tolerance band: \
+                     {speedup:.2}x < {floor:.2}x ({}% of baseline {base:.2}x)",
+                    (BASELINE_TOLERANCE * 100.0) as u32
+                );
+                if std::env::var("LAD_BENCH_ENFORCE").map(|v| v == "1").unwrap_or(false) {
+                    panic!("{msg}");
+                }
+                eprintln!("warning: {msg}");
+            }
+        }
+    }
 }

@@ -171,6 +171,83 @@ impl PairwiseDistances {
         &self.norms
     }
 
+    /// Distances of a **mixed** family reusing this matrix — the NNM →
+    /// inner-Krum Gram-reuse path. Given per-row neighbor index sets Sᵢ
+    /// (each a non-empty, in-range subset of `0..n`; NNM passes them
+    /// sorted), the mixed messages are yᵢ = (1/|Sᵢ|) Σ_{a∈Sᵢ} x_a and their
+    /// pairwise distances follow from this matrix alone:
+    ///
+    /// ```text
+    /// G(a,b)  = (‖x_a‖² + ‖x_b‖² − d(a,b)) / 2          (recovered Gram)
+    /// H(i,j)  = (W·G·Wᵀ)ᵢⱼ / (kᵢ·kⱼ) = ⟨yᵢ, yⱼ⟩
+    /// d'(i,j) = max(0, H(i,i) + H(j,j) − 2·H(i,j))
+    /// ```
+    ///
+    /// evaluated as two passes (U = W·G, then H = U·Wᵀ) — O(m·n·k) total
+    /// instead of the second O(m²·Q) pass over the Q-dim mixed vectors.
+    /// All sums run in ascending set order in f64, so every pool width is
+    /// bit-identical (the packed result is pinned against a naive full
+    /// N×N reference by `tests/fuzz_determinism.rs`). The float path
+    /// differs from re-running [`PairwiseDistances::compute`] on the
+    /// mixed vectors (clamped Gram recovery vs fresh dot products), so
+    /// consumers see slightly different — but deterministic — entries.
+    pub fn mixed(&self, sets: &[Vec<usize>], pool: &Pool) -> PairwiseDistances {
+        let n = self.n;
+        let m = sets.len();
+        debug_assert!(
+            sets.iter().all(|s| !s.is_empty() && s.iter().all(|&a| a < n)),
+            "neighbor sets must be non-empty and in range"
+        );
+        // recovered Gram entry ⟨x_a, x_b⟩ from the distance expansion
+        let g = |a: usize, b: usize| -> f64 {
+            (self.norms[a] + self.norms[b] - self.get(a, b)) / 2.0
+        };
+        // U = W·G: row i holds Σ_{a∈Sᵢ} G(a, ·)
+        let u_row = |i: usize| -> Vec<f64> {
+            let mut row = vec![0.0f64; n];
+            for &a in &sets[i] {
+                for (b, slot) in row.iter_mut().enumerate() {
+                    *slot += g(a, b);
+                }
+            }
+            row
+        };
+        let idx: Vec<usize> = (0..m).collect();
+        let u: Vec<Vec<f64>> = if pool.is_serial() || !par_gate(m, n) {
+            idx.iter().map(|&i| u_row(i)).collect()
+        } else {
+            pool.par_map(&idx, |_, &i| u_row(i))
+        };
+        // H(i,j) = (U·Wᵀ)ᵢⱼ / (kᵢ·kⱼ) — the mixed inner products
+        let h = |i: usize, j: usize| -> f64 {
+            let mut s = 0.0f64;
+            for &b in &sets[j] {
+                s += u[i][b];
+            }
+            s / (sets[i].len() as f64 * sets[j].len() as f64)
+        };
+        // mixed squared norms ‖yᵢ‖² = H(i,i), clamped like every distance
+        let norms: Vec<f64> = (0..m).map(|i| h(i, i).max(0.0)).collect();
+        let entry =
+            |i: usize, j: usize| -> f64 { (norms[i] + norms[j] - 2.0 * h(i, j)).max(0.0) };
+        let tri = if pool.is_serial() || !par_gate(m, n) || m < 2 {
+            let mut tri = Vec::with_capacity(m * m.saturating_sub(1) / 2);
+            for i in 0..m {
+                for j in i + 1..m {
+                    tri.push(entry(i, j));
+                }
+            }
+            tri
+        } else {
+            // per-row tasks produce disjoint contiguous packed segments;
+            // concatenation in row order IS the packed layout
+            let rows: Vec<Vec<f64>> =
+                pool.par_map(&idx, |_, &i| (i + 1..m).map(|j| entry(i, j)).collect());
+            rows.concat()
+        };
+        PairwiseDistances { n: m, tri, norms }
+    }
+
     /// Stored distance entries (the packed strict upper triangle).
     pub fn packed_len(&self) -> usize {
         self.tri.len()
@@ -467,6 +544,81 @@ mod tests {
         // reuse: second query with another center refills the same buffer
         let c2 = family(1, 120, 7).pop().unwrap();
         assert_eq!(scratch.dist_sq_to(&msgs, &c2, &Pool::serial()).len(), msgs.len());
+    }
+
+    #[test]
+    fn mixed_matches_distances_of_explicitly_mixed_vectors() {
+        let n = 14;
+        let q = 24;
+        let msgs = family(n, q, 8);
+        let pd = PairwiseDistances::compute(&msgs, &Pool::serial());
+        // per-row neighbor sets of varying size, sorted ascending
+        let sets: Vec<Vec<usize>> = (0..n)
+            .map(|i| {
+                let mut s: Vec<usize> = (0..3 + i % 4).map(|k| (i + 2 * k) % n).collect();
+                s.sort_unstable();
+                s
+            })
+            .collect();
+        let mixed = pd.mixed(&sets, &Pool::serial());
+        assert_eq!(mixed.n(), n);
+        assert_eq!(mixed.packed_len(), n * (n - 1) / 2);
+        // reference: mix the vectors explicitly, then measure them directly
+        let ymix: Vec<Vec<f32>> = sets
+            .iter()
+            .map(|s| {
+                let mut y = vec![0.0f32; q];
+                for &a in s {
+                    for (slot, v) in y.iter_mut().zip(&msgs[a]) {
+                        *slot += v;
+                    }
+                }
+                for slot in &mut y {
+                    *slot /= s.len() as f32;
+                }
+                y
+            })
+            .collect();
+        for i in 0..n {
+            assert_eq!(mixed.get(i, i), 0.0);
+            for j in 0..n {
+                let direct = dist_sq(&ymix[i], &ymix[j]);
+                let scale = direct.max(1.0);
+                assert!(
+                    (mixed.get(i, j) - direct).abs() < 1e-3 * scale,
+                    "d'({i},{j}): gram-derived {} vs direct {direct}",
+                    mixed.get(i, j)
+                );
+                assert_eq!(mixed.get(i, j), mixed.get(j, i), "symmetry");
+            }
+        }
+        for (i, (&nm, y)) in mixed.norms().iter().zip(&ymix).enumerate() {
+            let direct = norm_sq(y);
+            assert!((nm - direct).abs() < 1e-3 * direct.max(1.0), "norm {i}: {nm} vs {direct}");
+        }
+    }
+
+    #[test]
+    fn mixed_parallel_fill_is_bit_identical_to_serial() {
+        // m²·n above the gate so the pooled U rows AND the pooled packed
+        // fill both engage
+        let msgs = family(45, 64, 9);
+        let pd = PairwiseDistances::compute(&msgs, &Pool::serial());
+        let sets: Vec<Vec<usize>> = (0..45)
+            .map(|i| {
+                let mut s: Vec<usize> =
+                    (0..3 + i % 17).map(|k| (i * 7 + k * 5) % 45).collect();
+                s.sort_unstable();
+                s.dedup();
+                s
+            })
+            .collect();
+        let serial = pd.mixed(&sets, &Pool::serial());
+        for pool in [Pool::new(4), Pool::new(8), Pool::scoped(Parallelism::new(3))] {
+            let par = pd.mixed(&sets, &pool);
+            assert_eq!(serial.tri, par.tri, "{pool:?}");
+            assert_eq!(serial.norms, par.norms, "{pool:?}");
+        }
     }
 
     #[test]

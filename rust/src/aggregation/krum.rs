@@ -19,10 +19,16 @@ use crate::util::math::mean_of;
 use crate::util::parallel::{Parallelism, Pool};
 
 fn scores(msgs: &[Vec<f32>], f: usize, pool: &Pool) -> Vec<f64> {
-    let n = msgs.len();
+    scores_from(&PairwiseDistances::compute(msgs, pool), f)
+}
+
+/// Krum scores from an already-built distance matrix — the entry point the
+/// NNM mixed-Gram reuse path feeds through
+/// [`Aggregator::aggregate_with_distances`].
+fn scores_from(pd: &PairwiseDistances, f: usize) -> Vec<f64> {
+    let n = pd.n();
     // number of neighbors summed per Krum: n - f - 2, floored at 1
     let m = n.saturating_sub(f + 2).max(1);
-    let pd = PairwiseDistances::compute(msgs, pool);
     let mut out = Vec::with_capacity(n);
     let mut dists: Vec<f64> = Vec::with_capacity(n.saturating_sub(1));
     for i in 0..n {
@@ -60,12 +66,8 @@ impl Krum {
         let pool = Pool::scoped(par);
         self.with_pool(&pool)
     }
-}
 
-impl Aggregator for Krum {
-    fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
-        check_family(msgs);
-        let s = scores(msgs, self.f, &self.pool);
+    fn select(&self, msgs: &[Vec<f32>], s: &[f64]) -> Vec<f32> {
         let best = s
             .iter()
             .enumerate()
@@ -73,6 +75,27 @@ impl Aggregator for Krum {
             .unwrap()
             .0;
         msgs[best].clone()
+    }
+}
+
+impl Aggregator for Krum {
+    fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
+        check_family(msgs);
+        self.select(msgs, &scores(msgs, self.f, &self.pool))
+    }
+
+    fn aggregate_with_distances(
+        &self,
+        msgs: &[Vec<f32>],
+        pd: &PairwiseDistances,
+    ) -> Vec<f32> {
+        check_family(msgs);
+        assert_eq!(pd.n(), msgs.len(), "distance matrix / family size mismatch");
+        self.select(msgs, &scores_from(pd, self.f))
+    }
+
+    fn wants_distances(&self) -> bool {
+        true
     }
 
     fn name(&self) -> String {
@@ -103,19 +126,36 @@ impl MultiKrum {
         let pool = Pool::scoped(par);
         self.with_pool(&pool)
     }
-}
 
-impl Aggregator for MultiKrum {
-    fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
-        check_family(msgs);
+    fn select(&self, msgs: &[Vec<f32>], s: &[f64]) -> Vec<f32> {
         let n = msgs.len();
         let keep = n.saturating_sub(self.f).max(1);
-        let s = scores(msgs, self.f, &self.pool);
         let mut idx: Vec<usize> = (0..n).collect();
         idx.sort_by(|&a, &b| s[a].partial_cmp(&s[b]).unwrap());
         let selected: Vec<&[f32]> =
             idx[..keep].iter().map(|&i| msgs[i].as_slice()).collect();
         mean_of(&selected)
+    }
+}
+
+impl Aggregator for MultiKrum {
+    fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
+        check_family(msgs);
+        self.select(msgs, &scores(msgs, self.f, &self.pool))
+    }
+
+    fn aggregate_with_distances(
+        &self,
+        msgs: &[Vec<f32>],
+        pd: &PairwiseDistances,
+    ) -> Vec<f32> {
+        check_family(msgs);
+        assert_eq!(pd.n(), msgs.len(), "distance matrix / family size mismatch");
+        self.select(msgs, &scores_from(pd, self.f))
+    }
+
+    fn wants_distances(&self) -> bool {
+        true
     }
 
     fn name(&self) -> String {
@@ -167,6 +207,18 @@ mod tests {
         // f too large relative to n must still produce a sane answer
         let out = Krum::new(5).aggregate(&msgs);
         assert!(out[0] == 1.0 || out[0] == 2.0);
+    }
+
+    #[test]
+    fn aggregate_with_distances_matches_recompute() {
+        let msgs = family_with_outliers(6);
+        let pd = PairwiseDistances::compute(&msgs, &Pool::serial());
+        let k = Krum::new(2);
+        assert!(k.wants_distances());
+        assert_eq!(k.aggregate(&msgs), k.aggregate_with_distances(&msgs, &pd));
+        let mk = MultiKrum::new(2);
+        assert!(mk.wants_distances());
+        assert_eq!(mk.aggregate(&msgs), mk.aggregate_with_distances(&msgs, &pd));
     }
 
     #[test]

@@ -37,7 +37,7 @@
 //! | [`Faba`] [5]                 | O(f·NQ)                | f farthest-from-mean removals |
 //! | [`Tgn`] (norm filter [19])   | O(NQ + N log N)        | drops ⌈βN⌉ largest norms |
 //! | [`MomentumFilter`] (CMF)     | O(NQ) expected         | momentum, median-dist filter |
-//! | [`Nnm`] pre-aggregation [23] | O(N²Q/2) + inner rule  | Gram pass + parallel mixing |
+//! | [`Nnm`] pre-aggregation [23] | O(N²Q/2) + inner rule  | Gram pass + parallel mixing; reuses its Gram for inner (Multi-)Krum via W·G·Wᵀ |
 //!
 //! # The gram/pool subsystem
 //!
@@ -100,6 +100,24 @@ pub trait Aggregator: Send + Sync {
     fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32>;
     /// Human-readable name for logs and tables.
     fn name(&self) -> String;
+    /// [`Aggregator::aggregate`] with a precomputed pairwise-distance matrix
+    /// over `msgs` (e.g. [`Nnm`]'s mixed-Gram reuse, which derives the mixed
+    /// family's distances from the matrix it already paid for). The default
+    /// ignores the matrix; rules whose cost is dominated by the O(N²Q)
+    /// distance pass override it and advertise via
+    /// [`Aggregator::wants_distances`].
+    fn aggregate_with_distances(
+        &self,
+        msgs: &[Vec<f32>],
+        _pd: &gram::PairwiseDistances,
+    ) -> Vec<f32> {
+        self.aggregate(msgs)
+    }
+    /// True when [`Aggregator::aggregate_with_distances`] actually consumes
+    /// the matrix — lets wrappers skip building one otherwise.
+    fn wants_distances(&self) -> bool {
+        false
+    }
 }
 
 pub use cwtm::Cwtm;

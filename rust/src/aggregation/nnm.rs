@@ -16,6 +16,17 @@
 //! detects this and skips the O(n²Q) `PairwiseDistances` pass entirely,
 //! producing the same bits the generic path would (same axpy order), which
 //! makes `f = 0` reference runs as cheap as their non-NNM counterparts.
+//!
+//! Gram reuse for distance-hungry inner rules: when `f > 0` and the inner
+//! rule reports [`Aggregator::wants_distances`] (Krum, Multi-Krum), the
+//! mixed family's distance matrix is derived from the one the mixing pass
+//! already computed via [`PairwiseDistances::mixed`] (W·G·Wᵀ on the
+//! recovered Gram matrix, O(n²·keep) flops with no Q factor) and handed to
+//! [`Aggregator::aggregate_with_distances`] — the inner rule's second
+//! O(n²Q) pass over the Q-dim mixed vectors disappears. The derived
+//! entries are float-different from a fresh pass (clamped Gram recovery),
+//! so Krum-under-NNM selections can shift by design; the path itself is
+//! deterministic and bit-identical across pool widths.
 
 use super::gram::PairwiseDistances;
 use super::{check_family, par_gate, Aggregator};
@@ -51,19 +62,39 @@ impl Nnm {
         let n = msgs.len();
         let keep = n.saturating_sub(self.f).max(1);
         if keep == n {
-            // Degenerate mixing (f = 0): every row keeps all n neighbors,
-            // so each mixed row is the same global mean. Computing it once
-            // with the exact axpy order the generic row loop uses keeps the
-            // result bit-identical while skipping the O(n²Q) distance pass.
-            let mut y = vec![0.0f32; q];
-            for m in msgs {
-                axpy(1.0, m, &mut y);
-            }
-            scale(&mut y, 1.0 / keep as f32);
-            return vec![y; n];
+            return self.mix_degenerate(msgs, q, n, keep);
         }
+        self.mix_general(msgs, q, n, keep).0
+    }
+
+    /// Degenerate mixing (f = 0): every row keeps all n neighbors, so each
+    /// mixed row is the same global mean. Computing it once with the exact
+    /// axpy order the generic row loop uses keeps the result bit-identical
+    /// while skipping the O(n²Q) distance pass.
+    fn mix_degenerate(&self, msgs: &[Vec<f32>], q: usize, n: usize, keep: usize) -> Vec<Vec<f32>> {
+        let mut y = vec![0.0f32; q];
+        for m in msgs {
+            axpy(1.0, m, &mut y);
+        }
+        scale(&mut y, 1.0 / keep as f32);
+        vec![y; n]
+    }
+
+    /// Generic mixing: one distance pass, per-row neighbor selection +
+    /// averaging. Returns the base-family distance matrix and each row's
+    /// kept-neighbor index set (ascending) alongside the mixed messages, so
+    /// [`Nnm::aggregate`] can hand distance-hungry inner rules a
+    /// [`PairwiseDistances::mixed`] matrix instead of paying a second
+    /// O(n²Q) pass over the mixed vectors.
+    fn mix_general(
+        &self,
+        msgs: &[Vec<f32>],
+        q: usize,
+        n: usize,
+        keep: usize,
+    ) -> (Vec<Vec<f32>>, PairwiseDistances, Vec<Vec<usize>>) {
         let pd = PairwiseDistances::compute(msgs, &self.pool);
-        let mix_row = |i: usize| -> Vec<f32> {
+        let mix_row = |i: usize| -> (Vec<f32>, Vec<usize>) {
             // the diagonal entry d(i,i) = 0 keeps xᵢ among its own neighbors
             let mut d: Vec<(f64, usize)> = pd.row(i).iter().zip(0..n).collect();
             if keep < n {
@@ -74,21 +105,41 @@ impl Nnm {
                 axpy(1.0, &msgs[j], &mut y);
             }
             scale(&mut y, 1.0 / keep as f32);
-            y
+            let mut set: Vec<usize> = d[..keep].iter().map(|&(_, j)| j).collect();
+            set.sort_unstable();
+            (y, set)
         };
-        if !self.pool.is_serial() && par_gate(n, q) {
+        let rows: Vec<(Vec<f32>, Vec<usize>)> = if !self.pool.is_serial() && par_gate(n, q) {
             let idx: Vec<usize> = (0..n).collect();
             self.pool.par_map(&idx, |_, &i| mix_row(i))
         } else {
             (0..n).map(mix_row).collect()
-        }
+        };
+        let (mixed, sets) = rows.into_iter().unzip();
+        (mixed, pd, sets)
     }
 }
 
 impl Aggregator for Nnm {
     fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
-        let mixed = self.mix(msgs);
-        self.inner.aggregate(&mixed)
+        let q = check_family(msgs);
+        let n = msgs.len();
+        let keep = n.saturating_sub(self.f).max(1);
+        if keep == n {
+            // f = 0: the mixed family is n identical means — distances are
+            // all zero, so there is nothing for an inner rule to reuse
+            return self.inner.aggregate(&self.mix_degenerate(msgs, q, n, keep));
+        }
+        let (mixed, pd, sets) = self.mix_general(msgs, q, n, keep);
+        if self.inner.wants_distances() {
+            // Gram reuse: derive the mixed family's distances from the
+            // matrix the mixing pass already computed (W·G·Wᵀ) instead of
+            // letting the inner rule run a second O(n²Q) pass
+            let mixed_pd = pd.mixed(&sets, &self.pool);
+            self.inner.aggregate_with_distances(&mixed, &mixed_pd)
+        } else {
+            self.inner.aggregate(&mixed)
+        }
     }
 
     fn name(&self) -> String {
@@ -196,5 +247,36 @@ mod tests {
     fn name_reflects_wrapping() {
         let nnm = Nnm::new(1, Box::new(Cwtm::new(0.1)));
         assert_eq!(nnm.name(), "cwtm(0.1)-nnm");
+    }
+
+    #[test]
+    fn gram_reuse_krum_inner_still_lands_in_honest_cluster() {
+        // honest messages near 1.0 plus far outliers: the reused (Gram-
+        // derived) distances must still steer inner Krum to an honest mix
+        let mut rng = Rng::new(11);
+        let mut msgs: Vec<Vec<f32>> = (0..12)
+            .map(|_| (0..6).map(|_| rng.normal(1.0, 0.1) as f32).collect())
+            .collect();
+        msgs.push(vec![300.0; 6]);
+        msgs.push(vec![-300.0; 6]);
+        let out = Nnm::new(2, Box::new(crate::aggregation::Krum::new(2))).aggregate(&msgs);
+        for x in &out {
+            assert!((x - 1.0).abs() < 0.5, "{x}");
+        }
+    }
+
+    #[test]
+    fn gram_reuse_path_is_bit_identical_across_pools() {
+        // sized past par_gate so the pooled runs exercise the parallel
+        // mixing, the tiled base Gram pass AND the parallel mixed() fill
+        let mut rng = Rng::new(12);
+        let msgs: Vec<Vec<f32>> = (0..40).map(|_| rng.gauss_vec(64)).collect();
+        let f = 6;
+        let serial = Nnm::new(f, Box::new(crate::aggregation::Krum::new(f))).aggregate(&msgs);
+        for pool in [Pool::new(2), Pool::new(8), Pool::scoped(Parallelism::new(3))] {
+            let inner = crate::aggregation::Krum::new(f).with_pool(&pool);
+            let par = Nnm::new(f, Box::new(inner)).with_pool(&pool).aggregate(&msgs);
+            assert_eq!(serial, par, "{pool:?}");
+        }
     }
 }

@@ -11,14 +11,17 @@ use crate::config::AttackKind;
 use crate::util::math::{mean_of, norm};
 use crate::util::rng::Rng;
 
-/// Context handed to an attack each iteration.
+/// Context handed to an attack each iteration. Both message families are
+/// borrowed slices-of-slices so callers can point straight into a
+/// contiguous gradient slab (the zero-copy trainer/leader paths) without
+/// materializing per-device `Vec`s.
 pub struct AttackContext<'a> {
     /// Messages the honest devices are about to send (post-coding,
     /// pre-compression) — the omniscient-adversary worst case.
-    pub honest: &'a [Vec<f32>],
+    pub honest: &'a [&'a [f32]],
     /// The message each Byzantine device WOULD have sent if honest
     /// (one per Byzantine device).
-    pub own_true: &'a [Vec<f32>],
+    pub own_true: &'a [&'a [f32]],
     pub rng: &'a mut Rng,
 }
 
@@ -95,7 +98,7 @@ impl Default for Alie {
 impl Attack for Alie {
     fn craft(&self, ctx: &mut AttackContext) -> Vec<Vec<f32>> {
         if ctx.honest.is_empty() {
-            return ctx.own_true.to_vec();
+            return ctx.own_true.iter().map(|g| g.to_vec()).collect();
         }
         let q = ctx.honest[0].len();
         let n = ctx.honest.len() as f64;
@@ -131,10 +134,9 @@ pub struct Ipm {
 impl Attack for Ipm {
     fn craft(&self, ctx: &mut AttackContext) -> Vec<Vec<f32>> {
         if ctx.honest.is_empty() {
-            return ctx.own_true.to_vec();
+            return ctx.own_true.iter().map(|g| g.to_vec()).collect();
         }
-        let mean =
-            mean_of(&ctx.honest.iter().map(|v| v.as_slice()).collect::<Vec<_>>());
+        let mean = mean_of(ctx.honest);
         let msg: Vec<f32> = mean.iter().map(|x| -self.eps * x).collect();
         vec![msg; ctx.own_true.len()]
     }
@@ -149,7 +151,7 @@ pub struct Mimic;
 impl Attack for Mimic {
     fn craft(&self, ctx: &mut AttackContext) -> Vec<Vec<f32>> {
         if ctx.honest.is_empty() {
-            return ctx.own_true.to_vec();
+            return ctx.own_true.iter().map(|g| g.to_vec()).collect();
         }
         // deterministically mimic the honest message with the largest norm
         let target = ctx
@@ -157,7 +159,7 @@ impl Attack for Mimic {
             .iter()
             .max_by(|a, b| norm(a).partial_cmp(&norm(b)).unwrap())
             .unwrap();
-        vec![target.clone(); ctx.own_true.len()]
+        vec![target.to_vec(); ctx.own_true.len()]
     }
     fn name(&self) -> String {
         "mimic".into()
@@ -186,7 +188,7 @@ pub struct NoAttack;
 
 impl Attack for NoAttack {
     fn craft(&self, ctx: &mut AttackContext) -> Vec<Vec<f32>> {
-        ctx.own_true.to_vec()
+        ctx.own_true.iter().map(|g| g.to_vec()).collect()
     }
     fn name(&self) -> String {
         "none".into()
@@ -211,9 +213,13 @@ pub fn from_kind(kind: AttackKind) -> Box<dyn Attack> {
 mod tests {
     use super::*;
 
+    fn refs(v: &[Vec<f32>]) -> Vec<&[f32]> {
+        v.iter().map(|m| m.as_slice()).collect()
+    }
+
     fn ctx_fixture<'a>(
-        honest: &'a [Vec<f32>],
-        own: &'a [Vec<f32>],
+        honest: &'a [&'a [f32]],
+        own: &'a [&'a [f32]],
         rng: &'a mut Rng,
     ) -> AttackContext<'a> {
         AttackContext { honest, own_true: own, rng }
@@ -223,6 +229,7 @@ mod tests {
     fn sign_flip_scales_own_message() {
         let honest = vec![vec![1.0f32, 2.0]];
         let own = vec![vec![3.0f32, -4.0]];
+        let (honest, own) = (refs(&honest), refs(&own));
         let mut rng = Rng::new(1);
         let out = SignFlip { coeff: -2.0 }.craft(&mut ctx_fixture(&honest, &own, &mut rng));
         assert_eq!(out, vec![vec![-6.0, 8.0]]);
@@ -232,6 +239,7 @@ mod tests {
     fn alie_stays_within_one_std() {
         let honest = vec![vec![1.0f32], vec![2.0], vec![3.0]];
         let own = vec![vec![0.0f32]; 2];
+        let (honest, own) = (refs(&honest), refs(&own));
         let mut rng = Rng::new(2);
         let out = Alie { z: 1.0 }.craft(&mut ctx_fixture(&honest, &own, &mut rng));
         assert_eq!(out.len(), 2);
@@ -244,6 +252,7 @@ mod tests {
     fn ipm_is_negative_scaled_mean() {
         let honest = vec![vec![2.0f32, 4.0], vec![4.0, 8.0]];
         let own = vec![vec![0.0f32, 0.0]];
+        let (honest, own) = (refs(&honest), refs(&own));
         let mut rng = Rng::new(3);
         let out = Ipm { eps: 0.5 }.craft(&mut ctx_fixture(&honest, &own, &mut rng));
         assert_eq!(out[0], vec![-1.5, -3.0]);
@@ -253,6 +262,7 @@ mod tests {
     fn mimic_copies_an_honest_message() {
         let honest = vec![vec![1.0f32], vec![5.0]];
         let own = vec![vec![0.0f32]];
+        let (honest, own) = (refs(&honest), refs(&own));
         let mut rng = Rng::new(4);
         let out = Mimic.craft(&mut ctx_fixture(&honest, &own, &mut rng));
         assert_eq!(out[0], vec![5.0]);
@@ -262,6 +272,7 @@ mod tests {
     fn all_kinds_build_and_produce_right_count() {
         let honest = vec![vec![1.0f32, 1.0]; 4];
         let own = vec![vec![1.0f32, 1.0]; 3];
+        let (honest, own) = (refs(&honest), refs(&own));
         for kind in [
             AttackKind::None,
             AttackKind::SignFlip { coeff: -2.0 },

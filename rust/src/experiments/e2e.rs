@@ -163,8 +163,10 @@ pub fn run(
         }
         honest_loss /= p.n_honest as f64;
 
-        let honest: Vec<Vec<f32>> = msgs_true[..p.n_honest].to_vec();
-        let byz_true: Vec<Vec<f32>> = msgs_true[p.n_honest..].to_vec();
+        let honest: Vec<&[f32]> =
+            msgs_true[..p.n_honest].iter().map(|m| m.as_slice()).collect();
+        let byz_true: Vec<&[f32]> =
+            msgs_true[p.n_honest..].iter().map(|m| m.as_slice()).collect();
         let lies = if byz_true.is_empty() {
             Vec::new()
         } else {
@@ -173,7 +175,7 @@ pub fn run(
             attack.craft(&mut ctx)
         };
         let mut msgs: Vec<Vec<f32>> = Vec::with_capacity(p.n_devices);
-        for m in honest.iter().chain(lies.iter()) {
+        for m in honest.iter().copied().chain(lies.iter().map(|l| l.as_slice())) {
             let c = comp.compress(m, &mut rng);
             bits_total += c.bits as u64;
             msgs.push(c.vec);

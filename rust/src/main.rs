@@ -312,8 +312,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         spec.name, outcome.total, outcome.ran, outcome.skipped, outcome.pending
     );
     println!("journal: {:?}", outcome.manifest_path);
-    match (&outcome.results_path, &outcome.csv_path) {
-        (Some(r), Some(c)) => println!("written {r:?} and {c:?}"),
+    match (&outcome.results_path, &outcome.csv_path, &outcome.report_path) {
+        (Some(r), Some(c), Some(rep)) => println!("written {r:?}, {c:?} and {rep:?}"),
         _ => println!("sweep incomplete — rerun with --resume to finish the remaining jobs"),
     }
     Ok(())
@@ -357,6 +357,7 @@ fn cmd_node_leader(args: &Args) -> Result<()> {
             device_compression,
             join_deadline: (join_ms > 0)
                 .then(|| std::time::Duration::from_millis(join_ms)),
+            ..Default::default()
         },
         pool,
         send_dataset: true,

@@ -45,10 +45,28 @@ static CRC_TABLE: [u32; 256] = make_table();
 
 /// CRC32 (IEEE, reflected) of `bytes`.
 pub fn crc32(bytes: &[u8]) -> u32 {
-    let mut c = 0xFFFF_FFFFu32;
+    crc32_finish(crc32_update(CRC_INIT, bytes))
+}
+
+/// Initial running state for an incremental CRC32 (feed through
+/// [`crc32_update`], close with [`crc32_finish`]).
+const CRC_INIT: u32 = 0xFFFF_FFFF;
+
+/// Fold `bytes` into a running CRC32 state. Feeding slices `a` then `b`
+/// yields the same state as one pass over their concatenation — the property
+/// [`encode_frame_parts`] relies on to checksum a spliced payload without
+/// materializing it.
+#[inline]
+fn crc32_update(mut c: u32, bytes: &[u8]) -> u32 {
     for &b in bytes {
         c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
     }
+    c
+}
+
+/// Close a running CRC32 state into the final digest.
+#[inline]
+fn crc32_finish(c: u32) -> u32 {
     c ^ 0xFFFF_FFFF
 }
 
@@ -100,6 +118,31 @@ pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     out.extend_from_slice(&crc32(payload).to_le_bytes());
     out.extend_from_slice(payload);
+    out
+}
+
+/// Frame a payload supplied as consecutive slices, without concatenating
+/// them first: the header's length is the summed part length and the CRC is
+/// computed incrementally across the parts, so the output is byte-identical
+/// to `encode_frame(&concat(parts))`. This is the shared-x-frame splice
+/// path: the leader encodes the broadcast prefix (iterate payload) once per
+/// iteration and frames it with each device's tiny assignment tail.
+///
+/// Panics if the combined payload exceeds [`MAX_PAYLOAD`] (same contract as
+/// [`encode_frame`]).
+pub fn encode_frame_parts(parts: &[&[u8]]) -> Vec<u8> {
+    let len: usize = parts.iter().map(|p| p.len()).sum();
+    assert!(len <= MAX_PAYLOAD, "frame payload too large: {len}");
+    let mut c = CRC_INIT;
+    for p in parts {
+        c = crc32_update(c, p);
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + len);
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+    out.extend_from_slice(&crc32_finish(c).to_le_bytes());
+    for p in parts {
+        out.extend_from_slice(p);
+    }
     out
 }
 
@@ -180,6 +223,21 @@ mod tests {
             assert_eq!(p, payload);
             assert_eq!(n, f.len() as u64);
         }
+    }
+
+    #[test]
+    fn spliced_parts_frame_is_byte_identical_to_the_concat_frame() {
+        let prefix = b"shared broadcast prefix \x00\x01\x02";
+        let tails: [&[u8]; 4] = [b"", b"t", b"tail-two", &[0xFFu8; 33]];
+        for tail in tails {
+            let mut concat = prefix.to_vec();
+            concat.extend_from_slice(tail);
+            assert_eq!(encode_frame_parts(&[prefix, tail]), encode_frame(&concat));
+        }
+        // degenerate splits: zero parts / many parts of one payload
+        assert_eq!(encode_frame_parts(&[]), encode_frame(b""));
+        let p = b"abcdefgh";
+        assert_eq!(encode_frame_parts(&[&p[..3], &p[3..5], &p[5..]]), encode_frame(p));
     }
 
     #[test]

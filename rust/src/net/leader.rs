@@ -42,6 +42,23 @@
 //! `ctx.honest` therefore match the central path only under leader-side
 //! compression or the Identity operator.
 //!
+//! **Pipeline.** By default ([`LeaderOpts::pipeline`]) the leader runs the
+//! iteration as a software pipeline: the Q-sized iterate section of the
+//! `Broadcast` is encoded **once** per iteration
+//! ([`super::wire::broadcast_prefix`]) and each device's frame splices its
+//! tiny subset tail on ([`super::wire::broadcast_tail`] +
+//! [`super::frame::encode_frame_parts`]), with frame
+//! assembly and the socket writes fanned out on [`Leader::pool`]; uplinks
+//! decode straight into a contiguous per-device slab
+//! ([`super::wire::Payload::decode_into`], no per-device `Vec`); and the
+//! next iteration's assignment + subset tails are drawn into a staging
+//! buffer while the current iteration is still aggregating. The staged draw
+//! sits **after** the current iteration's attack craft, so the run RNG sees
+//! `draw(0), craft(0), draw(1), craft(1), …` — exactly the phase-serial
+//! order — and every byte on the wire is identical to the per-device
+//! encoding (`pipeline: false`). Both invariants are pinned by
+//! `tests/fuzz_determinism.rs` and `tests/net_cluster.rs`.
+//!
 //! **Error feedback.** Under an `ef-*` compression kind the leader keeps
 //! an [`EfState`] mirror: under leader-side compression it holds every
 //! device's residual; under device-side compression honest workers hold
@@ -53,8 +70,11 @@
 //! a **retired** device's residual is zeroed the moment it is dropped, so
 //! a slot can never replay stale memory.
 
+use super::frame::encode_frame_parts;
 use super::transport::Transport;
-use super::wire::{config_digest, DatasetBlock, Msg, WIRE_VERSION};
+use super::wire::{
+    broadcast_prefix, broadcast_tail, config_digest, DatasetBlock, Msg, WIRE_VERSION,
+};
 use crate::aggregation::Aggregator;
 use crate::attack::{Attack, AttackContext};
 use crate::coding::{Assignment, TaskMatrix};
@@ -86,7 +106,7 @@ fn drop_device(
     dev: usize,
     dead: &mut [bool],
     expecting: &mut [bool],
-    got: &[Option<(Vec<f32>, u64)>],
+    have: &[Option<u64>],
     want: &mut usize,
     trace: &mut TrainTrace,
     ef: Option<&mut EfState>,
@@ -95,7 +115,7 @@ fn drop_device(
     if let Some(st) = ef {
         st.reset(dev);
     }
-    if expecting[dev] && got[dev].is_none() {
+    if expecting[dev] && have[dev].is_none() {
         expecting[dev] = false;
         trace.anomalies += 1;
         *want -= 1;
@@ -103,7 +123,7 @@ fn drop_device(
 }
 
 /// Leader-side policy knobs that are not part of the training semantics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct LeaderOpts {
     /// Per-iteration gather budget. `None` waits for every device.
     pub gather_deadline: Option<Duration>,
@@ -122,6 +142,27 @@ pub struct LeaderOpts {
     /// deadline can still hold the serial accept loop (see ROADMAP —
     /// concurrent handshakes are the remaining hardening step).
     pub join_deadline: Option<Duration>,
+    /// Pipelined iteration scheduling (the default): shared x-frame
+    /// broadcast with pool-parallel frame assembly, slab uplink decode,
+    /// and double-buffered staging of the next assignment's subset tails.
+    /// `false` selects the phase-serial schedule (per-device `Broadcast`
+    /// encode on the leader thread, per-device `Vec` reconstruction) —
+    /// kept as the reference implementation the pipeline is pinned
+    /// bit-identical to. Pure scheduling: traces, wire bytes and RNG
+    /// consumption are unaffected, so the toggle is deliberately outside
+    /// `config_digest` and the sweep job identity.
+    pub pipeline: bool,
+}
+
+impl Default for LeaderOpts {
+    fn default() -> Self {
+        LeaderOpts {
+            gather_deadline: None,
+            device_compression: false,
+            join_deadline: None,
+            pipeline: true,
+        }
+    }
 }
 
 /// The server of a multi-node run: configuration, dataset, and the
@@ -377,43 +418,112 @@ impl Leader<'_> {
         let mut bits_total = 0u64;
         let mut dead = vec![false; n];
         let mut miss_streak = vec![0usize; n];
+        let pipeline = self.opts.pipeline;
+        // contiguous uplink slab: device i's reconstruction decodes straight
+        // into row i, so attack crafting / compression / aggregation all
+        // read out of one allocation reused across iterations
+        let mut slab = vec![0.0f32; n * cfg.dim];
+        // double-buffer staging (pipeline mode): iteration t+1's assignment
+        // and pre-encoded per-device subset tails, drawn after craft(t)
+        let mut staged: Option<(Assignment, Vec<Vec<u8>>)> = None;
+        let encode_tails = |assign: &Assignment| -> Vec<Vec<u8>> {
+            (0..n)
+                .map(|i| {
+                    let subsets: Vec<u32> = assign
+                        .subsets_for(s_hat.row(assign.tasks[i]))
+                        .map(|k| k as u32)
+                        .collect();
+                    broadcast_tail(&subsets)
+                })
+                .collect()
+        };
 
         for t in 0..cfg.iters {
-            let assign = Assignment::draw(n, rng);
-            let mut expecting = vec![false; n];
-            for i in 0..n {
-                if dead[i] {
-                    continue;
+            let t_bcast = Instant::now();
+            let (assign, tails) = match staged.take() {
+                Some(s) => s,
+                None => {
+                    let a = Assignment::draw(n, rng);
+                    let tails = if pipeline { encode_tails(&a) } else { Vec::new() };
+                    (a, tails)
                 }
-                let subsets: Vec<u32> = assign
-                    .subsets_for(s_hat.row(assign.tasks[i]))
-                    .map(|k| k as u32)
-                    .collect();
-                let msg = Msg::Broadcast { iter: t as u32, x: x0.clone(), subsets };
-                match txs[i].send(&msg) {
-                    Ok(nb) => {
-                        wire_down += nb;
-                        expecting[i] = true;
+            };
+            let mut expecting = vec![false; n];
+            if pipeline {
+                // shared x-frame: the Q-sized iterate section is encoded
+                // exactly once per iteration; each device's frame splices
+                // its pre-encoded subset tail on, and both the splice and
+                // the socket write fan out on the pool. Results come back
+                // in device order, so retirement semantics match the
+                // phase-serial loop below.
+                let prefix = broadcast_prefix(t as u32, x0);
+                let sends: Vec<Option<Result<u64>>> = self.pool.par_map_mut(&mut txs, |i, tx| {
+                    if dead[i] {
+                        return None;
                     }
-                    Err(e) => {
-                        if self.opts.gather_deadline.is_some() {
-                            // crash-Byzantine: drop the device, keep going
-                            dead[i] = true;
-                            if let Some(st) = ef.as_mut() {
-                                st.reset(i);
+                    let frame = encode_frame_parts(&[prefix.as_slice(), tails[i].as_slice()]);
+                    Some(tx.send_frame(&frame))
+                });
+                for (i, res) in sends.into_iter().enumerate() {
+                    match res {
+                        None => {}
+                        Some(Ok(nb)) => {
+                            wire_down += nb;
+                            expecting[i] = true;
+                        }
+                        Some(Err(e)) => {
+                            if self.opts.gather_deadline.is_some() {
+                                // crash-Byzantine: drop the device, keep going
+                                dead[i] = true;
+                                if let Some(st) = ef.as_mut() {
+                                    st.reset(i);
+                                }
+                                trace.anomalies += 1;
+                            } else {
+                                return Err(e).context(format!("broadcast to device {i}"));
                             }
-                            trace.anomalies += 1;
-                        } else {
-                            return Err(e).context(format!("broadcast to device {i}"));
+                        }
+                    }
+                }
+            } else {
+                for i in 0..n {
+                    if dead[i] {
+                        continue;
+                    }
+                    let subsets: Vec<u32> = assign
+                        .subsets_for(s_hat.row(assign.tasks[i]))
+                        .map(|k| k as u32)
+                        .collect();
+                    let msg = Msg::Broadcast { iter: t as u32, x: x0.clone(), subsets };
+                    match txs[i].send(&msg) {
+                        Ok(nb) => {
+                            wire_down += nb;
+                            expecting[i] = true;
+                        }
+                        Err(e) => {
+                            if self.opts.gather_deadline.is_some() {
+                                // crash-Byzantine: drop the device, keep going
+                                dead[i] = true;
+                                if let Some(st) = ef.as_mut() {
+                                    st.reset(i);
+                                }
+                                trace.anomalies += 1;
+                            } else {
+                                return Err(e).context(format!("broadcast to device {i}"));
+                            }
                         }
                     }
                 }
             }
+            trace.broadcast_ns += t_bcast.elapsed().as_nanos() as u64;
             let mut want = expecting.iter().filter(|&&b| b).count();
             ensure!(want > 0, "iteration {t}: no live workers left");
 
-            // gather until complete or the deadline expires
-            let mut got: Vec<Option<(Vec<f32>, u64)>> = (0..n).map(|_| None).collect();
+            // gather until complete or the deadline expires; uploads decode
+            // straight into their device's slab row, `have[dev]` records the
+            // analytic bit count of a landed upload
+            let t_gather = Instant::now();
+            let mut have: Vec<Option<u64>> = (0..n).map(|_| None).collect();
             let deadline = self.opts.gather_deadline.map(|d| Instant::now() + d);
             while want > 0 {
                 let item = match deadline {
@@ -450,7 +560,7 @@ impl Leader<'_> {
                             dev,
                             &mut dead,
                             &mut expecting,
-                            &got,
+                            &have,
                             &mut want,
                             &mut trace,
                             ef.as_mut(),
@@ -464,36 +574,34 @@ impl Leader<'_> {
                         if iter as usize != t || device as usize != dev {
                             continue; // stale upload from a past deadline miss
                         }
-                        if !expecting[dev] || got[dev].is_some() {
+                        if !expecting[dev] || have[dev].is_some() {
                             continue;
                         }
                         // dimension checked on the cheap accessor BEFORE
-                        // reconstructing, so a hostile dim never allocates
-                        let vec =
-                            if payload.dim() == cfg.dim { payload.to_dense().ok() } else { None };
-                        match vec {
-                            Some(v) if v.len() == cfg.dim => {
-                                got[dev] = Some((v, analytic_bits));
-                                want -= 1;
-                            }
-                            _ => {
-                                if self.opts.gather_deadline.is_none() {
-                                    bail!(
-                                        "device {dev} sent an invalid upload \
-                                         (payload dim != {})",
-                                        cfg.dim
-                                    );
-                                }
-                                drop_device(
-                                    dev,
-                                    &mut dead,
-                                    &mut expecting,
-                                    &got,
-                                    &mut want,
-                                    &mut trace,
-                                    ef.as_mut(),
+                        // reconstructing, so a hostile dim never touches the
+                        // slab; decode_into fully overwrites the row, so a
+                        // stale value from a past iteration can never leak
+                        let row = &mut slab[dev * cfg.dim..(dev + 1) * cfg.dim];
+                        if payload.dim() == cfg.dim && payload.decode_into(row).is_ok() {
+                            have[dev] = Some(analytic_bits);
+                            want -= 1;
+                        } else {
+                            if self.opts.gather_deadline.is_none() {
+                                bail!(
+                                    "device {dev} sent an invalid upload \
+                                     (payload dim != {})",
+                                    cfg.dim
                                 );
                             }
+                            drop_device(
+                                dev,
+                                &mut dead,
+                                &mut expecting,
+                                &have,
+                                &mut want,
+                                &mut trace,
+                                ef.as_mut(),
+                            );
                         }
                     }
                     other => {
@@ -506,7 +614,7 @@ impl Leader<'_> {
                             dev,
                             &mut dead,
                             &mut expecting,
-                            &got,
+                            &have,
                             &mut want,
                             &mut trace,
                             ef.as_mut(),
@@ -515,13 +623,14 @@ impl Leader<'_> {
                 }
             }
             trace.anomalies += want; // devices that missed the deadline
+            trace.gather_ns += t_gather.elapsed().as_nanos() as u64;
             // retire chronic stragglers so a permanently stalled worker
             // costs a bounded number of timeouts, not one per iteration
             for i in 0..n {
                 if !expecting[i] {
                     continue;
                 }
-                if got[i].is_some() {
+                if have[i].is_some() {
                     miss_streak[i] = 0;
                 } else {
                     miss_streak[i] += 1;
@@ -536,7 +645,7 @@ impl Leader<'_> {
                 }
             }
 
-            let present: Vec<usize> = (0..n).filter(|&i| got[i].is_some()).collect();
+            let present: Vec<usize> = (0..n).filter(|&i| have[i].is_some()).collect();
             ensure!(!present.is_empty(), "iteration {t}: no uploads before the deadline");
             let honest_ids: Vec<usize> =
                 present.iter().copied().filter(|&i| i < cfg.n_honest).collect();
@@ -544,18 +653,18 @@ impl Leader<'_> {
                 present.iter().copied().filter(|&i| i >= cfg.n_honest).collect();
 
             // Fixed identities (last N−H Byzantine, as Trainer defaults):
-            // gather the uploads, craft the lies, compress what is still
-            // uncompressed, and stitch back into device order (honest ids
-            // all precede Byzantine ids, so concatenation IS device order).
+            // view the uploads as slab rows, craft the lies, compress what
+            // is still uncompressed, and stitch back into device order
+            // (honest ids all precede Byzantine ids, so concatenation IS
+            // device order).
+            let t_agg = Instant::now();
+            let row = |i: usize| -> &[f32] { &slab[i * cfg.dim..(i + 1) * cfg.dim] };
             let msgs: Vec<Vec<f32>> = if self.opts.device_compression {
-                let mut honest_rec = Vec::with_capacity(honest_ids.len());
+                let honest_rec: Vec<&[f32]> = honest_ids.iter().map(|&i| row(i)).collect();
                 for &i in &honest_ids {
-                    let (vec, bits) = got[i].take().expect("present");
-                    bits_total += bits;
-                    honest_rec.push(vec);
+                    bits_total += have[i].expect("present");
                 }
-                let byz_true: Vec<Vec<f32>> =
-                    byz_ids.iter().map(|&i| got[i].take().expect("present").0).collect();
+                let byz_true: Vec<&[f32]> = byz_ids.iter().map(|&i| row(i)).collect();
                 let lies = if byz_true.is_empty() {
                     Vec::new()
                 } else {
@@ -567,7 +676,8 @@ impl Leader<'_> {
                 // own device streams, exactly as the central path does —
                 // under EF, with their own residual rows too (honest rows
                 // live on the workers in this mode)
-                let mut out = honest_rec;
+                let mut out: Vec<Vec<f32>> =
+                    honest_rec.iter().map(|r| r.to_vec()).collect();
                 if let Some(st) = ef.as_mut() {
                     for (j, &i) in byz_ids.iter().enumerate() {
                         let c = st.step(i, &lies[j], self.comp, &mut comp_rngs[i]);
@@ -593,10 +703,8 @@ impl Leader<'_> {
                 }
                 out
             } else {
-                let honest_true: Vec<Vec<f32>> =
-                    honest_ids.iter().map(|&i| got[i].take().expect("present").0).collect();
-                let byz_true: Vec<Vec<f32>> =
-                    byz_ids.iter().map(|&i| got[i].take().expect("present").0).collect();
+                let honest_true: Vec<&[f32]> = honest_ids.iter().map(|&i| row(i)).collect();
+                let byz_true: Vec<&[f32]> = byz_ids.iter().map(|&i| row(i)).collect();
                 let lies = if byz_true.is_empty() {
                     Vec::new()
                 } else {
@@ -607,9 +715,11 @@ impl Leader<'_> {
                 if present.len() == n {
                     // full gather: the exact leader-side compression batch
                     // of the historical cluster path (and the fast trainer)
+                    // — every honest ref still points into the slab, so the
+                    // batch reads one contiguous allocation
                     let all: Vec<&[f32]> = honest_true
                         .iter()
-                        .map(|m| m.as_slice())
+                        .copied()
                         .chain(lies.iter().map(|m| m.as_slice()))
                         .collect();
                     let (msgs, bits) = match ef.as_mut() {
@@ -627,8 +737,8 @@ impl Leader<'_> {
                     let mut out = Vec::with_capacity(present.len());
                     for (j, &i) in honest_ids.iter().enumerate() {
                         let c = match ef.as_mut() {
-                            Some(st) => st.step(i, &honest_true[j], self.comp, &mut comp_rngs[i]),
-                            None => self.comp.compress(&honest_true[j], &mut comp_rngs[i]),
+                            Some(st) => st.step(i, honest_true[j], self.comp, &mut comp_rngs[i]),
+                            None => self.comp.compress(honest_true[j], &mut comp_rngs[i]),
                         };
                         bits_total += c.bits as u64;
                         out.push(c.vec);
@@ -645,10 +755,22 @@ impl Leader<'_> {
                 }
             };
 
+            // double-buffer: draw iteration t+1's assignment and pre-encode
+            // its subset tails while this iteration still has aggregation
+            // ahead of it. The draw sits AFTER this iteration's attack
+            // craft, so the run RNG sees draw(0), craft(0), draw(1), … —
+            // exactly the phase-serial order (pinned by fuzz_determinism).
+            if pipeline && t + 1 < cfg.iters {
+                let a = Assignment::draw(n, rng);
+                let tails = encode_tails(&a);
+                staged = Some((a, tails));
+            }
+
             let update = self.agg.aggregate(&msgs);
             for (xi, ui) in x0.iter_mut().zip(&update) {
                 *xi -= cfg.lr as f32 * ui;
             }
+            trace.aggregate_ns += t_agg.elapsed().as_nanos() as u64;
             if (cfg.log_every > 0 && t % cfg.log_every == 0) || t + 1 == cfg.iters {
                 trace.record(t, self.ds.loss(x0), norm(&update), bits_total);
             }

@@ -39,6 +39,34 @@
 //! | 4   | `Upload`    | worker  | coded (compressed) message + bit count |
 //! | 5   | `Shutdown`  | leader  | end of run                             |
 //!
+//! # Pipelined broadcast: the shared x-frame splice
+//!
+//! A `Broadcast` payload factors into two byte ranges:
+//!
+//! | part   | bytes                                  | varies per device? |
+//! |--------|----------------------------------------|--------------------|
+//! | prefix | tag, iteration index, `x^t` (Q floats) | no — identical     |
+//! | tail   | resolved subset list for this device   | yes                |
+//!
+//! [`wire::broadcast_prefix`] `‖` [`wire::broadcast_tail`] is byte-for-byte
+//! `Msg::Broadcast.encode()`, and [`frame::encode_frame_parts`] produces the
+//! same frame as `encode_frame` over the concatenation (the CRC runs across
+//! part boundaries). The pipelined leader ([`LeaderOpts::pipeline`], the
+//! default) exploits this: the O(Q) prefix is encoded **once per
+//! iteration** and each device's frame is assembled by splicing its small
+//! assignment tail onto the shared prefix, with tail encoding and socket
+//! writes fanned out on the leader's pool.
+//!
+//! **Staging RNG contract.** The pipelined leader also pre-draws iteration
+//! `t+1`'s random assignment and pre-encodes its tails while gathering
+//! iteration `t`. The leader RNG therefore observes the fixed order
+//! `draw(0), craft(0), draw(1), craft(1), …` regardless of pipelining —
+//! staging buffers reorder *work*, never *stream consumption* — so
+//! pipelined and phase-serial runs produce bit-identical traces and
+//! identical wire bytes. Pinned by `tests/fuzz_determinism.rs`
+//! (pipelined-vs-phase-serial lattice) and the shared-frame case in
+//! `tests/net_cluster.rs`; measured by `cargo bench --bench bench_e2e`.
+//!
 //! # Quick start
 //!
 //! In-process (what `server::cluster::run_cluster` does), or across real

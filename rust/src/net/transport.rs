@@ -32,6 +32,13 @@ use std::time::Duration;
 pub trait Transport: Send {
     /// Encode, frame and transmit one message; returns bytes written.
     fn send(&mut self, msg: &Msg) -> Result<u64>;
+    /// Transmit one pre-built frame verbatim (header + payload, already
+    /// [`frame::encode_frame`]d). The shared-x-frame broadcast path
+    /// assembles per-device frames from a common prefix and hands them
+    /// here, so the iterate is encoded once per iteration instead of once
+    /// per device; the receiver cannot distinguish this from [`Transport::send`].
+    /// Returns bytes written (= `fr.len()`).
+    fn send_frame(&mut self, fr: &[u8]) -> Result<u64>;
     /// Block for the next message; returns it with the bytes read.
     fn recv(&mut self) -> Result<(Msg, u64)>;
     /// Split into `(send half, receive half)`. Each half supports only its
@@ -86,6 +93,12 @@ impl Transport for ChannelTransport {
         let n = bytes.len() as u64;
         tx.send(bytes).map_err(|_| anyhow!("channel peer disconnected"))?;
         Ok(n)
+    }
+
+    fn send_frame(&mut self, fr: &[u8]) -> Result<u64> {
+        let tx = self.tx.as_ref().context("send on a receive-only channel half")?;
+        tx.send(fr.to_vec()).map_err(|_| anyhow!("channel peer disconnected"))?;
+        Ok(fr.len() as u64)
     }
 
     fn recv(&mut self) -> Result<(Msg, u64)> {
@@ -149,6 +162,11 @@ impl Transport for TcpTransport {
         Ok(bytes.len() as u64)
     }
 
+    fn send_frame(&mut self, fr: &[u8]) -> Result<u64> {
+        self.stream.write_all(fr).context("tcp send")?;
+        Ok(fr.len() as u64)
+    }
+
     fn recv(&mut self) -> Result<(Msg, u64)> {
         let (payload, n) = frame::read_frame(&mut self.stream, frame::MAX_PAYLOAD)?;
         Ok((Msg::decode(&payload)?, n))
@@ -197,6 +215,11 @@ impl Transport for UdsTransport {
         let bytes = frame::encode_frame(&msg.encode());
         self.stream.write_all(&bytes).context("uds send")?;
         Ok(bytes.len() as u64)
+    }
+
+    fn send_frame(&mut self, fr: &[u8]) -> Result<u64> {
+        self.stream.write_all(fr).context("uds send")?;
+        Ok(fr.len() as u64)
     }
 
     fn recv(&mut self) -> Result<(Msg, u64)> {
@@ -347,6 +370,21 @@ mod tests {
         // and the reverse direction
         b.send(&Msg::Shutdown).unwrap();
         assert_eq!(a.recv().unwrap().0, Msg::Shutdown);
+    }
+
+    #[test]
+    fn send_frame_is_indistinguishable_from_send() {
+        let (mut a, mut b) = ChannelTransport::pair();
+        let msg = Msg::Broadcast { iter: 9, x: vec![0.5, -1.0], subsets: vec![3] };
+        let f = frame::encode_frame(&msg.encode());
+        let sent = a.send_frame(&f).unwrap();
+        let (got, read) = b.recv().unwrap();
+        assert_eq!(got, msg);
+        assert_eq!(sent, f.len() as u64);
+        assert_eq!(read, sent);
+        // byte accounting matches the encode-and-send path exactly
+        assert_eq!(a.send(&msg).unwrap(), sent);
+        assert_eq!(b.recv().unwrap().0, msg);
     }
 
     #[test]

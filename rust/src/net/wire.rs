@@ -217,20 +217,18 @@ fn pack_quantized(values: &[f32], levels: u32, norm: f32) -> Option<Vec<u8>> {
     Some(buf)
 }
 
-fn unpack_quantized(dim: usize, levels: u32, norm: f32, packed: &[u8]) -> Vec<f32> {
+fn unpack_quantized_into(out: &mut [f32], levels: u32, norm: f32, packed: &[u8]) {
     let s = levels as f32;
     let lb = level_bits(levels);
     let mut pos = 0usize;
-    let mut out = Vec::with_capacity(dim);
-    for _ in 0..dim {
+    for slot in out.iter_mut() {
         let sign = get_bits(packed, &mut pos, 1) == 1;
         let level = get_bits(packed, &mut pos, lb);
         let sign_f: f32 = if sign { -1.0 } else { 1.0 };
         // same expression (and evaluation order) as Qsgd::compress, so the
         // reconstruction is bit-identical to the sender's dense output
-        out.push(sign_f * level as f32 * norm / s);
+        *slot = sign_f * level as f32 * norm / s;
     }
-    out
 }
 
 // ---------------------------------------------------------------------------
@@ -294,24 +292,42 @@ impl Payload {
 
     /// Reconstruct the dense vector the sender's compressor produced.
     pub fn to_dense(&self) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; self.dim()];
+        self.decode_into(&mut out)?;
+        Ok(out)
+    }
+
+    /// Reconstruct the dense vector directly into a caller-owned slice —
+    /// the zero-copy uplink path: the leader hands each device's row of
+    /// one contiguous gather slab, so decoding allocates nothing. `out`
+    /// must have length [`Payload::dim`]; stale contents are fully
+    /// overwritten (sparse scatters zero-fill first). On error the slice
+    /// contents are unspecified.
+    pub fn decode_into(&self, out: &mut [f32]) -> Result<()> {
+        ensure!(
+            out.len() == self.dim(),
+            "payload dim {} does not match output slice len {}",
+            self.dim(),
+            out.len()
+        );
         match self {
-            Payload::Dense { values } => Ok(values.clone()),
+            Payload::Dense { values } => out.copy_from_slice(values),
             Payload::Sparse { dim, idx, values } => {
                 ensure!(idx.len() == values.len(), "sparse payload index/value mismatch");
                 let dim = *dim as usize;
-                let mut out = vec![0.0f32; dim];
+                out.fill(0.0);
                 for (&j, &v) in idx.iter().zip(values) {
                     ensure!((j as usize) < dim, "sparse index {j} out of range {dim}");
                     out[j as usize] = v;
                 }
-                Ok(out)
             }
             Payload::Quantized { dim, levels, norm, packed } => {
                 ensure!(*levels >= 1, "quantized payload with zero levels");
                 let dim = *dim as usize;
                 if *norm == 0.0 {
                     ensure!(packed.is_empty(), "zero-norm quantized payload carries data");
-                    return Ok(vec![0.0f32; dim]);
+                    out.fill(0.0);
+                    return Ok(());
                 }
                 let need = (dim * (1 + level_bits(*levels))).div_ceil(8);
                 ensure!(
@@ -319,9 +335,10 @@ impl Payload {
                     "quantized payload: {} bytes, need {need}",
                     packed.len()
                 );
-                Ok(unpack_quantized(dim, *levels, *norm, packed))
+                unpack_quantized_into(out, *levels, *norm, packed);
             }
         }
+        Ok(())
     }
 
     /// Exact serialized size of this payload in bytes (tag + body) — the
@@ -687,6 +704,36 @@ impl Msg {
 }
 
 // ---------------------------------------------------------------------------
+// shared x-frame splice
+// ---------------------------------------------------------------------------
+
+/// The device-independent prefix of a `Broadcast` payload: tag, iteration
+/// and the full iterate (`tag 3 | iter u32 | u32 len | len × f32`). The
+/// leader encodes this once per iteration and shares it across all devices;
+/// a per-device [`broadcast_tail`] completes the payload. By construction
+/// `prefix ‖ tail` is byte-identical to
+/// `Msg::Broadcast { iter, x, subsets }.encode()` (pinned by a test below),
+/// so a receiver cannot tell which path produced its frame.
+pub fn broadcast_prefix(iter: u32, x: &[f32]) -> Vec<u8> {
+    let mut w = Writer::with_capacity(1 + 4 + 4 + 4 * x.len());
+    w.u8(3);
+    w.u32(iter);
+    w.f32_slice(x);
+    w.finish()
+}
+
+/// The per-device suffix of a `Broadcast` payload: the resolved subset list
+/// (`u32 len | len × u32`). See [`broadcast_prefix`].
+pub fn broadcast_tail(subsets: &[u32]) -> Vec<u8> {
+    let mut w = Writer::with_capacity(4 + 4 * subsets.len());
+    w.u32(subsets.len() as u32);
+    for &s in subsets {
+        w.u32(s);
+    }
+    w.finish()
+}
+
+// ---------------------------------------------------------------------------
 // config digest
 // ---------------------------------------------------------------------------
 
@@ -836,6 +883,56 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "{}", comp.name());
             }
         }
+    }
+
+    #[test]
+    fn broadcast_splice_parts_concat_to_the_full_encoding() {
+        let cases: [(u32, Vec<f32>, Vec<u32>); 3] = [
+            (0, vec![], vec![]),
+            (7, vec![1.5, -2.25, 0.0], vec![4, 0, 2]),
+            (u32::MAX, vec![f32::MIN_POSITIVE; 17], vec![9]),
+        ];
+        for (iter, x, subsets) in cases {
+            let msg = Msg::Broadcast { iter, x: x.clone(), subsets: subsets.clone() };
+            let mut spliced = broadcast_prefix(iter, &x);
+            spliced.extend_from_slice(&broadcast_tail(&subsets));
+            assert_eq!(spliced, msg.encode(), "iter {iter}");
+        }
+    }
+
+    #[test]
+    fn decode_into_matches_to_dense_over_stale_slabs() {
+        let mut rng = Rng::new(21);
+        let g: Vec<f32> = (0..96).map(|i| ((i as f32) * 0.61).cos() * 3.0).collect();
+        let comps: Vec<Box<dyn Compressor>> = vec![
+            Box::new(Identity),
+            Box::new(RandK::new(7)),
+            Box::new(TopK::new(7)),
+            Box::new(Qsgd::new(16)),
+        ];
+        for comp in &comps {
+            let c = comp.compress(&g, &mut rng);
+            let p = Payload::from_compressed(&c);
+            let dense = p.to_dense().unwrap();
+            // slab row pre-filled with stale garbage: must be fully overwritten
+            let mut row = vec![f32::NAN; p.dim()];
+            p.decode_into(&mut row).unwrap();
+            assert_eq!(
+                row.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                dense.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{}",
+                comp.name()
+            );
+            // wrong-size slab is rejected, not silently truncated
+            let mut bad = vec![0.0f32; p.dim() + 1];
+            assert!(p.decode_into(&mut bad).is_err(), "{}", comp.name());
+        }
+        // zero-norm quantized payload also overwrites stale contents
+        let c = Qsgd::new(4).compress(&[0.0f32; 10], &mut rng);
+        let p = Payload::from_compressed(&c);
+        let mut row = vec![9.0f32; 10];
+        p.decode_into(&mut row).unwrap();
+        assert_eq!(row, vec![0.0f32; 10]);
     }
 
     #[test]

@@ -25,6 +25,15 @@ pub struct TrainTrace {
     pub wire_up_bytes: u64,
     /// downlink (broadcast + handshake) bytes framed on the wire
     pub wire_down_bytes: u64,
+    /// cumulative leader time (ns) spent encoding + writing broadcasts
+    /// (set by the `net` leader; 0 on the central fast path). Wall-clock
+    /// telemetry only: phase timings are never part of trace-equality
+    /// comparisons or the sweep result schema.
+    pub broadcast_ns: u64,
+    /// cumulative leader time (ns) blocked in the uplink gather
+    pub gather_ns: u64,
+    /// cumulative leader time (ns) crafting, compressing and aggregating
+    pub aggregate_ns: u64,
 }
 
 impl TrainTrace {

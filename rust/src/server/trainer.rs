@@ -134,13 +134,16 @@ impl<'a> Trainer<'a> {
             oracle.coded_grads(x0, &subsets, &mut coded)?;
 
             let is_byz = byz_set(cfg, self.rotate_byzantine, rng);
-            let honest_true: Vec<Vec<f32>> = (0..cfg.n_devices)
+            // zero-copy: the honest / Byzantine views borrow straight from
+            // the contiguous `coded` slab — no per-device row copies; owned
+            // storage appears only where a crafted lie genuinely needs it
+            let honest_true: Vec<&[f32]> = (0..cfg.n_devices)
                 .filter(|&i| !is_byz[i])
-                .map(|i| coded.row(i).to_vec())
+                .map(|i| coded.row(i))
                 .collect();
-            let byz_true: Vec<Vec<f32>> = (0..cfg.n_devices)
+            let byz_true: Vec<&[f32]> = (0..cfg.n_devices)
                 .filter(|&i| is_byz[i])
-                .map(|i| coded.row(i).to_vec())
+                .map(|i| coded.row(i))
                 .collect();
 
             // (3) Byzantine crafting (pre-compression, as in §VII-B)
@@ -165,7 +168,7 @@ impl<'a> Trainer<'a> {
                     device_msgs.push(&lies[li]);
                     li += 1;
                 } else {
-                    device_msgs.push(&honest_true[hi]);
+                    device_msgs.push(honest_true[hi]);
                     hi += 1;
                 }
             }
@@ -227,13 +230,13 @@ impl<'a> DracoTrainer<'a> {
             let is_byz = byz_set(cfg, false, rng);
             let true_msgs: Vec<Vec<f32>> =
                 (0..cfg.n_devices).map(|i| scheme.honest_message(i, &grads)).collect();
-            let honest: Vec<Vec<f32>> = (0..cfg.n_devices)
+            let honest: Vec<&[f32]> = (0..cfg.n_devices)
                 .filter(|&i| !is_byz[i])
-                .map(|i| true_msgs[i].clone())
+                .map(|i| true_msgs[i].as_slice())
                 .collect();
-            let byz_true: Vec<Vec<f32>> = (0..cfg.n_devices)
+            let byz_true: Vec<&[f32]> = (0..cfg.n_devices)
                 .filter(|&i| is_byz[i])
-                .map(|i| true_msgs[i].clone())
+                .map(|i| true_msgs[i].as_slice())
                 .collect();
             let lies = if byz_true.is_empty() {
                 Vec::new()

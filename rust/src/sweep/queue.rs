@@ -111,7 +111,7 @@ fn run_job_on(job: &Job, ds: &LinRegDataset, pool: &Pool) -> Result<TrainTrace> 
         leader: LeaderOpts {
             gather_deadline: Some(Duration::from_millis(cfg.net.gather_deadline_ms)),
             device_compression: cfg.net.device_compression,
-            join_deadline: None,
+            ..Default::default()
         },
         stall_prob: job.stall_prob,
         stall_seed: job.run_seed ^ STALL_SEED_SALT,
@@ -202,6 +202,8 @@ pub struct SweepOutcome {
     /// Written only once every job is journaled.
     pub results_path: Option<PathBuf>,
     pub csv_path: Option<PathBuf>,
+    /// Cross-seed summary (`report.csv`), written with the results.
+    pub report_path: Option<PathBuf>,
 }
 
 /// Expand and run a spec against an output directory.
@@ -227,7 +229,7 @@ pub fn run_sweep(
     // spec — remove them up front (they are rewritten below once every
     // job is journaled) so a partial or edited-spec rerun can never leave
     // a previous sweep's output masquerading as current
-    for stale in ["results.jsonl", "results.csv"] {
+    for stale in ["results.jsonl", "results.csv", "report.csv"] {
         let p = out_dir.join(stale);
         if p.exists() {
             std::fs::remove_file(&p).with_context(|| format!("clearing stale {p:?}"))?;
@@ -289,13 +291,14 @@ pub fn run_sweep(
         done.insert(id, line);
     }
     let pending_after = jobs.len() - done.len();
-    let (results_path, csv_path) = if pending_after == 0 {
+    let (results_path, csv_path, report_path) = if pending_after == 0 {
         (
             Some(sink::write_results(out_dir, &jobs, &done)?),
             Some(sink::write_pivot_csv(out_dir, &jobs, &done)?),
+            Some(sink::write_report(out_dir, &jobs, &done)?),
         )
     } else {
-        (None, None)
+        (None, None, None)
     };
     Ok(SweepOutcome {
         total: jobs.len(),
@@ -305,5 +308,6 @@ pub fn run_sweep(
         manifest_path,
         results_path,
         csv_path,
+        report_path,
     })
 }

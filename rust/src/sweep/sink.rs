@@ -22,7 +22,10 @@
 //! strings, since JSON has no literal for them.
 //!
 //! `results.csv` is the pivot for plotting: one row per job — id, label,
-//! one column per grid axis, and the headline metrics.
+//! one column per grid axis, and the headline metrics. `report.csv` is
+//! the cross-seed summary on top of it: one row per non-`seed` grid
+//! coordinate with the mean ± population std of the final loss over the
+//! `seed` axis (see [`write_report`]).
 
 use crate::config::CompressionKind;
 use crate::server::TrainTrace;
@@ -299,6 +302,67 @@ pub fn write_pivot_csv(
     Ok(path)
 }
 
+/// Write `report.csv`: the cross-seed summary. One row per non-`seed`
+/// grid coordinate, in spec order — the coordinate's axis values, the
+/// number of runs aggregated, and the mean ± population std of
+/// `final_loss` over the `seed` axis. A spec without a `seed` axis
+/// degenerates to one row per coordinate with `runs = 1` and `std = 0`;
+/// a spec whose only axis is `seed` produces a single all-runs row.
+/// Non-finite losses poison their group's mean/std to `NaN`, which is the
+/// honest answer for a diverged arm.
+pub fn write_report(
+    out_dir: &Path,
+    jobs: &[Job],
+    records: &BTreeMap<String, String>,
+) -> Result<PathBuf> {
+    let path = out_dir.join("report.csv");
+    let axis_keys: Vec<&'static str> = jobs
+        .first()
+        .map(|j| j.axes.iter().map(|(k, _)| *k).filter(|&k| k != "seed").collect())
+        .unwrap_or_default();
+    // group key (non-seed axis values, spec order) → losses, first-seen order
+    let mut order: Vec<(Vec<String>, Vec<f64>)> = Vec::new();
+    let mut index: BTreeMap<Vec<String>, usize> = BTreeMap::new();
+    for job in jobs {
+        let line = records
+            .get(&job.id)
+            .with_context(|| format!("job {} missing from the journal", job.id))?;
+        let rec = json::parse(line).map_err(|e| anyhow::anyhow!("re-parsing record: {e}"))?;
+        let loss = match rec.get("final_loss") {
+            Some(Json::Num(x)) => *x,
+            Some(Json::Str(s)) => s.parse().unwrap_or(f64::NAN), // non-finite echo
+            _ => f64::NAN,
+        };
+        let key: Vec<String> =
+            job.axes.iter().filter(|(k, _)| *k != "seed").map(|(_, v)| v.clone()).collect();
+        match index.get(&key) {
+            Some(&i) => order[i].1.push(loss),
+            None => {
+                index.insert(key.clone(), order.len());
+                order.push((key, vec![loss]));
+            }
+        }
+    }
+    let mut body = String::new();
+    for k in &axis_keys {
+        body.push_str(k);
+        body.push(',');
+    }
+    body.push_str("runs,final_loss_mean,final_loss_std\n");
+    for (key, losses) in &order {
+        for v in key {
+            body.push_str(&crate::util::csv::escape(v));
+            body.push(',');
+        }
+        let n = losses.len() as f64;
+        let mean = losses.iter().sum::<f64>() / n;
+        let std = (losses.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n).sqrt();
+        body.push_str(&format!("{},{mean},{std}\n", losses.len()));
+    }
+    write_atomic(&path, &body)?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -372,6 +436,43 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let p = write_pivot_csv(&dir, &[j1, j2], &records).unwrap();
         assert_eq!(std::fs::read_to_string(p).unwrap().lines().count(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn report_groups_across_the_seed_axis() {
+        // two aggregator coordinates × two seeds
+        let mut jobs = Vec::new();
+        let mut records = BTreeMap::new();
+        let mut want_mean = Vec::new();
+        for (a, agg) in ["krum", "cwtm"].iter().enumerate() {
+            for (s, seed) in ["1", "2"].iter().enumerate() {
+                let mut v = Variant {
+                    label: format!("{agg}-s{seed}"),
+                    cfg: TrainConfig::default(),
+                    draco_r: None,
+                };
+                v.cfg.iters += a * 100 + s; // distinct job ids
+                let mut j = Job::from_variant(&v, 1 + s as u64, 2 + s as u64);
+                j.axes = vec![("aggregator", agg.to_string()), ("seed", seed.to_string())];
+                let mut t = trace();
+                t.final_loss = (a * 10 + s) as f64; // group means: 0.5, 10.5
+                records.insert(j.id.clone(), job_record(&j, &t).to_string());
+                jobs.push(j);
+            }
+            want_mean.push(a as f64 * 10.0 + 0.5);
+        }
+        let dir = std::env::temp_dir().join(format!("lad_report_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = write_report(&dir, &jobs, &records).unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines[0], "aggregator,runs,final_loss_mean,final_loss_std");
+        assert_eq!(lines.len(), 3, "{body}");
+        // spec order preserved, 2 runs per coordinate, population std of
+        // {x, x+1} is 0.5
+        assert_eq!(lines[1], format!("krum,2,{},0.5", want_mean[0]));
+        assert_eq!(lines[2], format!("cwtm,2,{},0.5", want_mean[1]));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -214,6 +214,162 @@ fn fuzzed_packed_storage_matches_a_full_matrix_reference() {
 }
 
 #[test]
+fn fuzzed_mixed_gram_matches_a_full_matrix_reference() {
+    // The NNM → inner-Krum Gram-reuse path: `PairwiseDistances::mixed`
+    // (packed W·G·Wᵀ, the two-pass U = W·G then H = U·Wᵀ evaluation) must
+    // agree bit-for-bit with a naive full-matrix reference built from the
+    // same recovered-Gram expression — and be pool-width invariant.
+    forall(
+        10,
+        0x316D,
+        |rng| {
+            let n = gen::usize_in(rng, 2, 40);
+            let q = gen::usize_in(rng, 1, 96);
+            let msgs = gen::vec_family(rng, n, q, 3.0);
+            let m = gen::usize_in(rng, 1, n);
+            let sets: Vec<Vec<usize>> = (0..m)
+                .map(|_| {
+                    let k = gen::usize_in(rng, 1, n);
+                    let mut s: Vec<usize> = (0..k).map(|_| rng.below(n)).collect();
+                    s.sort_unstable();
+                    s.dedup();
+                    s
+                })
+                .collect();
+            (msgs, sets)
+        },
+        |(msgs, sets)| {
+            let n = msgs.len();
+            let m = sets.len();
+            let pd = PairwiseDistances::compute(msgs, &Pool::serial());
+            let mixed = pd.mixed(sets, &Pool::serial());
+            for pool in [Pool::new(4), Pool::scoped(Parallelism::new(3))] {
+                let par = pd.mixed(sets, &pool);
+                for i in 0..m {
+                    ensure(mixed.row(i).to_vec() == par.row(i).to_vec(), || {
+                        format!("mixed row {i} differs under {pool:?}")
+                    })?;
+                }
+            }
+            // naive reference: full Gram recovery, full U = W·G, full H,
+            // summed in the same (ascending-set) order
+            let norms = pd.norms();
+            let g =
+                |a: usize, b: usize| -> f64 { (norms[a] + norms[b] - pd.get(a, b)) / 2.0 };
+            let mut u = vec![vec![0.0f64; n]; m];
+            for (i, set) in sets.iter().enumerate() {
+                for &a in set {
+                    for b in 0..n {
+                        u[i][b] += g(a, b);
+                    }
+                }
+            }
+            let h = |i: usize, j: usize| -> f64 {
+                let mut s = 0.0f64;
+                for &b in &sets[j] {
+                    s += u[i][b];
+                }
+                s / (sets[i].len() as f64 * sets[j].len() as f64)
+            };
+            let hn: Vec<f64> = (0..m).map(|i| h(i, i).max(0.0)).collect();
+            for i in 0..m {
+                ensure(mixed.norms()[i] == hn[i], || format!("mixed norm {i}"))?;
+                for j in 0..m {
+                    let want =
+                        if i == j { 0.0 } else { (hn[i] + hn[j] - 2.0 * h(i, j)).max(0.0) };
+                    ensure(mixed.get(i, j) == want, || {
+                        format!("mixed({i},{j}): {} vs naive {want}", mixed.get(i, j))
+                    })?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fuzzed_pipelined_cluster_traces_match_phase_serial() {
+    // The tentpole bit-identity gate: the pipelined leader (shared x-frame
+    // broadcast, staged t+1 assignment draw, slab decode) must produce
+    // exactly the trace of the legacy phase-serial leader — across thread
+    // counts, compressors (incl. ef-*), compression sites, and the
+    // deadline-mode gather loop — including wire byte accounting.
+    use lad::net::LeaderOpts;
+    use lad::server::cluster::{run_cluster_with, ClusterOpts};
+    use std::time::Duration;
+
+    let run = |case: &Case, threads: usize, seed: u64, pipeline: bool, deadline: bool,
+               dcomp: bool|
+     -> TrainTrace {
+        let cfg = cfg_of(case, threads);
+        let mut rng = Rng::new(seed);
+        let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng);
+        let pool = Pool::new(threads);
+        let agg = lad::aggregation::from_config_pooled(&cfg, &pool);
+        let atk = lad::attack::from_kind(cfg.attack);
+        let comp = lad::compress::from_kind(cfg.compression);
+        let opts = ClusterOpts {
+            leader: LeaderOpts {
+                // generous deadline: exercises the timeout-mode gather loop
+                // without any miss actually firing, so traces stay exact
+                gather_deadline: deadline.then(|| Duration::from_secs(120)),
+                device_compression: dcomp,
+                pipeline,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut x0 = vec![0.0f32; cfg.dim];
+        run_cluster_with(
+            &cfg,
+            &ds,
+            agg.as_ref(),
+            atk.as_ref(),
+            comp.as_ref(),
+            &mut x0,
+            "fuzz-pipeline",
+            &mut Rng::new(seed ^ 0xF),
+            &pool,
+            &opts,
+        )
+        .expect("cluster fuzz case failed to run")
+    };
+    forall(6, 0x919E, gen_case, |case| {
+        let seed = 0xC1A5 ^ ((case.n as u64) << 10) ^ case.q as u64;
+        for dcomp in [false, true] {
+            let base = run(case, 1, seed, false, false, dcomp);
+            for (threads, pipeline, deadline) in [
+                (1, true, false),               // pipelined, serial pool
+                (case.threads, true, false),    // pipelined, pooled sends
+                (case.threads, false, false),   // phase-serial, pooled
+                (1, true, true),                // pipelined under a deadline
+            ] {
+                let t = run(case, threads, seed, pipeline, deadline, dcomp);
+                traces_equal(&base, &t).map_err(|e| {
+                    format!("{e} (threads={threads} pipeline={pipeline} deadline={deadline} dcomp={dcomp})")
+                })?;
+                ensure(t.anomalies == base.anomalies, || "anomaly counts differ".into())?;
+                ensure(
+                    t.wire_up_bytes == base.wire_up_bytes
+                        && t.wire_down_bytes == base.wire_down_bytes,
+                    || {
+                        format!(
+                            "wire bytes differ: up {} vs {}, down {} vs {} \
+                             (pipeline={pipeline} deadline={deadline} dcomp={dcomp})",
+                            t.wire_up_bytes,
+                            base.wire_up_bytes,
+                            t.wire_down_bytes,
+                            base.wire_down_bytes
+                        )
+                    },
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn fuzzed_kernel_tiers_are_bit_identical() {
     // every tier the CPU can run (scalar always; SSE2 + AVX2 under
     // --features simd on capable hosts) must agree with the scalar

@@ -224,6 +224,63 @@ fn serve_reclaims_slot_from_silent_connector() {
     assert_trace_identical(&tn, &tc);
 }
 
+#[test]
+fn pipelined_shared_frame_matches_per_device_encoding() {
+    // The shared x-frame broadcast (pipeline: true — one encoded iterate
+    // prefix per iteration, per-device assignment tails spliced on the
+    // pool, staged assignment for t+1) must be indistinguishable from the
+    // legacy per-device `Msg::Broadcast` encoding: same trace, same model,
+    // and — because `broadcast_prefix ‖ broadcast_tail` is byte-identical
+    // to `Msg::Broadcast.encode()` — the same measured wire bytes in both
+    // directions.
+    let c = cfg(8, 6, 3, CompressionKind::Qsgd { levels: 16 });
+    let mut rng = Rng::new(971);
+    let ds = LinRegDataset::generate(c.n_devices, c.dim, c.sigma_h, &mut rng);
+    let comp = Qsgd::new(16);
+    let run_with = |pipeline: bool| {
+        let cwtm = Cwtm::new(0.1);
+        let flip = SignFlip { coeff: -2.0 };
+        std::thread::scope(|scope| {
+            let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(c.n_devices);
+            for i in 0..c.n_devices {
+                let (leader_half, worker_half) = ChannelTransport::pair();
+                links.push(Box::new(leader_half));
+                let dsr = &ds;
+                scope.spawn(move || {
+                    let _ = run_worker(Box::new(worker_half), i, Some(dsr), None);
+                });
+            }
+            let leader = Leader {
+                cfg: &c,
+                ds: &ds,
+                agg: &cwtm,
+                attack: &flip,
+                comp: &comp,
+                opts: LeaderOpts { pipeline, ..Default::default() },
+                pool: Pool::new(4),
+                send_dataset: false,
+            };
+            let mut x0 = vec![0.0f32; c.dim];
+            let tr = leader.run(links, &mut x0, "pipeline", &mut Rng::new(972)).unwrap();
+            (tr, x0)
+        })
+    };
+    let (tp, xp) = run_with(true);
+    let (ts, xs) = run_with(false);
+    assert_eq!(xp, xs, "model diverged between pipelined and phase-serial paths");
+    assert_eq!(tp.loss, ts.loss, "loss trace diverged");
+    assert_eq!(tp.grad_update_norm, ts.grad_update_norm, "update norms diverged");
+    assert_eq!(tp.bits, ts.bits, "bit accounting diverged");
+    assert_eq!(tp.final_loss, ts.final_loss);
+    assert_eq!(tp.anomalies, ts.anomalies);
+    assert_eq!(tp.wire_down_bytes, ts.wire_down_bytes, "downlink framing diverged");
+    assert_eq!(tp.wire_up_bytes, ts.wire_up_bytes, "uplink framing diverged");
+    // and both legs still match the central fast path
+    let (tc, xc) = central(&c, &ds, &comp, 972);
+    assert_eq!(xp, xc, "model diverged from the central fast path");
+    assert_trace_identical(&tp, &tc);
+}
+
 /// A worker that serves the first `serve` iterations, then stalls: keeps
 /// its connection open but never uploads again (crash-Byzantine).
 fn stalling_worker(mut link: Box<dyn Transport>, device: usize, serve: usize) {
