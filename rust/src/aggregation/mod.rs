@@ -118,6 +118,16 @@ pub trait Aggregator: Send + Sync {
     fn wants_distances(&self) -> bool {
         false
     }
+    /// The rule's cross-iteration state, if it carries any — one buffer
+    /// per device, ready for a checkpoint's momentum section. Stateless
+    /// rules (everything except [`MomentumFilter`]) return `None`.
+    fn state_snapshot(&self) -> Option<Vec<Vec<f32>>> {
+        None
+    }
+    /// Restore cross-iteration state captured by
+    /// [`Aggregator::state_snapshot`]. A no-op for stateless rules; a
+    /// stateful rule resumes bit-identically from the snapshot.
+    fn state_restore(&self, _bufs: Vec<Vec<f32>>) {}
 }
 
 pub use cwtm::Cwtm;

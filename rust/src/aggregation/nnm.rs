@@ -145,6 +145,16 @@ impl Aggregator for Nnm {
     fn name(&self) -> String {
         format!("{}-nnm", self.inner.name())
     }
+
+    // NNM itself is stateless — only the wrapped rule may carry momentum,
+    // so checkpoint state flows straight through to it.
+    fn state_snapshot(&self) -> Option<Vec<Vec<f32>>> {
+        self.inner.state_snapshot()
+    }
+
+    fn state_restore(&self, bufs: Vec<Vec<f32>>) {
+        self.inner.state_restore(bufs);
+    }
 }
 
 #[cfg(test)]

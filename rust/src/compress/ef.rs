@@ -106,6 +106,23 @@ impl EfState {
         self.residuals[device].iter_mut().for_each(|x| *x = 0.0);
     }
 
+    /// Clone every residual row — the leader-side mirror a checkpoint
+    /// stores so a warm restart resumes EF memory bit-identically.
+    pub fn snapshot(&self) -> Vec<Vec<f32>> {
+        self.residuals.clone()
+    }
+
+    /// Replace all residual rows from a checkpoint snapshot. The snapshot
+    /// must match this state's shape — resuming into a different run
+    /// geometry is a bug, not a recoverable condition.
+    pub fn restore(&mut self, rows: Vec<Vec<f32>>) {
+        assert_eq!(rows.len(), self.residuals.len(), "EF snapshot device count mismatch");
+        for (cur, new) in self.residuals.iter_mut().zip(rows) {
+            assert_eq!(new.len(), cur.len(), "EF snapshot dim mismatch");
+            *cur = new;
+        }
+    }
+
     /// The EF input aᵢ = eᵢ + gᵢ (residual clone + `axpy(1.0, g, ·)`,
     /// running on the active kernel tier).
     pub fn input(&self, device: usize, g: &[f32]) -> Vec<f32> {
@@ -230,6 +247,27 @@ mod tests {
             assert_eq!(st_a, st_b, "round {round}: residuals diverged");
             assert!(bits > 0);
         }
+    }
+
+    #[test]
+    fn snapshot_restore_round_trips_bitwise() {
+        let mut st = EfState::new(3, 5);
+        let mut rng = Rng::new(6);
+        let mut gen = Rng::new(7);
+        for dev in 0..3 {
+            let g = gen.gauss_vec(5);
+            st.step(dev, &g, &TopK::new(2), &mut rng);
+        }
+        let snap = st.snapshot();
+        let mut fresh = EfState::new(3, 5);
+        fresh.restore(snap.clone());
+        assert_eq!(st, fresh, "restored residuals differ bitwise");
+        // a retired-then-rejoined device's zeroed residual survives too
+        st.reset(1);
+        let snap = st.snapshot();
+        assert!(snap[1].iter().all(|&e| e.to_bits() == 0));
+        fresh.restore(snap);
+        assert_eq!(st, fresh);
     }
 
     #[test]

@@ -43,8 +43,10 @@ SUBCOMMANDS
   e2e               transformer e2e via PJRT artifacts     [--iters T --d D]
   byz-sweep         final loss vs Byzantine count ablation [--d D --iters T --threads W]
   sweep             declarative scenario sweep (TOML grid over attack x rule x
-                    compressor x f x d x sigma_h x stall_prob x deadline x seed)
-                    --spec FILE | --preset partial-participation|attack-zoo|ef-vs-coding
+                    compressor x f x d x sigma_h x stall_prob x deadline x
+                    leader_kill_iter x worker_churn x seed)
+                    --spec FILE | --preset partial-participation|attack-zoo|
+                                           ef-vs-coding|elasticity
                     [--out DIR] [--resume] [--limit N] [--threads W]
                     journals each job to DIR/manifest.jsonl; --resume skips
                     finished jobs and the final results.jsonl/results.csv are
@@ -54,9 +56,18 @@ SUBCOMMANDS
   node-leader       serve one run to remote workers over TCP/UDS
                     [train flags or --config FILE] --listen tcp://HOST:PORT|uds:PATH
                     [--gather-deadline-ms MS] [--join-deadline-ms MS]
-                    [--device-compression] [--out DIR]
+                    [--device-compression] [--rotate-byzantine] [--out DIR]
+                    [--checkpoint-every K] [--checkpoint-path FILE]
+                    [--halt-at-iter K]  write a checkpoint after iteration K and
+                                        exit without Shutdown (failover drill)
+                    [--resume-from FILE] warm-restart from a checkpoint: workers
+                                        rejoin by device id; the finished trace
+                                        is bit-identical to an unkilled run
   node-worker       join a leader as one device
                     --connect tcp://HOST:PORT|uds:PATH --device I [--config FILE]
+                    [--reconnect-addr A] [--reconnect-attempts N]
+                    [--reconnect-backoff-ms MS]  redial A after a lost
+                                        connection instead of dying (failover)
   artifacts-check   load artifacts, compare vs native oracle
   help              print this text
 
@@ -320,6 +331,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_node_leader(args: &Args) -> Result<()> {
+    use lad::server::Checkpoint;
     use lad::util::parallel::Pool;
     let cfg = cfg_from_args(args)?;
     let addr = args.get_str("listen", &cfg.net.addr);
@@ -327,13 +339,27 @@ fn cmd_node_leader(args: &Args) -> Result<()> {
     let join_ms = args.get_u64("join-deadline-ms", cfg.net.join_deadline_ms)?;
     let device_compression =
         args.has_flag("device-compression") || cfg.net.device_compression;
+    let rotate_byzantine = args.has_flag("rotate-byzantine");
     let out_dir = args.get_str("out", "results");
+    let checkpoint_every = args.get_u64("checkpoint-every", 0)?;
+    let halt_after = args
+        .get("halt-at-iter")
+        .map(|s| s.parse::<u64>().context("--halt-at-iter must be an integer"))
+        .transpose()?;
+    let mut checkpoint_path =
+        args.get("checkpoint-path").map(std::path::PathBuf::from);
+    if checkpoint_path.is_none() && (checkpoint_every > 0 || halt_after.is_some()) {
+        checkpoint_path = Some(std::path::PathBuf::from(format!("{out_dir}/run.ckpt")));
+    }
+    let resume_from = args.get("resume-from").map(str::to_string);
     args.reject_unknown()?;
 
     // same dataset/run seeding as `lad train`, so the node trace is
     // directly comparable to the central one
     let mut data_rng = Rng::new(cfg.seed);
     let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut data_rng);
+    // checkpoints may land under --out before the trace does
+    std::fs::create_dir_all(&out_dir)?;
     let listener = net::NetListener::bind(&addr)?;
     println!(
         "leader listening on {} — waiting for {} workers (digest {:#018x})",
@@ -357,6 +383,10 @@ fn cmd_node_leader(args: &Args) -> Result<()> {
             device_compression,
             join_deadline: (join_ms > 0)
                 .then(|| std::time::Duration::from_millis(join_ms)),
+            rotate_byzantine,
+            checkpoint_every,
+            checkpoint_path,
+            halt_after,
             ..Default::default()
         },
         pool,
@@ -365,9 +395,18 @@ fn cmd_node_leader(args: &Args) -> Result<()> {
     // serve() owns the accept loop: a connection that never sends a valid
     // Join is dropped after --join-deadline-ms and its slot reclaimed
     let mut x0 = vec![0.0f32; cfg.dim];
-    let trace = leader.serve(&listener, &mut x0, "node-leader", &mut Rng::new(cfg.seed ^ 0x7A17))?;
+    let trace = match resume_from {
+        Some(path) => {
+            let ckpt = Checkpoint::load(&path)
+                .with_context(|| format!("loading checkpoint {path}"))?;
+            println!("resuming from {path} at iteration {}", ckpt.iter);
+            leader.serve_resume(&listener, &ckpt, &mut x0, "node-leader")?
+        }
+        None => {
+            leader.serve(&listener, &mut x0, "node-leader", &mut Rng::new(cfg.seed ^ 0x7A17))?
+        }
+    };
     println!("{}", trace.summary());
-    std::fs::create_dir_all(&out_dir)?;
     let path = format!("{out_dir}/node_trace.csv");
     trace.save_csv(&path)?;
     println!("trace written to {path}");
@@ -385,13 +424,22 @@ fn cmd_node_worker(args: &Args) -> Result<()> {
     let default_addr =
         local_cfg.map(|c| c.net.addr).unwrap_or_else(|| TrainConfig::default().net.addr);
     let addr = args.get_str("connect", &default_addr);
+    let reconnect_addr = args.get("reconnect-addr").map(str::to_string);
+    let reconnect_attempts = args.get_usize("reconnect-attempts", 8)? as u32;
+    let backoff_ms = args.get_u64("reconnect-backoff-ms", 250)?;
     args.reject_unknown()?;
     println!("worker {device} connecting to {addr}");
     let link = net::connect(&addr)?;
-    let report = net::run_worker(link, device, None, local_digest)?;
+    let wopts = net::WorkerOpts {
+        reconnect_addr,
+        reconnect_attempts,
+        reconnect_backoff: std::time::Duration::from_millis(backoff_ms),
+        ..Default::default()
+    };
+    let report = net::run_worker_opts(link, device, None, local_digest, &wopts)?;
     println!(
-        "worker {} done: {} iterations, {} B up, {} B down",
-        report.device, report.iters, report.up_bytes, report.down_bytes
+        "worker {} done: {} iterations, {} B up, {} B down, {} reconnect(s)",
+        report.device, report.iters, report.up_bytes, report.down_bytes, report.reconnects
     );
     Ok(())
 }

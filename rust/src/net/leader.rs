@@ -20,41 +20,71 @@
 //! tag. Without a deadline (the default, and the trace-parity mode) the
 //! leader waits for every device, and a disconnect is an error.
 //!
-//! **Join deadline.** With [`LeaderOpts::join_deadline`] set, a
-//! connection that goes silent before completing a valid `Join` is
-//! dropped after the deadline instead of blocking startup forever;
-//! under [`Leader::serve`] (which owns the accept loop) the device slot
-//! is then reclaimed by the next connection, so a stray connector
-//! cannot permanently occupy one of the N slots. The deadline is
-//! per-read, not per-handshake — a deliberate byte-trickling adversary
-//! still needs concurrent handshakes to defeat (ROADMAP).
+//! **Join handshakes.** [`Leader::serve`] owns the accept loop and runs
+//! one short-lived thread per accepted connection for the `Join`
+//! handshake, so a slow or silent connector can never block other
+//! devices from joining. [`LeaderOpts::join_deadline`] is an overall
+//! per-handshake wall-clock budget: it bounds the whole handshake (the
+//! read timeout is re-checked against elapsed time once the `Join`
+//! lands), so a deliberate byte-at-a-time trickler is cut off at the
+//! deadline too. A connection that fails validation — bad version,
+//! out-of-range device id, config digest mismatch, or a claimed slot —
+//! is dropped with a log line and its slot stays open.
+//!
+//! **Elastic membership.** Three mechanisms compose so the roster can
+//! change mid-run without disturbing the incumbents' RNG streams:
+//!
+//! * *Mid-run join*: the accept loop keeps running after the roster
+//!   fills, and a late `Join` naming a **retired** slot is re-admitted.
+//!   The rejoin `Hello` ships the dataset shard (serve mode), the current
+//!   iterate, the iteration counter, and a fresh compression-stream seed
+//!   derived from the slot's base seed and a per-slot rejoin epoch
+//!   ([`rejoin_seed`] — a splitmix64 finalizer, never a run-RNG draw, so
+//!   no-churn traces stay bit-identical). The slot's EF residual and
+//!   miss streak reset; the device serves from the next broadcast.
+//! * *Checkpointed warm restart*: [`LeaderOpts::checkpoint_every`] > 0
+//!   writes an atomic (tmp + rename) [`Checkpoint`] every K iterations
+//!   carrying the run-RNG cursor, the per-device compression-stream
+//!   cursors, the EF residual mirror, the aggregator's momentum state,
+//!   the roster bitmap and the trace so far. [`Leader::resume`] /
+//!   [`Leader::serve_resume`] restart from it; the cut sits after
+//!   craft(t) and before the staged draw(t+1), so resumed runs consume
+//!   the run RNG in exactly the uninterrupted order whether or not the
+//!   pipeline is on. Resume handshake bytes are *not* counted, so the
+//!   final trace's wire totals are bit-identical to an uninterrupted
+//!   run's (leader-side compression; under device-side compression a
+//!   reconnecting worker must carry its own live stream —
+//!   `reset_stream: false` — which the failover drill exercises).
+//! * *Role rotation*: [`LeaderOpts::rotate_byzantine`] redraws the
+//!   Byzantine identity set each iteration (one run-RNG draw, same
+//!   order as the central trainer) and announces each device's role in
+//!   its `Broadcast`. Under device-side compression the broadcast also
+//!   hands the leader's mirror cursor to honest-role devices and the
+//!   `Upload` echoes the post-compression cursor back, keeping every
+//!   stream consumed exactly once per iteration regardless of who
+//!   compressed. Rotation + device compression + error feedback is
+//!   rejected at startup (a residual is tied to an honest stream).
 //!
 //! **Determinism.** With every device live, traces are bit-identical to
 //! `Trainer::run`'s central fast path: the leader consumes the run RNG in
-//! the same order (assignment, then attack crafting), per-device
-//! compression randomness comes from the same pre-split streams
-//! (`Rng::split_seeds` — honest devices consume their stream on-device
-//! under device-side compression, the leader consumes the Byzantine
-//! streams when compressing the crafted lies), and the wire codec
-//! reconstructs every message bit-exactly. Under device-side compression
-//! the attack context sees the *post-compression* honest reconstructions
-//! (all a device-side adversary could see); omniscient attacks that read
-//! `ctx.honest` therefore match the central path only under leader-side
-//! compression or the Identity operator.
+//! the same order (assignment, then Byzantine identities, then attack
+//! crafting — fixed identities consume nothing), per-device compression
+//! randomness comes from the same pre-split streams (`Rng::split_seeds`),
+//! messages enter the aggregation family in device-id order, and the wire
+//! codec reconstructs every message bit-exactly.
 //!
 //! **Pipeline.** By default ([`LeaderOpts::pipeline`]) the leader runs the
 //! iteration as a software pipeline: the Q-sized iterate section of the
 //! `Broadcast` is encoded **once** per iteration
 //! ([`super::wire::broadcast_prefix`]) and each device's frame splices its
-//! tiny subset tail on ([`super::wire::broadcast_tail`] +
-//! [`super::frame::encode_frame_parts`]), with frame
-//! assembly and the socket writes fanned out on [`Leader::pool`]; uplinks
-//! decode straight into a contiguous per-device slab
-//! ([`super::wire::Payload::decode_into`], no per-device `Vec`); and the
-//! next iteration's assignment + subset tails are drawn into a staging
-//! buffer while the current iteration is still aggregating. The staged draw
-//! sits **after** the current iteration's attack craft, so the run RNG sees
-//! `draw(0), craft(0), draw(1), craft(1), …` — exactly the phase-serial
+//! tiny subset/role/cursor tail on ([`super::wire::broadcast_tail`] +
+//! [`super::frame::encode_frame_parts`]), with frame assembly and the
+//! socket writes fanned out on [`Leader::pool`]; uplinks decode straight
+//! into a contiguous per-device slab; and the next iteration's assignment,
+//! identity set and subset tails are drawn into a staging buffer while the
+//! current iteration is still aggregating. The staged draw sits **after**
+//! the current iteration's attack craft, so the run RNG sees
+//! `draw(0), byz(0), craft(0), draw(1), …` — exactly the phase-serial
 //! order — and every byte on the wire is identical to the per-device
 //! encoding (`pipeline: false`). Both invariants are pinned by
 //! `tests/fuzz_determinism.rs` and `tests/net_cluster.rs`.
@@ -63,15 +93,15 @@
 //! an [`EfState`] mirror: under leader-side compression it holds every
 //! device's residual; under device-side compression honest workers hold
 //! their own rows (`net::worker`) and the leader steps only the Byzantine
-//! rows when compressing the crafted lies — so full-participation runs
-//! stay bit-identical to `Trainer::run`. Residual-reset semantics, pinned
-//! by `tests/net_cluster.rs`: a device that merely misses a gather
+//! rows when compressing the crafted lies. Residual-reset semantics,
+//! pinned by `tests/net_cluster.rs`: a device that merely misses a gather
 //! deadline keeps its residual (mirroring its untouched RNG stream), but
-//! a **retired** device's residual is zeroed the moment it is dropped, so
-//! a slot can never replay stale memory.
+//! a **retired** device's residual is zeroed the moment it is dropped —
+//! and a rejoin starts from a zero residual — so a slot can never replay
+//! stale memory.
 
 use super::frame::encode_frame_parts;
-use super::transport::Transport;
+use super::transport::{NetListener, Transport};
 use super::wire::{
     broadcast_prefix, broadcast_tail, config_digest, DatasetBlock, Msg, WIRE_VERSION,
 };
@@ -79,15 +109,19 @@ use crate::aggregation::Aggregator;
 use crate::attack::{Attack, AttackContext};
 use crate::coding::{Assignment, TaskMatrix};
 use crate::compress::{compress_batch, compress_batch_ef, Compressor, EfState};
-use crate::config::TrainConfig;
+use crate::config::{CompressionKind, TrainConfig};
 use crate::data::linreg::LinRegDataset;
+use crate::server::checkpoint::{Checkpoint, RosterEntry, TraceBlock};
 use crate::server::metrics::TrainTrace;
+use crate::server::trainer::byz_set;
 use crate::util::math::norm;
 use crate::util::parallel::Pool;
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, RngState};
 use crate::util::timer::Timer;
 use crate::Result;
-use anyhow::{bail, ensure, Context};
+use anyhow::{anyhow, bail, ensure, Context};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -96,6 +130,43 @@ use std::time::{Duration, Instant};
 /// total, not one per remaining iteration — and its broadcast queue stops
 /// growing once it is dead.
 pub const MISS_RETIRE_STREAK: usize = 3;
+
+/// Salt folded into a slot's base compression seed when deriving
+/// rejoin-epoch seeds — see [`rejoin_seed`].
+const REJOIN_SEED_SALT: u64 = 0xE1A5_71C0_5EED_0001;
+
+/// Fresh compression-stream seed for rejoin epoch `epoch` of the slot
+/// whose base seed is `base`: a splitmix64 finalizer over the pair, so it
+/// is deterministic, disjoint across epochs, and — crucially — consumes
+/// nothing from the run RNG (no-churn traces stay bit-identical).
+fn rejoin_seed(base: u64, epoch: u64) -> u64 {
+    let mut z = base ^ REJOIN_SEED_SALT ^ epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One reader-thread event: `(device, rejoin_epoch, payload)`; a `None`
+/// payload means the connection died. The epoch tag lets the gather loop
+/// discard ghost events from a connection that a rejoin has since
+/// replaced (the old reader thread may outlive its slot).
+type RxEvent = (usize, u64, Option<(Msg, u64)>);
+
+/// A validated mid-run `Join` waiting for admission into a retired slot.
+/// The `Join` frame has **already been consumed** from `link` by whoever
+/// produced the request (the serve accept loop's handshake thread, or an
+/// in-process churn harness).
+pub struct RejoinRequest {
+    /// The slot the connector asked for.
+    pub device: usize,
+    /// Earliest iteration at which the leader may activate the slot
+    /// (0 = as soon as it is free) — lets tests pin churn timing.
+    pub not_before: u64,
+    /// Bytes of the already-consumed `Join` frame (uplink accounting).
+    pub join_bytes: u64,
+    /// The connection, positioned just after its `Join`.
+    pub link: Box<dyn Transport>,
+}
 
 /// Retire a device mid-run (deadline mode only): it is never broadcast to
 /// again, its EF residual (when error feedback is active) is zeroed so the
@@ -131,27 +202,35 @@ pub struct LeaderOpts {
     /// `false` reproduces the leader-side compression of the historical
     /// cluster simulation (and keeps omniscient attacks exact).
     pub device_compression: bool,
-    /// Per-link Join-handshake budget. `None` waits forever (the
-    /// trusting default for pre-connected in-process links). With a
-    /// deadline set, a connection that goes **silent** for this long
-    /// before completing a valid `Join` is dropped — and under
-    /// [`Leader::serve`] its device slot is reclaimed by the accept
-    /// loop, so a stray connection cannot wedge startup (ROADMAP
-    /// transport-hardening item). Note the deadline bounds each *read*,
-    /// not the handshake as a whole: an adversary trickling one byte per
-    /// deadline can still hold the serial accept loop (see ROADMAP —
-    /// concurrent handshakes are the remaining hardening step).
+    /// Overall wall-clock budget for each `Join` handshake. `None` waits
+    /// forever (the trusting default for pre-connected in-process
+    /// links). Under [`Leader::serve`] every handshake runs on its own
+    /// thread, so one slow connector never delays another; the budget
+    /// bounds the whole handshake, not just a single read.
     pub join_deadline: Option<Duration>,
     /// Pipelined iteration scheduling (the default): shared x-frame
     /// broadcast with pool-parallel frame assembly, slab uplink decode,
     /// and double-buffered staging of the next assignment's subset tails.
-    /// `false` selects the phase-serial schedule (per-device `Broadcast`
-    /// encode on the leader thread, per-device `Vec` reconstruction) —
-    /// kept as the reference implementation the pipeline is pinned
-    /// bit-identical to. Pure scheduling: traces, wire bytes and RNG
-    /// consumption are unaffected, so the toggle is deliberately outside
-    /// `config_digest` and the sweep job identity.
+    /// `false` selects the phase-serial schedule — kept as the reference
+    /// implementation the pipeline is pinned bit-identical to. Pure
+    /// scheduling: traces, wire bytes and RNG consumption are unaffected,
+    /// so the toggle is deliberately outside `config_digest` and the
+    /// sweep job identity.
     pub pipeline: bool,
+    /// Redraw the Byzantine identity set each iteration (one run-RNG
+    /// draw) and announce each device's role in its `Broadcast` frame.
+    /// `false` (the default) keeps the fixed last-(N−H) identities and
+    /// consumes nothing, preserving historical traces bit-for-bit.
+    pub rotate_byzantine: bool,
+    /// Write a [`Checkpoint`] every K iterations (0 = off). Requires
+    /// [`LeaderOpts::checkpoint_path`].
+    pub checkpoint_every: u64,
+    /// Where checkpoints land (written atomically: tmp + rename).
+    pub checkpoint_path: Option<PathBuf>,
+    /// Halt with an error — *without* sending `Shutdown`, so workers stay
+    /// up and reconnect — after completing iteration K and writing a
+    /// final checkpoint: the leader-kill half of the failover drill.
+    pub halt_after: Option<u64>,
 }
 
 impl Default for LeaderOpts {
@@ -161,6 +240,161 @@ impl Default for LeaderOpts {
             device_compression: false,
             join_deadline: None,
             pipeline: true,
+            rotate_byzantine: false,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            halt_after: None,
+        }
+    }
+}
+
+/// Mutable loop state threaded into [`Leader::train`] — fresh for a cold
+/// start, reconstructed from a [`Checkpoint`] for a warm restart.
+struct TrainInit {
+    start_iter: usize,
+    comp_cursors: Option<Vec<RngState>>,
+    ef_rows: Option<Vec<Vec<f32>>>,
+    dead: Vec<bool>,
+    miss_streak: Vec<usize>,
+    rejoin_epoch: Vec<u64>,
+    trace: TrainTrace,
+    bits_total: u64,
+    wire_up: u64,
+    wire_down: u64,
+}
+
+impl TrainInit {
+    fn fresh(n: usize, label: &str) -> Self {
+        TrainInit {
+            start_iter: 0,
+            comp_cursors: None,
+            ef_rows: None,
+            dead: vec![false; n],
+            miss_streak: vec![0; n],
+            rejoin_epoch: vec![0; n],
+            trace: TrainTrace::new(label),
+            bits_total: 0,
+            wire_up: 0,
+            wire_down: 0,
+        }
+    }
+}
+
+/// The in-flight trace + byte counters, as a checkpoint trace section.
+fn trace_to_block(tr: &TrainTrace, bits_total: u64, up: u64, down: u64) -> TraceBlock {
+    TraceBlock {
+        label: tr.label.clone(),
+        iters: tr.iters.iter().map(|&i| i as u64).collect(),
+        loss: tr.loss.clone(),
+        grad_update_norm: tr.grad_update_norm.clone(),
+        bits: tr.bits.clone(),
+        anomalies: tr.anomalies as u64,
+        bits_total,
+        wire_up_bytes: up,
+        wire_down_bytes: down,
+    }
+}
+
+/// Inverse of [`trace_to_block`]: `(trace, bits_total, wire_up, wire_down)`.
+/// Phase timings are telemetry, not state — they restart from zero.
+fn block_to_trace(b: &TraceBlock) -> (TrainTrace, u64, u64, u64) {
+    let mut tr = TrainTrace::new(b.label.clone());
+    tr.iters = b.iters.iter().map(|&i| i as usize).collect();
+    tr.loss = b.loss.clone();
+    tr.grad_update_norm = b.grad_update_norm.clone();
+    tr.bits = b.bits.clone();
+    tr.anomalies = b.anomalies as usize;
+    (tr, b.bits_total, b.wire_up_bytes, b.wire_down_bytes)
+}
+
+/// Spawn the detached reader thread for one device connection, tagging
+/// every forwarded event with the slot's current rejoin epoch.
+fn spawn_reader(
+    dev: usize,
+    epoch: u64,
+    mut rx_half: Box<dyn Transport>,
+    fwd: mpsc::Sender<RxEvent>,
+) -> Result<()> {
+    std::thread::Builder::new()
+        .name(format!("lad-net-rx-{dev}"))
+        .spawn(move || loop {
+            match rx_half.recv() {
+                Ok(item) => {
+                    if fwd.send((dev, epoch, Some(item))).is_err() {
+                        return;
+                    }
+                }
+                Err(_) => {
+                    let _ = fwd.send((dev, epoch, None));
+                    return;
+                }
+            }
+        })
+        .context("spawning reader thread")?;
+    Ok(())
+}
+
+/// Validate one `Join` message; returns the claimed device id.
+fn validate_join(msg: &Msg, n: usize, digest: u64) -> Result<usize> {
+    let (version, device, worker_digest) = match msg {
+        Msg::Join { version, device, digest } => (*version, *device, *digest),
+        other => bail!("expected join, got {other:?}"),
+    };
+    ensure!(
+        version == WIRE_VERSION,
+        "protocol version mismatch: worker {version}, leader {WIRE_VERSION}"
+    );
+    let device = device as usize;
+    ensure!(device < n, "worker joined as device {device}, config has {n}");
+    ensure!(
+        worker_digest == 0 || worker_digest == digest,
+        "config digest mismatch: worker {device} has {worker_digest:#018x}, \
+         leader {digest:#018x}"
+    );
+    Ok(device)
+}
+
+/// Run one `Join` handshake on a freshly accepted connection, within an
+/// overall wall-clock `budget`, and forward the validated connection.
+/// Runs on its own detached thread so a slow or trickling connector never
+/// blocks the accept loop or any other handshake. Failed handshakes are
+/// logged and dropped; the slot stays open.
+fn handshake_join(
+    mut link: Box<dyn Transport>,
+    n: usize,
+    digest: u64,
+    budget: Option<Duration>,
+    out: mpsc::Sender<RejoinRequest>,
+) {
+    let peer = link.peer();
+    let t0 = Instant::now();
+    if budget.is_some() && link.set_recv_timeout(budget).is_err() {
+        return;
+    }
+    let (msg, join_bytes) = match link.recv() {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("leader: dropping connection from {peer}: {e:#} — slot reclaimed");
+            return;
+        }
+    };
+    if let Some(d) = budget {
+        // the recv timeout bounds each read; re-check the overall budget
+        // so a byte-at-a-time trickler is cut off at the deadline too
+        if t0.elapsed() > d {
+            eprintln!("leader: dropping {peer}: handshake exceeded {d:?} — slot reclaimed");
+            return;
+        }
+        if link.set_recv_timeout(None).is_err() {
+            return;
+        }
+    }
+    match validate_join(&msg, n, digest) {
+        Ok(device) => {
+            let _ = out.send(RejoinRequest { device, not_before: 0, join_bytes, link });
+        }
+        Err(e) => {
+            eprintln!("leader: dropping connection from {peer}: {e:#} — slot reclaimed")
         }
     }
 }
@@ -183,8 +417,7 @@ pub struct Leader<'a> {
 }
 
 impl Leader<'_> {
-    /// Shape checks shared by the [`Leader::run`] / [`Leader::serve`]
-    /// entry points.
+    /// Shape + option checks shared by every entry point.
     fn check_shapes(&self, x0: &[f32]) -> Result<()> {
         let cfg = self.cfg;
         cfg.validate()?;
@@ -192,6 +425,24 @@ impl Leader<'_> {
         ensure!(self.ds.n() == n, "dataset has {} subsets, config {n}", self.ds.n());
         ensure!(self.ds.dim() == cfg.dim, "dataset dim {} != config {}", self.ds.dim(), cfg.dim);
         ensure!(x0.len() == cfg.dim, "x0 dim {} != config {}", x0.len(), cfg.dim);
+        let ef_kind = matches!(
+            cfg.compression,
+            CompressionKind::EfRandK { .. }
+                | CompressionKind::EfTopK { .. }
+                | CompressionKind::EfQsgd { .. }
+        );
+        ensure!(
+            !(self.opts.rotate_byzantine && self.opts.device_compression && ef_kind),
+            "rotate-byzantine + device compression is incompatible with error-feedback \
+             compressors: a residual is tied to its device's honest stream, which a \
+             rotating role bit would corrupt"
+        );
+        if self.opts.checkpoint_every > 0 || self.opts.halt_after.is_some() {
+            ensure!(
+                self.opts.checkpoint_path.is_some(),
+                "checkpoint_every / halt_after require a checkpoint_path"
+            );
+        }
         Ok(())
     }
 
@@ -200,7 +451,6 @@ impl Leader<'_> {
     /// is cleared again before the link joins the training loop, whose
     /// reader threads must block indefinitely.
     fn recv_join(&self, link: &mut Box<dyn Transport>, digest: u64) -> Result<(usize, u64)> {
-        let n = self.cfg.n_devices;
         if let Some(d) = self.opts.join_deadline {
             link.set_recv_timeout(Some(d))?;
         }
@@ -208,32 +458,23 @@ impl Leader<'_> {
         if self.opts.join_deadline.is_some() {
             link.set_recv_timeout(None)?;
         }
-        let (version, device, worker_digest) = match msg {
-            Msg::Join { version, device, digest } => (version, device, digest),
-            other => bail!("expected join, got {other:?} from {}", link.peer()),
-        };
-        ensure!(
-            version == WIRE_VERSION,
-            "protocol version mismatch: worker {version}, leader {WIRE_VERSION}"
-        );
-        let device = device as usize;
-        ensure!(device < n, "worker joined as device {device}, config has {n}");
-        ensure!(
-            worker_digest == 0 || worker_digest == digest,
-            "config digest mismatch: worker {device} has {worker_digest:#018x}, \
-             leader {digest:#018x}"
-        );
+        let device = validate_join(&msg, self.cfg.n_devices, digest)
+            .with_context(|| format!("join from {}", link.peer()))?;
         Ok((device, nb))
     }
 
     /// Send the `Hello` that completes one device's handshake; returns
-    /// bytes written.
+    /// bytes written. `resume_iter` / `iterate` / `reset_stream` turn it
+    /// into the mid-run rejoin or warm-restart reply (see `net::wire`).
     fn send_hello(
         &self,
-        link: &mut Box<dyn Transport>,
+        link: &mut dyn Transport,
         device: usize,
         digest: u64,
         comp_seed: u64,
+        reset_stream: bool,
+        resume_iter: u64,
+        iterate: Option<Vec<f32>>,
     ) -> Result<u64> {
         let cfg = self.cfg;
         let hello = Msg::Hello {
@@ -246,6 +487,10 @@ impl Leader<'_> {
             comp_seed,
             digest,
             compression: cfg.compression,
+            rotate: self.opts.rotate_byzantine,
+            reset_stream,
+            resume_iter,
+            iterate,
             dataset: if self.send_dataset {
                 Some(DatasetBlock::from_dataset(self.ds))
             } else {
@@ -268,6 +513,20 @@ impl Leader<'_> {
         label: &str,
         rng: &mut Rng,
     ) -> Result<TrainTrace> {
+        self.run_rejoin(links, None, x0, label, rng)
+    }
+
+    /// [`Leader::run`] plus an optional intake channel for mid-run joins:
+    /// the in-process churn harness pre-loads replacement connections
+    /// (with a `not_before` activation iteration) through `rejoin`.
+    pub fn run_rejoin(
+        &self,
+        links: Vec<Box<dyn Transport>>,
+        rejoin: Option<&mpsc::Receiver<RejoinRequest>>,
+        x0: &mut Vec<f32>,
+        label: &str,
+        rng: &mut Rng,
+    ) -> Result<TrainTrace> {
         let cfg = self.cfg;
         self.check_shapes(x0)?;
         let n = cfg.n_devices;
@@ -277,77 +536,244 @@ impl Leader<'_> {
         // the seeds go to honest devices in Hello (device-side mode), the
         // leader keeps the streams for everything it compresses itself.
         let comp_seeds = rng.split_seeds(n);
-        let mut wire_up = 0u64;
-        let mut wire_down = 0u64;
+        let mut init = TrainInit::fresh(n, label);
 
         // ---- handshake: Join in, Hello out, order links by device id ----
         let mut by_dev: Vec<Option<Box<dyn Transport>>> = (0..n).map(|_| None).collect();
         for mut link in links {
             let (device, nb) = self.recv_join(&mut link, digest)?;
-            wire_up += nb;
+            init.wire_up += nb;
             ensure!(by_dev[device].is_none(), "device {device} joined twice");
-            wire_down += self.send_hello(&mut link, device, digest, comp_seeds[device])?;
+            init.wire_down +=
+                self.send_hello(link.as_mut(), device, digest, comp_seeds[device], false, 0, None)?;
             by_dev[device] = Some(link);
         }
-        self.train(by_dev, &comp_seeds, wire_up, wire_down, x0, label, rng)
+        self.train(by_dev, &comp_seeds, init, rejoin, x0, rng)
     }
 
-    /// [`Leader::run`], but owning the accept loop: keep accepting
-    /// connections until all `n` device slots hold a handshaked worker.
-    /// A connection that fails its handshake — never sends a `Join`
-    /// within [`LeaderOpts::join_deadline`], sends garbage, or claims an
-    /// occupied slot — is dropped and its slot stays open for the next
-    /// connection, so a stray or hostile connector cannot permanently
-    /// occupy one of the N slots.
+    /// Warm restart over pre-established links: reconstructs the loop
+    /// state from `ckpt`, handshakes every link with a resume `Hello`
+    /// (`reset_stream: false` — a reconnecting worker keeps any live
+    /// stream state it carries), and continues training. Resume handshake
+    /// bytes are **not** counted, so the finished trace's wire totals are
+    /// bit-identical to an uninterrupted run's.
+    pub fn resume(
+        &self,
+        links: Vec<Box<dyn Transport>>,
+        ckpt: &Checkpoint,
+        x0: &mut Vec<f32>,
+        label: &str,
+    ) -> Result<TrainTrace> {
+        let n = self.cfg.n_devices;
+        ensure!(links.len() == n, "need {n} connections, got {}", links.len());
+        let (comp_seeds, mut rng, init) = self.resume_init(ckpt, label, x0)?;
+        let digest = config_digest(self.cfg);
+        let mut by_dev: Vec<Option<Box<dyn Transport>>> = (0..n).map(|_| None).collect();
+        for mut link in links {
+            let (device, _nb) = self.recv_join(&mut link, digest)?;
+            ensure!(by_dev[device].is_none(), "device {device} joined twice");
+            self.send_hello(
+                link.as_mut(),
+                device,
+                digest,
+                comp_seeds[device],
+                false,
+                init.start_iter as u64,
+                Some(x0.clone()),
+            )?;
+            by_dev[device] = Some(link);
+        }
+        self.train(by_dev, &comp_seeds, init, None, x0, &mut rng)
+    }
+
+    /// [`Leader::run`], but owning the accept loop: accept connections
+    /// until all `n` device slots hold a handshaked worker, then train —
+    /// with the accept loop kept alive for the whole run so a retired
+    /// slot can be reclaimed by a late joiner.
     pub fn serve(
         &self,
-        listener: &super::transport::NetListener,
+        listener: &NetListener,
         x0: &mut Vec<f32>,
         label: &str,
         rng: &mut Rng,
     ) -> Result<TrainTrace> {
-        let cfg = self.cfg;
         self.check_shapes(x0)?;
+        let comp_seeds = rng.split_seeds(self.cfg.n_devices);
+        let init = TrainInit::fresh(self.cfg.n_devices, label);
+        self.serve_inner(listener, &comp_seeds, init, x0, rng)
+    }
+
+    /// [`Leader::serve`] from a checkpoint: the leader-failover path.
+    /// Workers reconnect with a plain `Join` carrying their device id;
+    /// the `Hello` ships the checkpointed iterate and resume iteration
+    /// (`reset_stream: false`).
+    pub fn serve_resume(
+        &self,
+        listener: &NetListener,
+        ckpt: &Checkpoint,
+        x0: &mut Vec<f32>,
+        label: &str,
+    ) -> Result<TrainTrace> {
+        let (comp_seeds, mut rng, init) = self.resume_init(ckpt, label, x0)?;
+        self.serve_inner(listener, &comp_seeds, init, x0, &mut rng)
+    }
+
+    /// Reconstruct `(comp seeds, run RNG, loop state)` from a checkpoint,
+    /// restoring the iterate into `x0` and the aggregator's state.
+    fn resume_init(
+        &self,
+        ckpt: &Checkpoint,
+        label: &str,
+        x0: &mut Vec<f32>,
+    ) -> Result<(Vec<u64>, Rng, TrainInit)> {
+        let cfg = self.cfg;
         let n = cfg.n_devices;
-        let digest = config_digest(cfg);
-        let comp_seeds = rng.split_seeds(n);
-        let mut wire_up = 0u64;
-        let mut wire_down = 0u64;
-        let mut by_dev: Vec<Option<Box<dyn Transport>>> = (0..n).map(|_| None).collect();
-        let mut filled = 0usize;
-        while filled < n {
-            let mut link = listener.accept()?;
-            let peer = link.peer();
-            match self.recv_join(&mut link, digest) {
-                Ok((device, join_bytes)) => {
+        ensure!(
+            ckpt.digest == config_digest(cfg),
+            "checkpoint config digest {:#018x} != this config's {:#018x}",
+            ckpt.digest,
+            config_digest(cfg)
+        );
+        ensure!(
+            ckpt.seed == cfg.seed,
+            "checkpoint seed {} != config seed {}",
+            ckpt.seed,
+            cfg.seed
+        );
+        ensure!(
+            (ckpt.iter as usize) < cfg.iters,
+            "checkpoint is at iteration {}, but the run has only {} iterations",
+            ckpt.iter,
+            cfg.iters
+        );
+        let run_rng = ckpt
+            .run_rng
+            .ok_or_else(|| anyhow!("checkpoint lacks a run-RNG cursor (not a warm-restart v2)"))?;
+        let streams = ckpt
+            .comp_streams
+            .as_ref()
+            .ok_or_else(|| anyhow!("checkpoint lacks compression-stream cursors"))?;
+        ensure!(streams.len() == n, "checkpoint has {} streams, config {n}", streams.len());
+        ensure!(
+            ckpt.params.len() == cfg.dim,
+            "checkpoint iterate dim {} != config {}",
+            ckpt.params.len(),
+            cfg.dim
+        );
+        *x0 = ckpt.params.clone();
+        self.check_shapes(x0)?;
+        let comp_seeds: Vec<u64> = streams.iter().map(|&(s, _)| s).collect();
+        let cursors: Vec<RngState> = streams.iter().map(|&(_, c)| c).collect();
+        let mut init = TrainInit::fresh(n, label);
+        init.start_iter = ckpt.iter as usize;
+        init.comp_cursors = Some(cursors);
+        init.ef_rows = ckpt.ef_residuals.clone();
+        if let Some(roster) = &ckpt.roster {
+            ensure!(roster.len() == n, "checkpoint roster has {} slots, config {n}", roster.len());
+            for (i, e) in roster.iter().enumerate() {
+                init.dead[i] = e.dead;
+                init.miss_streak[i] = e.miss_streak as usize;
+                init.rejoin_epoch[i] = e.rejoin_epoch;
+            }
+        }
+        // restoring an empty Vec resets a stateful aggregator to fresh
+        // (momentum re-initializes on its next call); no-op for the rest
+        self.agg.state_restore(ckpt.momentum.clone().unwrap_or_default());
+        if let Some(b) = &ckpt.trace {
+            let (tr, bits, up, down) = block_to_trace(b);
+            init.trace = tr;
+            init.bits_total = bits;
+            init.wire_up = up;
+            init.wire_down = down;
+        }
+        Ok((comp_seeds, Rng::restore(run_rng), init))
+    }
+
+    /// Shared serve body: a nonblocking accept loop with one handshake
+    /// thread per connection feeds a single intake channel; the roster
+    /// fill consumes it first, and the training loop keeps draining it
+    /// for mid-run joins afterwards.
+    fn serve_inner(
+        &self,
+        listener: &NetListener,
+        comp_seeds: &[u64],
+        mut init: TrainInit,
+        x0: &mut Vec<f32>,
+        rng: &mut Rng,
+    ) -> Result<TrainTrace> {
+        let n = self.cfg.n_devices;
+        let digest = config_digest(self.cfg);
+        let budget = self.opts.join_deadline;
+        // handshake bytes count only on a cold start: a resumed run's wire
+        // totals must match the uninterrupted run's
+        let count_handshake = init.start_iter == 0;
+        listener.set_nonblocking(true)?;
+        let stop = AtomicBool::new(false);
+        let (hs_tx, hs_rx) = mpsc::channel::<RejoinRequest>();
+        let result = std::thread::scope(|scope| {
+            let acceptor_tx = hs_tx.clone();
+            let stop_ref = &stop;
+            scope.spawn(move || {
+                while !stop_ref.load(Ordering::Relaxed) {
+                    match listener.try_accept() {
+                        Ok(Some(link)) => {
+                            let out = acceptor_tx.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("lad-net-join".into())
+                                .spawn(move || handshake_join(link, n, digest, budget, out));
+                        }
+                        Ok(None) => std::thread::sleep(Duration::from_millis(5)),
+                        Err(e) => {
+                            eprintln!("leader: accept loop terminated: {e:#}");
+                            return;
+                        }
+                    }
+                }
+            });
+            drop(hs_tx);
+            let body = (|| -> Result<TrainTrace> {
+                let mut by_dev: Vec<Option<Box<dyn Transport>>> = (0..n).map(|_| None).collect();
+                let mut filled = 0usize;
+                while filled < n {
+                    let req = hs_rx.recv().map_err(|_| {
+                        anyhow!("accept loop terminated before all {n} devices joined")
+                    })?;
+                    let device = req.device;
                     if by_dev[device].is_some() {
-                        eprintln!(
-                            "leader: dropping duplicate join for device {device} from {peer}"
-                        );
+                        eprintln!("leader: dropping duplicate join for device {device}");
                         continue;
                     }
-                    match self.send_hello(&mut link, device, digest, comp_seeds[device]) {
+                    let mut link = req.link;
+                    let peer = link.peer();
+                    let iterate = (init.start_iter > 0).then(|| x0.clone());
+                    match self.send_hello(
+                        link.as_mut(),
+                        device,
+                        digest,
+                        comp_seeds[device],
+                        false,
+                        init.start_iter as u64,
+                        iterate,
+                    ) {
                         Ok(nb) => {
-                            // count handshake bytes only for admitted
-                            // devices — rejected connections are not part
-                            // of the run the trace measures
-                            wire_up += join_bytes;
-                            wire_down += nb;
+                            if count_handshake {
+                                init.wire_up += req.join_bytes;
+                                init.wire_down += nb;
+                            }
                             by_dev[device] = Some(link);
                             filled += 1;
                             eprintln!("leader: [{filled}/{n}] device {device} joined ({peer})");
                         }
-                        Err(e) => {
-                            eprintln!("leader: dropping device {device} ({peer}): {e:#}")
-                        }
+                        Err(e) => eprintln!("leader: dropping device {device} ({peer}): {e:#}"),
                     }
                 }
-                Err(e) => {
-                    eprintln!("leader: dropping connection from {peer}: {e:#} — slot reclaimed")
-                }
-            }
-        }
-        self.train(by_dev, &comp_seeds, wire_up, wire_down, x0, label, rng)
+                self.train(by_dev, comp_seeds, init, Some(&hs_rx), x0, rng)
+            })();
+            stop.store(true, Ordering::Relaxed);
+            body
+        });
+        listener.set_nonblocking(false)?;
+        result
     }
 
     /// The training loop proper, over a fully handshaked device set.
@@ -355,35 +781,53 @@ impl Leader<'_> {
         &self,
         by_dev: Vec<Option<Box<dyn Transport>>>,
         comp_seeds: &[u64],
-        mut wire_up: u64,
-        mut wire_down: u64,
+        init: TrainInit,
+        rejoin: Option<&mpsc::Receiver<RejoinRequest>>,
         x0: &mut Vec<f32>,
-        label: &str,
         rng: &mut Rng,
     ) -> Result<TrainTrace> {
         let cfg = self.cfg;
         let n = cfg.n_devices;
         let timer = Timer::start();
-        let mut comp_rngs: Vec<Rng> = comp_seeds.iter().map(|&s| Rng::new(s)).collect();
+        let hand_off = self.opts.rotate_byzantine && self.opts.device_compression;
+        let TrainInit {
+            start_iter,
+            comp_cursors,
+            ef_rows,
+            mut dead,
+            mut miss_streak,
+            mut rejoin_epoch,
+            mut trace,
+            mut bits_total,
+            mut wire_up,
+            mut wire_down,
+        } = init;
+        // per-device compression streams: restored cursors on a warm
+        // restart, fresh from the pre-split seeds otherwise
+        let mut comp_rngs: Vec<Rng> = match &comp_cursors {
+            Some(cur) => cur.iter().map(|&st| Rng::restore(st)).collect(),
+            None => comp_seeds.iter().map(|&s| Rng::new(s)).collect(),
+        };
         // EF residual mirror (Some only for ef-* kinds): leader-side
         // compression steps every row; device-side compression steps only
         // the Byzantine rows (honest workers hold their own). Rows are
         // zeroed on retirement — see the module docs.
         let mut ef = EfState::for_kind(cfg.compression, n, cfg.dim);
+        if let (Some(st), Some(rows)) = (ef.as_mut(), ef_rows) {
+            st.restore(rows);
+        }
 
         // ---- split: sends stay here, one detached reader per device ----
-        // Readers forward (device, Some((msg, bytes))) into a single
+        // Readers forward (device, epoch, Some((msg, bytes))) into a single
         // queue — the gather deadline is then one recv_timeout on that
         // queue, so a stalled connection never blocks the others — and a
-        // final (device, None) when their connection dies (EOF, reset, or
-        // a corrupt frame), so the leader fails fast (or, in deadline
-        // mode, drops the device) instead of waiting on a reader that
-        // silently exited.
-        type RxEvent = (usize, Option<(Msg, u64)>);
+        // final (device, epoch, None) when their connection dies. The
+        // epoch tag discards ghost events from connections a rejoin has
+        // since replaced.
         let (fwd_tx, fwd_rx) = mpsc::channel::<RxEvent>();
         let mut txs: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
         for (dev, link) in by_dev.into_iter().enumerate() {
-            let (mut tx_half, mut rx_half) = link.expect("handshake fills every slot").split()?;
+            let (mut tx_half, rx_half) = link.expect("handshake fills every slot").split()?;
             if let Some(d) = self.opts.gather_deadline {
                 // crash tolerance must also cover a worker that stops
                 // draining its socket: bound blocking broadcast writes so
@@ -392,70 +836,132 @@ impl Leader<'_> {
                 tx_half.set_send_timeout(Some(d))?;
             }
             txs.push(tx_half);
-            let fwd = fwd_tx.clone();
-            std::thread::Builder::new()
-                .name(format!("lad-net-rx-{dev}"))
-                .spawn(move || loop {
-                    match rx_half.recv() {
-                        Ok(item) => {
-                            if fwd.send((dev, Some(item))).is_err() {
-                                return;
-                            }
-                        }
-                        Err(_) => {
-                            let _ = fwd.send((dev, None));
-                            return;
-                        }
-                    }
-                })
-                .context("spawning reader thread")?;
+            spawn_reader(dev, rejoin_epoch[dev], rx_half, fwd_tx.clone())?;
         }
+        let rejoin_fwd = rejoin.map(|_| fwd_tx.clone());
         drop(fwd_tx);
 
         // ---- training loop ----
-        let mut trace = TrainTrace::new(label);
         let s_hat = TaskMatrix::cyclic(n, cfg.d);
-        let mut bits_total = 0u64;
-        let mut dead = vec![false; n];
-        let mut miss_streak = vec![0usize; n];
         let pipeline = self.opts.pipeline;
         // contiguous uplink slab: device i's reconstruction decodes straight
         // into row i, so attack crafting / compression / aggregation all
         // read out of one allocation reused across iterations
         let mut slab = vec![0.0f32; n * cfg.dim];
-        // double-buffer staging (pipeline mode): iteration t+1's assignment
-        // and pre-encoded per-device subset tails, drawn after craft(t)
-        let mut staged: Option<(Assignment, Vec<Vec<u8>>)> = None;
-        let encode_tails = |assign: &Assignment| -> Vec<Vec<u8>> {
-            (0..n)
-                .map(|i| {
-                    let subsets: Vec<u32> = assign
-                        .subsets_for(s_hat.row(assign.tasks[i]))
-                        .map(|k| k as u32)
-                        .collect();
-                    broadcast_tail(&subsets)
-                })
-                .collect()
+        // double-buffer staging (pipeline mode): iteration t+1's
+        // assignment, identity set and pre-encoded per-device tails,
+        // drawn after craft(t)
+        let mut staged: Option<(Assignment, Vec<bool>, Vec<Vec<u8>>)> = None;
+        let mut pending_rejoin: Vec<RejoinRequest> = Vec::new();
+        let subsets_u32 = |assign: &Assignment, i: usize| -> Vec<u32> {
+            assign.subsets_for(s_hat.row(assign.tasks[i])).map(|k| k as u32).collect()
         };
+        let encode_tails =
+            |assign: &Assignment, is_byz: &[bool], comp_rngs: &[Rng]| -> Vec<Vec<u8>> {
+                (0..n)
+                    .map(|i| {
+                        let cursor =
+                            (hand_off && !is_byz[i]).then(|| comp_rngs[i].save_state());
+                        broadcast_tail(&subsets_u32(assign, i), is_byz[i], &cursor)
+                    })
+                    .collect()
+            };
 
-        for t in 0..cfg.iters {
+        for t in start_iter..cfg.iters {
+            // ---- mid-run join intake (before the broadcast, so an
+            // activated device serves this very iteration) ----
+            if let Some(ch) = rejoin {
+                while let Ok(req) = ch.try_recv() {
+                    pending_rejoin.push(req);
+                }
+            }
+            if !pending_rejoin.is_empty() {
+                let mut keep = Vec::new();
+                for req in pending_rejoin.drain(..) {
+                    if req.not_before > t as u64 {
+                        keep.push(req);
+                        continue;
+                    }
+                    let dev = req.device;
+                    if !dead[dev] {
+                        eprintln!("leader: dropping rejoin for live device {dev}");
+                        continue;
+                    }
+                    // a fresh epoch invalidates the dead connection's
+                    // reader events and derives a fresh stream seed —
+                    // without touching the run RNG
+                    rejoin_epoch[dev] += 1;
+                    let seed = rejoin_seed(comp_seeds[dev], rejoin_epoch[dev]);
+                    let mut link = req.link;
+                    match self.send_hello(
+                        link.as_mut(),
+                        dev,
+                        config_digest(cfg),
+                        seed,
+                        true,
+                        t as u64,
+                        Some(x0.clone()),
+                    ) {
+                        Ok(nb) => {
+                            wire_up += req.join_bytes;
+                            wire_down += nb;
+                            let (mut tx_half, rx_half) = link.split()?;
+                            if let Some(d) = self.opts.gather_deadline {
+                                tx_half.set_send_timeout(Some(d))?;
+                            }
+                            if let Some(fwd) = &rejoin_fwd {
+                                spawn_reader(dev, rejoin_epoch[dev], rx_half, fwd.clone())?;
+                            }
+                            txs[dev] = tx_half;
+                            if let Some(st) = ef.as_mut() {
+                                st.reset(dev);
+                            }
+                            comp_rngs[dev] = Rng::new(seed);
+                            dead[dev] = false;
+                            miss_streak[dev] = 0;
+                            // a staged tail for this slot was encoded
+                            // against the old stream — re-encode it
+                            if let Some((assign, is_byz, tails)) = staged.as_mut() {
+                                let cursor = (hand_off && !is_byz[dev])
+                                    .then(|| comp_rngs[dev].save_state());
+                                tails[dev] = broadcast_tail(
+                                    &subsets_u32(assign, dev),
+                                    is_byz[dev],
+                                    &cursor,
+                                );
+                            }
+                            eprintln!("leader: device {dev} rejoined at iteration {t}");
+                        }
+                        Err(e) => {
+                            eprintln!("leader: rejoin hello for device {dev} failed: {e:#}")
+                        }
+                    }
+                }
+                pending_rejoin = keep;
+            }
+
             let t_bcast = Instant::now();
-            let (assign, tails) = match staged.take() {
+            let (assign, is_byz, tails) = match staged.take() {
                 Some(s) => s,
                 None => {
                     let a = Assignment::draw(n, rng);
-                    let tails = if pipeline { encode_tails(&a) } else { Vec::new() };
-                    (a, tails)
+                    let b = byz_set(cfg, self.opts.rotate_byzantine, rng);
+                    let tails = if pipeline {
+                        encode_tails(&a, &b, &comp_rngs)
+                    } else {
+                        Vec::new()
+                    };
+                    (a, b, tails)
                 }
             };
             let mut expecting = vec![false; n];
             if pipeline {
                 // shared x-frame: the Q-sized iterate section is encoded
                 // exactly once per iteration; each device's frame splices
-                // its pre-encoded subset tail on, and both the splice and
-                // the socket write fan out on the pool. Results come back
-                // in device order, so retirement semantics match the
-                // phase-serial loop below.
+                // its pre-encoded subset/role/cursor tail on, and both the
+                // splice and the socket write fan out on the pool. Results
+                // come back in device order, so retirement semantics match
+                // the phase-serial loop below.
                 let prefix = broadcast_prefix(t as u32, x0);
                 let sends: Vec<Option<Result<u64>>> = self.pool.par_map_mut(&mut txs, |i, tx| {
                     if dead[i] {
@@ -490,11 +996,15 @@ impl Leader<'_> {
                     if dead[i] {
                         continue;
                     }
-                    let subsets: Vec<u32> = assign
-                        .subsets_for(s_hat.row(assign.tasks[i]))
-                        .map(|k| k as u32)
-                        .collect();
-                    let msg = Msg::Broadcast { iter: t as u32, x: x0.clone(), subsets };
+                    let cursor =
+                        (hand_off && !is_byz[i]).then(|| comp_rngs[i].save_state());
+                    let msg = Msg::Broadcast {
+                        iter: t as u32,
+                        x: x0.clone(),
+                        subsets: subsets_u32(&assign, i),
+                        byzantine: is_byz[i],
+                        cursor,
+                    };
                     match txs[i].send(&msg) {
                         Ok(nb) => {
                             wire_down += nb;
@@ -545,7 +1055,12 @@ impl Leader<'_> {
                         }
                     }
                 };
-                let (dev, event) = item;
+                let (dev, epoch, event) = item;
+                if epoch != rejoin_epoch[dev] {
+                    // ghost event from a connection that a rejoin has since
+                    // replaced; not counted anywhere (determinism)
+                    continue;
+                }
                 let (msg, nb) = match event {
                     Some(x) => x,
                     None => {
@@ -570,7 +1085,7 @@ impl Leader<'_> {
                 };
                 wire_up += nb;
                 match msg {
-                    Msg::Upload { iter, device, analytic_bits, payload } => {
+                    Msg::Upload { iter, device, analytic_bits, cursor, payload } => {
                         if iter as usize != t || device as usize != dev {
                             continue; // stale upload from a past deadline miss
                         }
@@ -583,6 +1098,13 @@ impl Leader<'_> {
                         // stale value from a past iteration can never leak
                         let row = &mut slab[dev * cfg.dim..(dev + 1) * cfg.dim];
                         if payload.dim() == cfg.dim && payload.decode_into(row).is_ok() {
+                            if hand_off && !is_byz[dev] {
+                                if let Some(st) = cursor {
+                                    // adopt the device's post-compression
+                                    // stream state into the leader mirror
+                                    comp_rngs[dev] = Rng::restore(st);
+                                }
+                            }
                             have[dev] = Some(analytic_bits);
                             want -= 1;
                         } else {
@@ -641,6 +1163,10 @@ impl Leader<'_> {
                         if let Some(st) = ef.as_mut() {
                             st.reset(i);
                         }
+                        eprintln!(
+                            "leader: retiring device {i} after {} consecutive misses",
+                            miss_streak[i]
+                        );
                     }
                 }
             }
@@ -648,15 +1174,16 @@ impl Leader<'_> {
             let present: Vec<usize> = (0..n).filter(|&i| have[i].is_some()).collect();
             ensure!(!present.is_empty(), "iteration {t}: no uploads before the deadline");
             let honest_ids: Vec<usize> =
-                present.iter().copied().filter(|&i| i < cfg.n_honest).collect();
+                present.iter().copied().filter(|&i| !is_byz[i]).collect();
             let byz_ids: Vec<usize> =
-                present.iter().copied().filter(|&i| i >= cfg.n_honest).collect();
+                present.iter().copied().filter(|&i| is_byz[i]).collect();
 
-            // Fixed identities (last N−H Byzantine, as Trainer defaults):
-            // view the uploads as slab rows, craft the lies, compress what
-            // is still uncompressed, and stitch back into device order
-            // (honest ids all precede Byzantine ids, so concatenation IS
-            // device order).
+            // View the uploads as slab rows, craft the lies, compress what
+            // is still uncompressed, and stitch the family back into
+            // DEVICE-ID order — which equals the historical
+            // honest-then-lies order under fixed identities (honest ids
+            // all precede Byzantine ids) and the central trainer's family
+            // order under rotation.
             let t_agg = Instant::now();
             let row = |i: usize| -> &[f32] { &slab[i * cfg.dim..(i + 1) * cfg.dim] };
             let msgs: Vec<Vec<f32>> = if self.opts.device_compression {
@@ -676,13 +1203,12 @@ impl Leader<'_> {
                 // own device streams, exactly as the central path does —
                 // under EF, with their own residual rows too (honest rows
                 // live on the workers in this mode)
-                let mut out: Vec<Vec<f32>> =
-                    honest_rec.iter().map(|r| r.to_vec()).collect();
+                let mut lie_rec: Vec<Vec<f32>> = Vec::with_capacity(lies.len());
                 if let Some(st) = ef.as_mut() {
                     for (j, &i) in byz_ids.iter().enumerate() {
                         let c = st.step(i, &lies[j], self.comp, &mut comp_rngs[i]);
                         bits_total += c.bits as u64;
-                        out.push(c.vec);
+                        lie_rec.push(c.vec);
                     }
                 } else if byz_ids.iter().copied().eq(cfg.n_honest..n) {
                     let refs: Vec<&[f32]> = lies.iter().map(|l| l.as_slice()).collect();
@@ -693,12 +1219,23 @@ impl Leader<'_> {
                         &self.pool,
                     );
                     bits_total += bits;
-                    out.extend(rec);
+                    lie_rec = rec;
                 } else {
                     for (j, &i) in byz_ids.iter().enumerate() {
                         let c = self.comp.compress(&lies[j], &mut comp_rngs[i]);
                         bits_total += c.bits as u64;
-                        out.push(c.vec);
+                        lie_rec.push(c.vec);
+                    }
+                }
+                let mut out: Vec<Vec<f32>> = Vec::with_capacity(present.len());
+                let (mut hi, mut li) = (0usize, 0usize);
+                for &i in &present {
+                    if is_byz[i] {
+                        out.push(std::mem::take(&mut lie_rec[li]));
+                        li += 1;
+                    } else {
+                        out.push(honest_rec[hi].to_vec());
+                        hi += 1;
                     }
                 }
                 out
@@ -713,15 +1250,20 @@ impl Leader<'_> {
                     self.attack.craft(&mut ctx)
                 };
                 if present.len() == n {
-                    // full gather: the exact leader-side compression batch
-                    // of the historical cluster path (and the fast trainer)
-                    // — every honest ref still points into the slab, so the
-                    // batch reads one contiguous allocation
-                    let all: Vec<&[f32]> = honest_true
-                        .iter()
-                        .copied()
-                        .chain(lies.iter().map(|m| m.as_slice()))
-                        .collect();
+                    // full gather: one device-order batch — the exact call
+                    // shape of the central fast path (and, under fixed
+                    // identities, of the historical honest-then-lies batch)
+                    let mut all: Vec<&[f32]> = Vec::with_capacity(n);
+                    let (mut hi, mut li) = (0usize, 0usize);
+                    for i in 0..n {
+                        if is_byz[i] {
+                            all.push(lies[li].as_slice());
+                            li += 1;
+                        } else {
+                            all.push(honest_true[hi]);
+                            hi += 1;
+                        }
+                    }
                     let (msgs, bits) = match ef.as_mut() {
                         Some(st) => {
                             compress_batch_ef(self.comp, st, &all, &mut comp_rngs, &self.pool)
@@ -731,22 +1273,25 @@ impl Leader<'_> {
                     bits_total += bits;
                     msgs
                 } else {
-                    // partial gather: per-device compression consumes only
-                    // the present devices' streams (and EF residual rows) —
-                    // an absent device's stream and residual stay untouched
+                    // partial gather: per-device compression in device-id
+                    // order consumes only the present devices' streams (and
+                    // EF residual rows) — an absent device's stream and
+                    // residual stay untouched
                     let mut out = Vec::with_capacity(present.len());
-                    for (j, &i) in honest_ids.iter().enumerate() {
-                        let c = match ef.as_mut() {
-                            Some(st) => st.step(i, honest_true[j], self.comp, &mut comp_rngs[i]),
-                            None => self.comp.compress(honest_true[j], &mut comp_rngs[i]),
+                    let (mut hi, mut li) = (0usize, 0usize);
+                    for &i in &present {
+                        let src: &[f32] = if is_byz[i] {
+                            let s = lies[li].as_slice();
+                            li += 1;
+                            s
+                        } else {
+                            let s = honest_true[hi];
+                            hi += 1;
+                            s
                         };
-                        bits_total += c.bits as u64;
-                        out.push(c.vec);
-                    }
-                    for (j, &i) in byz_ids.iter().enumerate() {
                         let c = match ef.as_mut() {
-                            Some(st) => st.step(i, &lies[j], self.comp, &mut comp_rngs[i]),
-                            None => self.comp.compress(&lies[j], &mut comp_rngs[i]),
+                            Some(st) => st.step(i, src, self.comp, &mut comp_rngs[i]),
+                            None => self.comp.compress(src, &mut comp_rngs[i]),
                         };
                         bits_total += c.bits as u64;
                         out.push(c.vec);
@@ -755,15 +1300,33 @@ impl Leader<'_> {
                 }
             };
 
-            // double-buffer: draw iteration t+1's assignment and pre-encode
-            // its subset tails while this iteration still has aggregation
-            // ahead of it. The draw sits AFTER this iteration's attack
-            // craft, so the run RNG sees draw(0), craft(0), draw(1), … —
-            // exactly the phase-serial order (pinned by fuzz_determinism).
+            // ---- checkpoint cut ----
+            // Snapshot the RNG cursors HERE: after craft(t), before the
+            // staged draw(t+1). A resumed run redraws t+1 at its loop top,
+            // so the run-RNG order is identical whether or not the
+            // pipeline is on. Everything else (iterate, momentum, trace)
+            // is captured after the update below.
+            let ckpt_due = (self.opts.checkpoint_every > 0
+                && (t as u64 + 1) % self.opts.checkpoint_every == 0)
+                || self.opts.halt_after == Some(t as u64);
+            let pending_ckpt = ckpt_due.then(|| {
+                (
+                    rng.save_state(),
+                    comp_rngs.iter().map(|r| r.save_state()).collect::<Vec<_>>(),
+                    ef.as_ref().map(|st| st.snapshot()),
+                )
+            });
+
+            // double-buffer: draw iteration t+1's assignment + identities
+            // and pre-encode its tails while this iteration still has
+            // aggregation ahead of it. The draw sits AFTER this iteration's
+            // attack craft, so the run RNG sees draw(0), byz(0), craft(0),
+            // draw(1), … — exactly the phase-serial order.
             if pipeline && t + 1 < cfg.iters {
                 let a = Assignment::draw(n, rng);
-                let tails = encode_tails(&a);
-                staged = Some((a, tails));
+                let b = byz_set(cfg, self.opts.rotate_byzantine, rng);
+                let tails = encode_tails(&a, &b, &comp_rngs);
+                staged = Some((a, b, tails));
             }
 
             let update = self.agg.aggregate(&msgs);
@@ -773,6 +1336,37 @@ impl Leader<'_> {
             trace.aggregate_ns += t_agg.elapsed().as_nanos() as u64;
             if (cfg.log_every > 0 && t % cfg.log_every == 0) || t + 1 == cfg.iters {
                 trace.record(t, self.ds.loss(x0), norm(&update), bits_total);
+            }
+
+            if let Some((run_st, cursors, ef_snap)) = pending_ckpt {
+                let path = self
+                    .opts
+                    .checkpoint_path
+                    .as_ref()
+                    .expect("check_shapes enforced checkpoint_path");
+                let mut ck = Checkpoint::new(t as u64 + 1, cfg.seed, x0.clone());
+                ck.digest = config_digest(cfg);
+                ck.run_rng = Some(run_st);
+                ck.comp_streams = Some(comp_seeds.iter().copied().zip(cursors).collect());
+                ck.ef_residuals = ef_snap;
+                ck.momentum = self.agg.state_snapshot();
+                ck.roster = Some(
+                    (0..n)
+                        .map(|i| RosterEntry {
+                            dead: dead[i],
+                            miss_streak: miss_streak[i] as u64,
+                            rejoin_epoch: rejoin_epoch[i],
+                        })
+                        .collect(),
+                );
+                ck.trace = Some(trace_to_block(&trace, bits_total, wire_up, wire_down));
+                ck.save(path)
+                    .with_context(|| format!("writing checkpoint to {}", path.display()))?;
+            }
+            if self.opts.halt_after == Some(t as u64) {
+                // the leader-kill drill: exit WITHOUT Shutdown, so the
+                // workers stay up and reconnect to a restarted leader
+                bail!("leader halted at iteration {t} (halt-after drill; checkpoint written)");
             }
         }
 

@@ -26,7 +26,7 @@
 //!   transport, with a configurable gather deadline so a stalled
 //!   (crash-Byzantine) worker cannot hang an iteration.
 //!
-//! # Wire format (version 1)
+//! # Wire format (version 2)
 //!
 //! Frame: `u32 LE payload length | u32 LE CRC32(payload) | payload`.
 //! Message payloads (first byte = tag; see [`wire`] for field tables):
@@ -34,10 +34,30 @@
 //! | tag | message     | sent by | purpose                                |
 //! |-----|-------------|---------|----------------------------------------|
 //! | 1   | `Join`      | worker  | identify device, cross-check config    |
-//! | 2   | `Hello`     | leader  | role, compression seed, dataset        |
-//! | 3   | `Broadcast` | leader  | iterate + resolved subset list         |
+//! | 2   | `Hello`     | leader  | role, compression seed, dataset, and   |
+//! |     |             |         | (v2) resume point + current iterate    |
+//! | 3   | `Broadcast` | leader  | iterate + resolved subset list + (v2)  |
+//! |     |             |         | per-iteration role bit + RNG cursor    |
 //! | 4   | `Upload`    | worker  | coded (compressed) message + bit count |
+//! |     |             |         | + (v2) post-compression cursor echo    |
 //! | 5   | `Shutdown`  | leader  | end of run                             |
+//!
+//! # Elastic membership (v2)
+//!
+//! Version 2 makes cluster membership *elastic*. A `Join` arriving mid-run
+//! is answered with an extended `Hello` carrying the worker's dataset
+//! shard, the current iterate, the resume iteration, and a fresh split
+//! compression-stream seed (`reset_stream = true`), so a late device can
+//! adopt a retired slot and contribute from the next broadcast — without
+//! perturbing the incumbents' RNG streams (no-churn traces stay
+//! bit-identical). The same handshake with `reset_stream = false` serves
+//! leader failover: a standby leader restarted from a
+//! [`crate::server::Checkpoint`] re-admits workers that kept their live
+//! compression streams and error-feedback residuals, and the resumed run
+//! is bit-identical (trace *and* wire bytes) to one that never crashed.
+//! Rotating Byzantine identities ride the `Broadcast` role bit, with the
+//! leader handing honest-role devices their compression-stream cursor and
+//! adopting the post-compression echo from each `Upload`.
 //!
 //! # Pipelined broadcast: the shared x-frame splice
 //!
@@ -86,7 +106,7 @@ pub mod transport;
 pub mod wire;
 pub mod worker;
 
-pub use leader::{Leader, LeaderOpts, MISS_RETIRE_STREAK};
+pub use leader::{Leader, LeaderOpts, RejoinRequest, MISS_RETIRE_STREAK};
 pub use transport::{connect, ChannelTransport, NetListener, TcpTransport, Transport};
 pub use wire::{config_digest, DatasetBlock, Msg, Payload, WIRE_VERSION};
 pub use worker::{run_worker, run_worker_opts, WorkerOpts, WorkerReport};

@@ -325,6 +325,45 @@ impl NetListener {
             }
         }
     }
+
+    /// Switch the accept socket between blocking and non-blocking mode.
+    /// Non-blocking mode makes [`NetListener::try_accept`] usable from a
+    /// polling acceptor thread that also has to observe a stop flag.
+    pub fn set_nonblocking(&self, nonblocking: bool) -> Result<()> {
+        match self {
+            NetListener::Tcp(l) => l.set_nonblocking(nonblocking).context("tcp nonblocking"),
+            #[cfg(unix)]
+            NetListener::Uds(l, _) => {
+                l.set_nonblocking(nonblocking).context("uds nonblocking")
+            }
+        }
+    }
+
+    /// Accept one connection if one is pending; `Ok(None)` when the
+    /// listener is non-blocking and nobody is waiting. The accepted stream
+    /// is always switched back to blocking mode regardless of what it
+    /// inherited from the listener (platform-dependent).
+    pub fn try_accept(&self) -> Result<Option<Box<dyn Transport>>> {
+        match self {
+            NetListener::Tcp(l) => match l.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).context("tcp accepted-stream blocking")?;
+                    Ok(Some(Box::new(TcpTransport::new(stream))))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e).context("tcp accept"),
+            },
+            #[cfg(unix)]
+            NetListener::Uds(l, path) => match l.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).context("uds accepted-stream blocking")?;
+                    Ok(Some(Box::new(UdsTransport { stream, path: path.clone() })))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e).context("uds accept"),
+            },
+        }
+    }
 }
 
 impl Drop for NetListener {
@@ -362,7 +401,13 @@ mod tests {
     #[test]
     fn channel_pair_round_trips_messages() {
         let (mut a, mut b) = ChannelTransport::pair();
-        let msg = Msg::Broadcast { iter: 3, x: vec![1.0, 2.0], subsets: vec![0, 1] };
+        let msg = Msg::Broadcast {
+            iter: 3,
+            x: vec![1.0, 2.0],
+            subsets: vec![0, 1],
+            byzantine: false,
+            cursor: None,
+        };
         let sent = a.send(&msg).unwrap();
         let (got, read) = b.recv().unwrap();
         assert_eq!(got, msg);
@@ -375,7 +420,13 @@ mod tests {
     #[test]
     fn send_frame_is_indistinguishable_from_send() {
         let (mut a, mut b) = ChannelTransport::pair();
-        let msg = Msg::Broadcast { iter: 9, x: vec![0.5, -1.0], subsets: vec![3] };
+        let msg = Msg::Broadcast {
+            iter: 9,
+            x: vec![0.5, -1.0],
+            subsets: vec![3],
+            byzantine: true,
+            cursor: None,
+        };
         let f = frame::encode_frame(&msg.encode());
         let sent = a.send_frame(&f).unwrap();
         let (got, read) = b.recv().unwrap();
@@ -456,6 +507,28 @@ mod tests {
         c.set_recv_timeout(Some(Duration::from_millis(20))).unwrap();
         let (_tx, mut rx) = c.split().unwrap();
         assert!(rx.recv().is_err(), "split receive half keeps the timeout");
+    }
+
+    #[test]
+    fn try_accept_polls_without_blocking() {
+        let listener = NetListener::bind("tcp://127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        assert!(listener.try_accept().unwrap().is_none(), "no pending connection");
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut t = connect(&addr).unwrap();
+            t.send(&Msg::Shutdown).unwrap();
+        });
+        // poll until the connection lands
+        let mut server = loop {
+            if let Some(t) = listener.try_accept().unwrap() {
+                break t;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        // the accepted stream is blocking even though the listener is not
+        assert_eq!(server.recv().unwrap().0, Msg::Shutdown);
+        h.join().unwrap();
     }
 
     #[test]

@@ -7,10 +7,23 @@
 //! | tag | message     | direction       | body                                     |
 //! |-----|-------------|-----------------|------------------------------------------|
 //! | 1   | `Join`      | worker → leader | version u8, device u32, config digest u64 |
-//! | 2   | `Hello`     | leader → worker | version u8, device u32, N u32, Q u32, byzantine u8, device_compression u8, comp_seed u64, digest u64, compression kind, dataset option |
-//! | 3   | `Broadcast` | leader → worker | iter u32, x (u32 len + f32s), subsets (u32 len + u32s) |
-//! | 4   | `Upload`    | worker → leader | iter u32, device u32, analytic_bits u64, payload |
+//! | 2   | `Hello`     | leader → worker | version u8, device u32, N u32, Q u32, byzantine u8, device_compression u8, comp_seed u64, digest u64, compression kind, rotate u8, reset_stream u8, resume_iter u64, iterate option, dataset option |
+//! | 3   | `Broadcast` | leader → worker | iter u32, x (u32 len + f32s), subsets (u32 len + u32s), byzantine u8, cursor option |
+//! | 4   | `Upload`    | worker → leader | iter u32, device u32, analytic_bits u64, cursor option, payload |
 //! | 5   | `Shutdown`  | leader → worker | —                                        |
+//!
+//! Version 2 grew the elasticity fields: `Hello` doubles as the
+//! *Rejoin* reply (`resume_iter` > 0 plus the current `iterate` when a
+//! late `Join` lands mid-run, `reset_stream` telling the worker whether
+//! to reinitialize its compression stream and EF residual or keep the
+//! state it already carries), `Broadcast` carries the device's
+//! *per-iteration* Byzantine role bit plus an optional compression-stream
+//! cursor (role rotation under device-side compression hands the leader's
+//! mirror cursor to whichever device is honest this round), and `Upload`
+//! optionally echoes the worker's post-compression cursor back. An
+//! [`crate::util::rng::RngState`] cursor encodes as
+//! `state u64 | inc u64 | spare flag u8 [| spare f64]`; options as a
+//! presence byte.
 //!
 //! [`Payload`] is the uplink body: the *variant-specific* encoding of a
 //! compressed message, chosen from [`crate::compress::WireEnc`] so the
@@ -35,12 +48,14 @@ use crate::compress::{CompressedMsg, WireEnc};
 use crate::config::{CompressionKind, TrainConfig};
 use crate::data::linreg::LinRegDataset;
 use crate::util::math::Mat;
+use crate::util::rng::RngState;
 use crate::Result;
 use anyhow::{bail, ensure};
 
 /// Protocol version; bumped on any wire-format change. A `Join`/`Hello`
-/// version mismatch aborts the handshake.
-pub const WIRE_VERSION: u8 = 1;
+/// version mismatch aborts the handshake. v2 added the elasticity fields
+/// (rejoin `Hello`, per-iteration role bit, stream cursors).
+pub const WIRE_VERSION: u8 = 2;
 
 /// Cap on any payload's claimed reconstruction dimension — the largest
 /// vector a dense frame could carry (`frame::MAX_PAYLOAD` / 4 bytes per
@@ -84,6 +99,25 @@ impl Writer {
         self.u32(v.len() as u32);
         for &x in v {
             self.f32(x);
+        }
+    }
+    /// Presence byte + RNG cursor (`state u64 | inc u64 | spare flag u8
+    /// [| spare f64]`).
+    fn opt_rng_state(&mut self, st: &Option<RngState>) {
+        match st {
+            None => self.u8(0),
+            Some(st) => {
+                self.u8(1);
+                self.u64(st.state);
+                self.u64(st.inc);
+                match st.spare_gauss {
+                    None => self.u8(0),
+                    Some(g) => {
+                        self.u8(1);
+                        self.f64(g);
+                    }
+                }
+            }
         }
     }
     fn finish(self) -> Vec<u8> {
@@ -153,6 +187,22 @@ impl<'a> Reader<'a> {
             out.push(self.u32()?);
         }
         Ok(out)
+    }
+    fn opt_rng_state(&mut self) -> Result<Option<RngState>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => {
+                let state = self.u64()?;
+                let inc = self.u64()?;
+                let spare_gauss = match self.u8()? {
+                    0 => None,
+                    1 => Some(self.f64()?),
+                    b => bail!("wire: bad spare-gauss flag {b}"),
+                };
+                Ok(Some(RngState { state, inc, spare_gauss }))
+            }
+            b => bail!("wire: bad rng-cursor presence byte {b}"),
+        }
     }
     fn done(self) -> Result<()> {
         ensure!(self.remaining() == 0, "wire: {} trailing bytes after message", self.remaining());
@@ -565,6 +615,8 @@ pub enum Msg {
     Join { version: u8, device: u32, digest: u64 },
     /// Leader → worker handshake reply: identity, run shape, the device's
     /// private compression stream seed, and (optionally) the dataset.
+    /// Doubles as the mid-run *Rejoin* reply: `resume_iter > 0` plus
+    /// `iterate: Some(x)` admit a late joiner straight into a live run.
     Hello {
         version: u8,
         device: u32,
@@ -572,6 +624,8 @@ pub enum Msg {
         dim: u32,
         /// This device plays the Byzantine role in the simulation (it
         /// uploads its true vector densely; the leader crafts its lie).
+        /// Under role rotation this is only the *initial* role — the
+        /// per-iteration bit in `Broadcast` is authoritative.
         byzantine: bool,
         /// Honest devices compress their own uplink (Com-LAD device-side)
         /// instead of shipping dense vectors for leader-side compression.
@@ -579,16 +633,45 @@ pub enum Msg {
         comp_seed: u64,
         digest: u64,
         compression: CompressionKind,
+        /// Byzantine roles rotate per iteration (watch the `Broadcast`
+        /// role bit rather than trusting `byzantine` for the whole run).
+        rotate: bool,
+        /// Reinitialize compression stream + EF residual from `comp_seed`
+        /// (a rejoin into a reclaimed slot); `false` on a leader-failover
+        /// reconnect, where the worker keeps the state it already carries.
+        reset_stream: bool,
+        /// First iteration this device will serve (0 for a run start).
+        resume_iter: u64,
+        /// Current iterate, shipped on mid-run (re)joins so the device
+        /// needs no history to serve the next broadcast.
+        iterate: Option<Vec<f32>>,
         dataset: Option<DatasetBlock>,
     },
     /// Leader → worker, one per iteration: the iterate and the device's
     /// already-resolved subset list (the leader applies the cyclic task
-    /// row and the slot permutation p^t before sending).
-    Broadcast { iter: u32, x: Vec<f32>, subsets: Vec<u32> },
+    /// row and the slot permutation p^t before sending). `byzantine` is
+    /// this device's role *for this iteration*; `cursor` (rotation under
+    /// device-side compression only) is the compression-stream state the
+    /// device must adopt before compressing this iteration's uplink.
+    Broadcast {
+        iter: u32,
+        x: Vec<f32>,
+        subsets: Vec<u32>,
+        byzantine: bool,
+        cursor: Option<RngState>,
+    },
     /// Worker → leader: the coded (optionally compressed) uplink.
     /// `analytic_bits` is the operator's exact bit accounting for this
     /// message (0 when the payload is an uncompressed true vector).
-    Upload { iter: u32, device: u32, analytic_bits: u64, payload: Payload },
+    /// `cursor` echoes the worker's post-compression stream state when
+    /// the leader asked for a hand-off via the `Broadcast` cursor.
+    Upload {
+        iter: u32,
+        device: u32,
+        analytic_bits: u64,
+        cursor: Option<RngState>,
+        payload: Payload,
+    },
     /// Leader → worker: end of run.
     Shutdown,
 }
@@ -614,6 +697,10 @@ impl Msg {
                 comp_seed,
                 digest,
                 compression,
+                rotate,
+                reset_stream,
+                resume_iter,
+                iterate,
                 dataset,
             } => {
                 w.u8(2);
@@ -626,6 +713,16 @@ impl Msg {
                 w.u64(*comp_seed);
                 w.u64(*digest);
                 encode_compression(*compression, &mut w);
+                w.u8(u8::from(*rotate));
+                w.u8(u8::from(*reset_stream));
+                w.u64(*resume_iter);
+                match iterate {
+                    None => w.u8(0),
+                    Some(x) => {
+                        w.u8(1);
+                        w.f32_slice(x);
+                    }
+                }
                 match dataset {
                     None => w.u8(0),
                     Some(block) => {
@@ -634,7 +731,7 @@ impl Msg {
                     }
                 }
             }
-            Msg::Broadcast { iter, x, subsets } => {
+            Msg::Broadcast { iter, x, subsets, byzantine, cursor } => {
                 w.u8(3);
                 w.u32(*iter);
                 w.f32_slice(x);
@@ -642,12 +739,15 @@ impl Msg {
                 for &s in subsets {
                     w.u32(s);
                 }
+                w.u8(u8::from(*byzantine));
+                w.opt_rng_state(cursor);
             }
-            Msg::Upload { iter, device, analytic_bits, payload } => {
+            Msg::Upload { iter, device, analytic_bits, cursor, payload } => {
                 w.u8(4);
                 w.u32(*iter);
                 w.u32(*device);
                 w.u64(*analytic_bits);
+                w.opt_rng_state(cursor);
                 payload.encode_into(&mut w);
             }
             Msg::Shutdown => w.u8(5),
@@ -670,6 +770,14 @@ impl Msg {
                 let comp_seed = r.u64()?;
                 let digest = r.u64()?;
                 let compression = decode_compression(&mut r)?;
+                let rotate = r.u8()? != 0;
+                let reset_stream = r.u8()? != 0;
+                let resume_iter = r.u64()?;
+                let iterate = match r.u8()? {
+                    0 => None,
+                    1 => Some(r.f32_vec()?),
+                    other => bail!("bad iterate-presence byte {other}"),
+                };
                 let dataset = match r.u8()? {
                     0 => None,
                     1 => Some(DatasetBlock::decode(&mut r)?),
@@ -685,14 +793,25 @@ impl Msg {
                     comp_seed,
                     digest,
                     compression,
+                    rotate,
+                    reset_stream,
+                    resume_iter,
+                    iterate,
                     dataset,
                 }
             }
-            3 => Msg::Broadcast { iter: r.u32()?, x: r.f32_vec()?, subsets: r.u32_vec()? },
+            3 => Msg::Broadcast {
+                iter: r.u32()?,
+                x: r.f32_vec()?,
+                subsets: r.u32_vec()?,
+                byzantine: r.u8()? != 0,
+                cursor: r.opt_rng_state()?,
+            },
             4 => Msg::Upload {
                 iter: r.u32()?,
                 device: r.u32()?,
                 analytic_bits: r.u64()?,
+                cursor: r.opt_rng_state()?,
                 payload: Payload::decode(&mut r)?,
             },
             5 => Msg::Shutdown,
@@ -712,8 +831,9 @@ impl Msg {
 /// leader encodes this once per iteration and shares it across all devices;
 /// a per-device [`broadcast_tail`] completes the payload. By construction
 /// `prefix ‖ tail` is byte-identical to
-/// `Msg::Broadcast { iter, x, subsets }.encode()` (pinned by a test below),
-/// so a receiver cannot tell which path produced its frame.
+/// `Msg::Broadcast { iter, x, subsets, byzantine, cursor }.encode()`
+/// (pinned by a test below), so a receiver cannot tell which path produced
+/// its frame.
 pub fn broadcast_prefix(iter: u32, x: &[f32]) -> Vec<u8> {
     let mut w = Writer::with_capacity(1 + 4 + 4 + 4 * x.len());
     w.u8(3);
@@ -723,13 +843,16 @@ pub fn broadcast_prefix(iter: u32, x: &[f32]) -> Vec<u8> {
 }
 
 /// The per-device suffix of a `Broadcast` payload: the resolved subset list
-/// (`u32 len | len × u32`). See [`broadcast_prefix`].
-pub fn broadcast_tail(subsets: &[u32]) -> Vec<u8> {
-    let mut w = Writer::with_capacity(4 + 4 * subsets.len());
+/// (`u32 len | len × u32`), the per-iteration role bit and the optional
+/// stream-cursor hand-off. See [`broadcast_prefix`].
+pub fn broadcast_tail(subsets: &[u32], byzantine: bool, cursor: &Option<RngState>) -> Vec<u8> {
+    let mut w = Writer::with_capacity(4 + 4 * subsets.len() + 2 + 26);
     w.u32(subsets.len() as u32);
     for &s in subsets {
         w.u32(s);
     }
+    w.u8(u8::from(byzantine));
+    w.opt_rng_state(cursor);
     w.finish()
 }
 
@@ -808,10 +931,35 @@ mod tests {
                 comp_seed: 42,
                 digest: 7,
                 compression: CompressionKind::Qsgd { levels: 16 },
+                rotate: false,
+                reset_stream: false,
+                resume_iter: 0,
+                iterate: None,
                 dataset,
             };
             assert_eq!(round_trip(&h), h);
         }
+    }
+
+    #[test]
+    fn rejoin_hello_round_trips_iterate_and_resume_fields() {
+        let h = Msg::Hello {
+            version: WIRE_VERSION,
+            device: 2,
+            n_devices: 6,
+            dim: 3,
+            byzantine: false,
+            device_compression: true,
+            comp_seed: 0xA5A5,
+            digest: 9,
+            compression: CompressionKind::EfTopK { k: 2 },
+            rotate: true,
+            reset_stream: true,
+            resume_iter: 37,
+            iterate: Some(vec![1.5, -0.25, 0.0]),
+            dataset: None,
+        };
+        assert_eq!(round_trip(&h), h);
     }
 
     #[test]
@@ -835,6 +983,10 @@ mod tests {
                 comp_seed: 1,
                 digest: 2,
                 compression,
+                rotate: false,
+                reset_stream: false,
+                resume_iter: 0,
+                iterate: None,
                 dataset: None,
             };
             assert_eq!(round_trip(&h), h, "{compression:?}");
@@ -853,15 +1005,29 @@ mod tests {
 
     #[test]
     fn broadcast_and_upload_round_trip() {
-        let b = Msg::Broadcast { iter: 12, x: vec![1.5, -2.25, 0.0], subsets: vec![4, 0, 2] };
-        assert_eq!(round_trip(&b), b);
-        let u = Msg::Upload {
-            iter: 12,
-            device: 2,
-            analytic_bits: 999,
-            payload: Payload::Sparse { dim: 6, idx: vec![1, 4], values: vec![2.0, -3.0] },
-        };
-        assert_eq!(round_trip(&u), u);
+        let cursors = [
+            None,
+            Some(RngState { state: 3, inc: 5, spare_gauss: None }),
+            Some(RngState { state: 7, inc: 9, spare_gauss: Some(-1.25) }),
+        ];
+        for cursor in cursors {
+            let b = Msg::Broadcast {
+                iter: 12,
+                x: vec![1.5, -2.25, 0.0],
+                subsets: vec![4, 0, 2],
+                byzantine: cursor.is_none(),
+                cursor,
+            };
+            assert_eq!(round_trip(&b), b);
+            let u = Msg::Upload {
+                iter: 12,
+                device: 2,
+                analytic_bits: 999,
+                cursor,
+                payload: Payload::Sparse { dim: 6, idx: vec![1, 4], values: vec![2.0, -3.0] },
+            };
+            assert_eq!(round_trip(&u), u);
+        }
     }
 
     #[test]
@@ -887,15 +1053,28 @@ mod tests {
 
     #[test]
     fn broadcast_splice_parts_concat_to_the_full_encoding() {
-        let cases: [(u32, Vec<f32>, Vec<u32>); 3] = [
-            (0, vec![], vec![]),
-            (7, vec![1.5, -2.25, 0.0], vec![4, 0, 2]),
-            (u32::MAX, vec![f32::MIN_POSITIVE; 17], vec![9]),
+        let cases: [(u32, Vec<f32>, Vec<u32>, bool, Option<RngState>); 4] = [
+            (0, vec![], vec![], false, None),
+            (7, vec![1.5, -2.25, 0.0], vec![4, 0, 2], true, None),
+            (
+                11,
+                vec![0.5],
+                vec![1, 2],
+                false,
+                Some(RngState { state: 17, inc: 19, spare_gauss: Some(0.5) }),
+            ),
+            (u32::MAX, vec![f32::MIN_POSITIVE; 17], vec![9], false, None),
         ];
-        for (iter, x, subsets) in cases {
-            let msg = Msg::Broadcast { iter, x: x.clone(), subsets: subsets.clone() };
+        for (iter, x, subsets, byzantine, cursor) in cases {
+            let msg = Msg::Broadcast {
+                iter,
+                x: x.clone(),
+                subsets: subsets.clone(),
+                byzantine,
+                cursor,
+            };
             let mut spliced = broadcast_prefix(iter, &x);
-            spliced.extend_from_slice(&broadcast_tail(&subsets));
+            spliced.extend_from_slice(&broadcast_tail(&subsets, byzantine, &cursor));
             assert_eq!(spliced, msg.encode(), "iter {iter}");
         }
     }
@@ -965,7 +1144,13 @@ mod tests {
         assert_eq!(p.to_dense().unwrap(), vec![0.0f32; 10]);
         // degenerate messages carry no per-coordinate bits on the wire
         assert_eq!(p.encoded_len(), 13, "header only");
-        let msg = Msg::Upload { iter: 0, device: 0, analytic_bits: c.bits as u64, payload: p };
+        let msg = Msg::Upload {
+            iter: 0,
+            device: 0,
+            analytic_bits: c.bits as u64,
+            cursor: None,
+            payload: p,
+        };
         assert_eq!(Msg::decode(&msg.encode()).unwrap(), msg);
     }
 
@@ -977,6 +1162,7 @@ mod tests {
         w.u32(0);
         w.u32(0);
         w.u64(0);
+        w.u8(0); // no cursor
         w.u8(1); // Sparse
         w.u32(2); // dim
         w.u32(3); // nnz > dim
@@ -986,7 +1172,13 @@ mod tests {
         }
         assert!(Msg::decode(&w.finish()).is_err());
         // truncated broadcast
-        let b = Msg::Broadcast { iter: 0, x: vec![1.0; 8], subsets: vec![1, 2] };
+        let b = Msg::Broadcast {
+            iter: 0,
+            x: vec![1.0; 8],
+            subsets: vec![1, 2],
+            byzantine: false,
+            cursor: None,
+        };
         let enc = b.encode();
         assert!(Msg::decode(&enc[..enc.len() - 3]).is_err());
         // trailing garbage

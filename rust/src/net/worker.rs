@@ -9,7 +9,12 @@
 //! wire ARE the compressed message; devices playing the Byzantine role
 //! upload their true vector densely and the leader crafts their lie
 //! centrally (the omniscient-adversary emulation cannot live on a real
-//! device).
+//! device). When the leader announced role rotation (`Hello.rotate`), the
+//! per-iteration `Broadcast` role bit is authoritative instead of the
+//! session-level `Hello.byzantine` — and a `Broadcast` stream-cursor
+//! hand-off, when present, replaces the local compression stream before
+//! compressing, with the post-compression cursor echoed in the `Upload`
+//! (this keeps the leader's stream mirror exact while roles move around).
 //!
 //! Under an error-feedback kind (`ef-*`, see [`crate::compress::ef`]) the
 //! worker holds its own residual memory: each served broadcast compresses
@@ -19,24 +24,34 @@
 //! leader's interest in it — the leader's mirror of that slot is reset, so
 //! a rejoining slot can never replay stale state.
 //!
+//! **Leader failover.** With [`WorkerOpts::reconnect_addr`] set, a lost
+//! connection mid-run is not fatal: the worker redials (bounded attempts ×
+//! backoff), re-joins with its device id, and applies the fresh `Hello` —
+//! keeping its live compression stream and EF residual when the leader
+//! says `reset_stream: false` (a warm restart resuming the same run), or
+//! reinitializing from the new `comp_seed` when `reset_stream: true` (a
+//! rejoin into a reclaimed slot).
+//!
 //! The same function serves every transport: the in-process cluster
 //! simulation passes a borrowed dataset (no copy per worker), while the
 //! `lad node-worker` CLI decodes the dataset from `Hello`.
 //!
 //! [`run_worker_opts`] adds fault injection for the partial-participation
-//! experiments: with [`WorkerOpts::stall_prob`] set, the worker swallows
-//! broadcasts from a private seeded stream instead of uploading —
-//! deterministic crash-fault emulation against the leader's gather
-//! deadline and retirement machinery.
+//! and churn experiments: [`WorkerOpts::stall_prob`] swallows broadcasts
+//! from a private seeded stream, and [`WorkerOpts::stall_after_iter`]
+//! deterministically swallows every broadcast from a given iteration on —
+//! the churn harness's "departing worker" primitive (the leader's gather
+//! deadline then retires the slot for a replacement to reclaim).
 
 use super::transport::Transport;
-use super::wire::{Msg, Payload, WIRE_VERSION};
+use super::wire::{DatasetBlock, Msg, Payload, WIRE_VERSION};
 use crate::compress;
 use crate::data::linreg::LinRegDataset;
 use crate::util::math::{axpy, scale};
 use crate::util::rng::Rng;
 use crate::Result;
 use anyhow::{bail, ensure, Context};
+use std::time::Duration;
 
 /// What a worker did over its lifetime (printed by `lad node-worker`).
 #[derive(Debug, Clone)]
@@ -44,17 +59,20 @@ pub struct WorkerReport {
     pub device: usize,
     /// Iterations served (broadcasts answered with an upload).
     pub iters: usize,
-    /// Broadcasts deliberately left unanswered ([`WorkerOpts::stall_prob`]).
+    /// Broadcasts deliberately left unanswered ([`WorkerOpts::stall_prob`]
+    /// or [`WorkerOpts::stall_after_iter`]).
     pub stalled: usize,
+    /// Successful leader reconnects ([`WorkerOpts::reconnect_addr`]).
+    pub reconnects: usize,
     /// Uplink bytes written (frames included).
     pub up_bytes: u64,
     /// Downlink bytes read (frames included).
     pub down_bytes: u64,
 }
 
-/// Fault-injection knobs for a worker — the device side of the
-/// partial-participation experiments (`sweep::scenarios`).
-#[derive(Debug, Clone, Default)]
+/// Fault-injection and resilience knobs for a worker — the device side of
+/// the partial-participation, churn and failover experiments.
+#[derive(Debug, Clone)]
 pub struct WorkerOpts {
     /// Per-broadcast probability of simulating a stall: the worker
     /// swallows the broadcast and never uploads for that iteration, so
@@ -65,6 +83,151 @@ pub struct WorkerOpts {
     /// own `Rng`, never from training randomness, so a stalling worker's
     /// served iterations stay bit-identical to a live worker's.
     pub stall_seed: u64,
+    /// Deterministic churn: serve every broadcast whose iteration is
+    /// below this, then swallow all later ones (the leader retires the
+    /// slot after its miss streak fills). `None` (default) never departs.
+    pub stall_after_iter: Option<u64>,
+    /// Redial target after a lost connection (leader failover). `None`
+    /// (the default) makes a lost connection fatal, as before.
+    pub reconnect_addr: Option<String>,
+    /// Redial attempts before giving up.
+    pub reconnect_attempts: u32,
+    /// Wait between redial attempts.
+    pub reconnect_backoff: Duration,
+}
+
+impl Default for WorkerOpts {
+    fn default() -> Self {
+        WorkerOpts {
+            stall_prob: 0.0,
+            stall_seed: 0,
+            stall_after_iter: None,
+            reconnect_addr: None,
+            reconnect_attempts: 0,
+            reconnect_backoff: Duration::from_millis(250),
+        }
+    }
+}
+
+/// The `Hello` fields a worker acts on, plus the bytes it cost to read.
+struct HelloInfo {
+    dim: usize,
+    byzantine: bool,
+    device_compression: bool,
+    comp_seed: u64,
+    compression: crate::config::CompressionKind,
+    rotate: bool,
+    reset_stream: bool,
+    dataset: Option<DatasetBlock>,
+    bytes: u64,
+}
+
+/// Receive + validate one `Hello` on `link` (shared by the initial
+/// handshake and the failover re-handshake).
+fn recv_hello(
+    link: &mut Box<dyn Transport>,
+    device: usize,
+    local_digest: Option<u64>,
+) -> Result<HelloInfo> {
+    let (hello, bytes) = link.recv().context("waiting for leader hello")?;
+    let Msg::Hello {
+        version,
+        device: dev,
+        n_devices: _,
+        dim,
+        byzantine,
+        device_compression,
+        comp_seed,
+        digest,
+        compression,
+        rotate,
+        reset_stream,
+        resume_iter: _,
+        iterate: _,
+        dataset,
+    } = hello
+    else {
+        bail!("expected hello from leader (protocol error)");
+    };
+    ensure!(
+        version == WIRE_VERSION,
+        "protocol version mismatch: leader {version}, us {WIRE_VERSION}"
+    );
+    ensure!(dev as usize == device, "leader assigned device {dev}, we are {device}");
+    if let Some(local) = local_digest {
+        ensure!(
+            local == digest,
+            "config digest mismatch: leader {digest:#018x}, local {local:#018x}"
+        );
+    }
+    // reject degenerate operator params with an error, not a constructor
+    // panic, since they arrive over the wire
+    match compression {
+        crate::config::CompressionKind::RandK { k }
+        | crate::config::CompressionKind::TopK { k }
+        | crate::config::CompressionKind::EfRandK { k }
+        | crate::config::CompressionKind::EfTopK { k } => {
+            ensure!(k >= 1, "hello carries a degenerate sparsifier (k = 0)");
+        }
+        crate::config::CompressionKind::Qsgd { levels }
+        | crate::config::CompressionKind::EfQsgd { levels } => {
+            ensure!(levels >= 1, "hello carries a degenerate quantizer (0 levels)");
+        }
+        crate::config::CompressionKind::None => {}
+    }
+    Ok(HelloInfo {
+        dim: dim as usize,
+        byzantine,
+        device_compression,
+        comp_seed,
+        compression,
+        rotate,
+        reset_stream,
+        dataset,
+        bytes,
+    })
+}
+
+/// Redial the leader after a lost connection: bounded attempts with a
+/// fixed backoff, each attempt re-running the full `Join` → `Hello`
+/// handshake. Returns the fresh link, its `Hello`, and the handshake
+/// bytes `(up, down)`.
+fn redial(
+    device: usize,
+    local_digest: Option<u64>,
+    opts: &WorkerOpts,
+) -> Result<(Box<dyn Transport>, HelloInfo, u64)> {
+    let addr = opts.reconnect_addr.as_deref().expect("redial requires reconnect_addr");
+    let mut last: anyhow::Error = anyhow::anyhow!("no reconnect attempts configured");
+    for attempt in 1..=opts.reconnect_attempts {
+        std::thread::sleep(opts.reconnect_backoff);
+        let mut link = match super::transport::connect(addr) {
+            Ok(l) => l,
+            Err(e) => {
+                last = e.context(format!("reconnect attempt {attempt} to {addr}"));
+                continue;
+            }
+        };
+        let join_bytes = match link.send(&Msg::Join {
+            version: WIRE_VERSION,
+            device: device as u32,
+            digest: local_digest.unwrap_or(0),
+        }) {
+            Ok(nb) => nb,
+            Err(e) => {
+                last = e.context(format!("reconnect attempt {attempt}: join"));
+                continue;
+            }
+        };
+        match recv_hello(&mut link, device, local_digest) {
+            Ok(h) => return Ok((link, h, join_bytes)),
+            Err(e) => last = e.context(format!("reconnect attempt {attempt}: hello")),
+        }
+    }
+    Err(last.context(format!(
+        "worker {device}: leader unreachable after {} attempts",
+        opts.reconnect_attempts
+    )))
 }
 
 /// Run one device until the leader shuts the run down.
@@ -83,7 +246,7 @@ pub fn run_worker(
     run_worker_opts(link, device, local_ds, local_digest, &WorkerOpts::default())
 }
 
-/// [`run_worker`] with fault-injection options (see [`WorkerOpts`]).
+/// [`run_worker`] with fault-injection and failover options.
 pub fn run_worker_opts(
     mut link: Box<dyn Transport>,
     device: usize,
@@ -98,36 +261,10 @@ pub fn run_worker_opts(
         device: device as u32,
         digest: local_digest.unwrap_or(0),
     })?;
+    let hello = recv_hello(&mut link, device, local_digest)?;
+    down += hello.bytes;
 
-    let (hello, n) = link.recv().context("waiting for leader hello")?;
-    down += n;
-    let Msg::Hello {
-        version,
-        device: dev,
-        n_devices: _,
-        dim,
-        byzantine,
-        device_compression,
-        comp_seed,
-        digest,
-        compression,
-        dataset,
-    } = hello
-    else {
-        bail!("expected hello from leader (protocol error)");
-    };
-    ensure!(
-        version == WIRE_VERSION,
-        "protocol version mismatch: leader {version}, us {WIRE_VERSION}"
-    );
-    ensure!(dev as usize == device, "leader assigned device {dev}, we are {device}");
-    if let Some(local) = local_digest {
-        ensure!(
-            local == digest,
-            "config digest mismatch: leader {digest:#018x}, local {local:#018x}"
-        );
-    }
-    let owned: Option<LinRegDataset> = match (local_ds, dataset) {
+    let owned: Option<LinRegDataset> = match (local_ds, hello.dataset) {
         (Some(_), _) => None,
         (None, Some(block)) => Some(block.into_dataset().context("decoding dataset block")?),
         (None, None) => bail!("leader sent no dataset and none was provided locally"),
@@ -136,38 +273,64 @@ pub fn run_worker_opts(
         Some(d) => d,
         None => owned.as_ref().unwrap(),
     };
-    ensure!(ds.dim() == dim as usize, "dataset dim {} != leader dim {dim}", ds.dim());
+    ensure!(ds.dim() == hello.dim, "dataset dim {} != leader dim {}", ds.dim(), hello.dim);
 
-    // reject degenerate operator params with an error, not a constructor
-    // panic, since they arrive over the wire
-    match compression {
-        crate::config::CompressionKind::RandK { k }
-        | crate::config::CompressionKind::TopK { k }
-        | crate::config::CompressionKind::EfRandK { k }
-        | crate::config::CompressionKind::EfTopK { k } => {
-            ensure!(k >= 1, "hello carries a degenerate sparsifier (k = 0)");
-        }
-        crate::config::CompressionKind::Qsgd { levels }
-        | crate::config::CompressionKind::EfQsgd { levels } => {
-            ensure!(levels >= 1, "hello carries a degenerate quantizer (0 levels)");
-        }
-        crate::config::CompressionKind::None => {}
-    }
-    let comp = compress::from_kind(compression);
-    let mut comp_rng = Rng::new(comp_seed);
+    let comp = compress::from_kind(hello.compression);
+    let mut comp_rng = Rng::new(hello.comp_seed);
     // worker-held EF residual memory (one row, this device): zero at
     // process start; a stalled iteration never touches it
-    let mut ef = compress::EfState::for_kind(compression, 1, ds.dim());
+    let mut ef = compress::EfState::for_kind(hello.compression, 1, ds.dim());
     let mut stall_rng = Rng::new(opts.stall_seed);
-    let compress_uplink = device_compression && !byzantine;
+    // session-level role + mode; under rotation the per-broadcast bit
+    // overrides the role each iteration
+    let mut session_byz = hello.byzantine;
+    let mut device_compression = hello.device_compression;
+    let mut rotate = hello.rotate;
+    let compression = hello.compression;
     let mut iters = 0usize;
     let mut stalled = 0usize;
+    let mut reconnects = 0usize;
 
     loop {
-        let (msg, n) = link.recv().context("connection to leader lost")?;
+        let (msg, n) = match link.recv() {
+            Ok(v) => v,
+            Err(e) => {
+                if opts.reconnect_addr.is_none() || opts.reconnect_attempts == 0 {
+                    return Err(e).context("connection to leader lost");
+                }
+                // leader failover: redial, re-handshake, and either keep
+                // the live stream state (reset_stream: false — a warm
+                // restart of the same run) or reinitialize it (a rejoin
+                // into a reclaimed slot)
+                let (new_link, h, join_bytes) = redial(device, local_digest, opts)?;
+                ensure!(
+                    h.compression == compression,
+                    "leader changed the compression kind across a reconnect"
+                );
+                ensure!(h.dim == ds.dim(), "leader changed dim across a reconnect");
+                link = new_link;
+                up += join_bytes;
+                down += h.bytes;
+                if h.reset_stream {
+                    comp_rng = Rng::new(h.comp_seed);
+                    ef = compress::EfState::for_kind(compression, 1, ds.dim());
+                }
+                session_byz = h.byzantine;
+                device_compression = h.device_compression;
+                rotate = h.rotate;
+                reconnects += 1;
+                continue;
+            }
+        };
         down += n;
         match msg {
-            Msg::Broadcast { iter, x, subsets } => {
+            Msg::Broadcast { iter, x, subsets, byzantine, cursor } => {
+                // deterministic churn: from the departure iteration on,
+                // swallow everything (no compute, no stall-stream draw)
+                if opts.stall_after_iter.is_some_and(|c| iter as u64 >= c) {
+                    stalled += 1;
+                    continue;
+                }
                 // crash-fault emulation: swallow the broadcast before any
                 // compute so a stalled iteration consumes no training
                 // randomness (the stall stream is private)
@@ -187,26 +350,48 @@ pub fn run_worker_opts(
                     axpy(1.0, &g, &mut coded);
                 }
                 scale(&mut coded, 1.0 / subsets.len() as f32);
-                let (payload, analytic_bits) = if compress_uplink {
+                let role_byz = if rotate { byzantine } else { session_byz };
+                let (payload, analytic_bits, echo) = if device_compression && !role_byz {
+                    // a stream-cursor hand-off (rotation) replaces the
+                    // local stream with the leader's mirror before
+                    // compressing; the post-compression cursor is echoed
+                    // back so the mirror stays exact
+                    if let Some(st) = cursor {
+                        comp_rng = Rng::restore(st);
+                    }
                     let c = match ef.as_mut() {
                         Some(st) => st.step(0, &coded, comp.as_ref(), &mut comp_rng),
                         None => comp.compress(&coded, &mut comp_rng),
                     };
-                    (Payload::from_compressed(&c), c.bits as u64)
+                    let echo = cursor.is_some().then(|| comp_rng.save_state());
+                    (Payload::from_compressed(&c), c.bits as u64, echo)
                 } else {
-                    (Payload::Dense { values: coded }, 0)
+                    (Payload::Dense { values: coded }, 0, None)
                 };
-                up += link.send(&Msg::Upload {
+                let sent = link.send(&Msg::Upload {
                     iter,
                     device: device as u32,
                     analytic_bits,
+                    cursor: echo,
                     payload,
-                })?;
+                });
+                match sent {
+                    Ok(nb) => up += nb,
+                    Err(e) => {
+                        if opts.reconnect_addr.is_none() || opts.reconnect_attempts == 0 {
+                            return Err(e).context("uploading to leader");
+                        }
+                        // the upload is lost (the leader's deadline covers
+                        // it); recover the connection on the next recv
+                        eprintln!("worker {device}: upload failed ({e:#}), will redial");
+                        continue;
+                    }
+                }
                 iters += 1;
             }
             Msg::Shutdown => break,
             other => bail!("unexpected message from leader: {other:?}"),
         }
     }
-    Ok(WorkerReport { device, iters, stalled, up_bytes: up, down_bytes: down })
+    Ok(WorkerReport { device, iters, stalled, reconnects, up_bytes: up, down_bytes: down })
 }

@@ -1,23 +1,110 @@
-//! Binary model checkpoints (dependency-free format).
+//! Binary training checkpoints (dependency-free, versioned, sectioned).
 //!
 //! Layout (little-endian):
-//! `magic "LADCKPT1" | iter u64 | seed u64 | len u64 | f32 × len | crc u64`
-//! where crc is a simple FNV-1a over the payload bytes — enough to catch
-//! truncation/corruption without pulling a hashing crate.
+//!
+//! ```text
+//! magic "LADCKPT" | version u8 (=2) | sections... | crc u64
+//! section := tag u8 | body_len u64 | body
+//! ```
+//!
+//! The trailing crc is FNV-1a over every byte between the version byte and
+//! the crc itself, so truncation and bit-flips are caught before any
+//! section is trusted. Unknown section tags and unknown versions are hard
+//! errors — a checkpoint is resumed-from, never best-effort-parsed. The
+//! legacy v1 format (`magic "LADCKPT1"`, fixed layout) shares the 7-byte
+//! magic prefix; its trailing `'1'` reads as the version byte and is
+//! rejected with a clear "format v1" message instead of a CRC or length
+//! mismatch.
+//!
+//! Sections (tag → body):
+//!
+//! | tag | name        | body                                             |
+//! |-----|-------------|--------------------------------------------------|
+//! | 1   | core        | iter u64, seed u64, config digest u64, params (u64 len + f32s) |
+//! | 2   | run-rng     | the leader run RNG cursor ([`RngState`])         |
+//! | 3   | comp        | per-device compression streams: u64 n, n × (seed u64, [`RngState`]) |
+//! | 4   | ef          | leader-side EF residual mirror: u64 n, u64 dim, n×dim f32 |
+//! | 5   | momentum    | momentum-filter buffers: u64 n, u64 q, n×q f32   |
+//! | 6   | roster      | u64 n, n × (dead u8, miss_streak u64, rejoin_epoch u64) |
+//! | 7   | trace       | trace-so-far: label, samples, anomaly/byte counters |
+//!
+//! Only `core` is required. `save` is atomic (sibling `.tmp` +
+//! `fs::rename`), so a leader killed mid-write leaves the previous
+//! checkpoint intact — the property the failover drill relies on.
 
+use crate::util::rng::RngState;
 use crate::Result;
-use anyhow::{bail, Context};
+use anyhow::{bail, ensure, Context};
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"LADCKPT1";
+const MAGIC: &[u8; 7] = b"LADCKPT";
+const VERSION: u8 = 2;
 
-/// A saved training state.
+const SEC_CORE: u8 = 1;
+const SEC_RUN_RNG: u8 = 2;
+const SEC_COMP: u8 = 3;
+const SEC_EF: u8 = 4;
+const SEC_MOMENTUM: u8 = 5;
+const SEC_ROSTER: u8 = 6;
+const SEC_TRACE: u8 = 7;
+
+/// One device's membership record in the [`Checkpoint::roster`] section.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct RosterEntry {
+    /// Slot retired (or never filled) at checkpoint time.
+    pub dead: bool,
+    /// Consecutive gather-deadline misses charged to this device.
+    pub miss_streak: u64,
+    /// How many times this slot has been re-admitted mid-run; salts the
+    /// fresh compression seed a rejoining device is handed.
+    pub rejoin_epoch: u64,
+}
+
+/// The semantic fields of a `TrainTrace` accumulated so far — everything a
+/// warm restart must replay to finish with a trace bit-identical to the
+/// uninterrupted run. Wall-clock telemetry (wall_s, phase ns) is
+/// deliberately absent: timing is never part of trace equality.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TraceBlock {
+    pub label: String,
+    pub iters: Vec<u64>,
+    pub loss: Vec<f64>,
+    pub grad_update_norm: Vec<f64>,
+    pub bits: Vec<u64>,
+    pub anomalies: u64,
+    /// Running analytic-bit accumulator (may be ahead of `bits.last()`
+    /// when the last sample predates the checkpoint iteration).
+    pub bits_total: u64,
+    pub wire_up_bytes: u64,
+    pub wire_down_bytes: u64,
+}
+
+/// A saved training state. `iter`/`seed`/`params` are the v1 trio (the
+/// iterate and where it came from); the optional fields carry the live
+/// leader state the elastic net path needs for bit-identical warm restart.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
+    /// Next iteration to run (the checkpoint is cut *after* `iter - 1`).
     pub iter: u64,
     pub seed: u64,
     pub params: Vec<f32>,
+    /// `net::wire::config_digest` of the run config; 0 when unknown.
+    /// Resume refuses a checkpoint whose digest mismatches the config.
+    pub digest: u64,
+    /// Leader run-RNG cursor (assignment draws, attack crafting).
+    pub run_rng: Option<RngState>,
+    /// Per-device compression streams: the handshake seed plus the
+    /// current cursor of the leader-side mirror.
+    pub comp_streams: Option<Vec<(u64, RngState)>>,
+    /// Leader-side error-feedback residual mirror, one row per device.
+    pub ef_residuals: Option<Vec<Vec<f32>>>,
+    /// Momentum-filter per-device buffers.
+    pub momentum: Option<Vec<Vec<f32>>>,
+    /// Per-device membership state.
+    pub roster: Option<Vec<RosterEntry>>,
+    /// Trace accumulated up to (excluding) `iter`.
+    pub trace: Option<TraceBlock>,
 }
 
 fn fnv1a(bytes: &[u8]) -> u64 {
@@ -29,29 +116,232 @@ fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
+// -- little-endian body writer/reader -----------------------------------
+
+struct W(Vec<u8>);
+
+impl W {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.0.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    fn rng(&mut self, st: &RngState) {
+        self.u64(st.state);
+        self.u64(st.inc);
+        match st.spare_gauss {
+            None => self.u8(0),
+            Some(g) => {
+                self.u8(1);
+                self.f64(g);
+            }
+        }
+    }
+    /// Append one section: tag, body length, body.
+    fn section(&mut self, tag: u8, body: W) {
+        self.u8(tag);
+        self.u64(body.0.len() as u64);
+        self.0.extend_from_slice(&body.0);
+    }
+}
+
+struct R<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> R<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.remaining() >= n, "checkpoint: short section ({} of {n} bytes)",
+            self.remaining());
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    /// A count of `elem` -byte elements, validated against the remainder.
+    fn count(&mut self, elem: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        ensure!(
+            n.checked_mul(elem).is_some_and(|b| b <= self.remaining()),
+            "checkpoint: implausible count {n}"
+        );
+        Ok(n)
+    }
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+    fn rng(&mut self) -> Result<RngState> {
+        let state = self.u64()?;
+        let inc = self.u64()?;
+        let spare_gauss = match self.u8()? {
+            0 => None,
+            1 => Some(self.f64()?),
+            b => bail!("checkpoint: bad spare-gauss flag {b}"),
+        };
+        Ok(RngState { state, inc, spare_gauss })
+    }
+    fn done(self, what: &str) -> Result<()> {
+        ensure!(self.remaining() == 0, "checkpoint: {} trailing bytes in {what} section",
+            self.remaining());
+        Ok(())
+    }
+}
+
 impl Checkpoint {
+    /// The v1-compatible constructor: iterate + provenance, no live state.
     pub fn new(iter: u64, seed: u64, params: Vec<f32>) -> Self {
-        Checkpoint { iter, seed, params }
+        Checkpoint {
+            iter,
+            seed,
+            params,
+            digest: 0,
+            run_rng: None,
+            comp_streams: None,
+            ef_residuals: None,
+            momentum: None,
+            roster: None,
+            trace: None,
+        }
     }
 
+    /// Serialize and write atomically: the bytes land in a sibling `.tmp`
+    /// file which is then renamed over `path`, so a crash mid-write never
+    /// leaves a torn checkpoint where a good one used to be.
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
-        if let Some(parent) = path.as_ref().parent() {
-            std::fs::create_dir_all(parent)?;
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
         }
-        let mut payload = Vec::with_capacity(24 + 4 * self.params.len());
-        payload.extend_from_slice(&self.iter.to_le_bytes());
-        payload.extend_from_slice(&self.seed.to_le_bytes());
-        payload.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
-        for v in &self.params {
-            payload.extend_from_slice(&v.to_le_bytes());
+        let body = self.encode_sections();
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating checkpoint {tmp:?}"))?;
+            f.write_all(MAGIC)?;
+            f.write_all(&[VERSION])?;
+            f.write_all(&body)?;
+            f.write_all(&fnv1a(&body).to_le_bytes())?;
+            f.sync_all()?;
         }
-        let crc = fnv1a(&payload);
-        let mut f = std::fs::File::create(&path)
-            .with_context(|| format!("creating checkpoint {:?}", path.as_ref()))?;
-        f.write_all(MAGIC)?;
-        f.write_all(&payload)?;
-        f.write_all(&crc.to_le_bytes())?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {tmp:?} over {path:?}"))?;
         Ok(())
+    }
+
+    fn encode_sections(&self) -> Vec<u8> {
+        let mut out = W(Vec::with_capacity(64 + 4 * self.params.len()));
+        let mut core = W(Vec::new());
+        core.u64(self.iter);
+        core.u64(self.seed);
+        core.u64(self.digest);
+        core.u64(self.params.len() as u64);
+        for &v in &self.params {
+            core.f32(v);
+        }
+        out.section(SEC_CORE, core);
+        if let Some(st) = &self.run_rng {
+            let mut w = W(Vec::new());
+            w.rng(st);
+            out.section(SEC_RUN_RNG, w);
+        }
+        if let Some(streams) = &self.comp_streams {
+            let mut w = W(Vec::new());
+            w.u64(streams.len() as u64);
+            for (seed, st) in streams {
+                w.u64(*seed);
+                w.rng(st);
+            }
+            out.section(SEC_COMP, w);
+        }
+        if let Some(rows) = &self.ef_residuals {
+            let dim = rows.first().map_or(0, |r| r.len());
+            let mut w = W(Vec::new());
+            w.u64(rows.len() as u64);
+            w.u64(dim as u64);
+            for row in rows {
+                assert_eq!(row.len(), dim, "ragged EF residual rows");
+                for &v in row {
+                    w.f32(v);
+                }
+            }
+            out.section(SEC_EF, w);
+        }
+        if let Some(rows) = &self.momentum {
+            let q = rows.first().map_or(0, |r| r.len());
+            let mut w = W(Vec::new());
+            w.u64(rows.len() as u64);
+            w.u64(q as u64);
+            for row in rows {
+                assert_eq!(row.len(), q, "ragged momentum rows");
+                for &v in row {
+                    w.f32(v);
+                }
+            }
+            out.section(SEC_MOMENTUM, w);
+        }
+        if let Some(roster) = &self.roster {
+            let mut w = W(Vec::new());
+            w.u64(roster.len() as u64);
+            for e in roster {
+                w.u8(u8::from(e.dead));
+                w.u64(e.miss_streak);
+                w.u64(e.rejoin_epoch);
+            }
+            out.section(SEC_ROSTER, w);
+        }
+        if let Some(t) = &self.trace {
+            let mut w = W(Vec::new());
+            w.u64(t.label.len() as u64);
+            w.0.extend_from_slice(t.label.as_bytes());
+            let k = t.iters.len();
+            assert!(
+                t.loss.len() == k && t.grad_update_norm.len() == k && t.bits.len() == k,
+                "ragged trace columns"
+            );
+            w.u64(k as u64);
+            for i in 0..k {
+                w.u64(t.iters[i]);
+                w.f64(t.loss[i]);
+                w.f64(t.grad_update_norm[i]);
+                w.u64(t.bits[i]);
+            }
+            w.u64(t.anomalies);
+            w.u64(t.bits_total);
+            w.u64(t.wire_up_bytes);
+            w.u64(t.wire_down_bytes);
+            out.section(SEC_TRACE, w);
+        }
+        out.0
     }
 
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
@@ -59,28 +349,133 @@ impl Checkpoint {
         std::fs::File::open(&path)
             .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?
             .read_to_end(&mut bytes)?;
-        if bytes.len() < 8 + 24 + 8 || &bytes[..8] != MAGIC {
+        if bytes.len() < 8 || &bytes[..7] != MAGIC {
             bail!("not a LAD checkpoint");
         }
-        let payload = &bytes[8..bytes.len() - 8];
-        let stored_crc = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
-        if fnv1a(payload) != stored_crc {
+        match bytes[7] {
+            VERSION => {}
+            b'1' => bail!(
+                "checkpoint format v1 is no longer supported (this build reads v{VERSION}); \
+                 re-run training to produce a fresh checkpoint"
+            ),
+            v => bail!("unsupported checkpoint version {v} (this build reads v{VERSION})"),
+        }
+        ensure!(bytes.len() >= 8 + 8, "checkpoint crc mismatch (corrupt or truncated)");
+        let body = &bytes[8..bytes.len() - 8];
+        let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        if fnv1a(body) != stored {
             bail!("checkpoint crc mismatch (corrupt or truncated)");
         }
-        let u64_at = |off: usize| -> u64 {
-            u64::from_le_bytes(payload[off..off + 8].try_into().unwrap())
-        };
-        let iter = u64_at(0);
-        let seed = u64_at(8);
-        let len = u64_at(16) as usize;
-        if payload.len() != 24 + 4 * len {
-            bail!("checkpoint length mismatch");
+        Self::decode_sections(body)
+    }
+
+    fn decode_sections(body: &[u8]) -> Result<Self> {
+        let mut r = R { buf: body, pos: 0 };
+        let mut ck: Option<Checkpoint> = None;
+        let mut run_rng = None;
+        let mut comp_streams = None;
+        let mut ef_residuals = None;
+        let mut momentum = None;
+        let mut roster = None;
+        let mut trace = None;
+        while r.remaining() > 0 {
+            let tag = r.u8()?;
+            let len = r.u64()? as usize;
+            let mut s = R { buf: r.take(len)?, pos: 0 };
+            match tag {
+                SEC_CORE => {
+                    ensure!(ck.is_none(), "checkpoint: duplicate core section");
+                    let iter = s.u64()?;
+                    let seed = s.u64()?;
+                    let digest = s.u64()?;
+                    let n = s.count(4)?;
+                    let params = s.f32_vec(n)?;
+                    s.done("core")?;
+                    let mut c = Checkpoint::new(iter, seed, params);
+                    c.digest = digest;
+                    ck = Some(c);
+                }
+                SEC_RUN_RNG => {
+                    run_rng = Some(s.rng()?);
+                    s.done("run-rng")?;
+                }
+                SEC_COMP => {
+                    let n = s.count(25)?;
+                    let mut v = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let seed = s.u64()?;
+                        v.push((seed, s.rng()?));
+                    }
+                    s.done("comp")?;
+                    comp_streams = Some(v);
+                }
+                SEC_EF | SEC_MOMENTUM => {
+                    let n = s.count(8)?;
+                    let dim = s.u64()? as usize;
+                    ensure!(
+                        n.checked_mul(dim).and_then(|c| c.checked_mul(4))
+                            .is_some_and(|b| b <= s.remaining()),
+                        "checkpoint: implausible {n}x{dim} float block"
+                    );
+                    let mut rows = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        rows.push(s.f32_vec(dim)?);
+                    }
+                    s.done(if tag == SEC_EF { "ef" } else { "momentum" })?;
+                    if tag == SEC_EF {
+                        ef_residuals = Some(rows);
+                    } else {
+                        momentum = Some(rows);
+                    }
+                }
+                SEC_ROSTER => {
+                    let n = s.count(17)?;
+                    let mut v = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let dead = match s.u8()? {
+                            0 => false,
+                            1 => true,
+                            b => bail!("checkpoint: bad roster dead flag {b}"),
+                        };
+                        let miss_streak = s.u64()?;
+                        let rejoin_epoch = s.u64()?;
+                        v.push(RosterEntry { dead, miss_streak, rejoin_epoch });
+                    }
+                    s.done("roster")?;
+                    roster = Some(v);
+                }
+                SEC_TRACE => {
+                    let lab_len = s.count(1)?;
+                    let label = String::from_utf8(s.take(lab_len)?.to_vec())
+                        .context("checkpoint: trace label is not UTF-8")?;
+                    let k = s.count(32)?;
+                    let mut t = TraceBlock { label, ..Default::default() };
+                    for _ in 0..k {
+                        t.iters.push(s.u64()?);
+                        t.loss.push(s.f64()?);
+                        t.grad_update_norm.push(s.f64()?);
+                        t.bits.push(s.u64()?);
+                    }
+                    t.anomalies = s.u64()?;
+                    t.bits_total = s.u64()?;
+                    t.wire_up_bytes = s.u64()?;
+                    t.wire_down_bytes = s.u64()?;
+                    s.done("trace")?;
+                    trace = Some(t);
+                }
+                other => bail!("checkpoint: unknown section tag {other}"),
+            }
         }
-        let params = payload[24..]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
-        Ok(Checkpoint { iter, seed, params })
+        let Some(mut ck) = ck else {
+            bail!("checkpoint: missing core section");
+        };
+        ck.run_rng = run_rng;
+        ck.comp_streams = comp_streams;
+        ck.ef_residuals = ef_residuals;
+        ck.momentum = momentum;
+        ck.roster = roster;
+        ck.trace = trace;
+        Ok(ck)
     }
 }
 
@@ -90,6 +485,34 @@ mod tests {
 
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join("lad_ckpt_test").join(name)
+    }
+
+    fn full(name: &str) -> Checkpoint {
+        let mut ck = Checkpoint::new(42, 7, (0..100).map(|i| i as f32 * 0.5 - 3.0).collect());
+        ck.digest = 0xFEED_FACE_CAFE_BEEF;
+        ck.run_rng = Some(RngState { state: 1, inc: 3, spare_gauss: Some(-0.25) });
+        ck.comp_streams = Some(vec![
+            (11, RngState { state: 5, inc: 7, spare_gauss: None }),
+            (13, RngState { state: 9, inc: 11, spare_gauss: Some(1.5) }),
+        ]);
+        ck.ef_residuals = Some(vec![vec![0.5, -1.25, 3.0], vec![0.0, -0.0, f32::MIN_POSITIVE]]);
+        ck.momentum = Some(vec![vec![1.0; 4], vec![-2.0; 4]]);
+        ck.roster = Some(vec![
+            RosterEntry { dead: false, miss_streak: 0, rejoin_epoch: 0 },
+            RosterEntry { dead: true, miss_streak: 3, rejoin_epoch: 1 },
+        ]);
+        ck.trace = Some(TraceBlock {
+            label: name.to_string(),
+            iters: vec![0, 10],
+            loss: vec![10.0, 5.0],
+            grad_update_norm: vec![1.0, 0.5],
+            bits: vec![100, 200],
+            anomalies: 2,
+            bits_total: 200,
+            wire_up_bytes: 4321,
+            wire_down_bytes: 8765,
+        });
+        ck
     }
 
     #[test]
@@ -103,8 +526,29 @@ mod tests {
     }
 
     #[test]
+    fn full_state_round_trips_bitwise() {
+        // satellite: EF residual mirrors and momentum buffers survive
+        // save/load bitwise, including a retired-then-rejoined device's
+        // roster entry (dead=true, rejoin_epoch=1) alongside the zeroed
+        // residual the rejoin path would leave behind
+        let mut ck = full("elastic");
+        ck.ef_residuals = Some(vec![vec![0.5, -1.25, 3.0], vec![0.0; 3]]);
+        let p = tmp("full.ckpt");
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(ck, back);
+        let ef = back.ef_residuals.unwrap();
+        assert_eq!(
+            ef[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            [0.5f32, -1.25, 3.0].iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(ef[1].iter().all(|v| v.to_bits() == 0), "rejoined residual stays zeroed");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
     fn detects_corruption() {
-        let ck = Checkpoint::new(1, 2, vec![1.0, 2.0, 3.0]);
+        let ck = full("corrupt");
         let p = tmp("corrupt.ckpt");
         ck.save(&p).unwrap();
         let mut bytes = std::fs::read(&p).unwrap();
@@ -133,6 +577,61 @@ mod tests {
         std::fs::create_dir_all(p.parent().unwrap()).unwrap();
         std::fs::write(&p, b"definitely not a checkpoint, sorry").unwrap();
         assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_v1_with_a_clear_message() {
+        // a byte-accurate v1 checkpoint: magic "LADCKPT1", fixed layout
+        let p = tmp("v1.ckpt");
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u64.to_le_bytes()); // iter
+        payload.extend_from_slice(&2u64.to_le_bytes()); // seed
+        payload.extend_from_slice(&1u64.to_le_bytes()); // len
+        payload.extend_from_slice(&1.0f32.to_le_bytes());
+        let mut bytes = b"LADCKPT1".to_vec();
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = format!("{}", Checkpoint::load(&p).unwrap_err());
+        assert!(err.contains("v1") && err.contains("no longer supported"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_unknown_versions_and_sections() {
+        let p = tmp("vx.ckpt");
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(&p, b"LADCKPT\x09________").unwrap();
+        let err = format!("{}", Checkpoint::load(&p).unwrap_err());
+        assert!(err.contains("version 9"), "{err}");
+        // a valid frame around an unknown section tag is rejected too
+        let mut body = W(Vec::new());
+        body.section(99, W(vec![1, 2, 3]));
+        let mut bytes = MAGIC.to_vec();
+        bytes.push(VERSION);
+        bytes.extend_from_slice(&body.0);
+        bytes.extend_from_slice(&fnv1a(&body.0).to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = format!("{}", Checkpoint::load(&p).unwrap_err());
+        assert!(err.contains("unknown section tag 99"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_no_tmp_left_behind() {
+        let ck = full("atomic");
+        let p = tmp("atomic.ckpt");
+        ck.save(&p).unwrap();
+        // overwrite with new content: tmp sibling must not linger
+        let mut ck2 = ck.clone();
+        ck2.iter = 99;
+        ck2.save(&p).unwrap();
+        assert_eq!(Checkpoint::load(&p).unwrap().iter, 99);
+        let mut tmp_path = p.as_os_str().to_owned();
+        tmp_path.push(".tmp");
+        assert!(!std::path::Path::new(&tmp_path).exists());
         std::fs::remove_file(p).ok();
     }
 

@@ -21,11 +21,14 @@ use crate::config::TrainConfig;
 use crate::data::linreg::LinRegDataset;
 use crate::net::transport::{ChannelTransport, Transport};
 use crate::net::worker::{run_worker_opts, WorkerOpts};
-use crate::net::{Leader, LeaderOpts};
+use crate::net::{Leader, LeaderOpts, Msg, RejoinRequest, MISS_RETIRE_STREAK};
+use crate::server::checkpoint::Checkpoint;
 use crate::server::metrics::TrainTrace;
 use crate::util::parallel::Pool;
 use crate::util::rng::Rng;
 use crate::Result;
+use std::path::Path;
+use std::sync::mpsc;
 
 /// Fault-injection options for [`run_cluster_with`] — the
 /// partial-participation experiment knobs (sweep `stall_prob` ×
@@ -115,7 +118,11 @@ pub fn run_cluster_with(
         for i in 0..n {
             let (leader_half, worker_half) = ChannelTransport::pair();
             links.push(Box::new(leader_half));
-            let wopts = WorkerOpts { stall_prob: opts.stall_prob, stall_seed: stall_seeds[i] };
+            let wopts = WorkerOpts {
+                stall_prob: opts.stall_prob,
+                stall_seed: stall_seeds[i],
+                ..WorkerOpts::default()
+            };
             scope.spawn(move || {
                 // worker event loop: join, then answer every broadcast;
                 // errors surface on the leader side as a lost connection
@@ -133,6 +140,213 @@ pub fn run_cluster_with(
             send_dataset: false,
         };
         leader.run(links, x0, label, rng)
+    })
+}
+
+/// The leader-kill / warm-restart drill as a single in-process harness:
+/// run phase 1 with [`LeaderOpts::halt_after`] set to `kill_iter` (the
+/// leader completes that iteration, writes a final [`Checkpoint`] to
+/// `ckpt_path`, and dies *without* `Shutdown`), then load the checkpoint
+/// and finish the run with a fresh leader + fresh worker threads via
+/// [`Leader::resume`]. The returned trace — and the final iterate left
+/// in `x0` — are bit-identical to an uninterrupted [`run_cluster_with`]
+/// run (resume handshake bytes are not counted; pinned by
+/// `tests/net_cluster.rs` and the warm-restart lattice in
+/// `tests/fuzz_determinism.rs`).
+///
+/// Worker-side stall streams restart from scratch in phase 2, so this
+/// harness rejects `stall_prob > 0` — compose churn via
+/// [`run_cluster_churn`]'s deterministic `stall_after_iter` instead.
+pub fn run_cluster_kill_resume(
+    cfg: &TrainConfig,
+    ds: &LinRegDataset,
+    agg: &dyn Aggregator,
+    attack: &dyn Attack,
+    comp: &dyn Compressor,
+    x0: &mut Vec<f32>,
+    label: &str,
+    rng: &mut Rng,
+    pool: &Pool,
+    opts: &ClusterOpts,
+    kill_iter: u64,
+    ckpt_path: &Path,
+) -> Result<TrainTrace> {
+    cfg.validate()?;
+    anyhow::ensure!(
+        kill_iter + 1 < cfg.iters as u64,
+        "kill_iter {kill_iter} leaves no iterations to resume ({} total)",
+        cfg.iters
+    );
+    anyhow::ensure!(
+        opts.stall_prob == 0.0,
+        "kill/resume is incompatible with stall_prob: restarted workers would \
+         redraw their stall streams; use run_cluster_churn for churn"
+    );
+    let n = cfg.n_devices;
+
+    // ---- phase 1: train to kill_iter, checkpoint, die without Shutdown ----
+    let mut lopts = opts.leader.clone();
+    lopts.checkpoint_path = Some(ckpt_path.to_path_buf());
+    lopts.halt_after = Some(kill_iter);
+    let phase1 = std::thread::scope(|scope| {
+        let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+        for i in 0..n {
+            let (leader_half, worker_half) = ChannelTransport::pair();
+            links.push(Box::new(leader_half));
+            let wopts = WorkerOpts::default();
+            scope.spawn(move || {
+                // phase boundary: the halting leader drops its links, the
+                // worker's recv errors out and the thread exits
+                let _ = run_worker_opts(Box::new(worker_half), i, Some(ds), None, &wopts);
+            });
+        }
+        let leader = Leader {
+            cfg,
+            ds,
+            agg,
+            attack,
+            comp,
+            opts: lopts,
+            pool: pool.clone(),
+            send_dataset: false,
+        };
+        leader.run(links, x0, label, rng)
+    });
+    match phase1 {
+        Ok(_) => anyhow::bail!("leader survived past halt_after = {kill_iter}"),
+        Err(e) if e.to_string().contains("halt-after drill") => {}
+        Err(e) => return Err(e),
+    }
+
+    // ---- phase 2: warm restart from the checkpoint ----
+    let ckpt = Checkpoint::load(ckpt_path)?;
+    let mut lopts = opts.leader.clone();
+    lopts.checkpoint_path = Some(ckpt_path.to_path_buf());
+    lopts.halt_after = None;
+    std::thread::scope(|scope| {
+        let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+        for i in 0..n {
+            let (leader_half, worker_half) = ChannelTransport::pair();
+            links.push(Box::new(leader_half));
+            let wopts = WorkerOpts::default();
+            scope.spawn(move || {
+                let _ = run_worker_opts(Box::new(worker_half), i, Some(ds), None, &wopts);
+            });
+        }
+        let leader = Leader {
+            cfg,
+            ds,
+            agg,
+            attack,
+            comp,
+            opts: lopts,
+            pool: pool.clone(),
+            send_dataset: false,
+        };
+        leader.resume(links, &ckpt, x0, label)
+    })
+}
+
+/// When/who of a worker-churn drill (see [`run_cluster_churn`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ChurnPlan {
+    /// Device slot that goes silent and is later re-filled.
+    pub victim: usize,
+    /// First iteration the victim swallows (stops answering broadcasts).
+    pub depart_iter: u64,
+    /// Earliest iteration the replacement may be activated into the
+    /// retired slot; must allow `net::MISS_RETIRE_STREAK` misses first.
+    pub rejoin_iter: u64,
+}
+
+/// Worker-churn drill: device `plan.victim` goes silent at
+/// `plan.depart_iter` (deterministic `stall_after_iter`, not a stall
+/// stream), misses [`MISS_RETIRE_STREAK`] gathers, and is retired; a
+/// replacement connection — pre-handshaked here exactly the way the
+/// socket leader's accept loop does it — is activated into the slot at
+/// `plan.rejoin_iter` with a fresh split compression-stream seed and a
+/// zeroed EF residual. Incumbent devices' RNG streams are untouched, so
+/// everything up to the departure is bit-identical to a no-churn run.
+/// Requires a gather deadline (the silent victim would otherwise hang
+/// the gather forever).
+pub fn run_cluster_churn(
+    cfg: &TrainConfig,
+    ds: &LinRegDataset,
+    agg: &dyn Aggregator,
+    attack: &dyn Attack,
+    comp: &dyn Compressor,
+    x0: &mut Vec<f32>,
+    label: &str,
+    rng: &mut Rng,
+    pool: &Pool,
+    opts: &ClusterOpts,
+    plan: ChurnPlan,
+) -> Result<TrainTrace> {
+    cfg.validate()?;
+    let n = cfg.n_devices;
+    anyhow::ensure!(plan.victim < n, "churn victim {} out of range (n = {n})", plan.victim);
+    anyhow::ensure!(
+        opts.leader.gather_deadline.is_some(),
+        "worker churn needs a gather deadline (the silent victim would hang the leader)"
+    );
+    anyhow::ensure!(
+        plan.rejoin_iter >= plan.depart_iter + MISS_RETIRE_STREAK as u64,
+        "rejoin_iter {} is before the victim can be retired (depart {} + {} misses)",
+        plan.rejoin_iter,
+        plan.depart_iter,
+        MISS_RETIRE_STREAK
+    );
+    let stall_seeds = Rng::new(opts.stall_seed).split_seeds(n);
+    std::thread::scope(|scope| {
+        let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+        for i in 0..n {
+            let (leader_half, worker_half) = ChannelTransport::pair();
+            links.push(Box::new(leader_half));
+            let wopts = WorkerOpts {
+                stall_prob: opts.stall_prob,
+                stall_seed: stall_seeds[i],
+                stall_after_iter: (i == plan.victim).then_some(plan.depart_iter),
+                ..WorkerOpts::default()
+            };
+            scope.spawn(move || {
+                let _ = run_worker_opts(Box::new(worker_half), i, Some(ds), None, &wopts);
+            });
+        }
+        // The replacement joins through the same channel the socket
+        // leader's handshake threads feed: consume its Join here (what
+        // `handshake_join` does on an accepted connection) and pre-load
+        // the rejoin intake with the validated link + activation gate.
+        let (rep_leader_half, rep_worker_half) = ChannelTransport::pair();
+        let wdef = WorkerOpts::default();
+        scope.spawn(move || {
+            let _ = run_worker_opts(Box::new(rep_worker_half), plan.victim, Some(ds), None, &wdef);
+        });
+        let mut rep_link: Box<dyn Transport> = Box::new(rep_leader_half);
+        let (msg, join_bytes) = rep_link.recv()?;
+        match msg {
+            Msg::Join { device, .. } if device as usize == plan.victim => {}
+            other => anyhow::bail!("replacement sent {other:?}, expected Join as {}", plan.victim),
+        }
+        let (tx, rx) = mpsc::channel();
+        tx.send(RejoinRequest {
+            device: plan.victim,
+            not_before: plan.rejoin_iter,
+            join_bytes,
+            link: rep_link,
+        })
+        .expect("rejoin intake receiver alive");
+        drop(tx);
+        let leader = Leader {
+            cfg,
+            ds,
+            agg,
+            attack,
+            comp,
+            opts: opts.leader.clone(),
+            pool: pool.clone(),
+            send_dataset: false,
+        };
+        leader.run_rejoin(links, Some(&rx), x0, label, rng)
     })
 }
 

@@ -7,7 +7,7 @@ pub mod metrics;
 pub mod schedule;
 pub mod trainer;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, RosterEntry, TraceBlock};
 pub use metrics::TrainTrace;
 pub use schedule::Schedule;
 pub use trainer::{DracoTrainer, Trainer};

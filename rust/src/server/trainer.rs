@@ -27,8 +27,10 @@ use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 use crate::Result;
 
-/// Which devices are Byzantine this iteration.
-fn byz_set(cfg: &TrainConfig, rotate: bool, rng: &mut Rng) -> Vec<bool> {
+/// Which devices are Byzantine this iteration. Shared with the net
+/// leader (`net::leader`) so rotation consumes the run RNG identically
+/// on both paths; with `rotate = false` it consumes nothing.
+pub(crate) fn byz_set(cfg: &TrainConfig, rotate: bool, rng: &mut Rng) -> Vec<bool> {
     let mut is_byz = vec![false; cfg.n_devices];
     if rotate {
         for i in rng.choose_k(cfg.n_devices, cfg.n_byz()) {

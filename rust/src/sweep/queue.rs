@@ -26,8 +26,10 @@
 use crate::config::OracleKind;
 use crate::data::linreg::LinRegDataset;
 use crate::experiments::common::{run_variant_in, Variant};
-use crate::net::LeaderOpts;
-use crate::server::cluster::{run_cluster_with, ClusterOpts};
+use crate::net::{LeaderOpts, MISS_RETIRE_STREAK};
+use crate::server::cluster::{
+    run_cluster_churn, run_cluster_kill_resume, run_cluster_with, ChurnPlan, ClusterOpts,
+};
 use crate::server::TrainTrace;
 use crate::sweep::sink;
 use crate::sweep::spec::{Job, SweepSpec};
@@ -89,12 +91,13 @@ pub fn run_job(job: &Job, pool: &Pool) -> Result<TrainTrace> {
 fn run_job_on(job: &Job, ds: &LinRegDataset, pool: &Pool) -> Result<TrainTrace> {
     let cfg = &job.cfg;
     let faulty = job.stall_prob > 0.0 || cfg.net.gather_deadline_ms > 0;
-    if !faulty {
+    let elastic = job.leader_kill_iter > 0 || job.worker_churn > 0;
+    if !faulty && !elastic {
         let v = Variant { label: job.label.clone(), cfg: cfg.clone(), draco_r: job.draco_r };
         return run_variant_in(ds, &v, job.run_seed, pool);
     }
     ensure!(
-        cfg.net.gather_deadline_ms > 0,
+        job.stall_prob == 0.0 || cfg.net.gather_deadline_ms > 0,
         "job {}: stall_prob > 0 needs gather_deadline_ms > 0",
         job.label
     );
@@ -109,7 +112,8 @@ fn run_job_on(job: &Job, ds: &LinRegDataset, pool: &Pool) -> Result<TrainTrace> 
     let comp = compress::from_kind(cfg.compression);
     let opts = ClusterOpts {
         leader: LeaderOpts {
-            gather_deadline: Some(Duration::from_millis(cfg.net.gather_deadline_ms)),
+            gather_deadline: (cfg.net.gather_deadline_ms > 0)
+                .then(|| Duration::from_millis(cfg.net.gather_deadline_ms)),
             device_compression: cfg.net.device_compression,
             ..Default::default()
         },
@@ -117,6 +121,52 @@ fn run_job_on(job: &Job, ds: &LinRegDataset, pool: &Pool) -> Result<TrainTrace> 
         stall_seed: job.run_seed ^ STALL_SEED_SALT,
     };
     let mut x0 = vec![0.0f32; cfg.dim];
+    let mut rng = Rng::new(job.run_seed);
+    if job.leader_kill_iter > 0 {
+        // the leader-kill/warm-restart drill: checkpoint at the kill
+        // iteration, then a fresh leader finishes the run from it — the
+        // trace the sink records is the resumed (bit-identical) one
+        let ckpt = std::env::temp_dir()
+            .join(format!("lad-kill-{}-{}.ckpt", std::process::id(), job.id));
+        let tr = run_cluster_kill_resume(
+            cfg,
+            ds,
+            agg.as_ref(),
+            atk.as_ref(),
+            comp.as_ref(),
+            &mut x0,
+            &job.label,
+            &mut rng,
+            pool,
+            &opts,
+            job.leader_kill_iter,
+            &ckpt,
+        );
+        let _ = std::fs::remove_file(&ckpt);
+        return tr;
+    }
+    if job.worker_churn > 0 {
+        // worker-churn drill: device 0 departs, is retired after the miss
+        // streak, and a replacement adopts the slot as soon as allowed
+        let plan = ChurnPlan {
+            victim: 0,
+            depart_iter: job.worker_churn,
+            rejoin_iter: job.worker_churn + MISS_RETIRE_STREAK as u64,
+        };
+        return run_cluster_churn(
+            cfg,
+            ds,
+            agg.as_ref(),
+            atk.as_ref(),
+            comp.as_ref(),
+            &mut x0,
+            &job.label,
+            &mut rng,
+            pool,
+            &opts,
+            plan,
+        );
+    }
     run_cluster_with(
         cfg,
         ds,
@@ -125,7 +175,7 @@ fn run_job_on(job: &Job, ds: &LinRegDataset, pool: &Pool) -> Result<TrainTrace> 
         comp.as_ref(),
         &mut x0,
         &job.label,
-        &mut Rng::new(job.run_seed),
+        &mut rng,
         pool,
         &opts,
     )
@@ -137,7 +187,10 @@ fn run_job_on(job: &Job, ds: &LinRegDataset, pool: &Pool) -> Result<TrainTrace> 
 /// worker's upload cannot miss the deadline just because the machine was
 /// oversubscribed by the fan-out — reruns and resumes stay reproducible.
 fn is_wall_clock_sensitive(job: &Job) -> bool {
-    job.stall_prob > 0.0 || job.cfg.net.gather_deadline_ms > 0
+    job.stall_prob > 0.0
+        || job.cfg.net.gather_deadline_ms > 0
+        || job.leader_kill_iter > 0
+        || job.worker_churn > 0
 }
 
 /// The one scheduler behind both [`execute`] and [`run_sweep`]: run every

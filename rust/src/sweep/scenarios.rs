@@ -28,9 +28,11 @@ pub fn preset(name: &str) -> Result<SweepSpec> {
         "partial-participation" | "partial" => partial_participation(),
         "attack-zoo" | "attacks" => attack_zoo(),
         "ef-vs-coding" | "ef" => ef_vs_coding(),
-        other => {
-            bail!("unknown preset {other:?} (partial-participation | attack-zoo | ef-vs-coding)")
-        }
+        "elasticity" | "elastic" => elasticity(),
+        other => bail!(
+            "unknown preset {other:?} \
+             (partial-participation | attack-zoo | ef-vs-coding | elasticity)"
+        ),
     })
 }
 
@@ -130,6 +132,33 @@ pub fn ef_vs_coding() -> SweepSpec {
     }
 }
 
+/// Compressor × leader-kill iteration under sign-flip: every `kill > 0`
+/// job trains to the kill point, checkpoints, dies without `Shutdown`,
+/// and is warm-restarted — the recorded trace must match the `kill = 0`
+/// sibling bit-for-bit (same seed, same grid row). Includes the
+/// error-feedback compressor, so the checkpointed EF residual mirror is
+/// exercised end-to-end. Worker churn is the companion drill: add a
+/// `worker_churn` axis to a TOML spec (needs `net.gather_deadline_ms`).
+pub fn elasticity() -> SweepSpec {
+    let mut base = small_base();
+    base.n_honest = 19;
+    base.iters = 80;
+    base.log_every = 20;
+    let spec = SweepSpec::new("elasticity", base);
+    SweepSpec {
+        grid: Grid {
+            compressor: vec![
+                CompressionKind::None,
+                CompressionKind::Qsgd { levels: 16 },
+                CompressionKind::EfQsgd { levels: 16 },
+            ],
+            leader_kill_iter: vec![0, 25],
+            ..Grid::default()
+        },
+        ..spec
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,9 +193,15 @@ mod tests {
             arms.iter().any(|(r, _)| r == "momentum-filter"),
             "momentum-filter arm: {arms:?}"
         );
+        let el = elasticity();
+        let jobs = el.expand().unwrap();
+        assert_eq!(jobs.len(), 3 * 2, "compressor x kill");
+        assert!(jobs.iter().any(|j| j.leader_kill_iter == 25));
+        assert!(jobs.iter().any(|j| j.leader_kill_iter == 0));
         assert!(preset("partial-participation").is_ok());
         assert!(preset("attack-zoo").is_ok());
         assert!(preset("ef-vs-coding").is_ok());
+        assert!(preset("elasticity").is_ok());
         assert!(preset("nope").is_err());
     }
 }

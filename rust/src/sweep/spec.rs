@@ -30,6 +30,7 @@ use crate::config::{
 };
 use crate::experiments::common::Variant;
 use crate::net::wire::fnv1a64;
+use crate::net::MISS_RETIRE_STREAK;
 use crate::Result;
 use anyhow::{bail, ensure, Context};
 use std::collections::BTreeSet;
@@ -41,7 +42,7 @@ use std::path::Path;
 pub const RUN_SEED_SALT: u64 = 0x7A17;
 
 /// Canonical axis order (expansion order; last axis varies fastest).
-pub const AXIS_ORDER: [&str; 10] = [
+pub const AXIS_ORDER: [&str; 12] = [
     "attack",
     "rule",
     "nnm",
@@ -51,6 +52,8 @@ pub const AXIS_ORDER: [&str; 10] = [
     "sigma_h",
     "stall_prob",
     "gather_deadline_ms",
+    "leader_kill_iter",
+    "worker_churn",
     "seed",
 ];
 
@@ -77,6 +80,14 @@ pub struct Job {
     /// Per-iteration probability that a worker skips its upload
     /// (crash-fault emulation; requires `net.gather_deadline_ms > 0`).
     pub stall_prob: f64,
+    /// Kill the leader after this iteration and warm-restart it from the
+    /// checkpoint (0 = off) — the elasticity drill of
+    /// `server::cluster::run_cluster_kill_resume`.
+    pub leader_kill_iter: u64,
+    /// Worker-churn drill (0 = off): device 0 goes silent at this
+    /// iteration, is retired after `net::MISS_RETIRE_STREAK` misses, and
+    /// a replacement rejoins the slot at the earliest legal iteration.
+    pub worker_churn: u64,
     /// Grid coordinates, in canonical axis order (echoed to the sink).
     pub axes: Vec<(&'static str, String)>,
 }
@@ -93,6 +104,8 @@ impl Job {
             data_seed,
             run_seed,
             stall_prob: 0.0,
+            leader_kill_iter: 0,
+            worker_churn: 0,
             axes: Vec::new(),
         };
         job.id = job_id(&job);
@@ -130,7 +143,7 @@ impl Job {
             OracleKind::NativeLinreg => "native",
             OracleKind::RuntimeLinreg => "runtime",
         };
-        format!(
+        let mut s = format!(
             "v1;n={};h={};d={};q={};t={};lr={};sh={};agg={};nnm={};trim={};atk={};comp={};\
              oracle={};log={};data_seed={};run_seed={};stall={};deadline={};dcomp={};draco={}",
             cfg.n_devices,
@@ -153,7 +166,16 @@ impl Job {
             cfg.net.gather_deadline_ms,
             cfg.net.device_compression,
             self.draco_r.map(|r| r.to_string()).unwrap_or_else(|| "-".to_string()),
-        )
+        );
+        // elasticity drills append only when active, so every pre-elastic
+        // job id (and the pinned digest below) is preserved verbatim
+        if self.leader_kill_iter > 0 {
+            s.push_str(&format!(";kill={}", self.leader_kill_iter));
+        }
+        if self.worker_churn > 0 {
+            s.push_str(&format!(";churn={}", self.worker_churn));
+        }
+        s
     }
 }
 
@@ -183,6 +205,10 @@ pub struct Grid {
     pub sigma_h: Vec<f64>,
     pub stall_prob: Vec<f64>,
     pub gather_deadline_ms: Vec<u64>,
+    /// Leader-kill/warm-restart iterations (0 = no kill for that job).
+    pub leader_kill_iter: Vec<u64>,
+    /// Worker-churn departure iterations (0 = no churn for that job).
+    pub worker_churn: Vec<u64>,
     /// Data seeds (`run_seed = seed ^ RUN_SEED_SALT` per job).
     pub seed: Vec<u64>,
 }
@@ -309,6 +335,14 @@ impl SweepSpec {
                         grid.gather_deadline_ms =
                             need_usizes(key, arr)?.into_iter().map(|x| x as u64).collect()
                     }
+                    "leader_kill_iter" => {
+                        grid.leader_kill_iter =
+                            need_usizes(key, arr)?.into_iter().map(|x| x as u64).collect()
+                    }
+                    "worker_churn" => {
+                        grid.worker_churn =
+                            need_usizes(key, arr)?.into_iter().map(|x| x as u64).collect()
+                    }
                     "seed" => {
                         grid.seed = need_usizes(key, arr)?.into_iter().map(|x| x as u64).collect()
                     }
@@ -334,15 +368,21 @@ impl SweepSpec {
     /// (they would collapse to one job id) and on any job that fails
     /// `TrainConfig::validate`.
     pub fn expand(&self) -> Result<Vec<Job>> {
+        // non-config knobs an axis can set (everything else goes on cfg)
+        struct Knobs {
+            stall: f64,
+            kill: u64,
+            churn: u64,
+        }
         // one (key, #values, apply) entry per *present* axis, canonical order
-        type Apply<'a> = Box<dyn Fn(usize, &mut TrainConfig, &mut f64) -> String + 'a>;
+        type Apply<'a> = Box<dyn Fn(usize, &mut TrainConfig, &mut Knobs) -> String + 'a>;
         let mut axes: Vec<(&'static str, usize, Apply<'_>)> = Vec::new();
         let g = &self.grid;
         if !g.attack.is_empty() {
             axes.push((
                 "attack",
                 g.attack.len(),
-                Box::new(|i, cfg: &mut TrainConfig, _: &mut f64| {
+                Box::new(|i, cfg: &mut TrainConfig, _: &mut Knobs| {
                     cfg.attack = g.attack[i];
                     g.attack[i].name().to_string()
                 }),
@@ -412,8 +452,8 @@ impl SweepSpec {
             axes.push((
                 "stall_prob",
                 g.stall_prob.len(),
-                Box::new(|i, _, stall: &mut f64| {
-                    *stall = g.stall_prob[i];
+                Box::new(|i, _, k: &mut Knobs| {
+                    k.stall = g.stall_prob[i];
                     g.stall_prob[i].to_string()
                 }),
             ));
@@ -425,6 +465,26 @@ impl SweepSpec {
                 Box::new(|i, cfg, _| {
                     cfg.net.gather_deadline_ms = g.gather_deadline_ms[i];
                     g.gather_deadline_ms[i].to_string()
+                }),
+            ));
+        }
+        if !g.leader_kill_iter.is_empty() {
+            axes.push((
+                "leader_kill_iter",
+                g.leader_kill_iter.len(),
+                Box::new(|i, _, k: &mut Knobs| {
+                    k.kill = g.leader_kill_iter[i];
+                    g.leader_kill_iter[i].to_string()
+                }),
+            ));
+        }
+        if !g.worker_churn.is_empty() {
+            axes.push((
+                "worker_churn",
+                g.worker_churn.len(),
+                Box::new(|i, _, k: &mut Knobs| {
+                    k.churn = g.worker_churn[i];
+                    g.worker_churn[i].to_string()
                 }),
             ));
         }
@@ -446,10 +506,10 @@ impl SweepSpec {
         let mut idx = vec![0usize; axes.len()];
         loop {
             let mut cfg = self.base.clone();
-            let mut stall = self.base_stall;
+            let mut knobs = Knobs { stall: self.base_stall, kill: 0, churn: 0 };
             let mut echo: Vec<(&'static str, String)> = Vec::with_capacity(axes.len());
             for (a, (key, _, apply)) in axes.iter().enumerate() {
-                echo.push((*key, apply(idx[a], &mut cfg, &mut stall)));
+                echo.push((*key, apply(idx[a], &mut cfg, &mut knobs)));
             }
             let label = if echo.is_empty() {
                 self.name.clone()
@@ -461,12 +521,43 @@ impl SweepSpec {
             };
             cfg.validate().with_context(|| format!("sweep job {label}"))?;
             ensure!(
-                stall == 0.0 || cfg.net.gather_deadline_ms > 0,
+                knobs.stall == 0.0 || cfg.net.gather_deadline_ms > 0,
                 "job {label}: stall_prob > 0 needs gather_deadline_ms > 0 \
                  (a leader without a deadline would wait on the stalled worker forever)"
             );
             ensure!(
-                (stall == 0.0 && cfg.net.gather_deadline_ms == 0)
+                knobs.kill == 0 || knobs.kill + 1 < cfg.iters as u64,
+                "job {label}: leader_kill_iter {} leaves no iterations to resume ({} total)",
+                knobs.kill,
+                cfg.iters
+            );
+            ensure!(
+                !(knobs.kill > 0 && knobs.stall > 0.0),
+                "job {label}: leader_kill_iter is incompatible with stall_prob \
+                 (restarted workers would redraw their stall streams)"
+            );
+            ensure!(
+                !(knobs.kill > 0 && knobs.churn > 0),
+                "job {label}: leader_kill_iter and worker_churn are separate drills"
+            );
+            ensure!(
+                knobs.churn == 0 || cfg.net.gather_deadline_ms > 0,
+                "job {label}: worker_churn needs gather_deadline_ms > 0 \
+                 (the silent victim would hang the leader)"
+            );
+            ensure!(
+                knobs.churn == 0
+                    || knobs.churn + MISS_RETIRE_STREAK as u64 + 1 < cfg.iters as u64,
+                "job {label}: worker_churn {} leaves no room for retirement + rejoin \
+                 ({} iterations)",
+                knobs.churn,
+                cfg.iters
+            );
+            ensure!(
+                (knobs.stall == 0.0
+                    && cfg.net.gather_deadline_ms == 0
+                    && knobs.kill == 0
+                    && knobs.churn == 0)
                     || cfg.oracle == OracleKind::NativeLinreg,
                 "job {label}: partial-participation jobs need the native oracle"
             );
@@ -477,7 +568,9 @@ impl SweepSpec {
                 run_seed: cfg.seed ^ RUN_SEED_SALT,
                 cfg,
                 draco_r: None,
-                stall_prob: stall,
+                stall_prob: knobs.stall,
+                leader_kill_iter: knobs.kill,
+                worker_churn: knobs.churn,
                 axes: echo,
             };
             job.id = job_id(&job);
@@ -666,6 +759,39 @@ mod tests {
         // stalling without a gather deadline would hang the leader
         let spec =
             SweepSpec::from_toml_str("[sweep]\nstall_prob = 0.2\n[grid]\nd = [1, 2]").unwrap();
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn elasticity_axes_expand_and_re_address() {
+        let spec = SweepSpec::from_toml_str(
+            "[fixed]\niters = 40\nlog_every = 0\n[net]\ngather_deadline_ms = 200\n\
+             [grid]\nleader_kill_iter = [0, 10]\nworker_churn = [0, 5]",
+        )
+        .unwrap();
+        let err = spec.expand().unwrap_err().to_string();
+        // kill=10 × churn=5 is the forbidden combination — named in the error
+        assert!(err.contains("separate drills"), "{err}");
+        let spec = SweepSpec::from_toml_str(
+            "[fixed]\niters = 40\nlog_every = 0\n[net]\ngather_deadline_ms = 200\n\
+             [grid]\nleader_kill_iter = [0, 10]",
+        )
+        .unwrap();
+        let jobs = spec.expand().unwrap();
+        assert_eq!(jobs.len(), 2);
+        // the kill=0 arm keeps the pre-elastic canonical form (no suffix),
+        // so only active drills re-address a job
+        assert!(!jobs[0].canonical().contains(";kill="));
+        assert!(jobs[1].canonical().ends_with(";kill=10"));
+        assert_ne!(jobs[0].id, jobs[1].id);
+        // churn without a gather deadline would hang the leader — rejected
+        let spec = SweepSpec::from_toml_str("[grid]\nworker_churn = [5]").unwrap();
+        assert!(spec.expand().is_err());
+        // a kill at the end of the run leaves nothing to resume — rejected
+        let spec = SweepSpec::from_toml_str(
+            "[fixed]\niters = 10\n[grid]\nleader_kill_iter = [9]",
+        )
+        .unwrap();
         assert!(spec.expand().is_err());
     }
 

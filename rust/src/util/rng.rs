@@ -24,6 +24,18 @@ pub struct Rng {
     spare_gauss: Option<f64>,
 }
 
+/// A serializable snapshot of an [`Rng`]'s complete state — the PCG state
+/// and increment words plus the cached Box–Muller spare. Restoring it with
+/// [`Rng::restore`] continues the stream bit-identically from the capture
+/// point, which is what lets checkpoints resume a run's randomness and lets
+/// the wire hand a compression-stream cursor between leader and worker.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RngState {
+    pub state: u64,
+    pub inc: u64,
+    pub spare_gauss: Option<f64>,
+}
+
 impl Rng {
     /// Construct from a seed; distinct seeds give independent streams.
     pub fn new(seed: u64) -> Self {
@@ -33,6 +45,18 @@ impl Rng {
         let mut rng = Rng { state, inc, spare_gauss: None };
         rng.next_u32(); // advance away from the seeding artifacts
         rng
+    }
+
+    /// Capture the generator's full state for checkpointing or a wire
+    /// hand-off. Non-consuming: the stream continues as if never observed.
+    pub fn save_state(&self) -> RngState {
+        RngState { state: self.state, inc: self.inc, spare_gauss: self.spare_gauss }
+    }
+
+    /// Rebuild a generator from a [`RngState`] snapshot. The restored
+    /// stream is bit-identical to the original from the capture point on.
+    pub fn restore(st: RngState) -> Rng {
+        Rng { state: st.state, inc: st.inc, spare_gauss: st.spare_gauss }
     }
 
     /// Derive an independent child stream (e.g. one per device).
@@ -300,6 +324,25 @@ mod tests {
                 assert_eq!(a.next_u64(), b.next_u64());
             }
         }
+    }
+
+    #[test]
+    fn save_restore_continues_the_stream_bit_identically() {
+        let mut r = Rng::new(314);
+        // consume an odd number of gaussians so a spare is cached
+        let _ = r.gauss();
+        let snap = r.save_state();
+        assert!(snap.spare_gauss.is_some(), "spare should be cached");
+        let mut back = Rng::restore(snap);
+        let mut orig = r.clone();
+        // the cached spare is replayed first, then the raw stream agrees
+        assert_eq!(orig.gauss().to_bits(), back.gauss().to_bits());
+        for _ in 0..64 {
+            assert_eq!(orig.next_u64(), back.next_u64());
+        }
+        // save_state is non-consuming
+        let snap2 = r.save_state();
+        assert_eq!(snap, snap2);
     }
 
     #[test]

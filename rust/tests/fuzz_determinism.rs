@@ -15,7 +15,10 @@
 //! row adapters, every aggregator with a parallel pass, stochastic
 //! compressors on pre-split streams — including the error-feedback
 //! (`ef-*`) compressors' residual carry and the stateful momentum-filter
-//! rule, whose traces must be just as thread/tier invariant.
+//! rule, whose traces must be just as thread/tier invariant. The same
+//! lattice also pins the elasticity path: a leader killed at a fuzzed
+//! iteration and warm-restarted from its checkpoint must match the
+//! uninterrupted run bit-for-bit, pipeline on or off.
 
 use lad::aggregation::gram::PairwiseDistances;
 use lad::config::{AggregatorKind, AttackKind, CompressionKind, TrainConfig};
@@ -364,6 +367,96 @@ fn fuzzed_pipelined_cluster_traces_match_phase_serial() {
                     },
                 )?;
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fuzzed_warm_restart_is_bit_identical_across_the_lattice() {
+    // The elasticity gate: killing the leader at a fuzzed iteration and
+    // warm-restarting from the checkpoint must reproduce the uninterrupted
+    // run bit-for-bit — final iterate, trace, anomaly counts, and wire byte
+    // accounting — across compressors (incl. the ef-* residual carry),
+    // aggregators (incl. the stateful momentum filter), attacks, and the
+    // pipelined vs phase-serial leader.
+    use lad::net::LeaderOpts;
+    use lad::server::cluster::{run_cluster_kill_resume, run_cluster_with, ClusterOpts};
+
+    forall(6, 0xE1A5, gen_case, |case| {
+        let seed = 0x5EED ^ ((case.n as u64) << 9) ^ case.q as u64;
+        let kill = 1 + case.q as u64 % 4; // cfg_of pins iters = 6; kill + 1 < 6
+        for pipeline in [false, true] {
+            let cfg = cfg_of(case, case.threads);
+            let pool = Pool::new(case.threads);
+            let atk = lad::attack::from_kind(cfg.attack);
+            let comp = lad::compress::from_kind(cfg.compression);
+            let mut rng = Rng::new(seed);
+            let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng);
+            let opts = ClusterOpts {
+                leader: LeaderOpts { pipeline, ..Default::default() },
+                ..Default::default()
+            };
+            // fresh aggregator per run: the momentum filter carries state
+            let agg = lad::aggregation::from_config_pooled(&cfg, &pool);
+            let mut x_ref = vec![0.0f32; cfg.dim];
+            let reference = run_cluster_with(
+                &cfg,
+                &ds,
+                agg.as_ref(),
+                atk.as_ref(),
+                comp.as_ref(),
+                &mut x_ref,
+                "fuzz-elastic",
+                &mut Rng::new(seed ^ 0xF),
+                &pool,
+                &opts,
+            )
+            .expect("reference run failed");
+            let ckpt = std::env::temp_dir().join(format!(
+                "lad-fuzz-restart-{}-{seed:x}-{pipeline}.ckpt",
+                std::process::id()
+            ));
+            let agg = lad::aggregation::from_config_pooled(&cfg, &pool);
+            let mut x_drill = vec![0.0f32; cfg.dim];
+            let drill = run_cluster_kill_resume(
+                &cfg,
+                &ds,
+                agg.as_ref(),
+                atk.as_ref(),
+                comp.as_ref(),
+                &mut x_drill,
+                "fuzz-elastic",
+                &mut Rng::new(seed ^ 0xF),
+                &pool,
+                &opts,
+                kill,
+                &ckpt,
+            )
+            .expect("kill-resume drill failed");
+            let _ = std::fs::remove_file(&ckpt);
+            ensure(x_ref == x_drill, || {
+                format!("final iterates differ (pipeline={pipeline} kill={kill})")
+            })?;
+            traces_equal(&reference, &drill)
+                .map_err(|e| format!("{e} (pipeline={pipeline} kill={kill})"))?;
+            ensure(drill.anomalies == reference.anomalies, || {
+                format!("anomaly counts differ (pipeline={pipeline} kill={kill})")
+            })?;
+            ensure(
+                drill.wire_up_bytes == reference.wire_up_bytes
+                    && drill.wire_down_bytes == reference.wire_down_bytes,
+                || {
+                    format!(
+                        "wire bytes differ: up {} vs {}, down {} vs {} \
+                         (pipeline={pipeline} kill={kill})",
+                        drill.wire_up_bytes,
+                        reference.wire_up_bytes,
+                        drill.wire_down_bytes,
+                        reference.wire_down_bytes
+                    )
+                },
+            )?;
         }
         Ok(())
     });

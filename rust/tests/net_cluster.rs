@@ -4,17 +4,21 @@
 //! (Identity) and Com-LAD (QSGD, device-side compression) — and a stalled
 //! worker must not hang an iteration once a gather deadline is set.
 
-use lad::aggregation::Cwtm;
+use lad::aggregation::{from_config, Cwtm};
 use lad::attack::SignFlip;
 use lad::compress::{Compressor, Identity, Qsgd};
-use lad::config::{CompressionKind, TrainConfig};
+use lad::config::{AggregatorKind, CompressionKind, TrainConfig};
 use lad::data::linreg::LinRegDataset;
 use lad::grad::NativeLinReg;
 use lad::net::transport::{connect, ChannelTransport, NetListener, Transport};
 use lad::net::wire::{Msg, Payload, WIRE_VERSION};
-use lad::net::{run_worker, Leader, LeaderOpts, MISS_RETIRE_STREAK};
+use lad::net::{run_worker, run_worker_opts, Leader, LeaderOpts, WorkerOpts, MISS_RETIRE_STREAK};
+use lad::server::cluster::{
+    run_cluster_churn, run_cluster_in, run_cluster_kill_resume, ChurnPlan, ClusterOpts,
+};
 use lad::server::metrics::TrainTrace;
 use lad::server::trainer::Trainer;
+use lad::server::Checkpoint;
 use lad::util::parallel::Pool;
 use lad::util::rng::Rng;
 use std::time::Duration;
@@ -369,6 +373,358 @@ fn ef_residual_reset_on_retirement_is_deterministic() {
     assert_eq!(t2.anomalies, MISS_RETIRE_STREAK);
     assert!(t1.final_loss.is_finite());
     assert_eq!(t1.iters.last().copied(), Some(c.iters - 1));
+}
+
+#[test]
+fn warm_restart_is_bit_identical_to_an_uninterrupted_run() {
+    // The leader-kill drill under the most stateful arm available —
+    // error-feedback compression (leader-held residual mirror) plus
+    // momentum-filter aggregation (per-device momentum buffers): kill at
+    // iteration 17, warm-restart from the checkpoint, and the finished
+    // trace, final iterate AND wire-byte totals must be bit-identical to
+    // a run that was never killed (resume handshake bytes are uncounted).
+    let mut c = cfg(8, 6, 3, CompressionKind::EfQsgd { levels: 16 });
+    c.aggregator = AggregatorKind::MomentumFilter;
+    let mut rng = Rng::new(1301);
+    let ds = LinRegDataset::generate(c.n_devices, c.dim, c.sigma_h, &mut rng);
+    let flip = SignFlip { coeff: -2.0 };
+    let comp = lad::compress::from_kind(c.compression);
+    let pool = Pool::serial();
+    let agg_ref = from_config(&c);
+    let mut x_ref = vec![0.0f32; c.dim];
+    let t_ref = run_cluster_in(
+        &c,
+        &ds,
+        agg_ref.as_ref(),
+        &flip,
+        comp.as_ref(),
+        &mut x_ref,
+        "elastic",
+        &mut Rng::new(1302),
+        &pool,
+    )
+    .unwrap();
+    let ckpt = std::env::temp_dir().join(format!("lad_warm_restart_{}.ckpt", std::process::id()));
+    let agg_kill = from_config(&c);
+    let mut x_kill = vec![0.0f32; c.dim];
+    let t_kill = run_cluster_kill_resume(
+        &c,
+        &ds,
+        agg_kill.as_ref(),
+        &flip,
+        comp.as_ref(),
+        &mut x_kill,
+        "elastic",
+        &mut Rng::new(1302),
+        &pool,
+        &ClusterOpts::default(),
+        17,
+        &ckpt,
+    )
+    .unwrap();
+    let _ = std::fs::remove_file(&ckpt);
+    assert_eq!(x_kill, x_ref, "final iterate diverged across the kill/restart boundary");
+    assert_eq!(t_kill.loss, t_ref.loss, "loss trace diverged");
+    assert_eq!(t_kill.grad_update_norm, t_ref.grad_update_norm, "update norms diverged");
+    assert_eq!(t_kill.bits, t_ref.bits, "bit accounting diverged");
+    assert_eq!(t_kill.iters, t_ref.iters, "sample grid diverged");
+    assert_eq!(t_kill.final_loss, t_ref.final_loss);
+    assert_eq!(t_kill.anomalies, t_ref.anomalies);
+    assert_eq!(t_kill.wire_up_bytes, t_ref.wire_up_bytes, "uplink byte totals diverged");
+    assert_eq!(t_kill.wire_down_bytes, t_ref.wire_down_bytes, "downlink byte totals diverged");
+}
+
+#[test]
+fn churn_retires_the_victim_and_rejoins_a_replacement_deterministically() {
+    // Device 1 departs at iteration 4, is retired after MISS_RETIRE_STREAK
+    // deadline misses, and a replacement adopts the slot at iteration 7
+    // with a fresh split stream seed and a zeroed EF residual. The whole
+    // scenario is deterministic (two runs bit-match), the anomaly count is
+    // exactly the retirement streak, and the incumbents' streams are
+    // untouched — the pre-departure samples equal the no-churn run's.
+    let mut c = cfg(5, 4, 2, CompressionKind::EfQsgd { levels: 16 });
+    c.dim = 6;
+    c.iters = 16;
+    c.log_every = 4;
+    let mut rng = Rng::new(1401);
+    let ds = LinRegDataset::generate(c.n_devices, c.dim, c.sigma_h, &mut rng);
+    let flip = SignFlip { coeff: -2.0 };
+    let comp = lad::compress::from_kind(c.compression);
+    let pool = Pool::serial();
+    let opts = ClusterOpts {
+        leader: LeaderOpts {
+            gather_deadline: Some(Duration::from_millis(200)),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let plan = ChurnPlan { victim: 1, depart_iter: 4, rejoin_iter: 7 };
+    let run_once = || {
+        let cwtm = Cwtm::new(0.1);
+        let mut x0 = vec![0.0f32; c.dim];
+        let tr = run_cluster_churn(
+            &c,
+            &ds,
+            &cwtm,
+            &flip,
+            comp.as_ref(),
+            &mut x0,
+            "churn",
+            &mut Rng::new(1402),
+            &pool,
+            &opts,
+            plan,
+        )
+        .unwrap();
+        (tr, x0)
+    };
+    let (t1, x1) = run_once();
+    let (t2, x2) = run_once();
+    assert_eq!(x1, x2, "churn scenario is not deterministic");
+    assert_eq!(t1.loss, t2.loss, "loss trace diverged across reruns");
+    assert_eq!(t1.grad_update_norm, t2.grad_update_norm);
+    assert_eq!(t1.bits, t2.bits, "bit accounting diverged");
+    assert_eq!(t1.anomalies, MISS_RETIRE_STREAK, "one anomaly per miss until retirement");
+    assert!(t1.final_loss.is_finite());
+    assert_eq!(t1.iters.last().copied(), Some(c.iters - 1));
+    // pre-departure the run is the no-churn run: the t=0 sample matches
+    let cwtm = Cwtm::new(0.1);
+    let mut x_ref = vec![0.0f32; c.dim];
+    let t_ref = run_cluster_in(
+        &c,
+        &ds,
+        &cwtm,
+        &flip,
+        comp.as_ref(),
+        &mut x_ref,
+        "churn",
+        &mut Rng::new(1402),
+        &pool,
+    )
+    .unwrap();
+    assert_eq!(t1.loss[0], t_ref.loss[0], "pre-departure sample diverged from no-churn run");
+    assert_eq!(t1.grad_update_norm[0], t_ref.grad_update_norm[0]);
+}
+
+#[test]
+fn tcp_failover_drill_reconnects_workers_and_matches_an_unkilled_run() {
+    // The full standby-leader drill over real sockets, with device-side
+    // QSGD so live worker compression streams must survive the failover:
+    // leader A checkpoints every 5 iterations and halts after iteration 12
+    // WITHOUT Shutdown; the standby listener is already bound, so the
+    // workers' redial loops land on leader B, which warm-restarts from the
+    // checkpoint. Every worker serves every iteration (exactly one
+    // reconnect each), and trace + final iterate are bit-identical to a
+    // never-killed reference run.
+    let mut c = cfg(6, 5, 2, CompressionKind::Qsgd { levels: 16 });
+    c.iters = 30;
+    let mut rng = Rng::new(1501);
+    let ds = LinRegDataset::generate(c.n_devices, c.dim, c.sigma_h, &mut rng);
+    let comp = Qsgd::new(16);
+    let n = c.n_devices;
+    let ckpt_path =
+        std::env::temp_dir().join(format!("lad_failover_{}.ckpt", std::process::id()));
+
+    let serve_reference = || {
+        let listener = NetListener::bind("tcp://127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let addr = addr.clone();
+            workers.push(std::thread::spawn(move || {
+                let link = connect(&addr).unwrap();
+                run_worker(link, i, None, None).unwrap()
+            }));
+        }
+        let cwtm = Cwtm::new(0.1);
+        let flip = SignFlip { coeff: -2.0 };
+        let leader = Leader {
+            cfg: &c,
+            ds: &ds,
+            agg: &cwtm,
+            attack: &flip,
+            comp: &comp,
+            opts: LeaderOpts { device_compression: true, ..Default::default() },
+            pool: Pool::serial(),
+            send_dataset: true,
+        };
+        let mut x0 = vec![0.0f32; c.dim];
+        let tr = leader.serve(&listener, &mut x0, "failover", &mut Rng::new(1502)).unwrap();
+        for w in workers {
+            w.join().unwrap();
+        }
+        (tr, x0)
+    };
+    let (t_ref, x_ref) = serve_reference();
+
+    // the standby listener exists BEFORE the kill, so redials can land
+    let listener_a = NetListener::bind("tcp://127.0.0.1:0").unwrap();
+    let listener_b = NetListener::bind("tcp://127.0.0.1:0").unwrap();
+    let addr_a = listener_a.local_addr().unwrap();
+    let addr_b = listener_b.local_addr().unwrap();
+    let mut workers = Vec::with_capacity(n);
+    for i in 0..n {
+        let addr_a = addr_a.clone();
+        let addr_b = addr_b.clone();
+        workers.push(std::thread::spawn(move || {
+            let link = connect(&addr_a).unwrap();
+            let wopts = WorkerOpts {
+                reconnect_addr: Some(addr_b),
+                reconnect_attempts: 60,
+                reconnect_backoff: Duration::from_millis(50),
+                ..Default::default()
+            };
+            run_worker_opts(link, i, None, None, &wopts).unwrap()
+        }));
+    }
+    let cwtm = Cwtm::new(0.1);
+    let flip = SignFlip { coeff: -2.0 };
+    let opts_a = LeaderOpts {
+        device_compression: true,
+        checkpoint_every: 5,
+        checkpoint_path: Some(ckpt_path.clone()),
+        halt_after: Some(12),
+        ..Default::default()
+    };
+    let leader_a = Leader {
+        cfg: &c,
+        ds: &ds,
+        agg: &cwtm,
+        attack: &flip,
+        comp: &comp,
+        opts: opts_a,
+        pool: Pool::serial(),
+        send_dataset: true,
+    };
+    let mut x0 = vec![0.0f32; c.dim];
+    let err = leader_a.serve(&listener_a, &mut x0, "failover", &mut Rng::new(1502)).unwrap_err();
+    assert!(err.to_string().contains("halt-after drill"), "unexpected error: {err:#}");
+    drop(listener_a);
+
+    let ckpt = Checkpoint::load(&ckpt_path).unwrap();
+    assert_eq!(ckpt.iter, 13, "checkpoint cut sits after the halt iteration");
+    let leader_b = Leader {
+        cfg: &c,
+        ds: &ds,
+        agg: &cwtm,
+        attack: &flip,
+        comp: &comp,
+        opts: LeaderOpts { device_compression: true, ..Default::default() },
+        pool: Pool::serial(),
+        send_dataset: true,
+    };
+    let mut x1 = vec![0.0f32; c.dim];
+    let t_drill = leader_b.serve_resume(&listener_b, &ckpt, &mut x1, "failover").unwrap();
+    let _ = std::fs::remove_file(&ckpt_path);
+    for w in workers {
+        let report = w.join().unwrap();
+        assert_eq!(report.iters, c.iters, "worker missed iterations across the failover");
+        assert_eq!(report.reconnects, 1, "worker should have redialed exactly once");
+    }
+    assert_eq!(x1, x_ref, "final iterate diverged across the leader failover");
+    assert_eq!(t_drill.loss, t_ref.loss, "loss trace diverged");
+    assert_eq!(t_drill.grad_update_norm, t_ref.grad_update_norm);
+    assert_eq!(t_drill.bits, t_ref.bits, "bit accounting diverged");
+    assert_eq!(t_drill.final_loss, t_ref.final_loss);
+    assert_eq!(t_drill.wire_up_bytes, t_ref.wire_up_bytes, "uplink byte totals diverged");
+    assert_eq!(t_drill.wire_down_bytes, t_ref.wire_down_bytes, "downlink byte totals diverged");
+}
+
+#[test]
+fn rotating_byzantine_identities_match_the_central_trainer() {
+    // Per-iteration Byzantine role rotation over the wire (the Broadcast
+    // role bit), leader-side compression: the message-passing path must
+    // stay bit-identical to the central trainer with rotate_byzantine on,
+    // because both consume the run RNG in the same fixed order
+    // (draw, byz_set, craft per iteration).
+    let c = cfg(8, 6, 3, CompressionKind::Qsgd { levels: 16 });
+    let mut rng = Rng::new(1601);
+    let ds = LinRegDataset::generate(c.n_devices, c.dim, c.sigma_h, &mut rng);
+    let comp = Qsgd::new(16);
+    let cwtm = Cwtm::new(0.1);
+    let flip = SignFlip { coeff: -2.0 };
+    let (tn, xn) = std::thread::scope(|scope| {
+        let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(c.n_devices);
+        for i in 0..c.n_devices {
+            let (leader_half, worker_half) = ChannelTransport::pair();
+            links.push(Box::new(leader_half));
+            let dsr = &ds;
+            scope.spawn(move || {
+                let _ = run_worker(Box::new(worker_half), i, Some(dsr), None);
+            });
+        }
+        let leader = Leader {
+            cfg: &c,
+            ds: &ds,
+            agg: &cwtm,
+            attack: &flip,
+            comp: &comp,
+            opts: LeaderOpts { rotate_byzantine: true, ..Default::default() },
+            pool: Pool::serial(),
+            send_dataset: false,
+        };
+        let mut x0 = vec![0.0f32; c.dim];
+        let tr = leader.run(links, &mut x0, "rotate", &mut Rng::new(1602)).unwrap();
+        (tr, x0)
+    });
+    let mut oracle = NativeLinReg::new(ds.clone());
+    let mut xc = vec![0.0f32; c.dim];
+    let mut trainer = Trainer::new(&c, &cwtm, &flip, &comp);
+    trainer.rotate_byzantine = true;
+    let tc = trainer.run(&mut oracle, &mut xc, "rotate", &mut Rng::new(1602)).unwrap();
+    assert_eq!(xn, xc, "model diverged between rotating net path and central trainer");
+    assert_trace_identical(&tn, &tc);
+}
+
+#[test]
+fn rotation_composes_with_worker_churn() {
+    // Rotating roles + a churned slot: the rejoined replacement picks up
+    // whatever role the rotation assigns it each iteration, and the whole
+    // composition stays deterministic across reruns.
+    let mut c = cfg(5, 4, 2, CompressionKind::Qsgd { levels: 16 });
+    c.dim = 6;
+    c.iters = 14;
+    c.log_every = 4;
+    let mut rng = Rng::new(1701);
+    let ds = LinRegDataset::generate(c.n_devices, c.dim, c.sigma_h, &mut rng);
+    let flip = SignFlip { coeff: -2.0 };
+    let comp = Qsgd::new(16);
+    let pool = Pool::serial();
+    let opts = ClusterOpts {
+        leader: LeaderOpts {
+            gather_deadline: Some(Duration::from_millis(200)),
+            rotate_byzantine: true,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let plan = ChurnPlan { victim: 2, depart_iter: 3, rejoin_iter: 6 };
+    let run_once = || {
+        let cwtm = Cwtm::new(0.1);
+        let mut x0 = vec![0.0f32; c.dim];
+        let tr = run_cluster_churn(
+            &c,
+            &ds,
+            &cwtm,
+            &flip,
+            &comp,
+            &mut x0,
+            "rotate-churn",
+            &mut Rng::new(1702),
+            &pool,
+            &opts,
+            plan,
+        )
+        .unwrap();
+        (tr, x0)
+    };
+    let (t1, x1) = run_once();
+    let (t2, x2) = run_once();
+    assert_eq!(x1, x2, "rotation + churn is not deterministic");
+    assert_eq!(t1.loss, t2.loss);
+    assert_eq!(t1.bits, t2.bits);
+    assert_eq!(t1.anomalies, MISS_RETIRE_STREAK);
+    assert!(t1.final_loss.is_finite());
 }
 
 #[test]
