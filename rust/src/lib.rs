@@ -28,6 +28,12 @@
 //!   behind the leader and worker event loops, so the Fig. 1 topology runs
 //!   across real processes (`lad node-leader` / `lad node-worker`) with
 //!   measured — not just analytic — communication bytes.
+//! * [`obs`] — the structured observability layer: a typed event journal
+//!   (lock-sharded JSONL sink), a named counter/gauge/histogram registry
+//!   (power-of-2 ns buckets), nestable [`span!`] profiling guards with a
+//!   Chrome-trace exporter, and a live leader status endpoint — all
+//!   wall-clock-only telemetry, bit-identical traces with the recorder
+//!   on or off (fuzz-pinned).
 //! * [`theory`] — closed-form error terms (κ₁..κ₄, ξ₁..ξ₄, ε) from the
 //!   convergence analysis, used by the Fig. 2/3 reproductions.
 //! * [`experiments`] — drivers that regenerate every figure in the paper.
@@ -62,6 +68,7 @@ pub mod data;
 pub mod experiments;
 pub mod grad;
 pub mod net;
+pub mod obs;
 pub mod proptest_lite;
 pub mod runtime;
 pub mod server;

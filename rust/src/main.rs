@@ -18,6 +18,7 @@ use lad::data::linreg::LinRegDataset;
 use lad::experiments::{common, fig2, fig3, fig4, fig5, fig6};
 use lad::grad::{CodedGradOracle, NativeLinReg, RuntimeLinReg};
 use lad::net;
+use lad::obs::{Obs, StatusServer};
 use lad::runtime::Runtime;
 use lad::theory::TheoryParams;
 use lad::util::math::{rel_err, Mat};
@@ -75,6 +76,19 @@ OPTIONS
   --threads W       worker threads for device/variant-parallel stages
                     (1 = serial, 0 = all cores; traces are bit-identical
                     for any W — randomness is pre-split per device)
+
+OBSERVABILITY (node-leader, node-worker, sweep — pure telemetry; traces,
+  wire bytes and checkpoints are bit-identical with it on or off)
+  --events-out FILE   JSONL event journal (retire/rejoin, deadline misses,
+                      stale-upload discards, checkpoints, failover, role
+                      draws, redials, sweep jobs); sort lines by \"seq\"
+  --metrics-out FILE  counter/gauge/histogram snapshot JSON, written at exit
+  --trace-out FILE    Chrome trace_event JSON of the phase spans (load in
+                      chrome://tracing or Perfetto)
+  --status-addr A     live status endpoint (tcp://HOST:PORT or uds:PATH);
+                      each connection gets one JSON snapshot — `nc` works
+  LAD_OBS=1           enable the journal + exports with default paths under
+                      --out (events.jsonl, metrics.json, trace.json)
 ";
 
 fn main() {
@@ -165,6 +179,48 @@ fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
     }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Build the CLI observability context from `--events-out`,
+/// `--metrics-out`, `--trace-out`, `--status-addr`, or `LAD_OBS=1`
+/// (which fills in default paths under `default_dir` when given).
+/// With none of them present this returns [`Obs::off`] — the hot paths
+/// stay exactly what they were.
+fn obs_from_args(
+    args: &Args,
+    default_dir: Option<&str>,
+) -> Result<(Obs, Option<StatusServer>)> {
+    let events_out = args.get("events-out").map(str::to_string);
+    let metrics_out = args.get("metrics-out").map(str::to_string);
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let status_addr = args.get("status-addr").map(str::to_string);
+    let env_on = std::env::var("LAD_OBS").is_ok_and(|v| v == "1");
+    let any_flag = events_out.is_some()
+        || metrics_out.is_some()
+        || trace_out.is_some()
+        || status_addr.is_some();
+    if !env_on && !any_flag {
+        return Ok((Obs::off(), None));
+    }
+    let def = |name: &str| default_dir.map(|d| format!("{d}/{name}"));
+    let mut b = Obs::builder();
+    if let Some(p) = events_out.or_else(|| if env_on { def("events.jsonl") } else { None }) {
+        b = b.events_out(p);
+    }
+    if let Some(p) = metrics_out.or_else(|| if env_on { def("metrics.json") } else { None }) {
+        b = b.metrics_out(p);
+    }
+    if let Some(p) = trace_out.or_else(|| if env_on { def("trace.json") } else { None }) {
+        b = b.trace_out(p);
+    }
+    if let Some(a) = status_addr {
+        b = b.status_addr(a);
+    }
+    let (obs, server) = b.build()?;
+    if let Some(s) = &server {
+        println!("status endpoint on {}", s.addr());
+    }
+    Ok((obs, server))
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -310,14 +366,21 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         l => Some(l),
     };
     let threads = args.get_usize("threads", 0)?;
+    std::fs::create_dir_all(&out_dir)?;
+    let (obs, status_server) = obs_from_args(args, Some(&out_dir))?;
     args.reject_unknown()?;
-    let outcome = queue::run_sweep(
+    let outcome = queue::run_sweep_obs(
         &spec,
         std::path::Path::new(&out_dir),
         resume,
         limit,
         Parallelism::new(threads),
+        &obs,
     )?;
+    obs.finish()?;
+    if let Some(s) = status_server {
+        s.stop();
+    }
     println!(
         "sweep {}: {} jobs — {} ran, {} skipped (journaled), {} pending",
         spec.name, outcome.total, outcome.ran, outcome.skipped, outcome.pending
@@ -352,14 +415,15 @@ fn cmd_node_leader(args: &Args) -> Result<()> {
         checkpoint_path = Some(std::path::PathBuf::from(format!("{out_dir}/run.ckpt")));
     }
     let resume_from = args.get("resume-from").map(str::to_string);
+    // obs output defaults land under --out, so the dir must exist first
+    std::fs::create_dir_all(&out_dir)?;
+    let (obs, status_server) = obs_from_args(args, Some(&out_dir))?;
     args.reject_unknown()?;
 
     // same dataset/run seeding as `lad train`, so the node trace is
     // directly comparable to the central one
     let mut data_rng = Rng::new(cfg.seed);
     let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut data_rng);
-    // checkpoints may land under --out before the trace does
-    std::fs::create_dir_all(&out_dir)?;
     let listener = net::NetListener::bind(&addr)?;
     println!(
         "leader listening on {} — waiting for {} workers (digest {:#018x})",
@@ -387,6 +451,7 @@ fn cmd_node_leader(args: &Args) -> Result<()> {
             checkpoint_every,
             checkpoint_path,
             halt_after,
+            obs: obs.clone(),
             ..Default::default()
         },
         pool,
@@ -410,6 +475,10 @@ fn cmd_node_leader(args: &Args) -> Result<()> {
     let path = format!("{out_dir}/node_trace.csv");
     trace.save_csv(&path)?;
     println!("trace written to {path}");
+    obs.finish()?;
+    if let Some(s) = status_server {
+        s.stop();
+    }
     Ok(())
 }
 
@@ -427,6 +496,9 @@ fn cmd_node_worker(args: &Args) -> Result<()> {
     let reconnect_addr = args.get("reconnect-addr").map(str::to_string);
     let reconnect_attempts = args.get_usize("reconnect-attempts", 8)? as u32;
     let backoff_ms = args.get_u64("reconnect-backoff-ms", 250)?;
+    // no --out here: LAD_OBS=1 alone gives an in-memory registry, and
+    // --events-out journals redials to an explicit path
+    let (obs, status_server) = obs_from_args(args, None)?;
     args.reject_unknown()?;
     println!("worker {device} connecting to {addr}");
     let link = net::connect(&addr)?;
@@ -434,6 +506,7 @@ fn cmd_node_worker(args: &Args) -> Result<()> {
         reconnect_addr,
         reconnect_attempts,
         reconnect_backoff: std::time::Duration::from_millis(backoff_ms),
+        obs: obs.clone(),
         ..Default::default()
     };
     let report = net::run_worker_opts(link, device, None, local_digest, &wopts)?;
@@ -441,6 +514,10 @@ fn cmd_node_worker(args: &Args) -> Result<()> {
         "worker {} done: {} iterations, {} B up, {} B down, {} reconnect(s)",
         report.device, report.iters, report.up_bytes, report.down_bytes, report.reconnects
     );
+    obs.finish()?;
+    if let Some(s) = status_server {
+        s.stop();
+    }
     Ok(())
 }
 

@@ -111,6 +111,7 @@ use crate::coding::{Assignment, TaskMatrix};
 use crate::compress::{compress_batch, compress_batch_ef, Compressor, EfState};
 use crate::config::{CompressionKind, TrainConfig};
 use crate::data::linreg::LinRegDataset;
+use crate::obs::{Event, Obs};
 use crate::server::checkpoint::{Checkpoint, RosterEntry, TraceBlock};
 use crate::server::metrics::TrainTrace;
 use crate::server::trainer::byz_set;
@@ -172,16 +173,32 @@ pub struct RejoinRequest {
 /// again, its EF residual (when error feedback is active) is zeroed so the
 /// slot can never replay stale memory, and if its upload was still pending
 /// this iteration the miss is charged to the trace as an anomaly
-/// immediately so the gather can stop waiting on it.
+/// immediately so the gather can stop waiting on it. The retirement —
+/// with the structured `reason` the old silent path dropped — is
+/// journaled as a [`Event::DeviceRetired`] and counted in
+/// `trace.retirements`.
+#[allow(clippy::too_many_arguments)]
 fn drop_device(
     dev: usize,
+    iter: u64,
+    reason: &str,
     dead: &mut [bool],
     expecting: &mut [bool],
     have: &[Option<u64>],
     want: &mut usize,
     trace: &mut TrainTrace,
     ef: Option<&mut EfState>,
+    obs: &Obs,
 ) {
+    if !dead[dev] {
+        trace.retirements += 1;
+        if obs.enabled() {
+            obs.emit(Event::DeviceRetired { device: dev, iter, reason: reason.to_string() });
+            if let Some(st) = obs.status() {
+                st.device_retired(dev);
+            }
+        }
+    }
     dead[dev] = true;
     if let Some(st) = ef {
         st.reset(dev);
@@ -231,6 +248,11 @@ pub struct LeaderOpts {
     /// up and reconnect — after completing iteration K and writing a
     /// final checkpoint: the leader-kill half of the failover drill.
     pub halt_after: Option<u64>,
+    /// Observability context ([`Obs::off`] by default): event journal,
+    /// metrics registry, span profiler, live status endpoint.
+    /// Wall-clock telemetry only — traces, wire bytes, RNG order and
+    /// checkpoints are bit-identical with it on or off (fuzz-pinned).
+    pub obs: Obs,
 }
 
 impl Default for LeaderOpts {
@@ -244,6 +266,7 @@ impl Default for LeaderOpts {
             checkpoint_every: 0,
             checkpoint_path: None,
             halt_after: None,
+            obs: Obs::off(),
         }
     }
 }
@@ -296,7 +319,8 @@ fn trace_to_block(tr: &TrainTrace, bits_total: u64, up: u64, down: u64) -> Trace
 }
 
 /// Inverse of [`trace_to_block`]: `(trace, bits_total, wire_up, wire_down)`.
-/// Phase timings are telemetry, not state — they restart from zero.
+/// Phase timings are telemetry, not state — they restart from zero, and so
+/// do the deadline-miss / retirement / rejoin breakdown counters.
 fn block_to_trace(b: &TraceBlock) -> (TrainTrace, u64, u64, u64) {
     let mut tr = TrainTrace::new(b.label.clone());
     tr.iters = b.iters.iter().map(|&i| i as usize).collect();
@@ -686,6 +710,17 @@ impl Leader<'_> {
             init.wire_up = up;
             init.wire_down = down;
         }
+        if self.opts.obs.enabled() {
+            self.opts.obs.emit(Event::LeaderFailover {
+                iter: ckpt.iter,
+                checkpoint: self
+                    .opts
+                    .checkpoint_path
+                    .as_ref()
+                    .map(|p| p.display().to_string())
+                    .unwrap_or_else(|| "<checkpoint>".to_string()),
+            });
+        }
         Ok((comp_seeds, Rng::restore(run_rng), init))
     }
 
@@ -789,6 +824,7 @@ impl Leader<'_> {
         let cfg = self.cfg;
         let n = cfg.n_devices;
         let timer = Timer::start();
+        let obs = &self.opts.obs;
         let hand_off = self.opts.rotate_byzantine && self.opts.device_compression;
         let TrainInit {
             start_iter,
@@ -802,6 +838,23 @@ impl Leader<'_> {
             mut wire_up,
             mut wire_down,
         } = init;
+        // metrics export high-water marks: counters get per-iteration
+        // deltas so a live status poll sees wire bytes grow
+        let (mut obs_up_mark, mut obs_down_mark) = (wire_up, wire_down);
+        if let Some(st) = obs.status() {
+            st.begin_run(&trace.label, cfg.iters as u64, n);
+            st.set_iter(start_iter as u64);
+            for i in 0..n {
+                st.set_device(
+                    i,
+                    crate::obs::DeviceStatus {
+                        dead: dead[i],
+                        miss_streak: miss_streak[i] as u64,
+                        epoch: rejoin_epoch[i],
+                    },
+                );
+            }
+        }
         // per-device compression streams: restored cursors on a warm
         // restart, fresh from the pre-split seeds otherwise
         let mut comp_rngs: Vec<Rng> = match &comp_cursors {
@@ -930,6 +983,17 @@ impl Leader<'_> {
                                     &cursor,
                                 );
                             }
+                            trace.rejoins += 1;
+                            if obs.enabled() {
+                                obs.emit(Event::DeviceRejoined {
+                                    device: dev,
+                                    iter: t as u64,
+                                    epoch: rejoin_epoch[dev],
+                                });
+                                if let Some(st) = obs.status() {
+                                    st.device_rejoined(dev, rejoin_epoch[dev]);
+                                }
+                            }
                             eprintln!("leader: device {dev} rejoined at iteration {t}");
                         }
                         Err(e) => {
@@ -940,12 +1004,22 @@ impl Leader<'_> {
                 pending_rejoin = keep;
             }
 
-            let t_bcast = Instant::now();
+            if let Some(st) = obs.status() {
+                st.set_iter(t as u64);
+                st.set_phase("broadcast");
+            }
+            let sp_bcast = obs.span("broadcast");
             let (assign, is_byz, tails) = match staged.take() {
                 Some(s) => s,
                 None => {
                     let a = Assignment::draw(n, rng);
                     let b = byz_set(cfg, self.opts.rotate_byzantine, rng);
+                    if self.opts.rotate_byzantine && obs.enabled() {
+                        obs.emit(Event::ByzantineRoleDrawn {
+                            iter: t as u64,
+                            byzantine: (0..n).filter(|&i| b[i]).collect(),
+                        });
+                    }
                     let tails = if pipeline {
                         encode_tails(&a, &b, &comp_rngs)
                     } else {
@@ -985,6 +1059,17 @@ impl Leader<'_> {
                                     st.reset(i);
                                 }
                                 trace.anomalies += 1;
+                                trace.retirements += 1;
+                                if obs.enabled() {
+                                    obs.emit(Event::DeviceRetired {
+                                        device: i,
+                                        iter: t as u64,
+                                        reason: format!("broadcast send failed: {e:#}"),
+                                    });
+                                    if let Some(st) = obs.status() {
+                                        st.device_retired(i);
+                                    }
+                                }
                             } else {
                                 return Err(e).context(format!("broadcast to device {i}"));
                             }
@@ -1018,6 +1103,17 @@ impl Leader<'_> {
                                     st.reset(i);
                                 }
                                 trace.anomalies += 1;
+                                trace.retirements += 1;
+                                if obs.enabled() {
+                                    obs.emit(Event::DeviceRetired {
+                                        device: i,
+                                        iter: t as u64,
+                                        reason: format!("broadcast send failed: {e:#}"),
+                                    });
+                                    if let Some(st) = obs.status() {
+                                        st.device_retired(i);
+                                    }
+                                }
                             } else {
                                 return Err(e).context(format!("broadcast to device {i}"));
                             }
@@ -1025,14 +1121,19 @@ impl Leader<'_> {
                     }
                 }
             }
-            trace.broadcast_ns += t_bcast.elapsed().as_nanos() as u64;
+            let bcast_ns = sp_bcast.done();
+            trace.broadcast_ns += bcast_ns;
             let mut want = expecting.iter().filter(|&&b| b).count();
+            let frames_sent = want as u64;
             ensure!(want > 0, "iteration {t}: no live workers left");
 
             // gather until complete or the deadline expires; uploads decode
             // straight into their device's slab row, `have[dev]` records the
             // analytic bit count of a landed upload
-            let t_gather = Instant::now();
+            if let Some(st) = obs.status() {
+                st.set_phase("gather");
+            }
+            let sp_gather = obs.span("gather");
             let mut have: Vec<Option<u64>> = (0..n).map(|_| None).collect();
             let deadline = self.opts.gather_deadline.map(|d| Instant::now() + d);
             while want > 0 {
@@ -1058,7 +1159,23 @@ impl Leader<'_> {
                 let (dev, epoch, event) = item;
                 if epoch != rejoin_epoch[dev] {
                     // ghost event from a connection that a rejoin has since
-                    // replaced; not counted anywhere (determinism)
+                    // replaced; not counted anywhere (determinism) — but no
+                    // longer silent: the discard reason is journaled
+                    if obs.enabled() {
+                        let upload_iter = match &event {
+                            Some((Msg::Upload { iter, .. }, _)) => *iter as u64,
+                            _ => t as u64,
+                        };
+                        obs.emit(Event::StaleUploadDiscarded {
+                            device: dev,
+                            iter: t as u64,
+                            upload_iter,
+                            reason: format!(
+                                "ghost epoch {epoch} (slot re-filled, now epoch {})",
+                                rejoin_epoch[dev]
+                            ),
+                        });
+                    }
                     continue;
                 }
                 let (msg, nb) = match event {
@@ -1073,12 +1190,15 @@ impl Leader<'_> {
                         }
                         drop_device(
                             dev,
+                            t as u64,
+                            "connection died (EOF or corrupt frame)",
                             &mut dead,
                             &mut expecting,
                             &have,
                             &mut want,
                             &mut trace,
                             ef.as_mut(),
+                            obs,
                         );
                         continue;
                     }
@@ -1087,9 +1207,31 @@ impl Leader<'_> {
                 match msg {
                     Msg::Upload { iter, device, analytic_bits, cursor, payload } => {
                         if iter as usize != t || device as usize != dev {
-                            continue; // stale upload from a past deadline miss
+                            // stale upload from a past deadline miss (or a
+                            // mislabeled sender) — journal the reason
+                            if obs.enabled() {
+                                obs.emit(Event::StaleUploadDiscarded {
+                                    device: dev,
+                                    iter: t as u64,
+                                    upload_iter: iter as u64,
+                                    reason: if device as usize != dev {
+                                        format!("upload labeled device {device} on link {dev}")
+                                    } else {
+                                        "late upload for a past iteration".to_string()
+                                    },
+                                });
+                            }
+                            continue;
                         }
                         if !expecting[dev] || have[dev].is_some() {
+                            if obs.enabled() {
+                                obs.emit(Event::StaleUploadDiscarded {
+                                    device: dev,
+                                    iter: t as u64,
+                                    upload_iter: iter as u64,
+                                    reason: "duplicate or unexpected upload".to_string(),
+                                });
+                            }
                             continue;
                         }
                         // dimension checked on the cheap accessor BEFORE
@@ -1117,12 +1259,15 @@ impl Leader<'_> {
                             }
                             drop_device(
                                 dev,
+                                t as u64,
+                                "invalid upload (payload dim mismatch or decode failure)",
                                 &mut dead,
                                 &mut expecting,
                                 &have,
                                 &mut want,
                                 &mut trace,
                                 ef.as_mut(),
+                                obs,
                             );
                         }
                     }
@@ -1132,20 +1277,30 @@ impl Leader<'_> {
                         if self.opts.gather_deadline.is_none() {
                             bail!("unexpected mid-run message from device {dev}: {other:?}");
                         }
+                        let reason = format!("protocol deviation: {other:?}");
                         drop_device(
                             dev,
+                            t as u64,
+                            &reason,
                             &mut dead,
                             &mut expecting,
                             &have,
                             &mut want,
                             &mut trace,
                             ef.as_mut(),
+                            obs,
                         );
                     }
                 }
             }
             trace.anomalies += want; // devices that missed the deadline
-            trace.gather_ns += t_gather.elapsed().as_nanos() as u64;
+            let gather_ns = sp_gather.done();
+            trace.gather_ns += gather_ns;
+            if want > 0 {
+                if let Some(st) = obs.status() {
+                    st.add_anomalies(want as u64);
+                }
+            }
             // retire chronic stragglers so a permanently stalled worker
             // costs a bounded number of timeouts, not one per iteration
             for i in 0..n {
@@ -1153,15 +1308,45 @@ impl Leader<'_> {
                     continue;
                 }
                 if have[i].is_some() {
+                    if miss_streak[i] != 0 {
+                        if let Some(st) = obs.status() {
+                            st.device_answered(i);
+                        }
+                    }
                     miss_streak[i] = 0;
                 } else {
                     miss_streak[i] += 1;
+                    trace.deadline_misses += 1;
+                    if obs.enabled() {
+                        obs.emit(Event::DeadlineMiss {
+                            device: i,
+                            iter: t as u64,
+                            streak: miss_streak[i] as u64,
+                        });
+                        if let Some(st) = obs.status() {
+                            st.device_miss(i, miss_streak[i] as u64);
+                        }
+                    }
                     if miss_streak[i] >= MISS_RETIRE_STREAK {
                         dead[i] = true;
+                        trace.retirements += 1;
                         // retirement zeroes the slot's residual; a mere
                         // deadline miss (above) leaves it untouched
                         if let Some(st) = ef.as_mut() {
                             st.reset(i);
+                        }
+                        if obs.enabled() {
+                            obs.emit(Event::DeviceRetired {
+                                device: i,
+                                iter: t as u64,
+                                reason: format!(
+                                    "{} consecutive deadline misses",
+                                    miss_streak[i]
+                                ),
+                            });
+                            if let Some(st) = obs.status() {
+                                st.device_retired(i);
+                            }
                         }
                         eprintln!(
                             "leader: retiring device {i} after {} consecutive misses",
@@ -1184,7 +1369,10 @@ impl Leader<'_> {
             // honest-then-lies order under fixed identities (honest ids
             // all precede Byzantine ids) and the central trainer's family
             // order under rotation.
-            let t_agg = Instant::now();
+            if let Some(st) = obs.status() {
+                st.set_phase("aggregate");
+            }
+            let sp_agg = obs.span("aggregate");
             let row = |i: usize| -> &[f32] { &slab[i * cfg.dim..(i + 1) * cfg.dim] };
             let msgs: Vec<Vec<f32>> = if self.opts.device_compression {
                 let honest_rec: Vec<&[f32]> = honest_ids.iter().map(|&i| row(i)).collect();
@@ -1325,15 +1513,51 @@ impl Leader<'_> {
             if pipeline && t + 1 < cfg.iters {
                 let a = Assignment::draw(n, rng);
                 let b = byz_set(cfg, self.opts.rotate_byzantine, rng);
+                if self.opts.rotate_byzantine && obs.enabled() {
+                    obs.emit(Event::ByzantineRoleDrawn {
+                        iter: t as u64 + 1,
+                        byzantine: (0..n).filter(|&i| b[i]).collect(),
+                    });
+                }
                 let tails = encode_tails(&a, &b, &comp_rngs);
                 staged = Some((a, b, tails));
             }
 
-            let update = self.agg.aggregate(&msgs);
+            let update = if obs.enabled() {
+                // per-rule kernel histogram (power-of-2 ns buckets)
+                let t_kernel = Instant::now();
+                let u = self.agg.aggregate(&msgs);
+                let kernel_ns = t_kernel.elapsed().as_nanos() as u64;
+                obs.observe_ns(&format!("aggregate_kernel/{}", self.agg.name()), kernel_ns);
+                u
+            } else {
+                self.agg.aggregate(&msgs)
+            };
             for (xi, ui) in x0.iter_mut().zip(&update) {
                 *xi -= cfg.lr as f32 * ui;
             }
-            trace.aggregate_ns += t_agg.elapsed().as_nanos() as u64;
+            let agg_ns = sp_agg.done();
+            trace.aggregate_ns += agg_ns;
+            if obs.enabled() {
+                obs.add("wire_up_bytes", wire_up - obs_up_mark);
+                obs.add("wire_down_bytes", wire_down - obs_down_mark);
+                obs_up_mark = wire_up;
+                obs_down_mark = wire_down;
+                obs.add(
+                    if pipeline { "frames_spliced" } else { "frames_encoded" },
+                    frames_sent,
+                );
+                if let Some(st) = ef.as_ref() {
+                    // float work, deliberately gated behind `enabled()` so
+                    // the recorder-off hot path does no extra math
+                    let total: f64 = (0..n).map(|i| norm(st.residual(i))).sum();
+                    obs.gauge("ef_residual_norm", total);
+                }
+                if let Some(st) = obs.status() {
+                    st.add_phase_ns(bcast_ns, gather_ns, agg_ns);
+                    st.set_iter(t as u64 + 1);
+                }
+            }
             if (cfg.log_every > 0 && t % cfg.log_every == 0) || t + 1 == cfg.iters {
                 trace.record(t, self.ds.loss(x0), norm(&update), bits_total);
             }
@@ -1360,8 +1584,14 @@ impl Leader<'_> {
                         .collect(),
                 );
                 ck.trace = Some(trace_to_block(&trace, bits_total, wire_up, wire_down));
+                let sp_ckpt = obs.span("checkpoint");
                 ck.save(path)
                     .with_context(|| format!("writing checkpoint to {}", path.display()))?;
+                let ckpt_ns = sp_ckpt.done();
+                if obs.enabled() {
+                    let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+                    obs.emit(Event::CheckpointWritten { iter: t as u64 + 1, bytes, ns: ckpt_ns });
+                }
             }
             if self.opts.halt_after == Some(t as u64) {
                 // the leader-kill drill: exit WITHOUT Shutdown, so the
@@ -1379,6 +1609,13 @@ impl Leader<'_> {
         trace.wall_s = timer.elapsed_s();
         trace.wire_up_bytes = wire_up;
         trace.wire_down_bytes = wire_down;
+        if obs.enabled() {
+            obs.add("wire_up_bytes", wire_up - obs_up_mark);
+            obs.add("wire_down_bytes", wire_down - obs_down_mark);
+            if let Some(st) = obs.status() {
+                st.set_phase("done");
+            }
+        }
         Ok(trace)
     }
 }

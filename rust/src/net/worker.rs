@@ -47,6 +47,7 @@ use super::transport::Transport;
 use super::wire::{DatasetBlock, Msg, Payload, WIRE_VERSION};
 use crate::compress;
 use crate::data::linreg::LinRegDataset;
+use crate::obs::{Event, Obs};
 use crate::util::math::{axpy, scale};
 use crate::util::rng::Rng;
 use crate::Result;
@@ -94,6 +95,11 @@ pub struct WorkerOpts {
     pub reconnect_attempts: u32,
     /// Wait between redial attempts.
     pub reconnect_backoff: Duration,
+    /// Observability sink. [`Obs::off`] (the default) is a no-op; a
+    /// recording handle journals `worker_redial` events for every lost
+    /// upload and failed reconnect attempt — pure telemetry, never on
+    /// the compute or wire path.
+    pub obs: Obs,
 }
 
 impl Default for WorkerOpts {
@@ -105,6 +111,7 @@ impl Default for WorkerOpts {
             reconnect_addr: None,
             reconnect_attempts: 0,
             reconnect_backoff: Duration::from_millis(250),
+            obs: Obs::off(),
         }
     }
 }
@@ -199,11 +206,19 @@ fn redial(
 ) -> Result<(Box<dyn Transport>, HelloInfo, u64)> {
     let addr = opts.reconnect_addr.as_deref().expect("redial requires reconnect_addr");
     let mut last: anyhow::Error = anyhow::anyhow!("no reconnect attempts configured");
+    // journal every failed attempt with its reason — the redial loop
+    // used to swallow all but the last error
+    let note = |attempt: u32, reason: String| {
+        if opts.obs.enabled() {
+            opts.obs.emit(Event::WorkerRedial { device, attempt: attempt as u64, reason });
+        }
+    };
     for attempt in 1..=opts.reconnect_attempts {
         std::thread::sleep(opts.reconnect_backoff);
         let mut link = match super::transport::connect(addr) {
             Ok(l) => l,
             Err(e) => {
+                note(attempt, format!("connect to {addr} failed: {e:#}"));
                 last = e.context(format!("reconnect attempt {attempt} to {addr}"));
                 continue;
             }
@@ -215,13 +230,17 @@ fn redial(
         }) {
             Ok(nb) => nb,
             Err(e) => {
+                note(attempt, format!("join send failed: {e:#}"));
                 last = e.context(format!("reconnect attempt {attempt}: join"));
                 continue;
             }
         };
         match recv_hello(&mut link, device, local_digest) {
             Ok(h) => return Ok((link, h, join_bytes)),
-            Err(e) => last = e.context(format!("reconnect attempt {attempt}: hello")),
+            Err(e) => {
+                note(attempt, format!("hello handshake failed: {e:#}"));
+                last = e.context(format!("reconnect attempt {attempt}: hello"));
+            }
         }
     }
     Err(last.context(format!(
@@ -382,7 +401,16 @@ pub fn run_worker_opts(
                             return Err(e).context("uploading to leader");
                         }
                         // the upload is lost (the leader's deadline covers
-                        // it); recover the connection on the next recv
+                        // it); recover the connection on the next recv.
+                        // attempt 0 marks the triggering loss, before any
+                        // numbered redial attempt runs
+                        if opts.obs.enabled() {
+                            opts.obs.emit(Event::WorkerRedial {
+                                device,
+                                attempt: 0,
+                                reason: format!("upload for iter {iter} failed: {e:#}"),
+                            });
+                        }
                         eprintln!("worker {device}: upload failed ({e:#}), will redial");
                         continue;
                     }

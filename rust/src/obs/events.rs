@@ -1,0 +1,350 @@
+//! Typed events and the JSONL journal sink.
+//!
+//! Every event that used to be a silent `continue`, a bare
+//! `anomalies += 1`, or a free-form `eprintln!` in the leader / worker
+//! loops is a variant here, carrying the device, iteration, and reason
+//! that the old paths dropped. See the module-level schema table in
+//! [`crate::obs`].
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context as _, Result};
+
+use crate::util::json::Json;
+
+/// A structured observability event. Serialized as one JSONL line with
+/// `seq` / `ms` envelope fields added by the sink.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A device crossed the miss-streak threshold (or its link died)
+    /// and was removed from the active roster.
+    DeviceRetired { device: usize, iter: u64, reason: String },
+    /// A late `Join` was activated into a retired slot; `epoch` is the
+    /// slot's new connection epoch.
+    DeviceRejoined { device: usize, iter: u64, epoch: u64 },
+    /// A device missed a gather deadline; `streak` counts consecutive
+    /// misses (retirement fires at `net::MISS_RETIRE_STREAK`).
+    DeadlineMiss { device: usize, iter: u64, streak: u64 },
+    /// An upload was discarded by the leader's epoch-tagged reader —
+    /// either a ghost from a dead connection epoch or a stale
+    /// iteration (`upload_iter < iter`).
+    StaleUploadDiscarded { device: usize, iter: u64, upload_iter: u64, reason: String },
+    /// A periodic checkpoint was cut: file size and wall time of the
+    /// atomic tmp+rename write.
+    CheckpointWritten { iter: u64, bytes: u64, ns: u64 },
+    /// A leader warm-restarted from a checkpoint (standby takeover or
+    /// `--resume-from`).
+    LeaderFailover { iter: u64, checkpoint: String },
+    /// Per-iteration Byzantine role rotation drew a fresh honest/byz
+    /// split.
+    ByzantineRoleDrawn { iter: u64, byzantine: Vec<usize> },
+    /// A sweep job finished; `id` is the content-addressed job id.
+    SweepJobDone { id: String, ns: u64 },
+    /// A worker's redial loop failed an attempt against the reconnect
+    /// address (the reason used to die in a local `anyhow::Error`).
+    WorkerRedial { device: usize, attempt: u64, reason: String },
+}
+
+impl Event {
+    /// Stable snake_case discriminator used as the `"event"` field.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::DeviceRetired { .. } => "device_retired",
+            Event::DeviceRejoined { .. } => "device_rejoined",
+            Event::DeadlineMiss { .. } => "deadline_miss",
+            Event::StaleUploadDiscarded { .. } => "stale_upload_discarded",
+            Event::CheckpointWritten { .. } => "checkpoint_written",
+            Event::LeaderFailover { .. } => "leader_failover",
+            Event::ByzantineRoleDrawn { .. } => "byzantine_role_drawn",
+            Event::SweepJobDone { .. } => "sweep_job_done",
+            Event::WorkerRedial { .. } => "worker_redial",
+        }
+    }
+
+    /// Payload as a JSON object (discriminator included, no envelope).
+    pub fn to_json(&self) -> Json {
+        fn num(o: &mut BTreeMap<String, Json>, k: &str, v: u64) {
+            o.insert(k.to_string(), Json::Num(v as f64));
+        }
+        let mut o = BTreeMap::new();
+        o.insert("event".to_string(), Json::Str(self.kind().to_string()));
+        match self {
+            Event::DeviceRetired { device, iter, reason } => {
+                num(&mut o, "device", *device as u64);
+                num(&mut o, "iter", *iter);
+                o.insert("reason".into(), Json::Str(reason.clone()));
+            }
+            Event::DeviceRejoined { device, iter, epoch } => {
+                num(&mut o, "device", *device as u64);
+                num(&mut o, "iter", *iter);
+                num(&mut o, "epoch", *epoch);
+            }
+            Event::DeadlineMiss { device, iter, streak } => {
+                num(&mut o, "device", *device as u64);
+                num(&mut o, "iter", *iter);
+                num(&mut o, "streak", *streak);
+            }
+            Event::StaleUploadDiscarded { device, iter, upload_iter, reason } => {
+                num(&mut o, "device", *device as u64);
+                num(&mut o, "iter", *iter);
+                num(&mut o, "upload_iter", *upload_iter);
+                o.insert("reason".into(), Json::Str(reason.clone()));
+            }
+            Event::CheckpointWritten { iter, bytes, ns } => {
+                num(&mut o, "iter", *iter);
+                num(&mut o, "bytes", *bytes);
+                num(&mut o, "ns", *ns);
+            }
+            Event::LeaderFailover { iter, checkpoint } => {
+                num(&mut o, "iter", *iter);
+                o.insert("checkpoint".into(), Json::Str(checkpoint.clone()));
+            }
+            Event::ByzantineRoleDrawn { iter, byzantine } => {
+                num(&mut o, "iter", *iter);
+                let devs = byzantine.iter().map(|d| Json::Num(*d as f64)).collect();
+                o.insert("byzantine".into(), Json::Arr(devs));
+            }
+            Event::SweepJobDone { id, ns } => {
+                o.insert("id".into(), Json::Str(id.clone()));
+                num(&mut o, "ns", *ns);
+            }
+            Event::WorkerRedial { device, attempt, reason } => {
+                num(&mut o, "device", *device as u64);
+                num(&mut o, "attempt", *attempt);
+                o.insert("reason".into(), Json::Str(reason.clone()));
+            }
+        }
+        Json::Obj(o)
+    }
+
+    /// Parse an event back from a JSON object (envelope fields are
+    /// ignored). Returns `None` on an unknown discriminator or missing
+    /// field — journal readers skip rather than fail.
+    pub fn from_json(j: &Json) -> Option<Event> {
+        let kind = j.get("event")?.as_str()?;
+        let num = |k: &str| j.get(k).and_then(Json::as_f64).map(|v| v as u64);
+        let s = |k: &str| j.get(k).and_then(Json::as_str).map(str::to_string);
+        Some(match kind {
+            "device_retired" => Event::DeviceRetired {
+                device: num("device")? as usize,
+                iter: num("iter")?,
+                reason: s("reason")?,
+            },
+            "device_rejoined" => Event::DeviceRejoined {
+                device: num("device")? as usize,
+                iter: num("iter")?,
+                epoch: num("epoch")?,
+            },
+            "deadline_miss" => Event::DeadlineMiss {
+                device: num("device")? as usize,
+                iter: num("iter")?,
+                streak: num("streak")?,
+            },
+            "stale_upload_discarded" => Event::StaleUploadDiscarded {
+                device: num("device")? as usize,
+                iter: num("iter")?,
+                upload_iter: num("upload_iter")?,
+                reason: s("reason")?,
+            },
+            "checkpoint_written" => Event::CheckpointWritten {
+                iter: num("iter")?,
+                bytes: num("bytes")?,
+                ns: num("ns")?,
+            },
+            "leader_failover" => Event::LeaderFailover {
+                iter: num("iter")?,
+                checkpoint: s("checkpoint")?,
+            },
+            "byzantine_role_drawn" => Event::ByzantineRoleDrawn {
+                iter: num("iter")?,
+                byzantine: j
+                    .get("byzantine")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_f64().map(|v| v as usize))
+                    .collect::<Option<Vec<_>>>()?,
+            },
+            "sweep_job_done" => Event::SweepJobDone { id: s("id")?, ns: num("ns")? },
+            "worker_redial" => Event::WorkerRedial {
+                device: num("device")? as usize,
+                attempt: num("attempt")?,
+                reason: s("reason")?,
+            },
+            _ => return None,
+        })
+    }
+}
+
+/// Event sink. Implementations must be cheap and must never panic out
+/// of a training loop — telemetry failures are swallowed or surfaced
+/// at `flush`, not mid-iteration.
+pub trait Recorder: Send + Sync {
+    fn record(&self, ev: &Event);
+    /// Flush buffered output; called once by [`crate::obs::Obs::finish`].
+    fn flush(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Discards every event (enabled obs with metrics/spans but no
+/// journal).
+#[derive(Debug, Default)]
+pub struct NullRecorder;
+
+impl Recorder for NullRecorder {
+    fn record(&self, _ev: &Event) {}
+}
+
+/// Number of independent file-handle shards in [`JsonlRecorder`].
+/// Writers hash by sequence number, so concurrent emitters (pool
+/// threads, worker threads, the leader loop) rarely contend on one
+/// mutex; `O_APPEND` keeps each line append atomic regardless of which
+/// shard wrote it.
+pub const JOURNAL_SHARDS: usize = 4;
+
+/// Lock-sharded JSONL sink writing `events.jsonl`-style journals.
+///
+/// Each event becomes exactly one line, written with a single
+/// `write_all` on an `O_APPEND` handle — appends are atomic at the
+/// kernel level, so lines from different shards interleave but never
+/// tear. `seq` is process-monotonic; sort by it to recover emission
+/// order.
+pub struct JsonlRecorder {
+    shards: Vec<Mutex<File>>,
+    seq: AtomicU64,
+    epoch: Instant,
+}
+
+impl JsonlRecorder {
+    /// Create (truncating any previous journal at `path`) and open the
+    /// shard handles.
+    pub fn create<P: AsRef<Path>>(path: P) -> Result<JsonlRecorder> {
+        let path = path.as_ref();
+        // A fresh run starts a fresh journal; O_APPEND and O_TRUNC
+        // don't compose in OpenOptions, so drop any stale file first.
+        let _ = std::fs::remove_file(path);
+        let first = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut shards = Vec::with_capacity(JOURNAL_SHARDS);
+        for _ in 1..JOURNAL_SHARDS {
+            shards.push(Mutex::new(first.try_clone().context("cloning journal handle")?));
+        }
+        shards.push(Mutex::new(first));
+        Ok(JsonlRecorder { shards, seq: AtomicU64::new(0), epoch: Instant::now() })
+    }
+}
+
+impl Recorder for JsonlRecorder {
+    fn record(&self, ev: &Event) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut obj = match ev.to_json() {
+            Json::Obj(o) => o,
+            other => {
+                let mut o = BTreeMap::new();
+                o.insert("payload".to_string(), other);
+                o
+            }
+        };
+        obj.insert("seq".to_string(), Json::Num(seq as f64));
+        obj.insert("ms".to_string(), Json::Num(self.epoch.elapsed().as_millis() as f64));
+        let mut line = Json::Obj(obj).to_string();
+        line.push('\n');
+        let shard = &self.shards[seq as usize % self.shards.len()];
+        if let Ok(mut f) = shard.lock() {
+            // One write(2) per fully-formed line: atomic under O_APPEND.
+            let _ = f.write_all(line.as_bytes());
+        }
+    }
+
+    fn flush(&self) -> Result<()> {
+        for shard in &self.shards {
+            if let Ok(mut f) = shard.lock() {
+                f.flush().context("flushing event journal")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::DeviceRetired { device: 3, iter: 17, reason: "miss streak 3".into() },
+            Event::DeviceRejoined { device: 3, iter: 22, epoch: 2 },
+            Event::DeadlineMiss { device: 5, iter: 9, streak: 1 },
+            Event::StaleUploadDiscarded {
+                device: 1,
+                iter: 10,
+                upload_iter: 8,
+                reason: "ghost epoch".into(),
+            },
+            Event::CheckpointWritten { iter: 20, bytes: 4096, ns: 1_500_000 },
+            Event::LeaderFailover { iter: 21, checkpoint: "ckpt.bin".into() },
+            Event::ByzantineRoleDrawn { iter: 4, byzantine: vec![0, 6] },
+            Event::SweepJobDone { id: "6d71af87f6a38e78".into(), ns: 9_999 },
+            Event::WorkerRedial { device: 2, attempt: 1, reason: "connection refused".into() },
+        ]
+    }
+
+    #[test]
+    fn event_json_round_trips() {
+        for ev in sample_events() {
+            let j = ev.to_json();
+            let back = Event::from_json(&j).expect("round trip");
+            assert_eq!(ev, back, "round trip mismatch for {}", ev.kind());
+        }
+    }
+
+    #[test]
+    fn jsonl_sink_writes_sorted_reconstructible_lines() {
+        let path = std::env::temp_dir().join(format!("lad_obs_{}.jsonl", std::process::id()));
+        let rec = JsonlRecorder::create(&path).unwrap();
+        let evs = sample_events();
+        for ev in &evs {
+            rec.record(ev);
+        }
+        rec.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines: Vec<(u64, Event)> = text
+            .lines()
+            .map(|l| {
+                let j = json::parse(l).expect("valid json line");
+                let seq = j.get("seq").and_then(Json::as_f64).expect("seq") as u64;
+                assert!(j.get("ms").is_some(), "missing ms envelope");
+                (seq, Event::from_json(&j).expect("typed event"))
+            })
+            .collect();
+        lines.sort_by_key(|(seq, _)| *seq);
+        let seqs: Vec<u64> = lines.iter().map(|(s, _)| *s).collect();
+        assert_eq!(seqs, (0..evs.len() as u64).collect::<Vec<_>>(), "seq not monotonic");
+        let got: Vec<Event> = lines.into_iter().map(|(_, e)| e).collect();
+        assert_eq!(got, evs);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn create_truncates_a_stale_journal() {
+        let path = std::env::temp_dir().join(format!("lad_obs_trunc_{}.jsonl", std::process::id()));
+        std::fs::write(&path, "stale line\n").unwrap();
+        let rec = JsonlRecorder::create(&path).unwrap();
+        rec.record(&Event::SweepJobDone { id: "x".into(), ns: 1 });
+        rec.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(!text.contains("stale"), "old journal leaked through: {text}");
+        assert_eq!(text.lines().count(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,101 @@
+//! Run-end exporters: metrics snapshot JSON and Chrome-trace
+//! (`trace_event` format) span dumps.
+//!
+//! The Chrome trace loads directly into `chrome://tracing`,
+//! <https://ui.perfetto.dev>, or `speedscope` for flamegraph viewing:
+//! every span is a complete (`"ph":"X"`) event with microsecond
+//! timestamps on the sink's shared epoch, one lane per OS thread, so
+//! nesting falls out of time containment.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context as _, Result};
+
+use crate::obs::metrics::Metrics;
+use crate::obs::spans::SpanSink;
+use crate::util::json::Json;
+
+/// Serialize the span sink as Chrome `trace_event` JSON.
+pub fn chrome_trace_json(sink: &SpanSink) -> Json {
+    let mut events = Vec::new();
+    for rec in sink.snapshot() {
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(rec.name.to_string()));
+        o.insert("ph".to_string(), Json::Str("X".to_string()));
+        o.insert("ts".to_string(), Json::Num(rec.start_ns as f64 / 1_000.0));
+        o.insert("dur".to_string(), Json::Num(rec.dur_ns as f64 / 1_000.0));
+        o.insert("pid".to_string(), Json::Num(1.0));
+        o.insert("tid".to_string(), Json::Num(rec.tid as f64));
+        events.push(Json::Obj(o));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("traceEvents".to_string(), Json::Arr(events));
+    top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    if sink.dropped() > 0 {
+        top.insert("droppedSpans".to_string(), Json::Num(sink.dropped() as f64));
+    }
+    Json::Obj(top)
+}
+
+/// Write the span sink as a Chrome-trace file.
+pub fn write_chrome_trace<P: AsRef<Path>>(sink: &SpanSink, path: P) -> Result<()> {
+    let path = path.as_ref();
+    let mut text = chrome_trace_json(sink).to_string();
+    text.push('\n');
+    std::fs::write(path, text).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Write the metrics registry snapshot as pretty JSON (dumped next to
+/// `results.csv` / `node_trace.csv` at run end).
+pub fn write_metrics<P: AsRef<Path>>(metrics: &Metrics, path: P) -> Result<()> {
+    let path = path.as_ref();
+    let mut text = metrics.snapshot().to_pretty_string();
+    text.push('\n');
+    std::fs::write(path, text).with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn chrome_trace_has_complete_events_in_microseconds() {
+        let sink = SpanSink::new();
+        let epoch = Instant::now();
+        sink.record("gather", epoch, 2_000);
+        let j = chrome_trace_json(&sink);
+        let evs = j.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(evs[0].get("name").and_then(Json::as_str), Some("gather"));
+        assert_eq!(evs[0].get("dur").and_then(Json::as_f64), Some(2.0));
+        assert!(evs[0].get("tid").is_some());
+        assert!(j.get("droppedSpans").is_none());
+    }
+
+    #[test]
+    fn exporters_write_parseable_files() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let trace_path = dir.join(format!("lad_trace_{pid}.json"));
+        let metrics_path = dir.join(format!("lad_metrics_{pid}.json"));
+        let sink = SpanSink::new();
+        sink.record("aggregate", Instant::now(), 500);
+        write_chrome_trace(&sink, &trace_path).unwrap();
+        let m = Metrics::default();
+        m.counter("frames_encoded").add(4);
+        write_metrics(&m, &metrics_path).unwrap();
+        let t = crate::util::json::parse(&std::fs::read_to_string(&trace_path).unwrap()).unwrap();
+        assert_eq!(t.get("traceEvents").and_then(Json::as_arr).map(<[Json]>::len), Some(1));
+        let ms = crate::util::json::parse(&std::fs::read_to_string(&metrics_path).unwrap());
+        let ms = ms.unwrap();
+        assert_eq!(
+            ms.get("counters").and_then(|c| c.get("frames_encoded")).and_then(Json::as_f64),
+            Some(4.0)
+        );
+        let _ = std::fs::remove_file(&trace_path);
+        let _ = std::fs::remove_file(&metrics_path);
+    }
+}

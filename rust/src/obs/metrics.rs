@@ -1,0 +1,265 @@
+//! Named counters, gauges, and fixed-bucket histograms.
+//!
+//! The registry is lock-protected but individual instruments are plain
+//! atomics, so the usual pattern in a loop is: resolve the `Arc`
+//! handle once outside, then `add`/`observe` lock-free inside.
+//! Histograms bucket by power of two (`64 - leading_zeros`), so the
+//! hot `observe` path is integer-only — no float math on any
+//! per-iteration site.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Monotonic counter (wire bytes, frames encoded, events seen).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, delta: u64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (pool queue depth, EF residual norm). Stored
+/// as `f64` bits; integer sites pay one int→float convert on `set`,
+/// which keeps a single snapshot representation.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, value: f64) {
+        self.0.store(value.to_bits(), Ordering::Relaxed);
+    }
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Bucket count in [`Histogram`]: bucket 0 holds exactly `v == 0`,
+/// bucket `i ≥ 1` holds `2^(i-1) ≤ v < 2^i`, up to the full `u64`
+/// range.
+pub const HIST_BUCKETS: usize = 65;
+
+/// Fixed-bucket power-of-2 histogram for nanosecond samples. Integer
+/// arithmetic only: index is `64 - leading_zeros`, and `count`/`sum`
+/// ride along for mean/rate derivation at snapshot time.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    /// Bucket index for a sample: `0` for `0`, else `64 - lz(v)`.
+    pub fn bucket_index(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    /// Inclusive lower bound of a bucket (`0`, then `2^(i-1)`).
+    pub fn bucket_lo(idx: usize) -> u64 {
+        if idx == 0 {
+            0
+        } else {
+            1u64 << (idx - 1)
+        }
+    }
+
+    pub fn observe(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// `{count, sum, buckets: [[lo, n], …]}` with empty buckets
+    /// elided.
+    pub fn snapshot_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("count".to_string(), Json::Num(self.count() as f64));
+        o.insert("sum".to_string(), Json::Num(self.sum() as f64));
+        let mut buckets = Vec::new();
+        for (idx, b) in self.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 {
+                buckets.push(Json::Arr(vec![
+                    Json::Num(Self::bucket_lo(idx) as f64),
+                    Json::Num(n as f64),
+                ]));
+            }
+        }
+        o.insert("buckets".to_string(), Json::Arr(buckets));
+        Json::Obj(o)
+    }
+}
+
+/// Named instrument registry. Get-or-create by name; handles are
+/// `Arc`s so loops cache them outside the hot path and the registry
+/// mutex is only touched at resolution and snapshot time.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Metrics {
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.counters.lock().expect("metrics registry poisoned");
+        match map.get(name) {
+            Some(c) => c.clone(),
+            None => {
+                let c = Arc::new(Counter::default());
+                map.insert(name.to_string(), c.clone());
+                c
+            }
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().expect("metrics registry poisoned");
+        match map.get(name) {
+            Some(g) => g.clone(),
+            None => {
+                let g = Arc::new(Gauge::default());
+                map.insert(name.to_string(), g.clone());
+                g
+            }
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.histograms.lock().expect("metrics registry poisoned");
+        match map.get(name) {
+            Some(h) => h.clone(),
+            None => {
+                let h = Arc::new(Histogram::default());
+                map.insert(name.to_string(), h.clone());
+                h
+            }
+        }
+    }
+
+    /// Full registry snapshot:
+    /// `{"counters": {..}, "gauges": {..}, "histograms": {..}}`.
+    pub fn snapshot(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (name, c) in self.counters.lock().expect("metrics registry poisoned").iter() {
+            counters.insert(name.clone(), Json::Num(c.get() as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (name, g) in self.gauges.lock().expect("metrics registry poisoned").iter() {
+            gauges.insert(name.clone(), Json::Num(g.get()));
+        }
+        let mut histograms = BTreeMap::new();
+        for (name, h) in self.histograms.lock().expect("metrics registry poisoned").iter() {
+            histograms.insert(name.clone(), h.snapshot_json());
+        }
+        let mut top = BTreeMap::new();
+        top.insert("counters".to_string(), Json::Obj(counters));
+        top.insert("gauges".to_string(), Json::Obj(gauges));
+        top.insert("histograms".to_string(), Json::Obj(histograms));
+        Json::Obj(top)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_power_of_two_exact() {
+        let cases: &[(u64, usize)] = &[
+            (0, 0),
+            (1, 1),
+            (2, 2),
+            (3, 2),
+            (4, 3),
+            (7, 3),
+            (8, 4),
+            (1023, 10),
+            (1024, 11),
+            (u64::MAX, 64),
+        ];
+        for &(v, idx) in cases {
+            assert_eq!(Histogram::bucket_index(v), idx, "bucket_index({v})");
+            assert!(Histogram::bucket_lo(idx) <= v, "lo({idx}) > {v}");
+            if idx < 64 {
+                // v sits below the next bucket's lower bound.
+                assert!(v < Histogram::bucket_lo(idx + 1), "{v} >= lo({})", idx + 1);
+            }
+        }
+        assert_eq!(Histogram::bucket_lo(0), 0);
+        assert_eq!(Histogram::bucket_lo(1), 1);
+        assert_eq!(Histogram::bucket_lo(11), 1024);
+    }
+
+    #[test]
+    fn histogram_observe_tracks_count_sum_and_buckets() {
+        let h = Histogram::default();
+        for v in [0u64, 1, 3, 1024, 1024] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 2052);
+        let snap = h.snapshot_json();
+        let buckets = snap.get("buckets").and_then(Json::as_arr).unwrap();
+        // buckets: 0 → one, 1 → one, 2..4 → one (v=3), 1024.. → two
+        let pairs: Vec<(u64, u64)> = buckets
+            .iter()
+            .map(|b| {
+                let p = b.as_arr().unwrap();
+                (p[0].as_f64().unwrap() as u64, p[1].as_f64().unwrap() as u64)
+            })
+            .collect();
+        assert_eq!(pairs, vec![(0, 1), (1, 1), (2, 1), (1024, 2)]);
+    }
+
+    #[test]
+    fn registry_get_or_create_shares_instruments() {
+        let m = Metrics::default();
+        m.counter("wire_up_bytes").add(10);
+        m.counter("wire_up_bytes").add(5);
+        m.gauge("queue_depth").set(3.0);
+        m.histogram("gather").observe(100);
+        assert_eq!(m.counter("wire_up_bytes").get(), 15);
+        let snap = m.snapshot();
+        assert_eq!(
+            snap.get("counters").and_then(|c| c.get("wire_up_bytes")).and_then(Json::as_f64),
+            Some(15.0)
+        );
+        assert_eq!(
+            snap.get("gauges").and_then(|g| g.get("queue_depth")).and_then(Json::as_f64),
+            Some(3.0)
+        );
+        assert_eq!(
+            snap.get("histograms")
+                .and_then(|h| h.get("gather"))
+                .and_then(|h| h.get("count"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+    }
+}

@@ -1,0 +1,325 @@
+//! Structured observability: typed event journal, metrics registry,
+//! span profiler, and live leader status endpoint.
+//!
+//! Everything in this module is wall-clock telemetry **only**: with the
+//! recorder on, off, or exporting, traces, wire bytes, RNG stream
+//! order, checkpoints, and pinned sweep job ids are bit-identical.
+//! That invariant is pinned by `fuzzed_recorder_parity_*` in
+//! `tests/fuzz_determinism.rs` and by the CI `obs` job's `cmp`
+//! assertion of a recorder-on CLI drill against a recorder-off
+//! reference. Nothing here may influence control flow, RNG draws, or
+//! bytes on the training wire.
+//!
+//! The layer has four legs, all std-only:
+//!
+//! - [`events`] — a [`Recorder`] trait with a lock-sharded JSONL sink
+//!   ([`JsonlRecorder`]): one `events.jsonl` line per [`Event`], atomic
+//!   appends, process-monotonic sequence numbers.
+//! - [`metrics`] — a named registry of counters / gauges / power-of-2
+//!   bucket histograms ([`Metrics`]); integer-only in hot paths,
+//!   snapshotable as JSON next to `results.csv`.
+//! - [`spans`] — nestable [`span!`](crate::span) guards feeding both
+//!   the histogram registry and an optional Chrome-trace-format dump
+//!   ([`export::write_chrome_trace`]) for flamegraph viewing.
+//! - [`status`] — a read-only, one-request-per-connection snapshot
+//!   endpoint ([`StatusServer`]) over `net::transport` listeners
+//!   (`tcp://` or `uds:`), serving the roster, phase timings, and a
+//!   metrics dump while a run is live.
+//!
+//! # Event schema
+//!
+//! Events serialize as JSONL: `{"seq":…,"ms":…,"event":"<kind>",…}`
+//! with a process-monotonic `seq` and `ms` since recorder creation.
+//! Each line is written with a single `write(2)` on an `O_APPEND`
+//! descriptor, so lines never tear, but lines from different lock
+//! shards may interleave out of emission order — sort by `seq` to
+//! reconstruct it.
+//!
+//! | `event`                  | payload fields                   | emitted from |
+//! |--------------------------|----------------------------------|--------------|
+//! | `device_retired`         | `device`, `iter`, `reason`       | leader gather loop |
+//! | `device_rejoined`        | `device`, `iter`, `epoch`        | leader rejoin intake |
+//! | `deadline_miss`          | `device`, `iter`, `streak`       | leader gather deadline |
+//! | `stale_upload_discarded` | `device`, `iter`, `upload_iter`, `reason` | epoch reader |
+//! | `checkpoint_written`     | `iter`, `bytes`, `ns`            | leader checkpoint cut |
+//! | `leader_failover`        | `iter`, `checkpoint`             | warm-restart entry |
+//! | `byzantine_role_drawn`   | `iter`, `byzantine`              | per-iter role rotation |
+//! | `sweep_job_done`         | `id`, `ns`                       | sweep queue |
+//! | `worker_redial`          | `device`, `attempt`, `reason`    | worker redial loop |
+
+pub mod events;
+pub mod export;
+pub mod metrics;
+pub mod spans;
+pub mod status;
+
+pub use events::{Event, JsonlRecorder, NullRecorder, Recorder};
+pub use metrics::{Counter, Gauge, Histogram, Metrics};
+pub use spans::{SpanGuard, SpanRec, SpanSink};
+pub use status::{DeviceStatus, StatusServer, StatusState};
+
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context as _, Result};
+
+use crate::net::transport::NetListener;
+
+/// Everything a live [`Obs`] context carries. Shared via `Arc` so
+/// cloning an `Obs` (into leader opts, worker opts, pool closures) is
+/// one refcount bump and all clones feed the same sinks.
+struct Core {
+    recorder: Box<dyn Recorder>,
+    metrics: Arc<Metrics>,
+    spans: Arc<SpanSink>,
+    status: Option<Arc<StatusState>>,
+    metrics_out: Option<PathBuf>,
+    trace_out: Option<PathBuf>,
+}
+
+/// Cheap, cloneable observability handle threaded through the leader,
+/// worker, trainer, and sweep paths. [`Obs::off`] (the default) is a
+/// `None` inner — every call short-circuits on one branch and the hot
+/// paths stay byte-for-byte what they were before this layer existed.
+#[derive(Clone, Default)]
+pub struct Obs {
+    core: Option<Arc<Core>>,
+}
+
+impl fmt::Debug for Obs {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.core {
+            None => f.write_str("Obs(off)"),
+            Some(c) => write!(f, "Obs(on, status={})", c.status.is_some()),
+        }
+    }
+}
+
+impl Obs {
+    /// Disabled context: every emit/metric/span call is a no-op branch.
+    pub fn off() -> Obs {
+        Obs { core: None }
+    }
+
+    /// Enabled context with the given recorder, a fresh metrics
+    /// registry and span sink, and no export paths or status endpoint.
+    /// The shape the tests use; CLI entry points use [`ObsBuilder`].
+    pub fn recording(recorder: Box<dyn Recorder>) -> Obs {
+        Obs {
+            core: Some(Arc::new(Core {
+                recorder,
+                metrics: Arc::new(Metrics::default()),
+                spans: Arc::new(SpanSink::new()),
+                status: None,
+                metrics_out: None,
+                trace_out: None,
+            })),
+        }
+    }
+
+    /// Start a builder for the full CLI shape (journal file, export
+    /// paths, status endpoint).
+    pub fn builder() -> ObsBuilder {
+        ObsBuilder::default()
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.core.is_some()
+    }
+
+    /// Record a typed event. No-op when off.
+    pub fn emit(&self, ev: Event) {
+        if let Some(core) = &self.core {
+            core.recorder.record(&ev);
+        }
+    }
+
+    /// The shared metrics registry, when on.
+    pub fn metrics(&self) -> Option<&Arc<Metrics>> {
+        self.core.as_ref().map(|c| &c.metrics)
+    }
+
+    /// The live status state, when a status endpoint is attached.
+    pub fn status(&self) -> Option<&Arc<StatusState>> {
+        self.core.as_ref().and_then(|c| c.status.as_ref())
+    }
+
+    /// Bump a named counter. No-op when off.
+    pub fn add(&self, name: &str, delta: u64) {
+        if let Some(core) = &self.core {
+            core.metrics.counter(name).add(delta);
+        }
+    }
+
+    /// Set a named gauge. No-op when off.
+    pub fn gauge(&self, name: &str, value: f64) {
+        if let Some(core) = &self.core {
+            core.metrics.gauge(name).set(value);
+        }
+    }
+
+    /// Record a nanosecond sample into a named histogram. No-op when
+    /// off.
+    pub fn observe_ns(&self, name: &str, ns: u64) {
+        if let Some(core) = &self.core {
+            core.metrics.histogram(name).observe(ns);
+        }
+    }
+
+    /// Open a span guard. The guard always measures wall time — its
+    /// [`SpanGuard::done`] returns elapsed ns so `TrainTrace` phase
+    /// fields stay populated with obs off — but only records into the
+    /// histogram registry / Chrome-trace sink when obs is on.
+    pub fn span(&self, name: &'static str) -> SpanGuard<'_> {
+        SpanGuard::enter(self, name)
+    }
+
+    /// Internal: called by [`SpanGuard`] when a span closes.
+    pub(crate) fn record_span(&self, name: &'static str, start: Instant, dur_ns: u64) {
+        if let Some(core) = &self.core {
+            core.spans.record(name, start, dur_ns);
+            core.metrics.histogram(name).observe(dur_ns);
+        }
+    }
+
+    /// Flush the journal and write the metrics / Chrome-trace dumps to
+    /// their configured paths (if any). Call once at run end; safe to
+    /// call on an off context (no-op).
+    pub fn finish(&self) -> Result<()> {
+        let Some(core) = &self.core else { return Ok(()) };
+        core.recorder.flush()?;
+        if let Some(path) = &core.metrics_out {
+            export::write_metrics(&core.metrics, path)
+                .with_context(|| format!("writing metrics snapshot {}", path.display()))?;
+        }
+        if let Some(path) = &core.trace_out {
+            export::write_chrome_trace(&core.spans, path)
+                .with_context(|| format!("writing Chrome trace {}", path.display()))?;
+        }
+        Ok(())
+    }
+}
+
+/// Builder for the CLI observability shape. Every output is optional;
+/// with nothing set, `build()` returns an enabled context that only
+/// feeds the in-memory registry (useful with `LAD_OBS=1` alone).
+#[derive(Default)]
+pub struct ObsBuilder {
+    events_out: Option<PathBuf>,
+    metrics_out: Option<PathBuf>,
+    trace_out: Option<PathBuf>,
+    status_addr: Option<String>,
+}
+
+impl ObsBuilder {
+    /// JSONL event journal destination (recreated, not appended-to,
+    /// per run).
+    pub fn events_out<P: Into<PathBuf>>(mut self, path: P) -> Self {
+        self.events_out = Some(path.into());
+        self
+    }
+
+    /// Metrics snapshot JSON destination, written by [`Obs::finish`].
+    pub fn metrics_out<P: Into<PathBuf>>(mut self, path: P) -> Self {
+        self.metrics_out = Some(path.into());
+        self
+    }
+
+    /// Chrome-trace (`trace_event`) JSON destination, written by
+    /// [`Obs::finish`].
+    pub fn trace_out<P: Into<PathBuf>>(mut self, path: P) -> Self {
+        self.trace_out = Some(path.into());
+        self
+    }
+
+    /// Bind a live status endpoint (`tcp://HOST:PORT` or `uds:PATH`).
+    pub fn status_addr<S: Into<String>>(mut self, addr: S) -> Self {
+        self.status_addr = Some(addr.into());
+        self
+    }
+
+    /// Build the context; binds and spawns the status server when a
+    /// status address was given (caller keeps the handle alive for the
+    /// run, then [`StatusServer::stop`]s it).
+    pub fn build(self) -> Result<(Obs, Option<StatusServer>)> {
+        let recorder: Box<dyn Recorder> = match &self.events_out {
+            Some(path) => Box::new(
+                JsonlRecorder::create(path)
+                    .with_context(|| format!("opening event journal {}", path.display()))?,
+            ),
+            None => Box::new(NullRecorder),
+        };
+        let metrics = Arc::new(Metrics::default());
+        let (status, server) = match &self.status_addr {
+            Some(addr) => {
+                let listener = NetListener::bind(addr)
+                    .with_context(|| format!("binding status endpoint {addr}"))?;
+                let state = Arc::new(StatusState::new(metrics.clone()));
+                let server = StatusServer::spawn(listener, state.clone())?;
+                (Some(state), Some(server))
+            }
+            None => (None, None),
+        };
+        let obs = Obs {
+            core: Some(Arc::new(Core {
+                recorder,
+                metrics,
+                spans: Arc::new(SpanSink::new()),
+                status,
+                metrics_out: self.metrics_out,
+                trace_out: self.trace_out,
+            })),
+        };
+        Ok((obs, server))
+    }
+}
+
+/// Open a nestable profiling span: `let sp = span!("gather", obs);`
+/// then `let ns = sp.done();`. Sugar for [`Obs::span`]; the guard
+/// always measures wall time and only records when obs is on.
+#[macro_export]
+macro_rules! span {
+    ($name:literal, $obs:expr) => {
+        $obs.span($name)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_context_is_inert_and_cheap_to_clone() {
+        let obs = Obs::off();
+        assert!(!obs.enabled());
+        obs.add("x", 3);
+        obs.gauge("g", 1.5);
+        obs.observe_ns("h", 10);
+        obs.emit(Event::SweepJobDone { id: "aa".into(), ns: 1 });
+        let sp = obs.span("phase");
+        let _ns = sp.done();
+        assert!(obs.metrics().is_none());
+        assert!(obs.status().is_none());
+        let clone = obs.clone();
+        assert!(!clone.enabled());
+        obs.finish().unwrap();
+    }
+
+    #[test]
+    fn recording_context_feeds_registry_and_spans() {
+        let obs = Obs::recording(Box::new(NullRecorder));
+        assert!(obs.enabled());
+        obs.add("wire_up_bytes", 7);
+        obs.add("wire_up_bytes", 5);
+        let sp = span!("gather", obs);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let ns = sp.done();
+        assert!(ns > 0);
+        let m = obs.metrics().unwrap();
+        assert_eq!(m.counter("wire_up_bytes").get(), 12);
+        assert_eq!(m.histogram("gather").count(), 1);
+        obs.finish().unwrap();
+    }
+}

@@ -1,0 +1,171 @@
+//! Nestable wall-clock spans feeding the histogram registry and the
+//! Chrome-trace exporter.
+//!
+//! A [`SpanGuard`] always measures — [`SpanGuard::done`] returns the
+//! elapsed nanoseconds so the `TrainTrace` phase fields
+//! (`broadcast_ns` / `gather_ns` / `aggregate_ns`) stay populated even
+//! with obs off — but it only *records* (histogram sample + trace
+//! event) when the owning [`Obs`](crate::obs::Obs) is enabled.
+//! Nesting needs no explicit parent tracking: Chrome's `trace_event`
+//! viewer nests complete (`"ph":"X"`) events by time containment per
+//! thread lane, and each OS thread gets a stable lane id here.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::obs::Obs;
+
+/// One closed span: name, start offset from the sink's epoch, wall
+/// duration, and the recording thread's lane id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRec {
+    pub name: &'static str,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub tid: u64,
+}
+
+/// Soft cap on retained span records: beyond it, spans still measure
+/// and feed histograms but are dropped from the Chrome-trace buffer
+/// (counted in [`SpanSink::dropped`]) so unbounded sweeps cannot
+/// exhaust memory.
+pub const SPAN_CAP: usize = 1 << 20;
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+fn current_tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// Append-only buffer of closed spans, timed against one process
+/// epoch so records from every thread share a timeline.
+pub struct SpanSink {
+    epoch: Instant,
+    recs: Mutex<Vec<SpanRec>>,
+    dropped: AtomicU64,
+}
+
+impl Default for SpanSink {
+    fn default() -> SpanSink {
+        SpanSink::new()
+    }
+}
+
+impl SpanSink {
+    pub fn new() -> SpanSink {
+        SpanSink { epoch: Instant::now(), recs: Mutex::new(Vec::new()), dropped: AtomicU64::new(0) }
+    }
+
+    /// Record a closed span. `start` may predate the sink's epoch (a
+    /// guard opened before the sink existed); it saturates to offset 0.
+    pub fn record(&self, name: &'static str, start: Instant, dur_ns: u64) {
+        let start_ns = start.saturating_duration_since(self.epoch).as_nanos() as u64;
+        let mut recs = self.recs.lock().expect("span sink poisoned");
+        if recs.len() >= SPAN_CAP {
+            drop(recs);
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        recs.push(SpanRec { name, start_ns, dur_ns, tid: current_tid() });
+    }
+
+    /// Copy of everything recorded so far.
+    pub fn snapshot(&self) -> Vec<SpanRec> {
+        self.recs.lock().expect("span sink poisoned").clone()
+    }
+
+    /// Spans dropped after [`SPAN_CAP`] was reached.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII span: opened by [`Obs::span`] / [`span!`](crate::span), closed
+/// by [`done`](SpanGuard::done) (returning elapsed ns) or implicitly
+/// on drop.
+pub struct SpanGuard<'a> {
+    obs: &'a Obs,
+    name: &'static str,
+    start: Instant,
+    finished: bool,
+}
+
+impl<'a> SpanGuard<'a> {
+    pub(crate) fn enter(obs: &'a Obs, name: &'static str) -> SpanGuard<'a> {
+        SpanGuard { obs, name, start: Instant::now(), finished: false }
+    }
+
+    /// Close the span and return its wall duration in nanoseconds —
+    /// the value the caller folds into `TrainTrace` phase counters,
+    /// keeping those fields span-derived on and off.
+    pub fn done(mut self) -> u64 {
+        self.finished = true;
+        let ns = self.start.elapsed().as_nanos() as u64;
+        self.obs.record_span(self.name, self.start, ns);
+        ns
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if !self.finished {
+            let ns = self.start.elapsed().as_nanos() as u64;
+            self.obs.record_span(self.name, self.start, ns);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::NullRecorder;
+
+    #[test]
+    fn spans_nest_and_share_a_timeline() {
+        let obs = Obs::recording(Box::new(NullRecorder));
+        {
+            let outer = obs.span("iteration");
+            {
+                let inner = obs.span("gather");
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                let ns = inner.done();
+                assert!(ns >= 1_000_000, "inner span under-measured: {ns}ns");
+            }
+            drop(outer); // implicit close path
+        }
+        let m = obs.metrics().unwrap();
+        assert_eq!(m.histogram("iteration").count(), 1);
+        assert_eq!(m.histogram("gather").count(), 1);
+        // The guard fed the span sink too: both records present, and
+        // the outer span contains the inner one in time.
+        let core_spans = {
+            // Reach the sink through a fresh snapshot via export-side
+            // accessors: Obs has no public sink getter, so check the
+            // histogram side here and containment in export tests.
+            m.histogram("iteration").sum() >= m.histogram("gather").sum()
+        };
+        assert!(core_spans, "outer span shorter than inner");
+    }
+
+    #[test]
+    fn sink_records_offsets_and_lane_ids() {
+        let sink = SpanSink::new();
+        let t0 = Instant::now();
+        sink.record("a", t0, 10);
+        sink.record("b", t0, 20);
+        let recs = sink.snapshot();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].name, "a");
+        assert_eq!(recs[0].tid, recs[1].tid, "same thread, same lane");
+        assert_eq!(sink.dropped(), 0);
+        // Pre-epoch starts saturate instead of panicking.
+        let sink2 = SpanSink::new();
+        sink2.record("pre", t0, 5);
+        assert_eq!(sink2.snapshot()[0].start_ns, 0);
+    }
+}

@@ -1,0 +1,281 @@
+//! Live leader status endpoint.
+//!
+//! A read-only, one-request-per-connection snapshot server built on
+//! the same [`NetListener`] machinery the training wire uses
+//! (`tcp://HOST:PORT` or `uds:PATH`). A client connects, the server
+//! writes one pretty-printed JSON snapshot and closes — no request
+//! parsing, no framing, so `nc 127.0.0.1 PORT` (or
+//! `nc -U leader.status`) is a complete client. The snapshot carries
+//! the run label, current iteration, per-phase ns totals, the roster
+//! with per-device miss streaks / epochs / liveness, and a full
+//! metrics registry dump.
+//!
+//! The endpoint is pull-only telemetry: it shares no locks with the
+//! RNG, wire, or checkpoint paths, so polling it cannot perturb a
+//! run's trace (pinned by the recorder-parity fuzz leg).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::net::transport::NetListener;
+use crate::obs::metrics::Metrics;
+use crate::util::json::Json;
+
+/// Per-device roster entry mirrored for the status snapshot.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DeviceStatus {
+    /// Retired (deadline-miss streak or dead link).
+    pub dead: bool,
+    /// Consecutive gather deadline misses.
+    pub miss_streak: u64,
+    /// Connection epoch (bumps when a replacement joins the slot).
+    pub epoch: u64,
+}
+
+#[derive(Default)]
+struct StatusInner {
+    label: String,
+    phase: String,
+    iter: u64,
+    total_iters: u64,
+    anomalies: u64,
+    broadcast_ns: u64,
+    gather_ns: u64,
+    aggregate_ns: u64,
+    roster: Vec<DeviceStatus>,
+}
+
+/// Shared mutable state behind the endpoint: the leader updates it
+/// once per phase / roster change, the server thread reads it per
+/// request.
+pub struct StatusState {
+    inner: Mutex<StatusInner>,
+    metrics: Arc<Metrics>,
+}
+
+impl StatusState {
+    pub fn new(metrics: Arc<Metrics>) -> StatusState {
+        StatusState { inner: Mutex::new(StatusInner::default()), metrics }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, StatusInner> {
+        self.inner.lock().expect("status state poisoned")
+    }
+
+    /// Reset for a fresh run: label, planned iterations, roster size.
+    pub fn begin_run(&self, label: &str, total_iters: u64, n_devices: usize) {
+        let mut s = self.lock();
+        *s = StatusInner::default();
+        s.label = label.to_string();
+        s.total_iters = total_iters;
+        s.roster = vec![DeviceStatus::default(); n_devices];
+    }
+
+    pub fn set_iter(&self, iter: u64) {
+        self.lock().iter = iter;
+    }
+
+    pub fn set_phase(&self, phase: &str) {
+        let mut s = self.lock();
+        s.phase.clear();
+        s.phase.push_str(phase);
+    }
+
+    pub fn add_phase_ns(&self, broadcast: u64, gather: u64, aggregate: u64) {
+        let mut s = self.lock();
+        s.broadcast_ns += broadcast;
+        s.gather_ns += gather;
+        s.aggregate_ns += aggregate;
+    }
+
+    pub fn add_anomalies(&self, n: u64) {
+        self.lock().anomalies += n;
+    }
+
+    /// Seed a slot's full status at once (warm-restart roster import).
+    pub fn set_device(&self, device: usize, status: DeviceStatus) {
+        let mut s = self.lock();
+        if let Some(d) = s.roster.get_mut(device) {
+            *d = status;
+        }
+    }
+
+    pub fn device_miss(&self, device: usize, streak: u64) {
+        let mut s = self.lock();
+        if let Some(d) = s.roster.get_mut(device) {
+            d.miss_streak = streak;
+        }
+    }
+
+    pub fn device_answered(&self, device: usize) {
+        let mut s = self.lock();
+        if let Some(d) = s.roster.get_mut(device) {
+            d.miss_streak = 0;
+        }
+    }
+
+    pub fn device_retired(&self, device: usize) {
+        let mut s = self.lock();
+        if let Some(d) = s.roster.get_mut(device) {
+            d.dead = true;
+        }
+    }
+
+    pub fn device_rejoined(&self, device: usize, epoch: u64) {
+        let mut s = self.lock();
+        if let Some(d) = s.roster.get_mut(device) {
+            d.dead = false;
+            d.miss_streak = 0;
+            d.epoch = epoch;
+        }
+    }
+
+    /// One self-contained snapshot object (run state + roster +
+    /// metrics dump).
+    pub fn snapshot_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let (label, phase, iter, total, anomalies, bns, gns, ans, roster) = {
+            let s = self.lock();
+            (
+                s.label.clone(),
+                s.phase.clone(),
+                s.iter,
+                s.total_iters,
+                s.anomalies,
+                s.broadcast_ns,
+                s.gather_ns,
+                s.aggregate_ns,
+                s.roster.clone(),
+            )
+        };
+        let mut top = BTreeMap::new();
+        top.insert("label".to_string(), Json::Str(label));
+        top.insert("phase".to_string(), Json::Str(phase));
+        top.insert("iter".to_string(), Json::Num(iter as f64));
+        top.insert("total_iters".to_string(), Json::Num(total as f64));
+        top.insert("anomalies".to_string(), Json::Num(anomalies as f64));
+        let mut phases = BTreeMap::new();
+        phases.insert("broadcast_ns".to_string(), Json::Num(bns as f64));
+        phases.insert("gather_ns".to_string(), Json::Num(gns as f64));
+        phases.insert("aggregate_ns".to_string(), Json::Num(ans as f64));
+        top.insert("phase_ns".to_string(), Json::Obj(phases));
+        let devices = roster
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let mut o = BTreeMap::new();
+                o.insert("device".to_string(), Json::Num(i as f64));
+                o.insert("dead".to_string(), Json::Bool(d.dead));
+                o.insert("miss_streak".to_string(), Json::Num(d.miss_streak as f64));
+                o.insert("epoch".to_string(), Json::Num(d.epoch as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        top.insert("roster".to_string(), Json::Arr(devices));
+        top.insert("metrics".to_string(), self.metrics.snapshot());
+        Json::Obj(top)
+    }
+}
+
+/// Polling interval of the acceptor thread between empty
+/// `try_accept`s.
+const POLL_INTERVAL: Duration = Duration::from_millis(5);
+
+/// Background acceptor serving [`StatusState`] snapshots. One request
+/// per connection: accept → write snapshot → close. Stop (or drop) to
+/// shut the thread down.
+pub struct StatusServer {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    addr: String,
+}
+
+impl StatusServer {
+    /// Spawn the acceptor on an already-bound listener (use port 0 +
+    /// [`StatusServer::addr`] to serve on an ephemeral port).
+    pub fn spawn(listener: NetListener, state: Arc<StatusState>) -> Result<StatusServer> {
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("lad-status".to_string())
+            .spawn(move || {
+                while !stop_flag.load(Ordering::Relaxed) {
+                    match listener.try_accept() {
+                        Ok(Some(mut conn)) => {
+                            let mut body = state.snapshot_json().to_pretty_string();
+                            body.push('\n');
+                            // Raw bytes, no wire framing: any TCP/UDS
+                            // client (nc, curl --unix-socket) can read
+                            // the snapshot until EOF.
+                            let _ = conn.send_frame(body.as_bytes());
+                        }
+                        Ok(None) | Err(_) => std::thread::sleep(POLL_INTERVAL),
+                    }
+                }
+            })
+            .expect("spawning status server thread");
+        Ok(StatusServer { stop, handle: Some(handle), addr })
+    }
+
+    /// The bound address in connectable form (`tcp://ip:port` /
+    /// `uds:path`).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Signal the acceptor and join it.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for StatusServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roster_updates_flow_into_the_snapshot() {
+        let state = StatusState::new(Arc::new(Metrics::default()));
+        state.begin_run("drill", 40, 3);
+        state.set_iter(7);
+        state.set_phase("gather");
+        state.device_miss(1, 2);
+        state.device_retired(2);
+        state.device_rejoined(2, 1);
+        state.add_phase_ns(10, 20, 30);
+        state.add_anomalies(3);
+        let snap = state.snapshot_json();
+        assert_eq!(snap.get("label").and_then(Json::as_str), Some("drill"));
+        assert_eq!(snap.get("iter").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(snap.get("phase").and_then(Json::as_str), Some("gather"));
+        assert_eq!(
+            snap.get("phase_ns").and_then(|p| p.get("gather_ns")).and_then(Json::as_f64),
+            Some(20.0)
+        );
+        let roster = snap.get("roster").and_then(Json::as_arr).unwrap();
+        assert_eq!(roster.len(), 3);
+        assert_eq!(roster[1].get("miss_streak").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(roster[2].get("dead"), Some(&Json::Bool(false)));
+        assert_eq!(roster[2].get("epoch").and_then(Json::as_f64), Some(1.0));
+        assert!(snap.get("metrics").is_some());
+    }
+}

@@ -34,6 +34,15 @@ pub struct TrainTrace {
     pub gather_ns: u64,
     /// cumulative leader time (ns) crafting, compressing and aggregating
     pub aggregate_ns: u64,
+    /// gather-deadline misses broken out of `anomalies` (one per device
+    /// per missed gather). Deterministic under the drill harnesses;
+    /// like the `*_ns` fields, never part of trace-equality checks.
+    pub deadline_misses: u64,
+    /// devices retired after `net::MISS_RETIRE_STREAK` misses (or a
+    /// dead link)
+    pub retirements: u64,
+    /// replacement joins activated into retired slots
+    pub rejoins: u64,
 }
 
 impl TrainTrace {
@@ -68,10 +77,13 @@ impl TrainTrace {
         Ok(())
     }
 
-    /// Pretty one-line summary.
+    /// Pretty one-line summary. Net runs (span-derived phase timings
+    /// present) get a per-phase percentage breakdown; drills that hit
+    /// the elasticity paths get the deadline-miss / retirement / rejoin
+    /// breakdown next to the raw anomalies total.
     pub fn summary(&self) -> String {
         format!(
-            "{:<28} final_loss={:.6e}  bits={:.3e}  wall={:.2}s{}{}",
+            "{:<28} final_loss={:.6e}  bits={:.3e}  wall={:.2}s{}{}{}",
             self.label,
             self.final_loss,
             self.total_bits() as f64,
@@ -84,11 +96,40 @@ impl TrainTrace {
             } else {
                 String::new()
             },
+            self.phase_breakdown(),
             if self.anomalies > 0 {
-                format!("  anomalies={}", self.anomalies)
+                format!("  anomalies={}{}", self.anomalies, self.anomaly_breakdown())
             } else {
                 String::new()
             }
+        )
+    }
+
+    /// `"  phases[bcast 12% gather 70% agg 18%]"`, or empty when no
+    /// phase spans were recorded (central fast path).
+    fn phase_breakdown(&self) -> String {
+        let total = self.broadcast_ns + self.gather_ns + self.aggregate_ns;
+        if total == 0 {
+            return String::new();
+        }
+        let pct = |ns: u64| (ns as f64 * 100.0 / total as f64).round() as u64;
+        format!(
+            "  phases[bcast {}% gather {}% agg {}%]",
+            pct(self.broadcast_ns),
+            pct(self.gather_ns),
+            pct(self.aggregate_ns)
+        )
+    }
+
+    /// `" (misses=N retired=N rejoined=N)"`, or empty when the run saw
+    /// no elasticity events.
+    fn anomaly_breakdown(&self) -> String {
+        if self.deadline_misses == 0 && self.retirements == 0 && self.rejoins == 0 {
+            return String::new();
+        }
+        format!(
+            " (misses={} retired={} rejoined={})",
+            self.deadline_misses, self.retirements, self.rejoins
         )
     }
 }
@@ -118,6 +159,31 @@ mod tests {
         let mut t = TrainTrace::new("lad-cwtm-d10");
         t.final_loss = 1.0;
         assert!(t.summary().contains("lad-cwtm-d10"));
+    }
+
+    #[test]
+    fn summary_phase_percentages_only_when_spans_recorded() {
+        let mut t = TrainTrace::new("net-run");
+        t.final_loss = 1.0;
+        assert!(!t.summary().contains("phases["), "central run grew a phase breakdown");
+        t.broadcast_ns = 120;
+        t.gather_ns = 700;
+        t.aggregate_ns = 180;
+        let s = t.summary();
+        assert!(s.contains("phases[bcast 12% gather 70% agg 18%]"), "{s}");
+    }
+
+    #[test]
+    fn summary_breaks_down_anomalies_when_elasticity_counters_set() {
+        let mut t = TrainTrace::new("churn");
+        t.final_loss = 1.0;
+        t.anomalies = 4;
+        assert!(!t.summary().contains("misses="), "breakdown without counters");
+        t.deadline_misses = 3;
+        t.retirements = 1;
+        t.rejoins = 1;
+        let s = t.summary();
+        assert!(s.contains("anomalies=4 (misses=3 retired=1 rejoined=1)"), "{s}");
     }
 
     #[test]

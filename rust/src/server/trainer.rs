@@ -20,6 +20,7 @@ use crate::coding::{Assignment, DracoScheme, TaskMatrix};
 use crate::compress::{compress_batch, compress_batch_ef, Compressor, EfState};
 use crate::config::TrainConfig;
 use crate::grad::CodedGradOracle;
+use crate::obs::{Event, Obs};
 use crate::server::metrics::TrainTrace;
 use crate::util::math::{norm, Mat};
 use crate::util::parallel::Pool;
@@ -58,6 +59,11 @@ pub struct Trainer<'a> {
     pub schedule: Option<crate::server::schedule::Schedule>,
     /// shared worker pool; `None` ⇒ `run` builds one from `cfg.threads`
     pub pool: Option<Pool>,
+    /// observability sink ([`Obs::off`] by default). Spans time the
+    /// oracle / craft / compress / aggregate phases and role draws are
+    /// journaled under rotation; pure telemetry — the trace, RNG
+    /// stream and iterates are bit-identical with it on or off.
+    pub obs: Obs,
 }
 
 impl<'a> Trainer<'a> {
@@ -75,6 +81,7 @@ impl<'a> Trainer<'a> {
             rotate_byzantine: false,
             schedule: None,
             pool: None,
+            obs: Obs::off(),
         }
     }
 
@@ -83,6 +90,12 @@ impl<'a> Trainer<'a> {
     /// spawning a private one per `run`.
     pub fn with_pool(mut self, pool: &Pool) -> Self {
         self.pool = Some(pool.clone());
+        self
+    }
+
+    /// Attach an observability sink (events + metrics + spans).
+    pub fn with_obs(mut self, obs: &Obs) -> Self {
+        self.obs = obs.clone();
         self
     }
 
@@ -133,9 +146,17 @@ impl<'a> Trainer<'a> {
                 subsets[i].extend(assign.subsets_for(s_hat.row(assign.tasks[i])));
             }
             // (2) true coded vectors for every device
+            let sp_oracle = self.obs.span("oracle");
             oracle.coded_grads(x0, &subsets, &mut coded)?;
+            sp_oracle.done();
 
             let is_byz = byz_set(cfg, self.rotate_byzantine, rng);
+            if self.rotate_byzantine && self.obs.enabled() {
+                self.obs.emit(Event::ByzantineRoleDrawn {
+                    iter: t as u64,
+                    byzantine: (0..cfg.n_devices).filter(|&i| is_byz[i]).collect(),
+                });
+            }
             // zero-copy: the honest / Byzantine views borrow straight from
             // the contiguous `coded` slab — no per-device row copies; owned
             // storage appears only where a crafted lie genuinely needs it
@@ -149,6 +170,7 @@ impl<'a> Trainer<'a> {
                 .collect();
 
             // (3) Byzantine crafting (pre-compression, as in §VII-B)
+            let sp_craft = self.obs.span("craft");
             let lies = if byz_true.is_empty() {
                 Vec::new()
             } else {
@@ -156,6 +178,7 @@ impl<'a> Trainer<'a> {
                     AttackContext { honest: &honest_true, own_true: &byz_true, rng };
                 self.attack.craft(&mut ctx)
             };
+            sp_craft.done();
 
             // (4) compression + bit accounting: every device uplinks once,
             // on its own RNG stream, in parallel when cfg.threads > 1.
@@ -174,16 +197,24 @@ impl<'a> Trainer<'a> {
                     hi += 1;
                 }
             }
+            let sp_comp = self.obs.span("compress");
             let (msgs, bits) = match ef.as_mut() {
                 Some(st) => {
                     compress_batch_ef(self.comp, st, &device_msgs, &mut comp_rngs, &pool)
                 }
                 None => compress_batch(self.comp, &device_msgs, &mut comp_rngs, &pool),
             };
+            sp_comp.done();
             bits_total += bits;
 
             // (5) robust aggregation + model update
+            let sp_agg = self.obs.span("aggregate");
             let update = self.agg.aggregate(&msgs);
+            let agg_ns = sp_agg.done();
+            if self.obs.enabled() {
+                // per-rule kernel histogram, same key as the net leader
+                self.obs.observe_ns(&format!("aggregate_kernel/{}", self.agg.name()), agg_ns);
+            }
             let gamma = self.schedule.map_or(cfg.lr, |s| s.at(t)) as f32;
             for (xi, ui) in x0.iter_mut().zip(&update) {
                 *xi -= gamma * ui;

@@ -36,5 +36,5 @@ pub mod scenarios;
 pub mod sink;
 pub mod spec;
 
-pub use queue::{execute, run_job, run_sweep, SweepOutcome};
+pub use queue::{execute, execute_obs, run_job, run_sweep, run_sweep_obs, SweepOutcome};
 pub use spec::{jobs_from_variants, Grid, Job, SweepSpec};

@@ -27,6 +27,7 @@ use crate::config::OracleKind;
 use crate::data::linreg::LinRegDataset;
 use crate::experiments::common::{run_variant_in, Variant};
 use crate::net::{LeaderOpts, MISS_RETIRE_STREAK};
+use crate::obs::{Event, Obs};
 use crate::server::cluster::{
     run_cluster_churn, run_cluster_kill_resume, run_cluster_with, ChurnPlan, ClusterOpts,
 };
@@ -201,6 +202,7 @@ fn is_wall_clock_sensitive(job: &Job) -> bool {
 fn execute_with(
     jobs: &[&Job],
     par: Parallelism,
+    obs: &Obs,
     on_done: &(dyn Fn(&Job, &TrainTrace) -> Result<()> + Sync),
 ) -> Result<Vec<TrainTrace>> {
     let fast: Vec<usize> =
@@ -208,9 +210,22 @@ fn execute_with(
     let budget = Pool::budgeted(par.threads(), fast.len().max(1));
     let cache: DsCache = Mutex::new(BTreeMap::new());
     let mut out: Vec<Option<TrainTrace>> = (0..jobs.len()).map(|_| None).collect();
+    // journal each finished job with its wall time and keep a live
+    // queue-depth gauge; telemetry only — scheduling is unchanged
+    let remaining = std::sync::atomic::AtomicU64::new(jobs.len() as u64);
+    obs.gauge("sweep_queue_depth", jobs.len() as f64);
+    let finish = |job: &Job, ns: u64| {
+        if obs.enabled() {
+            obs.emit(Event::SweepJobDone { id: job.id.clone(), ns });
+            let left = remaining.fetch_sub(1, std::sync::atomic::Ordering::Relaxed) - 1;
+            obs.gauge("sweep_queue_depth", left as f64);
+        }
+    };
     let done = budget.outer().par_map(&fast, |_, &i| -> Result<(usize, TrainTrace)> {
         let ds = dataset_for(jobs[i], &cache);
+        let sp = obs.span("sweep_job");
         let tr = run_job_on(jobs[i], &ds, &budget.inner_capped(jobs[i].cfg.threads))?;
+        finish(jobs[i], sp.done());
         eprintln!("  {}", tr.summary());
         on_done(jobs[i], &tr)?;
         Ok((i, tr))
@@ -221,7 +236,9 @@ fn execute_with(
     }
     for i in (0..jobs.len()).filter(|&i| is_wall_clock_sensitive(jobs[i])) {
         let ds = dataset_for(jobs[i], &cache);
+        let sp = obs.span("sweep_job");
         let tr = run_job_on(jobs[i], &ds, &budget.outer().borrow(jobs[i].cfg.threads))?;
+        finish(jobs[i], sp.done());
         eprintln!("  {}", tr.summary());
         on_done(jobs[i], &tr)?;
         out[i] = Some(tr);
@@ -236,8 +253,15 @@ fn execute_with(
 /// ([`is_wall_clock_sensitive`]) are executed serially after the
 /// concurrent leg.
 pub fn execute(jobs: &[Job], par: Parallelism) -> Result<Vec<TrainTrace>> {
+    execute_obs(jobs, par, &Obs::off())
+}
+
+/// [`execute`] with an observability sink: each finished job is
+/// journaled as a `sweep_job_done` event with its wall time, and a
+/// `sweep_queue_depth` gauge tracks the jobs still outstanding.
+pub fn execute_obs(jobs: &[Job], par: Parallelism, obs: &Obs) -> Result<Vec<TrainTrace>> {
     let refs: Vec<&Job> = jobs.iter().collect();
-    execute_with(&refs, par, &|_, _| Ok(()))
+    execute_with(&refs, par, obs, &|_, _| Ok(()))
 }
 
 /// What a [`run_sweep`] call did.
@@ -273,6 +297,18 @@ pub fn run_sweep(
     resume: bool,
     limit: Option<usize>,
     par: Parallelism,
+) -> Result<SweepOutcome> {
+    run_sweep_obs(spec, out_dir, resume, limit, par, &Obs::off())
+}
+
+/// [`run_sweep`] with an observability sink (see [`execute_obs`]).
+pub fn run_sweep_obs(
+    spec: &SweepSpec,
+    out_dir: &Path,
+    resume: bool,
+    limit: Option<usize>,
+    par: Parallelism,
+    obs: &Obs,
 ) -> Result<SweepOutcome> {
     let jobs = spec.expand()?;
     std::fs::create_dir_all(out_dir)
@@ -331,7 +367,7 @@ pub fn run_sweep(
     // restored in results.jsonl.
     let writer = Mutex::new(sink::ManifestWriter::append(&manifest_path)?);
     let fresh: Mutex<Vec<(String, String)>> = Mutex::new(Vec::new());
-    execute_with(to_run, par, &|job, tr| {
+    execute_with(to_run, par, obs, &|job, tr| {
         let line = sink::job_record(job, tr).to_string();
         writer.lock().unwrap().append_line(&line)?;
         fresh.lock().unwrap().push((job.id.clone(), line));

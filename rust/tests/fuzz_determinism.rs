@@ -463,6 +463,190 @@ fn fuzzed_warm_restart_is_bit_identical_across_the_lattice() {
 }
 
 #[test]
+fn fuzzed_recorder_parity_traces_are_bit_identical() {
+    // The observability gate: everything under `lad::obs` is wall-clock
+    // telemetry only, so running with a live JSONL recorder (events +
+    // metrics + spans + role-draw journaling) must leave the trace, the
+    // anomaly accounting, and the wire bytes bit-identical to the
+    // recorder-off run — across compressors (incl. ef-*), aggregators,
+    // the pipelined vs phase-serial leader, compression sites, and role
+    // rotation (which exercises the ByzantineRoleDrawn emission next to
+    // the RNG draw it must not perturb).
+    use lad::net::LeaderOpts;
+    use lad::obs::{JsonlRecorder, Obs};
+    use lad::server::cluster::{run_cluster_with, ClusterOpts};
+
+    let run = |case: &Case, seed: u64, pipeline: bool, dcomp: bool, rotate: bool, obs: Obs|
+     -> TrainTrace {
+        let cfg = cfg_of(case, case.threads);
+        let mut rng = Rng::new(seed);
+        let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng);
+        let pool = Pool::new(cfg.threads);
+        let agg = lad::aggregation::from_config_pooled(&cfg, &pool);
+        let atk = lad::attack::from_kind(cfg.attack);
+        let comp = lad::compress::from_kind(cfg.compression);
+        let opts = ClusterOpts {
+            leader: LeaderOpts {
+                pipeline,
+                device_compression: dcomp,
+                rotate_byzantine: rotate,
+                obs,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut x0 = vec![0.0f32; cfg.dim];
+        run_cluster_with(
+            &cfg,
+            &ds,
+            agg.as_ref(),
+            atk.as_ref(),
+            comp.as_ref(),
+            &mut x0,
+            "fuzz-obs",
+            &mut Rng::new(seed ^ 0xF),
+            &pool,
+            &opts,
+        )
+        .expect("recorder-parity case failed to run")
+    };
+    forall(5, 0x0B5E, gen_case, |case| {
+        let seed = 0x0B57 ^ ((case.n as u64) << 7) ^ case.q as u64;
+        for (pipeline, dcomp, rotate) in
+            [(false, false, false), (true, false, true), (true, true, false)]
+        {
+            let off = run(case, seed, pipeline, dcomp, rotate, Obs::off());
+            let journal = std::env::temp_dir().join(format!(
+                "lad-fuzz-obs-{}-{seed:x}-{pipeline}-{dcomp}-{rotate}.jsonl",
+                std::process::id()
+            ));
+            let obs = Obs::recording(Box::new(
+                JsonlRecorder::create(&journal).expect("journal create"),
+            ));
+            let on = run(case, seed, pipeline, dcomp, rotate, obs.clone());
+            obs.finish().expect("journal flush");
+            let _ = std::fs::remove_file(&journal);
+            traces_equal(&off, &on)
+                .map_err(|e| format!("{e} (pipeline={pipeline} dcomp={dcomp} rotate={rotate})"))?;
+            ensure(
+                off.anomalies == on.anomalies
+                    && off.deadline_misses == on.deadline_misses
+                    && off.retirements == on.retirements
+                    && off.rejoins == on.rejoins,
+                || "anomaly accounting differs with the recorder on".into(),
+            )?;
+            ensure(
+                off.wire_up_bytes == on.wire_up_bytes
+                    && off.wire_down_bytes == on.wire_down_bytes,
+                || {
+                    format!(
+                        "wire bytes differ with the recorder on: up {} vs {}, down {} vs {}",
+                        on.wire_up_bytes,
+                        off.wire_up_bytes,
+                        on.wire_down_bytes,
+                        off.wire_down_bytes
+                    )
+                },
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fuzzed_recorder_parity_covers_checkpoints_and_warm_restart() {
+    // Recorder parity through the elasticity path: the kill/warm-restart
+    // drill with a live recorder must reproduce the recorder-off drill
+    // bit-for-bit — final iterate, trace, AND the checkpoint file bytes
+    // (the CheckpointWritten event reads file metadata, it must never
+    // touch the file) — and the journal must actually contain the
+    // checkpoint cut and the failover with correct attribution.
+    use lad::net::LeaderOpts;
+    use lad::obs::{Event, JsonlRecorder, Obs};
+    use lad::server::cluster::{run_cluster_kill_resume, ClusterOpts};
+    use lad::util::json;
+
+    forall(3, 0xC4B0, gen_case, |case| {
+        let seed = 0xAB1E ^ ((case.n as u64) << 6) ^ case.q as u64;
+        let kill = 1 + case.q as u64 % 4; // cfg_of pins iters = 6; kill + 1 < 6
+        let run = |obs: Obs, tag: &str| -> (TrainTrace, Vec<f32>, Vec<u8>) {
+            let cfg = cfg_of(case, case.threads);
+            let mut rng = Rng::new(seed);
+            let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng);
+            let pool = Pool::new(case.threads);
+            let agg = lad::aggregation::from_config_pooled(&cfg, &pool);
+            let atk = lad::attack::from_kind(cfg.attack);
+            let comp = lad::compress::from_kind(cfg.compression);
+            let opts = ClusterOpts {
+                leader: LeaderOpts { obs, ..Default::default() },
+                ..Default::default()
+            };
+            let ckpt = std::env::temp_dir().join(format!(
+                "lad-fuzz-obsckpt-{}-{seed:x}-{tag}.ckpt",
+                std::process::id()
+            ));
+            let mut x0 = vec![0.0f32; cfg.dim];
+            let tr = run_cluster_kill_resume(
+                &cfg,
+                &ds,
+                agg.as_ref(),
+                atk.as_ref(),
+                comp.as_ref(),
+                &mut x0,
+                "fuzz-obs-elastic",
+                &mut Rng::new(seed ^ 0xF),
+                &pool,
+                &opts,
+                kill,
+                &ckpt,
+            )
+            .expect("kill-resume drill failed");
+            let bytes = std::fs::read(&ckpt).expect("checkpoint file missing after drill");
+            let _ = std::fs::remove_file(&ckpt);
+            (tr, x0, bytes)
+        };
+        let (t_off, x_off, ck_off) = run(Obs::off(), "off");
+        let journal = std::env::temp_dir()
+            .join(format!("lad-fuzz-obsj-{}-{seed:x}.jsonl", std::process::id()));
+        let obs =
+            Obs::recording(Box::new(JsonlRecorder::create(&journal).expect("journal create")));
+        let (t_on, x_on, ck_on) = run(obs.clone(), "on");
+        obs.finish().expect("journal flush");
+        let body = std::fs::read_to_string(&journal).expect("journal readable");
+        let _ = std::fs::remove_file(&journal);
+        traces_equal(&t_off, &t_on).map_err(|e| format!("{e} (kill={kill})"))?;
+        ensure(x_off == x_on, || "final iterates differ with the recorder on".into())?;
+        ensure(ck_off == ck_on, || "checkpoint bytes differ with the recorder on".into())?;
+        let events: Vec<Event> = body
+            .lines()
+            .filter_map(|l| json::parse(l).ok())
+            .filter_map(|j| Event::from_json(&j))
+            .collect();
+        // halt_after = kill cuts the checkpoint AFTER iteration kill, so
+        // both events carry the resume iteration kill + 1
+        let resume_iter = kill + 1;
+        ensure(
+            events.iter().any(
+                |e| matches!(e, Event::CheckpointWritten { iter, bytes, .. }
+                    if *iter == resume_iter && *bytes == ck_off.len() as u64),
+            ),
+            || {
+                format!(
+                    "no checkpoint_written at iter {resume_iter} (size {}): {body}",
+                    ck_off.len()
+                )
+            },
+        )?;
+        ensure(
+            events
+                .iter()
+                .any(|e| matches!(e, Event::LeaderFailover { iter, .. } if *iter == resume_iter)),
+            || format!("no leader_failover at iter {resume_iter}: {body}"),
+        )
+    });
+}
+
+#[test]
 fn fuzzed_kernel_tiers_are_bit_identical() {
     // every tier the CPU can run (scalar always; SSE2 + AVX2 under
     // --features simd on capable hosts) must agree with the scalar

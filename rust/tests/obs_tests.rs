@@ -1,0 +1,339 @@
+//! Integration tests for the observability layer: the live status
+//! endpoint over real loopback sockets, journal content (with correct
+//! attribution) through the churn drill, trainer span plumbing, and the
+//! metrics / Chrome-trace exporters. The *parity* guarantees (recorder
+//! on/off bit-identity across the config lattice) live in
+//! `fuzz_determinism.rs`; this file pins the affirmative side — that
+//! the telemetry actually says the right things.
+
+use std::io::Read as _;
+use std::sync::Arc;
+use std::time::Duration;
+
+use lad::aggregation::{Aggregator as _, Cwtm};
+use lad::attack::SignFlip;
+use lad::config::{CompressionKind, TrainConfig};
+use lad::data::linreg::LinRegDataset;
+use lad::net::{LeaderOpts, MISS_RETIRE_STREAK};
+use lad::obs::{Event, JsonlRecorder, Metrics, NullRecorder, Obs, StatusState};
+use lad::server::cluster::{run_cluster_churn, ChurnPlan, ClusterOpts};
+use lad::server::Trainer;
+use lad::util::json::{self, Json};
+use lad::util::parallel::Pool;
+use lad::util::rng::Rng;
+
+/// Read one status snapshot: connect, read to EOF, parse.
+fn poll_status_tcp(addr: &str) -> Json {
+    let hostport = addr.strip_prefix("tcp://").expect("tcp status addr");
+    let mut conn = std::net::TcpStream::connect(hostport).expect("connecting to status");
+    let mut body = String::new();
+    conn.read_to_string(&mut body).expect("reading snapshot");
+    json::parse(&body).expect("snapshot parses as JSON")
+}
+
+#[test]
+fn status_endpoint_serves_fresh_snapshots_over_tcp() {
+    let (obs, server) = Obs::builder()
+        .status_addr("tcp://127.0.0.1:0")
+        .build()
+        .expect("building status obs");
+    let server = server.expect("status server spawned");
+    let st = obs.status().expect("status state attached").clone();
+    st.begin_run("drill", 40, 3);
+    st.set_iter(7);
+    st.set_phase("gather");
+    st.device_miss(1, 2);
+    obs.add("wire_up_bytes", 123);
+
+    let snap = poll_status_tcp(server.addr());
+    assert_eq!(snap.get("label").and_then(Json::as_str), Some("drill"));
+    assert_eq!(snap.get("iter").and_then(Json::as_f64), Some(7.0));
+    assert_eq!(snap.get("phase").and_then(Json::as_str), Some("gather"));
+    let roster = snap.get("roster").and_then(Json::as_arr).expect("roster");
+    assert_eq!(roster.len(), 3);
+    assert_eq!(roster[1].get("miss_streak").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(
+        snap.get("metrics")
+            .and_then(|m| m.get("counters"))
+            .and_then(|c| c.get("wire_up_bytes"))
+            .and_then(Json::as_f64),
+        Some(123.0)
+    );
+
+    // one snapshot per connection: a second poll sees newer state
+    st.set_iter(9);
+    st.device_retired(2);
+    let snap2 = poll_status_tcp(server.addr());
+    assert_eq!(snap2.get("iter").and_then(Json::as_f64), Some(9.0));
+    let roster2 = snap2.get("roster").and_then(Json::as_arr).expect("roster");
+    assert_eq!(roster2[2].get("dead"), Some(&Json::Bool(true)));
+    server.stop();
+}
+
+#[cfg(unix)]
+#[test]
+fn status_endpoint_serves_snapshots_over_uds() {
+    let path = std::env::temp_dir().join(format!("lad_obs_status_{}.sock", std::process::id()));
+    let (obs, server) = Obs::builder()
+        .status_addr(format!("uds:{}", path.display()))
+        .build()
+        .expect("building uds status obs");
+    let server = server.expect("status server spawned");
+    let st = obs.status().expect("status state attached").clone();
+    st.begin_run("uds-drill", 10, 2);
+    st.set_phase("broadcast");
+
+    let sock = server.addr().strip_prefix("uds:").expect("uds status addr").to_string();
+    let mut conn = std::os::unix::net::UnixStream::connect(&sock).expect("connecting to uds");
+    let mut body = String::new();
+    conn.read_to_string(&mut body).expect("reading snapshot");
+    let snap = json::parse(&body).expect("snapshot parses as JSON");
+    assert_eq!(snap.get("label").and_then(Json::as_str), Some("uds-drill"));
+    assert_eq!(snap.get("phase").and_then(Json::as_str), Some("broadcast"));
+    server.stop();
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn status_state_is_shareable_without_a_server() {
+    // the leader only sees Arc<StatusState>; it must be usable (and
+    // snapshot-able) without any acceptor thread behind it
+    let st = StatusState::new(Arc::new(Metrics::default()));
+    st.begin_run("bare", 5, 1);
+    st.device_answered(0);
+    assert_eq!(st.snapshot_json().get("label").and_then(Json::as_str), Some("bare"));
+}
+
+fn churn_cfg() -> TrainConfig {
+    // mirrors the deterministic churn drill in `net_cluster.rs`
+    let mut c = TrainConfig::default();
+    c.n_devices = 5;
+    c.n_honest = 4;
+    c.d = 2;
+    c.dim = 6;
+    c.iters = 16;
+    c.lr = 8e-5;
+    c.sigma_h = 0.3;
+    c.log_every = 4;
+    c.compression = CompressionKind::EfQsgd { levels: 16 };
+    c
+}
+
+fn run_churn(obs: Obs) -> lad::server::TrainTrace {
+    let c = churn_cfg();
+    let mut rng = Rng::new(1401);
+    let ds = LinRegDataset::generate(c.n_devices, c.dim, c.sigma_h, &mut rng);
+    let flip = SignFlip { coeff: -2.0 };
+    let comp = lad::compress::from_kind(c.compression);
+    let pool = Pool::serial();
+    let cwtm = Cwtm::new(0.1);
+    let opts = ClusterOpts {
+        leader: LeaderOpts {
+            gather_deadline: Some(Duration::from_millis(200)),
+            obs,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let plan = ChurnPlan { victim: 1, depart_iter: 4, rejoin_iter: 7 };
+    let mut x0 = vec![0.0f32; c.dim];
+    run_cluster_churn(
+        &c,
+        &ds,
+        &cwtm,
+        &flip,
+        comp.as_ref(),
+        &mut x0,
+        "churn",
+        &mut Rng::new(1402),
+        &pool,
+        &opts,
+        plan,
+    )
+    .expect("churn drill failed")
+}
+
+#[test]
+fn churn_drill_journals_retirement_and_rejoin_with_attribution() {
+    let journal =
+        std::env::temp_dir().join(format!("lad_obs_churn_{}.jsonl", std::process::id()));
+    let obs = Obs::recording(Box::new(JsonlRecorder::create(&journal).expect("journal")));
+    let tr = run_churn(obs.clone());
+    obs.finish().expect("flush");
+    let body = std::fs::read_to_string(&journal).expect("journal readable");
+    let _ = std::fs::remove_file(&journal);
+    // the journal is shard-appended; reconstruct emission order by seq
+    let mut tagged: Vec<(u64, Event)> = body
+        .lines()
+        .filter_map(|l| json::parse(l).ok())
+        .filter_map(|j| {
+            let seq = j.get("seq").and_then(Json::as_f64)? as u64;
+            Some((seq, Event::from_json(&j)?))
+        })
+        .collect();
+    tagged.sort_by_key(|(seq, _)| *seq);
+    let events: Vec<Event> = tagged.into_iter().map(|(_, e)| e).collect();
+
+    // the trace's breakdown counters agree with the drill shape…
+    assert_eq!(tr.deadline_misses, MISS_RETIRE_STREAK as u64, "one miss per deadline");
+    assert_eq!(tr.retirements, 1, "exactly the victim retires");
+    assert_eq!(tr.rejoins, 1, "exactly the replacement rejoins");
+    assert_eq!(tr.anomalies, MISS_RETIRE_STREAK, "anomalies unchanged by obs");
+
+    // …and the journal attributes every step to the victim's slot
+    let misses: Vec<u64> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::DeadlineMiss { device: 1, streak, .. } => Some(*streak),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(misses, vec![1, 2, 3], "miss streak for the victim: {body}");
+    assert!(
+        events.iter().any(|e| matches!(e, Event::DeviceRetired { device: 1, reason, .. }
+            if reason.contains("consecutive deadline misses"))),
+        "no structured retirement for the victim: {body}"
+    );
+    assert!(
+        events
+            .iter()
+            .any(|e| matches!(e, Event::DeviceRejoined { device: 1, epoch: 1, .. })),
+        "no rejoin with a bumped epoch for the victim: {body}"
+    );
+    // nobody else was touched
+    assert!(
+        !events.iter().any(|e| matches!(e,
+            Event::DeviceRetired { device, .. } | Event::DeviceRejoined { device, .. }
+                if *device != 1)),
+        "retirement/rejoin attributed to a non-victim device: {body}"
+    );
+}
+
+#[test]
+fn churn_drill_trace_is_identical_with_the_recorder_off() {
+    let off = run_churn(Obs::off());
+    let on = run_churn(Obs::recording(Box::new(NullRecorder)));
+    assert_eq!(off.loss, on.loss, "loss trace perturbed by the recorder");
+    assert_eq!(off.grad_update_norm, on.grad_update_norm);
+    assert_eq!(off.bits, on.bits, "bit accounting perturbed by the recorder");
+    assert_eq!(off.final_loss, on.final_loss);
+    assert_eq!(off.anomalies, on.anomalies);
+    assert_eq!(
+        (off.deadline_misses, off.retirements, off.rejoins),
+        (on.deadline_misses, on.retirements, on.rejoins),
+        "elasticity counters perturbed by the recorder"
+    );
+}
+
+fn trainer_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.n_devices = 8;
+    cfg.n_honest = 6;
+    cfg.d = 2;
+    cfg.dim = 8;
+    cfg.iters = 20;
+    cfg.lr = 1e-4;
+    cfg.sigma_h = 0.3;
+    cfg.log_every = 5;
+    cfg
+}
+
+#[test]
+fn trainer_spans_feed_histograms_without_perturbing_the_trace() {
+    use lad::attack::NoAttack;
+    use lad::compress::Identity;
+    use lad::grad::NativeLinReg;
+
+    let cfg = trainer_cfg();
+    let cwtm = Cwtm::new(0.1);
+    let run = |obs: Option<&Obs>| {
+        let mut rng = Rng::new(77);
+        let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng);
+        let mut oracle = NativeLinReg::new(ds);
+        let mut x0 = vec![0.0f32; cfg.dim];
+        let mut trainer = Trainer::new(&cfg, &cwtm, &NoAttack, &Identity);
+        if let Some(o) = obs {
+            trainer = trainer.with_obs(o);
+        }
+        trainer.run(&mut oracle, &mut x0, "obs-central", &mut rng).expect("run")
+    };
+    let off = run(None);
+    let obs = Obs::recording(Box::new(NullRecorder));
+    let on = run(Some(&obs));
+    assert_eq!(off.loss, on.loss, "central trace perturbed by obs");
+    assert_eq!(off.final_loss, on.final_loss);
+    assert_eq!(off.bits, on.bits);
+
+    let m = obs.metrics().expect("metrics attached");
+    for phase in ["oracle", "craft", "compress", "aggregate"] {
+        assert_eq!(
+            m.histogram(phase).count(),
+            cfg.iters as u64,
+            "one {phase} span per iteration"
+        );
+    }
+    assert_eq!(
+        m.histogram(&format!("aggregate_kernel/{}", cwtm.name())).count(),
+        cfg.iters as u64,
+        "per-rule kernel histogram keyed by aggregator name"
+    );
+}
+
+#[test]
+fn metrics_and_chrome_trace_exports_are_valid_json() {
+    use lad::attack::NoAttack;
+    use lad::compress::Identity;
+    use lad::grad::NativeLinReg;
+
+    let dir = std::env::temp_dir().join(format!("lad_obs_export_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let metrics_path = dir.join("metrics.json");
+    let trace_path = dir.join("trace.json");
+    let (obs, server) = Obs::builder()
+        .metrics_out(&metrics_path)
+        .trace_out(&trace_path)
+        .build()
+        .expect("building export obs");
+    assert!(server.is_none(), "no status server without --status-addr");
+
+    let cfg = trainer_cfg();
+    let cwtm = Cwtm::new(0.1);
+    let mut rng = Rng::new(78);
+    let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng);
+    let mut oracle = NativeLinReg::new(ds);
+    let mut x0 = vec![0.0f32; cfg.dim];
+    Trainer::new(&cfg, &cwtm, &NoAttack, &Identity)
+        .with_obs(&obs)
+        .run(&mut oracle, &mut x0, "obs-export", &mut rng)
+        .expect("run");
+    obs.finish().expect("export");
+
+    let metrics = json::parse(&std::fs::read_to_string(&metrics_path).unwrap())
+        .expect("metrics.json parses");
+    assert_eq!(
+        metrics
+            .get("histograms")
+            .and_then(|h| h.get("oracle"))
+            .and_then(|h| h.get("count"))
+            .and_then(Json::as_f64),
+        Some(cfg.iters as f64),
+        "metrics snapshot carries the span histograms"
+    );
+
+    let trace = json::parse(&std::fs::read_to_string(&trace_path).unwrap())
+        .expect("trace.json parses");
+    let evs = trace.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(
+        evs.len() >= 4 * cfg.iters,
+        "expected ≥ {} span events, got {}",
+        4 * cfg.iters,
+        evs.len()
+    );
+    for ev in evs.iter().take(5) {
+        assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+        assert!(ev.get("name").and_then(Json::as_str).is_some());
+        assert!(ev.get("ts").and_then(Json::as_f64).is_some());
+        assert!(ev.get("dur").and_then(Json::as_f64).is_some());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
