@@ -9,8 +9,12 @@
 //! f32 image of y is materialized once per iteration (the old loop
 //! re-allocated it once per *message*).
 
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
 use super::gram::CenterScratch;
 use super::{check_family, Aggregator};
+use crate::obs::Obs;
 use crate::util::parallel::Pool;
 
 /// Smoothed Weiszfeld with fixed iteration budget and tolerance.
@@ -20,11 +24,18 @@ pub struct GeometricMedian {
     pub tol: f64,
     pub eps: f64,
     pool: Pool,
+    obs: Arc<Mutex<Obs>>,
 }
 
 impl Default for GeometricMedian {
     fn default() -> Self {
-        GeometricMedian { max_iters: 100, tol: 1e-10, eps: 1e-12, pool: Pool::serial() }
+        GeometricMedian {
+            max_iters: 100,
+            tol: 1e-10,
+            eps: 1e-12,
+            pool: Pool::serial(),
+            obs: Arc::default(),
+        }
     }
 }
 
@@ -34,12 +45,18 @@ impl GeometricMedian {
         self.pool = pool.clone();
         self
     }
+
+    fn obs_handle(&self) -> Obs {
+        self.obs.lock().map(|o| o.clone()).unwrap_or_default()
+    }
 }
 
 impl Aggregator for GeometricMedian {
     fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
         let q = check_family(msgs);
         let n = msgs.len();
+        let obs = self.obs_handle();
+        let sp = obs.span("kernel/weiszfeld");
         let mut scratch = CenterScratch::new();
         // init at coordinate mean
         let mut y = vec![0.0f64; q];
@@ -53,6 +70,10 @@ impl Aggregator for GeometricMedian {
         let mut yd = vec![0.0f32; q];
         let mut next = vec![0.0f64; q];
         for _ in 0..self.max_iters {
+            // per-iteration histogram sample, gated so the obs-off hot
+            // path pays only the branch (the whole-loop span above is
+            // the always-measure cover)
+            let t_it = obs.enabled().then(Instant::now);
             for (f32v, &f64v) in yd.iter_mut().zip(&y) {
                 *f32v = f64v as f32;
             }
@@ -71,15 +92,25 @@ impl Aggregator for GeometricMedian {
             let shift: f64 =
                 y.iter().zip(&next).map(|(a, b)| (a - b) * (a - b)).sum();
             std::mem::swap(&mut y, &mut next);
+            if let Some(t0) = t_it {
+                obs.observe_ns("kernel/weiszfeld_iter", t0.elapsed().as_nanos() as u64);
+            }
             if shift < self.tol * self.tol {
                 break;
             }
         }
+        sp.done();
         y.into_iter().map(|v| v as f32).collect()
     }
 
     fn name(&self) -> String {
         "geomed".into()
+    }
+
+    fn set_obs(&self, obs: &Obs) {
+        if let Ok(mut g) = self.obs.lock() {
+            *g = obs.clone();
+        }
     }
 }
 

@@ -42,6 +42,7 @@
 //! intrinsics tier accelerates directly.
 
 use super::par_gate;
+use crate::obs::Obs;
 use crate::util::math::{dist_sq, dot, norm_sq};
 use crate::util::parallel::Pool;
 
@@ -88,6 +89,18 @@ pub struct PairwiseDistances {
 }
 
 impl PairwiseDistances {
+    /// [`PairwiseDistances::compute`] wrapped in the `kernel/gram_fill`
+    /// span: the tiled triangular fill dominates every distance-hungry
+    /// rule's cost, so rules with an attached obs context
+    /// ([`crate::aggregation::Aggregator::set_obs`]) time it here.
+    /// Telemetry only — the computed matrix is bit-identical.
+    pub fn compute_spanned(msgs: &[Vec<f32>], pool: &Pool, obs: &Obs) -> Self {
+        let sp = obs.span("kernel/gram_fill");
+        let pd = Self::compute(msgs, pool);
+        sp.done();
+        pd
+    }
+
     /// Compute the matrix for `msgs` (equal-length vectors), tiling the
     /// triangular pass over `pool` when the family is large enough.
     pub fn compute(msgs: &[Vec<f32>], pool: &Pool) -> Self {

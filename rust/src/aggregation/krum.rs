@@ -13,11 +13,18 @@
 //! old full matrix, half the memory). The per-row partial sort is O(N²)
 //! with no Q factor and stays serial.
 
+use std::sync::{Arc, Mutex};
+
 use super::gram::PairwiseDistances;
 use super::{check_family, Aggregator};
+use crate::obs::Obs;
 use crate::util::math::mean_of;
 use crate::util::parallel::{Parallelism, Pool};
 
+// The un-spanned composition, kept for the pool-equivalence tests (the
+// aggregate paths go through `compute_spanned` + `scores_from` so an
+// attached obs context can time the two kernels separately).
+#[cfg_attr(not(test), allow(dead_code))]
 fn scores(msgs: &[Vec<f32>], f: usize, pool: &Pool) -> Vec<f64> {
     scores_from(&PairwiseDistances::compute(msgs, pool), f)
 }
@@ -48,11 +55,12 @@ fn scores_from(pd: &PairwiseDistances, f: usize) -> Vec<f64> {
 pub struct Krum {
     f: usize,
     pool: Pool,
+    obs: Arc<Mutex<Obs>>,
 }
 
 impl Krum {
     pub fn new(f: usize) -> Self {
-        Krum { f, pool: Pool::serial() }
+        Krum { f, pool: Pool::serial(), obs: Arc::default() }
     }
 
     /// Share a worker pool for the tiled O(N²Q) distance pass.
@@ -76,12 +84,21 @@ impl Krum {
             .0;
         msgs[best].clone()
     }
+
+    fn obs_handle(&self) -> Obs {
+        self.obs.lock().map(|o| o.clone()).unwrap_or_default()
+    }
 }
 
 impl Aggregator for Krum {
     fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
         check_family(msgs);
-        self.select(msgs, &scores(msgs, self.f, &self.pool))
+        let obs = self.obs_handle();
+        let pd = PairwiseDistances::compute_spanned(msgs, &self.pool, &obs);
+        let sp = obs.span("kernel/krum_score");
+        let s = scores_from(&pd, self.f);
+        sp.done();
+        self.select(msgs, &s)
     }
 
     fn aggregate_with_distances(
@@ -91,7 +108,11 @@ impl Aggregator for Krum {
     ) -> Vec<f32> {
         check_family(msgs);
         assert_eq!(pd.n(), msgs.len(), "distance matrix / family size mismatch");
-        self.select(msgs, &scores_from(pd, self.f))
+        let obs = self.obs_handle();
+        let sp = obs.span("kernel/krum_score");
+        let s = scores_from(pd, self.f);
+        sp.done();
+        self.select(msgs, &s)
     }
 
     fn wants_distances(&self) -> bool {
@@ -101,6 +122,12 @@ impl Aggregator for Krum {
     fn name(&self) -> String {
         format!("krum(f={})", self.f)
     }
+
+    fn set_obs(&self, obs: &Obs) {
+        if let Ok(mut g) = self.obs.lock() {
+            *g = obs.clone();
+        }
+    }
 }
 
 /// Multi-Krum: average the n−f best-scored messages.
@@ -108,11 +135,12 @@ impl Aggregator for Krum {
 pub struct MultiKrum {
     f: usize,
     pool: Pool,
+    obs: Arc<Mutex<Obs>>,
 }
 
 impl MultiKrum {
     pub fn new(f: usize) -> Self {
-        MultiKrum { f, pool: Pool::serial() }
+        MultiKrum { f, pool: Pool::serial(), obs: Arc::default() }
     }
 
     /// Share a worker pool for the tiled O(N²Q) distance pass.
@@ -136,12 +164,21 @@ impl MultiKrum {
             idx[..keep].iter().map(|&i| msgs[i].as_slice()).collect();
         mean_of(&selected)
     }
+
+    fn obs_handle(&self) -> Obs {
+        self.obs.lock().map(|o| o.clone()).unwrap_or_default()
+    }
 }
 
 impl Aggregator for MultiKrum {
     fn aggregate(&self, msgs: &[Vec<f32>]) -> Vec<f32> {
         check_family(msgs);
-        self.select(msgs, &scores(msgs, self.f, &self.pool))
+        let obs = self.obs_handle();
+        let pd = PairwiseDistances::compute_spanned(msgs, &self.pool, &obs);
+        let sp = obs.span("kernel/krum_score");
+        let s = scores_from(&pd, self.f);
+        sp.done();
+        self.select(msgs, &s)
     }
 
     fn aggregate_with_distances(
@@ -151,7 +188,11 @@ impl Aggregator for MultiKrum {
     ) -> Vec<f32> {
         check_family(msgs);
         assert_eq!(pd.n(), msgs.len(), "distance matrix / family size mismatch");
-        self.select(msgs, &scores_from(pd, self.f))
+        let obs = self.obs_handle();
+        let sp = obs.span("kernel/krum_score");
+        let s = scores_from(pd, self.f);
+        sp.done();
+        self.select(msgs, &s)
     }
 
     fn wants_distances(&self) -> bool {
@@ -160,6 +201,12 @@ impl Aggregator for MultiKrum {
 
     fn name(&self) -> String {
         format!("multi-krum(f={})", self.f)
+    }
+
+    fn set_obs(&self, obs: &Obs) {
+        if let Ok(mut g) = self.obs.lock() {
+            *g = obs.clone();
+        }
     }
 }
 

@@ -92,6 +92,7 @@ pub mod nnm;
 pub mod tgn;
 
 use crate::config::{AggregatorKind, TrainConfig};
+use crate::obs::Obs;
 use crate::util::parallel::Pool;
 
 /// A robust aggregation rule agg(·) (Definition 1).
@@ -128,6 +129,15 @@ pub trait Aggregator: Send + Sync {
     /// [`Aggregator::state_snapshot`]. A no-op for stateless rules; a
     /// stateful rule resumes bit-identically from the snapshot.
     fn state_restore(&self, _bufs: Vec<Vec<f32>>) {}
+    /// Attach an observability context so the rule's internal kernels
+    /// (Gram fill, Krum scoring, NNM mixing, Weiszfeld iterations) can
+    /// span + histogram themselves. Wall-clock telemetry only — the
+    /// aggregate bits are identical with it attached or not. Takes
+    /// `&self` because rules are shared as `&dyn Aggregator`, so
+    /// implementors store the handle behind interior mutability;
+    /// wrappers ([`Nnm`]) forward to their inner rule. The default is a
+    /// no-op for rules without internal kernels worth timing.
+    fn set_obs(&self, _obs: &Obs) {}
 }
 
 pub use cwtm::Cwtm;

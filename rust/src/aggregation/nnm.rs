@@ -28,8 +28,11 @@
 //! so Krum-under-NNM selections can shift by design; the path itself is
 //! deterministic and bit-identical across pool widths.
 
+use std::sync::{Arc, Mutex};
+
 use super::gram::PairwiseDistances;
 use super::{check_family, par_gate, Aggregator};
+use crate::obs::Obs;
 use crate::util::math::{axpy, scale};
 use crate::util::parallel::{Parallelism, Pool};
 
@@ -37,11 +40,16 @@ pub struct Nnm {
     f: usize,
     inner: Box<dyn Aggregator>,
     pool: Pool,
+    obs: Arc<Mutex<Obs>>,
 }
 
 impl Nnm {
     pub fn new(f: usize, inner: Box<dyn Aggregator>) -> Self {
-        Nnm { f, inner, pool: Pool::serial() }
+        Nnm { f, inner, pool: Pool::serial(), obs: Arc::default() }
+    }
+
+    fn obs_handle(&self) -> Obs {
+        self.obs.lock().map(|o| o.clone()).unwrap_or_default()
     }
 
     /// Share a worker pool for the tiled distance pass and the row mixing.
@@ -93,7 +101,9 @@ impl Nnm {
         n: usize,
         keep: usize,
     ) -> (Vec<Vec<f32>>, PairwiseDistances, Vec<Vec<usize>>) {
-        let pd = PairwiseDistances::compute(msgs, &self.pool);
+        let obs = self.obs_handle();
+        let pd = PairwiseDistances::compute_spanned(msgs, &self.pool, &obs);
+        let sp_mix = obs.span("kernel/nnm_mix");
         let mix_row = |i: usize| -> (Vec<f32>, Vec<usize>) {
             // the diagonal entry d(i,i) = 0 keeps xᵢ among its own neighbors
             let mut d: Vec<(f64, usize)> = pd.row(i).iter().zip(0..n).collect();
@@ -116,6 +126,7 @@ impl Nnm {
             (0..n).map(mix_row).collect()
         };
         let (mixed, sets) = rows.into_iter().unzip();
+        sp_mix.done();
         (mixed, pd, sets)
     }
 }
@@ -154,6 +165,15 @@ impl Aggregator for Nnm {
 
     fn state_restore(&self, bufs: Vec<Vec<f32>>) {
         self.inner.state_restore(bufs);
+    }
+
+    // Store the handle for the mixing kernels AND forward it, so a
+    // wrapped (Multi-)Krum / geometric median times its own kernels too.
+    fn set_obs(&self, obs: &Obs) {
+        if let Ok(mut g) = self.obs.lock() {
+            *g = obs.clone();
+        }
+        self.inner.set_obs(obs);
     }
 }
 

@@ -7,6 +7,7 @@ use crate::compress;
 use crate::config::{OracleKind, TrainConfig};
 use crate::data::linreg::LinRegDataset;
 use crate::grad::{CodedGradOracle, NativeLinReg, RuntimeLinReg};
+use crate::obs::Obs;
 use crate::runtime::Runtime;
 use crate::server::trainer::{DracoTrainer, Trainer};
 use crate::server::TrainTrace;
@@ -141,6 +142,20 @@ pub fn run_variant_in(
     seed: u64,
     pool: &Pool,
 ) -> Result<TrainTrace> {
+    run_variant_obs(ds, v, seed, pool, &Obs::off())
+}
+
+/// [`run_variant_in`] with an observability sink attached to the
+/// trainer, so the run's phase spans and per-rule kernel histograms
+/// land in the caller's shared registry (the sweep engine's shape).
+/// Telemetry only — the trace is bit-identical with obs on or off.
+pub fn run_variant_obs(
+    ds: &LinRegDataset,
+    v: &Variant,
+    seed: u64,
+    pool: &Pool,
+    obs: &Obs,
+) -> Result<TrainTrace> {
     let mut oracle = make_oracle(ds, v.cfg.oracle)?;
     let mut x0 = vec![0.0f32; v.cfg.dim];
     let mut rng = Rng::new(seed);
@@ -157,8 +172,9 @@ pub fn run_variant_in(
     } else {
         let agg = aggregation::from_config_pooled(&v.cfg, pool);
         let comp = compress::from_kind(v.cfg.compression);
-        let trainer =
-            Trainer::new(&v.cfg, agg.as_ref(), attack.as_ref(), comp.as_ref()).with_pool(pool);
+        let trainer = Trainer::new(&v.cfg, agg.as_ref(), attack.as_ref(), comp.as_ref())
+            .with_pool(pool)
+            .with_obs(obs);
         trainer.run(oracle.as_mut(), &mut x0, &v.label, &mut rng)
     }
 }

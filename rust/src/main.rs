@@ -5,6 +5,8 @@
 //!   fig2..fig6       regenerate the paper's figures (CSV under --out)
 //!   kappa            empirically estimate κ for an aggregation rule
 //!   theory           print the closed-form constants for a setting
+//!   obs              replay / structurally diff event journals
+//!   status           read (or watch) a live run's status endpoint
 //!   artifacts-check  verify the AOT artifacts load and match the native oracle
 //!   help             this text
 
@@ -69,6 +71,24 @@ SUBCOMMANDS
                     [--reconnect-addr A] [--reconnect-attempts N]
                     [--reconnect-backoff-ms MS]  redial A after a lost
                                         connection instead of dying (failover)
+  obs replay FILE...  reconstruct the membership/checkpoint timeline from an
+                      event journal (multiple files merge in order — pass a
+                      kill/resume pair to see the stitched run)
+  obs diff A B        structural diff of two journals: compares retire/rejoin/
+                      miss/discard history, role draws, checkpoints (iter +
+                      bytes) and failovers, ignoring wall-clock fields; exits
+                      non-zero on divergence
+                      [--allow CATS]  comma list of acceptable divergence
+                      categories (e.g. --allow checkpoint,failover when
+                      comparing a kill/resume run against an uninterrupted
+                      one); A and B may each be comma-joined journal lists,
+                      merged in order
+  status ADDR         one-shot pretty-JSON snapshot from a live run's status
+                      endpoint (what bare `nc` gets)
+                      [--watch]     subscribe instead: render one line per
+                                    state change (iter, phase ns, anomalies,
+                                    roster transitions) until the run ends
+                      [--deltas N]  with --watch, exit after N deltas
   artifacts-check   load artifacts, compare vs native oracle
   help              print this text
 
@@ -86,7 +106,9 @@ OBSERVABILITY (node-leader, node-worker, sweep — pure telemetry; traces,
   --trace-out FILE    Chrome trace_event JSON of the phase spans (load in
                       chrome://tracing or Perfetto)
   --status-addr A     live status endpoint (tcp://HOST:PORT or uds:PATH);
-                      each connection gets one JSON snapshot — `nc` works
+                      each connection gets one JSON snapshot — `nc` works —
+                      and a client sending `WATCH\\n` gets a pushed delta
+                      stream instead (`lad status --watch A`)
   LAD_OBS=1           enable the journal + exports with default paths under
                       --out (events.jsonl, metrics.json, trace.json)
 ";
@@ -122,6 +144,8 @@ fn run() -> Result<()> {
         Some("theory") => cmd_theory(&args),
         Some("node-leader") => cmd_node_leader(&args),
         Some("node-worker") => cmd_node_worker(&args),
+        Some("obs") => cmd_obs(&args),
+        Some("status") => cmd_status(&args),
         Some("artifacts-check") => cmd_artifacts_check(&args),
         Some(other) => bail!("unknown subcommand {other:?} (try `lad help`)"),
     }
@@ -569,6 +593,107 @@ fn cmd_theory(args: &Args) -> Result<()> {
     println!("  LAD error  (eq 35)  = {:.6e}", tp.error_term_lad_bigo());
     println!("  baseline   (eq 36)  = {:.6e}", tp.error_term_baseline());
     println!("  d crossover         = {:.2}", tp.d_crossover());
+    Ok(())
+}
+
+/// Merge one or more journal specs into a single timeline. Each spec
+/// may itself be a comma-joined list of journal files (the shape a
+/// kill/resume pair leaves behind: each restart truncates and rewrites
+/// its own journal, so the halves are merged in order).
+fn load_timeline(specs: &[String]) -> Result<lad::obs::RunTimeline> {
+    let mut tl = lad::obs::RunTimeline::default();
+    for spec in specs {
+        for path in spec.split(',').filter(|p| !p.is_empty()) {
+            let part = lad::obs::RunTimeline::from_journal(path)?;
+            tl.merge(&part);
+        }
+    }
+    Ok(tl)
+}
+
+fn cmd_obs(args: &Args) -> Result<()> {
+    use lad::obs::replay;
+    match args.positional.first().map(String::as_str) {
+        Some("replay") => {
+            let files = &args.positional[1..];
+            anyhow::ensure!(
+                !files.is_empty(),
+                "usage: lad obs replay EVENTS.jsonl [MORE.jsonl ...]"
+            );
+            args.reject_unknown()?;
+            print!("{}", load_timeline(files)?.render());
+            Ok(())
+        }
+        Some("diff") => {
+            anyhow::ensure!(
+                args.positional.len() == 3,
+                "usage: lad obs diff A.jsonl B.jsonl [--allow CAT,CAT]"
+            );
+            let allow: Vec<String> = args
+                .get("allow")
+                .map(|s| s.split(',').map(|c| c.trim().to_string()).collect())
+                .unwrap_or_default();
+            args.reject_unknown()?;
+            let a = load_timeline(&args.positional[1..2])?;
+            let b = load_timeline(&args.positional[2..3])?;
+            let divs = replay::diff(&a, &b);
+            if divs.is_empty() {
+                println!("journals are structurally identical ({} vs {} events)", a.events,
+                    b.events);
+                return Ok(());
+            }
+            for d in &divs {
+                println!("[{}] {}", d.category, d.detail);
+            }
+            let allowed: Vec<&str> = allow.iter().map(String::as_str).collect();
+            if !allowed.is_empty() && replay::only_in(&divs, &allowed) {
+                println!(
+                    "{} divergence(s), all within --allow {}",
+                    divs.len(),
+                    allowed.join(",")
+                );
+                return Ok(());
+            }
+            bail!("{} structural divergence(s)", divs.len());
+        }
+        _ => bail!("usage: lad obs replay FILE... | lad obs diff A B (try `lad help`)"),
+    }
+}
+
+fn cmd_status(args: &Args) -> Result<()> {
+    use lad::net::Transport as _;
+    use std::io::Write as _;
+    let addr = match args.positional.first() {
+        Some(a) => a.clone(),
+        None => args
+            .get("addr")
+            .map(str::to_string)
+            .context("usage: lad status [--watch] tcp://HOST:PORT|uds:PATH")?,
+    };
+    let watch = args.has_flag("watch");
+    let deltas = match args.get_u64("deltas", 0)? {
+        0 => None,
+        n => Some(n),
+    };
+    args.reject_unknown()?;
+    if watch {
+        let seen = lad::obs::watch::run_watch(&addr, &mut std::io::stdout(), deltas)?;
+        println!("watch stream ended after {seen} delta(s)");
+    } else {
+        // one-shot snapshot: connect, say nothing, print to EOF — the
+        // same bytes `nc` would show
+        let mut conn = net::connect(&addr)?;
+        let mut out = std::io::stdout();
+        let mut buf = [0u8; 4096];
+        loop {
+            let n = conn.recv_raw(&mut buf)?;
+            if n == 0 {
+                break;
+            }
+            out.write_all(&buf[..n])?;
+        }
+        out.flush()?;
+    }
     Ok(())
 }
 

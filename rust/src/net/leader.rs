@@ -825,6 +825,10 @@ impl Leader<'_> {
         let n = cfg.n_devices;
         let timer = Timer::start();
         let obs = &self.opts.obs;
+        // hand the aggregation rules the obs context so their internal
+        // kernels (Gram fill, Krum scoring, NNM mixing, Weiszfeld) span
+        // + histogram themselves; a no-op when obs is off
+        self.agg.set_obs(obs);
         let hand_off = self.opts.rotate_byzantine && self.opts.device_compression;
         let TrainInit {
             start_iter,
@@ -1170,6 +1174,7 @@ impl Leader<'_> {
                             device: dev,
                             iter: t as u64,
                             upload_iter,
+                            epoch,
                             reason: format!(
                                 "ghost epoch {epoch} (slot re-filled, now epoch {})",
                                 rejoin_epoch[dev]
@@ -1214,6 +1219,7 @@ impl Leader<'_> {
                                     device: dev,
                                     iter: t as u64,
                                     upload_iter: iter as u64,
+                                    epoch,
                                     reason: if device as usize != dev {
                                         format!("upload labeled device {device} on link {dev}")
                                     } else {
@@ -1229,6 +1235,7 @@ impl Leader<'_> {
                                     device: dev,
                                     iter: t as u64,
                                     upload_iter: iter as u64,
+                                    epoch,
                                     reason: "duplicate or unexpected upload".to_string(),
                                 });
                             }

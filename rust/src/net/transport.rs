@@ -22,7 +22,7 @@ use super::frame;
 use super::wire::Msg;
 use crate::Result;
 use anyhow::{anyhow, Context};
-use std::io::Write;
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::time::Duration;
@@ -58,6 +58,13 @@ pub trait Transport: Send {
     /// connection that never joins cannot occupy a device slot, and
     /// clears it before the training loop's reader threads take over.
     fn set_recv_timeout(&mut self, t: Option<Duration>) -> Result<()>;
+    /// Read up to `buf.len()` **raw** bytes — no frame header, no CRC.
+    /// Returns the number of bytes read; `0` means the peer closed.
+    /// Honors the receive timeout set by [`Transport::set_recv_timeout`]
+    /// (a timeout is an error, as in [`Transport::recv`]). This is the
+    /// read half of the status endpoint's newline protocol, where the
+    /// peer may be a bare `nc`; training traffic stays framed.
+    fn recv_raw(&mut self, buf: &mut [u8]) -> Result<usize>;
     /// Human-readable peer description for diagnostics.
     fn peer(&self) -> String;
 }
@@ -72,6 +79,9 @@ pub struct ChannelTransport {
     tx: Option<mpsc::Sender<Vec<u8>>>,
     rx: Option<mpsc::Receiver<Vec<u8>>>,
     recv_timeout: Option<Duration>,
+    /// Undelivered tail of the last chunk [`Transport::recv_raw`] read:
+    /// channel messages arrive whole, raw reads may want less.
+    raw_pending: Vec<u8>,
 }
 
 impl ChannelTransport {
@@ -80,8 +90,18 @@ impl ChannelTransport {
         let (a_tx, b_rx) = mpsc::channel();
         let (b_tx, a_rx) = mpsc::channel();
         (
-            ChannelTransport { tx: Some(a_tx), rx: Some(a_rx), recv_timeout: None },
-            ChannelTransport { tx: Some(b_tx), rx: Some(b_rx), recv_timeout: None },
+            ChannelTransport {
+                tx: Some(a_tx),
+                rx: Some(a_rx),
+                recv_timeout: None,
+                raw_pending: Vec::new(),
+            },
+            ChannelTransport {
+                tx: Some(b_tx),
+                rx: Some(b_rx),
+                recv_timeout: None,
+                raw_pending: Vec::new(),
+            },
         )
     }
 }
@@ -123,14 +143,48 @@ impl Transport for ChannelTransport {
     fn split(self: Box<Self>) -> Result<(Box<dyn Transport>, Box<dyn Transport>)> {
         let me = *self;
         Ok((
-            Box::new(ChannelTransport { tx: me.tx, rx: None, recv_timeout: None }),
-            Box::new(ChannelTransport { tx: None, rx: me.rx, recv_timeout: me.recv_timeout }),
+            Box::new(ChannelTransport {
+                tx: me.tx,
+                rx: None,
+                recv_timeout: None,
+                raw_pending: Vec::new(),
+            }),
+            Box::new(ChannelTransport {
+                tx: None,
+                rx: me.rx,
+                recv_timeout: me.recv_timeout,
+                raw_pending: me.raw_pending,
+            }),
         ))
     }
 
     fn set_recv_timeout(&mut self, t: Option<Duration>) -> Result<()> {
         self.recv_timeout = t;
         Ok(())
+    }
+
+    fn recv_raw(&mut self, buf: &mut [u8]) -> Result<usize> {
+        if self.raw_pending.is_empty() {
+            let rx = self.rx.as_ref().context("recv on a send-only channel half")?;
+            let chunk = match self.recv_timeout {
+                None => match rx.recv() {
+                    Ok(b) => b,
+                    Err(_) => return Ok(0), // disconnect == EOF for raw reads
+                },
+                Some(d) => match rx.recv_timeout(d) {
+                    Ok(b) => b,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        return Err(anyhow!("channel recv timed out after {d:?}"))
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(0),
+                },
+            };
+            self.raw_pending = chunk;
+        }
+        let n = buf.len().min(self.raw_pending.len());
+        buf[..n].copy_from_slice(&self.raw_pending[..n]);
+        self.raw_pending.drain(..n);
+        Ok(n)
     }
 
     fn peer(&self) -> String {
@@ -190,6 +244,10 @@ impl Transport for TcpTransport {
         Ok(())
     }
 
+    fn recv_raw(&mut self, buf: &mut [u8]) -> Result<usize> {
+        self.stream.read(buf).context("tcp raw read")
+    }
+
     fn peer(&self) -> String {
         self.stream
             .peer_addr()
@@ -244,6 +302,10 @@ impl Transport for UdsTransport {
     fn set_recv_timeout(&mut self, t: Option<Duration>) -> Result<()> {
         self.stream.set_read_timeout(t).context("setting uds read timeout")?;
         Ok(())
+    }
+
+    fn recv_raw(&mut self, buf: &mut [u8]) -> Result<usize> {
+        self.stream.read(buf).context("uds raw read")
     }
 
     fn peer(&self) -> String {
@@ -529,6 +591,37 @@ mod tests {
         // the accepted stream is blocking even though the listener is not
         assert_eq!(server.recv().unwrap().0, Msg::Shutdown);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn recv_raw_reads_unframed_bytes() {
+        // channel half: chunk split across short reads, then EOF
+        let (mut a, mut b) = ChannelTransport::pair();
+        a.send_frame(b"WATCH\nrest").unwrap();
+        let mut buf = [0u8; 6];
+        assert_eq!(b.recv_raw(&mut buf).unwrap(), 6);
+        assert_eq!(&buf, b"WATCH\n");
+        let mut buf = [0u8; 16];
+        assert_eq!(b.recv_raw(&mut buf).unwrap(), 4);
+        assert_eq!(&buf[..4], b"rest");
+        drop(a);
+        assert_eq!(b.recv_raw(&mut buf).unwrap(), 0, "disconnect is EOF");
+
+        // tcp: raw bytes pass through with no frame header, timeout honored
+        let listener = NetListener::bind("tcp://127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut t = connect(&addr).unwrap();
+            t.send_frame(b"hello").unwrap();
+            t // keep the connection open until the reader is done
+        });
+        let mut server = listener.accept().unwrap();
+        let mut buf = [0u8; 5];
+        assert_eq!(server.recv_raw(&mut buf).unwrap(), 5);
+        assert_eq!(&buf, b"hello");
+        server.set_recv_timeout(Some(Duration::from_millis(20))).unwrap();
+        assert!(server.recv_raw(&mut buf).is_err(), "silent peer must time out");
+        drop(h.join().unwrap());
     }
 
     #[test]

@@ -33,8 +33,11 @@ pub enum Event {
     DeadlineMiss { device: usize, iter: u64, streak: u64 },
     /// An upload was discarded by the leader's epoch-tagged reader —
     /// either a ghost from a dead connection epoch or a stale
-    /// iteration (`upload_iter < iter`).
-    StaleUploadDiscarded { device: usize, iter: u64, upload_iter: u64, reason: String },
+    /// iteration (`upload_iter < iter`). `epoch` is the connection
+    /// epoch the upload arrived on, so replay can tell a late-honest
+    /// upload (live epoch, old iteration) from a replaced-connection
+    /// ghost (dead epoch).
+    StaleUploadDiscarded { device: usize, iter: u64, upload_iter: u64, epoch: u64, reason: String },
     /// A periodic checkpoint was cut: file size and wall time of the
     /// atomic tmp+rename write.
     CheckpointWritten { iter: u64, bytes: u64, ns: u64 },
@@ -90,10 +93,11 @@ impl Event {
                 num(&mut o, "iter", *iter);
                 num(&mut o, "streak", *streak);
             }
-            Event::StaleUploadDiscarded { device, iter, upload_iter, reason } => {
+            Event::StaleUploadDiscarded { device, iter, upload_iter, epoch, reason } => {
                 num(&mut o, "device", *device as u64);
                 num(&mut o, "iter", *iter);
                 num(&mut o, "upload_iter", *upload_iter);
+                num(&mut o, "epoch", *epoch);
                 o.insert("reason".into(), Json::Str(reason.clone()));
             }
             Event::CheckpointWritten { iter, bytes, ns } => {
@@ -150,6 +154,9 @@ impl Event {
                 device: num("device")? as usize,
                 iter: num("iter")?,
                 upload_iter: num("upload_iter")?,
+                // Pre-epoch journals lack the field; default to 0 so
+                // old runs stay replayable.
+                epoch: num("epoch").unwrap_or(0),
                 reason: s("reason")?,
             },
             "checkpoint_written" => Event::CheckpointWritten {
@@ -289,6 +296,7 @@ mod tests {
                 device: 1,
                 iter: 10,
                 upload_iter: 8,
+                epoch: 1,
                 reason: "ghost epoch".into(),
             },
             Event::CheckpointWritten { iter: 20, bytes: 4096, ns: 1_500_000 },

@@ -53,6 +53,7 @@ pub struct Histogram {
     buckets: [AtomicU64; HIST_BUCKETS],
     count: AtomicU64,
     sum: AtomicU64,
+    max: AtomicU64,
 }
 
 impl Default for Histogram {
@@ -61,6 +62,7 @@ impl Default for Histogram {
             buckets: std::array::from_fn(|_| AtomicU64::new(0)),
             count: AtomicU64::new(0),
             sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
         }
     }
 }
@@ -84,6 +86,7 @@ impl Histogram {
         self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
@@ -94,12 +97,55 @@ impl Histogram {
         self.sum.load(Ordering::Relaxed)
     }
 
-    /// `{count, sum, buckets: [[lo, n], …]}` with empty buckets
-    /// elided.
+    /// Largest sample seen (exact, not bucketed).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Estimated quantile `q ∈ (0, 1]`, linearly interpolated inside
+    /// the matched power-of-two bucket and clamped to the exact
+    /// recorded `max` (so the top bucket never extrapolates past a
+    /// real sample). Returns `0` on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let max = self.max();
+        let target = (q * count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            if cum + n >= target {
+                let lo = Self::bucket_lo(idx);
+                let hi = if idx >= 64 {
+                    max
+                } else {
+                    (Self::bucket_lo(idx + 1) - 1).min(max)
+                };
+                let hi = hi.max(lo);
+                let pos = (target - cum) as f64 / n as f64;
+                let v = lo as f64 + pos * (hi - lo) as f64;
+                return (v.round() as u64).min(max);
+            }
+            cum += n;
+        }
+        max
+    }
+
+    /// `{count, sum, max, p50, p95, p99, buckets: [[lo, n], …]}` with
+    /// empty buckets elided.
     pub fn snapshot_json(&self) -> Json {
         let mut o = BTreeMap::new();
         o.insert("count".to_string(), Json::Num(self.count() as f64));
         o.insert("sum".to_string(), Json::Num(self.sum() as f64));
+        o.insert("max".to_string(), Json::Num(self.max() as f64));
+        o.insert("p50".to_string(), Json::Num(self.quantile(0.50) as f64));
+        o.insert("p95".to_string(), Json::Num(self.quantile(0.95) as f64));
+        o.insert("p99".to_string(), Json::Num(self.quantile(0.99) as f64));
         let mut buckets = Vec::new();
         for (idx, b) in self.buckets.iter().enumerate() {
             let n = b.load(Ordering::Relaxed);
@@ -160,6 +206,14 @@ impl Metrics {
                 h
             }
         }
+    }
+
+    /// Read-only histogram lookup: `None` when nothing has been
+    /// recorded under `name`. Report writers probe with this instead of
+    /// [`Metrics::histogram`] so asking about a kernel that never ran
+    /// does not register an empty instrument in the snapshot.
+    pub fn histogram_get(&self, name: &str) -> Option<Arc<Histogram>> {
+        self.histograms.lock().expect("metrics registry poisoned").get(name).cloned()
     }
 
     /// Full registry snapshot:
@@ -235,6 +289,40 @@ mod tests {
             })
             .collect();
         assert_eq!(pairs, vec![(0, 1), (1, 1), (2, 1), (1024, 2)]);
+    }
+
+    #[test]
+    fn quantiles_interpolate_to_exact_recorded_values() {
+        // Uniform 1..=100: interpolation inside the matched
+        // power-of-two bucket lands on the exact order statistic.
+        let h = Histogram::default();
+        for v in 1..=100u64 {
+            h.observe(v);
+        }
+        assert_eq!(h.max(), 100);
+        assert_eq!(h.quantile(0.50), 50);
+        assert_eq!(h.quantile(0.95), 95);
+        assert_eq!(h.quantile(0.99), 99);
+        let snap = h.snapshot_json();
+        assert_eq!(snap.get("p50").and_then(Json::as_f64), Some(50.0));
+        assert_eq!(snap.get("p95").and_then(Json::as_f64), Some(95.0));
+        assert_eq!(snap.get("p99").and_then(Json::as_f64), Some(99.0));
+        assert_eq!(snap.get("max").and_then(Json::as_f64), Some(100.0));
+
+        // Degenerate distribution: the max clamp keeps the top
+        // quantiles at the real sample instead of the bucket edge.
+        let d = Histogram::default();
+        for _ in 0..100 {
+            d.observe(7);
+        }
+        assert_eq!(d.max(), 7);
+        assert_eq!(d.quantile(0.99), 7);
+        assert_eq!(d.quantile(1.0), 7);
+
+        // Empty histogram reports zeros, not NaN-ish artifacts.
+        let e = Histogram::default();
+        assert_eq!(e.quantile(0.5), 0);
+        assert_eq!(e.max(), 0);
     }
 
     #[test]

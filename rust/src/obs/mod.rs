@@ -40,7 +40,7 @@
 //! | `device_retired`         | `device`, `iter`, `reason`       | leader gather loop |
 //! | `device_rejoined`        | `device`, `iter`, `epoch`        | leader rejoin intake |
 //! | `deadline_miss`          | `device`, `iter`, `streak`       | leader gather deadline |
-//! | `stale_upload_discarded` | `device`, `iter`, `upload_iter`, `reason` | epoch reader |
+//! | `stale_upload_discarded` | `device`, `iter`, `upload_iter`, `epoch`, `reason` | epoch reader |
 //! | `checkpoint_written`     | `iter`, `bytes`, `ns`            | leader checkpoint cut |
 //! | `leader_failover`        | `iter`, `checkpoint`             | warm-restart entry |
 //! | `byzantine_role_drawn`   | `iter`, `byzantine`              | per-iter role rotation |
@@ -50,11 +50,14 @@
 pub mod events;
 pub mod export;
 pub mod metrics;
+pub mod replay;
 pub mod spans;
 pub mod status;
+pub mod watch;
 
 pub use events::{Event, JsonlRecorder, NullRecorder, Recorder};
 pub use metrics::{Counter, Gauge, Histogram, Metrics};
+pub use replay::{DiscardKind, Divergence, RunTimeline};
 pub use spans::{SpanGuard, SpanRec, SpanSink};
 pub use status::{DeviceStatus, StatusServer, StatusState};
 

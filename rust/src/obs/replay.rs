@@ -1,0 +1,456 @@
+//! Journal replay: the read side of the event journal.
+//!
+//! [`read_journal`] parses an `events.jsonl` file back into typed
+//! [`Event`]s (tolerating the torn final line a kill mid-append leaves,
+//! exactly like the sweep manifest reader), sorts them by the
+//! process-monotonic `seq` envelope field to recover emission order,
+//! and [`RunTimeline::from_events`] folds them into a structural
+//! description of the run: per-device retire / rejoin / miss / discard
+//! history, role-rotation draws, checkpoint and failover points, and
+//! sweep job completions.
+//!
+//! [`diff`] compares two timelines **structurally**: wall-clock fields
+//! (checkpoint / sweep-job `ns`, the `ms` envelope) and run-local paths
+//! (the failover checkpoint path) are excluded, so two same-seed runs
+//! — or a kill/resume pair, modulo its checkpoint/failover events —
+//! compare equal even though their journals were written at different
+//! speeds into different directories. This is what lets CI replace
+//! whole-file `cmp`s with semantic diffs (`lad obs diff`).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{ensure, Context as _, Result};
+
+use crate::obs::events::Event;
+use crate::util::json::{self, Json};
+
+/// Parse a journal file into `(seq, event)` pairs sorted by `seq`.
+///
+/// Journal lines are written with one atomic `write(2)` each, but lock
+/// shards interleave — sorting by `seq` recovers emission order. A
+/// torn **final** line (kill mid-append) is dropped with a note;
+/// corruption anywhere else is an error. Lines with an unknown
+/// `event` discriminator parse but don't type — they are skipped, so
+/// journals from newer builds stay replayable.
+pub fn read_journal<P: AsRef<Path>>(path: P) -> Result<Vec<(u64, Event)>> {
+    let path = path.as_ref();
+    let body =
+        std::fs::read_to_string(path).with_context(|| format!("reading journal {path:?}"))?;
+    let lines: Vec<&str> = body.lines().collect();
+    let mut out: Vec<(u64, Event)> = Vec::with_capacity(lines.len());
+    for (i, line) in lines.iter().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = json::parse(line).and_then(|j| {
+            j.get("seq")
+                .and_then(Json::as_f64)
+                .map(|s| (s as u64, j))
+                .ok_or_else(|| anyhow::anyhow!("missing \"seq\" envelope field"))
+        });
+        match parsed {
+            Ok((seq, j)) => {
+                if let Some(ev) = Event::from_json(&j) {
+                    out.push((seq, ev));
+                }
+                // unknown discriminator: skip, keep replaying
+            }
+            Err(e) => {
+                ensure!(
+                    i + 1 == lines.len(),
+                    "corrupt journal line {} of {path:?}: {e}",
+                    i + 1
+                );
+                eprintln!("obs: ignoring truncated final journal line {} ({e})", i + 1);
+            }
+        }
+    }
+    out.sort_by_key(|&(seq, _)| seq);
+    Ok(out)
+}
+
+/// How a discarded upload was classified from its journal entry — the
+/// distinction the `epoch` field on `stale_upload_discarded` exists
+/// for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiscardKind {
+    /// Arrived on a dead connection epoch (the slot was re-filled).
+    Ghost,
+    /// Live epoch, old iteration tag: an honest-but-late upload.
+    LateHonest,
+    /// Live epoch, current iteration, but the slot already answered.
+    Duplicate,
+    /// The frame's device label did not match its link.
+    Mislabel,
+}
+
+impl DiscardKind {
+    fn classify(reason: &str) -> DiscardKind {
+        if reason.starts_with("ghost epoch") {
+            DiscardKind::Ghost
+        } else if reason.starts_with("duplicate") {
+            DiscardKind::Duplicate
+        } else if reason.starts_with("upload labeled") {
+            DiscardKind::Mislabel
+        } else {
+            DiscardKind::LateHonest
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        match self {
+            DiscardKind::Ghost => "ghost",
+            DiscardKind::LateHonest => "late-honest",
+            DiscardKind::Duplicate => "duplicate",
+            DiscardKind::Mislabel => "mislabel",
+        }
+    }
+}
+
+/// One device's membership history, reconstructed from the journal.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DeviceTimeline {
+    /// `(iter, reason)` of every retirement, in order.
+    pub retires: Vec<(u64, String)>,
+    /// `(iter, epoch)` of every rejoin, in order.
+    pub rejoins: Vec<(u64, u64)>,
+    /// `(iter, streak)` of every gather-deadline miss, in order.
+    pub misses: Vec<(u64, u64)>,
+    /// `(iter, upload_iter, epoch, kind)` of every discarded upload.
+    pub discards: Vec<(u64, u64, u64, DiscardKind)>,
+    /// `attempt` numbers of worker redials attributed to this slot.
+    pub redials: Vec<u64>,
+}
+
+impl DeviceTimeline {
+    fn is_empty(&self) -> bool {
+        self.retires.is_empty()
+            && self.rejoins.is_empty()
+            && self.misses.is_empty()
+            && self.discards.is_empty()
+            && self.redials.is_empty()
+    }
+}
+
+/// The typed reconstruction of one run's journal: everything the
+/// membership / checkpoint / rotation machinery emitted, with
+/// wall-clock envelope data dropped.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunTimeline {
+    /// Per-device histories, indexed by device id (grown on demand).
+    pub devices: Vec<DeviceTimeline>,
+    /// `(iter, byzantine set)` of every role-rotation draw, in order.
+    pub role_draws: Vec<(u64, Vec<usize>)>,
+    /// `(iter, bytes, ns)` of every checkpoint cut. `bytes` is
+    /// deterministic (checkpoint bytes are bit-identical across
+    /// same-seed runs); `ns` is wall clock and excluded from [`diff`].
+    pub checkpoints: Vec<(u64, u64, u64)>,
+    /// `(iter, checkpoint path)` of every warm restart. The path is
+    /// run-local and excluded from [`diff`].
+    pub failovers: Vec<(u64, String)>,
+    /// `(id, ns)` of every completed sweep job. `ns` is wall clock and
+    /// excluded from [`diff`].
+    pub sweep_jobs: Vec<(String, u64)>,
+    /// Total typed events consumed.
+    pub events: usize,
+}
+
+impl RunTimeline {
+    /// Fold a `seq`-sorted event list into a timeline.
+    pub fn from_events(events: &[(u64, Event)]) -> RunTimeline {
+        let mut tl = RunTimeline::default();
+        for (_, ev) in events {
+            tl.apply(ev);
+        }
+        tl
+    }
+
+    /// Replay a journal file end-to-end.
+    pub fn from_journal<P: AsRef<Path>>(path: P) -> Result<RunTimeline> {
+        Ok(Self::from_events(&read_journal(path)?))
+    }
+
+    fn device(&mut self, dev: usize) -> &mut DeviceTimeline {
+        if dev >= self.devices.len() {
+            self.devices.resize(dev + 1, DeviceTimeline::default());
+        }
+        &mut self.devices[dev]
+    }
+
+    fn apply(&mut self, ev: &Event) {
+        self.events += 1;
+        match ev {
+            Event::DeviceRetired { device, iter, reason } => {
+                self.device(*device).retires.push((*iter, reason.clone()));
+            }
+            Event::DeviceRejoined { device, iter, epoch } => {
+                self.device(*device).rejoins.push((*iter, *epoch));
+            }
+            Event::DeadlineMiss { device, iter, streak } => {
+                self.device(*device).misses.push((*iter, *streak));
+            }
+            Event::StaleUploadDiscarded { device, iter, upload_iter, epoch, reason } => {
+                let kind = DiscardKind::classify(reason);
+                self.device(*device).discards.push((*iter, *upload_iter, *epoch, kind));
+            }
+            Event::CheckpointWritten { iter, bytes, ns } => {
+                self.checkpoints.push((*iter, *bytes, *ns));
+            }
+            Event::LeaderFailover { iter, checkpoint } => {
+                self.failovers.push((*iter, checkpoint.clone()));
+            }
+            Event::ByzantineRoleDrawn { iter, byzantine } => {
+                self.role_draws.push((*iter, byzantine.clone()));
+            }
+            Event::SweepJobDone { id, ns } => {
+                self.sweep_jobs.push((id.clone(), *ns));
+            }
+            Event::WorkerRedial { device, attempt, reason: _ } => {
+                self.device(*device).redials.push(*attempt);
+            }
+        }
+    }
+
+    /// Append another timeline's history onto this one — the shape a
+    /// kill/resume pair takes when each leg wrote its own journal.
+    pub fn merge(&mut self, other: &RunTimeline) {
+        if other.devices.len() > self.devices.len() {
+            self.devices.resize(other.devices.len(), DeviceTimeline::default());
+        }
+        for (dst, src) in self.devices.iter_mut().zip(&other.devices) {
+            dst.retires.extend(src.retires.iter().cloned());
+            dst.rejoins.extend(src.rejoins.iter().cloned());
+            dst.misses.extend(src.misses.iter().cloned());
+            dst.discards.extend(src.discards.iter().cloned());
+            dst.redials.extend(src.redials.iter().cloned());
+        }
+        self.role_draws.extend(other.role_draws.iter().cloned());
+        self.checkpoints.extend(other.checkpoints.iter().cloned());
+        self.failovers.extend(other.failovers.iter().cloned());
+        self.sweep_jobs.extend(other.sweep_jobs.iter().cloned());
+        self.events += other.events;
+    }
+
+    /// Human-readable rendering: one line per reconstructed fact, in
+    /// device / iteration order — the CI timeline artifact.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "run timeline ({} events)", self.events);
+        for (dev, d) in self.devices.iter().enumerate() {
+            if d.is_empty() {
+                continue;
+            }
+            let _ = writeln!(s, "device {dev}:");
+            for (iter, streak) in &d.misses {
+                let _ = writeln!(s, "  iter {iter:>6}  deadline miss (streak {streak})");
+            }
+            for (iter, reason) in &d.retires {
+                let _ = writeln!(s, "  iter {iter:>6}  retired: {reason}");
+            }
+            for (iter, epoch) in &d.rejoins {
+                let _ = writeln!(s, "  iter {iter:>6}  rejoined (epoch {epoch})");
+            }
+            for (iter, up_iter, epoch, kind) in &d.discards {
+                let _ = writeln!(
+                    s,
+                    "  iter {iter:>6}  discarded upload for iter {up_iter} \
+                     (epoch {epoch}, {})",
+                    kind.label()
+                );
+            }
+            for attempt in &d.redials {
+                let _ = writeln!(s, "  redial attempt {attempt}");
+            }
+        }
+        for (iter, bytes, _) in &self.checkpoints {
+            let _ = writeln!(s, "checkpoint at iter {iter} ({bytes} bytes)");
+        }
+        for (iter, path) in &self.failovers {
+            let _ = writeln!(s, "failover resume at iter {iter} (from {path})");
+        }
+        if !self.role_draws.is_empty() {
+            let _ = writeln!(s, "role rotation: {} draws", self.role_draws.len());
+        }
+        for (id, _) in &self.sweep_jobs {
+            let _ = writeln!(s, "sweep job done: {id}");
+        }
+        s
+    }
+}
+
+/// One structural difference between two timelines.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Divergence {
+    /// Which leg diverged: `retire`, `rejoin`, `miss`, `discard`,
+    /// `redial`, `role_draw`, `checkpoint`, `failover`, `sweep_job`,
+    /// or `roster`.
+    pub category: &'static str,
+    pub detail: String,
+}
+
+fn diff_list<T: PartialEq + std::fmt::Debug>(
+    out: &mut Vec<Divergence>,
+    category: &'static str,
+    what: &str,
+    a: &[T],
+    b: &[T],
+) {
+    if a == b {
+        return;
+    }
+    out.push(Divergence {
+        category,
+        detail: format!("{what}: {} vs {} entries, a={a:?} b={b:?}", a.len(), b.len()),
+    });
+}
+
+/// Compare two timelines structurally. Wall-clock fields (`ns`) and
+/// run-local paths (the failover checkpoint path) are excluded; device
+/// membership history, role draws, checkpoint schedule + sizes, and
+/// sweep job ids must match exactly. Returns one [`Divergence`] per
+/// differing leg — empty means the runs are structurally identical.
+pub fn diff(a: &RunTimeline, b: &RunTimeline) -> Vec<Divergence> {
+    let mut out = Vec::new();
+    let n = a.devices.len().max(b.devices.len());
+    let empty = DeviceTimeline::default();
+    if a.devices.len() != b.devices.len() {
+        // only a divergence when the extra slots carry history
+        let longer = if a.devices.len() > b.devices.len() { &a.devices } else { &b.devices };
+        let shorter_len = a.devices.len().min(b.devices.len());
+        if longer[shorter_len..].iter().any(|d| !d.is_empty()) {
+            out.push(Divergence {
+                category: "roster",
+                detail: format!(
+                    "device count {} vs {}",
+                    a.devices.len(),
+                    b.devices.len()
+                ),
+            });
+        }
+    }
+    for dev in 0..n {
+        let da = a.devices.get(dev).unwrap_or(&empty);
+        let db = b.devices.get(dev).unwrap_or(&empty);
+        diff_list(&mut out, "retire", &format!("device {dev} retires"), &da.retires, &db.retires);
+        diff_list(&mut out, "rejoin", &format!("device {dev} rejoins"), &da.rejoins, &db.rejoins);
+        diff_list(&mut out, "miss", &format!("device {dev} misses"), &da.misses, &db.misses);
+        diff_list(
+            &mut out,
+            "discard",
+            &format!("device {dev} discards"),
+            &da.discards,
+            &db.discards,
+        );
+        diff_list(&mut out, "redial", &format!("device {dev} redials"), &da.redials, &db.redials);
+    }
+    diff_list(&mut out, "role_draw", "role draws", &a.role_draws, &b.role_draws);
+    // checkpoint ns is wall clock — compare (iter, bytes) only
+    let ck = |t: &RunTimeline| -> Vec<(u64, u64)> {
+        t.checkpoints.iter().map(|&(i, b, _)| (i, b)).collect()
+    };
+    diff_list(&mut out, "checkpoint", "checkpoints", &ck(a), &ck(b));
+    // the checkpoint path is run-local — compare failover iterations only
+    let fo = |t: &RunTimeline| -> Vec<u64> { t.failovers.iter().map(|&(i, _)| i).collect() };
+    diff_list(&mut out, "failover", "failovers", &fo(a), &fo(b));
+    let sj = |t: &RunTimeline| -> Vec<&str> {
+        t.sweep_jobs.iter().map(|(id, _)| id.as_str()).collect()
+    };
+    diff_list(&mut out, "sweep_job", "sweep jobs", &sj(a), &sj(b));
+    out
+}
+
+/// True when every divergence falls in one of `allowed` categories —
+/// the kill/resume acceptance check ("diverges only in
+/// checkpoint/failover events").
+pub fn only_in(divs: &[Divergence], allowed: &[&str]) -> bool {
+    divs.iter().all(|d| allowed.contains(&d.category))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<(u64, Event)> {
+        vec![
+            (0, Event::DeadlineMiss { device: 1, iter: 4, streak: 1 }),
+            (1, Event::DeadlineMiss { device: 1, iter: 5, streak: 2 }),
+            (2, Event::DeadlineMiss { device: 1, iter: 6, streak: 3 }),
+            (3, Event::DeviceRetired { device: 1, iter: 6, reason: "3 misses".into() }),
+            (4, Event::DeviceRejoined { device: 1, iter: 7, epoch: 1 }),
+            (
+                5,
+                Event::StaleUploadDiscarded {
+                    device: 1,
+                    iter: 7,
+                    upload_iter: 4,
+                    epoch: 0,
+                    reason: "ghost epoch 0 (slot re-filled, now epoch 1)".into(),
+                },
+            ),
+            (6, Event::CheckpointWritten { iter: 8, bytes: 640, ns: 1000 }),
+            (7, Event::LeaderFailover { iter: 8, checkpoint: "/tmp/a/run.ckpt".into() }),
+        ]
+    }
+
+    #[test]
+    fn timeline_reconstructs_membership_history() {
+        let tl = RunTimeline::from_events(&sample());
+        assert_eq!(tl.devices.len(), 2);
+        let d = &tl.devices[1];
+        assert_eq!(d.misses, vec![(4, 1), (5, 2), (6, 3)]);
+        assert_eq!(d.retires.len(), 1);
+        assert_eq!(d.retires[0].0, 6);
+        assert_eq!(d.rejoins, vec![(7, 1)]);
+        assert_eq!(d.discards, vec![(7, 4, 0, DiscardKind::Ghost)]);
+        assert_eq!(tl.checkpoints, vec![(8, 640, 1000)]);
+        assert_eq!(tl.failovers.len(), 1);
+        let text = tl.render();
+        assert!(text.contains("device 1:"), "{text}");
+        assert!(text.contains("rejoined (epoch 1)"), "{text}");
+    }
+
+    #[test]
+    fn diff_excludes_wall_clock_and_run_local_fields() {
+        let a = RunTimeline::from_events(&sample());
+        let mut evs = sample();
+        // different wall clock + different checkpoint directory: still
+        // structurally identical
+        evs[6].1 = Event::CheckpointWritten { iter: 8, bytes: 640, ns: 999_999 };
+        evs[7].1 = Event::LeaderFailover { iter: 8, checkpoint: "/tmp/b/run.ckpt".into() };
+        let b = RunTimeline::from_events(&evs);
+        assert_eq!(diff(&a, &b), Vec::new());
+        // a real structural change (different rejoin epoch) is caught
+        let mut evs = sample();
+        evs[4].1 = Event::DeviceRejoined { device: 1, iter: 7, epoch: 2 };
+        let c = RunTimeline::from_events(&evs);
+        let divs = diff(&a, &c);
+        assert_eq!(divs.len(), 1);
+        assert_eq!(divs[0].category, "rejoin");
+        assert!(only_in(&divs, &["rejoin"]));
+        assert!(!only_in(&divs, &["checkpoint", "failover"]));
+    }
+
+    #[test]
+    fn read_journal_sorts_by_seq_and_drops_a_torn_tail() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("lad_replay_{}.jsonl", std::process::id()));
+        // out-of-order seqs (shard interleave), one unknown event kind,
+        // and a torn final line
+        let body = "\
+{\"event\":\"deadline_miss\",\"device\":2,\"iter\":5,\"streak\":1,\"seq\":1,\"ms\":9}\n\
+{\"event\":\"device_retired\",\"device\":2,\"iter\":5,\"reason\":\"x\",\"seq\":0,\"ms\":8}\n\
+{\"event\":\"from_the_future\",\"seq\":2,\"ms\":10}\n\
+{\"event\":\"checkpoint_written\",\"iter\":6,\"by";
+        std::fs::write(&path, body).unwrap();
+        let evs = read_journal(&path).unwrap();
+        assert_eq!(evs.len(), 2, "unknown kind skipped, torn tail dropped");
+        assert_eq!(evs[0].0, 0);
+        assert!(matches!(evs[0].1, Event::DeviceRetired { .. }));
+        assert!(matches!(evs[1].1, Event::DeadlineMiss { .. }));
+        // corruption NOT at the tail is an error
+        std::fs::write(&path, "garbage\n{\"seq\":0,\"event\":\"deadline_miss\"}\n").unwrap();
+        assert!(read_journal(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,18 +1,26 @@
 //! Live leader status endpoint.
 //!
-//! A read-only, one-request-per-connection snapshot server built on
-//! the same [`NetListener`] machinery the training wire uses
-//! (`tcp://HOST:PORT` or `uds:PATH`). A client connects, the server
-//! writes one pretty-printed JSON snapshot and closes — no request
-//! parsing, no framing, so `nc 127.0.0.1 PORT` (or
-//! `nc -U leader.status`) is a complete client. The snapshot carries
-//! the run label, current iteration, per-phase ns totals, the roster
-//! with per-device miss streaks / epochs / liveness, and a full
-//! metrics registry dump.
+//! A read-only status server built on the same [`NetListener`]
+//! machinery the training wire uses (`tcp://HOST:PORT` or `uds:PATH`),
+//! speaking two modes distinguished by the first line a client sends:
 //!
-//! The endpoint is pull-only telemetry: it shares no locks with the
-//! RNG, wire, or checkpoint paths, so polling it cannot perturb a
-//! run's trace (pinned by the recorder-parity fuzz leg).
+//! * **snapshot** (default): the client sends nothing; after a short
+//!   handshake window the server writes one pretty-printed JSON
+//!   snapshot and closes. No request parsing, no framing, so
+//!   `nc 127.0.0.1 PORT` (or `nc -U leader.status`) is a complete
+//!   client. The snapshot carries the run label, current iteration,
+//!   per-phase ns totals, the roster with per-device miss streaks /
+//!   epochs / liveness, and a full metrics registry dump.
+//! * **watch**: the client sends a single `WATCH\n` line; the server
+//!   keeps the connection open and pushes one compact JSON delta line
+//!   (the snapshot minus the metrics dump) whenever the run state
+//!   changes, until the run ends or the client disconnects. This is
+//!   what `lad status --watch` speaks (see [`crate::obs::watch`]).
+//!
+//! The endpoint is pull-only telemetry either way: it shares no locks
+//! with the RNG, wire, or checkpoint paths, so polling or subscribing
+//! cannot perturb a run's trace (pinned by the recorder-parity fuzz
+//! leg).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -21,7 +29,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::net::transport::NetListener;
+use crate::net::transport::{NetListener, Transport};
 use crate::obs::metrics::Metrics;
 use crate::util::json::Json;
 
@@ -137,6 +145,18 @@ impl StatusState {
     /// One self-contained snapshot object (run state + roster +
     /// metrics dump).
     pub fn snapshot_json(&self) -> Json {
+        let mut top = match self.delta_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!("delta_json returns an object"),
+        };
+        top.insert("metrics".to_string(), self.metrics.snapshot());
+        Json::Obj(top)
+    }
+
+    /// The run-state object without the metrics dump — the per-change
+    /// payload of the `WATCH` subscribe mode, compact enough to push
+    /// every iteration.
+    pub fn delta_json(&self) -> Json {
         use std::collections::BTreeMap;
         let (label, phase, iter, total, anomalies, bns, gns, ans, roster) = {
             let s = self.lock();
@@ -176,18 +196,44 @@ impl StatusState {
             })
             .collect();
         top.insert("roster".to_string(), Json::Arr(devices));
-        top.insert("metrics".to_string(), self.metrics.snapshot());
         Json::Obj(top)
     }
 }
 
 /// Polling interval of the acceptor thread between empty
-/// `try_accept`s.
+/// `try_accept`s; also the delta-push cadence for `WATCH` subscribers.
 const POLL_INTERVAL: Duration = Duration::from_millis(5);
 
-/// Background acceptor serving [`StatusState`] snapshots. One request
-/// per connection: accept → write snapshot → close. Stop (or drop) to
-/// shut the thread down.
+/// How long an accepted connection gets to send its `WATCH` line
+/// before the server falls back to the one-shot snapshot (the bare-nc
+/// path sends nothing and just waits to read).
+const WATCH_HANDSHAKE_TIMEOUT: Duration = Duration::from_millis(25);
+
+/// Read one newline-terminated request line (≤ 64 bytes) within the
+/// handshake window. `None` on timeout, EOF, or an overlong line —
+/// all of which mean "serve the snapshot".
+fn read_request_line(conn: &mut dyn Transport) -> Option<String> {
+    let _ = conn.set_recv_timeout(Some(WATCH_HANDSHAKE_TIMEOUT));
+    let mut buf = [0u8; 64];
+    let mut len = 0;
+    while !buf[..len].contains(&b'\n') {
+        if len == buf.len() {
+            return None;
+        }
+        match conn.recv_raw(&mut buf[len..]) {
+            Ok(0) | Err(_) => return None,
+            Ok(n) => len += n,
+        }
+    }
+    let nl = buf[..len].iter().position(|&b| b == b'\n').expect("loop exit implies newline");
+    Some(String::from_utf8_lossy(&buf[..nl]).trim().to_string())
+}
+
+/// Background acceptor serving [`StatusState`]. Snapshot connections
+/// are accept → write → close; `WATCH` subscribers stay registered and
+/// get a compact delta line pushed on every state change. Stop (or
+/// drop) to shut the thread down (subscriber connections close with
+/// it).
 pub struct StatusServer {
     stop: Arc<AtomicBool>,
     handle: Option<JoinHandle<()>>,
@@ -205,18 +251,51 @@ impl StatusServer {
         let handle = std::thread::Builder::new()
             .name("lad-status".to_string())
             .spawn(move || {
+                // (connection, last delta line pushed) per subscriber
+                let mut subs: Vec<(Box<dyn Transport>, String)> = Vec::new();
                 while !stop_flag.load(Ordering::Relaxed) {
                     match listener.try_accept() {
                         Ok(Some(mut conn)) => {
-                            let mut body = state.snapshot_json().to_pretty_string();
-                            body.push('\n');
-                            // Raw bytes, no wire framing: any TCP/UDS
-                            // client (nc, curl --unix-socket) can read
-                            // the snapshot until EOF.
-                            let _ = conn.send_frame(body.as_bytes());
+                            let watch = read_request_line(conn.as_mut())
+                                .is_some_and(|l| l == "WATCH");
+                            if watch {
+                                let mut line = state.delta_json().to_string();
+                                line.push('\n');
+                                if conn.send_frame(line.as_bytes()).is_ok() {
+                                    subs.push((conn, line));
+                                }
+                            } else {
+                                let mut body = state.snapshot_json().to_pretty_string();
+                                body.push('\n');
+                                // Raw bytes, no wire framing: any
+                                // TCP/UDS client (nc, curl
+                                // --unix-socket) can read the snapshot
+                                // until EOF.
+                                let _ = conn.send_frame(body.as_bytes());
+                            }
                         }
-                        Ok(None) | Err(_) => std::thread::sleep(POLL_INTERVAL),
+                        Ok(None) | Err(_) => {}
                     }
+                    if !subs.is_empty() {
+                        let mut line = state.delta_json().to_string();
+                        line.push('\n');
+                        // push only on change; drop subscribers whose
+                        // socket errors (disconnected watcher)
+                        subs.retain_mut(|(conn, last)| {
+                            if *last == line {
+                                return true;
+                            }
+                            match conn.send_frame(line.as_bytes()) {
+                                Ok(_) => {
+                                    last.clear();
+                                    last.push_str(&line);
+                                    true
+                                }
+                                Err(_) => false,
+                            }
+                        });
+                    }
+                    std::thread::sleep(POLL_INTERVAL);
                 }
             })
             .expect("spawning status server thread");
@@ -251,6 +330,59 @@ impl Drop for StatusServer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::transport::connect;
+
+    fn read_line(conn: &mut dyn Transport) -> String {
+        let mut out: Vec<u8> = Vec::new();
+        let mut b = [0u8; 256];
+        while !out.contains(&b'\n') {
+            let n = conn.recv_raw(&mut b).expect("watch stream read");
+            if n == 0 {
+                break;
+            }
+            out.extend_from_slice(&b[..n]);
+        }
+        let nl = out.iter().position(|&c| c == b'\n').unwrap_or(out.len());
+        String::from_utf8_lossy(&out[..nl]).into_owned()
+    }
+
+    #[test]
+    fn watch_subscriber_gets_deltas_and_bare_client_gets_snapshot() {
+        let metrics = Arc::new(Metrics::default());
+        metrics.counter("wire_up_bytes").add(11);
+        let state = Arc::new(StatusState::new(metrics));
+        state.begin_run("drill", 40, 2);
+        state.set_iter(3);
+        let listener = NetListener::bind("tcp://127.0.0.1:0").unwrap();
+        let server = StatusServer::spawn(listener, state.clone()).unwrap();
+
+        // subscribe: one delta immediately, another after a change
+        let mut sub = connect(server.addr()).unwrap();
+        sub.send_frame(b"WATCH\n").unwrap();
+        let first = crate::util::json::parse(&read_line(sub.as_mut())).unwrap();
+        assert_eq!(first.get("iter").and_then(Json::as_f64), Some(3.0));
+        assert!(first.get("metrics").is_none(), "deltas omit the metrics dump");
+        state.set_iter(4);
+        state.set_phase("gather");
+        let second = crate::util::json::parse(&read_line(sub.as_mut())).unwrap();
+        assert_eq!(second.get("iter").and_then(Json::as_f64), Some(4.0));
+
+        // bare client (nc shape): no request line, one snapshot to EOF
+        let mut snap = connect(server.addr()).unwrap();
+        let mut body = Vec::new();
+        let mut b = [0u8; 512];
+        loop {
+            match snap.recv_raw(&mut b) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => body.extend_from_slice(&b[..n]),
+            }
+        }
+        let j = crate::util::json::parse(&String::from_utf8_lossy(&body)).unwrap();
+        assert_eq!(j.get("label").and_then(Json::as_str), Some("drill"));
+        assert!(j.get("metrics").is_some(), "snapshot keeps the metrics dump");
+        drop(sub);
+        server.stop();
+    }
 
     #[test]
     fn roster_updates_flow_into_the_snapshot() {

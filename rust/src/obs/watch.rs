@@ -1,0 +1,212 @@
+//! Terminal client for the status endpoint's `WATCH` subscribe mode.
+//!
+//! `lad status --watch tcp://…` connects to a live run's status
+//! endpoint, sends the one-line `WATCH` subscribe request, and renders
+//! each pushed delta as a single terminal line — iteration progress,
+//! current phase, cumulative per-phase wall time, anomaly counter, and
+//! a compact roster — with indented notes whenever the roster changes
+//! (retire / rejoin / deadline miss). The bare snapshot mode (`nc` or
+//! `lad status` without `--watch`) stays available for one-shot reads;
+//! this module is the streaming side.
+
+use std::io::Write;
+
+use anyhow::{Context as _, Result};
+
+use crate::net::transport::connect;
+use crate::obs::status::DeviceStatus;
+use crate::util::json::{self, Json};
+
+/// Decode the `roster` array of a delta into typed entries.
+fn roster_of(delta: &Json) -> Vec<DeviceStatus> {
+    delta
+        .get("roster")
+        .and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .map(|d| DeviceStatus {
+                    dead: matches!(d.get("dead"), Some(Json::Bool(true))),
+                    miss_streak: d.get("miss_streak").and_then(Json::as_f64).unwrap_or(0.0)
+                        as u64,
+                    epoch: d.get("epoch").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn ms(ns: f64) -> f64 {
+    ns / 1e6
+}
+
+/// Render one delta line (plus roster-change notes against the
+/// previous delta's roster, when given).
+pub fn render_delta(
+    delta: &Json,
+    prev: Option<&[DeviceStatus]>,
+    out: &mut dyn Write,
+) -> Result<()> {
+    let num = |k: &str| delta.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    let pns = |k: &str| {
+        delta.get("phase_ns").and_then(|p| p.get(k)).and_then(Json::as_f64).unwrap_or(0.0)
+    };
+    let phase = delta.get("phase").and_then(Json::as_str).unwrap_or("-");
+    let roster = roster_of(delta);
+    let tags: Vec<String> = roster
+        .iter()
+        .map(|d| {
+            if d.dead {
+                "dead".to_string()
+            } else if d.miss_streak > 0 {
+                format!("miss:{}", d.miss_streak)
+            } else {
+                "ok".to_string()
+            }
+        })
+        .collect();
+    writeln!(
+        out,
+        "iter {:>6}/{}  phase={}  anomalies={}  broadcast={:.1}ms gather={:.1}ms \
+         aggregate={:.1}ms  roster=[{}]",
+        num("iter") as u64,
+        num("total_iters") as u64,
+        phase,
+        num("anomalies") as u64,
+        ms(pns("broadcast_ns")),
+        ms(pns("gather_ns")),
+        ms(pns("aggregate_ns")),
+        tags.join(" ")
+    )?;
+    if let Some(prev) = prev {
+        for (i, (p, c)) in prev.iter().zip(&roster).enumerate() {
+            if !p.dead && c.dead {
+                writeln!(out, "  device {i} retired")?;
+            }
+            if p.dead && !c.dead {
+                writeln!(out, "  device {i} rejoined (epoch {})", c.epoch)?;
+            }
+            if c.miss_streak > p.miss_streak {
+                writeln!(out, "  device {i} missed a deadline (streak {})", c.miss_streak)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Subscribe to `addr` and render deltas to `out` until the server
+/// closes the stream (run ended) — or, with `count` set, until that
+/// many deltas have been rendered (the CI smoke shape). Returns the
+/// number of deltas seen.
+pub fn run_watch(addr: &str, out: &mut dyn Write, count: Option<u64>) -> Result<u64> {
+    let mut conn =
+        connect(addr).with_context(|| format!("connecting to status endpoint {addr}"))?;
+    conn.send_frame(b"WATCH\n").context("sending WATCH subscribe line")?;
+    let mut prev: Option<Vec<DeviceStatus>> = None;
+    let mut seen = 0u64;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 1024];
+    'stream: loop {
+        let n = conn.recv_raw(&mut chunk).context("reading watch stream")?;
+        if n == 0 {
+            break; // run ended, server closed the connection
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        while let Some(nl) = buf.iter().position(|&b| b == b'\n') {
+            let raw: Vec<u8> = buf.drain(..=nl).collect();
+            let line = String::from_utf8_lossy(&raw[..nl]);
+            if line.trim().is_empty() {
+                continue;
+            }
+            let delta = json::parse(&line)
+                .with_context(|| format!("unparseable delta line: {line}"))?;
+            render_delta(&delta, prev.as_deref(), out)?;
+            prev = Some(roster_of(&delta));
+            seen += 1;
+            if count.is_some_and(|c| seen >= c) {
+                break 'stream;
+            }
+        }
+    }
+    Ok(seen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::NetListener;
+    use crate::obs::metrics::Metrics;
+    use crate::obs::status::{StatusServer, StatusState};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn delta(iter: u64, roster: &[(bool, u64, u64)]) -> Json {
+        use std::collections::BTreeMap;
+        let mut top = BTreeMap::new();
+        top.insert("iter".to_string(), Json::Num(iter as f64));
+        top.insert("total_iters".to_string(), Json::Num(40.0));
+        top.insert("phase".to_string(), Json::Str("gather".into()));
+        top.insert("anomalies".to_string(), Json::Num(1.0));
+        let mut p = BTreeMap::new();
+        p.insert("broadcast_ns".to_string(), Json::Num(1_500_000.0));
+        p.insert("gather_ns".to_string(), Json::Num(2_000_000.0));
+        p.insert("aggregate_ns".to_string(), Json::Num(500_000.0));
+        top.insert("phase_ns".to_string(), Json::Obj(p));
+        let devs = roster
+            .iter()
+            .map(|&(dead, miss, epoch)| {
+                let mut o = BTreeMap::new();
+                o.insert("dead".to_string(), Json::Bool(dead));
+                o.insert("miss_streak".to_string(), Json::Num(miss as f64));
+                o.insert("epoch".to_string(), Json::Num(epoch as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        top.insert("roster".to_string(), Json::Arr(devs));
+        Json::Obj(top)
+    }
+
+    #[test]
+    fn render_flags_roster_transitions() {
+        let mut out = Vec::new();
+        let d0 = delta(5, &[(false, 0, 0), (false, 0, 0)]);
+        render_delta(&d0, None, &mut out).unwrap();
+        let prev = roster_of(&d0);
+        let d1 = delta(6, &[(false, 0, 0), (true, 3, 0)]);
+        render_delta(&d1, Some(&prev), &mut out).unwrap();
+        let prev = roster_of(&d1);
+        let d2 = delta(7, &[(false, 0, 0), (false, 0, 1)]);
+        render_delta(&d2, Some(&prev), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("iter      5/40"), "{text}");
+        assert!(text.contains("broadcast=1.5ms"), "{text}");
+        assert!(text.contains("roster=[ok dead]"), "{text}");
+        assert!(text.contains("device 1 retired"), "{text}");
+        assert!(text.contains("device 1 rejoined (epoch 1)"), "{text}");
+    }
+
+    #[test]
+    fn watch_client_streams_deltas_from_a_live_server() {
+        let state = Arc::new(StatusState::new(Arc::new(Metrics::default())));
+        state.begin_run("watch-test", 40, 2);
+        state.set_iter(1);
+        let listener = NetListener::bind("tcp://127.0.0.1:0").unwrap();
+        let server = StatusServer::spawn(listener, state.clone()).unwrap();
+        let mutator = {
+            let state = state.clone();
+            std::thread::spawn(move || {
+                for i in 2..=4 {
+                    std::thread::sleep(Duration::from_millis(40));
+                    state.set_iter(i);
+                }
+            })
+        };
+        let mut out = Vec::new();
+        let seen = run_watch(server.addr(), &mut out, Some(3)).unwrap();
+        assert_eq!(seen, 3);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("iter      1/40"), "{text}");
+        assert!(text.contains("iter      2/40"), "{text}");
+        mutator.join().unwrap();
+        server.stop();
+    }
+}

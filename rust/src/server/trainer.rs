@@ -113,6 +113,10 @@ impl<'a> Trainer<'a> {
         assert_eq!(oracle.n(), cfg.n_devices, "oracle N != config N");
         assert_eq!(oracle.dim(), cfg.dim, "oracle Q != config Q");
         let timer = Timer::start();
+        // hand the aggregation rule the obs context so its internal
+        // kernels (Gram fill, Krum scoring, NNM mixing, Weiszfeld) span
+        // + histogram themselves; a no-op when obs is off
+        self.agg.set_obs(&self.obs);
         // One persistent worker pool for the whole run: the oracle's
         // row-parallel kernels, per-device compression and the aggregation
         // rules (when built via from_config_pooled) all share its workers,

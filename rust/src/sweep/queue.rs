@@ -25,7 +25,7 @@
 
 use crate::config::OracleKind;
 use crate::data::linreg::LinRegDataset;
-use crate::experiments::common::{run_variant_in, Variant};
+use crate::experiments::common::{run_variant_obs, Variant};
 use crate::net::{LeaderOpts, MISS_RETIRE_STREAK};
 use crate::obs::{Event, Obs};
 use crate::server::cluster::{
@@ -83,19 +83,22 @@ fn dataset_for(job: &Job, cache: &DsCache) -> std::sync::Arc<LinRegDataset> {
 /// through the `net::Leader` retirement path (in-process cluster over the
 /// real wire protocol); everything else takes the central fast path.
 pub fn run_job(job: &Job, pool: &Pool) -> Result<TrainTrace> {
-    run_job_on(job, &generate_dataset(job), pool)
+    run_job_on(job, &generate_dataset(job), pool, &Obs::off())
 }
 
 /// [`run_job`] against an already-generated dataset (must match
 /// [`ds_key`] — the batch scheduler shares one dataset across agreeing
-/// jobs via the cache).
-fn run_job_on(job: &Job, ds: &LinRegDataset, pool: &Pool) -> Result<TrainTrace> {
+/// jobs via the cache). The obs context reaches the trainer / cluster
+/// leader, so job phase spans and per-rule `aggregate_kernel/*`
+/// histograms accumulate in the sweep's shared registry (telemetry
+/// only — traces are bit-identical with obs on or off).
+fn run_job_on(job: &Job, ds: &LinRegDataset, pool: &Pool, obs: &Obs) -> Result<TrainTrace> {
     let cfg = &job.cfg;
     let faulty = job.stall_prob > 0.0 || cfg.net.gather_deadline_ms > 0;
     let elastic = job.leader_kill_iter > 0 || job.worker_churn > 0;
     if !faulty && !elastic {
         let v = Variant { label: job.label.clone(), cfg: cfg.clone(), draco_r: job.draco_r };
-        return run_variant_in(ds, &v, job.run_seed, pool);
+        return run_variant_obs(ds, &v, job.run_seed, pool, obs);
     }
     ensure!(
         job.stall_prob == 0.0 || cfg.net.gather_deadline_ms > 0,
@@ -116,6 +119,7 @@ fn run_job_on(job: &Job, ds: &LinRegDataset, pool: &Pool) -> Result<TrainTrace> 
             gather_deadline: (cfg.net.gather_deadline_ms > 0)
                 .then(|| Duration::from_millis(cfg.net.gather_deadline_ms)),
             device_compression: cfg.net.device_compression,
+            obs: obs.clone(),
             ..Default::default()
         },
         stall_prob: job.stall_prob,
@@ -224,7 +228,7 @@ fn execute_with(
     let done = budget.outer().par_map(&fast, |_, &i| -> Result<(usize, TrainTrace)> {
         let ds = dataset_for(jobs[i], &cache);
         let sp = obs.span("sweep_job");
-        let tr = run_job_on(jobs[i], &ds, &budget.inner_capped(jobs[i].cfg.threads))?;
+        let tr = run_job_on(jobs[i], &ds, &budget.inner_capped(jobs[i].cfg.threads), obs)?;
         finish(jobs[i], sp.done());
         eprintln!("  {}", tr.summary());
         on_done(jobs[i], &tr)?;
@@ -237,7 +241,7 @@ fn execute_with(
     for i in (0..jobs.len()).filter(|&i| is_wall_clock_sensitive(jobs[i])) {
         let ds = dataset_for(jobs[i], &cache);
         let sp = obs.span("sweep_job");
-        let tr = run_job_on(jobs[i], &ds, &budget.outer().borrow(jobs[i].cfg.threads))?;
+        let tr = run_job_on(jobs[i], &ds, &budget.outer().borrow(jobs[i].cfg.threads), obs)?;
         finish(jobs[i], sp.done());
         eprintln!("  {}", tr.summary());
         on_done(jobs[i], &tr)?;
@@ -384,7 +388,7 @@ pub fn run_sweep_obs(
         (
             Some(sink::write_results(out_dir, &jobs, &done)?),
             Some(sink::write_pivot_csv(out_dir, &jobs, &done)?),
-            Some(sink::write_report(out_dir, &jobs, &done)?),
+            Some(sink::write_report(out_dir, &jobs, &done, obs)?),
         )
     } else {
         (None, None, None)

@@ -25,11 +25,15 @@
 //! one column per grid axis, and the headline metrics. `report.csv` is
 //! the cross-seed summary on top of it: one row per non-`seed` grid
 //! coordinate with the mean ± population std of the final loss over the
-//! `seed` axis (see [`write_report`]).
+//! `seed` axis, plus the coordinate's aggregation-rule kernel latency
+//! quantiles when the sweep ran under an obs context (see
+//! [`write_report`]).
 
 use crate::config::CompressionKind;
+use crate::obs::Obs;
 use crate::server::TrainTrace;
 use crate::sweep::spec::Job;
+use crate::util::parallel::Pool;
 use crate::util::json::{self, Json};
 use crate::Result;
 use anyhow::{ensure, Context};
@@ -302,6 +306,27 @@ pub fn write_pivot_csv(
     Ok(path)
 }
 
+/// The `aggregate_kernel/<rule>` latency quantile cells for one report
+/// row: `p50,p95,p99` in nanoseconds when the sweep ran with an enabled
+/// obs context and the rule's kernel histogram holds samples; three
+/// empty cells otherwise (obs off, or an arm — e.g. DRACO decoding —
+/// that never entered the robust-aggregation kernel). Kernel timings
+/// are wall clock, so an obs-on report is NOT bit-stable across reruns;
+/// the determinism CI runs its compared sweeps obs-off, where the cells
+/// are empty on both sides.
+fn kernel_quantile_cells(obs: &Obs, rule: &str) -> String {
+    let hist = obs
+        .metrics()
+        .and_then(|m| m.histogram_get(&format!("aggregate_kernel/{rule}")))
+        .filter(|h| h.count() > 0);
+    match hist {
+        Some(h) => {
+            format!("{},{},{}", h.quantile(0.50), h.quantile(0.95), h.quantile(0.99))
+        }
+        None => ",,".to_string(),
+    }
+}
+
 /// Write `report.csv`: the cross-seed summary. One row per non-`seed`
 /// grid coordinate, in spec order — the coordinate's axis values, the
 /// number of runs aggregated, and the mean ± population std of
@@ -309,19 +334,24 @@ pub fn write_pivot_csv(
 /// degenerates to one row per coordinate with `runs = 1` and `std = 0`;
 /// a spec whose only axis is `seed` produces a single all-runs row.
 /// Non-finite losses poison their group's mean/std to `NaN`, which is the
-/// honest answer for a diverged arm.
+/// honest answer for a diverged arm. The trailing `kernel_p{50,95,99}_ns`
+/// columns carry the coordinate's aggregation-rule kernel latency
+/// quantiles when the sweep ran under an obs context (see
+/// [`kernel_quantile_cells`]); they are empty in a plain run.
 pub fn write_report(
     out_dir: &Path,
     jobs: &[Job],
     records: &BTreeMap<String, String>,
+    obs: &Obs,
 ) -> Result<PathBuf> {
     let path = out_dir.join("report.csv");
     let axis_keys: Vec<&'static str> = jobs
         .first()
         .map(|j| j.axes.iter().map(|(k, _)| *k).filter(|&k| k != "seed").collect())
         .unwrap_or_default();
-    // group key (non-seed axis values, spec order) → losses, first-seen order
-    let mut order: Vec<(Vec<String>, Vec<f64>)> = Vec::new();
+    // group key (non-seed axis values, spec order) → (losses, composed
+    // aggregation-rule name — the kernel histogram key), first-seen order
+    let mut order: Vec<(Vec<String>, Vec<f64>, String)> = Vec::new();
     let mut index: BTreeMap<Vec<String>, usize> = BTreeMap::new();
     for job in jobs {
         let line = records
@@ -339,7 +369,11 @@ pub fn write_report(
             Some(&i) => order[i].1.push(loss),
             None => {
                 index.insert(key.clone(), order.len());
-                order.push((key, vec![loss]));
+                // a serial pool: only the composed name is needed, and
+                // the construction must not spin up worker threads
+                let rule =
+                    crate::aggregation::from_config_pooled(&job.cfg, &Pool::serial()).name();
+                order.push((key, vec![loss], rule));
             }
         }
     }
@@ -348,8 +382,9 @@ pub fn write_report(
         body.push_str(k);
         body.push(',');
     }
-    body.push_str("runs,final_loss_mean,final_loss_std\n");
-    for (key, losses) in &order {
+    body.push_str("runs,final_loss_mean,final_loss_std,");
+    body.push_str("kernel_p50_ns,kernel_p95_ns,kernel_p99_ns\n");
+    for (key, losses, rule) in &order {
         for v in key {
             body.push_str(&crate::util::csv::escape(v));
             body.push(',');
@@ -357,7 +392,8 @@ pub fn write_report(
         let n = losses.len() as f64;
         let mean = losses.iter().sum::<f64>() / n;
         let std = (losses.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n).sqrt();
-        body.push_str(&format!("{},{mean},{std}\n", losses.len()));
+        let cells = kernel_quantile_cells(obs, rule);
+        body.push_str(&format!("{},{mean},{std},{cells}\n", losses.len()));
     }
     write_atomic(&path, &body)?;
     Ok(path)
@@ -464,15 +500,56 @@ mod tests {
         }
         let dir = std::env::temp_dir().join(format!("lad_report_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
-        let p = write_report(&dir, &jobs, &records).unwrap();
+        let p = write_report(&dir, &jobs, &records, &Obs::off()).unwrap();
         let body = std::fs::read_to_string(&p).unwrap();
         let lines: Vec<&str> = body.lines().collect();
-        assert_eq!(lines[0], "aggregator,runs,final_loss_mean,final_loss_std");
+        assert_eq!(
+            lines[0],
+            "aggregator,runs,final_loss_mean,final_loss_std,\
+             kernel_p50_ns,kernel_p95_ns,kernel_p99_ns"
+        );
         assert_eq!(lines.len(), 3, "{body}");
         // spec order preserved, 2 runs per coordinate, population std of
-        // {x, x+1} is 0.5
-        assert_eq!(lines[1], format!("krum,2,{},0.5", want_mean[0]));
-        assert_eq!(lines[2], format!("cwtm,2,{},0.5", want_mean[1]));
+        // {x, x+1} is 0.5; obs off → empty kernel quantile cells
+        assert_eq!(lines[1], format!("krum,2,{},0.5,,,", want_mean[0]));
+        assert_eq!(lines[2], format!("cwtm,2,{},0.5,,,", want_mean[1]));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn report_exports_kernel_quantiles_under_an_obs_context() {
+        // one coordinate; the job's composed rule under the default
+        // config is cwtm(0.1) — pre-populate its kernel histogram as the
+        // trainer's aggregate loop would
+        let j = job();
+        let rule = crate::aggregation::from_config_pooled(&j.cfg, &Pool::serial()).name();
+        let obs = Obs::recording(Box::new(crate::obs::NullRecorder));
+        let hist =
+            obs.metrics().unwrap().histogram(&format!("aggregate_kernel/{rule}"));
+        for ns in [1000u64, 2000, 3000, 4000] {
+            hist.observe(ns);
+        }
+        let mut records = BTreeMap::new();
+        records.insert(j.id.clone(), job_record(&j, &trace()).to_string());
+        let dir =
+            std::env::temp_dir().join(format!("lad_report_obs_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = write_report(&dir, std::slice::from_ref(&j), &records, &obs).unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        let p50 = hist.quantile(0.50);
+        let p95 = hist.quantile(0.95);
+        let p99 = hist.quantile(0.99);
+        assert!(p50 > 0 && p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert_eq!(lines[1], format!("1,1.5,0,{p50},{p95},{p99}"), "{body}");
+        // a rule whose kernel never ran keeps empty cells (and probing
+        // must not register an empty histogram in the snapshot)
+        assert_eq!(kernel_quantile_cells(&obs, "never-ran"), ",,");
+        assert!(obs
+            .metrics()
+            .unwrap()
+            .histogram_get("aggregate_kernel/never-ran")
+            .is_none());
         std::fs::remove_dir_all(&dir).ok();
     }
 

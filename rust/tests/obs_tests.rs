@@ -15,8 +15,10 @@ use lad::attack::SignFlip;
 use lad::config::{CompressionKind, TrainConfig};
 use lad::data::linreg::LinRegDataset;
 use lad::net::{LeaderOpts, MISS_RETIRE_STREAK};
-use lad::obs::{Event, JsonlRecorder, Metrics, NullRecorder, Obs, StatusState};
-use lad::server::cluster::{run_cluster_churn, ChurnPlan, ClusterOpts};
+use lad::obs::{replay, Event, JsonlRecorder, Metrics, NullRecorder, Obs, RunTimeline, StatusState};
+use lad::server::cluster::{
+    run_cluster_churn, run_cluster_kill_resume, run_cluster_with, ChurnPlan, ClusterOpts,
+};
 use lad::server::Trainer;
 use lad::util::json::{self, Json};
 use lad::util::parallel::Pool;
@@ -206,6 +208,167 @@ fn churn_drill_journals_retirement_and_rejoin_with_attribution() {
             Event::DeviceRetired { device, .. } | Event::DeviceRejoined { device, .. }
                 if *device != 1)),
         "retirement/rejoin attributed to a non-victim device: {body}"
+    );
+}
+
+/// The golden-journal fixture: the churn drill's journal, replayed
+/// through [`RunTimeline`], must reconstruct exactly the membership
+/// history the [`ChurnPlan`] scripted — the read side of the
+/// observability layer agreeing with the write side end-to-end.
+#[test]
+fn journal_replay_reconstructs_the_churn_plan() {
+    let journal =
+        std::env::temp_dir().join(format!("lad_obs_replay_{}.jsonl", std::process::id()));
+    let obs = Obs::recording(Box::new(JsonlRecorder::create(&journal).expect("journal")));
+    run_churn(obs.clone());
+    obs.finish().expect("flush");
+    let tl = RunTimeline::from_journal(&journal).expect("replay");
+    let _ = std::fs::remove_file(&journal);
+
+    // the plan: victim 1 departs at iter 4, retires after
+    // MISS_RETIRE_STREAK misses, replacement activates at iter ≥ 7
+    let victim = &tl.devices[1];
+    let streaks: Vec<u64> = victim.misses.iter().map(|&(_, s)| s).collect();
+    assert_eq!(streaks, vec![1, 2, 3], "victim's miss streak: {tl:?}");
+    assert!(
+        victim.misses.iter().all(|&(iter, _)| iter >= 4),
+        "no miss before the scripted departure: {tl:?}"
+    );
+    assert_eq!(victim.retires.len(), 1, "exactly one retirement: {tl:?}");
+    assert!(
+        victim.retires[0].1.contains("consecutive deadline misses"),
+        "retirement reason survives replay: {tl:?}"
+    );
+    assert_eq!(victim.rejoins.len(), 1, "exactly one rejoin: {tl:?}");
+    let (rejoin_iter, rejoin_epoch) = victim.rejoins[0];
+    assert!(rejoin_iter >= 7, "activation respects the plan's not-before gate: {tl:?}");
+    assert_eq!(rejoin_epoch, 1, "rejoin bumps the slot epoch: {tl:?}");
+    for (i, d) in tl.devices.iter().enumerate() {
+        if i != 1 {
+            assert!(
+                d.retires.is_empty() && d.rejoins.is_empty() && d.misses.is_empty(),
+                "churn leaked onto device {i}: {tl:?}"
+            );
+        }
+    }
+    // the rendered timeline (the CI artifact) narrates the same facts
+    let text = tl.render();
+    assert!(text.contains("device 1:"), "{text}");
+    assert!(text.contains("deadline miss (streak 3)"), "{text}");
+    assert!(text.contains("retired:"), "{text}");
+    assert!(text.contains("rejoined (epoch 1)"), "{text}");
+}
+
+/// Two same-seed churn drills journal structurally identical histories:
+/// `replay::diff` sees zero divergences even though wall-clock envelope
+/// fields differ between the runs.
+#[test]
+fn diff_of_two_same_seed_runs_is_empty() {
+    let run_to_journal = |tag: &str| {
+        let journal = std::env::temp_dir()
+            .join(format!("lad_obs_selfdiff_{tag}_{}.jsonl", std::process::id()));
+        let obs =
+            Obs::recording(Box::new(JsonlRecorder::create(&journal).expect("journal")));
+        run_churn(obs.clone());
+        obs.finish().expect("flush");
+        let tl = RunTimeline::from_journal(&journal).expect("replay");
+        let _ = std::fs::remove_file(&journal);
+        tl
+    };
+    let a = run_to_journal("a");
+    let b = run_to_journal("b");
+    assert_eq!(a.events, b.events, "same-seed runs journal the same event count");
+    let divs = replay::diff(&a, &b);
+    assert!(divs.is_empty(), "same-seed runs must not diverge: {divs:?}");
+}
+
+/// A kill/resume run diffed against an uninterrupted same-seed run
+/// diverges *only* in the checkpoint and failover categories — the
+/// membership history is untouched by the warm restart.
+#[test]
+fn kill_resume_diverges_from_uninterrupted_only_in_checkpoint_and_failover() {
+    use lad::compress::Identity;
+
+    let mut cfg = TrainConfig::default();
+    cfg.n_devices = 5;
+    cfg.n_honest = 4;
+    cfg.d = 2;
+    cfg.dim = 6;
+    cfg.iters = 12;
+    cfg.lr = 8e-5;
+    cfg.sigma_h = 0.3;
+    cfg.log_every = 4;
+    let mut rng = Rng::new(1501);
+    let ds = LinRegDataset::generate(cfg.n_devices, cfg.dim, cfg.sigma_h, &mut rng);
+    let cwtm = Cwtm::new(0.1);
+    let flip = SignFlip { coeff: -2.0 };
+    let pool = Pool::serial();
+    let dir = std::env::temp_dir().join(format!("lad_obs_krdiff_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let journal_kr = dir.join("kill_resume.jsonl");
+    let obs = Obs::recording(Box::new(JsonlRecorder::create(&journal_kr).expect("journal")));
+    let opts = ClusterOpts {
+        leader: LeaderOpts { obs, ..Default::default() },
+        ..Default::default()
+    };
+    let mut x_kr = vec![0.0f32; cfg.dim];
+    let tr_kr = run_cluster_kill_resume(
+        &cfg,
+        &ds,
+        &cwtm,
+        &flip,
+        &Identity,
+        &mut x_kr,
+        "kr",
+        &mut Rng::new(1502),
+        &pool,
+        &opts,
+        5,
+        &dir.join("ckpt.bin"),
+    )
+    .expect("kill/resume drill");
+    opts.leader.obs.finish().expect("flush");
+
+    let journal_full = dir.join("uninterrupted.jsonl");
+    let obs = Obs::recording(Box::new(JsonlRecorder::create(&journal_full).expect("journal")));
+    let opts = ClusterOpts {
+        leader: LeaderOpts { obs, ..Default::default() },
+        ..Default::default()
+    };
+    let mut x_full = vec![0.0f32; cfg.dim];
+    let tr_full = run_cluster_with(
+        &cfg,
+        &ds,
+        &cwtm,
+        &flip,
+        &Identity,
+        &mut x_full,
+        "full",
+        &mut Rng::new(1502),
+        &pool,
+        &opts,
+    )
+    .expect("uninterrupted run");
+    opts.leader.obs.finish().expect("flush");
+
+    // sanity: the warm restart itself is trace-identical
+    assert_eq!(x_kr, x_full, "resume must reproduce the uninterrupted iterate");
+    assert_eq!(tr_kr.loss, tr_full.loss);
+
+    let kr = RunTimeline::from_journal(&journal_kr).expect("replay kill/resume");
+    let full = RunTimeline::from_journal(&journal_full).expect("replay uninterrupted");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    assert_eq!(kr.checkpoints.len(), 1, "halting leader cut one checkpoint: {kr:?}");
+    assert_eq!(kr.failovers.len(), 1, "resume journaled the warm restart: {kr:?}");
+    assert!(full.checkpoints.is_empty() && full.failovers.is_empty(), "{full:?}");
+
+    let divs = replay::diff(&kr, &full);
+    assert!(!divs.is_empty(), "the checkpoint/failover difference must be visible");
+    assert!(
+        replay::only_in(&divs, &["checkpoint", "failover"]),
+        "membership history diverged beyond checkpoint/failover: {divs:?}"
     );
 }
 
